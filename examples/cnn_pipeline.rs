@@ -1,0 +1,42 @@
+//! Exploration Three (§IX): the 8-core pipelined CNN study — CNN-F/M/S,
+//! digital vs analog convolutions, with the per-core utilization view
+//! of Fig. 14.
+//!
+//!     cargo run --release --example cnn_pipeline
+
+use alpine::coordinator::experiments;
+use alpine::nn::{CnnModel, CnnVariant};
+use alpine::report;
+
+fn main() {
+    // Architecture summary (Fig. 12b).
+    for v in CnnVariant::ALL {
+        let m = CnnModel::paper(v);
+        println!(
+            "{}: {} conv layers, {:.2}M AIMC params (paper {:.1}M), {:.1}M dense params, {:.0}M conv MACs/inference",
+            v.name(),
+            m.convs.len(),
+            m.aimc_params() as f64 / 1e6,
+            v.paper_aimc_params() / 1e6,
+            m.dense_params() as f64 / 1e6,
+            m.conv_macs() as f64 / 1e6,
+        );
+    }
+    println!();
+
+    let rows = experiments::fig13_cnn(experiments::CNN_INFERENCES);
+    report::aggregate_table("CNN aggregate (Fig. 13)", &rows).print();
+    report::gains_table(
+        "Gains vs DIG (paper: up to 20.5x/20.8x on CNN-S high-power)",
+        &rows,
+        |r| r.label.contains("CNN-S") && r.label.ends_with("DIG"),
+    )
+    .print();
+
+    let util = experiments::fig14_cnn_utilization(experiments::CNN_INFERENCES);
+    report::utilization_table(
+        "CNN-S per-core utilization (Fig. 14; cores 0-4 conv, 5-7 dense)",
+        &util,
+    )
+    .print();
+}

@@ -1,0 +1,134 @@
+//! End-to-end driver: proves all layers compose on a real workload.
+//!
+//! 1. Loads the AOT-compiled JAX/Pallas artifacts (Layer 2/1, built once
+//!    by `make artifacts`) into the Rust PJRT runtime — Python is not on
+//!    this path.
+//! 2. Validates every model's numerics against its AOT-time probe.
+//! 3. Serves 256 batched MLP inference requests through the batching
+//!    dispatcher, reporting latency/throughput, and cross-checks the
+//!    analog model's outputs against the digital reference (the paper's
+//!    iso-accuracy argument) and against AIMClib's host checker.
+//! 4. Runs an LSTM character-generation loop (PTB-style synthetic
+//!    alphabet) with recurrent state threading through PJRT.
+//! 5. Reports what the *simulated* ALPINE hardware would achieve on the
+//!    same workload (time/energy per inference, speedup vs digital).
+//!
+//!     make artifacts && cargo run --release --example e2e_inference
+
+use alpine::config::SystemKind;
+use alpine::coordinator::{run_workload, server};
+use alpine::runtime::{default_artifacts_dir, read_f32_bin, Runtime};
+use alpine::util::rng::Rng;
+use alpine::util::table::fmt_time;
+use alpine::workload::mlp::{self, MlpCase};
+use anyhow::{ensure, Context, Result};
+
+fn main() -> Result<()> {
+    let dir = default_artifacts_dir();
+    let rt = Runtime::new(&dir)
+        .context("PJRT init failed — run `make artifacts` first")?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // ------------------------------------------------------------------
+    // 1+2. Load every artifact and probe-check its numerics.
+    // ------------------------------------------------------------------
+    let models = rt.available_models()?;
+    println!("artifacts: {models:?}");
+    for name in &models {
+        let m = rt.load(name)?;
+        let (max_abs, rel) = m.probe_check()?;
+        ensure!(rel < 1e-5, "{name}: probe rel err {rel}");
+        println!("  probe {name:<18} max_abs={max_abs:.2e} rel={rel:.2e}  OK");
+    }
+
+    // ------------------------------------------------------------------
+    // 3. Batched serving through the analog MLP (batch dimension 8).
+    // ------------------------------------------------------------------
+    let analog = rt.load("mlp_analog_b8")?;
+    let digital = rt.load("mlp_digital_b8")?;
+    let dim = 1024usize;
+    let mut rng = Rng::new(7);
+    let requests: Vec<Vec<f32>> = (0..256)
+        .map(|_| (0..dim).map(|_| rng.normal_f32(1.0)).collect())
+        .collect();
+
+    // NOTE: the b8 artifact takes a whole batch as one input; the server
+    // packs up to 8 requests per execution.
+    let t0 = std::time::Instant::now();
+    let (responses, stats) = server::serve_batched(&analog, requests.clone(), 8, dim)?;
+    println!(
+        "\nserved {} requests in {:?}: mean latency {:?}, max {:?}, {:.0} req/s, mean batch {:.1}",
+        stats.requests,
+        t0.elapsed(),
+        stats.mean_latency(),
+        stats.max_latency,
+        stats.throughput_rps(),
+        stats.mean_batch()
+    );
+
+    // Analog vs digital agreement on the same requests.
+    let (dig_responses, _) = server::serve_batched(&digital, requests, 8, dim)?;
+    let mut rel_acc = 0.0f64;
+    let n_cmp = responses.len().min(dig_responses.len());
+    for (a, d) in responses.iter().zip(dig_responses.iter()).take(n_cmp) {
+        let num: f64 = a
+            .output
+            .iter()
+            .zip(&d.output)
+            .map(|(x, y)| ((x - y) * (x - y)) as f64)
+            .sum();
+        let den: f64 = d.output.iter().map(|y| (y * y) as f64).sum();
+        rel_acc += (num / den.max(1e-30)).sqrt();
+    }
+    let mean_rel = rel_acc / n_cmp as f64;
+    println!("analog-vs-digital mean relative error over {n_cmp} requests: {mean_rel:.3}");
+    ensure!(mean_rel < 0.25, "analog should track digital (PCM noise + ADC quantization only)");
+
+    // ------------------------------------------------------------------
+    // 4. LSTM: recurrent character loop on a synthetic PTB-like alphabet.
+    // ------------------------------------------------------------------
+    let lstm = rt.load("lstm256_analog")?;
+    let mut h = vec![0.0f32; 256];
+    let mut c = vec![0.0f32; 256];
+    // Seed character: one-hot-ish probe from the bundle.
+    let mut x = read_f32_bin(&lstm.manifest.inputs[0].file)?;
+    let mut generated = Vec::new();
+    for _step in 0..20 {
+        let out = lstm.run(&[x.clone(), h.clone(), c.clone()])?;
+        let (y, h2, c2) = (&out[0], &out[1], &out[2]);
+        // Greedy next char.
+        let next = y
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        generated.push(next);
+        h = h2.clone();
+        c = c2.clone();
+        x = vec![0.0; 50];
+        x[next] = 1.0;
+    }
+    println!("LSTM generated symbol stream: {generated:?}");
+    ensure!(generated.len() == 20);
+
+    // ------------------------------------------------------------------
+    // 5. What the simulated ALPINE hardware does with this workload.
+    // ------------------------------------------------------------------
+    println!("\nsimulated ALPINE hardware on the same MLP workload (10 inferences):");
+    for kind in SystemKind::ALL {
+        let cfg = alpine::config::SystemConfig::for_kind(kind);
+        let dig = run_workload(kind, mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 10));
+        let ana = run_workload(kind, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 10));
+        println!(
+            "  [{:>10}] ANA {:>9}/inf {:>10.3e} J/inf | speedup {:>5.1}x energy {:>5.1}x vs DIG",
+            kind.name(),
+            fmt_time(ana.time_per_inference_s),
+            ana.energy_per_inference_j(),
+            dig.time_s / ana.time_s,
+            dig.energy.total_j() / ana.energy.total_j(),
+        );
+    }
+    println!("\ne2e_inference OK");
+    Ok(())
+}

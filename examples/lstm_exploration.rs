@@ -1,0 +1,40 @@
+//! Exploration Two (§VIII): the LSTM study across n_h in {256,512,750},
+//! digital vs analog cases, plus the working-set analysis that explains
+//! the scaling of the gains.
+//!
+//!     cargo run --release --example lstm_exploration
+
+use alpine::config::SystemKind;
+use alpine::coordinator::experiments;
+use alpine::nn::LstmModel;
+use alpine::report;
+
+fn main() {
+    let rows = experiments::fig10_lstm(experiments::LSTM_INFERENCES);
+    report::aggregate_table("LSTM aggregate (Fig. 10)", &rows).print();
+
+    for n_h in experiments::LSTM_SIZES {
+        let m = LstmModel::paper(n_h);
+        println!(
+            "n_h={n_h}: digital working set {:.2} kB, analog {:.2} kB (§VIII.E)",
+            m.working_set_digital() as f64 / 1024.0,
+            m.working_set_analog() as f64 / 1024.0
+        );
+        let sized: Vec<_> = rows
+            .iter()
+            .filter(|r| {
+                r.system == SystemKind::HighPower && r.label.starts_with(&format!("lstm{n_h}/"))
+            })
+            .cloned()
+            .collect();
+        report::gains_table(
+            &format!("Gains vs DIG-1core, n_h={n_h} (paper: up to 9.4x/9.3x at 750)"),
+            &sized,
+            |r| r.label.ends_with("DIG-1core"),
+        )
+        .print();
+    }
+
+    let breakdown = experiments::fig11_lstm_breakdown(experiments::LSTM_INFERENCES);
+    report::roi_table("LSTM analog sub-ROI breakdown (Fig. 11)", &breakdown).print();
+}

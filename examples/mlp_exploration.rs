@@ -1,0 +1,39 @@
+//! Exploration One (§VII): the full MLP study — all digital core counts,
+//! all four analog mappings, the loose-coupling comparison, and the
+//! sub-ROI breakdown, on both systems.
+//!
+//!     cargo run --release --example mlp_exploration
+
+use alpine::coordinator::experiments;
+use alpine::report;
+
+fn main() {
+    let n = experiments::MLP_INFERENCES;
+
+    let rows = experiments::fig7_mlp(n);
+    report::aggregate_table("MLP aggregate (Fig. 7)", &rows).print();
+    report::gains_table("Gains vs DIG-1core (paper max: 12.8x time / 12.5x energy)", &rows, |r| {
+        r.label.contains("DIG-1core")
+    })
+    .print();
+
+    let breakdown = experiments::fig8_mlp_breakdown(n);
+    report::roi_table("Sub-ROI breakdown (Fig. 8)", &breakdown).print();
+
+    let coupling = experiments::loose_vs_tight(n);
+    report::aggregate_table("Loose vs tight coupling (§VII.B)", &coupling).print();
+
+    // The paper's multi-core observation: Case 1 outperforms Cases 3/4.
+    let hp: Vec<_> = rows
+        .iter()
+        .filter(|r| r.system == alpine::config::SystemKind::HighPower)
+        .collect();
+    let c1 = hp.iter().find(|r| r.label.contains("case1")).unwrap();
+    let c3 = hp.iter().find(|r| r.label.contains("case3")).unwrap();
+    let c4 = hp.iter().find(|r| r.label.contains("case4")).unwrap();
+    println!(
+        "\nmulti-core check (§VII.C): case1 is {:.0}% faster than case3, {:.0}% faster than case4",
+        100.0 * (c3.time_s / c1.time_s - 1.0),
+        100.0 * (c4.time_s / c1.time_s - 1.0),
+    );
+}

@@ -1,0 +1,79 @@
+//! Quickstart: map a small network onto a tightly-coupled AIMC system,
+//! run it functionally through AIMClib, then simulate its timing and
+//! energy on both Table-I systems.
+//!
+//!     cargo run --release --example quickstart
+
+use alpine::aimclib::checker::{self, Matrix};
+use alpine::aimclib::{activation, AimcDevice};
+use alpine::config::{SystemConfig, SystemKind};
+use alpine::coordinator::run_workload;
+use alpine::util::rng::Rng;
+use alpine::util::table::fmt_time;
+use alpine::workload::mlp::{self, MlpCase};
+
+fn main() -> anyhow::Result<()> {
+    println!("== ALPINE quickstart ==\n");
+
+    // ------------------------------------------------------------------
+    // 1. Functional path: program a 256x128 matrix onto an AIMC device
+    //    and run one inference through AIMClib (Fig. 4 of the paper).
+    // ------------------------------------------------------------------
+    let mut rng = Rng::new(42);
+    let m = 256;
+    let n = 128;
+    let x = Matrix::new(1, m, (0..m).map(|_| rng.normal_f32(1.0)).collect());
+    let w = Matrix::new(m, n, (0..m * n).map(|_| rng.normal_f32(0.1)).collect());
+
+    let (w_q, _w_scale) = checker::quantize_weights(&w);
+    let w_prog = checker::program_weights(&w_q, 0.01, &mut rng);
+    let spec = checker::calibrate(&x, &w, m, n);
+
+    let mut dev = AimcDevice::new(m, n, spec);
+    dev.map_matrix(0, 0, &w_prog)?; // CM_INITIALIZE
+    dev.queue_vector(0, &x.data)?; // CM_QUEUE
+    dev.process(); // CM_PROCESS (analog MVM, 100 ns on hardware)
+    let mut y = vec![0.0f32; n];
+    dev.dequeue_vector(0, &mut y)?; // CM_DEQUEUE
+    activation::relu(&mut y);
+
+    // Compare against the exact product.
+    let mut exact = vec![0.0f32; n];
+    for j in 0..n {
+        let mut acc = 0.0;
+        for i in 0..m {
+            acc += x.at(0, i) * w.at(i, j);
+        }
+        exact[j] = acc.max(0.0);
+    }
+    let err: f32 = y
+        .iter()
+        .zip(&exact)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f32>()
+        .sqrt()
+        / exact.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-9);
+    println!("functional AIMC inference: relative error vs exact fp32 = {err:.3}");
+    assert!(err < 0.1, "analog inference should track the exact result");
+
+    // ------------------------------------------------------------------
+    // 2. Timing path: simulate the paper's MLP on both systems,
+    //    digital reference vs analog case 1.
+    // ------------------------------------------------------------------
+    println!("\nfull-system simulation (10 inferences of the 1024x1024x2 MLP):\n");
+    for kind in SystemKind::ALL {
+        let cfg = SystemConfig::for_kind(kind);
+        let dig = run_workload(kind, mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 10));
+        let ana = run_workload(kind, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 10));
+        println!(
+            "  [{:>10}] DIG {:>10}/inf  ANA {:>10}/inf  => speedup {:>5.1}x, energy gain {:>5.1}x",
+            kind.name(),
+            fmt_time(dig.time_per_inference_s),
+            fmt_time(ana.time_per_inference_s),
+            dig.time_s / ana.time_s,
+            dig.energy.total_j() / ana.energy.total_j(),
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

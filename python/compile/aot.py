@@ -1,0 +1,450 @@
+"""AOT compile path: lower Layer-2 JAX models to HLO text + weight bundles.
+
+This is the *only* place Python runs: `make artifacts` invokes it once, it
+writes everything the Rust runtime needs into `artifacts/`, and the Rust
+binary is self-contained afterwards.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model the bundle is:
+    <name>.hlo.txt        the lowered computation (params: input(s), weights)
+    <name>.manifest       line-based description (inputs, params, probes)
+    <shared>.bin          f32 little-endian weight tensors (row-major)
+    <name>.probe_out.bin  expected output for the probe input, so the Rust
+                          integration tests can verify PJRT numerics exactly.
+
+Weights are generated deterministically (seeded), quantized, and — for the
+analog variants — programmed with PCM conductance noise, mirroring the
+one-time CM_INITIALIZE cost in the paper. Scales are calibrated on probe
+data and baked as static constants (§III.B fixed input scaling).
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--stats]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import aimc_mvm as K
+from .kernels import ref as R
+
+# Programming-noise sigma relative to full conductance range. Effective 1%
+# models a differential PCM pair after iterative program-and-verify (refs
+# [16],[30]; raw single-device sigma is ~2-3%, program-verify + averaging
+# bring the *effective* weight error down). Our networks are not
+# noise-aware-trained, so we model the verified effective error.
+PROG_NOISE_SIGMA = 0.01
+
+SEED = 20221230  # the paper's DOI year + a stable suffix; fixed forever.
+
+
+# ---------------------------------------------------------------------------
+# Lowering helper (the gen_hlo.py recipe)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def hlo_op_histogram(hlo_text: str, entry_only: bool = True) -> dict[str, int]:
+    """Crude op histogram for --stats (L2 optimization sanity checks).
+
+    With entry_only, counts ops in the ENTRY computation only — nested
+    computations (reduce bodies, fusions) have their own parameter(...)
+    lines that would otherwise pollute e.g. the parameter count.
+    """
+    hist: dict[str, int] = {}
+    in_entry = not entry_only
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if entry_only:
+            if stripped.startswith("ENTRY"):
+                in_entry = True
+                continue
+            if in_entry and stripped == "}":
+                in_entry = False
+            if not in_entry:
+                continue
+        if " = " in stripped:
+            rhs = stripped.split(" = ", 1)[1]
+            # e.g. "f32[1,1024]{1,0} dot(..." -> "dot"
+            parts = rhs.split(" ", 1)
+            if len(parts) == 2:
+                op = parts[1].split("(", 1)[0].strip()
+                if op and op.replace("-", "").isalnum():
+                    hist[op] = hist.get(op, 0) + 1
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# Artifact bundle writer
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Tensor:
+    name: str
+    array: np.ndarray
+    file: str  # relative path within artifacts/
+
+
+class Bundle:
+    """One model artifact: HLO + manifest + binary tensors."""
+
+    def __init__(self, out_dir: str, name: str):
+        self.out = out_dir
+        self.name = name
+        self.inputs: list[Tensor] = []
+        self.params: list[Tensor] = []
+        self.probe_out: np.ndarray | None = None
+        self.hlo_text: str | None = None
+
+    def add_input(self, name: str, probe: jax.Array) -> None:
+        arr = np.asarray(probe, dtype=np.float32)
+        self.inputs.append(Tensor(name, arr, f"{self.name}.{name}.bin"))
+
+    def add_param(self, name: str, value: jax.Array, file: str | None = None) -> None:
+        arr = np.asarray(value, dtype=np.float32)
+        self.params.append(Tensor(name, arr, file or f"{self.name}.{name}.bin"))
+
+    def _write_bin(self, t: Tensor) -> None:
+        path = os.path.join(self.out, t.file)
+        if not os.path.exists(path):
+            t.array.astype("<f4").tofile(path)
+
+    def write(self) -> None:
+        assert self.hlo_text is not None and self.probe_out is not None
+        with open(os.path.join(self.out, f"{self.name}.hlo.txt"), "w") as f:
+            f.write(self.hlo_text)
+        for t in self.inputs + self.params:
+            self._write_bin(t)
+        probe_file = f"{self.name}.probe_out.bin"
+        np.asarray(self.probe_out, dtype="<f4").tofile(
+            os.path.join(self.out, probe_file)
+        )
+        lines = [f"model {self.name}", f"hlo {self.name}.hlo.txt"]
+        for t in self.inputs:
+            shape = ",".join(str(d) for d in t.array.shape)
+            lines.append(f"input {t.name} f32 {shape} {t.file}")
+        for t in self.params:
+            shape = ",".join(str(d) for d in t.array.shape)
+            lines.append(f"param {t.name} f32 {shape} {t.file}")
+        lines.append(f"probe_out {probe_file}")
+        with open(os.path.join(self.out, f"{self.name}.manifest"), "w") as f:
+            f.write("\n".join(lines) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# Model builders
+# ---------------------------------------------------------------------------
+
+
+def _keys(n: int) -> list[jax.Array]:
+    return list(jax.random.split(jax.random.PRNGKey(SEED), n))
+
+
+def build_mlp(out_dir: str, batch: int, stats: bool) -> list[Bundle]:
+    """MLP 1024x1024x2 (Fig. 6a), analog + digital variants."""
+    kw1, kw2, kx, kn1, kn2 = _keys(5)
+    d = M.MLP_DIM
+    # He-ish init scaled down so activations stay in a sane int8 range.
+    w1 = jax.random.normal(kw1, (d, d)) * (1.0 / jnp.sqrt(d))
+    w2 = jax.random.normal(kw2, (d, d)) * (1.0 / jnp.sqrt(d))
+    probe = jax.random.normal(kx, (batch, d))
+
+    w1_q, ws1 = K.quantize_weights(w1)
+    w2_q, ws2 = K.quantize_weights(w2)
+    w1_prog = K.program_weights(w1_q, PROG_NOISE_SIGMA, kn1)
+    w2_prog = K.program_weights(w2_q, PROG_NOISE_SIGMA, kn2)
+
+    spec1 = K.calibrate_spec(probe, w1)
+    h_probe = M.relu(R.aimc_mvm_ref(probe, w1_prog, spec1))
+    spec2 = K.calibrate_spec(h_probe, w2)
+
+    bundles = []
+
+    # -- analog ------------------------------------------------------------
+    name = f"mlp_analog_b{batch}"
+    b = Bundle(out_dir, name)
+
+    def fwd_analog(x, w1p, w2p):
+        return (M.mlp_analog(x, w1p, w2p, spec1=spec1, spec2=spec2),)
+
+    b.hlo_text = to_hlo_text(
+        jax.jit(fwd_analog).lower(
+            jax.ShapeDtypeStruct((batch, d), jnp.float32),
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+        )
+    )
+    b.add_input("x", probe)
+    b.add_param("w1_prog", w1_prog, "mlp.w1_prog.bin")
+    b.add_param("w2_prog", w2_prog, "mlp.w2_prog.bin")
+    b.probe_out = fwd_analog(probe, w1_prog, w2_prog)[0]
+    b.write()
+    bundles.append(b)
+    if stats:
+        print(f"[stats] {name}: {hlo_op_histogram(b.hlo_text)}")
+
+    # -- digital -----------------------------------------------------------
+    name = f"mlp_digital_b{batch}"
+    b = Bundle(out_dir, name)
+
+    def fwd_digital(x, w1q, w2q):
+        return (
+            M.mlp_digital(
+                x, w1q, w2q,
+                in_scale1=spec1.in_scale, w_scale1=ws1,
+                in_scale2=spec2.in_scale, w_scale2=ws2,
+            ),
+        )
+
+    b.hlo_text = to_hlo_text(
+        jax.jit(fwd_digital).lower(
+            jax.ShapeDtypeStruct((batch, d), jnp.float32),
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+        )
+    )
+    b.add_input("x", probe)
+    b.add_param("w1_q", w1_q, "mlp.w1_q.bin")
+    b.add_param("w2_q", w2_q, "mlp.w2_q.bin")
+    b.probe_out = fwd_digital(probe, w1_q, w2_q)[0]
+    b.write()
+    bundles.append(b)
+    return bundles
+
+
+def build_lstm(out_dir: str, n_h: int, stats: bool) -> list[Bundle]:
+    """LSTM cell + dense (Fig. 9a), one step, analog + digital variants."""
+    dims = M.LstmDims(n_h=n_h)
+    kc, kd, kx, kh, kcc, kn1, kn2 = _keys(7)
+    w_cell = jax.random.normal(kc, (dims.cell_rows, dims.cell_cols)) * (
+        1.0 / jnp.sqrt(dims.cell_rows)
+    )
+    w_dense = jax.random.normal(kd, (dims.n_h, dims.y)) * (
+        1.0 / jnp.sqrt(dims.n_h)
+    )
+    # Probe state: one-hot-ish char input, bounded h/c.
+    x = jax.random.normal(kx, (1, dims.x))
+    h = jnp.tanh(jax.random.normal(kh, (1, dims.n_h)))
+    c = jnp.tanh(jax.random.normal(kcc, (1, dims.n_h)))
+
+    wc_q, wcs = K.quantize_weights(w_cell)
+    wd_q, wds = K.quantize_weights(w_dense)
+    wc_prog = K.program_weights(wc_q, PROG_NOISE_SIGMA, kn1)
+    wd_prog = K.program_weights(wd_q, PROG_NOISE_SIGMA, kn2)
+
+    hx = jnp.concatenate([h, x], axis=-1)
+    # One large tile per layer, as in the paper's single-core cases: the
+    # whole [h,x] row fits in the crossbar rows, so tile_rows covers it.
+    cell_tile = K.AimcSpec(
+        in_scale=1.0, w_scale=1.0, adc_scale=1.0,
+        tile_rows=_ceil_mult(dims.cell_rows, 2), tile_cols=K.DEFAULT_TILE_COLS,
+    )
+    cell_spec = K.calibrate_spec(hx, w_cell, tile_rows=cell_tile.tile_rows)
+    gates = R.aimc_mvm_ref(hx, wc_prog, cell_spec)
+    h2, _ = M.lstm_cell_math(gates, c, dims.n_h)
+    dense_spec = K.calibrate_spec(
+        h2, w_dense, tile_rows=_ceil_mult(dims.n_h, 2)
+    )
+
+    shapes = dict(
+        x=jax.ShapeDtypeStruct((1, dims.x), jnp.float32),
+        h=jax.ShapeDtypeStruct((1, dims.n_h), jnp.float32),
+        c=jax.ShapeDtypeStruct((1, dims.n_h), jnp.float32),
+        wc=jax.ShapeDtypeStruct((dims.cell_rows, dims.cell_cols), jnp.float32),
+        wd=jax.ShapeDtypeStruct((dims.n_h, dims.y), jnp.float32),
+    )
+
+    bundles = []
+
+    name = f"lstm{n_h}_analog"
+    b = Bundle(out_dir, name)
+
+    def fwd_analog(x, h, c, wc, wd):
+        return M.lstm_step_analog(
+            x, h, c, wc, wd,
+            dims=dims, cell_spec=cell_spec, dense_spec=dense_spec,
+        )
+
+    b.hlo_text = to_hlo_text(
+        jax.jit(fwd_analog).lower(
+            shapes["x"], shapes["h"], shapes["c"], shapes["wc"], shapes["wd"]
+        )
+    )
+    b.add_input("x", x)
+    b.add_input("h", h)
+    b.add_input("c", c)
+    b.add_param("wc_prog", wc_prog, f"lstm{n_h}.wc_prog.bin")
+    b.add_param("wd_prog", wd_prog, f"lstm{n_h}.wd_prog.bin")
+    b.probe_out = fwd_analog(x, h, c, wc_prog, wd_prog)[0]
+    b.write()
+    bundles.append(b)
+    if stats:
+        print(f"[stats] {name}: {hlo_op_histogram(b.hlo_text)}")
+
+    name = f"lstm{n_h}_digital"
+    b = Bundle(out_dir, name)
+
+    def fwd_digital(x, h, c, wcq, wdq):
+        return M.lstm_step_digital(
+            x, h, c, wcq, wdq,
+            dims=dims,
+            cell_in_scale=cell_spec.in_scale, cell_w_scale=wcs,
+            dense_in_scale=dense_spec.in_scale, dense_w_scale=wds,
+        )
+
+    b.hlo_text = to_hlo_text(
+        jax.jit(fwd_digital).lower(
+            shapes["x"], shapes["h"], shapes["c"], shapes["wc"], shapes["wd"]
+        )
+    )
+    b.add_input("x", x)
+    b.add_input("h", h)
+    b.add_input("c", c)
+    b.add_param("wc_q", wc_q, f"lstm{n_h}.wc_q.bin")
+    b.add_param("wd_q", wd_q, f"lstm{n_h}.wd_q.bin")
+    b.probe_out = fwd_digital(x, h, c, wc_q, wd_q)[0]
+    b.write()
+    bundles.append(b)
+    return bundles
+
+
+def build_cnn_tiny(out_dir: str, stats: bool) -> list[Bundle]:
+    """Tiny CNN (functional path; CNN-F/M/S timing models are Rust-side)."""
+    dims = M.TinyCnnDims()
+    kw1, kw2, kwd, kx, kn1, kn2 = _keys(6)
+    w1 = jax.random.normal(kw1, (dims.k1, dims.c1)) * (1.0 / jnp.sqrt(dims.k1))
+    w2 = jax.random.normal(kw2, (dims.k2, dims.c2)) * (1.0 / jnp.sqrt(dims.k2))
+    wd = jax.random.normal(kwd, (dims.dense_rows, dims.classes)) * (
+        1.0 / jnp.sqrt(dims.dense_rows)
+    )
+    probe = jax.random.uniform(kx, (1, dims.image, dims.image, 3))
+
+    w1_q, ws1 = K.quantize_weights(w1)
+    w2_q, ws2 = K.quantize_weights(w2)
+    wd_q, wsd = K.quantize_weights(wd)
+    w1_prog = K.program_weights(w1_q, PROG_NOISE_SIGMA, kn1)
+    w2_prog = K.program_weights(w2_q, PROG_NOISE_SIGMA, kn2)
+
+    cols1 = M._im2col(probe, 3, 3)
+    spec1 = K.calibrate_spec(cols1, w1, tile_rows=_ceil_mult(dims.k1, 2))
+    h1 = M._maxpool2(
+        M.relu(R.aimc_mvm_ref(cols1, w1_prog, spec1).reshape(1, 32, 32, dims.c1))
+    )
+    cols2 = M._im2col(h1, 3, 3)
+    spec2 = K.calibrate_spec(cols2, w2, tile_rows=_ceil_mult(dims.k2, 2))
+    h2 = M._maxpool2(
+        M.relu(R.aimc_mvm_ref(cols2, w2_prog, spec2).reshape(1, 16, 16, dims.c2))
+    )
+    flat = h2.reshape(1, -1)
+    dense_in_scale = float(jnp.max(jnp.abs(flat))) / 127.0 or 1.0
+
+    shapes = (
+        jax.ShapeDtypeStruct((1, dims.image, dims.image, 3), jnp.float32),
+        jax.ShapeDtypeStruct((dims.k1, dims.c1), jnp.float32),
+        jax.ShapeDtypeStruct((dims.k2, dims.c2), jnp.float32),
+        jax.ShapeDtypeStruct((dims.dense_rows, dims.classes), jnp.float32),
+    )
+
+    bundles = []
+
+    name = "cnn_tiny_analog"
+    b = Bundle(out_dir, name)
+
+    def fwd_analog(x, w1p, w2p, wdq):
+        return (
+            M.cnn_tiny_analog(
+                x, w1p, w2p, wdq,
+                dims=dims, spec1=spec1, spec2=spec2,
+                dense_in_scale=dense_in_scale, dense_w_scale=wsd,
+            ),
+        )
+
+    b.hlo_text = to_hlo_text(jax.jit(fwd_analog).lower(*shapes))
+    b.add_input("x", probe)
+    b.add_param("w1_prog", w1_prog, "cnn_tiny.w1_prog.bin")
+    b.add_param("w2_prog", w2_prog, "cnn_tiny.w2_prog.bin")
+    b.add_param("wd_q", wd_q, "cnn_tiny.wd_q.bin")
+    b.probe_out = fwd_analog(probe, w1_prog, w2_prog, wd_q)[0]
+    b.write()
+    bundles.append(b)
+    if stats:
+        print(f"[stats] {name}: {hlo_op_histogram(b.hlo_text)}")
+
+    name = "cnn_tiny_digital"
+    b = Bundle(out_dir, name)
+
+    def fwd_digital(x, w1q, w2q, wdq):
+        return (
+            M.cnn_tiny_digital(
+                x, w1q, w2q, wdq,
+                dims=dims,
+                in_scale1=spec1.in_scale, w_scale1=ws1,
+                in_scale2=spec2.in_scale, w_scale2=ws2,
+                dense_in_scale=dense_in_scale, dense_w_scale=wsd,
+            ),
+        )
+
+    b.hlo_text = to_hlo_text(jax.jit(fwd_digital).lower(*shapes))
+    b.add_input("x", probe)
+    b.add_param("w1_q", w1_q, "cnn_tiny.w1_q.bin")
+    b.add_param("w2_q", w2_q, "cnn_tiny.w2_q.bin")
+    b.add_param("wd_q", wd_q, "cnn_tiny.wd_q.bin")
+    b.probe_out = fwd_digital(probe, w1_q, w2_q, wd_q)[0]
+    b.write()
+    bundles.append(b)
+    return bundles
+
+
+def _ceil_mult(n: int, align: int) -> int:
+    return ((n + align - 1) // align) * align
+
+
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--stats", action="store_true", help="print HLO op histograms")
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="only build the MLP b1 bundle (CI smoke)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    bundles: list[Bundle] = []
+    bundles += build_mlp(args.out, batch=1, stats=args.stats)
+    if not args.quick:
+        bundles += build_mlp(args.out, batch=8, stats=args.stats)
+        bundles += build_lstm(args.out, n_h=256, stats=args.stats)
+        bundles += build_cnn_tiny(args.out, stats=args.stats)
+
+    index = [b.name for b in bundles]
+    with open(os.path.join(args.out, "INDEX"), "w") as f:
+        f.write("\n".join(index) + "\n")
+    print(f"wrote {len(bundles)} bundles to {args.out}: {', '.join(index)}")
+
+
+if __name__ == "__main__":
+    main()

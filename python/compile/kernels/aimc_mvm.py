@@ -1,0 +1,211 @@
+"""Layer-1 Pallas kernel: the AIMC crossbar matrix-vector multiply.
+
+This kernel is the compute hot-spot of ALPINE: the analog in-memory MVM
+performed by a PCM crossbar tile (paper §III). It models the *physical*
+signal chain of one AIMC tile per grid step:
+
+    DAC: the digital input vector is quantized to signed 8-bit
+         (fixed input scale, as in paper §III.B: "the input signal is
+         scaled and quantized in digital prior to its transfer").
+    crossbar: the analog MVM against PCM conductances. Conductances carry
+         programming noise (applied by the caller at weight-programming
+         time via `program_weights`, matching the one-time CM_INITIALIZE
+         cost in the paper); the multiply-accumulate itself is ideal
+         (Ohm + Kirchhoff), which is the standard surrogate model.
+    ADC: each crossbar tile digitizes its own bit-line outputs to signed
+         8-bit *before* anything leaves the tile. When a logical matrix is
+         larger than one physical crossbar, AIMClib tiles it across
+         multiple crossbars and the partial sums are accumulated
+         *digitally*, i.e. after per-tile ADC quantization. The kernel is
+         faithful to that: quantization happens per row-block, then the
+         int8 outputs accumulate across blocks.
+
+Hardware adaptation (DESIGN.md §5): one grid step == one physical crossbar
+tile. BlockSpec carves the logical (M, N) weight matrix into crossbar-sized
+VMEM blocks exactly like AIMClib's `map_matrix` carves physical crossbars.
+On a real TPU the (256, 256) block maps onto the MXU systolic array; here we
+lower with interpret=True (CPU PJRT cannot execute Mosaic custom-calls).
+
+Scales are static (baked at AOT time): the paper fixes the input scaling
+factor "to avoid dynamic scaling".
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Signed 8-bit rails of the DAC (inputs) and ADC (outputs). Weights use the
+# symmetric [-127, 127] range so that +w and -w are both representable by a
+# PCM device pair (G+ - G-).
+DAC_MIN, DAC_MAX = -128.0, 127.0
+ADC_MIN, ADC_MAX = -128.0, 127.0
+WEIGHT_LEVELS = 127.0
+
+# Physical crossbar dimensions of the modeled tile (paper Table I-C uses a
+# 256x256 tile for the energy-efficiency figure).
+DEFAULT_TILE_ROWS = 256
+DEFAULT_TILE_COLS = 256
+
+
+@dataclass(frozen=True)
+class AimcSpec:
+    """Static configuration of an AIMC tile stack for one logical matrix.
+
+    in_scale:  digital input LSB (x_q = round(x / in_scale)).
+    w_scale:   weight LSB (w_q = round(w / w_scale), |w_q| <= 127).
+    adc_scale: ADC LSB in units of (x_q * w_q) counts.
+    tile_rows/tile_cols: physical crossbar dimensions.
+    """
+
+    in_scale: float
+    w_scale: float
+    adc_scale: float
+    tile_rows: int = DEFAULT_TILE_ROWS
+    tile_cols: int = DEFAULT_TILE_COLS
+
+
+def quantize_weights(w: jax.Array) -> tuple[jax.Array, float]:
+    """Symmetric int8 weight quantization: returns (w_q float-coded, w_scale)."""
+    w_scale = float(jnp.max(jnp.abs(w))) / WEIGHT_LEVELS
+    if w_scale == 0.0:
+        w_scale = 1.0
+    w_q = jnp.clip(jnp.round(w / w_scale), -WEIGHT_LEVELS, WEIGHT_LEVELS)
+    return w_q.astype(jnp.float32), w_scale
+
+
+def program_weights(
+    w_q: jax.Array, sigma: float, key: jax.Array | None
+) -> jax.Array:
+    """Program quantized weights onto PCM devices with conductance noise.
+
+    sigma is the programming-noise std-dev relative to the full conductance
+    range (paper refs [16], [30]: Gaussian perturbation of the target
+    conductance). The result is the *analog* conductance matrix, a float
+    array — analog storage is continuous (Fig. 1a).
+    """
+    if sigma <= 0.0 or key is None:
+        return w_q.astype(jnp.float32)
+    noise = sigma * WEIGHT_LEVELS * jax.random.normal(key, w_q.shape)
+    return (w_q + noise).astype(jnp.float32)
+
+
+def _dac(x: jax.Array, in_scale: float) -> jax.Array:
+    return jnp.clip(jnp.round(x / in_scale), DAC_MIN, DAC_MAX)
+
+
+def _adc(p: jax.Array, adc_scale: float) -> jax.Array:
+    return jnp.clip(jnp.round(p / adc_scale), ADC_MIN, ADC_MAX)
+
+
+def _aimc_tile_kernel(x_ref, w_ref, o_ref, *, spec: AimcSpec, n_row_blocks: int):
+    """One grid step == one physical crossbar tile (see module docstring)."""
+    j = pl.program_id(1)
+
+    # DAC conversion of this tile's slice of the input vector(s).
+    x_q = _dac(x_ref[...], spec.in_scale)
+
+    # Analog MVM on the crossbar: Ohm's law + Kirchhoff current summation.
+    partial = jnp.dot(x_q, w_ref[...], preferred_element_type=jnp.float32)
+
+    # Per-tile ADC: digitize *this tile's* bit-line integrals.
+    y_q = _adc(partial, spec.adc_scale)
+
+    # Digital accumulation across row-block tiles (done by the CPU / the
+    # tile-local digital logic in multi-crossbar mappings).
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += y_q
+
+    # Final dequantization back to real units.
+    @pl.when(j == n_row_blocks - 1)
+    def _dequant():
+        o_ref[...] *= spec.adc_scale * spec.in_scale * spec.w_scale
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def aimc_mvm(x: jax.Array, w_prog: jax.Array, spec: AimcSpec) -> jax.Array:
+    """Analog in-memory MVM: y = dequant(sum_tiles ADC(DAC(x) @ G_tile)).
+
+    x:      f32[B, M] digital activations (real units).
+    w_prog: f32[M, N] programmed conductances, from
+            program_weights(quantize_weights(w)[0], sigma, key).
+    Returns f32[B, N] in real units.
+    """
+    if x.ndim != 2 or w_prog.ndim != 2 or x.shape[1] != w_prog.shape[0]:
+        raise ValueError(f"shape mismatch: x{x.shape} @ w{w_prog.shape}")
+    batch, m = x.shape
+    n = w_prog.shape[1]
+
+    tm, tn = spec.tile_rows, spec.tile_cols
+    xp = _pad_to(x, 1, tm)
+    wp = _pad_to(_pad_to(w_prog, 0, tm), 1, tn)
+    n_row_blocks = xp.shape[1] // tm
+    n_col_blocks = wp.shape[1] // tn
+
+    kernel = functools.partial(
+        _aimc_tile_kernel, spec=spec, n_row_blocks=n_row_blocks
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_col_blocks, n_row_blocks),
+        in_specs=[
+            pl.BlockSpec((batch, tm), lambda i, j: (0, j)),
+            pl.BlockSpec((tm, tn), lambda i, j: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((batch, tn), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((batch, wp.shape[1]), jnp.float32),
+        interpret=True,  # CPU-PJRT target; Mosaic lowering is TPU-only.
+    )(xp, wp)
+    return out[:, :n]
+
+
+def calibrate_spec(
+    x_sample: jax.Array,
+    w: jax.Array,
+    tile_rows: int = DEFAULT_TILE_ROWS,
+    tile_cols: int = DEFAULT_TILE_COLS,
+) -> AimcSpec:
+    """Pick static scales from calibration data (AOT-time, paper §III.B).
+
+    in_scale covers the sample activation range; adc_scale covers the
+    maximum per-tile dot-product magnitude so the ADC does not saturate on
+    calibration data.
+    """
+    in_scale = float(jnp.max(jnp.abs(x_sample))) / DAC_MAX
+    if in_scale == 0.0:
+        in_scale = 1.0
+    w_q, w_scale = quantize_weights(w)
+    x_q = _dac(x_sample, in_scale)
+
+    xp = _pad_to(x_q, 1, tile_rows)
+    wp = _pad_to(w_q, 0, tile_rows)
+    blocks = xp.shape[1] // tile_rows
+    xb = xp.reshape(x_sample.shape[0], blocks, tile_rows)
+    wb = wp.reshape(blocks, tile_rows, w.shape[1])
+    partials = jnp.einsum("bkt,ktn->kbn", xb, wb)
+    peak = float(jnp.max(jnp.abs(partials)))
+    adc_scale = max(peak / ADC_MAX, 1.0)
+    return AimcSpec(
+        in_scale=in_scale,
+        w_scale=w_scale,
+        adc_scale=adc_scale,
+        tile_rows=tile_rows,
+        tile_cols=tile_cols,
+    )

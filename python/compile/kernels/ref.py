@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the AIMC Pallas kernel and the digital baseline.
+
+`aimc_mvm_ref` implements *exactly* the semantics of
+`aimc_mvm.py::aimc_mvm` without Pallas: DAC int8 quantization, per-row-block
+analog MVM, per-tile ADC int8 quantization, digital accumulation across
+row blocks, dequantization. This is the correctness signal for the kernel
+(pytest asserts allclose) and the contract for the Rust-side
+`aimclib::checker` (integration tests compare the PJRT-executed artifact
+against Rust's re-implementation of these formulas).
+
+`digital_mvm_ref` is the paper's *digital reference*: int8 weights and
+activations with fp32 accumulation and no ADC bottleneck (§VI.C: "similar
+precision across all applications, int8_t with fp32 accumulation").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .aimc_mvm import (
+    ADC_MAX,
+    ADC_MIN,
+    DAC_MAX,
+    DAC_MIN,
+    AimcSpec,
+    quantize_weights,
+)
+
+
+def _pad_rows(a: jax.Array, axis: int, multiple: int) -> jax.Array:
+    rem = (-a.shape[axis]) % multiple
+    if rem == 0:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(a, pad)
+
+
+def aimc_mvm_ref(x: jax.Array, w_prog: jax.Array, spec: AimcSpec) -> jax.Array:
+    """Oracle for aimc_mvm: identical math, no pallas_call."""
+    batch, m = x.shape
+    n = w_prog.shape[1]
+    tm = spec.tile_rows
+
+    x_q = jnp.clip(jnp.round(x / spec.in_scale), DAC_MIN, DAC_MAX)
+
+    xp = _pad_rows(x_q, 1, tm)
+    wp = _pad_rows(w_prog, 0, tm)
+    blocks = xp.shape[1] // tm
+    xb = xp.reshape(batch, blocks, tm)
+    wb = wp.reshape(blocks, tm, n)
+
+    # Analog partial product per crossbar row-block, ADC-quantized per tile.
+    partials = jnp.einsum("bkt,ktn->kbn", xb, wb)
+    partials_q = jnp.clip(jnp.round(partials / spec.adc_scale), ADC_MIN, ADC_MAX)
+
+    acc = jnp.sum(partials_q, axis=0)
+    return acc * (spec.adc_scale * spec.in_scale * spec.w_scale)
+
+
+def digital_mvm_q(
+    x: jax.Array, w_q: jax.Array, in_scale: float, w_scale: float
+) -> jax.Array:
+    """Digital int8 MVM with fp32 accumulation, pre-quantized weights.
+
+    jit-safe (scales are static floats); this is the form the Layer-2
+    digital models lower through.
+    """
+    x_q = jnp.clip(jnp.round(x / in_scale), DAC_MIN, DAC_MAX)
+    acc = jnp.dot(x_q, w_q, preferred_element_type=jnp.float32)
+    return acc * (in_scale * w_scale)
+
+
+def digital_mvm_ref(x: jax.Array, w: jax.Array, in_scale: float) -> jax.Array:
+    """Eager convenience wrapper: quantizes w on the fly (tests only)."""
+    w_q, w_scale = quantize_weights(w)
+    return digital_mvm_q(x, w_q, in_scale, w_scale)

@@ -1,0 +1,281 @@
+"""Layer-2 JAX models: the paper's three evaluation workloads.
+
+Each workload exists in two variants, mirroring the paper's ANA vs DIG
+comparison (§VI.C):
+
+  *analog*  — every MVM that the paper maps to AIMC tiles goes through the
+              Layer-1 Pallas kernel (`kernels.aimc_mvm`), i.e. DAC → PCM
+              crossbar (with programming noise) → per-tile ADC → digital
+              accumulation.
+  *digital* — the SIMD CPU reference: int8 weights/activations with fp32
+              accumulation (`kernels.ref.digital_mvm_ref`).
+
+Activation functions (ReLU / sigmoid / tanh / softmax) always run in fp32
+"on the CPU" — in the paper these are digital operations executed by the
+cores, never by the tile (§VIII: "all activation functions are performed in
+the CPU cores").
+
+Workloads:
+  MLP  — two dense 1024x1024 layers + ReLU (Fig. 6a).
+  LSTM — one LSTM cell layer (n_h) + one dense layer + softmax, input/output
+         width 50 (PTB character model, Fig. 9a). The analog variant tiles
+         the four gate matrices side-by-side in one logical crossbar and
+         computes all four gate MVMs with a single process call (§VIII.D).
+  CNN  — convolutions mapped to crossbars by flattening kernels into columns
+         (im2col, §IX.A refs [43],[16]); dense layers stay digital. The AOT
+         artifact uses a CIFAR-sized "tiny" CNN so the functional path stays
+         tractable; the full CNN-F/M/S *timing* models live in the Rust
+         simulator (rust/src/nn/cnn.rs), which needs no HLO.
+
+These functions are lowered once by `aot.py` (build time) and executed from
+Rust via PJRT; Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.aimc_mvm import AimcSpec, aimc_mvm
+from .kernels.ref import digital_mvm_q
+
+# ---------------------------------------------------------------------------
+# Shared digital ops (always CPU-side in the paper)
+# ---------------------------------------------------------------------------
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+def softmax(x: jax.Array) -> jax.Array:
+    return jax.nn.softmax(x, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (Exploration One, §VII): dense(1024) → ReLU → dense(1024) → ReLU
+# ---------------------------------------------------------------------------
+
+MLP_DIM = 1024
+
+
+def mlp_analog(
+    x: jax.Array,
+    w1_prog: jax.Array,
+    w2_prog: jax.Array,
+    *,
+    spec1: AimcSpec,
+    spec2: AimcSpec,
+) -> jax.Array:
+    """Analog MLP: both dense layers on AIMC tiles (Fig. 6b, cases 1-4)."""
+    h = relu(aimc_mvm(x, w1_prog, spec1))
+    return relu(aimc_mvm(h, w2_prog, spec2))
+
+
+def mlp_digital(
+    x: jax.Array,
+    w1_q: jax.Array,
+    w2_q: jax.Array,
+    *,
+    in_scale1: float,
+    w_scale1: float,
+    in_scale2: float,
+    w_scale2: float,
+) -> jax.Array:
+    """Digital int8 SIMD reference MLP (pre-quantized weights)."""
+    h = relu(digital_mvm_q(x, w1_q, in_scale1, w_scale1))
+    return relu(digital_mvm_q(h, w2_q, in_scale2, w_scale2))
+
+
+# ---------------------------------------------------------------------------
+# LSTM (Exploration Two, §VIII): cell layer + dense layer, x = y = 50
+# ---------------------------------------------------------------------------
+
+LSTM_IO = 50  # input / output width (PTB character alphabet size)
+
+
+@dataclass(frozen=True)
+class LstmDims:
+    """Dimensions of the paper's LSTM (Table II-A)."""
+
+    x: int = LSTM_IO
+    n_h: int = 256
+    y: int = LSTM_IO
+
+    @property
+    def cell_rows(self) -> int:
+        return self.n_h + self.x
+
+    @property
+    def cell_cols(self) -> int:
+        return 4 * self.n_h
+
+    @property
+    def total_params(self) -> int:
+        return self.cell_rows * self.cell_cols + self.n_h * self.y
+
+
+def lstm_cell_math(
+    gates: jax.Array, c: jax.Array, n_h: int
+) -> tuple[jax.Array, jax.Array]:
+    """Digital gate combination: the part the CPU always does (§VIII.C)."""
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_step_analog(
+    x: jax.Array,
+    h: jax.Array,
+    c: jax.Array,
+    w_cell_prog: jax.Array,
+    w_dense_prog: jax.Array,
+    *,
+    dims: LstmDims,
+    cell_spec: AimcSpec,
+    dense_spec: AimcSpec,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One analog LSTM inference step.
+
+    The concatenated [h, x] is queued once; the four gate matrices
+    (W_i | W_f | W_g | W_o) are tiled side by side in the crossbar, so a
+    single CM_PROCESS yields all four gate pre-activations (§VIII.D).
+    Returns (y, h_new, c_new).
+    """
+    hx = jnp.concatenate([h, x], axis=-1)
+    gates = aimc_mvm(hx, w_cell_prog, cell_spec)
+    h_new, c_new = lstm_cell_math(gates, c, dims.n_h)
+    y = softmax(aimc_mvm(h_new, w_dense_prog, dense_spec))
+    return y, h_new, c_new
+
+
+def lstm_step_digital(
+    x: jax.Array,
+    h: jax.Array,
+    c: jax.Array,
+    w_cell_q: jax.Array,
+    w_dense_q: jax.Array,
+    *,
+    dims: LstmDims,
+    cell_in_scale: float,
+    cell_w_scale: float,
+    dense_in_scale: float,
+    dense_w_scale: float,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One digital-reference LSTM inference step."""
+    hx = jnp.concatenate([h, x], axis=-1)
+    gates = digital_mvm_q(hx, w_cell_q, cell_in_scale, cell_w_scale)
+    h_new, c_new = lstm_cell_math(gates, c, dims.n_h)
+    y = softmax(digital_mvm_q(h_new, w_dense_q, dense_in_scale, dense_w_scale))
+    return y, h_new, c_new
+
+
+# ---------------------------------------------------------------------------
+# CNN (Exploration Three, §IX) — tiny functional variant for the AOT path
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TinyCnnDims:
+    """CIFAR-sized CNN used for the functional (PJRT) path.
+
+    conv1: 3x3x3 -> c1, ReLU, 2x2 maxpool
+    conv2: 3x3xc1 -> c2, ReLU, 2x2 maxpool
+    dense: (8*8*c2) -> classes, softmax (digital, as in §IX.A)
+    """
+
+    image: int = 32
+    c1: int = 16
+    c2: int = 32
+    classes: int = 10
+
+    @property
+    def k1(self) -> int:  # im2col rows of conv1
+        return 3 * 3 * 3
+
+    @property
+    def k2(self) -> int:  # im2col rows of conv2
+        return 3 * 3 * self.c1
+
+    @property
+    def dense_rows(self) -> int:
+        return (self.image // 4) * (self.image // 4) * self.c2
+
+
+def _im2col(x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """NHWC 'same' 3x3 patches -> (B*OH*OW, kh*kw*C) matrix.
+
+    This is exactly the kernel-flattening mapping the paper uses to place
+    convolutions on crossbars (§IX.A): feature-map patches become input
+    vectors, flattened kernels become crossbar columns.
+    """
+    b, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # conv_general_dilated_patches returns channels ordered as (C, kh, kw);
+    # reorder to (kh, kw, C) to match HWIO-flattened weights.
+    patches = patches.reshape(b, h, w, c, kh * kw)
+    patches = jnp.moveaxis(patches, 3, 4).reshape(b * h * w, kh * kw * c)
+    return patches
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    b, h, w, c = x.shape
+    return jnp.max(x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def _conv_layer(x: jax.Array, mvm) -> jax.Array:
+    """Convolution as im2col + (analog or digital) MVM + reshape."""
+    b, h, w, _ = x.shape
+    cols = _im2col(x, 3, 3)
+    out = mvm(cols)
+    return out.reshape(b, h, w, -1)
+
+
+def cnn_tiny_analog(
+    x: jax.Array,
+    w1_prog: jax.Array,
+    w2_prog: jax.Array,
+    wd_q: jax.Array,
+    *,
+    dims: TinyCnnDims,
+    spec1: AimcSpec,
+    spec2: AimcSpec,
+    dense_in_scale: float,
+    dense_w_scale: float,
+) -> jax.Array:
+    """Tiny CNN, convolutions on AIMC tiles, dense layer digital (§IX.A)."""
+    h1 = _maxpool2(relu(_conv_layer(x, lambda c: aimc_mvm(c, w1_prog, spec1))))
+    h2 = _maxpool2(relu(_conv_layer(h1, lambda c: aimc_mvm(c, w2_prog, spec2))))
+    flat = h2.reshape(x.shape[0], -1)
+    return softmax(digital_mvm_q(flat, wd_q, dense_in_scale, dense_w_scale))
+
+
+def cnn_tiny_digital(
+    x: jax.Array,
+    w1_q: jax.Array,
+    w2_q: jax.Array,
+    wd_q: jax.Array,
+    *,
+    dims: TinyCnnDims,
+    in_scale1: float,
+    w_scale1: float,
+    in_scale2: float,
+    w_scale2: float,
+    dense_in_scale: float,
+    dense_w_scale: float,
+) -> jax.Array:
+    """Tiny CNN, all layers digital int8 (reference)."""
+    h1 = _maxpool2(relu(_conv_layer(x, lambda c: digital_mvm_q(c, w1_q, in_scale1, w_scale1))))
+    h2 = _maxpool2(relu(_conv_layer(h1, lambda c: digital_mvm_q(c, w2_q, in_scale2, w_scale2))))
+    flat = h2.reshape(x.shape[0], -1)
+    return softmax(digital_mvm_q(flat, wd_q, dense_in_scale, dense_w_scale))

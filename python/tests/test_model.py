@@ -1,0 +1,189 @@
+"""Layer-2 model tests: shapes, analog-vs-digital agreement, structure."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import aimc_mvm as K
+from compile.kernels import ref as R
+
+
+def _mlp_setup(batch=2, d=256, sigma=0.01, seed=0):
+    """A scaled-down MLP so tests stay fast; same code path as d=1024."""
+    kw1, kw2, kx, kn1, kn2 = jax.random.split(jax.random.PRNGKey(seed), 5)
+    w1 = jax.random.normal(kw1, (d, d)) / jnp.sqrt(d)
+    w2 = jax.random.normal(kw2, (d, d)) / jnp.sqrt(d)
+    x = jax.random.normal(kx, (batch, d))
+    w1_q, ws1 = K.quantize_weights(w1)
+    w2_q, ws2 = K.quantize_weights(w2)
+    w1_p = K.program_weights(w1_q, sigma, kn1)
+    w2_p = K.program_weights(w2_q, sigma, kn2)
+    spec1 = K.calibrate_spec(x, w1, tile_rows=128, tile_cols=128)
+    h = M.relu(R.aimc_mvm_ref(x, w1_p, spec1))
+    spec2 = K.calibrate_spec(h, w2, tile_rows=128, tile_cols=128)
+    return x, w1, w2, w1_q, ws1, w2_q, ws2, w1_p, w2_p, spec1, spec2
+
+
+class TestMlp:
+    def test_shapes(self):
+        x, *_, w1_p, w2_p, spec1, spec2 = _mlp_setup()
+        y = M.mlp_analog(x, w1_p, w2_p, spec1=spec1, spec2=spec2)
+        assert y.shape == x.shape
+
+    def test_analog_tracks_digital(self):
+        (x, w1, w2, w1_q, ws1, w2_q, ws2, w1_p, w2_p, spec1, spec2) = _mlp_setup()
+        y_a = M.mlp_analog(x, w1_p, w2_p, spec1=spec1, spec2=spec2)
+        y_d = M.mlp_digital(
+            x, w1_q, w2_q,
+            in_scale1=spec1.in_scale, w_scale1=ws1,
+            in_scale2=spec2.in_scale, w_scale2=ws2,
+        )
+        rel = float(jnp.linalg.norm(y_a - y_d) / (jnp.linalg.norm(y_d) + 1e-9))
+        assert rel < 0.25, rel
+
+    def test_relu_nonnegative(self):
+        x, *_, w1_p, w2_p, spec1, spec2 = _mlp_setup()
+        y = M.mlp_analog(x, w1_p, w2_p, spec1=spec1, spec2=spec2)
+        assert float(jnp.min(y)) >= 0.0
+
+    def test_jit_lowers(self):
+        x, *_, w1_p, w2_p, spec1, spec2 = _mlp_setup(batch=1, d=128)
+        fn = jax.jit(lambda x, a, b: M.mlp_analog(x, a, b, spec1=spec1, spec2=spec2))
+        lowered = fn.lower(x, w1_p, w2_p)
+        assert "stablehlo" in str(lowered.compiler_ir("stablehlo"))
+
+
+class TestLstmDims:
+    """Table II-A parameter counts."""
+
+    @pytest.mark.parametrize("n_h", [256, 512, 750])
+    def test_total_params_formula(self, n_h):
+        dims = M.LstmDims(n_h=n_h)
+        # cell: (n_h + 50) * 4*n_h ; dense: n_h * 50
+        expect = (n_h + 50) * 4 * n_h + n_h * 50
+        assert dims.total_params == expect
+
+    def test_paper_param_totals_same_order(self):
+        """Table II-A reports 377.3k / 1.28M / 2.6M; our weight-only count
+        is within ~15% (the paper's totals include per-gate biases and
+        bookkeeping we don't model). The Rust nn::lstm module carries the
+        paper's literal values for the Table II bench."""
+        for n_h, paper in [(256, 377_300), (512, 1_280_000), (750, 2_600_000)]:
+            ours = M.LstmDims(n_h=n_h).total_params
+            assert abs(ours - paper) / paper < 0.15, (n_h, ours, paper)
+
+    def test_cell_geometry(self):
+        dims = M.LstmDims(n_h=256)
+        assert dims.cell_rows == 306
+        assert dims.cell_cols == 1024
+
+
+class TestLstmStep:
+    def _setup(self, n_h=64, sigma=0.01, seed=1):
+        dims = M.LstmDims(n_h=n_h)
+        kc, kd, kx, kh, kcc, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 7)
+        w_cell = jax.random.normal(kc, (dims.cell_rows, dims.cell_cols)) / jnp.sqrt(
+            dims.cell_rows
+        )
+        w_dense = jax.random.normal(kd, (dims.n_h, dims.y)) / jnp.sqrt(dims.n_h)
+        x = jax.random.normal(kx, (1, dims.x))
+        h = jnp.tanh(jax.random.normal(kh, (1, dims.n_h)))
+        c = jnp.tanh(jax.random.normal(kcc, (1, dims.n_h)))
+        wc_q, wcs = K.quantize_weights(w_cell)
+        wd_q, wds = K.quantize_weights(w_dense)
+        wc_p = K.program_weights(wc_q, sigma, k1)
+        wd_p = K.program_weights(wd_q, sigma, k2)
+        hx = jnp.concatenate([h, x], axis=-1)
+        cell_spec = K.calibrate_spec(hx, w_cell, tile_rows=dims.cell_rows)
+        gates = R.aimc_mvm_ref(hx, wc_p, cell_spec)
+        h2, _ = M.lstm_cell_math(gates, c, dims.n_h)
+        dense_spec = K.calibrate_spec(h2, w_dense, tile_rows=dims.n_h)
+        return dims, x, h, c, wc_q, wcs, wd_q, wds, wc_p, wd_p, cell_spec, dense_spec
+
+    def test_shapes_and_probability_output(self):
+        dims, x, h, c, *_, wc_p, wd_p, cell_spec, dense_spec = self._setup()
+        y, h2, c2 = M.lstm_step_analog(
+            x, h, c, wc_p, wd_p, dims=dims, cell_spec=cell_spec, dense_spec=dense_spec
+        )
+        assert y.shape == (1, dims.y)
+        assert h2.shape == (1, dims.n_h) and c2.shape == (1, dims.n_h)
+        np.testing.assert_allclose(float(jnp.sum(y)), 1.0, rtol=1e-5)
+        assert float(jnp.min(y)) >= 0.0
+
+    def test_state_bounded(self):
+        """|h| <= 1 always (tanh(c) * sigmoid(o)); c bounded by recurrence."""
+        dims, x, h, c, *_, wc_p, wd_p, cell_spec, dense_spec = self._setup()
+        for _ in range(5):
+            _, h, c = M.lstm_step_analog(
+                x, h, c, wc_p, wd_p,
+                dims=dims, cell_spec=cell_spec, dense_spec=dense_spec,
+            )
+        assert float(jnp.max(jnp.abs(h))) <= 1.0 + 1e-6
+
+    def test_analog_tracks_digital_distribution(self):
+        (dims, x, h, c, wc_q, wcs, wd_q, wds, wc_p, wd_p,
+         cell_spec, dense_spec) = self._setup()
+        y_a, *_ = M.lstm_step_analog(
+            x, h, c, wc_p, wd_p, dims=dims, cell_spec=cell_spec, dense_spec=dense_spec
+        )
+        y_d, *_ = M.lstm_step_digital(
+            x, h, c, wc_q, wd_q,
+            dims=dims,
+            cell_in_scale=cell_spec.in_scale, cell_w_scale=wcs,
+            dense_in_scale=dense_spec.in_scale, dense_w_scale=wds,
+        )
+        # Output distributions over the 50-char alphabet stay close.
+        tv = 0.5 * float(jnp.sum(jnp.abs(y_a - y_d)))
+        assert tv < 0.2, tv
+
+    def test_single_process_call_covers_all_gates(self):
+        """The cell MVM output width is exactly 4*n_h: one CM_PROCESS."""
+        dims, x, h, c, *_, wc_p, wd_p, cell_spec, dense_spec = self._setup()
+        hx = jnp.concatenate([h, x], axis=-1)
+        gates = R.aimc_mvm_ref(hx, wc_p, cell_spec)
+        assert gates.shape == (1, 4 * dims.n_h)
+
+
+class TestTinyCnn:
+    def test_im2col_matches_conv(self):
+        """im2col @ flattened-HWIO kernels == lax.conv (the §IX.A mapping)."""
+        key = jax.random.PRNGKey(0)
+        k1, k2 = jax.random.split(key)
+        x = jax.random.normal(k1, (2, 8, 8, 3))
+        w = jax.random.normal(k2, (3, 3, 3, 5))  # HWIO
+        cols = M._im2col(x, 3, 3)
+        y_gemm = (cols @ w.reshape(-1, 5)).reshape(2, 8, 8, 5)
+        y_conv = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        np.testing.assert_allclose(
+            np.asarray(y_gemm), np.asarray(y_conv), rtol=1e-4, atol=1e-4
+        )
+
+    def test_maxpool(self):
+        x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+        p = M._maxpool2(x)
+        assert p.shape == (1, 2, 2, 1)
+        assert p[0, 0, 0, 0] == 5.0 and p[0, 1, 1, 0] == 15.0
+
+    def test_forward_shapes_and_softmax(self):
+        dims = M.TinyCnnDims(image=16, c1=4, c2=8, classes=10)
+        keys = jax.random.split(jax.random.PRNGKey(2), 6)
+        w1 = jax.random.normal(keys[0], (dims.k1, dims.c1)) / jnp.sqrt(dims.k1)
+        w2 = jax.random.normal(keys[1], (dims.k2, dims.c2)) / jnp.sqrt(dims.k2)
+        wd = jax.random.normal(keys[2], (dims.dense_rows, dims.classes))
+        x = jax.random.uniform(keys[3], (1, 16, 16, 3))
+        w1_q, ws1 = K.quantize_weights(w1)
+        w2_q, ws2 = K.quantize_weights(w2)
+        wd_q, wsd = K.quantize_weights(wd)
+        y = M.cnn_tiny_digital(
+            x, w1_q, w2_q, wd_q,
+            dims=dims,
+            in_scale1=0.01, w_scale1=ws1,
+            in_scale2=0.05, w_scale2=ws2,
+            dense_in_scale=0.05, dense_w_scale=wsd,
+        )
+        assert y.shape == (1, dims.classes)
+        np.testing.assert_allclose(float(jnp.sum(y)), 1.0, rtol=1e-5)

@@ -1,0 +1,28 @@
+//! Bench: regenerate Fig. 10 — LSTM aggregate results for n_h in
+//! {256, 512, 750}, DIG 1/2/5-core vs ANA cases 1-4, both systems.
+//! The paper's headline: up to 9.4x/9.3x time/energy gains at n_h=750,
+//! shrinking to ~1.0-1.5x at n_h=256 (working set fits caches).
+
+use alpine::config::SystemKind;
+use alpine::coordinator::experiments;
+use alpine::report;
+
+fn main() {
+    let rows = experiments::fig10_lstm(experiments::LSTM_INFERENCES);
+    report::aggregate_table("Fig. 10 — LSTM aggregate (10 inferences)", &rows).print();
+
+    // Per-size gains vs the single-core digital reference (high-power).
+    for n_h in experiments::LSTM_SIZES {
+        let sized: Vec<_> = rows
+            .iter()
+            .filter(|r| r.system == SystemKind::HighPower && r.label.starts_with(&format!("lstm{n_h}/")))
+            .cloned()
+            .collect();
+        report::gains_table(
+            &format!("Fig. 10 — gains vs DIG-1core, n_h={n_h} (high-power)"),
+            &sized,
+            |r| r.label.ends_with("DIG-1core"),
+        )
+        .print();
+    }
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig. 11 — LSTM analog sub-ROI breakdown on the
+//! high-power system. Paper findings to reproduce in shape: cell
+//! dequeue + activation dominate (up to ~81.8%), gate combination next
+//! (up to ~14.9%); activations alone ~70% of the dequeue+activation
+//! share.
+
+use alpine::coordinator::experiments;
+use alpine::report;
+use alpine::stats::RoiKind;
+
+fn main() {
+    let rows = experiments::fig11_lstm_breakdown(experiments::LSTM_INFERENCES);
+    report::roi_table("Fig. 11 — LSTM sub-ROI breakdown (high-power)", &rows).print();
+
+    for r in &rows {
+        let deq_act =
+            r.roi.fraction(RoiKind::AnalogDequeue) + r.roi.fraction(RoiKind::Activation);
+        let combine = r.roi.fraction(RoiKind::GateCombine);
+        println!(
+            "{}: dequeue+activation {:.1}%, gate combine {:.1}%",
+            r.label,
+            100.0 * deq_act,
+            100.0 * combine
+        );
+    }
+}

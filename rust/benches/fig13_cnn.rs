@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig. 13 — CNN-F/M/S aggregate results, 8-core
+//! pipelined DIG vs ANA on both systems. Paper headline: up to 20.5x
+//! speedup / 20.8x energy / 3.7x memory-intensity improvement for CNN-S
+//! on the high-power system.
+
+use alpine::config::SystemKind;
+use alpine::coordinator::experiments;
+use alpine::report;
+
+fn main() {
+    let rows = experiments::fig13_cnn(experiments::CNN_INFERENCES);
+    report::aggregate_table("Fig. 13 — CNN aggregate (3 inferences)", &rows).print();
+
+    for sys in SystemKind::ALL {
+        for variant in ["CNN-F", "CNN-M", "CNN-S"] {
+            let pair: Vec<_> = rows
+                .iter()
+                .filter(|r| r.system == sys && r.label.contains(variant))
+                .cloned()
+                .collect();
+            if pair.len() == 2 {
+                let dig = pair.iter().find(|r| r.label.ends_with("DIG")).unwrap();
+                let ana = pair.iter().find(|r| r.label.ends_with("ANA")).unwrap();
+                println!(
+                    "{variant} [{}]: speedup {:.1}x, energy gain {:.1}x, LLCMPI improvement {:.1}x",
+                    sys.name(),
+                    dig.time_s / ana.time_s,
+                    dig.energy.total_j() / ana.energy.total_j(),
+                    dig.llc_mpki / ana.llc_mpki.max(1e-9),
+                );
+            }
+        }
+    }
+}

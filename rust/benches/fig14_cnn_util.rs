@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig. 14 — per-core idle% and IPC for CNN-S on the
+//! high-power system, DIG vs ANA. Paper shape: conv1 utilization similar
+//! in both (input-load bound); conv2/3 idle cycles drop up to 4x with
+//! AIMC; dense-layer cores idle the most.
+
+use alpine::coordinator::experiments;
+use alpine::report;
+
+fn main() {
+    let rows = experiments::fig14_cnn_utilization(experiments::CNN_INFERENCES);
+    report::utilization_table(
+        "Fig. 14 — CNN-S per-core utilization (high-power; cores 0-4 = conv1-5, 5-7 = dense1-3)",
+        &rows,
+    )
+    .print();
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig. 7 — MLP aggregate results (total time, memory
+//! intensity, energy) for DIG 1/2/4-core and ANA cases 1-4 on both the
+//! high-power and low-power systems, plus the gains table whose maxima
+//! are the paper's 12.8x/12.5x MLP headline.
+
+use alpine::coordinator::experiments;
+use alpine::report;
+use alpine::util::benchkit;
+
+fn main() {
+    let rows = experiments::fig7_mlp(experiments::MLP_INFERENCES);
+    report::aggregate_table("Fig. 7 — MLP aggregate (10 inferences)", &rows).print();
+    report::gains_table("Fig. 7 — gains vs DIG-1core", &rows, |r| {
+        r.label.contains("DIG-1core")
+    })
+    .print();
+
+    // Simulator throughput for this sweep (meta-benchmark).
+    benchkit::bench("sim/fig7_full_sweep", 3, || {
+        benchkit::black_box(experiments::fig7_mlp(2));
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate Fig. 8 — MLP run-time percentage per sub-ROI
+//! (input load, analog queue/process/dequeue, activation, writeback,
+//! digital MVM) for the digital reference and analog cases 1, 3, 4.
+
+use alpine::coordinator::experiments;
+use alpine::report;
+use alpine::stats::RoiKind;
+
+fn main() {
+    let rows = experiments::fig8_mlp_breakdown(experiments::MLP_INFERENCES);
+    report::roi_table("Fig. 8 — MLP sub-ROI run-time breakdown", &rows).print();
+
+    // The paper's qualitative checks, printed for eyeballing:
+    for r in &rows {
+        if r.label.contains("ANA") {
+            let q = r.roi.fraction(RoiKind::AnalogQueue) + r.roi.fraction(RoiKind::AnalogDequeue);
+            let p = r.roi.fraction(RoiKind::AnalogProcess);
+            println!(
+                "{} [{}]: queue+dequeue {:.1}% of ROI, process {:.1}% (paper: queue/dequeue dominate, process minor)",
+                r.label,
+                r.system.name(),
+                100.0 * q,
+                100.0 * p
+            );
+        }
+    }
+}

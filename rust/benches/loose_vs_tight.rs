@@ -1,0 +1,26 @@
+//! Bench: §VII.B — loosely-coupled AIMC accelerator vs the tightly-
+//! coupled ISA-extension integration vs the digital reference. Paper
+//! numbers: loose achieves 4.1x over DIG-1core but is up to 3.1x slower
+//! than tight coupling.
+
+use alpine::config::SystemKind;
+use alpine::coordinator::experiments;
+use alpine::report;
+
+fn main() {
+    let rows = experiments::loose_vs_tight(experiments::MLP_INFERENCES);
+    report::aggregate_table("§VII.B — coupling comparison (MLP)", &rows).print();
+
+    for sys in SystemKind::ALL {
+        let sysrows: Vec<_> = rows.iter().filter(|r| r.system == sys).collect();
+        let dig = sysrows.iter().find(|r| r.label.contains("DIG")).unwrap();
+        let tight = sysrows.iter().find(|r| r.label.contains("case1")).unwrap();
+        let loose = sysrows.iter().find(|r| r.label.contains("loose")).unwrap();
+        println!(
+            "[{}] loose vs DIG: {:.1}x speedup (paper 4.1x); loose vs tight: {:.1}x slowdown (paper ~3.1x)",
+            sys.name(),
+            dig.time_s / loose.time_s,
+            loose.time_s / tight.time_s,
+        );
+    }
+}

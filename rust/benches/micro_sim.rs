@@ -1,0 +1,53 @@
+//! Micro-benchmarks of the simulator substrate itself (the §Perf hot
+//! paths): cache lookups, DRAM channel accounting, trace-machine
+//! streaming throughput, AIMClib functional MVM.
+
+use alpine::aimclib::checker::{self, Matrix};
+use alpine::config::SystemConfig;
+use alpine::sim::cache::{Access, Cache};
+use alpine::sim::machine::{Machine, MachineSpec};
+use alpine::util::benchkit::{bench, black_box};
+use alpine::util::rng::Rng;
+use alpine::workload::trace::TraceBuilder;
+
+fn main() {
+    // Cache lookup throughput (hit-heavy).
+    let cfg = SystemConfig::high_power();
+    let mut cache = Cache::new(cfg.l1d);
+    for addr in (0..32 * 1024).step_by(64) {
+        cache.access(addr, Access::Read);
+    }
+    bench("cache/l1_hits_1M", 10, || {
+        for _ in 0..4 {
+            for addr in (0..16 * 1024 * 16).step_by(64) {
+                black_box(cache.access(black_box(addr % (32 * 1024)), Access::Read));
+            }
+        }
+    });
+
+    // Miss-heavy streaming through the full hierarchy via the machine.
+    bench("machine/stream_64MB_lines", 5, || {
+        let mut m = Machine::new(SystemConfig::high_power(), MachineSpec::default());
+        let mut b = TraceBuilder::new();
+        for k in 0..16u64 {
+            b.stream_read(0x1000_0000 + k * 0x40_0000, 4 * 1024 * 1024, 1);
+        }
+        black_box(m.run(vec![b.build()]));
+    });
+
+    // AIMClib functional MVM (the checker used in e2e validation).
+    let mut rng = Rng::new(1);
+    let x = Matrix::new(1, 1024, (0..1024).map(|_| rng.normal_f32(1.0)).collect());
+    let w = Matrix::new(1024, 1024, (0..1024 * 1024).map(|_| rng.normal_f32(0.1)).collect());
+    let (w_q, _) = checker::quantize_weights(&w);
+    let spec = checker::AimcSpec {
+        in_scale: 0.01,
+        w_scale: 0.001,
+        adc_scale: 100.0,
+        tile_rows: 256,
+        tile_cols: 256,
+    };
+    bench("aimclib/checker_mvm_1024x1024", 10, || {
+        black_box(checker::aimc_mvm(&x, &w_q, &spec));
+    });
+}

@@ -1,0 +1,49 @@
+//! Bench: Table II — LSTM network parameters and AIMC tile dimensions
+//! per case, our computed layouts vs the paper's published values.
+
+use alpine::nn::lstm::{LstmModel, PAPER_TILE_DIMS, PAPER_TOTAL_PARAMS};
+use alpine::util::table::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "Table II-A — LSTM parameters",
+        &["n_h", "cell (rows x cols)", "dense", "params (ours)", "params (paper)"],
+    );
+    for (n_h, paper) in PAPER_TOTAL_PARAMS {
+        let m = LstmModel::paper(n_h);
+        t.row(vec![
+            n_h.to_string(),
+            format!("{}x{}", m.cell_rows(), m.cell_cols()),
+            format!("{}x{}", m.dense_rows(), m.dense_cols()),
+            m.total_params().to_string(),
+            format!("{:.1}k", paper / 1e3),
+        ]);
+    }
+    t.print();
+
+    let mut t2 = Table::new(
+        "Table II-B — AIMC tile dimensions (paper values, used by the generators)",
+        &["n_h", "case 1", "case 2", "case 3", "case 4"],
+    );
+    for (n_h, dims) in PAPER_TILE_DIMS {
+        let mut row = vec![n_h.to_string()];
+        row.extend(dims.iter().map(|(r, c)| format!("{r} x {c}")));
+        t2.row(row);
+    }
+    t2.print();
+
+    let mut t3 = Table::new(
+        "Working sets (§VIII.E)",
+        &["n_h", "digital", "analog", "fits L1 (analog)"],
+    );
+    for n_h in [256u64, 512, 750] {
+        let m = LstmModel::paper(n_h);
+        t3.row(vec![
+            n_h.to_string(),
+            format!("{:.2} kB", m.working_set_digital() as f64 / 1024.0),
+            format!("{:.2} kB", m.working_set_analog() as f64 / 1024.0),
+            (m.working_set_analog() < 32 * 1024).to_string(),
+        ]);
+    }
+    t3.print();
+}

@@ -1,0 +1,90 @@
+//! Digital activation functions (always CPU-side in the paper, §VIII).
+//! Used by the functional checker and the e2e serving path.
+
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+pub fn sigmoid(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = 1.0 / (1.0 + (-*v).exp());
+    }
+}
+
+pub fn tanh(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.tanh();
+    }
+}
+
+/// Numerically-stable softmax over the whole slice.
+pub fn softmax(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let max = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in x.iter_mut() {
+        *v /= sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut x = vec![-1.0, 0.0, 2.5];
+        relu(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 2.5]);
+    }
+
+    #[test]
+    fn sigmoid_range_and_midpoint() {
+        let mut x = vec![0.0, 10.0, -10.0];
+        sigmoid(&mut x);
+        assert!((x[0] - 0.5).abs() < 1e-6);
+        assert!(x[1] > 0.999 && x[2] < 0.001);
+    }
+
+    #[test]
+    fn tanh_odd_function() {
+        let mut a = vec![0.7];
+        let mut b = vec![-0.7];
+        tanh(&mut a);
+        tanh(&mut b);
+        assert!((a[0] + b[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_is_distribution() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        softmax(&mut x);
+        let sum: f32 = x.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(x.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn softmax_stable_for_large_inputs() {
+        let mut x = vec![1000.0, 1001.0];
+        softmax(&mut x);
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_empty_noop() {
+        let mut x: Vec<f32> = vec![];
+        softmax(&mut x);
+    }
+}

@@ -1,0 +1,291 @@
+//! The AIMClib "checker": a host-side functional simulation of the AIMC
+//! tile signal chain (paper §IV.C — "a checker program that simulates
+//! tightly-coupled AIMC tiles in guest software so that programs ... can
+//! be debugged on the host machine before engaging the real or simulated
+//! hardware").
+//!
+//! The math here is the *contract* shared with the Layer-1 Pallas kernel
+//! (`python/compile/kernels/aimc_mvm.py`) and its jnp oracle (`ref.py`):
+//! DAC int8 quantization → per-row-block analog MVM against programmed
+//! conductances → per-tile ADC int8 quantization → digital accumulation →
+//! dequantization. Integration tests compare this against the
+//! PJRT-executed artifacts.
+
+use crate::util::rng::Rng;
+
+pub const DAC_MIN: f32 = -128.0;
+pub const DAC_MAX: f32 = 127.0;
+pub const ADC_MIN: f32 = -128.0;
+pub const ADC_MAX: f32 = 127.0;
+pub const WEIGHT_LEVELS: f32 = 127.0;
+
+/// Static per-matrix scales (mirrors python AimcSpec).
+#[derive(Clone, Copy, Debug)]
+pub struct AimcSpec {
+    pub in_scale: f32,
+    pub w_scale: f32,
+    pub adc_scale: f32,
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+}
+
+/// Row-major f32 matrix (weights are conductance codes; continuous).
+#[derive(Clone, Debug)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+}
+
+/// Symmetric int8 weight quantization; returns (codes as f32, scale).
+pub fn quantize_weights(w: &Matrix) -> (Matrix, f32) {
+    let max = w.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let scale = if max == 0.0 { 1.0 } else { max / WEIGHT_LEVELS };
+    let data = w
+        .data
+        .iter()
+        .map(|v| (v / scale).round().clamp(-WEIGHT_LEVELS, WEIGHT_LEVELS))
+        .collect();
+    (Matrix::new(w.rows, w.cols, data), scale)
+}
+
+/// Program quantized codes onto PCM with Gaussian conductance noise
+/// (sigma relative to full range) — the CM_INITIALIZE-time perturbation.
+pub fn program_weights(w_q: &Matrix, sigma: f32, rng: &mut Rng) -> Matrix {
+    if sigma <= 0.0 {
+        return w_q.clone();
+    }
+    let data = w_q
+        .data
+        .iter()
+        .map(|v| v + rng.normal_f32(sigma * WEIGHT_LEVELS))
+        .collect();
+    Matrix::new(w_q.rows, w_q.cols, data)
+}
+
+#[inline]
+fn dac(x: f32, in_scale: f32) -> f32 {
+    (x / in_scale).round().clamp(DAC_MIN, DAC_MAX)
+}
+
+#[inline]
+fn adc(p: f32, adc_scale: f32) -> f32 {
+    (p / adc_scale).round().clamp(ADC_MIN, ADC_MAX)
+}
+
+/// The full analog MVM: y[b][n] over a batch of input rows.
+/// Accumulation within a tile uses f64 (the analog integral is exact to
+/// float precision; f64 keeps the pre-round value stable so results agree
+/// with the jnp oracle to within one ADC LSB).
+pub fn aimc_mvm(x: &Matrix, w_prog: &Matrix, spec: &AimcSpec) -> Matrix {
+    assert_eq!(x.cols, w_prog.rows, "shape mismatch");
+    let (batch, m, n) = (x.rows, w_prog.rows, w_prog.cols);
+    let tm = spec.tile_rows;
+    let blocks = m.div_ceil(tm);
+    let mut out = Matrix::zeros(batch, n);
+
+    for b in 0..batch {
+        // DAC conversion of the input vector.
+        let x_q: Vec<f32> = (0..m).map(|i| dac(x.at(b, i), spec.in_scale)).collect();
+        for j in 0..n {
+            let mut acc = 0.0f32; // digital accumulator over row-block tiles
+            for blk in 0..blocks {
+                let lo = blk * tm;
+                let hi = ((blk + 1) * tm).min(m);
+                let mut partial = 0.0f64; // analog bit-line integral
+                for i in lo..hi {
+                    partial += (x_q[i] as f64) * (w_prog.at(i, j) as f64);
+                }
+                acc += adc(partial as f32, spec.adc_scale);
+            }
+            out.data[b * n + j] = acc * spec.adc_scale * spec.in_scale * spec.w_scale;
+        }
+    }
+    out
+}
+
+/// Digital int8 reference MVM with fp32 accumulation (paper baseline).
+pub fn digital_mvm(x: &Matrix, w_q: &Matrix, in_scale: f32, w_scale: f32) -> Matrix {
+    assert_eq!(x.cols, w_q.rows);
+    let (batch, m, n) = (x.rows, w_q.rows, w_q.cols);
+    let mut out = Matrix::zeros(batch, n);
+    for b in 0..batch {
+        let x_q: Vec<f32> = (0..m).map(|i| dac(x.at(b, i), in_scale)).collect();
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for i in 0..m {
+                acc += (x_q[i] as f64) * (w_q.at(i, j) as f64);
+            }
+            out.data[b * n + j] = acc as f32 * in_scale * w_scale;
+        }
+    }
+    out
+}
+
+/// Calibrate scales from probe data (mirrors python `calibrate_spec`).
+pub fn calibrate(x_sample: &Matrix, w: &Matrix, tile_rows: usize, tile_cols: usize) -> AimcSpec {
+    let xmax = x_sample.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let in_scale = if xmax == 0.0 { 1.0 } else { xmax / DAC_MAX };
+    let (w_q, w_scale) = quantize_weights(w);
+    let m = w.rows;
+    let tm = tile_rows;
+    let blocks = m.div_ceil(tm);
+    let mut peak = 0.0f64;
+    for b in 0..x_sample.rows {
+        let x_q: Vec<f32> = (0..m).map(|i| dac(x_sample.at(b, i), in_scale)).collect();
+        for j in 0..w.cols {
+            for blk in 0..blocks {
+                let lo = blk * tm;
+                let hi = ((blk + 1) * tm).min(m);
+                let mut partial = 0.0f64;
+                for i in lo..hi {
+                    partial += (x_q[i] as f64) * (w_q.at(i, j) as f64);
+                }
+                peak = peak.max(partial.abs());
+            }
+        }
+    }
+    AimcSpec {
+        in_scale,
+        w_scale,
+        adc_scale: ((peak / ADC_MAX as f64) as f32).max(1.0),
+        tile_rows,
+        tile_cols,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::miniprop;
+
+    fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Matrix {
+        let data = (0..rows * cols).map(|_| rng.normal_f32(scale)).collect();
+        Matrix::new(rows, cols, data)
+    }
+
+    #[test]
+    fn noiseless_tracks_exact_product() {
+        let mut rng = Rng::new(1);
+        let x = rand_matrix(&mut rng, 2, 96, 1.0);
+        let w = rand_matrix(&mut rng, 96, 40, 0.1);
+        let (w_q, _) = quantize_weights(&w);
+        let spec = calibrate(&x, &w, 48, 40);
+        let y = aimc_mvm(&x, &w_q, &spec);
+        // exact product
+        for b in 0..2 {
+            for j in 0..40 {
+                let mut exact = 0.0f64;
+                for i in 0..96 {
+                    exact += x.at(b, i) as f64 * w.at(i, j) as f64;
+                }
+                let got = y.at(b, j) as f64;
+                let tol = (spec.adc_scale * spec.in_scale * spec.w_scale * 3.0) as f64
+                    + 0.05 * exact.abs();
+                assert!((got - exact).abs() < tol, "b{b} j{j}: {got} vs {exact}");
+            }
+        }
+    }
+
+    #[test]
+    fn digital_more_accurate_than_analog_with_noise() {
+        let mut rng = Rng::new(3);
+        let x = rand_matrix(&mut rng, 4, 128, 1.0);
+        let w = rand_matrix(&mut rng, 128, 64, 0.1);
+        let (w_q, w_scale) = quantize_weights(&w);
+        let w_prog = program_weights(&w_q, 0.03, &mut rng);
+        let spec = calibrate(&x, &w, 64, 64);
+        let ya = aimc_mvm(&x, &w_prog, &spec);
+        let yd = digital_mvm(&x, &w_q, spec.in_scale, w_scale);
+        let mut err_a = 0.0;
+        let mut err_d = 0.0;
+        for b in 0..4 {
+            for j in 0..64 {
+                let mut exact = 0.0f64;
+                for i in 0..128 {
+                    exact += x.at(b, i) as f64 * w.at(i, j) as f64;
+                }
+                err_a += (ya.at(b, j) as f64 - exact).powi(2);
+                err_d += (yd.at(b, j) as f64 - exact).powi(2);
+            }
+        }
+        assert!(err_d < err_a, "digital {err_d} analog {err_a}");
+    }
+
+    #[test]
+    fn quantize_bounds_property() {
+        miniprop::check("weights-bounded", 0xB2, |rng| {
+            let scale = 1.0 + rng.next_f32() * 10.0;
+            let w = rand_matrix(rng, 8, 8, scale);
+            let (w_q, scale) = quantize_weights(&w);
+            assert!(scale > 0.0);
+            for v in &w_q.data {
+                assert!(v.abs() <= WEIGHT_LEVELS);
+                assert_eq!(*v, v.round());
+            }
+        });
+    }
+
+    #[test]
+    fn batch_rows_independent_property() {
+        miniprop::check("batch-independent", 0xC3, |rng| {
+            let m = 16 + rng.below(48) as usize;
+            let n = 8 + rng.below(24) as usize;
+            let x = rand_matrix(rng, 3, m, 1.0);
+            let w = rand_matrix(rng, m, n, 0.2);
+            let (w_q, _) = quantize_weights(&w);
+            let spec = calibrate(&x, &w, 16, n);
+            let full = aimc_mvm(&x, &w_q, &spec);
+            for b in 0..3 {
+                let row = Matrix::new(1, m, x.data[b * m..(b + 1) * m].to_vec());
+                let single = aimc_mvm(&row, &w_q, &spec);
+                for j in 0..n {
+                    assert_eq!(full.at(b, j), single.at(0, j));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn adc_saturation_bounds_output() {
+        let mut rng = Rng::new(9);
+        let x = rand_matrix(&mut rng, 1, 64, 1.0);
+        let w = rand_matrix(&mut rng, 64, 16, 0.1);
+        let (w_q, _) = quantize_weights(&w);
+        let spec = calibrate(&x, &w, 64, 16);
+        // Drive far past the calibrated range.
+        let x_hot = Matrix::new(1, 64, x.data.iter().map(|v| v * 1000.0).collect());
+        let y = aimc_mvm(&x_hot, &w_q, &spec);
+        let bound = 128.0 * spec.adc_scale * spec.in_scale * spec.w_scale * 1.001;
+        for v in &y.data {
+            assert!(v.abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn program_weights_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let w = rand_matrix(&mut Rng::new(0), 8, 8, 1.0);
+        let (wq, _) = quantize_weights(&w);
+        let a = program_weights(&wq, 0.02, &mut r1);
+        let b = program_weights(&wq, 0.02, &mut r2);
+        assert_eq!(a.data, b.data);
+    }
+}

@@ -1,0 +1,288 @@
+//! AIMClib — the paper's software library (§IV.C), in Rust.
+//!
+//! Mirrors the C API of Fig. 4: `map_matrix` places (and programs) a
+//! weight matrix at an x/y offset of a crossbar, `queue_vector` packs and
+//! queues inputs into the tile input memory, `aimc_process` fires the
+//! MVM, `dequeue_vector` retrieves outputs. Type-casting between f32 and
+//! int8 and the activation functions are provided as in the C library.
+//!
+//! This is the *functional* device (the paper's host-side checker
+//! semantics); the *timing* of the same operations is modeled by
+//! `sim::aimc` + the trace machine. The e2e examples use both: this for
+//! numbers, the simulator for time/energy.
+
+pub mod activation;
+pub mod checker;
+
+use checker::{AimcSpec, Matrix};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum AimclibError {
+    #[error("matrix ({rows}x{cols}) at ({x},{y}) exceeds crossbar ({xb_rows}x{xb_cols})")]
+    DoesNotFit { x: usize, y: usize, rows: usize, cols: usize, xb_rows: usize, xb_cols: usize },
+    #[error("queue length {0} exceeds input memory {1}")]
+    QueueOverflow(usize, usize),
+    #[error("dequeue length {0} exceeds output memory {1}")]
+    DequeueOverflow(usize, usize),
+}
+
+/// A functional AIMC device: crossbar conductances + I/O memories.
+pub struct AimcDevice {
+    rows: usize,
+    cols: usize,
+    /// Programmed conductance codes (continuous, row-major).
+    xbar: Matrix,
+    /// Input memory: one int8 per word line (stored as f32 DAC codes).
+    input_mem: Vec<f32>,
+    /// Output memory: one int8 per bit line (ADC codes).
+    output_mem: Vec<f32>,
+    spec: AimcSpec,
+    processes: u64,
+}
+
+impl AimcDevice {
+    pub fn new(rows: usize, cols: usize, spec: AimcSpec) -> AimcDevice {
+        AimcDevice {
+            rows,
+            cols,
+            xbar: Matrix::zeros(rows, cols),
+            input_mem: vec![0.0; rows],
+            output_mem: vec![0.0; cols],
+            spec,
+            processes: 0,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn processes(&self) -> u64 {
+        self.processes
+    }
+
+    /// Fig. 4 `mapMatrix`: program `w_prog` (pre-noised conductance codes)
+    /// at crossbar offset (x, y). Multiple matrices of varying sizes can
+    /// be tiled next to each other (§IV.C).
+    pub fn map_matrix(
+        &mut self,
+        x: usize,
+        y: usize,
+        w_prog: &Matrix,
+    ) -> Result<(), AimclibError> {
+        if x + w_prog.rows > self.rows || y + w_prog.cols > self.cols {
+            return Err(AimclibError::DoesNotFit {
+                x,
+                y,
+                rows: w_prog.rows,
+                cols: w_prog.cols,
+                xb_rows: self.rows,
+                xb_cols: self.cols,
+            });
+        }
+        for r in 0..w_prog.rows {
+            for c in 0..w_prog.cols {
+                self.xbar.data[(x + r) * self.cols + (y + c)] = w_prog.at(r, c);
+            }
+        }
+        Ok(())
+    }
+
+    /// Fig. 4 `queueVector`: DAC-quantize f32 inputs into the input
+    /// memory starting at word line `index`.
+    pub fn queue_vector(&mut self, index: usize, data: &[f32]) -> Result<(), AimclibError> {
+        if index + data.len() > self.rows {
+            return Err(AimclibError::QueueOverflow(index + data.len(), self.rows));
+        }
+        for (i, v) in data.iter().enumerate() {
+            self.input_mem[index + i] = (v / self.spec.in_scale)
+                .round()
+                .clamp(checker::DAC_MIN, checker::DAC_MAX);
+        }
+        Ok(())
+    }
+
+    /// Queue raw int8 values (already quantized by the caller).
+    pub fn queue_vector_i8(&mut self, index: usize, data: &[i8]) -> Result<(), AimclibError> {
+        if index + data.len() > self.rows {
+            return Err(AimclibError::QueueOverflow(index + data.len(), self.rows));
+        }
+        for (i, v) in data.iter().enumerate() {
+            self.input_mem[index + i] = *v as f32;
+        }
+        Ok(())
+    }
+
+    /// Clear the input memory (word lines with zero input contribute no
+    /// current, so unused rows are harmless — but explicit clearing
+    /// between layers avoids stale charge in multi-matrix tiles).
+    pub fn clear_input(&mut self) {
+        self.input_mem.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// Fig. 4 `aimcProcess`: the analog MVM over the whole crossbar.
+    /// Every bit line integrates the currents of all word lines and is
+    /// digitized by its ADC into the output memory.
+    pub fn process(&mut self) {
+        self.processes += 1;
+        for j in 0..self.cols {
+            let mut partial = 0.0f64;
+            for i in 0..self.rows {
+                let xq = self.input_mem[i];
+                if xq != 0.0 {
+                    partial += (xq as f64) * (self.xbar.at(i, j) as f64);
+                }
+            }
+            self.output_mem[j] = (partial as f32 / self.spec.adc_scale)
+                .round()
+                .clamp(checker::ADC_MIN, checker::ADC_MAX);
+        }
+    }
+
+    /// Fig. 4 `dequeueVector`: read `out.len()` ADC codes starting at bit
+    /// line `index`, dequantized to f32 real units.
+    pub fn dequeue_vector(&self, index: usize, out: &mut [f32]) -> Result<(), AimclibError> {
+        if index + out.len() > self.cols {
+            return Err(AimclibError::DequeueOverflow(index + out.len(), self.cols));
+        }
+        let s = self.spec.adc_scale * self.spec.in_scale * self.spec.w_scale;
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.output_mem[index + i] * s;
+        }
+        Ok(())
+    }
+
+    /// Raw ADC codes (for digital accumulation across row-split tiles).
+    pub fn dequeue_codes(&self, index: usize, out: &mut [f32]) -> Result<(), AimclibError> {
+        if index + out.len() > self.cols {
+            return Err(AimclibError::DequeueOverflow(index + out.len(), self.cols));
+        }
+        out.copy_from_slice(&self.output_mem[index..index + out.len()]);
+        Ok(())
+    }
+
+    pub fn spec(&self) -> &AimcSpec {
+        &self.spec
+    }
+}
+
+/// int8 <-> f32 casting helpers (AIMClib's type-casting templates).
+pub fn cast_f32_to_i8(data: &[f32], scale: f32) -> Vec<i8> {
+    data.iter()
+        .map(|v| (v / scale).round().clamp(-128.0, 127.0) as i8)
+        .collect()
+}
+
+pub fn cast_i8_to_f32(data: &[i8], scale: f32) -> Vec<f32> {
+    data.iter().map(|v| *v as f32 * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use checker::{calibrate, program_weights, quantize_weights};
+
+    fn setup(m: usize, n: usize) -> (Matrix, Matrix, AimcSpec) {
+        let mut rng = Rng::new(11);
+        let x = Matrix::new(1, m, (0..m).map(|_| rng.normal_f32(1.0)).collect());
+        let w = Matrix::new(m, n, (0..m * n).map(|_| rng.normal_f32(0.1)).collect());
+        let spec = calibrate(&x, &w, m, n);
+        (x, w, spec)
+    }
+
+    #[test]
+    fn device_matches_checker_single_tile() {
+        let (x, w, spec) = setup(64, 32);
+        let (w_q, _) = quantize_weights(&w);
+        let mut rng = Rng::new(2);
+        let w_prog = program_weights(&w_q, 0.01, &mut rng);
+
+        let expected = checker::aimc_mvm(&x, &w_prog, &spec);
+
+        let mut dev = AimcDevice::new(64, 32, spec);
+        dev.map_matrix(0, 0, &w_prog).unwrap();
+        dev.queue_vector(0, &x.data).unwrap();
+        dev.process();
+        let mut out = vec![0.0f32; 32];
+        dev.dequeue_vector(0, &mut out).unwrap();
+
+        for j in 0..32 {
+            assert!(
+                (out[j] - expected.at(0, j)).abs() < 1e-4 * (1.0 + expected.at(0, j).abs()),
+                "col {j}: {} vs {}",
+                out[j],
+                expected.at(0, j)
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_matrices_at_offsets_are_independent() {
+        // Two matrices side by side in one crossbar (the LSTM case-1
+        // layout): inputs on one matrix's rows must not disturb the other
+        // if its word lines are zero.
+        let (x, w, spec) = setup(32, 16);
+        let (w_q, _) = quantize_weights(&w);
+        let mut dev = AimcDevice::new(64, 48, spec);
+        dev.map_matrix(0, 0, &w_q).unwrap();
+        dev.map_matrix(32, 16, &w_q).unwrap();
+
+        dev.clear_input();
+        dev.queue_vector(0, &x.data).unwrap();
+        dev.process();
+        let mut out_a = vec![0.0f32; 16];
+        dev.dequeue_vector(0, &mut out_a).unwrap();
+
+        // Same input applied to the second matrix's rows instead.
+        dev.clear_input();
+        dev.queue_vector(32, &x.data).unwrap();
+        dev.process();
+        let mut out_b = vec![0.0f32; 16];
+        dev.dequeue_vector(16, &mut out_b).unwrap();
+
+        for j in 0..16 {
+            assert!((out_a[j] - out_b[j]).abs() < 1e-5, "col {j}");
+        }
+    }
+
+    #[test]
+    fn map_bounds_checked() {
+        let (_, w, spec) = setup(32, 16);
+        let mut dev = AimcDevice::new(32, 16, spec);
+        assert!(dev.map_matrix(1, 0, &w).is_err());
+        assert!(dev.map_matrix(0, 1, &w).is_err());
+        assert!(dev.map_matrix(0, 0, &w).is_ok());
+    }
+
+    #[test]
+    fn queue_dequeue_bounds_checked() {
+        let (_, _, spec) = setup(8, 8);
+        let mut dev = AimcDevice::new(8, 8, spec);
+        assert!(dev.queue_vector(4, &[0.0; 5]).is_err());
+        let mut out = vec![0.0; 5];
+        assert!(dev.dequeue_vector(4, &mut out).is_err());
+    }
+
+    #[test]
+    fn cast_roundtrip_within_half_lsb() {
+        let data = vec![0.5, -0.25, 0.126, -1.0];
+        let scale = 1.0 / 127.0;
+        let i8s = cast_f32_to_i8(&data, scale);
+        let back = cast_i8_to_f32(&i8s, scale);
+        for (a, b) in data.iter().zip(back.iter()) {
+            assert!((a - b).abs() <= scale / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn cast_saturates() {
+        let i8s = cast_f32_to_i8(&[100.0, -100.0], 0.1);
+        assert_eq!(i8s, vec![127, -128]);
+    }
+}

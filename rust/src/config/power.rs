@@ -1,0 +1,113 @@
+//! System energy and power figures — the paper's Table I-B, verbatim.
+//!
+//! The core/cache model is a 28 nm bulk ARM Cortex-A53 system (gem5-X
+//! calibration [15]); DRAM energy follows [36]. Full-system energy is the
+//! sum of core, cache, and DRAM components computed from simulation
+//! statistics (§VI.A).
+
+use super::SystemKind;
+
+/// Table I-B: per-system energy/power figures.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerModel {
+    /// Idle core energy per cycle, joules (Table I-B pJ/cycle).
+    pub idle_core_j_per_cycle: f64,
+    /// WFM (wait-for-memory) core energy per cycle, joules.
+    pub wfm_core_j_per_cycle: f64,
+    /// Active core energy per cycle, joules.
+    pub active_core_j_per_cycle: f64,
+    /// Memory controller + IO static power, watts.
+    pub mem_ctrl_io_w: f64,
+    /// LLC leakage per 256 kB, watts.
+    pub llc_leak_w_per_256k: f64,
+    /// LLC read energy per byte, joules.
+    pub llc_read_j_per_byte: f64,
+    /// LLC write energy per byte, joules.
+    pub llc_write_j_per_byte: f64,
+    /// DRAM energy per access, joules (per 64-byte access, [36]).
+    pub dram_j_per_access: f64,
+}
+
+impl PowerModel {
+    pub fn low_power() -> PowerModel {
+        PowerModel {
+            idle_core_j_per_cycle: 10.72e-12,
+            wfm_core_j_per_cycle: 46.04e-12,
+            active_core_j_per_cycle: 60.92e-12,
+            mem_ctrl_io_w: 3.03,
+            llc_leak_w_per_256k: 271.62e-3,
+            llc_read_j_per_byte: 1.81e-12,
+            llc_write_j_per_byte: 1.63e-12,
+            dram_j_per_access: 120.0e-12,
+        }
+    }
+
+    pub fn high_power() -> PowerModel {
+        PowerModel {
+            idle_core_j_per_cycle: 126.03e-12,
+            wfm_core_j_per_cycle: 638.99e-12,
+            active_core_j_per_cycle: 845.39e-12,
+            mem_ctrl_io_w: 5.82,
+            llc_leak_w_per_256k: 874.08e-3,
+            llc_read_j_per_byte: 5.60e-12,
+            llc_write_j_per_byte: 5.02e-12,
+            dram_j_per_access: 120.0e-12,
+        }
+    }
+
+    pub fn for_kind(kind: SystemKind) -> PowerModel {
+        match kind {
+            SystemKind::LowPower => PowerModel::low_power(),
+            SystemKind::HighPower => PowerModel::high_power(),
+        }
+    }
+
+    /// LLC leakage power for a given capacity, watts.
+    pub fn llc_leakage_w(&self, llc_bytes: u64) -> f64 {
+        self.llc_leak_w_per_256k * (llc_bytes as f64 / (256.0 * 1024.0))
+    }
+}
+
+/// Marker trait alias re-exported for AIMC energy (lives in AimcConfig).
+pub type AimcEnergyModel = super::AimcConfig;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1b_values_low_power() {
+        let p = PowerModel::low_power();
+        assert_eq!(p.idle_core_j_per_cycle, 10.72e-12);
+        assert_eq!(p.wfm_core_j_per_cycle, 46.04e-12);
+        assert_eq!(p.active_core_j_per_cycle, 60.92e-12);
+        assert_eq!(p.mem_ctrl_io_w, 3.03);
+        assert_eq!(p.dram_j_per_access, 120.0e-12);
+    }
+
+    #[test]
+    fn table1b_values_high_power() {
+        let p = PowerModel::high_power();
+        assert_eq!(p.active_core_j_per_cycle, 845.39e-12);
+        assert_eq!(p.llc_read_j_per_byte, 5.60e-12);
+        assert_eq!(p.llc_write_j_per_byte, 5.02e-12);
+        assert_eq!(p.llc_leak_w_per_256k, 874.08e-3);
+    }
+
+    #[test]
+    fn state_energy_ordering() {
+        for p in [PowerModel::low_power(), PowerModel::high_power()] {
+            assert!(p.idle_core_j_per_cycle < p.wfm_core_j_per_cycle);
+            assert!(p.wfm_core_j_per_cycle < p.active_core_j_per_cycle);
+        }
+    }
+
+    #[test]
+    fn llc_leakage_scales_with_capacity() {
+        let p = PowerModel::high_power();
+        let one_mb = p.llc_leakage_w(1024 * 1024);
+        let half_mb = p.llc_leakage_w(512 * 1024);
+        assert!((one_mb - 2.0 * half_mb).abs() < 1e-12);
+        assert!((one_mb - 4.0 * 874.08e-3).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,173 @@
+//! The paper's evaluation sweeps — one function per figure/table.
+//! Each returns the raw `CaseResult` rows; `report` renders them as the
+//! tables/series underlying the paper's bar charts.
+
+use crate::config::{SystemConfig, SystemKind};
+use crate::nn::CnnVariant;
+use crate::workload::cnn::{self, CnnCase};
+use crate::workload::lstm::{self, LstmCase};
+use crate::workload::mlp::{self, MlpCase};
+
+use super::{run_workload, CaseResult};
+
+/// Default inference counts (§VI.C: 10 for MLP/LSTM, 3 for CNN).
+pub const MLP_INFERENCES: u32 = 10;
+pub const LSTM_INFERENCES: u32 = 10;
+pub const CNN_INFERENCES: u32 = 3;
+
+pub const MLP_CASES: [MlpCase; 7] = [
+    MlpCase::Digital { cores: 1 },
+    MlpCase::Digital { cores: 2 },
+    MlpCase::Digital { cores: 4 },
+    MlpCase::Analog { case: 1 },
+    MlpCase::Analog { case: 2 },
+    MlpCase::Analog { case: 3 },
+    MlpCase::Analog { case: 4 },
+];
+
+pub const LSTM_CASES: [LstmCase; 7] = [
+    LstmCase::Digital { cores: 1 },
+    LstmCase::Digital { cores: 2 },
+    LstmCase::Digital { cores: 5 },
+    LstmCase::Analog { case: 1 },
+    LstmCase::Analog { case: 2 },
+    LstmCase::Analog { case: 3 },
+    LstmCase::Analog { case: 4 },
+];
+
+pub const LSTM_SIZES: [u64; 3] = [256, 512, 750];
+
+/// Fig. 7: all MLP cases on both systems.
+pub fn fig7_mlp(n_inf: u32) -> Vec<CaseResult> {
+    let mut out = Vec::new();
+    for kind in SystemKind::ALL {
+        let cfg = SystemConfig::for_kind(kind);
+        for case in MLP_CASES {
+            out.push(run_workload(kind, mlp::generate(case, &cfg, n_inf)));
+        }
+    }
+    out
+}
+
+/// Fig. 8: sub-ROI breakdown for the MLP reference + analog cases 1/3/4
+/// (case 2's distribution matches case 1, as the paper notes).
+pub fn fig8_mlp_breakdown(n_inf: u32) -> Vec<CaseResult> {
+    let mut out = Vec::new();
+    for kind in SystemKind::ALL {
+        let cfg = SystemConfig::for_kind(kind);
+        for case in [
+            MlpCase::Digital { cores: 1 },
+            MlpCase::Analog { case: 1 },
+            MlpCase::Analog { case: 3 },
+            MlpCase::Analog { case: 4 },
+        ] {
+            out.push(run_workload(kind, mlp::generate(case, &cfg, n_inf)));
+        }
+    }
+    out
+}
+
+/// §VII.B: loosely-coupled vs tightly-coupled vs digital single-core.
+pub fn loose_vs_tight(n_inf: u32) -> Vec<CaseResult> {
+    let mut out = Vec::new();
+    for kind in SystemKind::ALL {
+        let cfg = SystemConfig::for_kind(kind);
+        for case in [
+            MlpCase::Digital { cores: 1 },
+            MlpCase::Analog { case: 1 },
+            MlpCase::AnalogLoose,
+        ] {
+            out.push(run_workload(kind, mlp::generate(case, &cfg, n_inf)));
+        }
+    }
+    out
+}
+
+/// Fig. 10: all LSTM cases x sizes x systems.
+pub fn fig10_lstm(n_inf: u32) -> Vec<CaseResult> {
+    let mut out = Vec::new();
+    for kind in SystemKind::ALL {
+        let cfg = SystemConfig::for_kind(kind);
+        for n_h in LSTM_SIZES {
+            for case in LSTM_CASES {
+                out.push(run_workload(kind, lstm::generate(case, n_h, &cfg, n_inf)));
+            }
+        }
+    }
+    out
+}
+
+/// Fig. 11: LSTM analog sub-ROI breakdown (high-power, all sizes).
+pub fn fig11_lstm_breakdown(n_inf: u32) -> Vec<CaseResult> {
+    let cfg = SystemConfig::high_power();
+    let mut out = Vec::new();
+    for n_h in LSTM_SIZES {
+        for case in [
+            LstmCase::Analog { case: 1 },
+            LstmCase::Analog { case: 2 },
+            LstmCase::Analog { case: 3 },
+            LstmCase::Analog { case: 4 },
+        ] {
+            out.push(run_workload(
+                SystemKind::HighPower,
+                lstm::generate(case, n_h, &cfg, n_inf),
+            ));
+        }
+    }
+    out
+}
+
+/// Fig. 13: CNN F/M/S, digital vs analog, both systems.
+pub fn fig13_cnn(n_inf: u32) -> Vec<CaseResult> {
+    let mut out = Vec::new();
+    for kind in SystemKind::ALL {
+        let cfg = SystemConfig::for_kind(kind);
+        for variant in CnnVariant::ALL {
+            for case in [CnnCase::Digital, CnnCase::Analog] {
+                out.push(run_workload(kind, cnn::generate(case, variant, &cfg, n_inf)));
+            }
+        }
+    }
+    out
+}
+
+/// Fig. 14: CNN-S per-core utilization on the high-power system.
+pub fn fig14_cnn_utilization(n_inf: u32) -> Vec<CaseResult> {
+    let cfg = SystemConfig::high_power();
+    vec![
+        run_workload(
+            SystemKind::HighPower,
+            cnn::generate(CnnCase::Digital, CnnVariant::Slow, &cfg, n_inf),
+        ),
+        run_workload(
+            SystemKind::HighPower,
+            cnn::generate(CnnCase::Analog, CnnVariant::Slow, &cfg, n_inf),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_row_count() {
+        let rows = fig7_mlp(1);
+        assert_eq!(rows.len(), 2 * 7);
+    }
+
+    #[test]
+    fn loose_tight_ordering_holds() {
+        // §VII.B: tight > loose > digital.
+        let rows = loose_vs_tight(2);
+        let hp: Vec<&CaseResult> = rows
+            .iter()
+            .filter(|r| r.system == SystemKind::HighPower)
+            .collect();
+        let dig = hp.iter().find(|r| r.label.contains("DIG")).unwrap();
+        let tight = hp.iter().find(|r| r.label.contains("case1")).unwrap();
+        let loose = hp.iter().find(|r| r.label.contains("loose")).unwrap();
+        assert!(tight.time_s < loose.time_s, "tight faster than loose");
+        assert!(loose.time_s < dig.time_s, "loose faster than digital");
+    }
+}

@@ -1,0 +1,108 @@
+//! The experiment coordinator: runs workloads on simulated systems,
+//! collects results, and drives the figure/table sweeps of the paper's
+//! evaluation (§VII-§IX).
+
+pub mod experiments;
+pub mod server;
+
+use crate::config::{SystemConfig, SystemKind};
+use crate::energy::{self, EnergyBreakdown};
+use crate::sim::Machine;
+use crate::stats::{RoiTimes, RunStats};
+use crate::workload::Workload;
+
+/// One (workload, system) simulation outcome.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub label: String,
+    pub system: SystemKind,
+    pub inferences: u32,
+    pub time_s: f64,
+    pub time_per_inference_s: f64,
+    pub llc_mpki: f64,
+    pub energy: EnergyBreakdown,
+    pub total_insts: u64,
+    pub dram_accesses: u64,
+    pub aimc_processes: u64,
+    pub roi: RoiTimes,
+    pub per_core_ipc: Vec<f64>,
+    pub per_core_idle: Vec<f64>,
+    pub per_core_wfm: Vec<f64>,
+}
+
+impl CaseResult {
+    pub fn energy_per_inference_j(&self) -> f64 {
+        self.energy.total_j() / self.inferences.max(1) as f64
+    }
+}
+
+/// Simulate one workload on one system configuration.
+pub fn run_workload(kind: SystemKind, workload: Workload) -> CaseResult {
+    let cfg = SystemConfig::for_kind(kind);
+    let mut machine = Machine::new(cfg.clone(), workload.spec.clone());
+    let stats: RunStats = machine.run(workload.traces);
+    let energy = energy::compute(&cfg, &stats);
+    CaseResult {
+        label: workload.label,
+        system: kind,
+        inferences: workload.inferences,
+        time_s: stats.roi_time_s(),
+        time_per_inference_s: stats.roi_time_s() / workload.inferences.max(1) as f64,
+        llc_mpki: stats.llc_mpki(),
+        energy,
+        total_insts: stats.total_insts(),
+        dram_accesses: stats.dram_accesses,
+        aimc_processes: stats.aimc.processes,
+        roi: stats.roi.clone(),
+        per_core_ipc: stats.cores.iter().map(|c| c.ipc()).collect(),
+        per_core_idle: stats.cores.iter().map(|c| c.idle_fraction()).collect(),
+        per_core_wfm: stats
+            .cores
+            .iter()
+            .map(|c| c.wfm_cycles as f64 / c.total_cycles().max(1) as f64)
+            .collect(),
+    }
+}
+
+/// Speedup of `b` relative to `a` (a.time / b.time).
+pub fn speedup(a: &CaseResult, b: &CaseResult) -> f64 {
+    a.time_s / b.time_s
+}
+
+/// Energy improvement of `b` relative to `a`.
+pub fn energy_gain(a: &CaseResult, b: &CaseResult) -> f64 {
+    a.energy.total_j() / b.energy.total_j()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::mlp::{self, MlpCase};
+
+    #[test]
+    fn run_workload_produces_sane_result() {
+        let cfg = SystemConfig::high_power();
+        let w = mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2);
+        let r = run_workload(SystemKind::HighPower, w);
+        assert!(r.time_s > 0.0);
+        assert!(r.energy.total_j() > 0.0);
+        assert_eq!(r.aimc_processes, 4); // 2 layers x 2 inferences
+        assert!(r.time_per_inference_s < r.time_s);
+    }
+
+    #[test]
+    fn speedup_and_energy_gain_definitions() {
+        let cfg = SystemConfig::high_power();
+        let dig = run_workload(
+            SystemKind::HighPower,
+            mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 2),
+        );
+        let ana = run_workload(
+            SystemKind::HighPower,
+            mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2),
+        );
+        let s = speedup(&dig, &ana);
+        assert!(s > 1.0, "analog should win: {s}");
+        assert!(energy_gain(&dig, &ana) > 1.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! A minimal batched inference server over the PJRT runtime — the
+//! Layer-3 request path of the e2e example. Requests are collected into
+//! batches (up to the model's batch dimension) by a dispatcher thread and
+//! executed on the AOT-compiled model; per-request latency and aggregate
+//! throughput are reported.
+//!
+//! tokio is unavailable in the offline vendor set (DESIGN.md §2), so the
+//! event loop is std::thread + channels — the request path still never
+//! touches Python.
+
+use anyhow::Result;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::runtime::LoadedModel;
+
+pub struct Request {
+    pub input: Vec<f32>,
+    pub submitted: Instant,
+}
+
+pub struct Response {
+    pub output: Vec<f32>,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+/// Serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub total_latency: Duration,
+    pub max_latency: Duration,
+    pub wall: Duration,
+}
+
+impl ServerStats {
+    pub fn mean_latency(&self) -> Duration {
+        if self.requests == 0 {
+            Duration::ZERO
+        } else {
+            self.total_latency / self.requests as u32
+        }
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.requests as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Drive `requests` through the model with dynamic batching: the
+/// dispatcher drains whatever is queued (up to `max_batch`) per step —
+/// the same continuous-batching discipline a serving router uses.
+pub fn serve_batched(
+    model: &LoadedModel,
+    requests: Vec<Vec<f32>>,
+    max_batch: usize,
+    per_request_elems: usize,
+) -> Result<(Vec<Response>, ServerStats)> {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let feeder = {
+        let inputs = requests;
+        std::thread::spawn(move || {
+            for input in inputs {
+                // Arrival jitter: requests trickle in.
+                std::thread::sleep(Duration::from_micros(50));
+                if tx.send(Request { input, submitted: Instant::now() }).is_err() {
+                    break;
+                }
+            }
+        })
+    };
+
+    let mut responses = Vec::new();
+    let mut stats = ServerStats::default();
+    let t0 = Instant::now();
+    let stats_lock = Arc::new(Mutex::new(()));
+    let _guard = stats_lock.lock().unwrap();
+
+    let mut pending: Vec<Request> = Vec::new();
+    loop {
+        // Drain what's available; block for the first item.
+        if pending.is_empty() {
+            match rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        while pending.len() < max_batch {
+            match rx.try_recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+        let batch: Vec<Request> = pending.drain(..pending.len().min(max_batch)).collect();
+        let bsz = batch.len();
+
+        // Pack the batch into the model's fixed batch dimension, padding
+        // with repeats of the last request.
+        let mut packed = Vec::with_capacity(max_batch * per_request_elems);
+        for r in &batch {
+            packed.extend_from_slice(&r.input);
+        }
+        while packed.len() < max_batch * per_request_elems {
+            let start = packed.len() - per_request_elems;
+            let tail: Vec<f32> = packed[start..].to_vec();
+            packed.extend_from_slice(&tail);
+        }
+
+        let outputs = model.run(&[packed])?;
+        let out = &outputs[0];
+        let per_out = out.len() / max_batch;
+        let done = Instant::now();
+        for (k, r) in batch.into_iter().enumerate() {
+            let latency = done - r.submitted;
+            stats.requests += 1;
+            stats.total_latency += latency;
+            stats.max_latency = stats.max_latency.max(latency);
+            responses.push(Response {
+                output: out[k * per_out..(k + 1) * per_out].to_vec(),
+                latency,
+                batch_size: bsz,
+            });
+        }
+        stats.batches += 1;
+    }
+    feeder.join().ok();
+    stats.wall = t0.elapsed();
+    Ok((responses, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let s = ServerStats {
+            requests: 10,
+            batches: 4,
+            total_latency: Duration::from_millis(100),
+            max_latency: Duration::from_millis(30),
+            wall: Duration::from_millis(500),
+        };
+        assert_eq!(s.mean_latency(), Duration::from_millis(10));
+        assert!((s.throughput_rps() - 20.0).abs() < 1e-9);
+        assert!((s.mean_batch() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_no_div_by_zero() {
+        let s = ServerStats::default();
+        assert_eq!(s.mean_latency(), Duration::ZERO);
+        assert_eq!(s.throughput_rps(), 0.0);
+        assert_eq!(s.mean_batch(), 0.0);
+    }
+}

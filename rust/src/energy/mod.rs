@@ -1,0 +1,137 @@
+//! Full-system energy computation (paper §VI.A): "the full system energy
+//! is the sum of the energies for the core, cache, and DRAM components",
+//! computed from the gem5-X-style statistics — plus the AIMC tile energy
+//! (Table I-C, already accumulated per-operation by the device model).
+
+use crate::config::SystemConfig;
+use crate::stats::RunStats;
+
+/// Energy breakdown of one run, joules.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyBreakdown {
+    pub core_active_j: f64,
+    pub core_wfm_j: f64,
+    pub core_idle_j: f64,
+    pub llc_dynamic_j: f64,
+    pub llc_leakage_j: f64,
+    pub dram_j: f64,
+    pub mem_ctrl_io_j: f64,
+    pub aimc_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn core_total_j(&self) -> f64 {
+        self.core_active_j + self.core_wfm_j + self.core_idle_j
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.core_total_j()
+            + self.llc_dynamic_j
+            + self.llc_leakage_j
+            + self.dram_j
+            + self.mem_ctrl_io_j
+            + self.aimc_j
+    }
+}
+
+/// Compute the Table I-B energy for a finished run.
+///
+/// Note on idle cores: the paper's 8-core systems always power all
+/// cores; cores not used by a mapping sit idle for the whole ROI and
+/// contribute idle energy (this is why single-core analog MLP mappings
+/// also win on energy — they finish sooner, shortening everyone's idle
+/// window).
+pub fn compute(cfg: &SystemConfig, stats: &RunStats) -> EnergyBreakdown {
+    let p = &cfg.power;
+    let t = stats.roi_time_s();
+    let total_cycles_per_core = (stats.roi_time_ps / cfg.cycle_ps()).max(1);
+
+    let mut e = EnergyBreakdown::default();
+
+    // Cores that ran traces.
+    let mut used = 0usize;
+    for c in &stats.cores {
+        e.core_active_j += c.active_cycles as f64 * p.active_core_j_per_cycle;
+        e.core_wfm_j += c.wfm_cycles as f64 * p.wfm_core_j_per_cycle;
+        e.core_idle_j += c.idle_cycles as f64 * p.idle_core_j_per_cycle;
+        used += 1;
+    }
+    // Unused cores idle for the full ROI.
+    let unused = cfg.num_cores.saturating_sub(used);
+    e.core_idle_j +=
+        unused as f64 * total_cycles_per_core as f64 * p.idle_core_j_per_cycle;
+
+    e.llc_dynamic_j = stats.llc_bytes_read as f64 * p.llc_read_j_per_byte
+        + stats.llc_bytes_written as f64 * p.llc_write_j_per_byte;
+    e.llc_leakage_j = p.llc_leakage_w(cfg.llc.size_bytes) * t;
+    e.dram_j = stats.dram_accesses as f64 * p.dram_j_per_access;
+    e.mem_ctrl_io_j = p.mem_ctrl_io_w * t;
+    e.aimc_j = stats.aimc.energy_j;
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{CoreStats, RunStats};
+
+    fn stats_one_core(active: u64, wfm: u64, idle: u64, time_ps: u64) -> RunStats {
+        let mut rs = RunStats::new(1);
+        rs.cores[0] = CoreStats { insts: active, active_cycles: active, wfm_cycles: wfm, idle_cycles: idle };
+        rs.roi_time_ps = time_ps;
+        rs
+    }
+
+    #[test]
+    fn core_energy_uses_state_rates() {
+        let cfg = SystemConfig::high_power();
+        let rs = stats_one_core(1000, 500, 200, 435 * 1700);
+        let e = compute(&cfg, &rs);
+        let expect_active = 1000.0 * 845.39e-12;
+        let expect_wfm = 500.0 * 638.99e-12;
+        assert!((e.core_active_j - expect_active).abs() < 1e-15);
+        assert!((e.core_wfm_j - expect_wfm).abs() < 1e-15);
+    }
+
+    #[test]
+    fn unused_cores_contribute_idle() {
+        let cfg = SystemConfig::high_power(); // 8 cores
+        let rs = stats_one_core(1000, 0, 0, 435 * 1000);
+        let e = compute(&cfg, &rs);
+        // 7 unused cores idle for 1000 cycles each.
+        let expect = 7.0 * 1000.0 * 126.03e-12;
+        assert!((e.core_idle_j - expect).abs() / expect < 0.01, "{e:?}");
+    }
+
+    #[test]
+    fn static_power_scales_with_time() {
+        let cfg = SystemConfig::low_power();
+        let short = compute(&cfg, &stats_one_core(0, 0, 0, 1_000_000));
+        let long = compute(&cfg, &stats_one_core(0, 0, 0, 2_000_000));
+        assert!((long.mem_ctrl_io_j - 2.0 * short.mem_ctrl_io_j).abs() < 1e-18);
+        assert!((long.llc_leakage_j - 2.0 * short.llc_leakage_j).abs() < 1e-18);
+    }
+
+    #[test]
+    fn dram_energy_per_access() {
+        let cfg = SystemConfig::high_power();
+        let mut rs = stats_one_core(0, 0, 0, 1000);
+        rs.dram_accesses = 1000;
+        let e = compute(&cfg, &rs);
+        assert!((e.dram_j - 1000.0 * 120e-12).abs() < 1e-15);
+    }
+
+    #[test]
+    fn total_is_sum_of_parts() {
+        let cfg = SystemConfig::high_power();
+        let mut rs = stats_one_core(5000, 100, 10, 435 * 6000);
+        rs.dram_accesses = 42;
+        rs.llc_bytes_read = 4096;
+        rs.aimc.energy_j = 1e-9;
+        let e = compute(&cfg, &rs);
+        let sum = e.core_total_j() + e.llc_dynamic_j + e.llc_leakage_j + e.dram_j
+            + e.mem_ctrl_io_j + e.aimc_j;
+        assert!((e.total_j() - sum).abs() < 1e-18);
+        assert!(e.total_j() > 0.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Binary encodings of the CM_* instructions (Fig. 3b).
+//!
+//! Layout (32-bit word, custom-opcode space of AArch64):
+//!
+//!   [31:20] opcode   (0x108 queue/dequeue, 0x008 process, 0x208 init)
+//!   [19]    r/w      (1 = queue/write direction, 0 = read/other)
+//!   [18:14] Rm       source register (packed data)
+//!   [13:10] Ra       auxiliary (count of valid packed bytes)
+//!   [9:5]   Rn       index register (input/output memory offset)
+//!   [4:0]   Rd       destination register
+
+/// The four operations of the extension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmOp {
+    Queue,
+    Dequeue,
+    Process,
+    Initialize,
+}
+
+impl CmOp {
+    pub fn opcode(&self) -> u16 {
+        match self {
+            CmOp::Queue | CmOp::Dequeue => 0x108,
+            CmOp::Process => 0x008,
+            CmOp::Initialize => 0x208,
+        }
+    }
+
+    pub fn rw_bit(&self) -> bool {
+        matches!(self, CmOp::Queue)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CmOp::Queue => "CM_QUEUE",
+            CmOp::Dequeue => "CM_DEQUEUE",
+            CmOp::Process => "CM_PROCESS",
+            CmOp::Initialize => "CM_INITIALIZE",
+        }
+    }
+}
+
+/// A decoded CM instruction with its register fields.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CmInstruction {
+    pub op: CmOp,
+    pub rm: u8,
+    pub ra: u8,
+    pub rn: u8,
+    pub rd: u8,
+}
+
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum DecodeError {
+    #[error("unknown CM opcode {0:#05x}")]
+    UnknownOpcode(u16),
+    #[error("register field out of range")]
+    BadRegister,
+}
+
+/// Encode to the 32-bit instruction word.
+pub fn encode(inst: &CmInstruction) -> u32 {
+    assert!(inst.rm < 32 && inst.rn < 32 && inst.rd < 32 && inst.ra < 16);
+    ((inst.op.opcode() as u32) << 20)
+        | ((inst.op.rw_bit() as u32) << 19)
+        | ((inst.rm as u32) << 14)
+        | ((inst.ra as u32) << 10)
+        | ((inst.rn as u32) << 5)
+        | (inst.rd as u32)
+}
+
+/// Decode a 32-bit instruction word.
+pub fn decode(word: u32) -> Result<CmInstruction, DecodeError> {
+    let opcode = (word >> 20) as u16 & 0xFFF;
+    let rw = (word >> 19) & 1 == 1;
+    let op = match (opcode, rw) {
+        (0x108, true) => CmOp::Queue,
+        (0x108, false) => CmOp::Dequeue,
+        (0x008, false) => CmOp::Process,
+        (0x208, false) => CmOp::Initialize,
+        _ => return Err(DecodeError::UnknownOpcode(opcode)),
+    };
+    Ok(CmInstruction {
+        op,
+        rm: ((word >> 14) & 0x1F) as u8,
+        ra: ((word >> 10) & 0xF) as u8,
+        rn: ((word >> 5) & 0x1F) as u8,
+        rd: (word & 0x1F) as u8,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::miniprop;
+
+    #[test]
+    fn fig3b_opcodes() {
+        assert_eq!(CmOp::Queue.opcode(), 0x108);
+        assert_eq!(CmOp::Dequeue.opcode(), 0x108);
+        assert_eq!(CmOp::Process.opcode(), 0x008);
+        assert_eq!(CmOp::Initialize.opcode(), 0x208);
+        assert!(CmOp::Queue.rw_bit());
+        assert!(!CmOp::Dequeue.rw_bit());
+    }
+
+    #[test]
+    fn roundtrip_all_ops() {
+        for op in [CmOp::Queue, CmOp::Dequeue, CmOp::Process, CmOp::Initialize] {
+            let inst = CmInstruction { op, rm: 3, ra: 7, rn: 12, rd: 29 };
+            assert_eq!(decode(encode(&inst)).unwrap(), inst);
+        }
+    }
+
+    #[test]
+    fn queue_dequeue_distinguished_by_rw() {
+        let q = CmInstruction { op: CmOp::Queue, rm: 1, ra: 2, rn: 3, rd: 4 };
+        let d = CmInstruction { op: CmOp::Dequeue, ..q };
+        assert_ne!(encode(&q), encode(&d));
+        assert_eq!(decode(encode(&q)).unwrap().op, CmOp::Queue);
+        assert_eq!(decode(encode(&d)).unwrap().op, CmOp::Dequeue);
+    }
+
+    #[test]
+    fn unknown_opcode_rejected() {
+        assert!(matches!(decode(0xFFF0_0000), Err(DecodeError::UnknownOpcode(_))));
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        miniprop::check("cm-encode-roundtrip", 0xA1, |rng| {
+            let op = match rng.below(4) {
+                0 => CmOp::Queue,
+                1 => CmOp::Dequeue,
+                2 => CmOp::Process,
+                _ => CmOp::Initialize,
+            };
+            let inst = CmInstruction {
+                op,
+                rm: rng.below(32) as u8,
+                ra: rng.below(16) as u8,
+                rn: rng.below(32) as u8,
+                rd: rng.below(32) as u8,
+            };
+            assert_eq!(decode(encode(&inst)).unwrap(), inst);
+        });
+    }
+}

@@ -1,0 +1,32 @@
+//! # ALPINE — Analog In-Memory Acceleration with Tight Processor Integration
+//!
+//! A full reproduction of Klein et al., *"ALPINE: Analog In-Memory
+//! Acceleration with Tight Processor Integration for Deep Learning"*
+//! (IEEE TC 2022), as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the ALPINE full-system simulation
+//!   framework: an event-driven multi-core timing model with caches,
+//!   DRAM, buses and AIMC tiles ([`sim`]), the CM_* ISA extension
+//!   ([`isa`]), the AIMClib software library ([`aimclib`]), workload
+//!   generators for the paper's MLP/LSTM/CNN explorations ([`workload`]),
+//!   the Table-I energy model ([`energy`]), and the experiment
+//!   coordinator that regenerates every figure ([`coordinator`]).
+//! * **Layer 2/1 (build-time Python)** — JAX models + the Pallas AIMC
+//!   crossbar kernel, AOT-lowered to HLO text and executed from Rust via
+//!   PJRT ([`runtime`]). Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod aimclib;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod isa;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,227 @@
+//! The ALPINE CLI — leader entrypoint of the Layer-3 coordinator.
+//!
+//! Subcommands map to the paper's evaluation artifacts:
+//!   list-configs          Table I
+//!   run                   one workload case on one system
+//!   fig7 | fig8 | fig10 | fig11 | fig13 | fig14 | loose
+//!                         regenerate a figure's underlying table
+//!   validate              PJRT probe checks of every AOT artifact
+//!
+//! (Hand-rolled argument parsing: clap is not in the offline vendor set.)
+
+use alpine::config::{SystemConfig, SystemKind};
+use alpine::coordinator::{experiments, run_workload};
+use alpine::nn::CnnVariant;
+use alpine::report;
+use alpine::runtime::{default_artifacts_dir, Runtime};
+use alpine::util::table::Table;
+use alpine::workload::cnn::{self, CnnCase};
+use alpine::workload::lstm::{self, LstmCase};
+use alpine::workload::mlp::{self, MlpCase};
+use anyhow::{bail, Context, Result};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("alpine: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn opt(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn opt_u32(args: &[String], name: &str, default: u32) -> Result<u32> {
+    match opt(args, name) {
+        None => Ok(default),
+        Some(v) => v.parse().with_context(|| format!("{name} expects a number")),
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "list-configs" => list_configs(),
+        "run" => cmd_run(&args[1..]),
+        "fig7" => {
+            let rows = experiments::fig7_mlp(opt_u32(&args[1..], "--inferences", experiments::MLP_INFERENCES)?);
+            report::aggregate_table("Fig. 7 — MLP aggregate", &rows).print();
+            report::gains_table("Fig. 7 — gains vs DIG-1core", &rows, |r| {
+                r.label.contains("DIG-1core")
+            })
+            .print();
+            Ok(())
+        }
+        "fig8" => {
+            let rows = experiments::fig8_mlp_breakdown(opt_u32(&args[1..], "--inferences", experiments::MLP_INFERENCES)?);
+            report::roi_table("Fig. 8 — MLP sub-ROI breakdown", &rows).print();
+            Ok(())
+        }
+        "loose" => {
+            let rows = experiments::loose_vs_tight(opt_u32(&args[1..], "--inferences", experiments::MLP_INFERENCES)?);
+            report::aggregate_table("§VII.B — loose vs tight coupling", &rows).print();
+            report::gains_table("§VII.B — gains vs DIG-1core", &rows, |r| {
+                r.label.contains("DIG-1core")
+            })
+            .print();
+            Ok(())
+        }
+        "fig10" => {
+            let rows = experiments::fig10_lstm(opt_u32(&args[1..], "--inferences", experiments::LSTM_INFERENCES)?);
+            report::aggregate_table("Fig. 10 — LSTM aggregate", &rows).print();
+            Ok(())
+        }
+        "fig11" => {
+            let rows = experiments::fig11_lstm_breakdown(opt_u32(&args[1..], "--inferences", experiments::LSTM_INFERENCES)?);
+            report::roi_table("Fig. 11 — LSTM sub-ROI breakdown", &rows).print();
+            Ok(())
+        }
+        "fig13" => {
+            let rows = experiments::fig13_cnn(opt_u32(&args[1..], "--inferences", experiments::CNN_INFERENCES)?);
+            report::aggregate_table("Fig. 13 — CNN aggregate", &rows).print();
+            report::gains_table("Fig. 13 — gains vs DIG", &rows, |r| r.label.ends_with("DIG"))
+                .print();
+            Ok(())
+        }
+        "fig14" => {
+            let rows = experiments::fig14_cnn_utilization(opt_u32(&args[1..], "--inferences", experiments::CNN_INFERENCES)?);
+            report::utilization_table("Fig. 14 — CNN-S per-core utilization (high-power)", &rows)
+                .print();
+            Ok(())
+        }
+        "validate" => validate(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `alpine help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "ALPINE — analog in-memory acceleration full-system simulator\n\
+         \n\
+         usage: alpine <command> [options]\n\
+         \n\
+         commands:\n\
+         \x20 list-configs             print Table I system configurations\n\
+         \x20 run --workload mlp|lstm|cnn --case <case> [--system hp|lp]\n\
+         \x20     [--nh 256|512|750] [--variant f|m|s] [--inferences N]\n\
+         \x20 fig7|fig8|fig10|fig11|fig13|fig14|loose   regenerate a figure\n\
+         \x20 validate                 PJRT probe-check all AOT artifacts\n\
+         \n\
+         case syntax: dig1 dig2 dig4 dig5 ana1 ana2 ana3 ana4 loose (per workload)"
+    );
+}
+
+fn list_configs() -> Result<()> {
+    let mut t = Table::new(
+        "Table I-A — system configurations",
+        &["parameter", "low-power", "high-power"],
+    );
+    let lp = SystemConfig::low_power();
+    let hp = SystemConfig::high_power();
+    let rows: Vec<(&str, String, String)> = vec![
+        ("cores", lp.num_cores.to_string(), hp.num_cores.to_string()),
+        ("freq", format!("{:.1} GHz", lp.freq_hz / 1e9), format!("{:.1} GHz", hp.freq_hz / 1e9)),
+        ("VDD", format!("{} V", lp.vdd), format!("{} V", hp.vdd)),
+        ("L1D", format!("{} kB", lp.l1d.size_bytes / 1024), format!("{} kB", hp.l1d.size_bytes / 1024)),
+        ("LLC", format!("{} kB", lp.llc.size_bytes / 1024), format!("{} kB", hp.llc.size_bytes / 1024)),
+        ("AIMC process", "100 ns".into(), "100 ns".into()),
+        ("AIMC IO", "4 GB/s".into(), "4 GB/s".into()),
+        ("AIMC power scale", format!("{}x", lp.aimc.node_power_scale), format!("{}x", hp.aimc.node_power_scale)),
+    ];
+    for (p, l, h) in rows {
+        t.row(vec![p.to_string(), l, h]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let system = SystemKind::parse(&opt(args, "--system").unwrap_or_else(|| "hp".into()))
+        .context("bad --system (hp|lp)")?;
+    let cfg = SystemConfig::for_kind(system);
+    let workload = opt(args, "--workload").unwrap_or_else(|| "mlp".into());
+    let case = opt(args, "--case").unwrap_or_else(|| "ana1".into());
+    let w = match workload.as_str() {
+        "mlp" => {
+            let n = opt_u32(args, "--inferences", experiments::MLP_INFERENCES)?;
+            mlp::generate(parse_mlp_case(&case)?, &cfg, n)
+        }
+        "lstm" => {
+            let n = opt_u32(args, "--inferences", experiments::LSTM_INFERENCES)?;
+            let nh: u64 = opt(args, "--nh").unwrap_or_else(|| "256".into()).parse()?;
+            lstm::generate(parse_lstm_case(&case)?, nh, &cfg, n)
+        }
+        "cnn" => {
+            let n = opt_u32(args, "--inferences", experiments::CNN_INFERENCES)?;
+            let v = CnnVariant::parse(&opt(args, "--variant").unwrap_or_else(|| "f".into()))
+                .context("bad --variant (f|m|s)")?;
+            let c = match case.as_str() {
+                "dig" | "dig8" => CnnCase::Digital,
+                "ana" | "ana8" => CnnCase::Analog,
+                other => bail!("bad cnn case {other:?} (dig|ana)"),
+            };
+            cnn::generate(c, v, &cfg, n)
+        }
+        other => bail!("unknown workload {other:?}"),
+    };
+    let r = run_workload(system, w);
+    report::aggregate_table("run", std::slice::from_ref(&r)).print();
+    report::roi_table("sub-ROI breakdown", std::slice::from_ref(&r)).print();
+    Ok(())
+}
+
+fn parse_mlp_case(s: &str) -> Result<MlpCase> {
+    Ok(match s {
+        "dig1" => MlpCase::Digital { cores: 1 },
+        "dig2" => MlpCase::Digital { cores: 2 },
+        "dig4" => MlpCase::Digital { cores: 4 },
+        "ana1" => MlpCase::Analog { case: 1 },
+        "ana2" => MlpCase::Analog { case: 2 },
+        "ana3" => MlpCase::Analog { case: 3 },
+        "ana4" => MlpCase::Analog { case: 4 },
+        "loose" => MlpCase::AnalogLoose,
+        other => bail!("bad mlp case {other:?}"),
+    })
+}
+
+fn parse_lstm_case(s: &str) -> Result<LstmCase> {
+    Ok(match s {
+        "dig1" => LstmCase::Digital { cores: 1 },
+        "dig2" => LstmCase::Digital { cores: 2 },
+        "dig5" => LstmCase::Digital { cores: 5 },
+        "ana1" => LstmCase::Analog { case: 1 },
+        "ana2" => LstmCase::Analog { case: 2 },
+        "ana3" => LstmCase::Analog { case: 3 },
+        "ana4" => LstmCase::Analog { case: 4 },
+        other => bail!("bad lstm case {other:?}"),
+    })
+}
+
+fn validate() -> Result<()> {
+    let rt = Runtime::new(&default_artifacts_dir())?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut t = Table::new("artifact probe checks", &["model", "max_abs_err", "rel_l2_err", "status"]);
+    for name in rt.available_models()? {
+        let model = rt.load(&name)?;
+        let (max_abs, rel) = model.probe_check()?;
+        let ok = rel < 1e-5;
+        t.row(vec![
+            name,
+            format!("{max_abs:.3e}"),
+            format!("{rel:.3e}"),
+            if ok { "OK" } else { "FAIL" }.into(),
+        ]);
+        if !ok {
+            bail!("probe check failed");
+        }
+    }
+    t.print();
+    Ok(())
+}

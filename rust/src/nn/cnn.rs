@@ -1,0 +1,250 @@
+//! The CNNs of Exploration Three (§IX, Fig. 12): the CNN-F(ast),
+//! CNN-M(edium) and CNN-S(low) variants of Chatfield et al. [42],
+//! 224x224x3 input, 5 convolutional layers (AIMC-mapped) + 3 dense
+//! layers (CPU-side), ReLU everywhere, softmax at the end.
+
+/// The three variants of Fig. 12(b).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CnnVariant {
+    Fast,
+    Medium,
+    Slow,
+}
+
+impl CnnVariant {
+    pub const ALL: [CnnVariant; 3] = [CnnVariant::Fast, CnnVariant::Medium, CnnVariant::Slow];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CnnVariant::Fast => "CNN-F",
+            CnnVariant::Medium => "CNN-M",
+            CnnVariant::Slow => "CNN-S",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CnnVariant> {
+        match s.to_ascii_lowercase().as_str() {
+            "f" | "fast" | "cnn-f" => Some(CnnVariant::Fast),
+            "m" | "medium" | "cnn-m" => Some(CnnVariant::Medium),
+            "s" | "slow" | "cnn-s" => Some(CnnVariant::Slow),
+            _ => None,
+        }
+    }
+
+    /// Fig. 12(b): total AIMC-mapped (convolutional) parameters.
+    pub fn paper_aimc_params(&self) -> f64 {
+        match self {
+            CnnVariant::Fast => 1.7e6,
+            CnnVariant::Medium => 5.6e6,
+            CnnVariant::Slow => 5.5e6,
+        }
+    }
+}
+
+/// One convolutional layer with its post-ops.
+#[derive(Clone, Copy, Debug)]
+pub struct CnnLayer {
+    pub name: &'static str,
+    pub in_hw: u64,
+    pub in_ch: u64,
+    pub kernel: u64,
+    pub out_ch: u64,
+    pub stride: u64,
+    pub pad: u64,
+    /// Max-pool window after the layer (1 = none; the paper's "x2"/"x3").
+    pub pool: u64,
+    /// Max-pool stride (Chatfield [42]: 2 for most layers, 3 for the
+    /// aggressive CNN-S conv1/conv5 pools).
+    pub pool_stride: u64,
+    /// Local response normalization after the layer.
+    pub lrn: bool,
+}
+
+impl CnnLayer {
+    pub fn out_hw(&self) -> u64 {
+        (self.in_hw + 2 * self.pad - self.kernel) / self.stride + 1
+    }
+
+    /// Spatial size after pooling. The paper's "x2"/"x3" notation is the
+    /// pool *window* (Chatfield et al. [42]); CNN-S's 3x3 windows more
+    /// than double the pooling compute per output ("increases the
+    /// computational requirements of CNN-S significantly", §IX.A).
+    pub fn pooled_hw(&self) -> u64 {
+        if self.pool <= 1 {
+            self.out_hw()
+        } else {
+            (self.out_hw() - self.pool) / self.pool_stride + 1
+        }
+    }
+
+    /// im2col geometry: K rows (flattened kernel), out_ch columns.
+    pub fn im2col_rows(&self) -> u64 {
+        self.kernel * self.kernel * self.in_ch
+    }
+
+    pub fn weight_params(&self) -> u64 {
+        self.im2col_rows() * self.out_ch
+    }
+
+    pub fn output_pixels(&self) -> u64 {
+        self.out_hw() * self.out_hw()
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.output_pixels() * self.im2col_rows() * self.out_ch
+    }
+
+    /// Elements the post-ops (ReLU/LRN/pool) touch.
+    pub fn post_elems(&self) -> u64 {
+        self.output_pixels() * self.out_ch
+    }
+}
+
+/// A full CNN: conv stack + dense widths.
+#[derive(Clone, Debug)]
+pub struct CnnModel {
+    pub variant: CnnVariant,
+    pub convs: Vec<CnnLayer>,
+    pub dense: [u64; 3],
+}
+
+impl CnnModel {
+    /// Fig. 12(b) + Chatfield et al. [42], row by row. Spatial chaining
+    /// uses each layer's pooled output as the next layer's input; the
+    /// conv2 stride and pool windows/strides follow [42] per variant so
+    /// the dense-layer fan-in stays at its published 6x6-scale size.
+    pub fn paper(variant: CnnVariant) -> CnnModel {
+        use CnnVariant::*;
+        // (kernel, out_ch, stride, pad, pool_window, pool_stride, lrn)
+        let rows: [(u64, u64, u64, u64, u64, u64, bool); 5] = match variant {
+            Fast => [
+                (11, 64, 4, 0, 2, 2, true),
+                (5, 256, 1, 2, 2, 2, true),
+                (3, 256, 1, 1, 1, 1, false),
+                (3, 256, 1, 1, 1, 1, false),
+                (3, 256, 1, 1, 2, 2, false),
+            ],
+            Medium => [
+                (7, 96, 2, 0, 3, 2, true),
+                (5, 256, 2, 1, 2, 2, true),
+                (3, 512, 1, 1, 1, 1, false),
+                (3, 512, 1, 1, 1, 1, false),
+                (3, 512, 1, 1, 2, 2, false),
+            ],
+            Slow => [
+                (7, 96, 2, 0, 3, 3, true),
+                (5, 256, 1, 1, 2, 2, false),
+                (3, 512, 1, 1, 1, 1, false),
+                (3, 512, 1, 1, 1, 1, false),
+                (3, 512, 1, 1, 3, 3, false),
+            ],
+        };
+        let names = ["conv1", "conv2", "conv3", "conv4", "conv5"];
+        let mut convs: Vec<CnnLayer> = Vec::new();
+        let mut in_hw = 224;
+        let mut in_ch = 3;
+        for (i, (k, n, s, p, pw, ps, lrn)) in rows.into_iter().enumerate() {
+            let layer = CnnLayer {
+                name: names[i],
+                in_hw,
+                in_ch,
+                kernel: k,
+                out_ch: n,
+                stride: s,
+                pad: p,
+                pool: pw,
+                pool_stride: ps,
+                lrn,
+            };
+            in_hw = layer.pooled_hw();
+            in_ch = n;
+            convs.push(layer);
+        }
+        CnnModel { variant, convs, dense: [4096, 4096, 1000] }
+    }
+
+    pub fn aimc_params(&self) -> u64 {
+        self.convs.iter().map(|l| l.weight_params()).sum()
+    }
+
+    pub fn dense_inputs(&self) -> u64 {
+        let last = self.convs.last().unwrap();
+        last.pooled_hw() * last.pooled_hw() * last.out_ch
+    }
+
+    pub fn dense_params(&self) -> u64 {
+        let d0 = self.dense_inputs() * self.dense[0];
+        let d1 = self.dense[0] * self.dense[1];
+        let d2 = self.dense[1] * self.dense[2];
+        d0 + d1 + d2
+    }
+
+    pub fn conv_macs(&self) -> u64 {
+        self.convs.iter().map(|l| l.macs()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv1_geometry_matches_chatfield() {
+        let f = CnnModel::paper(CnnVariant::Fast);
+        assert_eq!(f.convs[0].out_hw(), 54); // (224-11)/4+1
+        assert_eq!(f.convs[0].pooled_hw(), 27);
+        let s = CnnModel::paper(CnnVariant::Slow);
+        assert_eq!(s.convs[0].out_hw(), 109); // (224-7)/2+1
+        assert_eq!(s.convs[0].pooled_hw(), 36); // 3x3 window, stride 3
+    }
+
+    #[test]
+    fn aimc_params_same_order_as_paper() {
+        // Fig. 12(b): 1.7M / 5.6M / 5.5M AIMC params. Our weight-only
+        // count (no grouping/bias bookkeeping) is within ~40%.
+        for v in CnnVariant::ALL {
+            let ours = CnnModel::paper(v).aimc_params() as f64;
+            let paper = v.paper_aimc_params();
+            let rel = (ours - paper).abs() / paper;
+            assert!(rel < 0.45, "{}: ours {ours} vs paper {paper}", v.name());
+        }
+    }
+
+    #[test]
+    fn slow_variant_has_more_pooling_work_than_medium() {
+        let m = CnnModel::paper(CnnVariant::Medium);
+        let s = CnnModel::paper(CnnVariant::Slow);
+        // Bigger pool windows/strides on S (x3 vs x2 at conv5), and S's
+        // conv1 pool keeps LRN-scale maps longer (stride 3 vs M's 2).
+        assert_eq!(s.convs[0].pool, 3);
+        assert_eq!(s.convs[0].pool_stride, 3);
+        assert_eq!(m.convs[0].pool_stride, 2);
+        assert_eq!(s.convs[4].pool, 3);
+        assert_eq!(m.convs[4].pool, 2);
+    }
+
+    #[test]
+    fn five_convs_three_dense() {
+        for v in CnnVariant::ALL {
+            let m = CnnModel::paper(v);
+            assert_eq!(m.convs.len(), 5);
+            assert_eq!(m.dense[2], 1000);
+            assert!(m.dense_inputs() > 0);
+        }
+    }
+
+    #[test]
+    fn conv_macs_dominated_by_conv2_plus() {
+        let f = CnnModel::paper(CnnVariant::Fast);
+        let conv1 = f.convs[0].macs();
+        let rest: u64 = f.convs[1..].iter().map(|l| l.macs()).sum();
+        assert!(rest > 2 * conv1);
+    }
+
+    #[test]
+    fn variant_parsing() {
+        assert_eq!(CnnVariant::parse("s"), Some(CnnVariant::Slow));
+        assert_eq!(CnnVariant::parse("CNN-F"), Some(CnnVariant::Fast));
+        assert_eq!(CnnVariant::parse("zzz"), None);
+    }
+}

@@ -1,0 +1,74 @@
+//! The MLP of Exploration One (§VII): two dense (1024, 1024) layers with
+//! ReLU activations (Fig. 6a).
+
+/// MLP architecture: `layers` dense layers of `dim x dim` weights.
+#[derive(Clone, Copy, Debug)]
+pub struct MlpModel {
+    pub dim: u64,
+    pub layers: u64,
+}
+
+impl MlpModel {
+    /// The paper's instance: two 1024x1024 layers.
+    pub fn paper() -> MlpModel {
+        MlpModel { dim: 1024, layers: 2 }
+    }
+
+    pub fn weight_bytes_per_layer(&self) -> u64 {
+        self.dim * self.dim // int8
+    }
+
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layers * self.weight_bytes_per_layer()
+    }
+
+    /// MACs per inference (digital reference).
+    pub fn macs_per_inference(&self) -> u64 {
+        self.layers * self.dim * self.dim
+    }
+
+    /// §VII.E digital working set: 2W + x + l1 + y = 2n^2 + 3n bytes
+    /// (weights + input + intermediate + output, all int8).
+    pub fn working_set_digital(&self) -> u64 {
+        self.total_weight_bytes() + (self.layers + 1) * self.dim
+    }
+
+    /// §VII.E analog working set: weights stay in the tiles; x + l1 + y =
+    /// 3n bytes.
+    pub fn working_set_analog(&self) -> u64 {
+        (self.layers + 1) * self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry() {
+        let m = MlpModel::paper();
+        assert_eq!(m.total_weight_bytes(), 2 * 1024 * 1024);
+        assert_eq!(m.macs_per_inference(), 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn working_set_digital_matches_paper_2_1mb() {
+        // §VII.E: "2*n^2 + 3n ≈ 2.1 MB for n = 1024".
+        let ws = MlpModel::paper().working_set_digital();
+        assert_eq!(ws, 2 * 1024 * 1024 + 3 * 1024);
+        assert!((ws as f64 - 2.1e6).abs() / 2.1e6 < 0.02);
+    }
+
+    #[test]
+    fn working_set_analog_matches_paper_3kb() {
+        // §VII.E: "x + l1 + y = 3n ≈ 3 kB".
+        assert_eq!(MlpModel::paper().working_set_analog(), 3 * 1024);
+    }
+
+    #[test]
+    fn digital_working_set_exceeds_all_paper_caches() {
+        let ws = MlpModel::paper().working_set_digital();
+        assert!(ws > 1024 * 1024, "exceeds HP LLC");
+        assert!(MlpModel::paper().working_set_analog() < 32 * 1024, "fits LP L1");
+    }
+}

@@ -1,0 +1,12 @@
+//! Neural-network architecture models for the paper's three explorations:
+//! parameter counts, computational complexity and working-set analysis
+//! (§VII.D/E, §VIII.D/E, Fig. 12). These drive the workload generators
+//! and are asserted against the paper's published numbers in tests.
+
+pub mod cnn;
+pub mod lstm;
+pub mod mlp;
+
+pub use cnn::{CnnLayer, CnnModel, CnnVariant};
+pub use lstm::LstmModel;
+pub use mlp::MlpModel;

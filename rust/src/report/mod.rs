@@ -1,0 +1,157 @@
+//! Result renderers: turn `CaseResult` rows into the tables underlying
+//! the paper's figures (time / memory intensity / energy triplets,
+//! sub-ROI percentage stacks, per-core utilization).
+
+use crate::coordinator::CaseResult;
+use crate::stats::RoiKind;
+use crate::util::table::{fmt_energy, fmt_time, Table};
+
+/// Fig. 7 / Fig. 10 / Fig. 13-style aggregate table.
+pub fn aggregate_table(title: &str, rows: &[CaseResult]) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "system", "case", "time/inf", "LLC MPKI", "energy/inf", "DRAM acc", "insts",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.system.name().to_string(),
+            r.label.clone(),
+            fmt_time(r.time_per_inference_s),
+            format!("{:.3}", r.llc_mpki),
+            fmt_energy(r.energy_per_inference_j()),
+            r.dram_accesses.to_string(),
+            r.total_insts.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 8 / Fig. 11-style sub-ROI percentage table.
+pub fn roi_table(title: &str, rows: &[CaseResult]) -> Table {
+    let kinds: Vec<RoiKind> = RoiKind::ALL
+        .iter()
+        .copied()
+        .filter(|k| rows.iter().any(|r| r.roi.get(*k) > 0))
+        .collect();
+    let mut header: Vec<String> = vec!["system".into(), "case".into()];
+    header.extend(kinds.iter().map(|k| k.name().to_string()));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &header_refs);
+    for r in rows {
+        let mut cells = vec![r.system.name().to_string(), r.label.clone()];
+        cells.extend(
+            kinds
+                .iter()
+                .map(|k| format!("{:.1}%", 100.0 * r.roi.fraction(*k))),
+        );
+        t.row(cells);
+    }
+    t
+}
+
+/// Fig. 14-style per-core utilization table.
+pub fn utilization_table(title: &str, rows: &[CaseResult]) -> Table {
+    let cores = rows.iter().map(|r| r.per_core_ipc.len()).max().unwrap_or(0);
+    let mut header: Vec<String> = vec!["case".into(), "metric".into()];
+    header.extend((0..cores).map(|c| format!("core{c}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &header_refs);
+    for r in rows {
+        let mut idle = vec![r.label.clone(), "idle%".into()];
+        idle.extend(r.per_core_idle.iter().map(|v| format!("{:.1}", 100.0 * v)));
+        idle.resize(2 + cores, "-".into());
+        t.row(idle);
+        let mut wfm = vec![r.label.clone(), "wfm%".into()];
+        wfm.extend(r.per_core_wfm.iter().map(|v| format!("{:.1}", 100.0 * v)));
+        wfm.resize(2 + cores, "-".into());
+        t.row(wfm);
+        let mut ipc = vec![r.label.clone(), "IPC".into()];
+        ipc.extend(r.per_core_ipc.iter().map(|v| format!("{:.3}", v)));
+        ipc.resize(2 + cores, "-".into());
+        t.row(ipc);
+    }
+    t
+}
+
+/// Speedup/energy-gain summary vs a baseline predicate.
+pub fn gains_table(
+    title: &str,
+    rows: &[CaseResult],
+    is_baseline: impl Fn(&CaseResult) -> bool,
+) -> Table {
+    let mut t = Table::new(title, &["system", "case", "speedup", "energy gain"]);
+    for sys in crate::config::SystemKind::ALL {
+        let base = rows.iter().find(|r| r.system == sys && is_baseline(r));
+        let Some(base) = base else { continue };
+        for r in rows.iter().filter(|r| r.system == sys) {
+            t.row(vec![
+                sys.name().to_string(),
+                r.label.clone(),
+                format!("{:.2}x", base.time_s / r.time_s),
+                format!("{:.2}x", base.energy.total_j() / r.energy.total_j()),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemKind;
+    use crate::energy::EnergyBreakdown;
+    use crate::stats::RoiTimes;
+
+    fn fake(label: &str, time: f64) -> CaseResult {
+        let mut roi = RoiTimes::default();
+        roi.add(RoiKind::DigitalMvm, 80);
+        roi.add(RoiKind::Activation, 20);
+        CaseResult {
+            label: label.into(),
+            system: SystemKind::HighPower,
+            inferences: 2,
+            time_s: time,
+            time_per_inference_s: time / 2.0,
+            llc_mpki: 1.5,
+            energy: EnergyBreakdown { core_active_j: 1e-6, ..Default::default() },
+            total_insts: 1000,
+            dram_accesses: 10,
+            aimc_processes: 0,
+            roi,
+            per_core_ipc: vec![0.9, 0.5],
+            per_core_idle: vec![0.1, 0.6],
+            per_core_wfm: vec![0.0, 0.0],
+        }
+    }
+
+    #[test]
+    fn aggregate_renders() {
+        let t = aggregate_table("x", &[fake("a", 1.0), fake("b", 0.5)]);
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.render().contains("LLC MPKI"));
+    }
+
+    #[test]
+    fn roi_percentages_sum_to_100() {
+        let t = roi_table("x", &[fake("a", 1.0)]);
+        let row = &t.rows[0];
+        assert!(row.iter().any(|c| c == "80.0%"));
+        assert!(row.iter().any(|c| c == "20.0%"));
+    }
+
+    #[test]
+    fn gains_relative_to_baseline() {
+        let rows = [fake("DIG", 1.0), fake("ANA", 0.25)];
+        let t = gains_table("g", &rows, |r| r.label == "DIG");
+        let ana_row = t.rows.iter().find(|r| r[1] == "ANA").unwrap();
+        assert_eq!(ana_row[2], "4.00x");
+    }
+
+    #[test]
+    fn utilization_has_three_rows_per_case() {
+        let t = utilization_table("u", &[fake("a", 1.0)]);
+        assert_eq!(t.rows.len(), 3);
+    }
+}

@@ -1,0 +1,145 @@
+//! Artifact manifest parsing.
+//!
+//! `aot.py` writes one line-based manifest per model bundle:
+//!
+//! ```text
+//! model mlp_analog_b1
+//! hlo mlp_analog_b1.hlo.txt
+//! input x f32 1,1024 mlp_analog_b1.x.bin
+//! param w1_prog f32 1024,1024 mlp.w1_prog.bin
+//! probe_out mlp_analog_b1.probe_out.bin
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub file: PathBuf,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub hlo: PathBuf,
+    pub inputs: Vec<TensorMeta>,
+    pub params: Vec<TensorMeta>,
+    pub probe_out: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path, name: &str) -> Result<Manifest> {
+        let path = dir.join(format!("{name}.manifest"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let mut model = None;
+        let mut hlo = None;
+        let mut probe_out = None;
+        let mut inputs = Vec::new();
+        let mut params = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            match parts.as_slice() {
+                [] => {}
+                ["model", m] => model = Some(m.to_string()),
+                ["hlo", f] => hlo = Some(dir.join(f)),
+                ["probe_out", f] => probe_out = Some(dir.join(f)),
+                [kind @ ("input" | "param"), name, "f32", shape, file] => {
+                    let shape: Vec<usize> = shape
+                        .split(',')
+                        .map(|d| d.parse().context("bad shape"))
+                        .collect::<Result<_>>()?;
+                    let t = TensorMeta {
+                        name: name.to_string(),
+                        shape,
+                        file: dir.join(file),
+                    };
+                    if *kind == "input" {
+                        inputs.push(t);
+                    } else {
+                        params.push(t);
+                    }
+                }
+                _ => bail!("manifest line {} unparseable: {line:?}", ln + 1),
+            }
+        }
+        Ok(Manifest {
+            model: model.context("missing model line")?,
+            hlo: hlo.context("missing hlo line")?,
+            inputs,
+            params,
+            probe_out: probe_out.context("missing probe_out line")?,
+        })
+    }
+
+    /// All runtime arguments in HLO parameter order: inputs then params.
+    pub fn arg_order(&self) -> impl Iterator<Item = &TensorMeta> {
+        self.inputs.iter().chain(self.params.iter())
+    }
+}
+
+/// Read a little-endian f32 binary tensor file.
+pub fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading tensor {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "model demo\nhlo demo.hlo.txt\ninput x f32 1,8 demo.x.bin\nparam w f32 8,4 demo.w.bin\nprobe_out demo.probe.bin\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.model, "demo");
+        assert_eq!(m.inputs.len(), 1);
+        assert_eq!(m.params.len(), 1);
+        assert_eq!(m.inputs[0].shape, vec![1, 8]);
+        assert_eq!(m.params[0].elements(), 32);
+        assert!(m.hlo.ends_with("demo.hlo.txt"));
+        let order: Vec<&str> = m.arg_order().map(|t| t.name.as_str()).collect();
+        assert_eq!(order, vec!["x", "w"]);
+    }
+
+    #[test]
+    fn rejects_garbage_lines() {
+        assert!(Manifest::parse(Path::new("."), "nonsense line here\n").is_err());
+    }
+
+    #[test]
+    fn requires_model_and_hlo() {
+        assert!(Manifest::parse(Path::new("."), "model a\nprobe_out p\n").is_err());
+    }
+
+    #[test]
+    fn read_f32_roundtrip() {
+        let dir = std::env::temp_dir().join("alpine_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_bin(&p).unwrap(), vals);
+    }
+}

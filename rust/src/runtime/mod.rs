@@ -1,0 +1,189 @@
+//! The PJRT runtime: loads the AOT-compiled Layer-2 artifacts (HLO text
+//! emitted by `python/compile/aot.py`) and executes them on the XLA CPU
+//! client. This is the *functional* inference path used by the e2e
+//! examples and the cross-layer validation tests; Python is never on it.
+//!
+//! Interchange is HLO text — the image's xla_extension 0.5.1 rejects
+//! jax>=0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+pub mod manifest;
+
+pub use manifest::{read_f32_bin, Manifest, TensorMeta};
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A compiled model with its weights resident as PJRT-ready literals.
+pub struct LoadedModel {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+    /// Weight literals in parameter order (after the inputs).
+    param_literals: Vec<xla::Literal>,
+}
+
+/// The runtime: one PJRT CPU client + the artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create against an artifacts directory (default: ./artifacts).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir: artifacts_dir.to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Model names listed in the artifacts INDEX.
+    pub fn available_models(&self) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(self.dir.join("INDEX"))
+            .context("reading artifacts INDEX (run `make artifacts`)")?;
+        Ok(text.split_whitespace().map(|s| s.to_string()).collect())
+    }
+
+    /// Load + compile one model bundle and pre-stage its weights.
+    pub fn load(&self, name: &str) -> Result<LoadedModel> {
+        let manifest = Manifest::load(&self.dir, name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            manifest.hlo.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", manifest.hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name} on PJRT"))?;
+
+        let mut param_literals = Vec::new();
+        for p in &manifest.params {
+            param_literals.push(load_literal(p)?);
+        }
+        Ok(LoadedModel { manifest, exe, param_literals })
+    }
+}
+
+/// Read a tensor file into a shaped f32 literal.
+pub fn load_literal(meta: &TensorMeta) -> Result<xla::Literal> {
+    let data = read_f32_bin(&meta.file)?;
+    anyhow::ensure!(
+        data.len() == meta.elements(),
+        "{}: file has {} elements, manifest says {}",
+        meta.name,
+        data.len(),
+        meta.elements()
+    );
+    literal_from_vec(&data, &meta.shape)
+}
+
+/// Build a shaped f32 literal from a flat row-major slice.
+pub fn literal_from_vec(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Re-materialize a literal (the xla crate's Literal is not Clone).
+fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let dims = l.array_shape()?.dims().to_vec();
+    let data = l.to_vec::<f32>()?;
+    Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+}
+
+impl LoadedModel {
+    pub fn name(&self) -> &str {
+        &self.manifest.model
+    }
+
+    /// Execute with caller-supplied inputs (shapes per the manifest).
+    /// Returns every output of the (tupled) computation as flat f32.
+    pub fn run(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.manifest.inputs.len(),
+            "{} expects {} inputs, got {}",
+            self.manifest.model,
+            self.manifest.inputs.len(),
+            inputs.len()
+        );
+        let mut args: Vec<xla::Literal> = Vec::new();
+        for (meta, data) in self.manifest.inputs.iter().zip(inputs) {
+            anyhow::ensure!(
+                data.len() == meta.elements(),
+                "input {}: got {} elements, want {}",
+                meta.name,
+                data.len(),
+                meta.elements()
+            );
+            args.push(literal_from_vec(data, &meta.shape)?);
+        }
+        for p in &self.param_literals {
+            args.push(clone_literal(p)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+
+    /// Run the baked probe inputs and compare against the expected output
+    /// recorded at AOT time. Returns (max_abs_err, rel_l2_err).
+    pub fn probe_check(&self) -> Result<(f64, f64)> {
+        let inputs: Vec<Vec<f32>> = self
+            .manifest
+            .inputs
+            .iter()
+            .map(|m| read_f32_bin(&m.file))
+            .collect::<Result<_>>()?;
+        let got = self.run(&inputs)?;
+        let expect = read_f32_bin(&self.manifest.probe_out)?;
+        let first = &got[0];
+        anyhow::ensure!(
+            first.len() == expect.len(),
+            "probe length mismatch: {} vs {}",
+            first.len(),
+            expect.len()
+        );
+        let mut max_abs = 0.0f64;
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in first.iter().zip(expect.iter()) {
+            max_abs = max_abs.max((a - b).abs() as f64);
+            num += ((a - b) * (a - b)) as f64;
+            den += (b * b) as f64;
+        }
+        Ok((max_abs, (num / den.max(1e-30)).sqrt()))
+    }
+}
+
+/// Default artifacts directory: $ALPINE_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("ALPINE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_from_vec_roundtrip() {
+        let l = literal_from_vec(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+    }
+
+    #[test]
+    fn clone_literal_preserves_contents() {
+        let l = literal_from_vec(&[5.0, 6.0], &[2]).unwrap();
+        let c = clone_literal(&l).unwrap();
+        assert_eq!(c.to_vec::<f32>().unwrap(), vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn default_dir_nonempty() {
+        assert!(!default_artifacts_dir().as_os_str().is_empty());
+    }
+}

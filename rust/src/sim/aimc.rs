@@ -1,0 +1,257 @@
+//! The AIMC tile device model (paper §III.B, §V.A, Table I-C).
+//!
+//! One tile = a PCM crossbar of `rows x cols` unit cells, per-word-line
+//! DACs, per-bit-line ADCs, input/output SRAM memories and a local
+//! controller. The timing contract:
+//!
+//!   CM_INITIALIZE — program weights (one-time, outside the ROI).
+//!   CM_QUEUE      — move packed int8 inputs into the input memory at
+//!                   the tile I/O throughput (4 GB/s tight-coupled).
+//!   CM_PROCESS    — fire the MVM: constant 100 ns regardless of size.
+//!   CM_DEQUEUE    — move int8 outputs out of the output memory.
+//!
+//! Tight coupling talks to the tile over a dedicated core-private port
+//! (Fig. 2); loose coupling routes every transfer over the peripheral
+//! I/O bus (`sim::bus::IoBus`) which the machine charges separately.
+
+use crate::config::AimcConfig;
+use crate::stats::AimcStats;
+
+/// How the tile is attached to the system (§IV.A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Coupling {
+    /// Core-private tile behind the CM_* ISA extension (Fig. 2).
+    Tight,
+    /// Memory-mapped PIO device on the peripheral bus.
+    Loose,
+}
+
+/// A rectangular region of the crossbar occupied by one logical matrix
+/// (AIMClib `mapMatrix` tiles matrices at x/y offsets, §IV.C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub row0: u32,
+    pub col0: u32,
+    pub rows: u32,
+    pub cols: u32,
+}
+
+impl Placement {
+    pub fn overlaps(&self, other: &Placement) -> bool {
+        self.row0 < other.row0 + other.rows
+            && other.row0 < self.row0 + self.rows
+            && self.col0 < other.col0 + other.cols
+            && other.col0 < self.col0 + self.cols
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum AimcError {
+    #[error("placement {0:?} exceeds crossbar {1}x{2}")]
+    OutOfBounds(Placement, u32, u32),
+    #[error("placement {0:?} overlaps existing matrix {1:?}")]
+    Overlap(Placement, Placement),
+    #[error("queue of {0} bytes exceeds input memory of {1} bytes")]
+    InputOverflow(u64, u64),
+    #[error("dequeue of {0} bytes exceeds output memory of {1} bytes")]
+    OutputOverflow(u64, u64),
+}
+
+/// The device: geometry, placements, busy-until reservation, counters.
+#[derive(Clone, Debug)]
+pub struct AimcTile {
+    pub rows: u32,
+    pub cols: u32,
+    pub coupling: Coupling,
+    process_ps: u64,
+    io_bytes_per_ps: f64,
+    mvm_energy_j: f64,
+    io_energy_j_per_byte: f64,
+    placements: Vec<Placement>,
+    /// The DAC/ADC register file port (queue/dequeue transfers). Double
+    /// buffering lets transfers overlap the crossbar MVM (§III.B:
+    /// "DACs and ADCs with dedicated registers").
+    io_busy_until_ps: u64,
+    /// The crossbar itself (CM_PROCESS occupancy).
+    xbar_busy_until_ps: u64,
+    /// Completion time of the most recent queue (process consumes it).
+    last_queue_done_ps: u64,
+    /// FIFO of un-dequeued MVM completion times: a dequeue retrieves the
+    /// *oldest* pending result (software pipelining queues pixel p+1 and
+    /// fires its MVM before draining pixel p's outputs).
+    pending_results_ps: std::collections::VecDeque<u64>,
+    pub stats: AimcStats,
+}
+
+impl AimcTile {
+    pub fn new(cfg: &AimcConfig, rows: u32, cols: u32, coupling: Coupling) -> AimcTile {
+        AimcTile {
+            rows,
+            cols,
+            coupling,
+            process_ps: (cfg.process_latency_s * 1e12).round() as u64,
+            io_bytes_per_ps: cfg.io_throughput_bps / 1e12,
+            mvm_energy_j: cfg.mvm_energy_j(rows, cols),
+            io_energy_j_per_byte: cfg.io_energy_j_per_byte(),
+            placements: Vec::new(),
+            io_busy_until_ps: 0,
+            xbar_busy_until_ps: 0,
+            last_queue_done_ps: 0,
+            pending_results_ps: std::collections::VecDeque::new(),
+            stats: AimcStats::default(),
+        }
+    }
+
+    /// Input memory capacity: one int8 per word line (Table I-C: "M B").
+    pub fn input_mem_bytes(&self) -> u64 {
+        self.rows as u64
+    }
+
+    /// Output memory capacity: one int8 per bit line.
+    pub fn output_mem_bytes(&self) -> u64 {
+        self.cols as u64
+    }
+
+    /// CM_INITIALIZE: claim a crossbar region for a matrix. Programming is
+    /// a one-time cost outside the region of interest (§VII.E).
+    pub fn map_matrix(&mut self, p: Placement) -> Result<(), AimcError> {
+        if p.row0 + p.rows > self.rows || p.col0 + p.cols > self.cols {
+            return Err(AimcError::OutOfBounds(p, self.rows, self.cols));
+        }
+        if let Some(other) = self.placements.iter().find(|q| q.overlaps(&p)) {
+            return Err(AimcError::Overlap(p, *other));
+        }
+        self.placements.push(p);
+        self.stats.programmed_weights += p.rows as u64 * p.cols as u64;
+        Ok(())
+    }
+
+    pub fn placements(&self) -> &[Placement] {
+        &self.placements
+    }
+
+    /// Transfer time of `bytes` over the *tight* tile port, ps.
+    pub fn io_transfer_ps(&self, bytes: u64) -> u64 {
+        (bytes as f64 / self.io_bytes_per_ps).round() as u64
+    }
+
+    /// CM_QUEUE: `bytes` into input memory starting at `now`. Returns
+    /// completion time at the device. Uses the I/O port only — a queue
+    /// for the *next* MVM may overlap a running CM_PROCESS.
+    pub fn queue(&mut self, now_ps: u64, bytes: u64) -> Result<u64, AimcError> {
+        if bytes > self.input_mem_bytes() {
+            return Err(AimcError::InputOverflow(bytes, self.input_mem_bytes()));
+        }
+        self.stats.queued_bytes += bytes;
+        self.stats.energy_j += bytes as f64 * self.io_energy_j_per_byte;
+        let start = now_ps.max(self.io_busy_until_ps);
+        let done = start + self.io_transfer_ps(bytes);
+        self.io_busy_until_ps = done;
+        self.last_queue_done_ps = done;
+        Ok(done)
+    }
+
+    /// CM_PROCESS: the analog MVM. Constant latency (Table I-C). Starts
+    /// once the crossbar is free and its inputs have finished queueing.
+    pub fn process(&mut self, now_ps: u64) -> u64 {
+        self.stats.processes += 1;
+        self.stats.process_ops_weighted += self.rows as f64 * self.cols as f64;
+        self.stats.energy_j += self.mvm_energy_j;
+        let start = now_ps.max(self.xbar_busy_until_ps).max(self.last_queue_done_ps);
+        let done = start + self.process_ps;
+        self.xbar_busy_until_ps = done;
+        self.pending_results_ps.push_back(done);
+        done
+    }
+
+    /// CM_DEQUEUE: `bytes` out of output memory. Waits for the pending
+    /// MVM (ADC registers hold its result) and the I/O port.
+    pub fn dequeue(&mut self, now_ps: u64, bytes: u64) -> Result<u64, AimcError> {
+        if bytes > self.output_mem_bytes() {
+            return Err(AimcError::OutputOverflow(bytes, self.output_mem_bytes()));
+        }
+        self.stats.dequeued_bytes += bytes;
+        self.stats.energy_j += bytes as f64 * self.io_energy_j_per_byte;
+        let result_ready = self.pending_results_ps.pop_front().unwrap_or(0);
+        let start = now_ps.max(self.io_busy_until_ps).max(result_ready);
+        let done = start + self.io_transfer_ps(bytes);
+        self.io_busy_until_ps = done;
+        Ok(done)
+    }
+
+    pub fn process_latency_ps(&self) -> u64 {
+        self.process_ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AimcConfig, SystemKind};
+
+    fn tile() -> AimcTile {
+        AimcTile::new(&AimcConfig::for_kind(SystemKind::HighPower), 1024, 1024, Coupling::Tight)
+    }
+
+    #[test]
+    fn process_latency_is_100ns() {
+        let mut t = tile();
+        assert_eq!(t.process(0), 100_000);
+    }
+
+    #[test]
+    fn queue_at_4gbps() {
+        let mut t = tile();
+        // 1024 bytes at 4 GB/s = 256 ns.
+        assert_eq!(t.queue(0, 1024).unwrap(), 256_000);
+    }
+
+    #[test]
+    fn device_serializes_operations() {
+        let mut t = tile();
+        let q = t.queue(0, 1024).unwrap();
+        let p = t.process(0); // issued "early" but queued behind the queue op
+        assert_eq!(p, q + 100_000);
+    }
+
+    #[test]
+    fn overflow_checks() {
+        let mut t = tile();
+        assert!(t.queue(0, 1025).is_err());
+        assert!(t.dequeue(0, 1025).is_err());
+        assert!(t.queue(0, 1024).is_ok());
+    }
+
+    #[test]
+    fn map_matrix_bounds_and_overlap() {
+        let mut t = tile();
+        let a = Placement { row0: 0, col0: 0, rows: 512, cols: 512 };
+        let b = Placement { row0: 256, col0: 256, rows: 512, cols: 512 };
+        let c = Placement { row0: 512, col0: 512, rows: 512, cols: 512 };
+        let oob = Placement { row0: 600, col0: 0, rows: 512, cols: 16 };
+        assert!(t.map_matrix(a).is_ok());
+        assert!(matches!(t.map_matrix(b), Err(AimcError::Overlap(..))));
+        assert!(t.map_matrix(c).is_ok());
+        assert!(matches!(t.map_matrix(oob), Err(AimcError::OutOfBounds(..))));
+    }
+
+    #[test]
+    fn energy_accumulates() {
+        let mut t = tile();
+        let e0 = t.stats.energy_j;
+        t.process(0);
+        let e1 = t.stats.energy_j;
+        assert!(e1 > e0);
+        t.queue(0, 512).unwrap();
+        assert!(t.stats.energy_j > e1);
+    }
+
+    #[test]
+    fn counters_track_bytes() {
+        let mut t = tile();
+        t.queue(0, 100).unwrap();
+        t.dequeue(0, 50).unwrap();
+        assert_eq!(t.stats.queued_bytes, 100);
+        assert_eq!(t.stats.dequeued_bytes, 50);
+    }
+}

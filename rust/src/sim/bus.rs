@@ -1,0 +1,139 @@
+//! Interconnect models: the coherent memory bus between L1s, the LLC and
+//! the DRAM controller, and the peripheral I/O bus used by loosely-coupled
+//! AIMC accelerators (§IV.A).
+//!
+//! The memory bus follows Table I-A: 16-byte width, 3-cycle frontend,
+//! 4-cycle forward/response/snoop, clocked at the core frequency domain
+//! (gem5-X RealView puts the XBar in the CPU clock domain).
+
+#[derive(Clone, Debug)]
+pub struct MemBus {
+    /// Frontend + forward latency per transaction, picoseconds.
+    request_ps: u64,
+    /// Response path latency, picoseconds.
+    response_ps: u64,
+    /// Occupancy per 64B line (width-limited), picoseconds.
+    transfer_ps: u64,
+    busy_until_ps: u64,
+    pub transactions: u64,
+}
+
+impl MemBus {
+    pub fn new(
+        cycle_ps: u64,
+        frontend_cycles: u64,
+        fwd_cycles: u64,
+        width_bytes: u64,
+        line_bytes: u64,
+    ) -> MemBus {
+        let beats = line_bytes.div_ceil(width_bytes);
+        MemBus {
+            request_ps: (frontend_cycles + fwd_cycles) * cycle_ps,
+            response_ps: fwd_cycles * cycle_ps,
+            transfer_ps: beats * cycle_ps,
+            busy_until_ps: 0,
+            transactions: 0,
+        }
+    }
+
+    /// One line transaction crossing the bus at `now`; returns the time at
+    /// which the request has reached the far side (response latency is
+    /// added by `round_trip_extra`).
+    pub fn request(&mut self, now_ps: u64) -> u64 {
+        self.transactions += 1;
+        let start = now_ps.max(self.busy_until_ps);
+        self.busy_until_ps = start + self.transfer_ps;
+        start + self.request_ps
+    }
+
+    /// Latency of the response leg, ps.
+    pub fn response_ps(&self) -> u64 {
+        self.response_ps
+    }
+
+    pub fn reset(&mut self) {
+        self.busy_until_ps = 0;
+        self.transactions = 0;
+    }
+}
+
+/// Peripheral I/O bus for loosely-coupled accelerators: every beat is an
+/// uncached device access with a fixed round-trip cost, pipelined at the
+/// peripheral throughput.
+#[derive(Clone, Debug)]
+pub struct IoBus {
+    /// Fixed per-transaction round trip, ps.
+    transaction_ps: u64,
+    /// Sustained throughput limit, bytes/ps (scaled).
+    bytes_per_ps: f64,
+    busy_until_ps: u64,
+    pub transactions: u64,
+}
+
+impl IoBus {
+    pub fn new(transaction_s: f64, throughput_bps: f64) -> IoBus {
+        IoBus {
+            transaction_ps: (transaction_s * 1e12).round() as u64,
+            bytes_per_ps: throughput_bps / 1e12,
+            busy_until_ps: 0,
+            transactions: 0,
+        }
+    }
+
+    /// Transfer `bytes` (in pipelined beats) starting at `now`; returns the
+    /// completion time. The fixed transaction latency applies once per
+    /// call (drivers batch beats), the throughput limit to the payload.
+    pub fn transfer(&mut self, now_ps: u64, bytes: u64) -> u64 {
+        self.transactions += 1;
+        let start = now_ps.max(self.busy_until_ps);
+        let payload_ps = (bytes as f64 / self.bytes_per_ps).round() as u64;
+        let done = start + self.transaction_ps + payload_ps;
+        self.busy_until_ps = done;
+        done
+    }
+
+    pub fn reset(&mut self) {
+        self.busy_until_ps = 0;
+        self.transactions = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn membus_latency_math() {
+        // 435ps cycle (2.3GHz), 3+4 cycles request, 16B width, 64B line.
+        let mut b = MemBus::new(435, 3, 4, 16, 64);
+        let t = b.request(0);
+        assert_eq!(t, 7 * 435);
+        assert_eq!(b.response_ps(), 4 * 435);
+        assert_eq!(b.transactions, 1);
+    }
+
+    #[test]
+    fn membus_occupancy_serializes() {
+        let mut b = MemBus::new(1000, 3, 4, 16, 64);
+        let t1 = b.request(0);
+        let t2 = b.request(0);
+        // second request waits 4 beats of occupancy.
+        assert_eq!(t2 - t1, 4 * 1000);
+    }
+
+    #[test]
+    fn iobus_fixed_plus_payload() {
+        let mut io = IoBus::new(100e-9, 1e9); // 100ns + 1GB/s
+        let t = io.transfer(0, 1000); // 1000B at 1B/ns = 1000ns
+        assert_eq!(t, 100_000 + 1_000_000);
+    }
+
+    #[test]
+    fn iobus_back_to_back_queues() {
+        let mut io = IoBus::new(100e-9, 1e9);
+        let t1 = io.transfer(0, 0);
+        let t2 = io.transfer(0, 0);
+        assert_eq!(t1, 100_000);
+        assert_eq!(t2, 200_000);
+    }
+}

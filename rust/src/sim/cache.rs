@@ -1,0 +1,225 @@
+//! Set-associative cache timing model (LRU, write-back, write-allocate).
+//!
+//! The model is line-granular and functional-less: it tracks tags only,
+//! which is all the timing/energy model needs. Hit/miss behaviour under
+//! streaming and thrashing working sets is what drives the paper's
+//! results (§VII.E, §VIII.E), so the replacement state is exact, not
+//! approximated.
+
+use crate::config::CacheGeometry;
+use crate::stats::CacheStats;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    Read,
+    Write,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Line {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    /// LRU stamp: larger == more recently used.
+    lru: u64,
+}
+
+/// Result of one cache lookup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LookupResult {
+    pub hit: bool,
+    /// A dirty victim was evicted (must be written back downstream).
+    pub writeback: bool,
+}
+
+pub struct Cache {
+    geom: CacheGeometry,
+    /// Flat line array, `assoc` consecutive entries per set (§Perf: the
+    /// nested Vec<Vec<Line>> layout cost ~25% of the whole-stack
+    /// simulation time in pointer chasing; see EXPERIMENTS.md).
+    lines: Vec<Line>,
+    set_mask: usize,
+    assoc: usize,
+    stamp: u64,
+    pub stats: CacheStats,
+}
+
+impl Cache {
+    pub fn new(geom: CacheGeometry) -> Cache {
+        let n_sets = geom.sets() as usize;
+        assert!(n_sets.is_power_of_two(), "sets must be a power of two");
+        Cache {
+            geom,
+            lines: vec![
+                Line { tag: 0, valid: false, dirty: false, lru: 0 };
+                n_sets * geom.assoc as usize
+            ],
+            set_mask: n_sets - 1,
+            assoc: geom.assoc as usize,
+            stamp: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn geometry(&self) -> &CacheGeometry {
+        &self.geom
+    }
+
+    #[inline]
+    fn set_range_tag(&self, addr: u64) -> (usize, u64) {
+        let line = addr / self.geom.line_bytes;
+        let idx = (line as usize) & self.set_mask;
+        (idx * self.assoc, line)
+    }
+
+    /// Access one line. On miss the line is allocated (write-allocate) and
+    /// the LRU victim evicted; `writeback` reports whether the victim was
+    /// dirty.
+    pub fn access(&mut self, addr: u64, kind: Access) -> LookupResult {
+        self.stamp += 1;
+        let (base, tag) = self.set_range_tag(addr);
+        let set = &mut self.lines[base..base + self.assoc];
+
+        if let Some(line) = set.iter_mut().find(|l| l.valid && l.tag == tag) {
+            line.lru = self.stamp;
+            if kind == Access::Write {
+                line.dirty = true;
+                self.stats.write_hits += 1;
+            } else {
+                self.stats.read_hits += 1;
+            }
+            return LookupResult { hit: true, writeback: false };
+        }
+
+        // Miss: evict LRU victim, allocate.
+        let victim = set
+            .iter_mut()
+            .min_by_key(|l| if l.valid { l.lru } else { 0 })
+            .unwrap();
+        let writeback = victim.valid && victim.dirty;
+        if writeback {
+            self.stats.writebacks += 1;
+        }
+        *victim = Line {
+            tag,
+            valid: true,
+            dirty: kind == Access::Write,
+            lru: self.stamp,
+        };
+        if kind == Access::Write {
+            self.stats.write_misses += 1;
+        } else {
+            self.stats.read_misses += 1;
+        }
+        LookupResult { hit: false, writeback }
+    }
+
+    /// Invalidate a line if present (cross-core producer/consumer sharing:
+    /// the consumer-side model invalidates the producer's L1 copy).
+    pub fn invalidate(&mut self, addr: u64) -> bool {
+        let (base, tag) = self.set_range_tag(addr);
+        for l in &mut self.lines[base..base + self.assoc] {
+            if l.valid && l.tag == tag {
+                l.valid = false;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Does the cache currently hold this address? (no LRU update)
+    pub fn probe(&self, addr: u64) -> bool {
+        let (base, tag) = self.set_range_tag(addr);
+        self.lines[base..base + self.assoc]
+            .iter()
+            .any(|l| l.valid && l.tag == tag)
+    }
+
+    pub fn line_bytes(&self) -> u64 {
+        self.geom.line_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Cache {
+        // 4 sets x 2 ways x 64B = 512B.
+        Cache::new(CacheGeometry { size_bytes: 512, assoc: 2, line_bytes: 64, hit_latency_cycles: 2 })
+    }
+
+    #[test]
+    fn cold_miss_then_hit() {
+        let mut c = small();
+        assert!(!c.access(0x1000, Access::Read).hit);
+        assert!(c.access(0x1000, Access::Read).hit);
+        assert!(c.access(0x1010, Access::Read).hit, "same line");
+        assert_eq!(c.stats.read_misses, 1);
+        assert_eq!(c.stats.read_hits, 2);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = small();
+        // Three lines in the same set (stride = sets * line = 256B).
+        c.access(0x0, Access::Read);
+        c.access(0x100, Access::Read);
+        c.access(0x0, Access::Read); // touch: 0x0 is MRU
+        c.access(0x200, Access::Read); // evicts 0x100
+        assert!(c.probe(0x0));
+        assert!(!c.probe(0x100));
+        assert!(c.probe(0x200));
+    }
+
+    #[test]
+    fn dirty_eviction_reports_writeback() {
+        let mut c = small();
+        c.access(0x0, Access::Write);
+        c.access(0x100, Access::Read);
+        let r = c.access(0x200, Access::Read); // evicts dirty 0x0
+        assert!(r.writeback);
+        assert_eq!(c.stats.writebacks, 1);
+    }
+
+    #[test]
+    fn write_allocate() {
+        let mut c = small();
+        let r = c.access(0x40, Access::Write);
+        assert!(!r.hit);
+        assert!(c.probe(0x40));
+        assert!(c.access(0x40, Access::Read).hit);
+    }
+
+    #[test]
+    fn invalidate_removes_line() {
+        let mut c = small();
+        c.access(0x40, Access::Read);
+        assert!(c.invalidate(0x40));
+        assert!(!c.probe(0x40));
+        assert!(!c.invalidate(0x40));
+    }
+
+    #[test]
+    fn working_set_larger_than_cache_thrashes() {
+        let mut c = small(); // 512B
+        // Stream 4 KiB twice: second pass must still miss everywhere.
+        for pass in 0..2 {
+            for addr in (0..4096).step_by(64) {
+                let r = c.access(addr, Access::Read);
+                assert!(!r.hit, "pass {pass} addr {addr}");
+            }
+        }
+    }
+
+    #[test]
+    fn working_set_smaller_than_cache_hits_after_warmup() {
+        let mut c = small();
+        for addr in (0..256).step_by(64) {
+            c.access(addr, Access::Read);
+        }
+        for addr in (0..256).step_by(64) {
+            assert!(c.access(addr, Access::Read).hit);
+        }
+    }
+}

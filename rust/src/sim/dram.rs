@@ -1,0 +1,95 @@
+//! DDR4 main-memory timing model.
+//!
+//! Single-channel DDR4-2400 (Table I-A): a fixed average access latency
+//! (controller + CAS path) plus a bandwidth-limited data channel modeled
+//! as a busy-until reservation. FCFS; accesses are 64-byte lines.
+
+#[derive(Clone, Debug)]
+pub struct Dram {
+    /// Average access latency, picoseconds.
+    latency_ps: u64,
+    /// Channel occupancy per 64B access, picoseconds.
+    transfer_ps: u64,
+    /// Channel reserved until this time.
+    busy_until_ps: u64,
+    pub accesses: u64,
+}
+
+impl Dram {
+    pub fn new(latency_s: f64, peak_bps: f64, line_bytes: u64) -> Dram {
+        Dram {
+            latency_ps: (latency_s * 1e12).round() as u64,
+            transfer_ps: ((line_bytes as f64 / peak_bps) * 1e12).round() as u64,
+            busy_until_ps: 0,
+            accesses: 0,
+        }
+    }
+
+    /// Issue one line access at `now`; returns the completion time (ps).
+    pub fn access(&mut self, now_ps: u64) -> u64 {
+        self.accesses += 1;
+        let start = now_ps.max(self.busy_until_ps);
+        self.busy_until_ps = start + self.transfer_ps;
+        start + self.latency_ps
+    }
+
+    /// Completion time without contention (for tests/analysis).
+    pub fn unloaded_latency_ps(&self) -> u64 {
+        self.latency_ps
+    }
+
+    pub fn reset(&mut self) {
+        self.busy_until_ps = 0;
+        self.accesses = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dram() -> Dram {
+        // 55ns latency, 19.2 GB/s, 64B lines -> transfer 3333ps.
+        Dram::new(55e-9, 19.2e9, 64)
+    }
+
+    #[test]
+    fn unloaded_access_sees_latency_only() {
+        let mut d = dram();
+        assert_eq!(d.access(0), 55_000);
+        assert_eq!(d.accesses, 1);
+    }
+
+    #[test]
+    fn back_to_back_accesses_queue_on_channel() {
+        let mut d = dram();
+        let t1 = d.access(0);
+        let t2 = d.access(0); // same instant: must wait for the channel
+        assert_eq!(t1, 55_000);
+        assert_eq!(t2, 55_000 + 3_333);
+    }
+
+    #[test]
+    fn spaced_accesses_do_not_queue() {
+        let mut d = dram();
+        let t1 = d.access(0);
+        let t2 = d.access(100_000);
+        assert_eq!(t1, 55_000);
+        assert_eq!(t2, 155_000);
+    }
+
+    #[test]
+    fn sustained_bandwidth_matches_peak() {
+        let mut d = dram();
+        let n = 10_000u64;
+        let mut last = 0;
+        for _ in 0..n {
+            last = d.access(0);
+        }
+        // n accesses of 64B at 19.2 GB/s: ~ n * 3333 ps.
+        let expect = n * 3_333;
+        let got = last - 55_000;
+        let rel = (got as f64 - expect as f64).abs() / expect as f64;
+        assert!(rel < 0.01, "rel {rel}");
+    }
+}

@@ -1,0 +1,254 @@
+//! The memory system: per-core L1D caches, a shared LLC, the memory bus
+//! and DRAM, composed exactly as in the paper's Table I-A systems.
+//!
+//! All methods take and return picosecond timestamps; contention state
+//! (bus/DRAM busy-until) lives inside, so callers must issue accesses in
+//! non-decreasing time order (the trace machine guarantees this by always
+//! stepping the earliest core).
+
+use crate::config::SystemConfig;
+use crate::sim::bus::MemBus;
+use crate::sim::cache::{Access, Cache};
+use crate::sim::dram::Dram;
+use crate::stats::CacheStats;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AccessOutcome {
+    /// Time at which the data is available to the core, ps.
+    pub completion_ps: u64,
+    pub l1_hit: bool,
+    pub llc_hit: bool,
+    pub dram_access: bool,
+}
+
+pub struct MemorySystem {
+    l1d: Vec<Cache>,
+    llc: Cache,
+    bus: MemBus,
+    dram: Dram,
+    line_bytes: u64,
+    l1_hit_ps: u64,
+    llc_hit_ps: u64,
+    snoop_ps: u64,
+    pub llc_bytes_read: u64,
+    pub llc_bytes_written: u64,
+}
+
+impl MemorySystem {
+    pub fn new(cfg: &SystemConfig) -> MemorySystem {
+        let cycle = cfg.cycle_ps();
+        MemorySystem {
+            l1d: (0..cfg.num_cores).map(|_| Cache::new(cfg.l1d)).collect(),
+            llc: Cache::new(cfg.llc),
+            bus: MemBus::new(
+                cycle,
+                cfg.membus_frontend_cycles,
+                cfg.membus_fwd_cycles,
+                cfg.membus_width_bytes,
+                cfg.llc.line_bytes,
+            ),
+            dram: Dram::new(cfg.dram_latency_s, cfg.dram_peak_bps, cfg.llc.line_bytes),
+            line_bytes: cfg.l1d.line_bytes,
+            l1_hit_ps: cfg.l1d.hit_latency_cycles * cycle,
+            llc_hit_ps: cfg.llc.hit_latency_cycles * cycle,
+            snoop_ps: cfg.membus_fwd_cycles * cycle,
+            llc_bytes_read: 0,
+            llc_bytes_written: 0,
+        }
+    }
+
+    pub fn line_bytes(&self) -> u64 {
+        self.line_bytes
+    }
+
+    /// One line-granular access by `core` at time `now`.
+    pub fn access(&mut self, core: usize, addr: u64, write: bool, now_ps: u64) -> AccessOutcome {
+        let kind = if write { Access::Write } else { Access::Read };
+        let l1 = &mut self.l1d[core];
+        let r1 = l1.access(addr, kind);
+        if r1.hit {
+            return AccessOutcome {
+                completion_ps: now_ps + self.l1_hit_ps,
+                l1_hit: true,
+                llc_hit: false,
+                dram_access: false,
+            };
+        }
+        // L1 victim writeback drains to the LLC via the write buffer; it
+        // consumes LLC write bandwidth/energy but does not stall the core.
+        if r1.writeback {
+            self.llc.access(addr ^ 0x8000_0000_0000, Access::Write); // victim line
+            self.llc_bytes_written += self.line_bytes;
+        }
+
+        // Cross the bus to the LLC.
+        let at_llc = self.bus.request(now_ps + self.l1_hit_ps);
+        let r2 = self.llc.access(addr, Access::Read);
+        self.llc_bytes_read += self.line_bytes;
+        if r2.hit {
+            let done = at_llc + self.llc_hit_ps + self.bus.response_ps();
+            return AccessOutcome {
+                completion_ps: done,
+                l1_hit: false,
+                llc_hit: true,
+                dram_access: false,
+            };
+        }
+        // LLC victim writeback to DRAM: consumes channel bandwidth only.
+        if r2.writeback {
+            self.dram.access(at_llc + self.llc_hit_ps);
+        }
+        let from_dram = self.dram.access(at_llc + self.llc_hit_ps);
+        // Fill travels back through LLC and bus.
+        self.llc_bytes_written += self.line_bytes;
+        let done = from_dram + self.bus.response_ps();
+        AccessOutcome {
+            completion_ps: done,
+            l1_hit: false,
+            llc_hit: false,
+            dram_access: true,
+        }
+    }
+
+    /// Consumer `to` reads a line most recently written by producer `from`
+    /// (pipeline channels, §VI.C ping-pong buffers). Models the coherent
+    /// transfer: snoop the producer's L1, move the line to the consumer.
+    pub fn shared_transfer(&mut self, from: usize, to: usize, addr: u64, now_ps: u64) -> AccessOutcome {
+        // Invalidate at the producer (line migrates).
+        let was_in_producer = self.l1d[from].invalidate(addr);
+        // The consumer's access then misses L1 and is served either by the
+        // producer's L1 (snoop hit) or by the LLC.
+        let at_llc = self.bus.request(now_ps + self.l1_hit_ps);
+        let snoop_extra = if was_in_producer { self.snoop_ps } else { 0 };
+        let r2 = self.llc.access(addr, Access::Write); // line lands shared+dirty
+        self.llc_bytes_written += self.line_bytes;
+        let base = if r2.hit || was_in_producer {
+            at_llc + self.llc_hit_ps + snoop_extra
+        } else {
+            if r2.writeback {
+                self.dram.access(at_llc + self.llc_hit_ps);
+            }
+            self.dram.access(at_llc + self.llc_hit_ps)
+        };
+        // Install in the consumer's L1.
+        self.l1d[to].access(addr, Access::Read);
+        AccessOutcome {
+            completion_ps: base + self.bus.response_ps(),
+            l1_hit: false,
+            llc_hit: r2.hit,
+            dram_access: !(r2.hit || was_in_producer),
+        }
+    }
+
+    pub fn l1_stats(&self, core: usize) -> &CacheStats {
+        &self.l1d[core].stats
+    }
+
+    pub fn l1_stats_merged(&self) -> CacheStats {
+        let mut s = CacheStats::default();
+        for c in &self.l1d {
+            s.merge(&c.stats);
+        }
+        s
+    }
+
+    pub fn llc_stats(&self) -> &CacheStats {
+        &self.llc.stats
+    }
+
+    pub fn dram_accesses(&self) -> u64 {
+        self.dram.accesses
+    }
+
+    pub fn l1_hit_ps(&self) -> u64 {
+        self.l1_hit_ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn ms() -> MemorySystem {
+        MemorySystem::new(&SystemConfig::high_power())
+    }
+
+    #[test]
+    fn l1_hit_is_fast() {
+        let mut m = ms();
+        m.access(0, 0x1000, false, 0);
+        let o = m.access(0, 0x1000, false, 1_000_000);
+        assert!(o.l1_hit);
+        assert_eq!(o.completion_ps - 1_000_000, 2 * 435);
+    }
+
+    #[test]
+    fn cold_miss_goes_to_dram() {
+        let mut m = ms();
+        let o = m.access(0, 0x1000, false, 0);
+        assert!(!o.l1_hit && !o.llc_hit && o.dram_access);
+        // At least the DRAM latency.
+        assert!(o.completion_ps > 55_000);
+        assert_eq!(m.dram_accesses(), 1);
+    }
+
+    #[test]
+    fn second_core_hits_llc() {
+        let mut m = ms();
+        m.access(0, 0x2000, false, 0);
+        let o = m.access(1, 0x2000, false, 1_000_000);
+        assert!(!o.l1_hit && o.llc_hit && !o.dram_access);
+        assert!(o.completion_ps - 1_000_000 < 55_000);
+    }
+
+    #[test]
+    fn streaming_2mb_thrashes_1mb_llc() {
+        let mut m = ms();
+        let mb = 1024 * 1024;
+        // Two passes over 2 MiB: every access in the second pass still
+        // misses the 1 MiB LLC (the paper's MLP working-set argument).
+        let mut t = 0;
+        for pass in 0..2 {
+            let mut dram_hits = 0;
+            for addr in (0..2 * mb).step_by(64) {
+                let o = m.access(0, addr, false, t);
+                t = o.completion_ps;
+                if o.dram_access {
+                    dram_hits += 1;
+                }
+            }
+            assert!(
+                dram_hits > 30_000,
+                "pass {pass}: expected thrashing, got {dram_hits} DRAM accesses"
+            );
+        }
+    }
+
+    #[test]
+    fn small_working_set_stays_in_l1() {
+        let mut m = ms();
+        let mut t = 0;
+        for addr in (0..3 * 1024).step_by(64) {
+            t = m.access(0, addr, false, t).completion_ps;
+        }
+        let before = m.dram_accesses();
+        for addr in (0..3 * 1024).step_by(64) {
+            let o = m.access(0, addr, false, t);
+            t = o.completion_ps;
+            assert!(o.l1_hit);
+        }
+        assert_eq!(m.dram_accesses(), before);
+    }
+
+    #[test]
+    fn shared_transfer_moves_line() {
+        let mut m = ms();
+        m.access(0, 0x3000, true, 0); // producer writes
+        let o = m.shared_transfer(0, 1, 0x3000, 1_000_000);
+        assert!(!o.dram_access, "snoop-served, not DRAM");
+        // Consumer now hits locally.
+        let o2 = m.access(1, 0x3000, false, o.completion_ps);
+        assert!(o2.l1_hit);
+    }
+}

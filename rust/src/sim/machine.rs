@@ -1,0 +1,576 @@
+//! The trace machine: executes per-core `TraceOp` streams against the
+//! timing models (cores, memory hierarchy, AIMC tiles, sync primitives)
+//! and produces `RunStats`.
+//!
+//! Scheduling is conservative global-time ordering: the machine always
+//! steps the earliest-time runnable core, so shared resources (bus, DRAM,
+//! tiles, mutexes, channels) observe accesses in near-nondecreasing time
+//! order. A core blocked on a channel or mutex is advanced to just after
+//! the earliest other runnable core and retried — the standard
+//! lockstep-free conservative scheme.
+
+use crate::config::SystemConfig;
+
+use crate::sim::aimc::{AimcTile, Coupling};
+use crate::sim::bus::IoBus;
+use crate::sim::hierarchy::MemorySystem;
+use crate::sim::sync::{SimChannel, SimMutex};
+use crate::stats::{CoreStats, RoiKind, RoiTimes, RunStats};
+use crate::workload::costs;
+use crate::workload::trace::TraceOp;
+
+/// Static description of the simulated platform's accelerator + sync
+/// fabric (which tile belongs to which core, channel topology).
+#[derive(Clone, Debug, Default)]
+pub struct MachineSpec {
+    pub tiles: Vec<TileSpec>,
+    pub mutexes: usize,
+    pub channels: Vec<ChannelSpec>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TileSpec {
+    pub rows: u32,
+    pub cols: u32,
+    pub coupling: Coupling,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ChannelSpec {
+    pub producer: usize,
+    pub consumer: usize,
+    pub capacity: usize,
+}
+
+struct CoreRun {
+    now_ps: u64,
+    pc: usize,
+    roi_stack: Vec<RoiKind>,
+    stats: CoreStats,
+    /// This core was parked at the current pc (retry after a block): sync
+    /// ops must not complete earlier than the event that unparked them.
+    retrying: bool,
+    /// Sub-cycle remainders so ps->cycle conversion conserves time.
+    wfm_residual_ps: u64,
+    idle_residual_ps: u64,
+}
+
+pub struct Machine {
+    cfg: SystemConfig,
+    mem: MemorySystem,
+    tiles: Vec<AimcTile>,
+    iobus: IoBus,
+    mutexes: Vec<SimMutex>,
+    channels: Vec<SimChannel>,
+    channel_specs: Vec<ChannelSpec>,
+    roi: RoiTimes,
+    cycle_ps: u64,
+}
+
+enum StepResult {
+    Progressed,
+    Blocked,
+}
+
+impl Machine {
+    pub fn new(cfg: SystemConfig, spec: MachineSpec) -> Machine {
+        let tiles = spec
+            .tiles
+            .iter()
+            .map(|t| AimcTile::new(&cfg.aimc, t.rows, t.cols, t.coupling))
+            .collect();
+        let iobus = IoBus::new(cfg.aimc.pio_transaction_s, cfg.aimc.pio_throughput_bps);
+        Machine {
+            mem: MemorySystem::new(&cfg),
+            tiles,
+            iobus,
+            mutexes: (0..spec.mutexes).map(|_| SimMutex::default()).collect(),
+            channels: spec.channels.iter().map(|c| SimChannel::new(c.capacity)).collect(),
+            channel_specs: spec.channels.clone(),
+            roi: RoiTimes::default(),
+            cycle_ps: cfg.cycle_ps(),
+            cfg,
+        }
+    }
+
+    pub fn tiles(&self) -> &[AimcTile] {
+        &self.tiles
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// Execute one trace per core (empty traces = unused cores). Returns
+    /// the full run statistics.
+    pub fn run(&mut self, traces: Vec<Vec<TraceOp>>) -> RunStats {
+        assert!(traces.len() <= self.cfg.num_cores, "more traces than cores");
+        let n = traces.len();
+        let mut cores: Vec<CoreRun> = (0..n)
+            .map(|_| CoreRun {
+                now_ps: 0,
+                pc: 0,
+                roi_stack: Vec::new(),
+                stats: CoreStats::default(),
+                retrying: false,
+                wfm_residual_ps: 0,
+                idle_residual_ps: 0,
+            })
+            .collect();
+
+        // Blocked-flag scheduling: a core that cannot make progress (full
+        // channel, empty channel, held mutex) is parked until *any* other
+        // core progresses; the grant/ready timestamps of the sync
+        // primitives supply the correct wait times on retry.
+        let mut blocked = vec![false; n];
+        loop {
+            let mut next: Option<usize> = None;
+            for i in 0..n {
+                if cores[i].pc < traces[i].len() && !blocked[i] {
+                    match next {
+                        Some(j) if cores[j].now_ps <= cores[i].now_ps => {}
+                        _ => next = Some(i),
+                    }
+                }
+            }
+            let Some(i) = next else {
+                if let Some(stuck) = (0..n).find(|&j| cores[j].pc < traces[j].len()) {
+                    panic!(
+                        "deadlock: core {stuck} blocked at op {:?} with no runnable peers",
+                        traces[stuck][cores[stuck].pc]
+                    );
+                }
+                break;
+            };
+
+            match self.step(i, &mut cores, &traces) {
+                StepResult::Progressed => {
+                    blocked.iter_mut().for_each(|b| *b = false);
+                    cores[i].retrying = false;
+                }
+                StepResult::Blocked => {
+                    blocked[i] = true;
+                    cores[i].retrying = true;
+                }
+            }
+        }
+
+        // Pad finished cores to the global end-of-ROI (idle).
+        let end = cores.iter().map(|c| c.now_ps).max().unwrap_or(0);
+        for c in &mut cores {
+            c.stats.idle_cycles += (end - c.now_ps) / self.cycle_ps;
+            c.now_ps = end;
+        }
+
+        let mut rs = RunStats::new(n);
+        rs.roi_time_ps = end;
+        for (i, c) in cores.into_iter().enumerate() {
+            rs.cores[i] = c.stats;
+        }
+        rs.l1d = self.mem.l1_stats_merged();
+        rs.llc = self.mem.llc_stats().clone();
+        rs.dram_accesses = self.mem.dram_accesses();
+        rs.llc_bytes_read = self.mem.llc_bytes_read;
+        rs.llc_bytes_written = self.mem.llc_bytes_written;
+        for t in &self.tiles {
+            rs.aimc.processes += t.stats.processes;
+            rs.aimc.queued_bytes += t.stats.queued_bytes;
+            rs.aimc.dequeued_bytes += t.stats.dequeued_bytes;
+            rs.aimc.programmed_weights += t.stats.programmed_weights;
+            rs.aimc.process_ops_weighted += t.stats.process_ops_weighted;
+            rs.aimc.energy_j += t.stats.energy_j;
+        }
+        rs.roi = self.roi.clone();
+        rs
+    }
+
+    fn step(&mut self, i: usize, cores: &mut [CoreRun], traces: &[Vec<TraceOp>]) -> StepResult {
+        let op = traces[i][cores[i].pc];
+        let t0 = cores[i].now_ps;
+        let result = self.exec(i, &mut cores[i], op);
+        if matches!(result, StepResult::Progressed) {
+            let kind = cores[i].roi_stack.last().copied().unwrap_or(RoiKind::Misc);
+            self.roi.add(kind, cores[i].now_ps - t0);
+            cores[i].pc += 1;
+        }
+        result
+    }
+
+    #[inline]
+    fn active(&self, core: &mut CoreRun, cycles: u64, insts: u64) {
+        core.stats.active_cycles += cycles;
+        core.stats.insts += insts;
+        core.now_ps += cycles * self.cycle_ps;
+    }
+
+    #[inline]
+    fn wfm(&self, core: &mut CoreRun, ps: u64) {
+        let total = ps + core.wfm_residual_ps;
+        core.stats.wfm_cycles += total / self.cycle_ps;
+        core.wfm_residual_ps = total % self.cycle_ps;
+        core.now_ps += ps;
+    }
+
+    #[inline]
+    fn idle(&self, core: &mut CoreRun, ps: u64) {
+        let total = ps + core.idle_residual_ps;
+        core.stats.idle_cycles += total / self.cycle_ps;
+        core.idle_residual_ps = total % self.cycle_ps;
+        core.now_ps += ps;
+    }
+
+    fn exec(&mut self, i: usize, core: &mut CoreRun, op: TraceOp) -> StepResult {
+        match op {
+            TraceOp::Compute { class, insts } => {
+                self.active(core, insts * class.cycles(), insts);
+            }
+
+            TraceOp::MemStream { base, bytes, write, insts_per_line, prefetchable } => {
+                let line = self.mem.line_bytes();
+                let lines = bytes.div_ceil(line);
+                let mut first_miss = true;
+                for k in 0..lines {
+                    self.active(core, insts_per_line, insts_per_line);
+                    let o = self.mem.access(i, base + k * line, write, core.now_ps);
+                    if !o.l1_hit {
+                        let stall = o.completion_ps.saturating_sub(core.now_ps);
+                        // A stride prefetcher overlaps misses past the first
+                        // in a sequential stream; random access pays full.
+                        let eff = if prefetchable && !first_miss {
+                            stall / costs::PREFETCH_DEPTH
+                        } else {
+                            stall
+                        };
+                        first_miss = false;
+                        self.wfm(core, eff);
+                    }
+                }
+            }
+
+            TraceOp::CmInit { tile, placement } => {
+                self.tiles[tile]
+                    .map_matrix(placement)
+                    .expect("workload generator produced an invalid placement");
+                self.active(core, 1, 1);
+            }
+
+            TraceOp::CmQueue { tile, bytes } => {
+                // The device transfer streams concurrently with the CPU's
+                // CM_QUEUE beat issue: the device is engaged from the
+                // first beat, the CPU stalls only for the residual.
+                let start = core.now_ps;
+                let beats = bytes.div_ceil(costs::CM_IO_BYTES_PER_INST);
+                let overhead = beats * costs::CM_IO_OVERHEAD_PER_INST_X1000 / 1000;
+                let done = match self.tiles[tile].coupling {
+                    Coupling::Tight => self.tiles[tile]
+                        .queue(start, bytes)
+                        .expect("queue exceeds tile input memory"),
+                    Coupling::Loose => {
+                        let bus_done = self.iobus.transfer(start, bytes);
+                        self.tiles[tile]
+                            .queue(bus_done, 0)
+                            .expect("zero-byte device op cannot overflow");
+                        bus_done
+                    }
+                };
+                self.active(core, beats + overhead, beats + overhead);
+                let stall = done.saturating_sub(core.now_ps);
+                self.wfm(core, stall);
+            }
+
+            TraceOp::CmProcess { tile } => {
+                // Tight coupling: CM_PROCESS fires the MVM and retires
+                // (the result is awaited by the dependent CM_DEQUEUE, so
+                // software can overlap the next queue with the MVM).
+                // Loose coupling: the doorbell+poll round trip blocks.
+                self.active(core, 1, 1);
+                let done = self.tiles[tile].process(core.now_ps);
+                if self.tiles[tile].coupling == Coupling::Loose {
+                    self.wfm(core, done - core.now_ps);
+                }
+            }
+
+            TraceOp::CmDequeue { tile, bytes } => {
+                let start = core.now_ps;
+                let beats = bytes.div_ceil(costs::CM_IO_BYTES_PER_INST);
+                let overhead = beats * costs::CM_IO_OVERHEAD_PER_INST_X1000 / 1000;
+                let done = match self.tiles[tile].coupling {
+                    Coupling::Tight => self.tiles[tile]
+                        .dequeue(start, bytes)
+                        .expect("dequeue exceeds tile output memory"),
+                    Coupling::Loose => {
+                        let bus_done = self.iobus.transfer(start, bytes);
+                        self.tiles[tile]
+                            .dequeue(bus_done, 0)
+                            .expect("zero-byte device op cannot overflow");
+                        bus_done
+                    }
+                };
+                self.active(core, beats + overhead, beats + overhead);
+                let stall = done.saturating_sub(core.now_ps);
+                self.wfm(core, stall);
+            }
+
+            TraceOp::MutexLock { id } => {
+                let Some(granted) = self.mutexes[id].try_acquire(core.now_ps) else {
+                    return StepResult::Blocked;
+                };
+                self.mutexes[id].lock();
+                if granted > core.now_ps {
+                    let wait = granted - core.now_ps;
+                    self.idle(core, wait);
+                }
+                self.active(core, costs::MUTEX_INSTS, costs::MUTEX_INSTS);
+            }
+
+            TraceOp::MutexUnlock { id } => {
+                self.active(core, costs::MUTEX_INSTS / 2, costs::MUTEX_INSTS / 2);
+                self.mutexes[id].release(core.now_ps);
+            }
+
+            TraceOp::Send { ch, bytes, addr } => {
+                if self.channels[ch].len() >= self.channels[ch].capacity {
+                    return StepResult::Blocked;
+                }
+                // If this send was parked on a full buffer, it resumes no
+                // earlier than the drain that freed the slot.
+                if core.retrying && self.channels[ch].last_recv_ps > core.now_ps {
+                    let wait = self.channels[ch].last_recv_ps - core.now_ps;
+                    self.idle(core, wait);
+                }
+                self.active(core, costs::CHANNEL_INSTS, costs::CHANNEL_INSTS);
+                // Producer writes the buffer through its cache.
+                let line = self.mem.line_bytes();
+                for k in 0..bytes.div_ceil(line) {
+                    self.active(core, 1, 1);
+                    let o = self.mem.access(i, addr + k * line, true, core.now_ps);
+                    if !o.l1_hit {
+                        self.wfm(core, (o.completion_ps - core.now_ps) / costs::PREFETCH_DEPTH);
+                    }
+                }
+                let ok = self.channels[ch].try_send(core.now_ps, bytes, addr);
+                debug_assert!(ok);
+            }
+
+            TraceOp::Recv { ch } => {
+                let msg = match self.channels[ch].head_ready_ps() {
+                    None => return StepResult::Blocked,
+                    Some(ready) => {
+                        // If the message is already there, the condvar
+                        // fast-path applies (no sleep). If the consumer
+                        // must wait, it sleeps on the futex and pays the
+                        // kernel wake-up latency on resume.
+                        if ready > core.now_ps {
+                            let wake_ps = costs::CHANNEL_WAKE_CYCLES * self.cycle_ps;
+                            let wait = ready + wake_ps - core.now_ps;
+                            self.idle(core, wait);
+                        }
+                        self.channels[ch].try_recv(core.now_ps).unwrap()
+                    }
+                };
+                self.active(core, costs::CHANNEL_INSTS, costs::CHANNEL_INSTS);
+                let producer = self.channel_specs[ch].producer;
+                let line = self.mem.line_bytes();
+                for k in 0..msg.bytes.div_ceil(line) {
+                    self.active(core, 1, 1);
+                    let o = self.mem.shared_transfer(producer, i, msg.addr + k * line, core.now_ps);
+                    self.wfm(core, (o.completion_ps - core.now_ps) / 2);
+                }
+            }
+
+            TraceOp::RoiPush { kind } => {
+                core.roi_stack.push(kind);
+            }
+            TraceOp::RoiPop => {
+                core.roi_stack.pop();
+            }
+        }
+        StepResult::Progressed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::InstClass;
+    use crate::sim::aimc::Placement;
+    use crate::workload::trace::TraceBuilder;
+
+    fn hp_machine(spec: MachineSpec) -> Machine {
+        Machine::new(SystemConfig::high_power(), spec)
+    }
+
+    #[test]
+    fn pure_compute_ipc_near_one() {
+        let mut m = hp_machine(MachineSpec::default());
+        let mut b = TraceBuilder::new();
+        b.compute(InstClass::IntAlu, 100_000);
+        let rs = m.run(vec![b.build()]);
+        assert!((rs.cores[0].ipc() - 1.0).abs() < 0.01);
+        assert_eq!(rs.total_insts(), 100_000);
+    }
+
+    #[test]
+    fn mem_stream_generates_dram_traffic() {
+        let mut m = hp_machine(MachineSpec::default());
+        let mut b = TraceBuilder::new();
+        b.stream_read(0x10_0000, 4 * 1024 * 1024, 4); // 4 MiB > 1 MiB LLC
+        let rs = m.run(vec![b.build()]);
+        assert!(rs.dram_accesses > 60_000, "{}", rs.dram_accesses);
+        assert!(rs.cores[0].wfm_cycles > 0);
+    }
+
+    #[test]
+    fn small_stream_second_pass_hits_l1() {
+        let mut m = hp_machine(MachineSpec::default());
+        let mut b = TraceBuilder::new();
+        b.stream_read(0, 8 * 1024, 4);
+        b.stream_read(0, 8 * 1024, 4);
+        let rs = m.run(vec![b.build()]);
+        // Second pass hits: misses only from first pass.
+        assert_eq!(rs.l1d.read_misses, 8 * 1024 / 64);
+    }
+
+    #[test]
+    fn cm_dequeue_waits_for_process_100ns() {
+        let spec = MachineSpec {
+            tiles: vec![TileSpec { rows: 1024, cols: 1024, coupling: Coupling::Tight }],
+            ..Default::default()
+        };
+        let mut m = hp_machine(spec);
+        let ops = vec![
+            TraceOp::CmInit {
+                tile: 0,
+                placement: Placement { row0: 0, col0: 0, rows: 1024, cols: 1024 },
+            },
+            TraceOp::CmProcess { tile: 0 },
+            // The dependent dequeue observes the full 100 ns MVM latency
+            // (CM_PROCESS itself retires immediately — double-buffered
+            // DAC/ADC registers let software overlap the next queue).
+            TraceOp::CmDequeue { tile: 0, bytes: 4 },
+        ];
+        let rs = m.run(vec![ops]);
+        assert!(rs.roi_time_ps >= 100_000, "{}", rs.roi_time_ps);
+        assert_eq!(rs.aimc.processes, 1);
+    }
+
+    #[test]
+    fn queue_throughput_4gbps() {
+        let spec = MachineSpec {
+            tiles: vec![TileSpec { rows: 4096, cols: 64, coupling: Coupling::Tight }],
+            ..Default::default()
+        };
+        let mut m = hp_machine(spec);
+        let ops = vec![TraceOp::CmQueue { tile: 0, bytes: 4096 }];
+        let rs = m.run(vec![ops]);
+        // 4096B at 4GB/s = 1024ns; issue of 1024+512 insts at 2.3GHz ~ 668ns,
+        // so the transfer dominates and total ~ 1024ns.
+        assert!(rs.roi_time_ps >= 1_024_000, "{}", rs.roi_time_ps);
+        assert!(rs.roi_time_ps < 1_200_000, "{}", rs.roi_time_ps);
+    }
+
+    #[test]
+    fn loose_coupling_slower_than_tight() {
+        let mk = |coupling| MachineSpec {
+            tiles: vec![TileSpec { rows: 1024, cols: 1024, coupling }],
+            ..Default::default()
+        };
+        let run = |coupling| {
+            let mut m = hp_machine(mk(coupling));
+            let ops = vec![
+                TraceOp::CmQueue { tile: 0, bytes: 1024 },
+                TraceOp::CmProcess { tile: 0 },
+                TraceOp::CmDequeue { tile: 0, bytes: 1024 },
+            ];
+            m.run(vec![ops]).roi_time_ps
+        };
+        let tight = run(Coupling::Tight);
+        let loose = run(Coupling::Loose);
+        assert!(loose > 2 * tight, "tight {tight} loose {loose}");
+    }
+
+    #[test]
+    fn channel_pipeline_transfers_data() {
+        let spec = MachineSpec {
+            channels: vec![ChannelSpec { producer: 0, consumer: 1, capacity: 2 }],
+            ..Default::default()
+        };
+        let mut m = hp_machine(spec);
+        let mut p = TraceBuilder::new();
+        p.compute(InstClass::IntAlu, 1000);
+        p.push(TraceOp::Send { ch: 0, bytes: 1024, addr: 0x5000 });
+        let mut c = TraceBuilder::new();
+        c.push(TraceOp::Recv { ch: 0 });
+        c.compute(InstClass::IntAlu, 1000);
+        let rs = m.run(vec![p.build(), c.build()]);
+        // Consumer idled waiting for the producer.
+        assert!(rs.cores[1].idle_cycles > 0);
+        assert_eq!(rs.cores.len(), 2);
+    }
+
+    #[test]
+    fn bounded_channel_blocks_producer() {
+        let spec = MachineSpec {
+            channels: vec![ChannelSpec { producer: 0, consumer: 1, capacity: 1 }],
+            ..Default::default()
+        };
+        let mut m = hp_machine(spec);
+        let mut p = TraceBuilder::new();
+        for k in 0..4 {
+            p.push(TraceOp::Send { ch: 0, bytes: 64, addr: 0x5000 + k * 64 });
+        }
+        let mut c = TraceBuilder::new();
+        c.compute(InstClass::IntAlu, 500_000); // slow consumer
+        for _ in 0..4 {
+            c.push(TraceOp::Recv { ch: 0 });
+        }
+        let rs = m.run(vec![p.build(), c.build()]);
+        assert!(rs.cores[0].idle_cycles > 100_000, "{}", rs.cores[0].idle_cycles);
+    }
+
+    #[test]
+    fn mutex_serializes_cores() {
+        let spec = MachineSpec { mutexes: 1, ..Default::default() };
+        let mut m = hp_machine(spec);
+        let critical = |_: usize| {
+            let mut b = TraceBuilder::new();
+            b.push(TraceOp::MutexLock { id: 0 });
+            b.compute(InstClass::IntAlu, 100_000);
+            b.push(TraceOp::MutexUnlock { id: 0 });
+            b.build()
+        };
+        let rs = m.run(vec![critical(0), critical(1)]);
+        // Both critical sections serialized: ~200k cycles total.
+        let total_cycles = rs.roi_time_ps / SystemConfig::high_power().cycle_ps();
+        assert!(total_cycles > 195_000, "{total_cycles}");
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn recv_without_sender_deadlocks() {
+        let spec = MachineSpec {
+            channels: vec![ChannelSpec { producer: 0, consumer: 1, capacity: 1 }],
+            ..Default::default()
+        };
+        let mut m = hp_machine(spec);
+        let c = vec![TraceOp::Recv { ch: 0 }];
+        m.run(vec![Vec::new(), c]);
+    }
+
+    #[test]
+    fn roi_attribution_covers_time() {
+        let mut m = hp_machine(MachineSpec::default());
+        let mut b = TraceBuilder::new();
+        b.roi(RoiKind::DigitalMvm, |b| {
+            b.compute(InstClass::SimdOp, 10_000);
+        });
+        b.roi(RoiKind::Activation, |b| {
+            b.compute(InstClass::FpOp, 1_000);
+        });
+        let rs = m.run(vec![b.build()]);
+        assert!(rs.roi.fraction(RoiKind::DigitalMvm) > 0.7);
+        assert!(rs.roi.fraction(RoiKind::Activation) > 0.1);
+        let sum = rs.roi.total();
+        assert_eq!(sum, rs.roi_time_ps);
+    }
+}

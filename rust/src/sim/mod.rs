@@ -1,0 +1,19 @@
+//! The full-system timing simulator (the gem5-X substitute, DESIGN.md §2).
+//!
+//! Components mirror the paper's Table I platform: in-order cores
+//! (implicitly modeled by the instruction-class costs executed by
+//! `machine`), per-core L1 data caches, a shared LLC, the memory bus,
+//! DDR4 DRAM, AIMC tiles (tight ISA coupling or loose PIO coupling), and
+//! pthread-style synchronization. `machine::Machine` executes workload
+//! traces against all of these and emits `stats::RunStats`.
+
+pub mod aimc;
+pub mod bus;
+pub mod cache;
+pub mod dram;
+pub mod hierarchy;
+pub mod machine;
+pub mod sync;
+
+pub use aimc::{AimcTile, Coupling, Placement};
+pub use machine::{ChannelSpec, Machine, MachineSpec, TileSpec};

@@ -1,0 +1,180 @@
+//! gem5-style statistics collection.
+//!
+//! Every simulation run produces a `RunStats`: per-core cycle/instruction
+//! counters, cache hit/miss counters per level, DRAM access counts, AIMC
+//! tile counters, and the sub-ROI timing breakdown the paper uses in
+//! Figs. 8 and 11. `RunStats` is the single input to the energy model.
+
+pub mod roi;
+
+pub use roi::{RoiKind, RoiTimes};
+
+/// Per-core execution statistics.
+#[derive(Clone, Debug, Default)]
+pub struct CoreStats {
+    /// Committed (micro-)instructions.
+    pub insts: u64,
+    /// Cycles spent actively executing.
+    pub active_cycles: u64,
+    /// Cycles stalled waiting for memory (gem5-X "WFM").
+    pub wfm_cycles: u64,
+    /// Cycles idle (waiting on mutexes / channels / nothing scheduled).
+    pub idle_cycles: u64,
+}
+
+impl CoreStats {
+    pub fn total_cycles(&self) -> u64 {
+        self.active_cycles + self.wfm_cycles + self.idle_cycles
+    }
+
+    pub fn ipc(&self) -> f64 {
+        let t = self.total_cycles();
+        if t == 0 {
+            0.0
+        } else {
+            self.insts as f64 / t as f64
+        }
+    }
+
+    pub fn idle_fraction(&self) -> f64 {
+        let t = self.total_cycles();
+        if t == 0 {
+            0.0
+        } else {
+            self.idle_cycles as f64 / t as f64
+        }
+    }
+}
+
+/// Per-cache-level counters.
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    pub read_hits: u64,
+    pub read_misses: u64,
+    pub write_hits: u64,
+    pub write_misses: u64,
+    pub writebacks: u64,
+}
+
+impl CacheStats {
+    pub fn accesses(&self) -> u64 {
+        self.read_hits + self.read_misses + self.write_hits + self.write_misses
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.read_misses + self.write_misses
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        let a = self.accesses();
+        if a == 0 {
+            0.0
+        } else {
+            self.misses() as f64 / a as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.read_hits += other.read_hits;
+        self.read_misses += other.read_misses;
+        self.write_hits += other.write_hits;
+        self.write_misses += other.write_misses;
+        self.writebacks += other.writebacks;
+    }
+}
+
+/// AIMC tile usage counters (per run, summed over tiles).
+#[derive(Clone, Debug, Default)]
+pub struct AimcStats {
+    /// CM_PROCESS invocations.
+    pub processes: u64,
+    /// Bytes moved CPU -> tile input memory (CM_QUEUE).
+    pub queued_bytes: u64,
+    /// Bytes moved tile output memory -> CPU (CM_DEQUEUE).
+    pub dequeued_bytes: u64,
+    /// Devices programmed by CM_INITIALIZE (one-time, outside ROI).
+    pub programmed_weights: u64,
+    /// Sum over processes of (rows*cols) — for energy.
+    pub process_ops_weighted: f64,
+    /// Energy already accumulated for tile activity, joules.
+    pub energy_j: f64,
+}
+
+/// Whole-run statistics.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    /// Simulated wall-clock of the region of interest, picoseconds.
+    pub roi_time_ps: u64,
+    pub cores: Vec<CoreStats>,
+    pub l1d: CacheStats,
+    pub llc: CacheStats,
+    pub dram_accesses: u64,
+    pub llc_bytes_read: u64,
+    pub llc_bytes_written: u64,
+    pub aimc: AimcStats,
+    pub roi: RoiTimes,
+}
+
+impl RunStats {
+    pub fn new(num_cores: usize) -> RunStats {
+        RunStats {
+            cores: vec![CoreStats::default(); num_cores],
+            ..Default::default()
+        }
+    }
+
+    pub fn total_insts(&self) -> u64 {
+        self.cores.iter().map(|c| c.insts).sum()
+    }
+
+    /// The paper's memory-intensity metric: LLC misses per (k)instruction.
+    pub fn llc_mpki(&self) -> f64 {
+        let insts = self.total_insts();
+        if insts == 0 {
+            0.0
+        } else {
+            self.llc.misses() as f64 / (insts as f64 / 1000.0)
+        }
+    }
+
+    pub fn roi_time_s(&self) -> f64 {
+        self.roi_time_ps as f64 * 1e-12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ipc_and_idle() {
+        let c = CoreStats { insts: 800, active_cycles: 800, wfm_cycles: 100, idle_cycles: 100 };
+        assert!((c.ipc() - 0.8).abs() < 1e-12);
+        assert!((c.idle_fraction() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_cycles_no_nan() {
+        let c = CoreStats::default();
+        assert_eq!(c.ipc(), 0.0);
+        assert_eq!(c.idle_fraction(), 0.0);
+    }
+
+    #[test]
+    fn cache_stats_merge_and_rates() {
+        let mut a = CacheStats { read_hits: 90, read_misses: 10, ..Default::default() };
+        let b = CacheStats { write_hits: 45, write_misses: 5, writebacks: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.accesses(), 150);
+        assert_eq!(a.misses(), 15);
+        assert!((a.miss_rate() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mpki_definition() {
+        let mut rs = RunStats::new(1);
+        rs.cores[0].insts = 10_000;
+        rs.llc.read_misses = 50;
+        assert!((rs.llc_mpki() - 5.0).abs() < 1e-12);
+    }
+}

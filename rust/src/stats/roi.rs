@@ -1,0 +1,161 @@
+//! Sub-ROI (region of interest) timing attribution.
+//!
+//! The paper decomposes each inference into sub-ROIs — Fig. 8 (MLP):
+//! input load, analog queue, analog process, analog dequeue, digital
+//! activation, output writeback, digital MVM; Fig. 11 (LSTM) adds gate
+//! combination and dense-layer phases. Workload traces bracket their ops
+//! with `RoiBegin`/`RoiEnd` markers; the machine accumulates per-kind
+//! wall-clock here.
+
+/// Sub-ROI categories across all three explorations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RoiKind {
+    /// Loading initial inputs from memory.
+    InputLoad,
+    /// Packing + CM_QUEUE into tile input memory.
+    AnalogQueue,
+    /// CM_PROCESS (tile MVM).
+    AnalogProcess,
+    /// CM_DEQUEUE from tile output memory.
+    AnalogDequeue,
+    /// The digital MVM of the reference implementation.
+    DigitalMvm,
+    /// Digital activation functions (ReLU / sigmoid / tanh / softmax).
+    Activation,
+    /// LSTM gate element-wise combination (c/h updates).
+    GateCombine,
+    /// Storing outputs back to memory.
+    Writeback,
+    /// Core-to-core communication (pipelining channels).
+    Communication,
+    /// Mutex/barrier synchronization.
+    Sync,
+    /// Everything else.
+    Misc,
+}
+
+impl RoiKind {
+    pub const ALL: [RoiKind; 11] = [
+        RoiKind::InputLoad,
+        RoiKind::AnalogQueue,
+        RoiKind::AnalogProcess,
+        RoiKind::AnalogDequeue,
+        RoiKind::DigitalMvm,
+        RoiKind::Activation,
+        RoiKind::GateCombine,
+        RoiKind::Writeback,
+        RoiKind::Communication,
+        RoiKind::Sync,
+        RoiKind::Misc,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoiKind::InputLoad => "input_load",
+            RoiKind::AnalogQueue => "analog_queue",
+            RoiKind::AnalogProcess => "analog_process",
+            RoiKind::AnalogDequeue => "analog_dequeue",
+            RoiKind::DigitalMvm => "digital_mvm",
+            RoiKind::Activation => "activation",
+            RoiKind::GateCombine => "gate_combine",
+            RoiKind::Writeback => "writeback",
+            RoiKind::Communication => "communication",
+            RoiKind::Sync => "sync",
+            RoiKind::Misc => "misc",
+        }
+    }
+
+    fn index(&self) -> usize {
+        RoiKind::ALL.iter().position(|k| k == self).unwrap()
+    }
+}
+
+/// Accumulated picoseconds per sub-ROI (summed across cores: the paper's
+/// run-time-percentage figures normalize by the summed distribution).
+#[derive(Clone, Debug, Default)]
+pub struct RoiTimes {
+    ps: [u64; 11],
+}
+
+impl RoiTimes {
+    pub fn add(&mut self, kind: RoiKind, ps: u64) {
+        self.ps[kind.index()] += ps;
+    }
+
+    pub fn get(&self, kind: RoiKind) -> u64 {
+        self.ps[kind.index()]
+    }
+
+    pub fn total(&self) -> u64 {
+        self.ps.iter().sum()
+    }
+
+    /// Fraction of total attributed time spent in `kind` (0 if empty).
+    pub fn fraction(&self, kind: RoiKind) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            self.get(kind) as f64 / t as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &RoiTimes) {
+        for (a, b) in self.ps.iter_mut().zip(other.ps.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Non-zero entries as (kind, fraction), largest first.
+    pub fn breakdown(&self) -> Vec<(RoiKind, f64)> {
+        let mut v: Vec<(RoiKind, f64)> = RoiKind::ALL
+            .iter()
+            .filter(|k| self.get(**k) > 0)
+            .map(|k| (*k, self.fraction(*k)))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_fraction() {
+        let mut r = RoiTimes::default();
+        r.add(RoiKind::InputLoad, 300);
+        r.add(RoiKind::AnalogQueue, 700);
+        assert_eq!(r.total(), 1000);
+        assert!((r.fraction(RoiKind::AnalogQueue) - 0.7).abs() < 1e-12);
+        assert_eq!(r.fraction(RoiKind::Misc), 0.0);
+    }
+
+    #[test]
+    fn breakdown_sorted_desc() {
+        let mut r = RoiTimes::default();
+        r.add(RoiKind::Writeback, 10);
+        r.add(RoiKind::DigitalMvm, 90);
+        let b = r.breakdown();
+        assert_eq!(b[0].0, RoiKind::DigitalMvm);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = RoiTimes::default();
+        a.add(RoiKind::Sync, 5);
+        let mut b = RoiTimes::default();
+        b.add(RoiKind::Sync, 7);
+        a.merge(&b);
+        assert_eq!(a.get(RoiKind::Sync), 12);
+    }
+
+    #[test]
+    fn all_kinds_have_unique_names() {
+        let names: std::collections::HashSet<_> =
+            RoiKind::ALL.iter().map(|k| k.name()).collect();
+        assert_eq!(names.len(), RoiKind::ALL.len());
+    }
+}

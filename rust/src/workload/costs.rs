@@ -1,0 +1,155 @@
+//! Software cost models: instruction counts for the primitives the
+//! workload generators emit. This is the single calibration point of the
+//! digital baseline (Eigen + NEON, §VI.C) and the AIMClib software path.
+//!
+//! The counts are first-principles estimates of the inner loops Eigen and
+//! AIMClib generate on an in-order ARMv8 core, cross-checked against the
+//! paper's observed *ratios* (Fig. 7/10/13 speedups, Fig. 8/11 sub-ROI
+//! distributions). Anything tuned during calibration is marked CALIBRATED
+//! with its rationale. See EXPERIMENTS.md for paper-vs-measured.
+
+/// int8 MACs performed by one NEON SDOT-style instruction.
+pub const SIMD_MACS_PER_INST: u64 = 16;
+
+/// Bytes loaded per NEON load instruction.
+pub const SIMD_LOAD_BYTES: u64 = 16;
+
+/// Loop overhead (index update + compare + branch) amortized per
+/// iteration of a well-unrolled inner loop (Eigen unrolls by 4-8).
+pub const LOOP_OVERHEAD_PER_ITER_X1000: u64 = 750; // 0.75 inst/iter
+
+/// Instructions per element for fp32<->int8 convert+pack (AIMClib
+/// type-casting templates, §IV.C). On an in-order A53-class core the
+/// convert loop is only partially vectorizable (fcvtzs + saturating
+/// narrow + byte packing + bounds handling): ~5 insts/element.
+/// CALIBRATED against Fig. 8 and the Fig. 7 12.8x headline: keeps analog
+/// queue+dequeue at ~40-55% of the analog MLP ROI.
+pub const CAST_INSTS_PER_ELEM_X1000: u64 = 5000;
+
+/// Casting cost for `elems` elements.
+pub fn cast_insts(elems: u64) -> u64 {
+    elems * CAST_INSTS_PER_ELEM_X1000 / 1000 + 16
+}
+
+/// Instruction cost of one output element of the NEON int8 GEMV inner
+/// loop (dot product over `rows` inputs): per 16 weights one SDOT-class
+/// MAC with the paired load dual-issued, plus reduction/loop overhead.
+pub fn gemv_row_insts(rows: u64) -> GemvCost {
+    GemvCost {
+        simd_insts: rows / SIMD_MACS_PER_INST + 2,
+        alu_insts: rows / 64 + 2,
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct GemvCost {
+    pub simd_insts: u64,
+    pub alu_insts: u64,
+}
+
+/// Per-element instruction counts for the digital activation functions.
+/// Eigen vectorizes exp/tanh with NEON polynomial kernels (4-wide fp32:
+/// ~20 insts per 4 elements), so the effective per-element cost is a few
+/// instructions, not a scalar libm call. CALIBRATED jointly with the
+/// Fig. 11 shape (activations ~70% of the analog LSTM's dequeue+
+/// activation share).
+pub fn activation_insts_per_elem(kind: Activation) -> u64 {
+    match kind {
+        Activation::Relu => 1, // vectorized max
+        Activation::Sigmoid => 5,
+        Activation::Tanh => 6,
+        Activation::SoftmaxPerElem => 8, // exp + running sum + final div
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    Sigmoid,
+    Tanh,
+    SoftmaxPerElem,
+}
+
+/// pthread mutex lock/unlock instruction cost (uncontended fast path:
+/// ldaxr/stlxr pair + barriers; glibc ~40-80 insts round trip).
+pub const MUTEX_INSTS: u64 = 60;
+
+/// Ping-pong buffer send/recv bookkeeping (pointer swap, condvar
+/// signal + glibc bookkeeping — §VI.C). CALIBRATED together with
+/// CHANNEL_WAKE_PS: the pair reproduces the paper's multi-core MLP
+/// finding that Case 1 beats Cases 3/4 by ~20-30% (core-to-core
+/// communication becomes the bottleneck, §VII.C).
+pub const CHANNEL_INSTS: u64 = 2000;
+
+/// Consumer-side wake-up latency of a pthread condvar/futex hand-off
+/// (signal -> kernel -> scheduler -> resume), in core cycles — the
+/// syscall/scheduler path is instruction-bound, so it scales with the
+/// core clock (~4 us at 2.3 GHz, ~11 us at 0.8 GHz). CALIBRATED (see
+/// CHANNEL_INSTS).
+pub const CHANNEL_WAKE_CYCLES: u64 = 9_000;
+
+/// Per-CM_QUEUE/DEQUEUE beat: 4 int8 payload bytes per instruction
+/// (§IV.B: "packs 8-bit inputs into a 32-bit argument register").
+pub const CM_IO_BYTES_PER_INST: u64 = 4;
+
+/// Extra integer instructions around each CM_QUEUE beat (address/index
+/// update inside AIMClib's queueVector loop).
+pub const CM_IO_OVERHEAD_PER_INST_X1000: u64 = 500; // 0.5 inst/beat
+
+/// Stride-prefetcher depth: sequential streams overlap up to this many
+/// outstanding line fills (L2 prefetcher on gem5-X ARM configs). Misses
+/// beyond the first in a stream cost latency/PREFETCH_DEPTH.
+/// CALIBRATED: 20 puts the digital MLP's DRAM-bound phase near peak
+/// DDR4 bandwidth, matching the memory-bound behaviour gem5 reports for
+/// Eigen GEMV weight streams.
+pub const PREFETCH_DEPTH: u64 = 20;
+
+/// Number of rows processed per im2col row-block in the blocked GEMM of
+/// the digital CNN (Eigen's default mc panel for int8 on these caches).
+pub const GEMM_ROW_BLOCK: u64 = 64;
+
+/// Vectorized local-response-normalization cost per element (squares,
+/// 5-wide cross-map window running sum, rsqrt-based power approximation;
+/// NEON 4-wide fp32).
+pub const LRN_SIMD_PER_ELEM: u64 = 2;
+
+/// int8 MACs per instruction achieved by the *blocked im2col GEMM* of
+/// the digital convolutions. Lower than the GEMV path: patch rows are
+/// unaligned, the panel pack adds instructions, and the int8->int16
+/// widening MAC chain (SMLAL) sustains fewer MACs/cycle than a clean
+/// SDOT stream (Eigen further lacks a native int8 GEMM: the conv path
+/// computes in fp32 after widening, ~4 MACs/inst NEON minus pack
+/// overhead). CALIBRATED against the Fig. 13 CNN-S ~20x headline.
+pub const CONV_MACS_PER_INST: u64 = 3;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemv_cost_scales_with_rows() {
+        let small = gemv_row_insts(256);
+        let big = gemv_row_insts(1024);
+        assert!(big.simd_insts > 3 * small.simd_insts);
+        assert_eq!(small.simd_insts, 256 / 16 + 2);
+    }
+
+    #[test]
+    fn cast_cost_linear() {
+        assert!(cast_insts(1024) > 2 * cast_insts(500));
+        assert_eq!(cast_insts(1000), 5000 + 16);
+    }
+
+    #[test]
+    fn activations_ordered_by_complexity() {
+        use Activation::*;
+        assert!(activation_insts_per_elem(Relu) < activation_insts_per_elem(Sigmoid));
+        assert!(activation_insts_per_elem(Sigmoid) <= activation_insts_per_elem(Tanh));
+    }
+
+    #[test]
+    fn cm_io_packing_density() {
+        // Fig. 3: one 32-bit register carries 4 int8 inputs.
+        assert_eq!(CM_IO_BYTES_PER_INST, 4);
+    }
+}

@@ -1,0 +1,85 @@
+//! Workload generators: compile the paper's neural-network mappings
+//! (Fig. 6 MLP cases, Fig. 9 LSTM cases, Fig. 12 CNN pipeline) into
+//! per-core `TraceOp` streams plus the machine specification (tiles,
+//! mutexes, channels) they require.
+//!
+//! Address-space layout is synthetic but consistent: weights, inputs,
+//! activations, outputs and channel buffers live in disjoint regions so
+//! cache behaviour (thrashing vs. residency) emerges exactly as the
+//! paper's working-set analysis predicts.
+
+pub mod cnn;
+pub mod costs;
+pub mod lstm;
+pub mod mlp;
+pub mod trace;
+
+use crate::sim::machine::MachineSpec;
+use trace::TraceOp;
+
+/// A fully-generated workload, ready for `sim::Machine::run`.
+pub struct Workload {
+    pub label: String,
+    pub traces: Vec<Vec<TraceOp>>,
+    pub spec: MachineSpec,
+    /// Number of inferences in the region of interest.
+    pub inferences: u32,
+}
+
+impl Workload {
+    pub fn cores_used(&self) -> usize {
+        self.traces.iter().filter(|t| !t.is_empty()).count()
+    }
+
+    pub fn total_ops(&self) -> usize {
+        self.traces.iter().map(|t| t.len()).sum()
+    }
+}
+
+/// Synthetic address map (bases chosen to never alias within a run).
+pub mod addr {
+    pub const WEIGHTS: u64 = 0x1000_0000;
+    pub const WEIGHTS_STRIDE: u64 = 0x0400_0000; // per layer
+    pub const INPUTS: u64 = 0x8000_0000;
+    pub const ACTIVATIONS: u64 = 0x9000_0000;
+    pub const OUTPUTS: u64 = 0xA000_0000;
+    pub const CHANNELS: u64 = 0xB000_0000;
+    pub const CHANNEL_STRIDE: u64 = 0x0010_0000;
+
+    pub fn weights(layer: usize) -> u64 {
+        WEIGHTS + layer as u64 * WEIGHTS_STRIDE
+    }
+
+    pub fn input(inference: u32, bytes_per: u64) -> u64 {
+        INPUTS + inference as u64 * bytes_per.next_multiple_of(64)
+    }
+
+    pub fn output(inference: u32, bytes_per: u64) -> u64 {
+        OUTPUTS + inference as u64 * bytes_per.next_multiple_of(64)
+    }
+
+    pub fn channel(ch: usize, slot: u32) -> u64 {
+        CHANNELS + ch as u64 * CHANNEL_STRIDE + (slot % 2) as u64 * 0x8000
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn address_regions_disjoint() {
+        assert!(addr::weights(3) < addr::INPUTS);
+        assert!(addr::input(1000, 1024) < addr::ACTIVATIONS);
+        assert!(addr::output(1000, 1024) < addr::CHANNELS);
+    }
+
+    #[test]
+    fn channel_slots_pingpong() {
+        let a = addr::channel(0, 0);
+        let b = addr::channel(0, 1);
+        let c = addr::channel(0, 2);
+        assert_ne!(a, b);
+        assert_eq!(a, c);
+    }
+}

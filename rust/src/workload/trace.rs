@@ -1,0 +1,127 @@
+//! The trace IR: the interface between workload generators and the
+//! trace machine.
+//!
+//! A workload is one `Vec<TraceOp>` per core. Ops are either *local*
+//! (compute bursts, memory streams) or *interacting* (AIMC tile ops,
+//! mutexes, channels). Memory is line-granular: `MemStream` walks cache
+//! lines through the full hierarchy, so cache behaviour (and therefore
+//! LLCMPI and DRAM energy) emerges from the actual access pattern rather
+//! than analytic formulas.
+
+use crate::isa::InstClass;
+use crate::sim::aimc::Placement;
+use crate::stats::RoiKind;
+
+#[derive(Clone, Copy, Debug)]
+pub enum TraceOp {
+    /// Execute `insts` instructions of `class` back to back.
+    Compute { class: InstClass, insts: u64 },
+
+    /// Stream `bytes` from `base`, touching every cache line once.
+    /// `insts_per_line` models the loads/stores issued per line (e.g. 4
+    /// NEON 16-byte loads). `prefetchable` streams hide miss latency up
+    /// to the stride prefetcher's depth; random/pointer-chasing accesses
+    /// do not.
+    MemStream {
+        base: u64,
+        bytes: u64,
+        write: bool,
+        insts_per_line: u64,
+        prefetchable: bool,
+    },
+
+    /// CM_INITIALIZE: program a matrix region onto a tile (one-time).
+    CmInit { tile: usize, placement: Placement },
+
+    /// CM_QUEUE `bytes` into the tile's input memory (4 B / instruction).
+    CmQueue { tile: usize, bytes: u64 },
+
+    /// CM_PROCESS: fire the MVM; the core blocks until the tile is done.
+    CmProcess { tile: usize },
+
+    /// CM_DEQUEUE `bytes` from the tile's output memory.
+    CmDequeue { tile: usize, bytes: u64 },
+
+    /// pthread mutex lock/unlock.
+    MutexLock { id: usize },
+    MutexUnlock { id: usize },
+
+    /// Ping-pong channel send: publish `bytes` at `addr` to the consumer.
+    /// Blocks while the bounded buffer is full.
+    Send { ch: usize, bytes: u64, addr: u64 },
+
+    /// Ping-pong channel receive: blocks until a message is ready, then
+    /// pulls its lines through the coherent-transfer path.
+    Recv { ch: usize },
+
+    /// Sub-ROI attribution markers (nestable).
+    RoiPush { kind: RoiKind },
+    RoiPop,
+}
+
+/// Builder helper so generators read naturally.
+#[derive(Clone, Debug, Default)]
+pub struct TraceBuilder {
+    pub ops: Vec<TraceOp>,
+}
+
+impl TraceBuilder {
+    pub fn new() -> TraceBuilder {
+        TraceBuilder::default()
+    }
+
+    pub fn push(&mut self, op: TraceOp) -> &mut Self {
+        self.ops.push(op);
+        self
+    }
+
+    pub fn compute(&mut self, class: InstClass, insts: u64) -> &mut Self {
+        if insts > 0 {
+            self.push(TraceOp::Compute { class, insts });
+        }
+        self
+    }
+
+    pub fn stream_read(&mut self, base: u64, bytes: u64, insts_per_line: u64) -> &mut Self {
+        self.push(TraceOp::MemStream { base, bytes, write: false, insts_per_line, prefetchable: true })
+    }
+
+    pub fn stream_write(&mut self, base: u64, bytes: u64, insts_per_line: u64) -> &mut Self {
+        self.push(TraceOp::MemStream { base, bytes, write: true, insts_per_line, prefetchable: true })
+    }
+
+    pub fn roi(&mut self, kind: RoiKind, f: impl FnOnce(&mut TraceBuilder)) -> &mut Self {
+        self.push(TraceOp::RoiPush { kind });
+        f(self);
+        self.push(TraceOp::RoiPop);
+        self
+    }
+
+    pub fn build(self) -> Vec<TraceOp> {
+        self.ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_skips_zero_compute() {
+        let mut b = TraceBuilder::new();
+        b.compute(InstClass::IntAlu, 0);
+        b.compute(InstClass::IntAlu, 5);
+        assert_eq!(b.ops.len(), 1);
+    }
+
+    #[test]
+    fn roi_brackets() {
+        let mut b = TraceBuilder::new();
+        b.roi(RoiKind::InputLoad, |b| {
+            b.stream_read(0, 64, 4);
+        });
+        assert!(matches!(b.ops[0], TraceOp::RoiPush { kind: RoiKind::InputLoad }));
+        assert!(matches!(b.ops[2], TraceOp::RoiPop));
+        assert_eq!(b.ops.len(), 3);
+    }
+}

