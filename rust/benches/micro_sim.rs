@@ -1,39 +1,96 @@
 //! Micro-benchmarks of the simulator substrate itself (the §Perf hot
-//! paths): cache lookups, DRAM channel accounting, trace-machine
-//! streaming throughput, AIMClib functional MVM.
+//! paths): cache lookups, trace-machine streaming throughput on both the
+//! batched fast path and the per-line reference path, and the AIMClib
+//! functional MVM. Results land in `BENCH_sim.json` (name -> mean/min
+//! ns) so the perf trajectory is trackable across PRs.
 
 use alpine::aimclib::checker::{self, Matrix};
 use alpine::config::SystemConfig;
 use alpine::sim::cache::{Access, Cache};
 use alpine::sim::machine::{Machine, MachineSpec};
-use alpine::util::benchkit::{bench, black_box};
+use alpine::util::benchkit::{bench, black_box, json_report};
 use alpine::util::rng::Rng;
 use alpine::workload::trace::TraceBuilder;
 
+/// The 64 MiB cold-stream trace: 16 x 4 MiB regions, all L1/LLC misses.
+fn stream_64mb_trace() -> Vec<alpine::workload::trace::TraceOp> {
+    let mut b = TraceBuilder::new();
+    for k in 0..16u64 {
+        b.stream_read(0x1000_0000 + k * 0x40_0000, 4 * 1024 * 1024, 1);
+    }
+    b.build()
+}
+
+/// An L1-resident re-streaming trace: warm 16 KiB once, re-read it 256x.
+fn stream_hits_trace() -> Vec<alpine::workload::trace::TraceOp> {
+    let mut b = TraceBuilder::new();
+    for _ in 0..257 {
+        b.stream_read(0x2000_0000, 16 * 1024, 1);
+    }
+    b.build()
+}
+
 fn main() {
+    let mut results = Vec::new();
+
     // Cache lookup throughput (hit-heavy).
     let cfg = SystemConfig::high_power();
     let mut cache = Cache::new(cfg.l1d);
     for addr in (0..32 * 1024).step_by(64) {
         cache.access(addr, Access::Read);
     }
-    bench("cache/l1_hits_1M", 10, || {
+    results.push(bench("cache/l1_hits_1M", 10, || {
         for _ in 0..4 {
             for addr in (0..16 * 1024 * 16).step_by(64) {
                 black_box(cache.access(black_box(addr % (32 * 1024)), Access::Read));
             }
         }
-    });
+    }));
 
-    // Miss-heavy streaming through the full hierarchy via the machine.
-    bench("machine/stream_64MB_lines", 5, || {
+    // Miss-heavy streaming through the full hierarchy via the machine:
+    // batched bulk path (default) vs the per-line reference loop. The
+    // two produce bit-identical RunStats (asserted below); the ratio is
+    // the PR's headline fast-path speedup.
+    let trace = stream_64mb_trace();
+    let run_stream = |batched: bool, trace: &[alpine::workload::trace::TraceOp]| {
         let mut m = Machine::new(SystemConfig::high_power(), MachineSpec::default());
-        let mut b = TraceBuilder::new();
-        for k in 0..16u64 {
-            b.stream_read(0x1000_0000 + k * 0x40_0000, 4 * 1024 * 1024, 1);
-        }
-        black_box(m.run(vec![b.build()]));
+        m.set_batched_streams(batched);
+        m.run(vec![trace.to_vec()])
+    };
+    let fast = run_stream(true, &trace);
+    let reference = run_stream(false, &trace);
+    assert_eq!(fast.roi_time_ps, reference.roi_time_ps, "paths must agree");
+    assert_eq!(fast.dram_accesses, reference.dram_accesses, "paths must agree");
+
+    let batched = bench("machine/stream_64MB_lines", 5, || {
+        black_box(run_stream(true, &trace));
     });
+    let per_line = bench("machine/stream_64MB_lines_perline", 5, || {
+        black_box(run_stream(false, &trace));
+    });
+    println!(
+        "machine/stream_64MB_lines: batched vs per-line speedup {:.2}x (mean), {:.2}x (min)",
+        per_line.mean_ns / batched.mean_ns,
+        per_line.min_ns / batched.min_ns,
+    );
+    results.push(batched);
+    results.push(per_line);
+
+    // Hit-heavy streaming (L1-resident working set): the bulk walk's
+    // early-out case.
+    let hits_trace = stream_hits_trace();
+    let batched_hits = bench("machine/stream_l1_resident_hits", 5, || {
+        black_box(run_stream(true, &hits_trace));
+    });
+    let per_line_hits = bench("machine/stream_l1_resident_hits_perline", 5, || {
+        black_box(run_stream(false, &hits_trace));
+    });
+    println!(
+        "machine/stream_l1_resident_hits: batched vs per-line speedup {:.2}x (mean)",
+        per_line_hits.mean_ns / batched_hits.mean_ns,
+    );
+    results.push(batched_hits);
+    results.push(per_line_hits);
 
     // AIMClib functional MVM (the checker used in e2e validation).
     let mut rng = Rng::new(1);
@@ -47,7 +104,9 @@ fn main() {
         tile_rows: 256,
         tile_cols: 256,
     };
-    bench("aimclib/checker_mvm_1024x1024", 10, || {
+    results.push(bench("aimclib/checker_mvm_1024x1024", 10, || {
         black_box(checker::aimc_mvm(&x, &w_q, &spec));
-    });
+    }));
+
+    json_report(&results, "BENCH_sim.json").expect("writing BENCH_sim.json");
 }

@@ -15,17 +15,33 @@ pub mod activation;
 pub mod checker;
 
 use checker::{AimcSpec, Matrix};
-use thiserror::Error;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum AimclibError {
-    #[error("matrix ({rows}x{cols}) at ({x},{y}) exceeds crossbar ({xb_rows}x{xb_cols})")]
     DoesNotFit { x: usize, y: usize, rows: usize, cols: usize, xb_rows: usize, xb_cols: usize },
-    #[error("queue length {0} exceeds input memory {1}")]
     QueueOverflow(usize, usize),
-    #[error("dequeue length {0} exceeds output memory {1}")]
     DequeueOverflow(usize, usize),
 }
+
+// Manual Display/Error impls: thiserror is not in the offline vendor set.
+impl std::fmt::Display for AimclibError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AimclibError::DoesNotFit { x, y, rows, cols, xb_rows, xb_cols } => write!(
+                f,
+                "matrix ({rows}x{cols}) at ({x},{y}) exceeds crossbar ({xb_rows}x{xb_cols})"
+            ),
+            AimclibError::QueueOverflow(len, cap) => {
+                write!(f, "queue length {len} exceeds input memory {cap}")
+            }
+            AimclibError::DequeueOverflow(len, cap) => {
+                write!(f, "dequeue length {len} exceeds output memory {cap}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AimclibError {}
 
 /// A functional AIMC device: crossbar conductances + I/O memories.
 pub struct AimcDevice {

@@ -1,9 +1,16 @@
 //! The paper's evaluation sweeps — one function per figure/table.
-//! Each returns the raw `CaseResult` rows; `report` renders them as the
+//!
+//! Every sweep is a flat list of independent [`SweepCase`] descriptors
+//! (workload x system, as pure data) dispatched across the machine's
+//! cores by `util::parallel`; each worker generates its workload locally
+//! and simulates it on a self-contained `Machine`. Rows come back in the
+//! exact serial order and are bit-identical to a serial run (see the
+//! determinism test at the bottom). `report` renders the rows as the
 //! tables/series underlying the paper's bar charts.
 
 use crate::config::{SystemConfig, SystemKind};
 use crate::nn::CnnVariant;
+use crate::util::parallel;
 use crate::workload::cnn::{self, CnnCase};
 use crate::workload::lstm::{self, LstmCase};
 use crate::workload::mlp::{self, MlpCase};
@@ -37,31 +44,93 @@ pub const LSTM_CASES: [LstmCase; 7] = [
 
 pub const LSTM_SIZES: [u64; 3] = [256, 512, 750];
 
-/// Fig. 7: all MLP cases on both systems.
-pub fn fig7_mlp(n_inf: u32) -> Vec<CaseResult> {
+/// One independent case of a figure/table sweep, as plain data so the
+/// worker pool can generate + simulate it without sharing any state.
+#[derive(Clone, Copy, Debug)]
+pub enum SweepCase {
+    Mlp { kind: SystemKind, case: MlpCase },
+    Lstm { kind: SystemKind, case: LstmCase, n_h: u64 },
+    Cnn { kind: SystemKind, case: CnnCase, variant: CnnVariant },
+}
+
+/// Generate and simulate one sweep case (runs inside a worker).
+pub fn run_case(case: SweepCase, n_inf: u32) -> CaseResult {
+    match case {
+        SweepCase::Mlp { kind, case } => {
+            let cfg = SystemConfig::for_kind(kind);
+            run_workload(kind, mlp::generate(case, &cfg, n_inf))
+        }
+        SweepCase::Lstm { kind, case, n_h } => {
+            let cfg = SystemConfig::for_kind(kind);
+            run_workload(kind, lstm::generate(case, n_h, &cfg, n_inf))
+        }
+        SweepCase::Cnn { kind, case, variant } => {
+            let cfg = SystemConfig::for_kind(kind);
+            run_workload(kind, cnn::generate(case, variant, &cfg, n_inf))
+        }
+    }
+}
+
+/// Run a sweep on `jobs` workers. Rows are returned in `cases` order;
+/// with `jobs == 1` this is exactly the serial loop the figures used to
+/// run (and any `jobs` produces bit-identical rows — each case is an
+/// isolated deterministic simulation).
+pub fn run_cases(cases: &[SweepCase], n_inf: u32, jobs: usize) -> Vec<CaseResult> {
+    parallel::parallel_map(cases.to_vec(), jobs, |c| run_case(c, n_inf))
+}
+
+fn run_sweep(cases: Vec<SweepCase>, n_inf: u32) -> Vec<CaseResult> {
+    run_cases(&cases, n_inf, parallel::jobs())
+}
+
+/// Fig. 7 case list: all MLP cases on both systems.
+pub fn fig7_cases() -> Vec<SweepCase> {
     let mut out = Vec::new();
     for kind in SystemKind::ALL {
-        let cfg = SystemConfig::for_kind(kind);
         for case in MLP_CASES {
-            out.push(run_workload(kind, mlp::generate(case, &cfg, n_inf)));
+            out.push(SweepCase::Mlp { kind, case });
         }
     }
     out
 }
 
-/// Fig. 8: sub-ROI breakdown for the MLP reference + analog cases 1/3/4
+/// Fig. 7: all MLP cases on both systems.
+pub fn fig7_mlp(n_inf: u32) -> Vec<CaseResult> {
+    run_sweep(fig7_cases(), n_inf)
+}
+
+/// Fig. 8 case list: MLP reference + analog cases 1/3/4 on both systems
 /// (case 2's distribution matches case 1, as the paper notes).
-pub fn fig8_mlp_breakdown(n_inf: u32) -> Vec<CaseResult> {
+pub fn fig8_cases() -> Vec<SweepCase> {
     let mut out = Vec::new();
     for kind in SystemKind::ALL {
-        let cfg = SystemConfig::for_kind(kind);
         for case in [
             MlpCase::Digital { cores: 1 },
             MlpCase::Analog { case: 1 },
             MlpCase::Analog { case: 3 },
             MlpCase::Analog { case: 4 },
         ] {
-            out.push(run_workload(kind, mlp::generate(case, &cfg, n_inf)));
+            out.push(SweepCase::Mlp { kind, case });
+        }
+    }
+    out
+}
+
+/// Fig. 8: sub-ROI breakdown for the MLP reference + analog cases 1/3/4.
+pub fn fig8_mlp_breakdown(n_inf: u32) -> Vec<CaseResult> {
+    run_sweep(fig8_cases(), n_inf)
+}
+
+/// §VII.B case list: loose vs tight vs digital single-core.
+pub fn loose_vs_tight_cases() -> Vec<SweepCase> {
+    let mut out = Vec::new();
+    for kind in SystemKind::ALL {
+        for case in [
+            MlpCase::Digital { cores: 1 },
+            MlpCase::Analog { case: 1 },
+            MlpCase::AnalogLoose,
+        ] {
+            out.push(SweepCase::Mlp { kind, case });
         }
     }
     out
@@ -69,15 +138,17 @@ pub fn fig8_mlp_breakdown(n_inf: u32) -> Vec<CaseResult> {
 
 /// §VII.B: loosely-coupled vs tightly-coupled vs digital single-core.
 pub fn loose_vs_tight(n_inf: u32) -> Vec<CaseResult> {
+    run_sweep(loose_vs_tight_cases(), n_inf)
+}
+
+/// Fig. 10 case list: all LSTM cases x sizes x systems (42 runs).
+pub fn fig10_cases() -> Vec<SweepCase> {
     let mut out = Vec::new();
     for kind in SystemKind::ALL {
-        let cfg = SystemConfig::for_kind(kind);
-        for case in [
-            MlpCase::Digital { cores: 1 },
-            MlpCase::Analog { case: 1 },
-            MlpCase::AnalogLoose,
-        ] {
-            out.push(run_workload(kind, mlp::generate(case, &cfg, n_inf)));
+        for n_h in LSTM_SIZES {
+            for case in LSTM_CASES {
+                out.push(SweepCase::Lstm { kind, case, n_h });
+            }
         }
     }
     out
@@ -85,21 +156,11 @@ pub fn loose_vs_tight(n_inf: u32) -> Vec<CaseResult> {
 
 /// Fig. 10: all LSTM cases x sizes x systems.
 pub fn fig10_lstm(n_inf: u32) -> Vec<CaseResult> {
-    let mut out = Vec::new();
-    for kind in SystemKind::ALL {
-        let cfg = SystemConfig::for_kind(kind);
-        for n_h in LSTM_SIZES {
-            for case in LSTM_CASES {
-                out.push(run_workload(kind, lstm::generate(case, n_h, &cfg, n_inf)));
-            }
-        }
-    }
-    out
+    run_sweep(fig10_cases(), n_inf)
 }
 
-/// Fig. 11: LSTM analog sub-ROI breakdown (high-power, all sizes).
-pub fn fig11_lstm_breakdown(n_inf: u32) -> Vec<CaseResult> {
-    let cfg = SystemConfig::high_power();
+/// Fig. 11 case list: LSTM analog sub-ROI breakdown (high-power).
+pub fn fig11_cases() -> Vec<SweepCase> {
     let mut out = Vec::new();
     for n_h in LSTM_SIZES {
         for case in [
@@ -108,10 +169,25 @@ pub fn fig11_lstm_breakdown(n_inf: u32) -> Vec<CaseResult> {
             LstmCase::Analog { case: 3 },
             LstmCase::Analog { case: 4 },
         ] {
-            out.push(run_workload(
-                SystemKind::HighPower,
-                lstm::generate(case, n_h, &cfg, n_inf),
-            ));
+            out.push(SweepCase::Lstm { kind: SystemKind::HighPower, case, n_h });
+        }
+    }
+    out
+}
+
+/// Fig. 11: LSTM analog sub-ROI breakdown (high-power, all sizes).
+pub fn fig11_lstm_breakdown(n_inf: u32) -> Vec<CaseResult> {
+    run_sweep(fig11_cases(), n_inf)
+}
+
+/// Fig. 13 case list: CNN F/M/S, digital vs analog, both systems.
+pub fn fig13_cases() -> Vec<SweepCase> {
+    let mut out = Vec::new();
+    for kind in SystemKind::ALL {
+        for variant in CnnVariant::ALL {
+            for case in [CnnCase::Digital, CnnCase::Analog] {
+                out.push(SweepCase::Cnn { kind, case, variant });
+            }
         }
     }
     out
@@ -119,31 +195,24 @@ pub fn fig11_lstm_breakdown(n_inf: u32) -> Vec<CaseResult> {
 
 /// Fig. 13: CNN F/M/S, digital vs analog, both systems.
 pub fn fig13_cnn(n_inf: u32) -> Vec<CaseResult> {
-    let mut out = Vec::new();
-    for kind in SystemKind::ALL {
-        let cfg = SystemConfig::for_kind(kind);
-        for variant in CnnVariant::ALL {
-            for case in [CnnCase::Digital, CnnCase::Analog] {
-                out.push(run_workload(kind, cnn::generate(case, variant, &cfg, n_inf)));
-            }
-        }
-    }
-    out
+    run_sweep(fig13_cases(), n_inf)
+}
+
+/// Fig. 14 case list: CNN-S utilization pair on the high-power system.
+pub fn fig14_cases() -> Vec<SweepCase> {
+    [CnnCase::Digital, CnnCase::Analog]
+        .into_iter()
+        .map(|case| SweepCase::Cnn {
+            kind: SystemKind::HighPower,
+            case,
+            variant: CnnVariant::Slow,
+        })
+        .collect()
 }
 
 /// Fig. 14: CNN-S per-core utilization on the high-power system.
 pub fn fig14_cnn_utilization(n_inf: u32) -> Vec<CaseResult> {
-    let cfg = SystemConfig::high_power();
-    vec![
-        run_workload(
-            SystemKind::HighPower,
-            cnn::generate(CnnCase::Digital, CnnVariant::Slow, &cfg, n_inf),
-        ),
-        run_workload(
-            SystemKind::HighPower,
-            cnn::generate(CnnCase::Analog, CnnVariant::Slow, &cfg, n_inf),
-        ),
-    ]
+    run_sweep(fig14_cases(), n_inf)
 }
 
 #[cfg(test)]
@@ -169,5 +238,60 @@ mod tests {
         let loose = hp.iter().find(|r| r.label.contains("loose")).unwrap();
         assert!(tight.time_s < loose.time_s, "tight faster than loose");
         assert!(loose.time_s < dig.time_s, "loose faster than digital");
+    }
+
+    #[test]
+    fn all_case_lists_nonempty_and_sized() {
+        assert_eq!(fig7_cases().len(), 14);
+        assert_eq!(fig8_cases().len(), 8);
+        assert_eq!(loose_vs_tight_cases().len(), 6);
+        assert_eq!(fig10_cases().len(), 42);
+        assert_eq!(fig11_cases().len(), 12);
+        assert_eq!(fig13_cases().len(), 12);
+        assert_eq!(fig14_cases().len(), 2);
+    }
+
+    /// The acceptance-criterion determinism check: rows from the parallel
+    /// runner must be byte-for-byte identical to a forced serial run —
+    /// labels, times, energy, and every per-core statistic.
+    #[test]
+    fn fig7_parallel_rows_identical_to_serial() {
+        let cases = fig7_cases();
+        let serial = run_cases(&cases, 1, 1);
+        let parallel = run_cases(&cases, 1, 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.system, b.system);
+            assert_eq!(a.inferences, b.inferences);
+            assert_eq!(a.time_s.to_bits(), b.time_s.to_bits(), "{}", a.label);
+            assert_eq!(
+                a.time_per_inference_s.to_bits(),
+                b.time_per_inference_s.to_bits()
+            );
+            assert_eq!(a.llc_mpki.to_bits(), b.llc_mpki.to_bits());
+            assert_eq!(
+                a.energy.total_j().to_bits(),
+                b.energy.total_j().to_bits(),
+                "{}",
+                a.label
+            );
+            assert_eq!(a.total_insts, b.total_insts);
+            assert_eq!(a.dram_accesses, b.dram_accesses);
+            assert_eq!(a.aimc_processes, b.aimc_processes);
+            assert_eq!(a.per_core_ipc.len(), b.per_core_ipc.len());
+            for (x, y) in a.per_core_ipc.iter().zip(&b.per_core_ipc) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in a.per_core_idle.iter().zip(&b.per_core_idle) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in a.per_core_wfm.iter().zip(&b.per_core_wfm) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for kind in crate::stats::RoiKind::ALL {
+                assert_eq!(a.roi.get(kind), b.roi.get(kind));
+            }
+        }
     }
 }

@@ -37,17 +37,22 @@ impl CaseResult {
 }
 
 /// Simulate one workload on one system configuration.
+///
+/// The workload is consumed in place: spec and traces move straight
+/// into the machine (the spec clone + trace copy this used to make cost
+/// a full trace duplication per case on the multi-megaop CNN sweeps).
 pub fn run_workload(kind: SystemKind, workload: Workload) -> CaseResult {
+    let Workload { label, traces, spec, inferences } = workload;
     let cfg = SystemConfig::for_kind(kind);
-    let mut machine = Machine::new(cfg.clone(), workload.spec.clone());
-    let stats: RunStats = machine.run(workload.traces);
+    let mut machine = Machine::new(cfg.clone(), spec);
+    let stats: RunStats = machine.run(traces);
     let energy = energy::compute(&cfg, &stats);
     CaseResult {
-        label: workload.label,
+        label,
         system: kind,
-        inferences: workload.inferences,
+        inferences,
         time_s: stats.roi_time_s(),
-        time_per_inference_s: stats.roi_time_s() / workload.inferences.max(1) as f64,
+        time_per_inference_s: stats.roi_time_s() / inferences.max(1) as f64,
         llc_mpki: stats.llc_mpki(),
         energy,
         total_insts: stats.total_insts(),

@@ -51,13 +51,23 @@ pub struct CmInstruction {
     pub rd: u8,
 }
 
-#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum DecodeError {
-    #[error("unknown CM opcode {0:#05x}")]
     UnknownOpcode(u16),
-    #[error("register field out of range")]
     BadRegister,
 }
+
+// Manual Display/Error impls: thiserror is not in the offline vendor set.
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::UnknownOpcode(op) => write!(f, "unknown CM opcode {op:#05x}"),
+            DecodeError::BadRegister => write!(f, "register field out of range"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 /// Encode to the 32-bit instruction word.
 pub fn encode(inst: &CmInstruction) -> u32 {

@@ -14,6 +14,7 @@ use alpine::coordinator::{experiments, run_workload};
 use alpine::nn::CnnVariant;
 use alpine::report;
 use alpine::runtime::{default_artifacts_dir, Runtime};
+use alpine::util::parallel;
 use alpine::util::table::Table;
 use alpine::workload::cnn::{self, CnnCase};
 use alpine::workload::lstm::{self, LstmCase};
@@ -42,6 +43,24 @@ fn opt_u32(args: &[String], name: &str, default: u32) -> Result<u32> {
 }
 
 fn dispatch(args: &[String]) -> Result<()> {
+    // Global sweep-parallelism knob: `--jobs N` (or the ALPINE_JOBS env
+    // var; default: all cores). Row order/content is identical at any N.
+    // The pair is stripped so the flag works in any position, including
+    // before the subcommand.
+    let mut args: Vec<String> = args.to_vec();
+    while let Some(i) = args.iter().position(|a| a == "--jobs") {
+        // Strip every occurrence; the last one wins, as is conventional.
+        let n: usize = args
+            .get(i + 1)
+            .context("--jobs expects a number >= 1")?
+            .parse()
+            .context("--jobs expects a number >= 1")?;
+        if n == 0 {
+            bail!("--jobs expects a number >= 1");
+        }
+        parallel::set_jobs(n);
+        args.drain(i..=i + 1);
+    }
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "list-configs" => list_configs(),
@@ -113,6 +132,11 @@ fn print_help() {
          \x20     [--nh 256|512|750] [--variant f|m|s] [--inferences N]\n\
          \x20 fig7|fig8|fig10|fig11|fig13|fig14|loose   regenerate a figure\n\
          \x20 validate                 PJRT probe-check all AOT artifacts\n\
+         \n\
+         options:\n\
+         \x20 --jobs N                 sweep worker threads (default: all\n\
+         \x20                          cores; ALPINE_JOBS env also works).\n\
+         \x20                          Rows are identical at any N.\n\
          \n\
          case syntax: dig1 dig2 dig4 dig5 ana1 ana2 ana3 ana4 loose (per workload)"
     );

@@ -45,17 +45,35 @@ impl Placement {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum AimcError {
-    #[error("placement {0:?} exceeds crossbar {1}x{2}")]
     OutOfBounds(Placement, u32, u32),
-    #[error("placement {0:?} overlaps existing matrix {1:?}")]
     Overlap(Placement, Placement),
-    #[error("queue of {0} bytes exceeds input memory of {1} bytes")]
     InputOverflow(u64, u64),
-    #[error("dequeue of {0} bytes exceeds output memory of {1} bytes")]
     OutputOverflow(u64, u64),
 }
+
+// Manual Display/Error impls: thiserror is not in the offline vendor set.
+impl std::fmt::Display for AimcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AimcError::OutOfBounds(p, rows, cols) => {
+                write!(f, "placement {p:?} exceeds crossbar {rows}x{cols}")
+            }
+            AimcError::Overlap(p, q) => {
+                write!(f, "placement {p:?} overlaps existing matrix {q:?}")
+            }
+            AimcError::InputOverflow(bytes, cap) => {
+                write!(f, "queue of {bytes} bytes exceeds input memory of {cap} bytes")
+            }
+            AimcError::OutputOverflow(bytes, cap) => {
+                write!(f, "dequeue of {bytes} bytes exceeds output memory of {cap} bytes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AimcError {}
 
 /// The device: geometry, placements, busy-until reservation, counters.
 #[derive(Clone, Debug)]

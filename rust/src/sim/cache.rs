@@ -32,6 +32,16 @@ pub struct LookupResult {
     pub writeback: bool,
 }
 
+/// Result of one step of a bulk sequential walk ([`Cache::stream_run`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamRun {
+    /// Consecutive leading lines that hit (LRU + stats already updated).
+    pub hits: u64,
+    /// `Some(dirty_victim_evicted)` if the walk stopped at a miss (the
+    /// missing line is already allocated); `None` if every line hit.
+    pub miss_writeback: Option<bool>,
+}
+
 pub struct Cache {
     geom: CacheGeometry,
     /// Flat line array, `assoc` consecutive entries per set (§Perf: the
@@ -40,6 +50,9 @@ pub struct Cache {
     lines: Vec<Line>,
     set_mask: usize,
     assoc: usize,
+    /// log2(line_bytes): addr-to-line is a shift, not a u64 division
+    /// (§Perf: the division showed up on every access of every level).
+    line_shift: u32,
     stamp: u64,
     pub stats: CacheStats,
 }
@@ -48,6 +61,7 @@ impl Cache {
     pub fn new(geom: CacheGeometry) -> Cache {
         let n_sets = geom.sets() as usize;
         assert!(n_sets.is_power_of_two(), "sets must be a power of two");
+        assert!(geom.line_bytes.is_power_of_two(), "line size must be a power of two");
         Cache {
             geom,
             lines: vec![
@@ -56,6 +70,7 @@ impl Cache {
             ],
             set_mask: n_sets - 1,
             assoc: geom.assoc as usize,
+            line_shift: geom.line_bytes.trailing_zeros(),
             stamp: 0,
             stats: CacheStats::default(),
         }
@@ -67,9 +82,57 @@ impl Cache {
 
     #[inline]
     fn set_range_tag(&self, addr: u64) -> (usize, u64) {
-        let line = addr / self.geom.line_bytes;
+        let line = addr >> self.line_shift;
         let idx = (line as usize) & self.set_mask;
         (idx * self.assoc, line)
+    }
+
+    /// One pass over a set: the way holding `tag`, or the victim way
+    /// (first invalid way, else least-recent `lru` — first-minimum on
+    /// ties, exactly `min_by_key`'s tie break on an all-zero invalid key).
+    #[inline]
+    fn find_or_victim(set: &[Line], tag: u64) -> (Option<usize>, usize) {
+        let mut victim_idx = 0usize;
+        let mut victim_key = u64::MAX;
+        for (w, l) in set.iter().enumerate() {
+            if l.valid && l.tag == tag {
+                return (Some(w), victim_idx);
+            }
+            let key = if l.valid { l.lru } else { 0 };
+            if key < victim_key {
+                victim_key = key;
+                victim_idx = w;
+            }
+        }
+        (None, victim_idx)
+    }
+
+    /// Refresh a hit way: LRU touch + write-allocate dirty bit.
+    #[inline]
+    fn touch_hit(line: &mut Line, stamp: u64, kind: Access) {
+        line.lru = stamp;
+        if kind == Access::Write {
+            line.dirty = true;
+        }
+    }
+
+    /// Evict `victim` and allocate `tag` into it (write-allocate).
+    /// Returns whether the victim was dirty; `stats.writebacks` is
+    /// bumped here, hit/miss counters stay with the caller (the bulk
+    /// walk amortizes them).
+    #[inline]
+    fn allocate_into(victim: &mut Line, tag: u64, stamp: u64, kind: Access, stats: &mut CacheStats) -> bool {
+        let writeback = victim.valid && victim.dirty;
+        if writeback {
+            stats.writebacks += 1;
+        }
+        *victim = Line {
+            tag,
+            valid: true,
+            dirty: kind == Access::Write,
+            lru: stamp,
+        };
+        writeback
     }
 
     /// Access one line. On miss the line is allocated (write-allocate) and
@@ -80,10 +143,10 @@ impl Cache {
         let (base, tag) = self.set_range_tag(addr);
         let set = &mut self.lines[base..base + self.assoc];
 
-        if let Some(line) = set.iter_mut().find(|l| l.valid && l.tag == tag) {
-            line.lru = self.stamp;
+        let (hit_idx, victim_idx) = Self::find_or_victim(set, tag);
+        if let Some(w) = hit_idx {
+            Self::touch_hit(&mut set[w], self.stamp, kind);
             if kind == Access::Write {
-                line.dirty = true;
                 self.stats.write_hits += 1;
             } else {
                 self.stats.read_hits += 1;
@@ -92,26 +155,56 @@ impl Cache {
         }
 
         // Miss: evict LRU victim, allocate.
-        let victim = set
-            .iter_mut()
-            .min_by_key(|l| if l.valid { l.lru } else { 0 })
-            .unwrap();
-        let writeback = victim.valid && victim.dirty;
-        if writeback {
-            self.stats.writebacks += 1;
-        }
-        *victim = Line {
-            tag,
-            valid: true,
-            dirty: kind == Access::Write,
-            lru: self.stamp,
-        };
+        let writeback =
+            Self::allocate_into(&mut set[victim_idx], tag, self.stamp, kind, &mut self.stats);
         if kind == Access::Write {
             self.stats.write_misses += 1;
         } else {
             self.stats.read_misses += 1;
         }
         LookupResult { hit: false, writeback }
+    }
+
+    /// Bulk sequential walk: equivalent to `access` on `max_lines`
+    /// consecutive lines starting at `addr`, but with a single
+    /// incrementing set-index walk, amortized stat updates, and an
+    /// early-out at the first miss (which is allocated before returning,
+    /// exactly like `access`, so the caller only has to model the levels
+    /// below). State and statistics after a walk are bit-identical to
+    /// the per-line loop — see the equivalence proptest.
+    pub fn stream_run(&mut self, addr: u64, max_lines: u64, kind: Access) -> StreamRun {
+        let mut line = addr >> self.line_shift;
+        let mut hits = 0u64;
+        while hits < max_lines {
+            self.stamp += 1;
+            let base = ((line as usize) & self.set_mask) * self.assoc;
+            let set = &mut self.lines[base..base + self.assoc];
+            let (hit_idx, victim_idx) = Self::find_or_victim(set, line);
+            if let Some(w) = hit_idx {
+                Self::touch_hit(&mut set[w], self.stamp, kind);
+                hits += 1;
+                line += 1;
+                continue;
+            }
+            // First miss of the run: allocate it, flush the amortized hit
+            // counters, and hand control back to the hierarchy walk.
+            let writeback =
+                Self::allocate_into(&mut set[victim_idx], line, self.stamp, kind, &mut self.stats);
+            if kind == Access::Write {
+                self.stats.write_hits += hits;
+                self.stats.write_misses += 1;
+            } else {
+                self.stats.read_hits += hits;
+                self.stats.read_misses += 1;
+            }
+            return StreamRun { hits, miss_writeback: Some(writeback) };
+        }
+        if kind == Access::Write {
+            self.stats.write_hits += hits;
+        } else {
+            self.stats.read_hits += hits;
+        }
+        StreamRun { hits, miss_writeback: None }
     }
 
     /// Invalidate a line if present (cross-core producer/consumer sharing:
@@ -210,6 +303,49 @@ mod tests {
                 assert!(!r.hit, "pass {pass} addr {addr}");
             }
         }
+    }
+
+    #[test]
+    fn stream_run_matches_per_line_access() {
+        let mut per_line = small();
+        let mut bulk = small();
+        // Warm both with the same 4 lines.
+        for addr in (0..256).step_by(64) {
+            per_line.access(addr, Access::Read);
+            bulk.access(addr, Access::Read);
+        }
+        // Walk 8 lines: 4 hits, then a miss that stops the run.
+        let mut ref_hits = 0;
+        let mut first_miss = None;
+        for k in 0..8u64 {
+            let r = per_line.access(k * 64, Access::Read);
+            if r.hit {
+                ref_hits += 1;
+            } else {
+                first_miss = Some(k);
+                break;
+            }
+        }
+        let run = bulk.stream_run(0, 8, Access::Read);
+        assert_eq!(run.hits, ref_hits);
+        assert_eq!(first_miss, Some(run.hits));
+        assert!(run.miss_writeback.is_some());
+        assert_eq!(per_line.stats.read_hits, bulk.stats.read_hits);
+        assert_eq!(per_line.stats.read_misses, bulk.stats.read_misses);
+        // The miss line was allocated by the walk, exactly like access().
+        assert!(bulk.probe(run.hits * 64));
+    }
+
+    #[test]
+    fn stream_run_all_hits_early_out() {
+        let mut c = small();
+        for addr in (0..256).step_by(64) {
+            c.access(addr, Access::Read);
+        }
+        let run = c.stream_run(0, 4, Access::Read);
+        assert_eq!(run.hits, 4);
+        assert_eq!(run.miss_writeback, None);
+        assert_eq!(c.stats.read_hits, 4);
     }
 
     #[test]

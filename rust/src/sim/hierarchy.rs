@@ -11,6 +11,7 @@ use crate::sim::bus::MemBus;
 use crate::sim::cache::{Access, Cache};
 use crate::sim::dram::Dram;
 use crate::stats::CacheStats;
+use crate::workload::costs;
 
 #[derive(Clone, Copy, Debug)]
 pub struct AccessOutcome {
@@ -19,6 +20,20 @@ pub struct AccessOutcome {
     pub l1_hit: bool,
     pub llc_hit: bool,
     pub dram_access: bool,
+}
+
+/// Aggregate outcome of one bulk sequential stream ([`MemorySystem::stream`]).
+/// Per-level hit/miss counts live in the caches' own `stats`, as with
+/// `access` — this carries only what the core model needs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StreamOutcome {
+    /// Core-visible time after issuing every line and absorbing the
+    /// effective (prefetch-overlapped) stalls, ps.
+    pub end_ps: u64,
+    /// Total effective stall time accumulated over the stream, ps.
+    pub stall_ps: u64,
+    /// Lines served from the core's L1.
+    pub l1_hits: u64,
 }
 
 pub struct MemorySystem {
@@ -64,8 +79,7 @@ impl MemorySystem {
     /// One line-granular access by `core` at time `now`.
     pub fn access(&mut self, core: usize, addr: u64, write: bool, now_ps: u64) -> AccessOutcome {
         let kind = if write { Access::Write } else { Access::Read };
-        let l1 = &mut self.l1d[core];
-        let r1 = l1.access(addr, kind);
+        let r1 = self.l1d[core].access(addr, kind);
         if r1.hit {
             return AccessOutcome {
                 completion_ps: now_ps + self.l1_hit_ps,
@@ -74,9 +88,17 @@ impl MemorySystem {
                 dram_access: false,
             };
         }
+        self.after_l1_miss(r1.writeback, addr, now_ps)
+    }
+
+    /// The below-L1 leg of a miss (shared by `access` and `stream`): the
+    /// L1 has already allocated the line and reported whether it evicted
+    /// a dirty victim.
+    #[inline]
+    fn after_l1_miss(&mut self, l1_victim_dirty: bool, addr: u64, now_ps: u64) -> AccessOutcome {
         // L1 victim writeback drains to the LLC via the write buffer; it
         // consumes LLC write bandwidth/energy but does not stall the core.
-        if r1.writeback {
+        if l1_victim_dirty {
             self.llc.access(addr ^ 0x8000_0000_0000, Access::Write); // victim line
             self.llc_bytes_written += self.line_bytes;
         }
@@ -108,6 +130,70 @@ impl MemorySystem {
             llc_hit: false,
             dram_access: true,
         }
+    }
+
+    /// Bulk sequential stream: `lines` consecutive lines from `base` by
+    /// `core`, with the core-side issue/stall policy folded in so the
+    /// whole walk runs as one tight loop. Semantics are line-for-line
+    /// identical to the per-line `access` loop the trace machine used to
+    /// run (the machine keeps that loop as a reference mode and tests
+    /// assert bit-equality):
+    ///
+    /// * each line first charges `issue_ps_per_line` of core issue time;
+    /// * an L1 hit stalls nothing;
+    /// * a miss stalls for `completion - now`, divided by the stride
+    ///   prefetcher depth for every miss past the first when
+    ///   `prefetchable` (§VI.C) — the effective stall advances `now`.
+    ///
+    /// The fast path: L1-resident runs are swallowed by a single
+    /// `Cache::stream_run` walk per miss-to-miss span (one set-index
+    /// walk, amortized stats, no per-line outcome plumbing), and WFM
+    /// cycle conversion is left to the caller as one aggregate
+    /// `stall_ps` instead of a division per line.
+    #[allow(clippy::too_many_arguments)]
+    pub fn stream(
+        &mut self,
+        core: usize,
+        base: u64,
+        lines: u64,
+        write: bool,
+        now_ps: u64,
+        issue_ps_per_line: u64,
+        prefetchable: bool,
+    ) -> StreamOutcome {
+        let kind = if write { Access::Write } else { Access::Read };
+        let line_bytes = self.line_bytes;
+        let mut out = StreamOutcome { end_ps: now_ps, ..Default::default() };
+        let mut now = now_ps;
+        let mut k = 0u64;
+        let mut first_miss = true;
+        while k < lines {
+            let run = self.l1d[core].stream_run(base + k * line_bytes, lines - k, kind);
+            now += run.hits * issue_ps_per_line;
+            out.l1_hits += run.hits;
+            k += run.hits;
+            let Some(l1_victim_dirty) = run.miss_writeback else {
+                break; // every remaining line hit
+            };
+            // Line `k` missed (already allocated in L1 by the walk):
+            // charge its issue slot, then walk the lower levels.
+            now += issue_ps_per_line;
+            let o = self.after_l1_miss(l1_victim_dirty, base + k * line_bytes, now);
+            let stall = o.completion_ps.saturating_sub(now);
+            // A stride prefetcher overlaps misses past the first in a
+            // sequential stream; random access pays full latency.
+            let eff = if prefetchable && !first_miss {
+                stall / costs::PREFETCH_DEPTH
+            } else {
+                stall
+            };
+            first_miss = false;
+            now += eff;
+            out.stall_ps += eff;
+            k += 1;
+        }
+        out.end_ps = now;
+        out
     }
 
     /// Consumer `to` reads a line most recently written by producer `from`
@@ -239,6 +325,39 @@ mod tests {
             assert!(o.l1_hit);
         }
         assert_eq!(m.dram_accesses(), before);
+    }
+
+    #[test]
+    fn stream_equals_per_line_access_loop() {
+        let mut bulk = ms();
+        let mut per_line = ms();
+        let issue = 2 * 435u64;
+        // Pass 0: cold prefetchable stream; pass 1: all L1 hits.
+        for _pass in 0..2 {
+            let mut now = 1_000u64;
+            let mut first_miss = true;
+            let mut stall_total = 0u64;
+            for k in 0..32u64 {
+                now += issue;
+                let o = per_line.access(0, 0x4000 + k * 64, false, now);
+                if !o.l1_hit {
+                    let stall = o.completion_ps.saturating_sub(now);
+                    let eff = if !first_miss { stall / costs::PREFETCH_DEPTH } else { stall };
+                    first_miss = false;
+                    now += eff;
+                    stall_total += eff;
+                }
+            }
+            let out = bulk.stream(0, 0x4000, 32, false, 1_000, issue, true);
+            assert_eq!(out.end_ps, now);
+            assert_eq!(out.stall_ps, stall_total);
+            assert_eq!(bulk.dram_accesses(), per_line.dram_accesses());
+            assert_eq!(bulk.l1_stats(0), per_line.l1_stats(0));
+        }
+        // The second pass saw only hits.
+        let out = bulk.stream(0, 0x4000, 32, false, 0, issue, true);
+        assert_eq!(out.l1_hits, 32);
+        assert_eq!(out.stall_ps, 0);
     }
 
     #[test]

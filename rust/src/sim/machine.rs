@@ -65,6 +65,10 @@ pub struct Machine {
     channel_specs: Vec<ChannelSpec>,
     roi: RoiTimes,
     cycle_ps: u64,
+    /// Route `MemStream` through the bulk `MemorySystem::stream` fast
+    /// path (default). The per-line reference loop is kept for the
+    /// equivalence tests and the `micro_sim` baseline bench.
+    batched_streams: bool,
 }
 
 enum StepResult {
@@ -74,8 +78,8 @@ enum StepResult {
 
 impl Machine {
     pub fn new(cfg: SystemConfig, spec: MachineSpec) -> Machine {
-        let tiles = spec
-            .tiles
+        let MachineSpec { tiles: tile_specs, mutexes, channels } = spec;
+        let tiles = tile_specs
             .iter()
             .map(|t| AimcTile::new(&cfg.aimc, t.rows, t.cols, t.coupling))
             .collect();
@@ -84,11 +88,12 @@ impl Machine {
             mem: MemorySystem::new(&cfg),
             tiles,
             iobus,
-            mutexes: (0..spec.mutexes).map(|_| SimMutex::default()).collect(),
-            channels: spec.channels.iter().map(|c| SimChannel::new(c.capacity)).collect(),
-            channel_specs: spec.channels.clone(),
+            mutexes: (0..mutexes).map(|_| SimMutex::default()).collect(),
+            channels: channels.iter().map(|c| SimChannel::new(c.capacity)).collect(),
+            channel_specs: channels,
             roi: RoiTimes::default(),
             cycle_ps: cfg.cycle_ps(),
+            batched_streams: true,
             cfg,
         }
     }
@@ -99,6 +104,13 @@ impl Machine {
 
     pub fn config(&self) -> &SystemConfig {
         &self.cfg
+    }
+
+    /// Select between the bulk memory-stream fast path (default) and the
+    /// per-line reference loop. Both produce bit-identical statistics;
+    /// the knob exists for equivalence tests and perf baselines.
+    pub fn set_batched_streams(&mut self, on: bool) {
+        self.batched_streams = on;
     }
 
     /// Execute one trace per core (empty traces = unused cores). Returns
@@ -134,10 +146,26 @@ impl Machine {
                 }
             }
             let Some(i) = next else {
-                if let Some(stuck) = (0..n).find(|&j| cores[j].pc < traces[j].len()) {
+                // Report *every* blocked core with its pending op — a
+                // multi-core deadlock is rarely diagnosable from the
+                // first victim alone.
+                let stuck: Vec<String> = (0..n)
+                    .filter(|&j| cores[j].pc < traces[j].len())
+                    .map(|j| {
+                        format!(
+                            "core {j} @ t={}ps op[{}/{}] {:?}",
+                            cores[j].now_ps,
+                            cores[j].pc,
+                            traces[j].len(),
+                            traces[j][cores[j].pc]
+                        )
+                    })
+                    .collect();
+                if !stuck.is_empty() {
                     panic!(
-                        "deadlock: core {stuck} blocked at op {:?} with no runnable peers",
-                        traces[stuck][cores[stuck].pc]
+                        "deadlock: {} core(s) blocked with no runnable peers:\n  {}",
+                        stuck.len(),
+                        stuck.join("\n  ")
                     );
                 }
                 break;
@@ -228,21 +256,47 @@ impl Machine {
             TraceOp::MemStream { base, bytes, write, insts_per_line, prefetchable } => {
                 let line = self.mem.line_bytes();
                 let lines = bytes.div_ceil(line);
-                let mut first_miss = true;
-                for k in 0..lines {
-                    self.active(core, insts_per_line, insts_per_line);
-                    let o = self.mem.access(i, base + k * line, write, core.now_ps);
-                    if !o.l1_hit {
-                        let stall = o.completion_ps.saturating_sub(core.now_ps);
-                        // A stride prefetcher overlaps misses past the first
-                        // in a sequential stream; random access pays full.
-                        let eff = if prefetchable && !first_miss {
-                            stall / costs::PREFETCH_DEPTH
-                        } else {
-                            stall
-                        };
-                        first_miss = false;
-                        self.wfm(core, eff);
+                if self.batched_streams {
+                    // Bulk fast path: one hierarchy walk for the whole
+                    // stream. Issue/stall interleaving happens inside
+                    // `MemorySystem::stream`; one aggregate active() +
+                    // wfm() call is exactly the residual-carry sum of the
+                    // per-line calls (the reference loop in the `else`
+                    // arm), so stats are bit-identical. Both helpers also
+                    // advance now_ps, which the stream already accounted
+                    // for — end_ps overwrites it below.
+                    let issue_ps = insts_per_line * self.cycle_ps;
+                    let out = self.mem.stream(
+                        i,
+                        base,
+                        lines,
+                        write,
+                        core.now_ps,
+                        issue_ps,
+                        prefetchable,
+                    );
+                    self.active(core, lines * insts_per_line, lines * insts_per_line);
+                    self.wfm(core, out.stall_ps);
+                    core.now_ps = out.end_ps;
+                } else {
+                    // Per-line reference loop (the pre-batching semantics;
+                    // kept for equivalence tests and perf baselines).
+                    let mut first_miss = true;
+                    for k in 0..lines {
+                        self.active(core, insts_per_line, insts_per_line);
+                        let o = self.mem.access(i, base + k * line, write, core.now_ps);
+                        if !o.l1_hit {
+                            let stall = o.completion_ps.saturating_sub(core.now_ps);
+                            // A stride prefetcher overlaps misses past the first
+                            // in a sequential stream; random access pays full.
+                            let eff = if prefetchable && !first_miss {
+                                stall / costs::PREFETCH_DEPTH
+                            } else {
+                                stall
+                            };
+                            first_miss = false;
+                            self.wfm(core, eff);
+                        }
                     }
                 }
             }
@@ -555,6 +609,42 @@ mod tests {
         let mut m = hp_machine(spec);
         let c = vec![TraceOp::Recv { ch: 0 }];
         m.run(vec![Vec::new(), c]);
+    }
+
+    #[test]
+    fn batched_and_per_line_streams_agree() {
+        // Mixed stream workload: cold DRAM-bound reads, L1-resident
+        // re-reads, writes (dirty victims), and a non-prefetchable load.
+        let trace = {
+            let mut b = TraceBuilder::new();
+            b.compute(InstClass::IntAlu, 1000);
+            b.stream_read(0x10_0000, 256 * 1024, 2);
+            b.stream_read(0x10_0000, 8 * 1024, 4); // second pass: L1 hits
+            b.stream_write(0x80_0000, 64 * 1024, 2);
+            b.push(TraceOp::MemStream {
+                base: 0x90_0040, // deliberately line-offset base
+                bytes: 24 * 64,
+                write: false,
+                insts_per_line: 3,
+                prefetchable: false,
+            });
+            b.stream_write(0x80_0000, 4 * 1024, 1); // dirty re-hits
+            b.build()
+        };
+        let run = |batched: bool| {
+            let mut m = hp_machine(MachineSpec::default());
+            m.set_batched_streams(batched);
+            m.run(vec![trace.clone()])
+        };
+        let fast = run(true);
+        let reference = run(false);
+        assert_eq!(fast.roi_time_ps, reference.roi_time_ps);
+        assert_eq!(fast.cores[0], reference.cores[0]);
+        assert_eq!(fast.l1d, reference.l1d);
+        assert_eq!(fast.llc, reference.llc);
+        assert_eq!(fast.dram_accesses, reference.dram_accesses);
+        assert_eq!(fast.llc_bytes_read, reference.llc_bytes_read);
+        assert_eq!(fast.llc_bytes_written, reference.llc_bytes_written);
     }
 
     #[test]

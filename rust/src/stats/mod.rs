@@ -10,7 +10,7 @@ pub mod roi;
 pub use roi::{RoiKind, RoiTimes};
 
 /// Per-core execution statistics.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CoreStats {
     /// Committed (micro-)instructions.
     pub insts: u64,
@@ -47,7 +47,7 @@ impl CoreStats {
 }
 
 /// Per-cache-level counters.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub read_hits: u64,
     pub read_misses: u64,

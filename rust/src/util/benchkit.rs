@@ -68,6 +68,29 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Write a machine-readable bench summary (name -> mean/min/stddev ns)
+/// so the perf trajectory is trackable across PRs. Hand-rolled JSON —
+/// serde is not in the offline vendor set. Bench names are ASCII
+/// identifiers chosen by us, so no string escaping is needed.
+pub fn json_report(results: &[BenchResult], path: &str) -> std::io::Result<()> {
+    let mut s = String::from("{\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "  \"{}\": {{\"mean_ns\": {:.1}, \"min_ns\": {:.1}, \"stddev_ns\": {:.1}, \"iters\": {}}}{}\n",
+            r.name,
+            r.mean_ns,
+            r.min_ns,
+            r.stddev_ns,
+            r.iters,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("}\n");
+    std::fs::write(path, s)?;
+    println!("benchkit: wrote {} result(s) to {path}", results.len());
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,6 +103,26 @@ mod tests {
         assert_eq!(r.iters, 5);
         assert!(r.mean_ns >= 0.0);
         assert!(r.min_ns <= r.mean_ns + 1.0);
+    }
+
+    #[test]
+    fn json_report_writes_parseable_object() {
+        let results = vec![
+            BenchResult { name: "a/one".into(), mean_ns: 1234.5, stddev_ns: 10.0, min_ns: 1200.0, iters: 5 },
+            BenchResult { name: "b/two".into(), mean_ns: 8.0, stddev_ns: 0.5, min_ns: 7.5, iters: 9 },
+        ];
+        let dir = std::env::temp_dir().join("alpine_benchkit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        json_report(&results, path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.trim_start().starts_with('{'));
+        assert!(text.trim_end().ends_with('}'));
+        assert!(text.contains("\"a/one\""));
+        assert!(text.contains("\"mean_ns\": 1234.5"));
+        assert!(text.contains("\"b/two\""));
+        // Exactly one comma separator between the two entries.
+        assert_eq!(text.matches("},").count(), 1);
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Small self-contained utilities: deterministic RNG, property-test
-//! helper, bench harness, table rendering. These substitute for crates
-//! (rand / proptest / criterion) that the offline vendor set lacks —
-//! see DESIGN.md §2.
+//! helper, bench harness, table rendering, scoped-thread worker pool.
+//! These substitute for crates (rand / proptest / criterion / rayon)
+//! that the offline vendor set lacks — see DESIGN.md §2.
 
 pub mod benchkit;
 pub mod miniprop;
+pub mod parallel;
 pub mod rng;
 pub mod table;

@@ -1,0 +1,181 @@
+//! Std-only scoped-thread worker pool for the sweep engine.
+//!
+//! The paper's evaluation is dozens of independent (workload x system)
+//! simulations — fig10 alone is 42 full-system runs — and every
+//! `sim::Machine` is self-contained, so the sweeps are embarrassingly
+//! parallel. The offline vendor set has no rayon; this module provides
+//! the one primitive the coordinator needs: an order-preserving
+//! `parallel_map` built on `std::thread::scope`.
+//!
+//! Determinism contract: workers claim items through an atomic cursor
+//! but every result is written back to the slot of its input index, so
+//! the output order (and, because each job is independent and itself
+//! deterministic, every output value) is identical to the serial path
+//! regardless of worker count or scheduling.
+//!
+//! Worker count resolution (first match wins):
+//!   1. `set_jobs(n)` — the CLI `--jobs N` flag;
+//!   2. the `ALPINE_JOBS` environment variable;
+//!   3. `std::thread::available_parallelism()`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide override installed by `--jobs` (0 = unset).
+static JOBS_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Worker count resolved from ALPINE_JOBS / available parallelism on
+/// first use (0 = not yet resolved), so the env var is parsed — and an
+/// invalid value warned about — exactly once per process.
+static JOBS_RESOLVED: AtomicUsize = AtomicUsize::new(0);
+
+/// Install a process-wide worker-count override (the `--jobs` CLI knob).
+pub fn set_jobs(n: usize) {
+    JOBS_OVERRIDE.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Resolve the worker count: `set_jobs` override, then `ALPINE_JOBS`,
+/// then the machine's available parallelism.
+pub fn jobs() -> usize {
+    let n = JOBS_OVERRIDE.load(Ordering::Relaxed);
+    if n > 0 {
+        return n;
+    }
+    let cached = JOBS_RESOLVED.load(Ordering::Relaxed);
+    if cached > 0 {
+        return cached;
+    }
+    let resolved = match std::env::var("ALPINE_JOBS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            // Match the CLI flag's contract instead of silently fanning
+            // out across all cores on a typo'd or zero value.
+            _ => {
+                eprintln!(
+                    "alpine: warning: ignoring invalid ALPINE_JOBS={v:?} (expects a number >= 1)"
+                );
+                default_parallelism()
+            }
+        },
+        Err(_) => default_parallelism(),
+    };
+    JOBS_RESOLVED.store(resolved, Ordering::Relaxed);
+    resolved
+}
+
+fn default_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to `jobs` scoped worker threads, returning
+/// results in input order. `jobs <= 1` (or a single item) runs the exact
+/// serial path inline with no threads spawned. A panicking job (e.g. a
+/// simulated-deadlock panic) propagates to the caller once all workers
+/// have drained, matching serial behaviour.
+pub fn parallel_map<T, R, F>(items: Vec<T>, jobs: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if jobs <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    // Slot-per-item in/out tables: the Mutex is uncontended (each slot is
+    // touched by exactly one worker) and exists only to hand `T: Send`
+    // values across the thread boundary safely.
+    let work: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let out: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    let workers = jobs.min(n);
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = work[i]
+                    .lock()
+                    .expect("work slot poisoned")
+                    .take()
+                    .expect("work item claimed twice");
+                let result = f(item);
+                *out[i].lock().expect("result slot poisoned") = Some(result);
+            });
+        }
+    });
+
+    out.into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("result slot poisoned")
+                .expect("worker skipped an item")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<u64> = (0..257).collect();
+        let expect: Vec<u64> = items.iter().map(|v| v * v).collect();
+        for jobs in [1, 2, 3, 8, 64] {
+            let got = parallel_map(items.clone(), jobs, |v| v * v);
+            assert_eq!(got, expect, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn handles_more_workers_than_items() {
+        let got = parallel_map(vec![10u32, 20], 16, |v| v + 1);
+        assert_eq!(got, vec![11, 21]);
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(empty, 8, |v| v).is_empty());
+        assert_eq!(parallel_map(vec![5u32], 8, |v| v * 2), vec![10]);
+    }
+
+    #[test]
+    fn serial_and_parallel_results_identical() {
+        // Non-trivial per-item computation with item-dependent output.
+        let items: Vec<u64> = (0..64).collect();
+        let work = |seed: u64| -> u64 {
+            let mut x = seed.wrapping_mul(0x9E3779B97F4A7C15) ^ 0xDEADBEEF;
+            for _ in 0..1000 {
+                x = x.rotate_left(7).wrapping_mul(31).wrapping_add(seed);
+            }
+            x
+        };
+        let serial = parallel_map(items.clone(), 1, work);
+        let parallel = parallel_map(items, 6, work);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn panic_in_worker_propagates() {
+        let result = std::panic::catch_unwind(|| {
+            parallel_map(vec![1u32, 2, 3, 4], 2, |v| {
+                if v == 3 {
+                    panic!("simulated deadlock");
+                }
+                v
+            })
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn jobs_is_at_least_one() {
+        assert!(jobs() >= 1);
+    }
+}

@@ -78,11 +78,34 @@ pub fn generate(case: CnnCase, variant: CnnVariant, _cfg: &SystemConfig, n_inf: 
         }
     }
 
+    // Per-layer, per-row CM-op block (analog): the queue/process/dequeue
+    // sequence is identical for every output row of a layer — it carries
+    // no addresses — so it is built once here and memcpy-appended per
+    // row (and per inference) instead of being re-emitted op by op.
+    let row_blocks: Vec<Vec<TraceOp>> = if analog {
+        model
+            .convs
+            .iter()
+            .enumerate()
+            .map(|(k, l)| analog_row_block(k, l))
+            .collect()
+    } else {
+        Vec::new()
+    };
+
+    let marks: Vec<usize> = cores.iter().map(TraceBuilder::mark).collect();
     for i in 0..n_inf {
+        if i == 1 {
+            // Inference 0 sized one block per core; reserve the rest.
+            for (b, mk) in cores.iter_mut().zip(&marks) {
+                b.reserve_repeats(*mk, n_inf - 1);
+            }
+        }
         let mut prev_msgs: Option<u64> = None; // conv1 reads from memory
         for (k, layer) in model.convs.iter().enumerate() {
             let groups = layer.out_hw().div_ceil(ROW_GROUP);
-            emit_conv_stage(&mut cores[k], k, layer, i, analog, prev_msgs);
+            let row_block = if analog { Some(row_blocks[k].as_slice()) } else { None };
+            emit_conv_stage(&mut cores[k], k, layer, i, row_block, prev_msgs);
             prev_msgs = Some(groups);
         }
         emit_dense_stages(&mut cores, &model, i, prev_msgs.unwrap());
@@ -96,16 +119,54 @@ pub fn generate(case: CnnCase, variant: CnnVariant, _cfg: &SystemConfig, n_inf: 
     }
 }
 
+/// The per-output-row op sequence of one analog conv layer: im2col
+/// gather, then per output pixel a software-pipelined queue/process
+/// (+dequeue of the previous pixel), and the final drain. Identical for
+/// every row of the layer, so callers append it as a block.
+fn analog_row_block(k: usize, l: &CnnLayer) -> Vec<TraceOp> {
+    let out_hw = l.out_hw();
+    let kk = l.im2col_rows();
+    let mut b = TraceBuilder::with_capacity(6 + 9 * out_hw as usize);
+    // im2col gather of the patch happens on the CPU (the paper flags
+    // tile-local SRAM reuse as future work, §IX.B); the feature maps are
+    // already int8, so no per-patch cast. The loop is software-
+    // pipelined: queue+fire pixel p, then retrieve pixel p-1 — the
+    // double-buffered DAC/ADC registers overlap the transfer of one
+    // pixel with the MVM of another.
+    b.roi(RoiKind::AnalogQueue, |b| {
+        b.compute(InstClass::IntAlu, out_hw * (kk / 4 + 12)); // gather
+    });
+    for px in 0..out_hw {
+        b.push(TraceOp::RoiPush { kind: RoiKind::AnalogQueue });
+        b.push(TraceOp::CmQueue { tile: k, bytes: kk });
+        b.push(TraceOp::RoiPop);
+        b.push(TraceOp::RoiPush { kind: RoiKind::AnalogProcess });
+        b.push(TraceOp::CmProcess { tile: k });
+        b.push(TraceOp::RoiPop);
+        if px > 0 {
+            b.push(TraceOp::RoiPush { kind: RoiKind::AnalogDequeue });
+            b.push(TraceOp::CmDequeue { tile: k, bytes: l.out_ch });
+            b.push(TraceOp::RoiPop);
+        }
+    }
+    // Drain the last pixel of the row.
+    b.push(TraceOp::RoiPush { kind: RoiKind::AnalogDequeue });
+    b.push(TraceOp::CmDequeue { tile: k, bytes: l.out_ch });
+    b.push(TraceOp::RoiPop);
+    b.build()
+}
+
 /// One conv pipeline stage for one inference. `in_msgs` is the number of
 /// messages the previous stage emits this inference (None: conv1 reads
 /// the image from memory); the recvs are spread across this stage's own
 /// row groups so producer and consumer counts always match.
+/// `row_block` is the pre-built analog per-row CM block (None: digital).
 fn emit_conv_stage(
     b: &mut TraceBuilder,
     k: usize,
     l: &CnnLayer,
     inf: u32,
-    analog: bool,
+    row_block: Option<&[TraceOp]>,
     in_msgs: Option<u64>,
 ) {
     let out_hw = l.out_hw();
@@ -141,35 +202,12 @@ fn emit_conv_stage(
         let px = this_rows * out_hw;
         let kk = l.im2col_rows();
 
-        if analog {
+        if let Some(block) = row_block {
             // ---- analog: per output pixel queue/process/dequeue -------
-            // im2col gather of the patch happens on the CPU (the paper
-            // flags tile-local SRAM reuse as future work, §IX.B); the
-            // feature maps are already int8, so no per-patch cast. The
-            // loop is software-pipelined: queue+fire pixel p, then
-            // retrieve pixel p-1 — the double-buffered DAC/ADC registers
-            // overlap the transfer of one pixel with the MVM of another.
+            // (pre-built per-row block; see `analog_row_block`).
+            b.reserve(block.len() * this_rows as usize);
             for _row in 0..this_rows {
-                b.roi(RoiKind::AnalogQueue, |b| {
-                    b.compute(InstClass::IntAlu, out_hw * (kk / 4 + 12)); // gather
-                });
-                for px in 0..out_hw {
-                    b.push(TraceOp::RoiPush { kind: RoiKind::AnalogQueue });
-                    b.push(TraceOp::CmQueue { tile: k, bytes: kk });
-                    b.push(TraceOp::RoiPop);
-                    b.push(TraceOp::RoiPush { kind: RoiKind::AnalogProcess });
-                    b.push(TraceOp::CmProcess { tile: k });
-                    b.push(TraceOp::RoiPop);
-                    if px > 0 {
-                        b.push(TraceOp::RoiPush { kind: RoiKind::AnalogDequeue });
-                        b.push(TraceOp::CmDequeue { tile: k, bytes: l.out_ch });
-                        b.push(TraceOp::RoiPop);
-                    }
-                }
-                // Drain the last pixel of the row.
-                b.push(TraceOp::RoiPush { kind: RoiKind::AnalogDequeue });
-                b.push(TraceOp::CmDequeue { tile: k, bytes: l.out_ch });
-                b.push(TraceOp::RoiPop);
+                b.extend_from_slice(block);
             }
         } else {
             // ---- digital: blocked int8 GEMM over this row group -------

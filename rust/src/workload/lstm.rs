@@ -130,7 +130,12 @@ fn emit_digital_dense(b: &mut TraceBuilder, m: &LstmModel) {
 
 fn digital_1core(m: LstmModel, n_inf: u32) -> Workload {
     let mut b = TraceBuilder::new();
+    let start = b.mark();
     for i in 0..n_inf {
+        if i == 1 {
+            // Inference 0 sized one block; reserve the rest up front.
+            b.reserve_repeats(start, n_inf - 1);
+        }
         emit_input_load(&mut b, i, &m);
         emit_digital_cell(&mut b, &m, 1);
         emit_gate_activations(&mut b, m.n_h, 1);
@@ -150,7 +155,12 @@ fn digital_1core(m: LstmModel, n_inf: u32) -> Workload {
 fn digital_2core(m: LstmModel, n_inf: u32) -> Workload {
     let mut c0 = TraceBuilder::new();
     let mut c1 = TraceBuilder::new();
+    let (s0, s1) = (c0.mark(), c1.mark());
     for i in 0..n_inf {
+        if i == 1 {
+            c0.reserve_repeats(s0, n_inf - 1);
+            c1.reserve_repeats(s1, n_inf - 1);
+        }
         emit_input_load(&mut c0, i, &m);
         emit_digital_cell(&mut c0, &m, 1);
         emit_gate_activations(&mut c0, m.n_h, 1);
@@ -181,7 +191,13 @@ fn digital_5core(m: LstmModel, n_inf: u32) -> Workload {
     // broadcasts it (for the recurrence) and feeds core 4 (dense).
     let mut cores: Vec<TraceBuilder> = (0..5).map(|_| TraceBuilder::new()).collect();
     let spec = quin_core_spec(&[], m.n_h);
+    let marks: Vec<usize> = cores.iter().map(TraceBuilder::mark).collect();
     for i in 0..n_inf {
+        if i == 1 {
+            for (b, mk) in cores.iter_mut().zip(&marks) {
+                b.reserve_repeats(*mk, n_inf - 1);
+            }
+        }
         quin_core_step(
             &mut cores,
             &m,
@@ -268,7 +284,11 @@ fn analog_single(m: LstmModel, n_inf: u32, case: u8) -> Workload {
     };
     b.push(TraceOp::CmInit { tile: dense_tile, placement: dense_placement });
 
+    let start = b.mark();
     for i in 0..n_inf {
+        if i == 1 {
+            b.reserve_repeats(start, n_inf - 1);
+        }
         emit_input_load(&mut b, i, &m);
         // Queue [h, x]; one CM_PROCESS yields all four gates (§VIII.D).
         emit_queue(&mut b, cell_tile, m.cell_rows());
@@ -307,7 +327,12 @@ fn analog_case3(m: LstmModel, n_inf: u32) -> Workload {
         tile: 1,
         placement: Placement { row0: 0, col0: 0, rows: m.dense_rows() as u32, cols: m.dense_cols() as u32 },
     });
+    let (s0, s1) = (c0.mark(), c1.mark());
     for i in 0..n_inf {
+        if i == 1 {
+            c0.reserve_repeats(s0, n_inf - 1);
+            c1.reserve_repeats(s1, n_inf - 1);
+        }
         emit_input_load(&mut c0, i, &m);
         emit_queue(&mut c0, 0, m.cell_rows());
         emit_process(&mut c0, 0);
@@ -465,7 +490,13 @@ fn analog_case4(m: LstmModel, n_inf: u32) -> Workload {
         placement: Placement { row0: 0, col0: 0, rows: m.dense_rows() as u32, cols: m.dense_cols() as u32 },
     });
 
+    let marks: Vec<usize> = cores.iter().map(TraceBuilder::mark).collect();
     for i in 0..n_inf {
+        if i == 1 {
+            for (b, mk) in cores.iter_mut().zip(&marks) {
+                b.reserve_repeats(*mk, n_inf - 1);
+            }
+        }
         quin_core_step(
             &mut cores,
             &m,

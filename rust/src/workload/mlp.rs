@@ -124,7 +124,12 @@ fn emit_writeback(b: &mut TraceBuilder, i: u32, elems: u64) {
 fn digital_1core(m: MlpModel, n_inf: u32) -> Workload {
     let n = m.dim;
     let mut b = TraceBuilder::new();
+    let start = b.mark();
     for i in 0..n_inf {
+        if i == 1 {
+            // Inference 0 sized one block; reserve the rest up front.
+            b.reserve_repeats(start, n_inf - 1);
+        }
         emit_input_load(&mut b, i, n);
         for l in 0..m.layers as usize {
             emit_digital_gemv(&mut b, addr::weights(l), n, n);
@@ -145,7 +150,12 @@ fn digital_2core(m: MlpModel, n_inf: u32) -> Workload {
     // Core 0: input + layer 1; core 1: layer 2 + writeback.
     let mut c0 = TraceBuilder::new();
     let mut c1 = TraceBuilder::new();
+    let (s0, s1) = (c0.mark(), c1.mark());
     for i in 0..n_inf {
+        if i == 1 {
+            c0.reserve_repeats(s0, n_inf - 1);
+            c1.reserve_repeats(s1, n_inf - 1);
+        }
         emit_input_load(&mut c0, i, n);
         emit_digital_gemv(&mut c0, addr::weights(0), n, n);
         emit_relu(&mut c0, n);
@@ -187,7 +197,13 @@ fn digital_4core(m: MlpModel, n_inf: u32) -> Workload {
             _ => unreachable!(),
         }
     };
+    let marks: Vec<usize> = cores.iter().map(TraceBuilder::mark).collect();
     for i in 0..n_inf {
+        if i == 1 {
+            for (b, m) in cores.iter_mut().zip(&marks) {
+                b.reserve_repeats(*m, n_inf - 1);
+            }
+        }
         for p in 0..2usize {
             let b = &mut cores[p];
             emit_input_load(b, i, n);
@@ -262,7 +278,11 @@ fn analog_case1(m: MlpModel, n_inf: u32) -> Workload {
         tile: 0,
         placement: Placement { row0: 0, col0: n as u32, rows: n as u32, cols: n as u32 },
     });
+    let start = b.mark();
     for i in 0..n_inf {
+        if i == 1 {
+            b.reserve_repeats(start, n_inf - 1);
+        }
         emit_input_load(&mut b, i, n);
         for _l in 0..m.layers {
             emit_queue(&mut b, 0, n);
@@ -296,7 +316,11 @@ fn analog_case2(m: MlpModel, n_inf: u32) -> Workload {
             placement: Placement { row0: 0, col0: 0, rows: half, cols: n as u32 },
         });
     }
+    let start = b.mark();
     for i in 0..n_inf {
+        if i == 1 {
+            b.reserve_repeats(start, n_inf - 1);
+        }
         emit_input_load(&mut b, i, n);
         for l in 0..m.layers as usize {
             let (ta, tb) = (2 * l, 2 * l + 1);
@@ -343,7 +367,12 @@ fn analog_case3(m: MlpModel, n_inf: u32) -> Workload {
         tile: 1,
         placement: Placement { row0: 0, col0: 0, rows: n as u32, cols: n as u32 },
     });
+    let (s0, s1) = (c0.mark(), c1.mark());
     for i in 0..n_inf {
+        if i == 1 {
+            c0.reserve_repeats(s0, n_inf - 1);
+            c1.reserve_repeats(s1, n_inf - 1);
+        }
         emit_input_load(&mut c0, i, n);
         emit_queue(&mut c0, 0, n);
         emit_process(&mut c0, 0);
@@ -411,7 +440,13 @@ fn analog_case4(m: MlpModel, n_inf: u32) -> Workload {
     // Ack channels (shared-buffer synchronization, as in case 3):
     // 2->0 (4), 2->1 (5), 3->0 (6), 3->1 (7).
     let ack = |c: usize, p: usize| -> usize { 4 + (c - 2) * 2 + p };
+    let marks: Vec<usize> = cores.iter().map(TraceBuilder::mark).collect();
     for i in 0..n_inf {
+        if i == 1 {
+            for (b, m) in cores.iter_mut().zip(&marks) {
+                b.reserve_repeats(*m, n_inf - 1);
+            }
+        }
         for p in 0..2usize {
             let b = &mut cores[p];
             emit_input_load(b, i, n);
@@ -492,7 +527,11 @@ fn analog_loose(m: MlpModel, n_inf: u32) -> Workload {
         tile: 1,
         placement: Placement { row0: 0, col0: 0, rows: n as u32, cols: n as u32 },
     });
+    let start = b.mark();
     for i in 0..n_inf {
+        if i == 1 {
+            b.reserve_repeats(start, n_inf - 1);
+        }
         emit_input_load(&mut b, i, n);
         emit_queue(&mut b, 0, n);
         // Both layers execute inside the accelerator (tile-to-tile

@@ -70,6 +70,41 @@ impl TraceBuilder {
         TraceBuilder::default()
     }
 
+    /// Builder with pre-reserved op capacity (generators that know their
+    /// trace size up front avoid the re-allocation churn of multi-megaop
+    /// CNN traces).
+    pub fn with_capacity(cap: usize) -> TraceBuilder {
+        TraceBuilder { ops: Vec::with_capacity(cap) }
+    }
+
+    /// Reserve room for at least `additional` more ops.
+    pub fn reserve(&mut self, additional: usize) -> &mut Self {
+        self.ops.reserve(additional);
+        self
+    }
+
+    /// Current op count — pair with [`TraceBuilder::reserve_repeats`].
+    pub fn mark(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// After emitting one repeating block (e.g. the first inference)
+    /// that started at `mark`, reserve capacity for `remaining` more
+    /// blocks of the same size in one shot.
+    pub fn reserve_repeats(&mut self, mark: usize, remaining: u32) -> &mut Self {
+        let per_block = self.ops.len().saturating_sub(mark);
+        self.ops.reserve(per_block.saturating_mul(remaining as usize));
+        self
+    }
+
+    /// Append a pre-built op block (`TraceOp` is `Copy`, so this is a
+    /// flat memcpy — the workload generators reuse per-inference /
+    /// per-row blocks instead of re-emitting them op by op).
+    pub fn extend_from_slice(&mut self, block: &[TraceOp]) -> &mut Self {
+        self.ops.extend_from_slice(block);
+        self
+    }
+
     pub fn push(&mut self, op: TraceOp) -> &mut Self {
         self.ops.push(op);
         self
@@ -112,6 +147,31 @@ mod tests {
         b.compute(InstClass::IntAlu, 0);
         b.compute(InstClass::IntAlu, 5);
         assert_eq!(b.ops.len(), 1);
+    }
+
+    #[test]
+    fn reserve_repeats_sizes_capacity() {
+        let mut b = TraceBuilder::new();
+        let start = b.mark();
+        b.compute(InstClass::IntAlu, 5);
+        b.stream_read(0, 64, 1);
+        b.reserve_repeats(start, 9);
+        // 2 ops emitted + room for 9 more blocks of 2.
+        assert!(b.ops.capacity() >= 20);
+        assert_eq!(b.ops.len(), 2);
+    }
+
+    #[test]
+    fn extend_from_slice_appends_block() {
+        let mut b = TraceBuilder::new();
+        let block = vec![
+            TraceOp::Compute { class: InstClass::SimdOp, insts: 4 },
+            TraceOp::RoiPop,
+        ];
+        b.extend_from_slice(&block);
+        b.extend_from_slice(&block);
+        assert_eq!(b.ops.len(), 4);
+        assert!(matches!(b.ops[2], TraceOp::Compute { insts: 4, .. }));
     }
 
     #[test]

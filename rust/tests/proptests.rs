@@ -58,6 +58,115 @@ fn cache_hits_bounded_by_capacity_reuse() {
 }
 
 #[test]
+fn cache_bulk_stream_equals_per_line_access() {
+    // `Cache::stream_run` composed with `access` on the missing line must
+    // leave state and statistics bit-identical to a pure per-line
+    // `access` loop, for random geometries, warm-up histories, bases
+    // (aligned or not) and run lengths.
+    check("cache-bulk-stream-equivalence", 0x71, |rng| {
+        let geom = CacheGeometry {
+            size_bytes: 1 << (9 + rng.below(4)), // 512B..4KB
+            assoc: 1 << rng.below(3),            // 1..4 ways
+            line_bytes: 64,
+            hit_latency_cycles: 2,
+        };
+        let mut per_line = Cache::new(geom);
+        let mut bulk = Cache::new(geom);
+        // Identical random warm-up history on both.
+        for _ in 0..rng.below(300) {
+            let addr = rng.below(1 << 13) & !63;
+            let kind = if rng.below(2) == 0 { Access::Read } else { Access::Write };
+            per_line.access(addr, kind);
+            bulk.access(addr, kind);
+        }
+        // Random sequential runs, driven per-line on one cache and via
+        // the stream_run/miss composition (what MemorySystem::stream
+        // does) on the other.
+        for _ in 0..10 {
+            let base = rng.below(1 << 13) & !7; // sometimes line-misaligned
+            let lines = 1 + rng.below(40);
+            let kind = if rng.below(2) == 0 { Access::Read } else { Access::Write };
+
+            let mut ref_outcomes = Vec::new();
+            for k in 0..lines {
+                ref_outcomes.push(per_line.access(base + k * 64, kind));
+            }
+
+            let mut k = 0u64;
+            let mut bulk_outcomes = Vec::new();
+            while k < lines {
+                let run = bulk.stream_run(base + k * 64, lines - k, kind);
+                for _ in 0..run.hits {
+                    bulk_outcomes.push((true, false));
+                }
+                k += run.hits;
+                let Some(writeback) = run.miss_writeback else { break };
+                bulk_outcomes.push((false, writeback));
+                k += 1;
+            }
+
+            assert_eq!(ref_outcomes.len(), bulk_outcomes.len());
+            for (r, (hit, wb)) in ref_outcomes.iter().zip(&bulk_outcomes) {
+                assert_eq!(r.hit, *hit);
+                assert_eq!(r.writeback, *wb);
+            }
+            assert_eq!(per_line.stats, bulk.stats);
+        }
+        // Full directory state must agree.
+        for addr in (0..(1u64 << 13) + 64 * 64).step_by(64) {
+            assert_eq!(per_line.probe(addr), bulk.probe(addr), "addr {addr:#x}");
+        }
+    });
+}
+
+#[test]
+fn machine_batched_streams_equal_per_line_reference() {
+    // End-to-end: the bulk MemorySystem::stream MemStream arm and the
+    // per-line reference loop must produce bit-identical RunStats for
+    // random mixed-stream workloads.
+    check("machine-bulk-stream-equivalence", 0x72, |rng| {
+        let mut b = TraceBuilder::new();
+        for _ in 0..(1 + rng.below(6)) {
+            b.compute(InstClass::IntAlu, 1 + rng.below(3000));
+            let base = rng.below(1 << 22) & !63;
+            let bytes = (1 + rng.below(128)) * 64 + rng.below(64);
+            match rng.below(3) {
+                0 => {
+                    b.stream_read(base, bytes, 1 + rng.below(4));
+                }
+                1 => {
+                    b.stream_write(base, bytes, 1 + rng.below(3));
+                }
+                _ => {
+                    b.push(TraceOp::MemStream {
+                        base,
+                        bytes,
+                        write: false,
+                        insts_per_line: 2,
+                        prefetchable: false,
+                    });
+                }
+            }
+        }
+        let trace = b.build();
+        let run = |batched: bool| {
+            let mut m = Machine::new(SystemConfig::high_power(), MachineSpec::default());
+            m.set_batched_streams(batched);
+            m.run(vec![trace.clone()])
+        };
+        let fast = run(true);
+        let reference = run(false);
+        assert_eq!(fast.roi_time_ps, reference.roi_time_ps);
+        assert_eq!(fast.cores[0], reference.cores[0]);
+        assert_eq!(fast.l1d, reference.l1d);
+        assert_eq!(fast.llc, reference.llc);
+        assert_eq!(fast.dram_accesses, reference.dram_accesses);
+        assert_eq!(fast.llc_bytes_read, reference.llc_bytes_read);
+        assert_eq!(fast.llc_bytes_written, reference.llc_bytes_written);
+    });
+}
+
+#[test]
 fn machine_time_monotone_in_work() {
     check("machine-monotone", 0x21, |rng| {
         let insts = 1000 + rng.below(100_000);

@@ -1,0 +1,219 @@
+//! Minimal, std-only reimplementation of the `anyhow` API surface used by
+//! this repository. The offline vendor set has no registry crates, so
+//! this path dependency supplies exactly what the code needs:
+//!
+//! * [`Error`] — an opaque error value carrying a context chain
+//! * [`Result`] — `Result<T, Error>` with a defaulted error type
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`
+//! * `anyhow!`, `bail!`, `ensure!` macros
+//!
+//! Semantics mirror the real crate where it matters here: `Display`
+//! shows the outermost message, `{:#}` shows the whole chain joined by
+//! `": "`, and `Debug` shows the chain with a `Caused by` trailer. The
+//! real crate can be dropped back in without source changes.
+
+use std::fmt;
+
+/// An error with an ordered context chain; `chain[0]` is the outermost
+/// (most recently attached) message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost message.
+    pub fn root_cause_message(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, rest)) => {
+                write!(f, "{head}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for (i, cause) in rest.iter().enumerate() {
+                        write!(f, "\n    {i}: {cause}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` legal.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Attach context to a fallible value.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing model line").unwrap_err();
+        assert_eq!(format!("{e}"), "missing model line");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, std::io::Error> = Ok(7);
+        let mut called = false;
+        let r = ok.with_context(|| {
+            called = true;
+            "ctx"
+        });
+        assert_eq!(r.unwrap(), 7);
+        assert!(!called, "context closure must not run on Ok");
+    }
+
+    #[test]
+    fn macros_work() {
+        fn inner(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert_eq!(inner(true).unwrap(), 1);
+        let e = inner(false).unwrap_err();
+        assert_eq!(format!("{e}"), "flag was false");
+        let direct = anyhow!("x = {}", 42);
+        assert_eq!(format!("{direct}"), "x = 42");
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn debug_has_caused_by() {
+        let e: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer"));
+        assert!(dbg.contains("Caused by"));
+    }
+}

@@ -1,0 +1,184 @@
+//! Build-time stub of the `xla` (PJRT) bindings.
+//!
+//! The offline vendor set does not carry the real `xla` crate or the
+//! `xla_extension` shared library, so this path dependency provides the
+//! exact API surface `alpine::runtime` consumes. The data-plumbing types
+//! ([`Literal`], [`ArrayShape`]) are fully functional (they back the
+//! manifest/literal round-trip tests); the execution-plane entry points
+//! ([`HloModuleProto::from_text_file`], [`PjRtLoadedExecutable::execute`])
+//! return a clear `Error` so callers degrade to "PJRT unavailable"
+//! instead of failing to link. Swapping the real bindings back in is a
+//! one-line Cargo.toml change — no source edits.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`: implements `std::error::Error`
+/// so `?` converts it into `anyhow::Error` at call sites.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} unavailable: built against the offline xla stub \
+         (vendor/xla); install the real xla_extension bindings to enable PJRT"
+    ))
+}
+
+/// Element types a [`Literal`] can be read back as. Only `f32` is used
+/// by this repository's artifacts.
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+    fn to_f32(self) -> f32;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+/// A shaped f32 tensor (functional: backs the manifest round-trip).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a flat slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let elems: i64 = dims.iter().product();
+        if elems < 0 || elems as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape to {:?} ({} elems) mismatches literal of {} elems",
+                dims,
+                elems,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Destructure a tuple result. The stub cannot execute computations,
+    /// so no tuple literal can exist to destructure.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("tuple literal"))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the real bindings).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HLO text parsing"))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT CPU client (stub: constructible so `Runtime::new` succeeds and
+/// artifact-less environments can probe-and-skip gracefully).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PJRT compilation"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn execution_plane_reports_stub() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub-cpu");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(client.compile(&XlaComputation).is_err());
+        let err = PjRtLoadedExecutable.execute::<Literal>(&[]).unwrap_err();
+        assert!(format!("{err}").contains("stub"));
+    }
+}
