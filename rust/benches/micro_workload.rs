@@ -1,0 +1,63 @@
+//! Micro-benchmarks of trace compilation (the mapping compiler's
+//! `(LayerGraph, Mapping) -> Workload` path): emission throughput in
+//! ops/sec for the largest CNN case, plus the MLP/LSTM case tables, and
+//! the compiler-vs-legacy-generator overhead ratio. Results land in
+//! `BENCH_workloads.json` alongside `BENCH_sim.json` so the compile-path
+//! perf trajectory is trackable across PRs.
+
+use alpine::config::SystemConfig;
+use alpine::nn::CnnVariant;
+use alpine::util::benchkit::{bench, black_box, json_report};
+use alpine::workload::cnn::{self, CnnCase};
+use alpine::workload::legacy;
+use alpine::workload::lstm::{self, LstmCase};
+use alpine::workload::mlp::{self, MlpCase};
+
+fn main() {
+    let cfg = SystemConfig::high_power();
+    let n_inf = 3; // §VI.C CNN inference count
+    let mut results = Vec::new();
+
+    // Largest CNN case: CNN-S emits multi-megaop traces (per-pixel CM
+    // ops in the analog variant, blocked GEMM groups in the digital).
+    for (name, case) in [("dig", CnnCase::Digital), ("ana", CnnCase::Analog)] {
+        let w = cnn::generate(case, CnnVariant::Slow, &cfg, n_inf).unwrap();
+        let total_ops = w.total_ops();
+        drop(w);
+
+        let compiled = bench(&format!("workload/compile_cnn_slow_{name}"), 10, || {
+            black_box(cnn::generate(case, CnnVariant::Slow, &cfg, n_inf).unwrap());
+        });
+        println!(
+            "workload/compile_cnn_slow_{name}: {:.1} Mops/s emitted ({} ops per compile)",
+            total_ops as f64 / (compiled.mean_ns / 1e9) / 1e6,
+            total_ops
+        );
+        let legacy_gen = bench(&format!("workload/legacy_cnn_slow_{name}"), 10, || {
+            black_box(legacy::cnn::generate(case, CnnVariant::Slow, &cfg, n_inf));
+        });
+        println!(
+            "workload/compile_cnn_slow_{name}: compiler vs legacy generator {:.2}x (mean, <1 = compiler faster)",
+            compiled.mean_ns / legacy_gen.mean_ns
+        );
+        results.push(compiled);
+        results.push(legacy_gen);
+    }
+
+    // Case-table compile throughput for the smaller paper workloads.
+    results.push(bench("workload/compile_mlp_ana4", 50, || {
+        black_box(mlp::generate(MlpCase::Analog { case: 4 }, &cfg, 10).unwrap());
+    }));
+    results.push(bench("workload/compile_lstm_ana4_750", 50, || {
+        black_box(lstm::generate(LstmCase::Analog { case: 4 }, 750, &cfg, 10).unwrap());
+    }));
+    results.push(bench("workload/compile_mlp_custom_pipe3", 50, || {
+        let shape = mlp::MlpShape::parse("784x512x512x10").unwrap();
+        black_box(
+            mlp::generate_custom(shape, mlp::CustomMlpMapping::Analog { tiles: 3, pipeline: true }, 10)
+                .unwrap(),
+        );
+    }));
+
+    json_report(&results, "BENCH_workloads.json").expect("writing BENCH_workloads.json");
+}

@@ -13,7 +13,7 @@ use crate::nn::CnnVariant;
 use crate::util::parallel;
 use crate::workload::cnn::{self, CnnCase};
 use crate::workload::lstm::{self, LstmCase};
-use crate::workload::mlp::{self, MlpCase};
+use crate::workload::mlp::{self, CustomMlpMapping, MlpCase, MlpShape};
 
 use super::{run_workload, CaseResult};
 
@@ -51,23 +51,32 @@ pub enum SweepCase {
     Mlp { kind: SystemKind, case: MlpCase },
     Lstm { kind: SystemKind, case: LstmCase, n_h: u64 },
     Cnn { kind: SystemKind, case: CnnCase, variant: CnnVariant },
+    /// A custom-shape MLP under one of the compiler-backed mappings
+    /// (validate with `mlp::generate_custom` before enqueueing).
+    CustomMlp { kind: SystemKind, shape: MlpShape, mapping: CustomMlpMapping },
 }
 
-/// Generate and simulate one sweep case (runs inside a worker).
+/// Generate and simulate one sweep case (runs inside a worker). Sweep
+/// case lists are built from the fixed figure tables or pre-validated
+/// CLI input, so an unsupported case here is a caller bug.
 pub fn run_case(case: SweepCase, n_inf: u32) -> CaseResult {
     match case {
         SweepCase::Mlp { kind, case } => {
             let cfg = SystemConfig::for_kind(kind);
-            run_workload(kind, mlp::generate(case, &cfg, n_inf))
+            run_workload(kind, mlp::generate(case, &cfg, n_inf).expect("sweep case table is valid"))
         }
         SweepCase::Lstm { kind, case, n_h } => {
             let cfg = SystemConfig::for_kind(kind);
-            run_workload(kind, lstm::generate(case, n_h, &cfg, n_inf))
+            run_workload(kind, lstm::generate(case, n_h, &cfg, n_inf).expect("sweep case table is valid"))
         }
         SweepCase::Cnn { kind, case, variant } => {
             let cfg = SystemConfig::for_kind(kind);
-            run_workload(kind, cnn::generate(case, variant, &cfg, n_inf))
+            run_workload(kind, cnn::generate(case, variant, &cfg, n_inf).expect("sweep case table is valid"))
         }
+        SweepCase::CustomMlp { kind, shape, mapping } => run_workload(
+            kind,
+            mlp::generate_custom(shape, mapping, n_inf).expect("custom sweep case was pre-validated"),
+        ),
     }
 }
 
@@ -215,6 +224,41 @@ pub fn fig14_cnn_utilization(n_inf: u32) -> Vec<CaseResult> {
     run_sweep(fig14_cases(), n_inf)
 }
 
+/// Default mapping set for a custom-shape MLP sweep: digital 1-core,
+/// digital per-layer pipeline, one packed crossbar, and an L-stage
+/// pipelined analog configuration (for 3+ layer shapes this is the
+/// ">= 3-stage pipelined analog" configuration no hand-written
+/// generator could express).
+pub fn custom_mlp_mappings(shape: MlpShape) -> Vec<CustomMlpMapping> {
+    let layers = shape.layers();
+    let mut out = vec![
+        CustomMlpMapping::Digital { cores: 1 },
+        CustomMlpMapping::Analog { tiles: 1, pipeline: false },
+    ];
+    if layers > 1 {
+        out.push(CustomMlpMapping::Digital { cores: layers });
+        out.push(CustomMlpMapping::Analog { tiles: layers, pipeline: true });
+    }
+    out
+}
+
+/// Case list of a custom-shape MLP sweep: every default mapping on both
+/// systems.
+pub fn custom_mlp_cases(shape: MlpShape) -> Vec<SweepCase> {
+    let mut out = Vec::new();
+    for kind in SystemKind::ALL {
+        for mapping in custom_mlp_mappings(shape) {
+            out.push(SweepCase::CustomMlp { kind, shape, mapping });
+        }
+    }
+    out
+}
+
+/// Sweep a custom-shape MLP across the default mappings and both systems.
+pub fn custom_mlp(shape: MlpShape, n_inf: u32) -> Vec<CaseResult> {
+    run_sweep(custom_mlp_cases(shape), n_inf)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -249,6 +293,25 @@ mod tests {
         assert_eq!(fig11_cases().len(), 12);
         assert_eq!(fig13_cases().len(), 12);
         assert_eq!(fig14_cases().len(), 2);
+        let shape = MlpShape::parse("784x512x512x10").unwrap();
+        assert_eq!(custom_mlp_cases(shape).len(), 8);
+    }
+
+    /// Acceptance: a custom-shape MLP and a 3-stage pipelined analog
+    /// mapping — neither expressible by the legacy generators — run end
+    /// to end through the (parallel) sweep engine.
+    #[test]
+    fn custom_mlp_sweep_runs_end_to_end() {
+        let shape = MlpShape::parse("784x512x512x10").unwrap();
+        let rows = run_cases(&custom_mlp_cases(shape), 2, 2);
+        assert_eq!(rows.len(), 8);
+        for r in &rows {
+            assert!(r.time_s > 0.0, "{}", r.label);
+            assert!(r.energy.total_j() > 0.0, "{}", r.label);
+        }
+        let pipe = rows.iter().find(|r| r.label.contains("ANA-pipe3")).expect("3-stage pipeline row");
+        assert!(pipe.label.contains("784x512x512x10"));
+        assert!(rows.iter().any(|r| r.label.contains("DIG-pipe3")));
     }
 
     /// The acceptance-criterion determinism check: rows from the parallel

@@ -87,7 +87,7 @@ mod tests {
     #[test]
     fn run_workload_produces_sane_result() {
         let cfg = SystemConfig::high_power();
-        let w = mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2);
+        let w = mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2).unwrap();
         let r = run_workload(SystemKind::HighPower, w);
         assert!(r.time_s > 0.0);
         assert!(r.energy.total_j() > 0.0);
@@ -100,11 +100,11 @@ mod tests {
         let cfg = SystemConfig::high_power();
         let dig = run_workload(
             SystemKind::HighPower,
-            mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 2),
+            mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 2).unwrap(),
         );
         let ana = run_workload(
             SystemKind::HighPower,
-            mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2),
+            mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2).unwrap(),
         );
         let s = speedup(&dig, &ana);
         assert!(s > 1.0, "analog should win: {s}");

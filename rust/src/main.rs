@@ -18,7 +18,7 @@ use alpine::util::parallel;
 use alpine::util::table::Table;
 use alpine::workload::cnn::{self, CnnCase};
 use alpine::workload::lstm::{self, LstmCase};
-use alpine::workload::mlp::{self, MlpCase};
+use alpine::workload::mlp::{self, CustomMlpMapping, MlpCase, MlpShape};
 use anyhow::{bail, Context, Result};
 
 fn main() {
@@ -65,6 +65,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     match cmd {
         "list-configs" => list_configs(),
         "run" => cmd_run(&args[1..]),
+        "custom" => cmd_custom(&args[1..]),
         "fig7" => {
             let rows = experiments::fig7_mlp(opt_u32(&args[1..], "--inferences", experiments::MLP_INFERENCES)?);
             report::aggregate_table("Fig. 7 — MLP aggregate", &rows).print();
@@ -130,6 +131,11 @@ fn print_help() {
          \x20 list-configs             print Table I system configurations\n\
          \x20 run --workload mlp|lstm|cnn --case <case> [--system hp|lp]\n\
          \x20     [--nh 256|512|750] [--variant f|m|s] [--inferences N]\n\
+         \x20 custom --shape 784x512x512x10 [--tiles N] [--pipeline]\n\
+         \x20     [--system hp|lp] [--inferences N]\n\
+         \x20                          compile + run a custom MLP mapping\n\
+         \x20                          (no --tiles/--pipeline: sweep the\n\
+         \x20                          default mappings on both systems)\n\
          \x20 fig7|fig8|fig10|fig11|fig13|fig14|loose   regenerate a figure\n\
          \x20 validate                 PJRT probe-check all AOT artifacts\n\
          \n\
@@ -175,12 +181,12 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let w = match workload.as_str() {
         "mlp" => {
             let n = opt_u32(args, "--inferences", experiments::MLP_INFERENCES)?;
-            mlp::generate(parse_mlp_case(&case)?, &cfg, n)
+            mlp::generate(parse_mlp_case(&case)?, &cfg, n)?
         }
         "lstm" => {
             let n = opt_u32(args, "--inferences", experiments::LSTM_INFERENCES)?;
             let nh: u64 = opt(args, "--nh").unwrap_or_else(|| "256".into()).parse()?;
-            lstm::generate(parse_lstm_case(&case)?, nh, &cfg, n)
+            lstm::generate(parse_lstm_case(&case)?, nh, &cfg, n)?
         }
         "cnn" => {
             let n = opt_u32(args, "--inferences", experiments::CNN_INFERENCES)?;
@@ -191,7 +197,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
                 "ana" | "ana8" => CnnCase::Analog,
                 other => bail!("bad cnn case {other:?} (dig|ana)"),
             };
-            cnn::generate(c, v, &cfg, n)
+            cnn::generate(c, v, &cfg, n)?
         }
         other => bail!("unknown workload {other:?}"),
     };
@@ -201,31 +207,75 @@ fn cmd_run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Case strings parse structurally (`dig<N>` / `ana<N>`); whether the
+/// case table supports the configuration is decided by `generate`, which
+/// returns a clean `WorkloadError` instead of panicking.
 fn parse_mlp_case(s: &str) -> Result<MlpCase> {
-    Ok(match s {
-        "dig1" => MlpCase::Digital { cores: 1 },
-        "dig2" => MlpCase::Digital { cores: 2 },
-        "dig4" => MlpCase::Digital { cores: 4 },
-        "ana1" => MlpCase::Analog { case: 1 },
-        "ana2" => MlpCase::Analog { case: 2 },
-        "ana3" => MlpCase::Analog { case: 3 },
-        "ana4" => MlpCase::Analog { case: 4 },
-        "loose" => MlpCase::AnalogLoose,
-        other => bail!("bad mlp case {other:?}"),
-    })
+    if s == "loose" {
+        return Ok(MlpCase::AnalogLoose);
+    }
+    if let Some(n) = s.strip_prefix("dig") {
+        return Ok(MlpCase::Digital { cores: n.parse().with_context(|| format!("bad mlp case {s:?}"))? });
+    }
+    if let Some(n) = s.strip_prefix("ana") {
+        return Ok(MlpCase::Analog { case: n.parse().with_context(|| format!("bad mlp case {s:?}"))? });
+    }
+    bail!("bad mlp case {s:?} (digN | anaN | loose)")
 }
 
 fn parse_lstm_case(s: &str) -> Result<LstmCase> {
-    Ok(match s {
-        "dig1" => LstmCase::Digital { cores: 1 },
-        "dig2" => LstmCase::Digital { cores: 2 },
-        "dig5" => LstmCase::Digital { cores: 5 },
-        "ana1" => LstmCase::Analog { case: 1 },
-        "ana2" => LstmCase::Analog { case: 2 },
-        "ana3" => LstmCase::Analog { case: 3 },
-        "ana4" => LstmCase::Analog { case: 4 },
-        other => bail!("bad lstm case {other:?}"),
-    })
+    if let Some(n) = s.strip_prefix("dig") {
+        return Ok(LstmCase::Digital { cores: n.parse().with_context(|| format!("bad lstm case {s:?}"))? });
+    }
+    if let Some(n) = s.strip_prefix("ana") {
+        return Ok(LstmCase::Analog { case: n.parse().with_context(|| format!("bad lstm case {s:?}"))? });
+    }
+    bail!("bad lstm case {s:?} (digN | anaN)")
+}
+
+/// `custom` — compile + run arbitrary MLP shapes through the mapping
+/// compiler: `alpine custom --shape 784x512x512x10 [--tiles N]
+/// [--pipeline] [--system hp|lp] [--inferences N]`. Without
+/// --tiles/--pipeline, sweeps the default mapping set on both systems.
+fn cmd_custom(args: &[String]) -> Result<()> {
+    let shape_s = opt(args, "--shape")
+        .or_else(|| opt(args, "--mlp-shape"))
+        .context("--shape is required (e.g. --shape 784x512x512x10)")?;
+    let shape = MlpShape::parse(&shape_s)?;
+    let n = opt_u32(args, "--inferences", experiments::MLP_INFERENCES)?;
+    let pipeline = args.iter().any(|a| a == "--pipeline");
+    let tiles = opt(args, "--tiles");
+
+    if pipeline || tiles.is_some() {
+        // One explicit analog mapping on one system.
+        let t: usize = match tiles {
+            Some(v) => v.parse().context("--tiles expects a number >= 1")?,
+            None => shape.layers(),
+        };
+        let mapping = CustomMlpMapping::Analog { tiles: t, pipeline };
+        let system = SystemKind::parse(&opt(args, "--system").unwrap_or_else(|| "hp".into()))
+            .context("bad --system (hp|lp)")?;
+        let w = mlp::generate_custom(shape, mapping, n)?;
+        let r = run_workload(system, w);
+        report::aggregate_table(&format!("custom MLP {shape}"), std::slice::from_ref(&r)).print();
+        report::roi_table("sub-ROI breakdown", std::slice::from_ref(&r)).print();
+    } else {
+        // Validate each default mapping (no trace emission), then fan
+        // out on the sweep engine — both systems, or just --system.
+        for m in experiments::custom_mlp_mappings(shape) {
+            let (graph, mapping) = mlp::custom_table(shape, m)?;
+            alpine::workload::compile::validate(&graph, &mapping)?;
+        }
+        let mut cases = experiments::custom_mlp_cases(shape);
+        if let Some(sys) = opt(args, "--system") {
+            let sys = SystemKind::parse(&sys).context("bad --system (hp|lp)")?;
+            cases.retain(|c| matches!(c, experiments::SweepCase::CustomMlp { kind, .. } if *kind == sys));
+        }
+        let rows = experiments::run_cases(&cases, n, parallel::jobs());
+        report::aggregate_table(&format!("custom MLP {shape} — default mappings"), &rows).print();
+        report::gains_table("gains vs DIG-1core", &rows, |r| r.label.contains("DIG-1core")).print();
+    }
+    Ok(())
 }
 
 fn validate() -> Result<()> {

@@ -42,7 +42,7 @@ impl CnnVariant {
 }
 
 /// One convolutional layer with its post-ops.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CnnLayer {
     pub name: &'static str,
     pub in_hw: u64,

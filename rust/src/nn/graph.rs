@@ -1,0 +1,266 @@
+//! The layer-graph workload IR.
+//!
+//! A [`LayerGraph`] is a pure *model description*: a DAG of typed layer
+//! nodes with shapes, independent of how (or where) each layer executes.
+//! The paper's three explorations are instances of it (`LayerGraph::mlp`
+//! / `lstm` / `cnn`), and arbitrary graphs can be built for new
+//! workloads. Execution placement — which core runs a layer, whether its
+//! MVM goes to the SIMD pipeline or an AIMC tile, how stages pipeline —
+//! lives in `workload::compile::Mapping`; the pair is lowered to per-core
+//! traces by `workload::compile::compile`.
+//!
+//! This mirrors the mapping flow of end-to-end AIMC compilers (Bruschi
+//! et al., Garofalo et al.): network description first, placement second,
+//! code generation last.
+
+use crate::nn::cnn::CnnLayer;
+use crate::nn::{CnnModel, LstmModel, MlpModel};
+
+/// Index of a node in `LayerGraph::nodes`.
+pub type NodeId = usize;
+
+/// Digital activation flavours with distinct lowering costs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActKind {
+    Relu,
+    Softmax,
+}
+
+/// One typed layer of the graph, with everything the mapping compiler
+/// needs to cost it (shapes in elements, weight region slot).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// fp32 source vector/image: a cold `bytes`-byte stream per inference
+    /// plus `marshal_insts` of AIMClib input marshalling. `raw_bytes` is
+    /// the int8 size of the same input (what replicated followers re-read
+    /// from the LLC, and the unit of conv row-slice streaming).
+    Input { bytes: u64, marshal_insts: u64, raw_bytes: u64 },
+
+    /// Dense `rows x cols` int8 weight matrix at `addr::weights(slot)`.
+    Dense { rows: u64, cols: u64, weight_slot: usize },
+
+    /// One convolutional layer (with fused ReLU/LRN/pool post-ops, as in
+    /// the paper's pipeline stages, §IX).
+    Conv2d { layer: CnnLayer, weight_slot: usize },
+
+    /// LSTM cell layer: the `(n_h + x) x 4n_h` four-gate MVM plus the
+    /// digital gate activations and c/h elementwise combination (§VIII.D
+    /// executes all four gates in one CM_PROCESS).
+    LstmCell { x: u64, n_h: u64, weight_slot: usize },
+
+    /// Elementwise digital activation over `elems` values.
+    Activation { kind: ActKind, elems: u64 },
+
+    /// Standalone max-pool over `elems` values with a `window`^2 kernel
+    /// (the paper's CNN fuses pooling into Conv2d; this exists for custom
+    /// graphs).
+    Pool { elems: u64, window: u64 },
+
+    /// Generic elementwise stage (e.g. residual add, scale) with explicit
+    /// SIMD / scalar-FP instruction budgets.
+    Elementwise { simd_insts: u64, fp_insts: u64 },
+
+    /// Result sink: `bytes` written back per inference.
+    Output { bytes: u64 },
+}
+
+impl LayerKind {
+    /// Input-vector length of the layer's MVM, if it has one (the number
+    /// of elements queued into an AIMC tile mapped to this layer).
+    pub fn mvm_rows(&self) -> Option<u64> {
+        match self {
+            LayerKind::Dense { rows, .. } => Some(*rows),
+            LayerKind::Conv2d { layer, .. } => Some(layer.im2col_rows()),
+            LayerKind::LstmCell { x, n_h, .. } => Some(n_h + x),
+            _ => None,
+        }
+    }
+
+    /// Output-vector length of the layer's MVM, if it has one.
+    pub fn mvm_cols(&self) -> Option<u64> {
+        match self {
+            LayerKind::Dense { cols, .. } => Some(*cols),
+            LayerKind::Conv2d { layer, .. } => Some(layer.out_ch),
+            LayerKind::LstmCell { n_h, .. } => Some(4 * n_h),
+            _ => None,
+        }
+    }
+}
+
+/// A node of the layer graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerNode {
+    pub id: NodeId,
+    pub kind: LayerKind,
+}
+
+/// The workload IR: typed layer nodes plus dataflow edges.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerGraph {
+    pub name: String,
+    pub nodes: Vec<LayerNode>,
+    /// Dataflow edges `(producer, consumer)`.
+    pub edges: Vec<(NodeId, NodeId)>,
+}
+
+impl LayerGraph {
+    pub fn new(name: impl Into<String>) -> LayerGraph {
+        LayerGraph { name: name.into(), nodes: Vec::new(), edges: Vec::new() }
+    }
+
+    /// Append a node, returning its id.
+    pub fn add(&mut self, kind: LayerKind) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(LayerNode { id, kind });
+        id
+    }
+
+    /// Append a node chained after `prev`.
+    pub fn chain(&mut self, prev: NodeId, kind: LayerKind) -> NodeId {
+        let id = self.add(kind);
+        self.edges.push((prev, id));
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> Option<&LayerNode> {
+        self.nodes.get(id)
+    }
+
+    /// An MLP as a linear chain: `dims = [in, h1, .., out]` gives
+    /// `dims.len() - 1` Dense+ReLU layers. `mlp(&[1024, 1024, 1024])` is
+    /// the paper's Fig. 6(a) network.
+    pub fn mlp(dims: &[u64]) -> LayerGraph {
+        assert!(dims.len() >= 2, "an MLP needs at least [in, out] dims");
+        let mut g = LayerGraph::new(format!("mlp[{}]", join_dims(dims)));
+        let mut prev = g.add(LayerKind::Input {
+            bytes: 4 * dims[0],
+            marshal_insts: dims[0] / 4 + 40,
+            raw_bytes: dims[0],
+        });
+        for l in 0..dims.len() - 1 {
+            prev = g.chain(prev, LayerKind::Dense {
+                rows: dims[l],
+                cols: dims[l + 1],
+                weight_slot: l,
+            });
+            prev = g.chain(prev, LayerKind::Activation {
+                kind: ActKind::Relu,
+                elems: dims[l + 1],
+            });
+        }
+        g.chain(prev, LayerKind::Output { bytes: 4 * dims[dims.len() - 1] });
+        g
+    }
+
+    /// The paper's MLP (§VII): two 1024x1024 Dense+ReLU layers.
+    pub fn mlp_paper(m: &MlpModel) -> LayerGraph {
+        let mut dims = vec![m.dim];
+        dims.extend(std::iter::repeat(m.dim).take(m.layers as usize));
+        LayerGraph::mlp(&dims)
+    }
+
+    /// The paper's LSTM (§VIII): cell layer + dense + softmax. Node ids:
+    /// 0 input, 1 cell, 2 dense, 3 softmax, 4 output.
+    pub fn lstm(m: &LstmModel) -> LayerGraph {
+        let mut g = LayerGraph::new(format!("lstm{}", m.n_h));
+        let input = g.add(LayerKind::Input {
+            bytes: 4 * m.x,
+            marshal_insts: (m.n_h + m.x) / 4 + 30,
+            raw_bytes: m.x,
+        });
+        let cell = g.chain(input, LayerKind::LstmCell { x: m.x, n_h: m.n_h, weight_slot: 0 });
+        let dense = g.chain(cell, LayerKind::Dense {
+            rows: m.dense_rows(),
+            cols: m.dense_cols(),
+            weight_slot: 1,
+        });
+        let sm = g.chain(dense, LayerKind::Activation { kind: ActKind::Softmax, elems: m.y });
+        g.chain(sm, LayerKind::Output { bytes: m.y });
+        g
+    }
+
+    /// The paper's CNNs (§IX): 5 conv layers (fused post-ops) + 3 dense
+    /// layers + softmax. Node ids: 0 input, 1..=5 convs, then
+    /// (dense, act) pairs, last node output.
+    pub fn cnn(m: &CnnModel) -> LayerGraph {
+        let mut g = LayerGraph::new(format!("cnn-{}", m.variant.name()));
+        let c0 = &m.convs[0];
+        let image_bytes = c0.in_hw * c0.in_hw * c0.in_ch;
+        let mut prev = g.add(LayerKind::Input {
+            bytes: image_bytes,
+            marshal_insts: 0,
+            raw_bytes: image_bytes,
+        });
+        for (k, l) in m.convs.iter().enumerate() {
+            prev = g.chain(prev, LayerKind::Conv2d { layer: *l, weight_slot: k });
+        }
+        let dims = [
+            (m.dense_inputs(), m.dense[0]),
+            (m.dense[0], m.dense[1]),
+            (m.dense[1], m.dense[2]),
+        ];
+        for (d, (rows, cols)) in dims.into_iter().enumerate() {
+            prev = g.chain(prev, LayerKind::Dense { rows, cols, weight_slot: 8 + d });
+            let kind = if d == 2 { ActKind::Softmax } else { ActKind::Relu };
+            prev = g.chain(prev, LayerKind::Activation { kind, elems: cols });
+        }
+        g.chain(prev, LayerKind::Output { bytes: m.dense[2] });
+        g
+    }
+}
+
+fn join_dims(dims: &[u64]) -> String {
+    dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_graph_shape() {
+        let g = LayerGraph::mlp(&[784, 512, 512, 10]);
+        // input + 3x(dense, relu) + output
+        assert_eq!(g.nodes.len(), 8);
+        assert_eq!(g.edges.len(), 7);
+        assert!(matches!(g.nodes[1].kind, LayerKind::Dense { rows: 784, cols: 512, weight_slot: 0 }));
+        assert!(matches!(g.nodes[7].kind, LayerKind::Output { bytes: 40 }));
+        assert_eq!(g.name, "mlp[784x512x512x10]");
+    }
+
+    #[test]
+    fn paper_mlp_matches_model() {
+        let g = LayerGraph::mlp_paper(&MlpModel::paper());
+        assert_eq!(g.nodes.len(), 6);
+        assert!(matches!(g.nodes[3].kind, LayerKind::Dense { rows: 1024, cols: 1024, weight_slot: 1 }));
+    }
+
+    #[test]
+    fn lstm_graph_shape() {
+        let m = LstmModel::paper(256);
+        let g = LayerGraph::lstm(&m);
+        assert_eq!(g.nodes.len(), 5);
+        assert_eq!(g.nodes[1].kind.mvm_rows(), Some(306));
+        assert_eq!(g.nodes[1].kind.mvm_cols(), Some(1024));
+        assert!(matches!(g.nodes[3].kind, LayerKind::Activation { kind: ActKind::Softmax, elems: 50 }));
+    }
+
+    #[test]
+    fn cnn_graph_shape() {
+        let m = CnnModel::paper(crate::nn::CnnVariant::Fast);
+        let g = LayerGraph::cnn(&m);
+        // input + 5 convs + 3x(dense, act) + output
+        assert_eq!(g.nodes.len(), 13);
+        assert!(matches!(g.nodes[0].kind, LayerKind::Input { bytes, .. } if bytes == 224 * 224 * 3));
+        assert!(matches!(g.nodes[12].kind, LayerKind::Output { bytes: 1000 }));
+    }
+
+    #[test]
+    fn chain_edges_connect() {
+        let g = LayerGraph::mlp(&[8, 4]);
+        for (i, (a, b)) in g.edges.iter().enumerate() {
+            assert_eq!(*a, i);
+            assert_eq!(*b, i + 1);
+        }
+    }
+}

@@ -4,9 +4,11 @@
 //! and are asserted against the paper's published numbers in tests.
 
 pub mod cnn;
+pub mod graph;
 pub mod lstm;
 pub mod mlp;
 
 pub use cnn::{CnnLayer, CnnModel, CnnVariant};
+pub use graph::{ActKind, LayerGraph, LayerKind, LayerNode, NodeId};
 pub use lstm::LstmModel;
 pub use mlp::MlpModel;

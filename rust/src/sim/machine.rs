@@ -21,21 +21,21 @@ use crate::workload::trace::TraceOp;
 
 /// Static description of the simulated platform's accelerator + sync
 /// fabric (which tile belongs to which core, channel topology).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct MachineSpec {
     pub tiles: Vec<TileSpec>,
     pub mutexes: usize,
     pub channels: Vec<ChannelSpec>,
 }
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TileSpec {
     pub rows: u32,
     pub cols: u32,
     pub coupling: Coupling,
 }
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChannelSpec {
     pub producer: usize,
     pub consumer: usize,

@@ -1,19 +1,19 @@
-//! CNN workload generator — Exploration Three (§IX, Fig. 12).
+//! CNN workloads — Exploration Three (§IX, Fig. 12) as a case table.
 //!
 //! 8-core MPSoC pipeline: conv1-5 on cores 0-4 (AIMC-mapped in the
-//! analog variant: kernels flattened into crossbar columns, feature-map
-//! patches queued per output pixel), dense1-3 on cores 5-7 (always
-//! CPU-side, §IX.A). Fine-grained pipelining: feature maps flow between
-//! stages one output row at a time through ping-pong channels.
+//! analog variant), dense1-3 on cores 5-7 (always CPU-side, §IX.A),
+//! expressed as five row-streamed stages + three per-inference stages
+//! over the mapping compiler. Fine-grained pipelining is preserved at
+//! [`ROW_GROUP`]-output-row granularity, as before.
 
 use crate::config::SystemConfig;
-use crate::isa::InstClass;
-use crate::nn::cnn::{CnnLayer, CnnModel, CnnVariant};
+use crate::nn::cnn::{CnnModel, CnnVariant};
+use crate::nn::LayerGraph;
 use crate::sim::aimc::{Coupling, Placement};
-use crate::sim::machine::{ChannelSpec, MachineSpec, TileSpec};
-use crate::stats::RoiKind;
-use crate::workload::trace::{TraceBuilder, TraceOp};
-use crate::workload::{addr, costs, Workload};
+use crate::sim::machine::TileSpec;
+use crate::workload::compile;
+use crate::workload::compile::mapping::{Mapping, Stage, StageInput, StageOutput, Step};
+use crate::workload::{Workload, WorkloadError};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CnnCase {
@@ -34,11 +34,37 @@ impl CnnCase {
 /// feature-map row individually would explode the trace; the paper's
 /// fine-grained pipelining is preserved at the level of `ROW_GROUP`
 /// output rows per transfer.
-const ROW_GROUP: u64 = 4;
+pub const ROW_GROUP: u64 = 4;
 
-pub fn generate(case: CnnCase, variant: CnnVariant, _cfg: &SystemConfig, n_inf: u32) -> Workload {
+/// Node ids of `LayerGraph::cnn`: 0 input, 1..=5 convs, then
+/// (dense, activation) pairs, last node output.
+const INPUT_NODE: usize = 0;
+fn conv_node(k: usize) -> usize {
+    1 + k
+}
+fn dense_node(d: usize) -> usize {
+    6 + 2 * d
+}
+fn act_node(d: usize) -> usize {
+    7 + 2 * d
+}
+const OUTPUT_NODE: usize = 12;
+
+pub fn generate(
+    case: CnnCase,
+    variant: CnnVariant,
+    _cfg: &SystemConfig,
+    n_inf: u32,
+) -> Result<Workload, WorkloadError> {
+    let (graph, mapping) = case_table(case, variant);
+    compile::compile(&graph, &mapping, n_inf)
+}
+
+/// The paper-case table: `(CnnCase, CnnVariant) -> (LayerGraph, Mapping)`.
+pub fn case_table(case: CnnCase, variant: CnnVariant) -> (LayerGraph, Mapping) {
     let model = CnnModel::paper(variant);
     let analog = case == CnnCase::Analog;
+    let graph = LayerGraph::cnn(&model);
 
     // Tiles: one per conv layer (analog only), sized for the flattened
     // kernels (§V.B: component dimensions are parameterizable).
@@ -56,261 +82,49 @@ pub fn generate(case: CnnCase, variant: CnnVariant, _cfg: &SystemConfig, n_inf: 
         Vec::new()
     };
 
-    // Channels: conv_k -> conv_{k+1} (0..3), conv5 -> dense1 (4),
-    // dense1 -> dense2 (5), dense2 -> dense3 (6).
-    let channels: Vec<ChannelSpec> = (0..7)
-        .map(|k| ChannelSpec { producer: k, consumer: k + 1, capacity: 2 })
-        .collect();
-
-    let mut cores: Vec<TraceBuilder> = (0..8).map(|_| TraceBuilder::new()).collect();
-
-    if analog {
-        for (k, l) in model.convs.iter().enumerate() {
-            cores[k].push(TraceOp::CmInit {
-                tile: k,
-                placement: Placement {
-                    row0: 0,
-                    col0: 0,
-                    rows: l.im2col_rows() as u32,
-                    cols: l.out_ch as u32,
-                },
-            });
-        }
+    let mut stages = Vec::new();
+    for (k, l) in model.convs.iter().enumerate() {
+        let mut s = Stage::on_core(k);
+        s.row_group = Some(ROW_GROUP);
+        s.input = if k == 0 { StageInput::Memory { node: INPUT_NODE } } else { StageInput::Channel };
+        // Conv forward payloads are derived from the layer geometry.
+        s.output = StageOutput::Channel { bytes: 0 };
+        s.steps = vec![if analog {
+            Step::tile(
+                conv_node(k),
+                k,
+                Placement { row0: 0, col0: 0, rows: l.im2col_rows() as u32, cols: l.out_ch as u32 },
+            )
+        } else {
+            Step::cpu(conv_node(k))
+        }];
+        stages.push(s);
+    }
+    for d in 0..3 {
+        let mut s = Stage::on_core(5 + d);
+        s.input = StageInput::Channel;
+        s.output = if d < 2 {
+            StageOutput::Channel { bytes: model.dense[d] }
+        } else {
+            StageOutput::Memory { node: OUTPUT_NODE }
+        };
+        s.steps = vec![Step::cpu(dense_node(d)), Step::cpu(act_node(d))];
+        stages.push(s);
     }
 
-    // Per-layer, per-row CM-op block (analog): the queue/process/dequeue
-    // sequence is identical for every output row of a layer — it carries
-    // no addresses — so it is built once here and memcpy-appended per
-    // row (and per inference) instead of being re-emitted op by op.
-    let row_blocks: Vec<Vec<TraceOp>> = if analog {
-        model
-            .convs
-            .iter()
-            .enumerate()
-            .map(|(k, l)| analog_row_block(k, l))
-            .collect()
-    } else {
-        Vec::new()
-    };
-
-    let marks: Vec<usize> = cores.iter().map(TraceBuilder::mark).collect();
-    for i in 0..n_inf {
-        if i == 1 {
-            // Inference 0 sized one block per core; reserve the rest.
-            for (b, mk) in cores.iter_mut().zip(&marks) {
-                b.reserve_repeats(*mk, n_inf - 1);
-            }
-        }
-        let mut prev_msgs: Option<u64> = None; // conv1 reads from memory
-        for (k, layer) in model.convs.iter().enumerate() {
-            let groups = layer.out_hw().div_ceil(ROW_GROUP);
-            let row_block = if analog { Some(row_blocks[k].as_slice()) } else { None };
-            emit_conv_stage(&mut cores[k], k, layer, i, row_block, prev_msgs);
-            prev_msgs = Some(groups);
-        }
-        emit_dense_stages(&mut cores, &model, i, prev_msgs.unwrap());
-    }
-
-    Workload {
+    let mapping = Mapping {
         label: format!("cnn-{}/{}", variant.name(), case.label()),
-        traces: cores.into_iter().map(|b| b.build()).collect(),
-        spec: MachineSpec { tiles, channels, mutexes: 0 },
-        inferences: n_inf,
-    }
-}
-
-/// The per-output-row op sequence of one analog conv layer: im2col
-/// gather, then per output pixel a software-pipelined queue/process
-/// (+dequeue of the previous pixel), and the final drain. Identical for
-/// every row of the layer, so callers append it as a block.
-fn analog_row_block(k: usize, l: &CnnLayer) -> Vec<TraceOp> {
-    let out_hw = l.out_hw();
-    let kk = l.im2col_rows();
-    let mut b = TraceBuilder::with_capacity(6 + 9 * out_hw as usize);
-    // im2col gather of the patch happens on the CPU (the paper flags
-    // tile-local SRAM reuse as future work, §IX.B); the feature maps are
-    // already int8, so no per-patch cast. The loop is software-
-    // pipelined: queue+fire pixel p, then retrieve pixel p-1 — the
-    // double-buffered DAC/ADC registers overlap the transfer of one
-    // pixel with the MVM of another.
-    b.roi(RoiKind::AnalogQueue, |b| {
-        b.compute(InstClass::IntAlu, out_hw * (kk / 4 + 12)); // gather
-    });
-    for px in 0..out_hw {
-        b.push(TraceOp::RoiPush { kind: RoiKind::AnalogQueue });
-        b.push(TraceOp::CmQueue { tile: k, bytes: kk });
-        b.push(TraceOp::RoiPop);
-        b.push(TraceOp::RoiPush { kind: RoiKind::AnalogProcess });
-        b.push(TraceOp::CmProcess { tile: k });
-        b.push(TraceOp::RoiPop);
-        if px > 0 {
-            b.push(TraceOp::RoiPush { kind: RoiKind::AnalogDequeue });
-            b.push(TraceOp::CmDequeue { tile: k, bytes: l.out_ch });
-            b.push(TraceOp::RoiPop);
-        }
-    }
-    // Drain the last pixel of the row.
-    b.push(TraceOp::RoiPush { kind: RoiKind::AnalogDequeue });
-    b.push(TraceOp::CmDequeue { tile: k, bytes: l.out_ch });
-    b.push(TraceOp::RoiPop);
-    b.build()
-}
-
-/// One conv pipeline stage for one inference. `in_msgs` is the number of
-/// messages the previous stage emits this inference (None: conv1 reads
-/// the image from memory); the recvs are spread across this stage's own
-/// row groups so producer and consumer counts always match.
-/// `row_block` is the pre-built analog per-row CM block (None: digital).
-fn emit_conv_stage(
-    b: &mut TraceBuilder,
-    k: usize,
-    l: &CnnLayer,
-    inf: u32,
-    row_block: Option<&[TraceOp]>,
-    in_msgs: Option<u64>,
-) {
-    let out_hw = l.out_hw();
-    let row_groups = out_hw.div_ceil(ROW_GROUP);
-    let out_row_bytes = l.pooled_hw() * l.out_ch;
-
-    for g in 0..row_groups {
-        // ---- receive input rows (conv1 loads from memory instead) ----
-        if let Some(in_msgs) = in_msgs {
-            // Distribute `in_msgs` recvs over `row_groups` groups.
-            let start = g * in_msgs / row_groups;
-            let end = (g + 1) * in_msgs / row_groups;
-            b.roi(RoiKind::Communication, |b| {
-                for _ in start..end {
-                    b.push(TraceOp::Recv { ch: k - 1 });
-                }
-            });
-        } else {
-            b.roi(RoiKind::InputLoad, |b| {
-                // The corresponding slice of the 224x224x3 input image.
-                let bytes = ROW_GROUP * l.stride * 224 * 3;
-                b.push(TraceOp::MemStream {
-                    base: addr::input(inf, 224 * 224 * 3) + g * bytes,
-                    bytes,
-                    write: false,
-                    insts_per_line: 1,
-                    prefetchable: true,
-                });
-            });
-        }
-
-        let this_rows = ROW_GROUP.min(out_hw - g * ROW_GROUP);
-        let px = this_rows * out_hw;
-        let kk = l.im2col_rows();
-
-        if let Some(block) = row_block {
-            // ---- analog: per output pixel queue/process/dequeue -------
-            // (pre-built per-row block; see `analog_row_block`).
-            b.reserve(block.len() * this_rows as usize);
-            for _row in 0..this_rows {
-                b.extend_from_slice(block);
-            }
-        } else {
-            // ---- digital: blocked int8 GEMM over this row group -------
-            b.roi(RoiKind::DigitalMvm, |b| {
-                // im2col materialization (gather).
-                b.compute(InstClass::IntAlu, px * (kk / 4 + 12));
-                // Weight panel streamed once per GEMM_ROW_BLOCK of pixels
-                // (this is the §IX "multiple passes on weights"; whether
-                // the passes hit LLC or DRAM is decided by the cache sim).
-                let passes = px.div_ceil(costs::GEMM_ROW_BLOCK);
-                for _ in 0..passes {
-                    b.stream_read(addr::weights(k), kk * l.out_ch, 1);
-                }
-                // out_ch dots of length kk per output pixel (blocked
-                // im2col GEMM efficiency, see costs::CONV_MACS_PER_INST).
-                b.compute(
-                    InstClass::SimdOp,
-                    px * l.out_ch * (kk / costs::CONV_MACS_PER_INST + 1),
-                );
-                b.compute(InstClass::IntAlu, px * l.out_ch / 8);
-            });
-        }
-
-        // ---- post-ops: ReLU (+LRN) (+pool), identical in both variants --
-        let elems = px * l.out_ch;
-        b.roi(RoiKind::Activation, |b| {
-            b.compute(InstClass::SimdOp, elems / 8 + 4); // ReLU
-            if l.lrn {
-                b.compute(InstClass::SimdOp, elems * costs::LRN_SIMD_PER_ELEM);
-            }
-            if l.pool > 1 {
-                // window^2 comparisons per pooled element, stride 2.
-                let pooled = elems / 4;
-                b.compute(InstClass::SimdOp, pooled * l.pool * l.pool / 4 + 4);
-            }
-        });
-
-        // ---- forward pooled rows to the next stage --------------------
-        b.roi(RoiKind::Communication, |b| {
-            b.push(TraceOp::Send {
-                ch: k,
-                bytes: (this_rows.div_ceil(l.pool.max(1)) * out_row_bytes / ROW_GROUP.max(1)).max(64),
-                addr: addr::channel(k, inf.wrapping_add(g as u32)),
-            });
-        });
-    }
-}
-
-/// Dense1-3 on cores 5-7 (digital in both variants, §IX.A).
-fn emit_dense_stages(cores: &mut [TraceBuilder], model: &CnnModel, inf: u32, conv_groups: u64) {
-    let dims = [
-        (model.dense_inputs(), model.dense[0]),
-        (model.dense[0], model.dense[1]),
-        (model.dense[1], model.dense[2]),
-    ];
-    for (d, (rows, cols)) in dims.iter().enumerate() {
-        let core = 5 + d;
-        let b = &mut cores[core];
-        b.roi(RoiKind::Communication, |b| {
-            if d == 0 {
-                // Drain all row-group messages from conv5.
-                for _ in 0..conv_groups {
-                    b.push(TraceOp::Recv { ch: 4 });
-                }
-            } else {
-                b.push(TraceOp::Recv { ch: 4 + d });
-            }
-        });
-        b.roi(RoiKind::DigitalMvm, |b| {
-            b.stream_read(addr::weights(8 + d), rows * cols, 1);
-            let c = costs::gemv_row_insts(*rows);
-            b.compute(InstClass::SimdOp, cols * c.simd_insts);
-            b.compute(InstClass::IntAlu, cols * c.alu_insts);
-        });
-        b.roi(RoiKind::Activation, |b| {
-            if d == 2 {
-                b.compute(
-                    InstClass::FpOp,
-                    cols * costs::activation_insts_per_elem(costs::Activation::SoftmaxPerElem),
-                );
-            } else {
-                b.compute(InstClass::SimdOp, cols / 8 + 4);
-            }
-        });
-        if d < 2 {
-            b.roi(RoiKind::Communication, |b| {
-                b.push(TraceOp::Send {
-                    ch: 5 + d,
-                    bytes: *cols,
-                    addr: addr::channel(5 + d, inf),
-                });
-            });
-        } else {
-            b.roi(RoiKind::Writeback, |b| {
-                b.stream_write(addr::output(inf, *cols), *cols, 2);
-            });
-        }
-    }
+        tiles,
+        min_mutexes: 0,
+        stages,
+    };
+    (graph, mapping)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::trace::TraceOp;
 
     fn cfg() -> SystemConfig {
         SystemConfig::high_power()
@@ -320,7 +134,7 @@ mod tests {
     fn both_cases_generate_for_all_variants() {
         for v in CnnVariant::ALL {
             for case in [CnnCase::Digital, CnnCase::Analog] {
-                let w = generate(case, v, &cfg(), 1);
+                let w = generate(case, v, &cfg(), 1).unwrap();
                 assert_eq!(w.traces.len(), 8, "{}", w.label);
                 assert!(w.total_ops() > 100);
             }
@@ -329,7 +143,7 @@ mod tests {
 
     #[test]
     fn analog_processes_once_per_output_pixel() {
-        let w = generate(CnnCase::Analog, CnnVariant::Fast, &cfg(), 1);
+        let w = generate(CnnCase::Analog, CnnVariant::Fast, &cfg(), 1).unwrap();
         let model = CnnModel::paper(CnnVariant::Fast);
         for (k, l) in model.convs.iter().enumerate() {
             let procs = w.traces[k]
@@ -342,13 +156,13 @@ mod tests {
 
     #[test]
     fn digital_has_no_tiles() {
-        let w = generate(CnnCase::Digital, CnnVariant::Slow, &cfg(), 1);
+        let w = generate(CnnCase::Digital, CnnVariant::Slow, &cfg(), 1).unwrap();
         assert!(w.spec.tiles.is_empty());
     }
 
     #[test]
     fn analog_tile_dims_match_im2col() {
-        let w = generate(CnnCase::Analog, CnnVariant::Medium, &cfg(), 1);
+        let w = generate(CnnCase::Analog, CnnVariant::Medium, &cfg(), 1).unwrap();
         let model = CnnModel::paper(CnnVariant::Medium);
         assert_eq!(w.spec.tiles.len(), 5);
         assert_eq!(w.spec.tiles[1].rows as u64, model.convs[1].im2col_rows());
@@ -357,7 +171,7 @@ mod tests {
 
     #[test]
     fn pipeline_channel_topology() {
-        let w = generate(CnnCase::Analog, CnnVariant::Fast, &cfg(), 1);
+        let w = generate(CnnCase::Analog, CnnVariant::Fast, &cfg(), 1).unwrap();
         assert_eq!(w.spec.channels.len(), 7);
         for (k, ch) in w.spec.channels.iter().enumerate() {
             assert_eq!(ch.producer, k);

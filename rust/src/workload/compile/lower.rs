@@ -1,0 +1,222 @@
+//! Shared lowering rules: the per-primitive trace emission the mapping
+//! compiler composes. These are the cost models the hand-written
+//! generators used (digital GEMV, AIMClib queue/process/dequeue with
+//! casts, activations, streaming input/writeback, the blocked conv GEMM
+//! and the software-pipelined per-pixel analog conv loop), factored out
+//! so every mapping lowers through one set of rules.
+
+use crate::isa::InstClass;
+use crate::nn::cnn::CnnLayer;
+use crate::stats::RoiKind;
+use crate::workload::trace::{TraceBuilder, TraceOp};
+use crate::workload::{addr, costs};
+
+/// Digital GEMV over `rows x cols` int8 weights starting at `w_base`:
+/// one weight stream through the hierarchy + SDOT-style MACs.
+pub(crate) fn digital_gemv(b: &mut TraceBuilder, w_base: u64, rows: u64, cols: u64) {
+    b.roi(RoiKind::DigitalMvm, |b| {
+        b.stream_read(w_base, rows * cols, 1);
+        let c = costs::gemv_row_insts(rows);
+        b.compute(InstClass::SimdOp, cols * c.simd_insts);
+        b.compute(InstClass::IntAlu, cols * c.alu_insts);
+    });
+}
+
+/// AIMClib queueVector: f32 -> int8 cast + pack + CM_QUEUE beats.
+pub(crate) fn queue(b: &mut TraceBuilder, tile: usize, elems: u64) {
+    b.roi(RoiKind::AnalogQueue, |b| {
+        b.compute(InstClass::SimdOp, costs::cast_insts(elems));
+        b.push(TraceOp::CmQueue { tile, bytes: elems });
+    });
+}
+
+pub(crate) fn process(b: &mut TraceBuilder, tile: usize) {
+    b.roi(RoiKind::AnalogProcess, |b| {
+        b.push(TraceOp::CmProcess { tile });
+    });
+}
+
+pub(crate) fn dequeue(b: &mut TraceBuilder, tile: usize, elems: u64) {
+    b.roi(RoiKind::AnalogDequeue, |b| {
+        b.push(TraceOp::CmDequeue { tile, bytes: elems });
+        b.compute(InstClass::SimdOp, costs::cast_insts(elems));
+    });
+}
+
+/// Vectorized ReLU over `elems` values.
+pub(crate) fn relu(b: &mut TraceBuilder, elems: u64) {
+    b.roi(RoiKind::Activation, |b| {
+        b.compute(InstClass::SimdOp, elems / 8 + 4);
+    });
+}
+
+/// Scalar-FP softmax over `elems` values.
+pub(crate) fn softmax(b: &mut TraceBuilder, elems: u64) {
+    b.roi(RoiKind::Activation, |b| {
+        b.compute(
+            InstClass::FpOp,
+            elems * costs::activation_insts_per_elem(costs::Activation::SoftmaxPerElem),
+        );
+    });
+}
+
+/// LSTM cell-gate activations over an `n`-slice: 3x sigmoid + 1x tanh.
+pub(crate) fn gate_activations(b: &mut TraceBuilder, n: u64) {
+    b.roi(RoiKind::Activation, |b| {
+        let fp = 3 * n * costs::activation_insts_per_elem(costs::Activation::Sigmoid)
+            + n * costs::activation_insts_per_elem(costs::Activation::Tanh);
+        b.compute(InstClass::FpOp, fp);
+    });
+}
+
+/// LSTM c/h update over an `n`-slice: elementwise mults/adds + tanh.
+pub(crate) fn gate_combine(b: &mut TraceBuilder, n: u64) {
+    b.roi(RoiKind::GateCombine, |b| {
+        b.compute(InstClass::SimdOp, n);
+        b.compute(
+            InstClass::FpOp,
+            n * costs::activation_insts_per_elem(costs::Activation::Tanh),
+        );
+    });
+}
+
+/// Standalone max-pool over `elems` values (window^2 comparisons per
+/// pooled element, stride-2 pooling).
+pub(crate) fn pool(b: &mut TraceBuilder, elems: u64, window: u64) {
+    b.roi(RoiKind::Activation, |b| {
+        let pooled = elems / 4;
+        b.compute(InstClass::SimdOp, pooled * window * window / 4 + 4);
+    });
+}
+
+/// Generic elementwise stage with explicit instruction budgets.
+pub(crate) fn elementwise(b: &mut TraceBuilder, simd_insts: u64, fp_insts: u64) {
+    b.roi(RoiKind::GateCombine, |b| {
+        b.compute(InstClass::SimdOp, simd_insts);
+        b.compute(InstClass::FpOp, fp_insts);
+    });
+}
+
+/// Fresh per-inference input: a cold, non-prefetchable stream of `bytes`
+/// plus AIMClib input marshalling.
+pub(crate) fn input_load(b: &mut TraceBuilder, inference: u32, bytes: u64, marshal_insts: u64) {
+    b.roi(RoiKind::InputLoad, |b| {
+        b.push(TraceOp::MemStream {
+            base: addr::input(inference, bytes),
+            bytes,
+            write: false,
+            insts_per_line: 2,
+            prefetchable: false,
+        });
+        b.compute(InstClass::IntAlu, marshal_insts);
+    });
+}
+
+/// Result writeback: `bytes` streamed to the output region.
+pub(crate) fn writeback(b: &mut TraceBuilder, inference: u32, bytes: u64) {
+    b.roi(RoiKind::Writeback, |b| {
+        b.stream_write(addr::output(inference, bytes), bytes, 2);
+    });
+}
+
+/// Digital conv over `px` output pixels of one row group: im2col gather,
+/// blocked int8 GEMM with weight-panel re-streaming, accumulation.
+pub(crate) fn conv_digital_group(b: &mut TraceBuilder, l: &CnnLayer, weight_slot: usize, px: u64) {
+    let kk = l.im2col_rows();
+    b.roi(RoiKind::DigitalMvm, |b| {
+        b.compute(InstClass::IntAlu, px * (kk / 4 + 12));
+        let passes = px.div_ceil(costs::GEMM_ROW_BLOCK);
+        for _ in 0..passes {
+            b.stream_read(addr::weights(weight_slot), kk * l.out_ch, 1);
+        }
+        b.compute(
+            InstClass::SimdOp,
+            px * l.out_ch * (kk / costs::CONV_MACS_PER_INST + 1),
+        );
+        b.compute(InstClass::IntAlu, px * l.out_ch / 8);
+    });
+}
+
+/// Fused conv post-ops over `elems` values: ReLU (+LRN) (+max-pool).
+pub(crate) fn conv_post_ops(b: &mut TraceBuilder, l: &CnnLayer, elems: u64) {
+    b.roi(RoiKind::Activation, |b| {
+        b.compute(InstClass::SimdOp, elems / 8 + 4);
+        if l.lrn {
+            b.compute(InstClass::SimdOp, elems * costs::LRN_SIMD_PER_ELEM);
+        }
+        if l.pool > 1 {
+            let pooled = elems / 4;
+            b.compute(InstClass::SimdOp, pooled * l.pool * l.pool / 4 + 4);
+        }
+    });
+}
+
+/// The per-output-row op block of one analog conv layer: im2col gather,
+/// then per output pixel a software-pipelined queue/process (+dequeue of
+/// the previous pixel), and the final drain. Identical for every row of
+/// the layer, so callers memcpy-append it per row.
+pub(crate) fn analog_conv_row_block(tile: usize, l: &CnnLayer) -> Vec<TraceOp> {
+    let out_hw = l.out_hw();
+    let kk = l.im2col_rows();
+    let mut b = TraceBuilder::with_capacity(6 + 9 * out_hw as usize);
+    b.roi(RoiKind::AnalogQueue, |b| {
+        b.compute(InstClass::IntAlu, out_hw * (kk / 4 + 12));
+    });
+    for px in 0..out_hw {
+        b.push(TraceOp::RoiPush { kind: RoiKind::AnalogQueue });
+        b.push(TraceOp::CmQueue { tile, bytes: kk });
+        b.push(TraceOp::RoiPop);
+        b.push(TraceOp::RoiPush { kind: RoiKind::AnalogProcess });
+        b.push(TraceOp::CmProcess { tile });
+        b.push(TraceOp::RoiPop);
+        if px > 0 {
+            b.push(TraceOp::RoiPush { kind: RoiKind::AnalogDequeue });
+            b.push(TraceOp::CmDequeue { tile, bytes: l.out_ch });
+            b.push(TraceOp::RoiPop);
+        }
+    }
+    b.push(TraceOp::RoiPush { kind: RoiKind::AnalogDequeue });
+    b.push(TraceOp::CmDequeue { tile, bytes: l.out_ch });
+    b.push(TraceOp::RoiPop);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemv_rule_streams_whole_matrix() {
+        let mut b = TraceBuilder::new();
+        digital_gemv(&mut b, addr::weights(0), 1024, 1024);
+        let bytes: u64 = b
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                TraceOp::MemStream { bytes, .. } => Some(*bytes),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(bytes, 1024 * 1024);
+    }
+
+    #[test]
+    fn analog_row_block_one_process_per_pixel() {
+        let l = crate::nn::CnnModel::paper(crate::nn::CnnVariant::Fast).convs[2];
+        let block = analog_conv_row_block(2, &l);
+        let procs = block.iter().filter(|op| matches!(op, TraceOp::CmProcess { .. })).count() as u64;
+        let deqs = block.iter().filter(|op| matches!(op, TraceOp::CmDequeue { .. })).count() as u64;
+        assert_eq!(procs, l.out_hw());
+        assert_eq!(deqs, l.out_hw());
+    }
+
+    #[test]
+    fn queue_dequeue_bracket_with_casts() {
+        let mut b = TraceBuilder::new();
+        queue(&mut b, 0, 256);
+        dequeue(&mut b, 0, 256);
+        assert!(matches!(b.ops[0], TraceOp::RoiPush { kind: RoiKind::AnalogQueue }));
+        assert!(b.ops.iter().any(|op| matches!(op, TraceOp::CmQueue { tile: 0, bytes: 256 })));
+        assert!(b.ops.iter().any(|op| matches!(op, TraceOp::CmDequeue { tile: 0, bytes: 256 })));
+    }
+}

@@ -1,0 +1,168 @@
+//! The mapping schema: *where and how* each layer of a [`LayerGraph`]
+//! executes.
+//!
+//! A [`Mapping`] is a linear chain of pipeline [`Stage`]s. Each stage
+//! owns one or more cores (replicas), executes an ordered list of layer
+//! [`Step`]s, and connects to its neighbours through channel boundaries.
+//! The compiler (`workload::compile::compile`) derives everything else —
+//! channel topology and numbering, mutex ids, CM_INITIALIZE preambles,
+//! per-core trace emission — from this declaration.
+//!
+//! [`LayerGraph`]: crate::nn::LayerGraph
+
+use crate::nn::NodeId;
+use crate::sim::aimc::Placement;
+use crate::sim::machine::TileSpec;
+
+/// Full placement declaration for one workload.
+#[derive(Clone, Debug)]
+pub struct Mapping {
+    /// Workload label carried into the generated `Workload`.
+    pub label: String,
+    /// The AIMC tiles of the platform (indexed by `TilePlacement::tile`).
+    pub tiles: Vec<TileSpec>,
+    /// Lower bound on the declared mutex count. Barrier mutexes are
+    /// auto-numbered on top; this exists because the paper's quin-core
+    /// LSTM platform declares one (unused) mutex in its `MachineSpec`.
+    pub min_mutexes: usize,
+    /// Pipeline stages in dataflow order; stage `i` feeds stage `i + 1`.
+    pub stages: Vec<Stage>,
+}
+
+/// How a replicated stage divides its work (ignored for 1 replica).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitKind {
+    /// Single core, no replication.
+    Single,
+    /// Column-parallel: each replica computes `1/parts` of every MVM's
+    /// output columns (weight slice per replica) and communicates its
+    /// slice to every consumer replica (Fig. 6b cases: DIG-4core, ANA-4).
+    Columns,
+    /// Column-parallel with a leader: replica 0 additionally gathers the
+    /// partial outputs, re-broadcasts the assembled vector to the other
+    /// replicas (recurrence) and alone feeds the next stage (the paper's
+    /// quin-core LSTM, §VIII).
+    LeaderGather,
+}
+
+/// Hand-off policy of the boundary *after* a stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Handoff {
+    /// Plain bounded ping-pong channel(s).
+    PingPong,
+    /// Mutex-style shared activation buffer: the producer must not
+    /// overwrite until the consumer acknowledges the previous inference
+    /// (§VII.C); compiled as forward channels plus reverse ack channels.
+    SharedBuffer,
+}
+
+/// Where a stage's per-inference input comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageInput {
+    /// No explicit input phase.
+    None,
+    /// Load the graph's `Input` node from memory.
+    Memory { node: NodeId },
+    /// Receive from the previous stage's boundary channels.
+    Channel,
+}
+
+/// Where a stage's per-inference result goes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageOutput {
+    /// No explicit output phase.
+    None,
+    /// Write the graph's `Output` node back to memory.
+    Memory { node: NodeId },
+    /// Send to the next stage. `bytes` is the payload per forward
+    /// message (a replica's slice under `Columns`; the assembled vector
+    /// under `LeaderGather`, whose gather messages carry `bytes/parts`).
+    /// Ignored (derived from the conv geometry) for row-streamed stages.
+    Channel { bytes: u64 },
+}
+
+/// One pipeline stage.
+#[derive(Clone, Debug)]
+pub struct Stage {
+    /// Core id per replica (length 1 = no replication).
+    pub cores: Vec<usize>,
+    pub split: SplitKind,
+    pub input: StageInput,
+    pub output: StageOutput,
+    /// Policy of this stage's *outgoing* boundary.
+    pub handoff: Handoff,
+    /// Bracket the stage with a mutex lock/unlock (auto-numbered).
+    pub barrier: bool,
+    /// `Some(rows)`: row-streamed execution (the CNN pipeline, §IX) —
+    /// the stage's single Conv2d step runs `rows` output rows at a time,
+    /// receiving/forwarding per row group instead of per inference.
+    pub row_group: Option<u64>,
+    /// Layer steps in execution order.
+    pub steps: Vec<Step>,
+}
+
+impl Stage {
+    /// A single-core per-inference stage with defaults.
+    pub fn on_core(core: usize) -> Stage {
+        Stage {
+            cores: vec![core],
+            split: SplitKind::Single,
+            input: StageInput::None,
+            output: StageOutput::None,
+            handoff: Handoff::PingPong,
+            barrier: false,
+            row_group: None,
+            steps: Vec::new(),
+        }
+    }
+
+    pub fn parts(&self) -> u64 {
+        self.cores.len() as u64
+    }
+}
+
+/// One layer executed by a stage.
+#[derive(Clone, Debug)]
+pub struct Step {
+    pub node: NodeId,
+    pub place: Place,
+}
+
+impl Step {
+    pub fn cpu(node: NodeId) -> Step {
+        Step { node, place: Place::Cpu }
+    }
+
+    pub fn tile(node: NodeId, tile: usize, placement: Placement) -> Step {
+        Step { node, place: Place::Tile { per_replica: vec![TilePlacement { tile, placement }] } }
+    }
+}
+
+/// A tile region claimed by one layer (replica).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TilePlacement {
+    pub tile: usize,
+    pub placement: Placement,
+}
+
+/// Execution engine of one step.
+#[derive(Clone, Debug)]
+pub enum Place {
+    /// Digital lowering on the stage's core(s) (SIMD GEMV / blocked GEMM
+    /// / vectorized elementwise).
+    Cpu,
+    /// AIMC MVM, one tile region per replica (`per_replica.len()` must
+    /// equal the stage's replica count).
+    Tile { per_replica: Vec<TilePlacement> },
+    /// AIMC MVM row-split across tiles on one core, partial outputs
+    /// accumulated digitally after dequeuing the last tile (Fig. 6b
+    /// case 2).
+    TileRowSplit { tiles: Vec<TilePlacement> },
+    /// Loosely-coupled fused accelerator chain: queue into the first
+    /// tile, fire every tile, dequeue from the last; the layers between
+    /// (marked [`Place::Fused`]) execute inside the accelerator (§VII.B).
+    TileChain { tiles: Vec<TilePlacement> },
+    /// Executed by the preceding `TileChain` (dedicated in-accelerator
+    /// units); emits no ops.
+    Fused,
+}

@@ -1,0 +1,1026 @@
+//! The mapping compiler: `(LayerGraph, Mapping) -> Workload` in one pass.
+//!
+//! The compiler validates the pair, derives the machine specification
+//! (channel topology + numbering, barrier mutexes, tile list), emits the
+//! CM_INITIALIZE preamble, and then lowers every stage's layer steps
+//! through the shared rules in [`lower`] — once per inference for
+//! per-inference stages, once per output-row group for row-streamed
+//! (CNN-style) stages. The three paper workloads and any custom graph
+//! compile through this same path; the retired hand-written generators
+//! survive under `workload::legacy` purely as the bit-equivalence
+//! oracle (see `tests/ir_equivalence.rs`).
+
+pub mod lower;
+pub mod mapping;
+
+use crate::isa::InstClass;
+use crate::nn::{LayerGraph, LayerKind, NodeId};
+use crate::sim::machine::{ChannelSpec, MachineSpec};
+use crate::stats::RoiKind;
+use crate::workload::trace::{TraceBuilder, TraceOp};
+use crate::workload::{addr, Workload, WorkloadError};
+use mapping::{Handoff, Mapping, Place, SplitKind, Stage, StageInput, StageOutput, Step};
+
+/// Bounded ping-pong depth of every compiled channel.
+pub const CHANNEL_CAPACITY: usize = 2;
+/// Ack message payload of shared-buffer hand-offs (§VII.C).
+pub const ACK_BYTES: u64 = 64;
+
+/// Per-stage channel/mutex assignment derived by the compiler.
+struct Wiring {
+    /// LeaderGather intra-stage channels: replica r -> leader (index r-1).
+    gather: Vec<usize>,
+    /// LeaderGather intra-stage channels: leader -> replica r (index r-1).
+    broadcast: Vec<usize>,
+    /// Outgoing boundary forward channels, producer-major
+    /// (`fwd[p * nc + c]`; LeaderGather producers: leader only, `fwd[c]`).
+    fwd: Vec<usize>,
+    /// Outgoing boundary ack channels (SharedBuffer), consumer-major
+    /// (`ack[c * np + p]`).
+    ack: Vec<usize>,
+    /// Barrier mutex id, if the stage declares one.
+    mutex: Option<usize>,
+}
+
+/// Compile a mapped layer graph into per-core traces + machine spec.
+pub fn compile(graph: &LayerGraph, mapping: &Mapping, n_inf: u32) -> Result<Workload, WorkloadError> {
+    validate(graph, mapping)?;
+    let (wirings, channels, mutexes) = wire(mapping);
+
+    let n_cores = mapping
+        .stages
+        .iter()
+        .flat_map(|s| s.cores.iter().copied())
+        .max()
+        .unwrap_or(0)
+        + 1;
+    let mut builders: Vec<TraceBuilder> = (0..n_cores).map(|_| TraceBuilder::new()).collect();
+
+    // CM_INITIALIZE preamble: program every claimed tile region, in
+    // stage / replica / step order (one-time cost, outside the ROI loop).
+    for s in &mapping.stages {
+        for (r, &core) in s.cores.iter().enumerate() {
+            for step in &s.steps {
+                match &step.place {
+                    Place::Tile { per_replica } => {
+                        let tp = per_replica[r];
+                        builders[core].push(TraceOp::CmInit { tile: tp.tile, placement: tp.placement });
+                    }
+                    Place::TileRowSplit { tiles } | Place::TileChain { tiles } => {
+                        for tp in tiles {
+                            builders[core].push(TraceOp::CmInit { tile: tp.tile, placement: tp.placement });
+                        }
+                    }
+                    Place::Cpu | Place::Fused => {}
+                }
+            }
+        }
+    }
+
+    // Pre-build the per-row CM-op block of each analog row-streamed
+    // (conv) stage once; it is memcpy-appended per output row.
+    let row_blocks: Vec<Option<Vec<TraceOp>>> = mapping
+        .stages
+        .iter()
+        .map(|s| {
+            if s.row_group.is_none() {
+                return None;
+            }
+            let step = &s.steps[0];
+            if let (Place::Tile { per_replica }, LayerKind::Conv2d { layer, .. }) =
+                (&step.place, &graph.nodes[step.node].kind)
+            {
+                Some(lower::analog_conv_row_block(per_replica[0].tile, layer))
+            } else {
+                None
+            }
+        })
+        .collect();
+
+    let marks: Vec<usize> = builders.iter().map(TraceBuilder::mark).collect();
+    for i in 0..n_inf {
+        if i == 1 {
+            // Inference 0 sized one block per core; reserve the rest.
+            for (b, m) in builders.iter_mut().zip(&marks) {
+                b.reserve_repeats(*m, n_inf - 1);
+            }
+        }
+        for (idx, s) in mapping.stages.iter().enumerate() {
+            if let Some(rg) = s.row_group {
+                emit_row_streamed(
+                    &mut builders[s.cores[0]],
+                    graph,
+                    mapping,
+                    &wirings,
+                    idx,
+                    rg,
+                    i,
+                    row_blocks[idx].as_deref(),
+                );
+            } else {
+                for r in 0..s.cores.len() {
+                    emit_replica(&mut builders[s.cores[r]], graph, mapping, &wirings, idx, r, i);
+                }
+            }
+        }
+    }
+
+    Ok(Workload {
+        label: mapping.label.clone(),
+        traces: builders.into_iter().map(TraceBuilder::build).collect(),
+        spec: MachineSpec { tiles: mapping.tiles.clone(), mutexes, channels },
+        inferences: n_inf,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Channel / mutex assignment
+// ---------------------------------------------------------------------------
+
+fn wire(mapping: &Mapping) -> (Vec<Wiring>, Vec<ChannelSpec>, usize) {
+    let mut channels: Vec<ChannelSpec> = Vec::new();
+    let mut wirings: Vec<Wiring> = Vec::with_capacity(mapping.stages.len());
+    let mut mutex_count = 0usize;
+    for (idx, s) in mapping.stages.iter().enumerate() {
+        let mut w = Wiring {
+            gather: Vec::new(),
+            broadcast: Vec::new(),
+            fwd: Vec::new(),
+            ack: Vec::new(),
+            mutex: None,
+        };
+        if s.barrier {
+            w.mutex = Some(mutex_count);
+            mutex_count += 1;
+        }
+        if s.split == SplitKind::LeaderGather {
+            let leader = s.cores[0];
+            for &r in &s.cores[1..] {
+                w.gather.push(channels.len());
+                channels.push(ChannelSpec { producer: r, consumer: leader, capacity: CHANNEL_CAPACITY });
+            }
+            for &r in &s.cores[1..] {
+                w.broadcast.push(channels.len());
+                channels.push(ChannelSpec { producer: leader, consumer: r, capacity: CHANNEL_CAPACITY });
+            }
+        }
+        if matches!(s.output, StageOutput::Channel { .. }) {
+            let next = &mapping.stages[idx + 1];
+            let producers: Vec<usize> = if s.split == SplitKind::LeaderGather {
+                vec![s.cores[0]]
+            } else {
+                s.cores.clone()
+            };
+            for &p in &producers {
+                for &c in &next.cores {
+                    w.fwd.push(channels.len());
+                    channels.push(ChannelSpec { producer: p, consumer: c, capacity: CHANNEL_CAPACITY });
+                }
+            }
+            if s.handoff == Handoff::SharedBuffer {
+                for &c in &next.cores {
+                    for &p in &producers {
+                        w.ack.push(channels.len());
+                        channels.push(ChannelSpec { producer: c, consumer: p, capacity: CHANNEL_CAPACITY });
+                    }
+                }
+            }
+        }
+        wirings.push(w);
+    }
+    (wirings, channels, mutex_count.max(mapping.min_mutexes))
+}
+
+/// Forward channels a consumer replica receives on, in producer order.
+fn fwd_for_consumer(prev: &Stage, prev_w: &Wiring, c_idx: usize, nc: usize) -> Vec<usize> {
+    if prev.split == SplitKind::LeaderGather {
+        vec![prev_w.fwd[c_idx]]
+    } else {
+        (0..prev.cores.len()).map(|p| prev_w.fwd[p * nc + c_idx]).collect()
+    }
+}
+
+/// Messages per inference on each incoming channel: row-streamed
+/// producers emit one message per output-row group.
+fn messages_per_inference(prev: &Stage, graph: &LayerGraph) -> u64 {
+    match prev.row_group {
+        Some(rg) => {
+            if let LayerKind::Conv2d { layer, .. } = &graph.nodes[prev.steps[0].node].kind {
+                layer.out_hw().div_ceil(rg)
+            } else {
+                1
+            }
+        }
+        None => 1,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-inference stage emission
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn emit_replica(
+    b: &mut TraceBuilder,
+    graph: &LayerGraph,
+    mapping: &Mapping,
+    wirings: &[Wiring],
+    idx: usize,
+    r: usize,
+    i: u32,
+) {
+    let s = &mapping.stages[idx];
+    let parts = s.parts();
+
+    // ---- input phase ------------------------------------------------------
+    match s.input {
+        StageInput::Memory { node } => {
+            if let LayerKind::Input { bytes, marshal_insts, raw_bytes } = graph.nodes[node].kind {
+                if s.split == SplitKind::LeaderGather && r > 0 {
+                    // Followers re-read the int8 copy of the same input
+                    // (it hits the LLC after the leader's cold load).
+                    b.roi(RoiKind::InputLoad, |b| {
+                        b.push(TraceOp::MemStream {
+                            base: addr::input(i, raw_bytes),
+                            bytes: raw_bytes,
+                            write: false,
+                            insts_per_line: 2,
+                            prefetchable: false,
+                        });
+                        b.compute(InstClass::IntAlu, marshal_insts);
+                    });
+                } else {
+                    lower::input_load(b, i, bytes, marshal_insts);
+                }
+            }
+        }
+        StageInput::Channel => {
+            let prev = &mapping.stages[idx - 1];
+            let chs = fwd_for_consumer(prev, &wirings[idx - 1], r, s.cores.len());
+            let per_ch = messages_per_inference(prev, graph);
+            b.roi(RoiKind::Communication, |b| {
+                for &ch in &chs {
+                    for _ in 0..per_ch {
+                        b.push(TraceOp::Recv { ch });
+                    }
+                }
+            });
+        }
+        StageInput::None => {}
+    }
+
+    // ---- layer steps ------------------------------------------------------
+    let mut si = 0;
+    while si < s.steps.len() {
+        let step = &s.steps[si];
+        if let Place::TileChain { tiles } = &step.place {
+            // Collect the fused run this chain executes in-accelerator.
+            let mut group: Vec<NodeId> = vec![step.node];
+            let mut j = si + 1;
+            while j < s.steps.len() && matches!(s.steps[j].place, Place::Fused) {
+                group.push(s.steps[j].node);
+                j += 1;
+            }
+            let rows = graph.nodes[group[0]].kind.mvm_rows().unwrap_or(0);
+            let cols = group
+                .iter()
+                .rev()
+                .find_map(|&n| graph.nodes[n].kind.mvm_cols())
+                .unwrap_or(0);
+            lower::queue(b, tiles[0].tile, rows);
+            for tp in tiles {
+                lower::process(b, tp.tile);
+            }
+            lower::dequeue(b, tiles.last().expect("validated non-empty chain").tile, cols);
+            si = j;
+        } else {
+            emit_step(b, graph, step, r, parts);
+            si += 1;
+        }
+    }
+
+    // ---- barrier ----------------------------------------------------------
+    if let Some(m) = wirings[idx].mutex {
+        b.roi(RoiKind::Sync, |b| {
+            b.push(TraceOp::MutexLock { id: m });
+            b.push(TraceOp::MutexUnlock { id: m });
+        });
+    }
+
+    // ---- communication / output ------------------------------------------
+    if s.split == SplitKind::LeaderGather {
+        let StageOutput::Channel { bytes } = s.output else {
+            unreachable!("validated: LeaderGather stages end in a channel")
+        };
+        let w = &wirings[idx];
+        if r == 0 {
+            b.roi(RoiKind::Communication, |b| {
+                for &ch in &w.gather {
+                    b.push(TraceOp::Recv { ch });
+                }
+                // Broadcast the assembled vector to every follower (the
+                // recurrence) and feed the next stage; the +k address
+                // nudge keeps the per-destination buffers distinct.
+                for (k, &ch) in w.broadcast.iter().chain(w.fwd.iter()).enumerate() {
+                    b.push(TraceOp::Send { ch, bytes, addr: addr::channel(ch, i) + k as u64 });
+                }
+            });
+        } else {
+            let gather_ch = w.gather[r - 1];
+            let bcast_ch = w.broadcast[r - 1];
+            // The gather message is the replica's fp32 output slice:
+            // 4 * (width/parts) bytes, where width = bytes/4. (Not
+            // bytes/parts — for widths not divisible by the replica
+            // count, e.g. n_h = 750 over 4 cores, the slice rounds
+            // down per element, not per byte.)
+            let slice_bytes = 4 * (bytes / 4 / parts);
+            b.roi(RoiKind::Communication, |b| {
+                b.push(TraceOp::Send {
+                    ch: gather_ch,
+                    bytes: slice_bytes,
+                    addr: addr::channel(gather_ch, i),
+                });
+                b.push(TraceOp::Recv { ch: bcast_ch });
+            });
+        }
+    } else {
+        match s.output {
+            StageOutput::Channel { bytes } => {
+                let w = &wirings[idx];
+                let nc = w.fwd.len() / s.cores.len();
+                let np = s.cores.len();
+                b.roi(RoiKind::Communication, |b| {
+                    if i > 0 && !w.ack.is_empty() {
+                        // Shared-buffer hand-off: wait for the consumer's
+                        // ack of the previous inference before reusing it.
+                        for c in 0..nc {
+                            b.push(TraceOp::Recv { ch: w.ack[c * np + r] });
+                        }
+                    }
+                    for c in 0..nc {
+                        let ch = w.fwd[r * nc + c];
+                        b.push(TraceOp::Send { ch, bytes, addr: addr::channel(ch, i) });
+                    }
+                });
+            }
+            StageOutput::Memory { node } => {
+                if let LayerKind::Output { bytes } = graph.nodes[node].kind {
+                    lower::writeback(b, i, bytes / parts);
+                }
+            }
+            StageOutput::None => {}
+        }
+    }
+
+    // ---- acknowledge an incoming shared-buffer hand-off -------------------
+    if s.input == StageInput::Channel {
+        let prev = &mapping.stages[idx - 1];
+        if prev.handoff == Handoff::SharedBuffer {
+            let pw = &wirings[idx - 1];
+            let np = if prev.split == SplitKind::LeaderGather { 1 } else { prev.cores.len() };
+            b.roi(RoiKind::Communication, |b| {
+                for p in 0..np {
+                    let ch = pw.ack[r * np + p];
+                    b.push(TraceOp::Send { ch, bytes: ACK_BYTES, addr: addr::channel(ch, i) });
+                }
+            });
+        }
+    }
+}
+
+/// Lower one non-chain layer step for replica `r` of a stage split
+/// `parts` ways.
+fn emit_step(b: &mut TraceBuilder, graph: &LayerGraph, step: &Step, r: usize, parts: u64) {
+    let node = &graph.nodes[step.node];
+    match &node.kind {
+        LayerKind::Dense { rows, cols, weight_slot } => {
+            emit_mvm(b, &step.place, *rows, *cols, *weight_slot, r, parts);
+        }
+        LayerKind::LstmCell { x, n_h, weight_slot } => {
+            emit_mvm(b, &step.place, n_h + x, 4 * n_h, *weight_slot, r, parts);
+            lower::gate_activations(b, n_h / parts);
+            lower::gate_combine(b, n_h / parts);
+        }
+        LayerKind::Activation { kind, elems } => match kind {
+            crate::nn::ActKind::Relu => lower::relu(b, elems / parts),
+            crate::nn::ActKind::Softmax => lower::softmax(b, elems / parts),
+        },
+        LayerKind::Pool { elems, window } => lower::pool(b, elems / parts, *window),
+        LayerKind::Elementwise { simd_insts, fp_insts } => {
+            lower::elementwise(b, simd_insts / parts, fp_insts / parts)
+        }
+        LayerKind::Input { .. } | LayerKind::Output { .. } | LayerKind::Conv2d { .. } => {
+            unreachable!("validated: not a per-inference step kind")
+        }
+    }
+}
+
+/// Lower one MVM (`rows x cols`, column-sliced `parts` ways) through the
+/// step's engine.
+fn emit_mvm(
+    b: &mut TraceBuilder,
+    place: &Place,
+    rows: u64,
+    cols: u64,
+    weight_slot: usize,
+    r: usize,
+    parts: u64,
+) {
+    let slice = cols / parts;
+    match place {
+        Place::Cpu => {
+            lower::digital_gemv(b, addr::weights(weight_slot) + r as u64 * (rows * slice), rows, slice);
+        }
+        Place::Tile { per_replica } => {
+            let tp = per_replica[r];
+            lower::queue(b, tp.tile, rows);
+            lower::process(b, tp.tile);
+            lower::dequeue(b, tp.tile, slice);
+        }
+        Place::TileRowSplit { tiles } => {
+            let k = tiles.len() as u64;
+            for tp in tiles {
+                lower::queue(b, tp.tile, rows / k);
+            }
+            for tp in tiles {
+                lower::process(b, tp.tile);
+            }
+            lower::dequeue(b, tiles.last().expect("validated non-empty split").tile, cols);
+            // The k partial outputs accumulate digitally after the drain.
+            b.roi(RoiKind::AnalogDequeue, |b| {
+                b.compute(InstClass::SimdOp, (k - 1) * cols / 8);
+            });
+        }
+        Place::Fused => {}
+        Place::TileChain { .. } => unreachable!("chains are lowered by the caller"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row-streamed (CNN pipeline) stage emission
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn emit_row_streamed(
+    b: &mut TraceBuilder,
+    graph: &LayerGraph,
+    mapping: &Mapping,
+    wirings: &[Wiring],
+    idx: usize,
+    rg: u64,
+    i: u32,
+    row_block: Option<&[TraceOp]>,
+) {
+    let s = &mapping.stages[idx];
+    let step = &s.steps[0];
+    let LayerKind::Conv2d { layer: l, weight_slot } = &graph.nodes[step.node].kind else {
+        unreachable!("validated: row-streamed stages run one Conv2d")
+    };
+    let out_hw = l.out_hw();
+    let row_groups = out_hw.div_ceil(rg);
+    let out_row_bytes = l.pooled_hw() * l.out_ch;
+
+    // Per-group receive counts. With at least one producer message per
+    // group this is the legacy span formula (kept verbatim for bit-
+    // equivalence with the oracle, including its non-uniform remainder
+    // distribution). With *fewer* messages than groups — a configuration
+    // the legacy CNN could never produce — each message lands at the
+    // FIRST group of its span, so no group computes on input that has
+    // not arrived yet.
+    let in_info: Option<(usize, Vec<u64>)> = if s.input == StageInput::Channel {
+        let prev = &mapping.stages[idx - 1];
+        let ch = fwd_for_consumer(prev, &wirings[idx - 1], 0, 1)[0];
+        let in_msgs = messages_per_inference(prev, graph);
+        let counts: Vec<u64> = if in_msgs >= row_groups {
+            (0..row_groups)
+                .map(|g| (g + 1) * in_msgs / row_groups - g * in_msgs / row_groups)
+                .collect()
+        } else {
+            let mut c = vec![0u64; row_groups as usize];
+            for m in 0..in_msgs {
+                c[(m * row_groups / in_msgs) as usize] += 1;
+            }
+            c
+        };
+        Some((ch, counts))
+    } else {
+        None
+    };
+    let out_ch_id: Option<usize> = if matches!(s.output, StageOutput::Channel { .. }) {
+        Some(wirings[idx].fwd[0])
+    } else {
+        None
+    };
+
+    for g in 0..row_groups {
+        // ---- receive input rows (or load the image slice) -----------------
+        if let Some((ch, counts)) = &in_info {
+            let ch = *ch;
+            let n = counts[g as usize];
+            b.roi(RoiKind::Communication, |b| {
+                for _ in 0..n {
+                    b.push(TraceOp::Recv { ch });
+                }
+            });
+        } else if matches!(s.input, StageInput::Memory { .. }) {
+            let image_bytes = l.in_hw * l.in_hw * l.in_ch;
+            let bytes = rg * l.stride * l.in_hw * l.in_ch;
+            b.roi(RoiKind::InputLoad, |b| {
+                b.push(TraceOp::MemStream {
+                    base: addr::input(i, image_bytes) + g * bytes,
+                    bytes,
+                    write: false,
+                    insts_per_line: 1,
+                    prefetchable: true,
+                });
+            });
+        }
+
+        let this_rows = rg.min(out_hw - g * rg);
+        let px = this_rows * out_hw;
+
+        if let Some(block) = row_block {
+            // Analog: software-pipelined per-pixel CM ops, one pre-built
+            // block per output row.
+            b.reserve(block.len() * this_rows as usize);
+            for _ in 0..this_rows {
+                b.extend_from_slice(block);
+            }
+        } else {
+            lower::conv_digital_group(b, l, *weight_slot, px);
+        }
+
+        lower::conv_post_ops(b, l, px * l.out_ch);
+
+        // ---- forward pooled rows to the next stage ------------------------
+        if let Some(ch) = out_ch_id {
+            let bytes = (this_rows.div_ceil(l.pool.max(1)) * out_row_bytes / rg.max(1)).max(64);
+            b.roi(RoiKind::Communication, |b| {
+                b.push(TraceOp::Send { ch, bytes, addr: addr::channel(ch, i.wrapping_add(g as u32)) });
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Validation
+// ---------------------------------------------------------------------------
+
+fn err(msg: String) -> WorkloadError {
+    WorkloadError::InvalidMapping(msg)
+}
+
+/// Validate a `(LayerGraph, Mapping)` pair without emitting traces —
+/// the same checks `compile` runs first (topology, placement bounds and
+/// overlap, tile I/O capacity, layer coverage, dataflow order).
+pub fn validate(graph: &LayerGraph, mapping: &Mapping) -> Result<(), WorkloadError> {
+    if mapping.stages.is_empty() {
+        return Err(err("mapping has no stages".into()));
+    }
+    let mut seen_cores = std::collections::HashSet::new();
+    // Per-tile claimed regions, for bounds + overlap checking.
+    let mut claims: Vec<Vec<crate::sim::aimc::Placement>> = vec![Vec::new(); mapping.tiles.len()];
+
+    for (idx, s) in mapping.stages.iter().enumerate() {
+        let last = idx + 1 == mapping.stages.len();
+        if s.cores.is_empty() {
+            return Err(err(format!("stage {idx} has no cores")));
+        }
+        for &c in &s.cores {
+            if !seen_cores.insert(c) {
+                return Err(err(format!("core {c} assigned to more than one stage")));
+            }
+        }
+        match s.split {
+            SplitKind::Single if s.cores.len() != 1 => {
+                return Err(err(format!("stage {idx}: Single split with {} cores", s.cores.len())));
+            }
+            SplitKind::Columns | SplitKind::LeaderGather if s.cores.len() < 2 => {
+                return Err(err(format!("stage {idx}: split stages need >= 2 cores")));
+            }
+            _ => {}
+        }
+        if s.split == SplitKind::LeaderGather {
+            if !matches!(s.output, StageOutput::Channel { .. }) {
+                return Err(err(format!("stage {idx}: LeaderGather must feed a channel")));
+            }
+            if s.handoff != Handoff::PingPong {
+                return Err(err(format!("stage {idx}: LeaderGather supports PingPong hand-off only")));
+            }
+        }
+
+        // Boundary structure: output channels connect to the next stage's
+        // channel input, and vice versa.
+        match s.input {
+            StageInput::Channel => {
+                if idx == 0 {
+                    return Err(err("stage 0 cannot receive from a channel".into()));
+                }
+                if !matches!(mapping.stages[idx - 1].output, StageOutput::Channel { .. }) {
+                    return Err(err(format!("stage {idx} expects a channel input but stage {} does not send", idx - 1)));
+                }
+            }
+            StageInput::Memory { node } => {
+                let Some(n) = graph.node(node) else {
+                    return Err(err(format!("stage {idx}: input node {node} not in graph")));
+                };
+                if !matches!(n.kind, LayerKind::Input { .. }) {
+                    return Err(err(format!("stage {idx}: input node {node} is not an Input layer")));
+                }
+            }
+            StageInput::None => {}
+        }
+        match s.output {
+            StageOutput::Channel { .. } => {
+                if last {
+                    return Err(err("the last stage cannot send to a channel".into()));
+                }
+                if mapping.stages[idx + 1].input != StageInput::Channel {
+                    return Err(err(format!("stage {idx} sends to a channel but stage {} does not receive", idx + 1)));
+                }
+            }
+            StageOutput::Memory { node } => {
+                let Some(n) = graph.node(node) else {
+                    return Err(err(format!("stage {idx}: output node {node} not in graph")));
+                };
+                if !matches!(n.kind, LayerKind::Output { .. }) {
+                    return Err(err(format!("stage {idx}: output node {node} is not an Output layer")));
+                }
+            }
+            StageOutput::None => {}
+        }
+
+        // Row-streamed stage shape.
+        if let Some(rg) = s.row_group {
+            if rg == 0 {
+                return Err(err(format!("stage {idx}: row group must be >= 1")));
+            }
+            if s.cores.len() != 1 {
+                return Err(err(format!("stage {idx}: row-streamed stages are single-core")));
+            }
+            if s.steps.len() != 1 {
+                return Err(err(format!("stage {idx}: row-streamed stages run exactly one Conv2d step")));
+            }
+            match graph.node(s.steps[0].node) {
+                Some(n) if matches!(n.kind, LayerKind::Conv2d { .. }) => {}
+                _ => {
+                    return Err(err(format!(
+                        "stage {idx}: row-streamed stages run a Conv2d step (node {})",
+                        s.steps[0].node
+                    )));
+                }
+            }
+            if s.barrier {
+                return Err(err(format!("stage {idx}: barriers on row-streamed stages are unsupported")));
+            }
+            if matches!(s.output, StageOutput::Memory { .. }) {
+                return Err(err(format!(
+                    "stage {idx}: row-streamed stages cannot write back to memory (feed a per-inference consumer stage instead)"
+                )));
+            }
+            if s.handoff != Handoff::PingPong {
+                return Err(err(format!("stage {idx}: row-streamed stages support PingPong only")));
+            }
+            if s.input == StageInput::Channel {
+                let prev = &mapping.stages[idx - 1];
+                if prev.handoff != Handoff::PingPong {
+                    return Err(err(format!("stage {idx}: row-streamed consumers need a PingPong producer")));
+                }
+                // The row loop receives on exactly one channel.
+                if prev.cores.len() != 1 && prev.split != SplitKind::LeaderGather {
+                    return Err(err(format!("stage {idx}: row-streamed consumers need a single producer endpoint")));
+                }
+            }
+            // The row loop sends on exactly one channel.
+            if matches!(s.output, StageOutput::Channel { .. })
+                && mapping.stages[idx + 1].cores.len() != 1
+            {
+                return Err(err(format!("stage {idx}: row-streamed producers need a single consumer core")));
+            }
+        }
+        validate_steps(graph, mapping, idx, s, &mut claims)?;
+    }
+    validate_coverage(graph, mapping)?;
+    Ok(())
+}
+
+/// Every compute layer must be mapped by exactly one step, and the
+/// mapping's global (stage-major) step order must respect the graph's
+/// dataflow edges.
+fn validate_coverage(graph: &LayerGraph, mapping: &Mapping) -> Result<(), WorkloadError> {
+    let mut pos: Vec<Option<(usize, usize)>> = vec![None; graph.nodes.len()];
+    for (sidx, s) in mapping.stages.iter().enumerate() {
+        for (stepi, step) in s.steps.iter().enumerate() {
+            // Out-of-range ids were already rejected by validate_steps.
+            if pos[step.node].is_some() {
+                return Err(err(format!("node {} is mapped by more than one step", step.node)));
+            }
+            pos[step.node] = Some((sidx, stepi));
+        }
+    }
+    for node in &graph.nodes {
+        let compute = !matches!(node.kind, LayerKind::Input { .. } | LayerKind::Output { .. });
+        if compute && pos[node.id].is_none() {
+            return Err(err(format!("compute node {} is not mapped by any stage", node.id)));
+        }
+    }
+    for &(a, b) in &graph.edges {
+        if let (Some(&Some(pa)), Some(&Some(pb))) = (pos.get(a), pos.get(b)) {
+            if pa >= pb {
+                return Err(err(format!(
+                    "mapping violates dataflow: node {a} must execute before node {b}"
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn validate_steps(
+    graph: &LayerGraph,
+    mapping: &Mapping,
+    idx: usize,
+    s: &Stage,
+    claims: &mut [Vec<crate::sim::aimc::Placement>],
+) -> Result<(), WorkloadError> {
+    let mut after_chain = false;
+    for (si, step) in s.steps.iter().enumerate() {
+        let Some(node) = graph.node(step.node) else {
+            return Err(err(format!("stage {idx}: step node {} not in graph", step.node)));
+        };
+        // Node kind / stage kind compatibility.
+        match &node.kind {
+            LayerKind::Input { .. } | LayerKind::Output { .. } => {
+                return Err(err(format!("stage {idx}: node {} (input/output) cannot be a step", step.node)));
+            }
+            LayerKind::Conv2d { .. } => {
+                if s.row_group.is_none() {
+                    return Err(err(format!("stage {idx}: Conv2d node {} needs a row-streamed stage", step.node)));
+                }
+                if !matches!(step.place, Place::Cpu | Place::Tile { .. }) {
+                    return Err(err(format!("stage {idx}: Conv2d supports Cpu or Tile placement")));
+                }
+            }
+            LayerKind::LstmCell { .. } => {
+                if !matches!(step.place, Place::Cpu | Place::Tile { .. }) {
+                    return Err(err(format!("stage {idx}: LstmCell supports Cpu or Tile placement")));
+                }
+            }
+            LayerKind::Activation { .. } | LayerKind::Pool { .. } | LayerKind::Elementwise { .. } => {
+                if !matches!(step.place, Place::Cpu | Place::Fused) {
+                    return Err(err(format!("stage {idx}: elementwise layers run on Cpu (or Fused)")));
+                }
+            }
+            LayerKind::Dense { .. } => {}
+        }
+        // Fused steps must ride a preceding chain.
+        match &step.place {
+            Place::TileChain { .. } => after_chain = true,
+            Place::Fused => {
+                if !after_chain {
+                    return Err(err(format!("stage {idx}: Fused step {} has no preceding TileChain", step.node)));
+                }
+            }
+            _ => after_chain = false,
+        }
+        // Engine shape checks + tile bookkeeping.
+        let parts = s.parts();
+        let (rows, cols) = (node.kind.mvm_rows(), node.kind.mvm_cols());
+        match &step.place {
+            Place::Cpu | Place::Fused => {}
+            Place::Tile { per_replica } => {
+                if per_replica.len() != s.cores.len() {
+                    return Err(err(format!(
+                        "stage {idx}: Tile placement count {} != replica count {}",
+                        per_replica.len(),
+                        s.cores.len()
+                    )));
+                }
+                let (Some(rows), Some(cols)) = (rows, cols) else {
+                    return Err(err(format!("stage {idx}: node {} has no MVM to place on a tile", step.node)));
+                };
+                for tp in per_replica {
+                    claim_tile(mapping, claims, idx, tp, rows, cols / parts)?;
+                }
+            }
+            Place::TileRowSplit { tiles } => {
+                if s.cores.len() != 1 {
+                    return Err(err(format!("stage {idx}: TileRowSplit requires a single-core stage")));
+                }
+                if tiles.is_empty() {
+                    return Err(err(format!("stage {idx}: TileRowSplit needs >= 1 tile")));
+                }
+                if !matches!(node.kind, LayerKind::Dense { .. }) {
+                    return Err(err(format!("stage {idx}: TileRowSplit supports Dense layers")));
+                }
+                let (rows, cols) = (rows.unwrap_or(0), cols.unwrap_or(0));
+                let k = tiles.len() as u64;
+                for tp in tiles {
+                    claim_tile(mapping, claims, idx, tp, rows / k, cols)?;
+                }
+            }
+            Place::TileChain { tiles } => {
+                if s.cores.len() != 1 {
+                    return Err(err(format!("stage {idx}: TileChain requires a single-core stage")));
+                }
+                if tiles.is_empty() {
+                    return Err(err(format!("stage {idx}: TileChain needs >= 1 tile")));
+                }
+                if !matches!(node.kind, LayerKind::Dense { .. }) {
+                    return Err(err(format!("stage {idx}: TileChain starts at a Dense layer")));
+                }
+                // Mirror the emission: the chain queues the head layer's
+                // rows into the first tile and dequeues the fused run's
+                // final MVM width from the last tile.
+                let mut chain_cols = cols;
+                for follow in &s.steps[si + 1..] {
+                    if !matches!(follow.place, Place::Fused) {
+                        break;
+                    }
+                    if let Some(c) = graph.node(follow.node).and_then(|n| n.kind.mvm_cols()) {
+                        chain_cols = Some(c);
+                    }
+                }
+                let rows = rows.unwrap_or(0);
+                let chain_cols = chain_cols.unwrap_or(0);
+                let last = tiles.len() - 1;
+                for (ti, tp) in tiles.iter().enumerate() {
+                    let q = if ti == 0 { rows } else { 0 };
+                    let d = if ti == last { chain_cols } else { 0 };
+                    claim_tile(mapping, claims, idx, tp, q, d)?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Record a tile claim and check bounds: placement inside the tile,
+/// no overlap with earlier claims, queue/dequeue within I/O memory.
+fn claim_tile(
+    mapping: &Mapping,
+    claims: &mut [Vec<crate::sim::aimc::Placement>],
+    idx: usize,
+    tp: &mapping::TilePlacement,
+    queue_elems: u64,
+    dequeue_elems: u64,
+) -> Result<(), WorkloadError> {
+    let Some(tile) = mapping.tiles.get(tp.tile) else {
+        return Err(err(format!("stage {idx}: tile {} not declared", tp.tile)));
+    };
+    let p = tp.placement;
+    if u64::from(p.row0) + u64::from(p.rows) > u64::from(tile.rows)
+        || u64::from(p.col0) + u64::from(p.cols) > u64::from(tile.cols)
+    {
+        return Err(err(format!(
+            "stage {idx}: placement {p:?} exceeds tile {} ({}x{})",
+            tp.tile, tile.rows, tile.cols
+        )));
+    }
+    if queue_elems > u64::from(tile.rows) {
+        return Err(err(format!(
+            "stage {idx}: queue of {queue_elems} B exceeds tile {} input memory ({} B)",
+            tp.tile, tile.rows
+        )));
+    }
+    if dequeue_elems > u64::from(tile.cols) {
+        return Err(err(format!(
+            "stage {idx}: dequeue of {dequeue_elems} B exceeds tile {} output memory ({} B)",
+            tp.tile, tile.cols
+        )));
+    }
+    for prior in &claims[tp.tile] {
+        if prior.overlaps(&p) {
+            return Err(err(format!(
+                "stage {idx}: placement {p:?} overlaps an earlier region on tile {}",
+                tp.tile
+            )));
+        }
+    }
+    claims[tp.tile].push(p);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::mapping::*;
+    use super::*;
+    use crate::nn::LayerGraph;
+    use crate::sim::aimc::{Coupling, Placement};
+    use crate::sim::machine::TileSpec;
+
+    fn two_stage_digital() -> (LayerGraph, Mapping) {
+        let g = LayerGraph::mlp(&[64, 64, 64]);
+        // nodes: 0 in, 1 dense0, 2 relu0, 3 dense1, 4 relu1, 5 out
+        let mut s0 = Stage::on_core(0);
+        s0.input = StageInput::Memory { node: 0 };
+        s0.output = StageOutput::Channel { bytes: 4 * 64 };
+        s0.steps = vec![Step::cpu(1), Step::cpu(2)];
+        let mut s1 = Stage::on_core(1);
+        s1.input = StageInput::Channel;
+        s1.output = StageOutput::Memory { node: 5 };
+        s1.steps = vec![Step::cpu(3), Step::cpu(4)];
+        let m = Mapping {
+            label: "test/dig2".into(),
+            tiles: Vec::new(),
+            min_mutexes: 0,
+            stages: vec![s0, s1],
+        };
+        (g, m)
+    }
+
+    #[test]
+    fn compiles_two_stage_pipeline() {
+        let (g, m) = two_stage_digital();
+        let w = compile(&g, &m, 3).unwrap();
+        assert_eq!(w.traces.len(), 2);
+        assert_eq!(w.spec.channels.len(), 1);
+        assert_eq!(w.spec.channels[0].producer, 0);
+        assert_eq!(w.spec.channels[0].consumer, 1);
+        let sends = w.traces[0].iter().filter(|op| matches!(op, TraceOp::Send { .. })).count();
+        let recvs = w.traces[1].iter().filter(|op| matches!(op, TraceOp::Recv { .. })).count();
+        assert_eq!(sends, 3);
+        assert_eq!(recvs, 3);
+    }
+
+    #[test]
+    fn rejects_dangling_channel() {
+        let (g, mut m) = two_stage_digital();
+        m.stages[1].input = StageInput::None;
+        assert!(compile(&g, &m, 1).is_err());
+    }
+
+    #[test]
+    fn rejects_core_reuse() {
+        let (g, mut m) = two_stage_digital();
+        m.stages[1].cores = vec![0];
+        assert!(compile(&g, &m, 1).is_err());
+    }
+
+    #[test]
+    fn rejects_undeclared_tile() {
+        let (g, mut m) = two_stage_digital();
+        m.stages[0].steps[0] = Step::tile(1, 0, Placement { row0: 0, col0: 0, rows: 64, cols: 64 });
+        assert!(compile(&g, &m, 1).is_err(), "no tiles declared");
+        m.tiles = vec![TileSpec { rows: 64, cols: 64, coupling: Coupling::Tight }];
+        assert!(compile(&g, &m, 1).is_ok());
+    }
+
+    #[test]
+    fn rejects_overlapping_placements() {
+        let (g, mut m) = two_stage_digital();
+        m.tiles = vec![TileSpec { rows: 64, cols: 128, coupling: Coupling::Tight }];
+        m.stages[0].steps[0] = Step::tile(1, 0, Placement { row0: 0, col0: 0, rows: 64, cols: 64 });
+        m.stages[1].steps[0] = Step::tile(3, 0, Placement { row0: 0, col0: 32, rows: 64, cols: 64 });
+        assert!(compile(&g, &m, 1).is_err());
+        m.stages[1].steps[0] = Step::tile(3, 0, Placement { row0: 0, col0: 64, rows: 64, cols: 64 });
+        assert!(compile(&g, &m, 1).is_ok());
+    }
+
+    #[test]
+    fn barrier_mutexes_autonumber() {
+        let (g, mut m) = two_stage_digital();
+        m.stages[0].barrier = true;
+        m.stages[1].barrier = true;
+        let w = compile(&g, &m, 1).unwrap();
+        assert_eq!(w.spec.mutexes, 2);
+        assert!(w.traces[0].iter().any(|op| matches!(op, TraceOp::MutexLock { id: 0 })));
+        assert!(w.traces[1].iter().any(|op| matches!(op, TraceOp::MutexLock { id: 1 })));
+    }
+
+    #[test]
+    fn min_mutexes_respected() {
+        let (g, mut m) = two_stage_digital();
+        m.min_mutexes = 3;
+        let w = compile(&g, &m, 1).unwrap();
+        assert_eq!(w.spec.mutexes, 3);
+    }
+
+    #[test]
+    fn rejects_unmapped_and_reordered_layers() {
+        let (g, mut m) = two_stage_digital();
+        m.stages[1].steps = vec![Step::cpu(4)]; // dense1 never mapped
+        assert!(compile(&g, &m, 1).is_err());
+        let (g, mut m) = two_stage_digital();
+        m.stages[0].steps = vec![Step::cpu(2), Step::cpu(1)]; // relu before its dense
+        assert!(compile(&g, &m, 1).is_err());
+        let (g, mut m) = two_stage_digital();
+        m.stages[1].steps = vec![Step::cpu(3), Step::cpu(4), Step::cpu(3)]; // double-mapped
+        assert!(compile(&g, &m, 1).is_err());
+    }
+
+    #[test]
+    fn shared_buffer_adds_ack_channels() {
+        let (g, mut m) = two_stage_digital();
+        m.stages[0].handoff = Handoff::SharedBuffer;
+        let w = compile(&g, &m, 2).unwrap();
+        assert_eq!(w.spec.channels.len(), 2);
+        assert_eq!(w.spec.channels[1].producer, 1);
+        assert_eq!(w.spec.channels[1].consumer, 0);
+        // Producer acks only from inference 1 on; consumer acks every one.
+        let prod_recvs = w.traces[0].iter().filter(|op| matches!(op, TraceOp::Recv { ch: 1 })).count();
+        let cons_sends = w.traces[1].iter().filter(|op| matches!(op, TraceOp::Send { ch: 1, .. })).count();
+        assert_eq!(prod_recvs, 1);
+        assert_eq!(cons_sends, 2);
+    }
+}

@@ -1,0 +1,539 @@
+//! Legacy hand-written MLP generator — kept verbatim as the bit-equivalence
+//! oracle for the mapping compiler (`workload::compile`); every `MlpCase`
+//! compiled from its `(LayerGraph, Mapping)` table must reproduce these
+//! traces exactly (see `tests/ir_equivalence.rs`). Deletable once the
+//! compiler path has soaked.
+
+use crate::config::SystemConfig;
+use crate::isa::InstClass;
+use crate::nn::MlpModel;
+use crate::workload::mlp::MlpCase;
+use crate::sim::aimc::{Coupling, Placement};
+use crate::sim::machine::{ChannelSpec, MachineSpec, TileSpec};
+use crate::stats::RoiKind;
+use crate::workload::trace::{TraceBuilder, TraceOp};
+use crate::workload::{addr, costs, Workload};
+
+pub fn generate(case: MlpCase, _cfg: &SystemConfig, n_inf: u32) -> Workload {
+    let model = MlpModel::paper();
+    match case {
+        MlpCase::Digital { cores: 1 } => digital_1core(model, n_inf),
+        MlpCase::Digital { cores: 2 } => digital_2core(model, n_inf),
+        MlpCase::Digital { cores: 4 } => digital_4core(model, n_inf),
+        MlpCase::Digital { cores } => panic!("unsupported digital core count {cores}"),
+        MlpCase::Analog { case: 1 } => analog_case1(model, n_inf),
+        MlpCase::Analog { case: 2 } => analog_case2(model, n_inf),
+        MlpCase::Analog { case: 3 } => analog_case3(model, n_inf),
+        MlpCase::Analog { case: 4 } => analog_case4(model, n_inf),
+        MlpCase::Analog { case } => panic!("unsupported analog case {case}"),
+        MlpCase::AnalogLoose => analog_loose(model, n_inf),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared emission helpers
+// ---------------------------------------------------------------------------
+
+/// Digital GEMV over `rows x cols` int8 weights: weight stream + SIMD MACs.
+fn emit_digital_gemv(b: &mut TraceBuilder, w_base: u64, rows: u64, cols: u64) {
+    b.roi(RoiKind::DigitalMvm, |b| {
+        // The weight matrix streams through the cache hierarchy once per
+        // inference (this is the §VII.E thrashing working set).
+        b.stream_read(w_base, rows * cols, 1);
+        let c = costs::gemv_row_insts(rows); // dot over `rows` per output
+        b.compute(InstClass::SimdOp, cols * c.simd_insts);
+        b.compute(InstClass::IntAlu, cols * c.alu_insts);
+    });
+}
+
+/// AIMClib queueVector: f32 -> int8 cast + pack + CM_QUEUE beats.
+pub(crate) fn emit_queue(b: &mut TraceBuilder, tile: usize, elems: u64) {
+    b.roi(RoiKind::AnalogQueue, |b| {
+        b.compute(InstClass::SimdOp, costs::cast_insts(elems));
+        b.push(TraceOp::CmQueue { tile, bytes: elems });
+    });
+}
+
+pub(crate) fn emit_process(b: &mut TraceBuilder, tile: usize) {
+    b.roi(RoiKind::AnalogProcess, |b| {
+        b.push(TraceOp::CmProcess { tile });
+    });
+}
+
+pub(crate) fn emit_dequeue(b: &mut TraceBuilder, tile: usize, elems: u64) {
+    b.roi(RoiKind::AnalogDequeue, |b| {
+        b.push(TraceOp::CmDequeue { tile, bytes: elems });
+        b.compute(InstClass::SimdOp, costs::cast_insts(elems));
+    });
+}
+
+fn emit_relu(b: &mut TraceBuilder, elems: u64) {
+    b.roi(RoiKind::Activation, |b| {
+        b.compute(InstClass::SimdOp, elems / 8 + 4);
+    });
+}
+
+fn emit_input_load(b: &mut TraceBuilder, i: u32, elems: u64) {
+    b.roi(RoiKind::InputLoad, |b| {
+        // Fresh fp32 input per inference (casting to int8 is AIMClib's
+        // job, §IV.C): cold lines, and the short read doesn't ramp the
+        // stride prefetcher.
+        let bytes = 4 * elems;
+        b.push(TraceOp::MemStream {
+            base: addr::input(i, bytes),
+            bytes,
+            write: false,
+            insts_per_line: 2,
+            prefetchable: false,
+        });
+        // AIMClib input marshalling (bounds checks, pointer setup).
+        b.compute(InstClass::IntAlu, elems / 4 + 40);
+    });
+}
+
+fn emit_writeback(b: &mut TraceBuilder, i: u32, elems: u64) {
+    b.roi(RoiKind::Writeback, |b| {
+        b.stream_write(addr::output(i, 4 * elems), 4 * elems, 2);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Digital references
+// ---------------------------------------------------------------------------
+
+fn digital_1core(m: MlpModel, n_inf: u32) -> Workload {
+    let n = m.dim;
+    let mut b = TraceBuilder::new();
+    let start = b.mark();
+    for i in 0..n_inf {
+        if i == 1 {
+            // Inference 0 sized one block; reserve the rest up front.
+            b.reserve_repeats(start, n_inf - 1);
+        }
+        emit_input_load(&mut b, i, n);
+        for l in 0..m.layers as usize {
+            emit_digital_gemv(&mut b, addr::weights(l), n, n);
+            emit_relu(&mut b, n);
+        }
+        emit_writeback(&mut b, i, n);
+    }
+    Workload {
+        label: "mlp/DIG-1core".into(),
+        traces: vec![b.build()],
+        spec: MachineSpec::default(),
+        inferences: n_inf,
+    }
+}
+
+fn digital_2core(m: MlpModel, n_inf: u32) -> Workload {
+    let n = m.dim;
+    // Core 0: input + layer 1; core 1: layer 2 + writeback.
+    let mut c0 = TraceBuilder::new();
+    let mut c1 = TraceBuilder::new();
+    let (s0, s1) = (c0.mark(), c1.mark());
+    for i in 0..n_inf {
+        if i == 1 {
+            c0.reserve_repeats(s0, n_inf - 1);
+            c1.reserve_repeats(s1, n_inf - 1);
+        }
+        emit_input_load(&mut c0, i, n);
+        emit_digital_gemv(&mut c0, addr::weights(0), n, n);
+        emit_relu(&mut c0, n);
+        c0.roi(RoiKind::Communication, |b| {
+            b.push(TraceOp::Send { ch: 0, bytes: 4 * n, addr: addr::channel(0, i) });
+        });
+
+        c1.roi(RoiKind::Communication, |b| {
+            b.push(TraceOp::Recv { ch: 0 });
+        });
+        emit_digital_gemv(&mut c1, addr::weights(1), n, n);
+        emit_relu(&mut c1, n);
+        emit_writeback(&mut c1, i, n);
+    }
+    Workload {
+        label: "mlp/DIG-2core".into(),
+        traces: vec![c0.build(), c1.build()],
+        spec: MachineSpec {
+            channels: vec![ChannelSpec { producer: 0, consumer: 1, capacity: 2 }],
+            ..Default::default()
+        },
+        inferences: n_inf,
+    }
+}
+
+fn digital_4core(m: MlpModel, n_inf: u32) -> Workload {
+    let n = m.dim;
+    let half = n / 2;
+    // Cores 0,1: column halves of layer 1; cores 2,3: halves of layer 2.
+    // Layer-1 halves are synced via a mutex before layer 2 proceeds.
+    let mut cores: Vec<TraceBuilder> = (0..4).map(|_| TraceBuilder::new()).collect();
+    // channels: 0->2, 0->3, 1->2, 1->3 (each layer-2 core needs both halves)
+    let ch = |p: usize, c: usize| -> usize {
+        match (p, c) {
+            (0, 2) => 0,
+            (0, 3) => 1,
+            (1, 2) => 2,
+            (1, 3) => 3,
+            _ => unreachable!(),
+        }
+    };
+    let marks: Vec<usize> = cores.iter().map(TraceBuilder::mark).collect();
+    for i in 0..n_inf {
+        if i == 1 {
+            for (b, m) in cores.iter_mut().zip(&marks) {
+                b.reserve_repeats(*m, n_inf - 1);
+            }
+        }
+        for p in 0..2usize {
+            let b = &mut cores[p];
+            emit_input_load(b, i, n);
+            // Half the columns: weight stream is half the matrix.
+            b.roi(RoiKind::DigitalMvm, |b| {
+                b.stream_read(addr::weights(0) + p as u64 * (n * half), n * half, 1);
+                let c = costs::gemv_row_insts(n);
+                b.compute(InstClass::SimdOp, half * c.simd_insts);
+                b.compute(InstClass::IntAlu, half * c.alu_insts);
+            });
+            emit_relu(b, half);
+            b.roi(RoiKind::Sync, |b| {
+                b.push(TraceOp::MutexLock { id: 0 });
+                b.push(TraceOp::MutexUnlock { id: 0 });
+            });
+            b.roi(RoiKind::Communication, |b| {
+                b.push(TraceOp::Send { ch: ch(p, 2), bytes: 4 * half, addr: addr::channel(ch(p, 2), i) });
+                b.push(TraceOp::Send { ch: ch(p, 3), bytes: 4 * half, addr: addr::channel(ch(p, 3), i) });
+            });
+        }
+        for (idx, c) in [2usize, 3].iter().enumerate() {
+            let b = &mut cores[*c];
+            b.roi(RoiKind::Communication, |b| {
+                b.push(TraceOp::Recv { ch: ch(0, *c) });
+                b.push(TraceOp::Recv { ch: ch(1, *c) });
+            });
+            b.roi(RoiKind::DigitalMvm, |b| {
+                b.stream_read(addr::weights(1) + idx as u64 * (n * half), n * half, 1);
+                let cst = costs::gemv_row_insts(n);
+                b.compute(InstClass::SimdOp, half * cst.simd_insts);
+                b.compute(InstClass::IntAlu, half * cst.alu_insts);
+            });
+            emit_relu(b, half);
+            b.roi(RoiKind::Sync, |b| {
+                b.push(TraceOp::MutexLock { id: 1 });
+                b.push(TraceOp::MutexUnlock { id: 1 });
+            });
+            emit_writeback(b, i, half);
+        }
+    }
+    Workload {
+        label: "mlp/DIG-4core".into(),
+        traces: cores.into_iter().map(|b| b.build()).collect(),
+        spec: MachineSpec {
+            mutexes: 2,
+            channels: vec![
+                ChannelSpec { producer: 0, consumer: 2, capacity: 2 },
+                ChannelSpec { producer: 0, consumer: 3, capacity: 2 },
+                ChannelSpec { producer: 1, consumer: 2, capacity: 2 },
+                ChannelSpec { producer: 1, consumer: 3, capacity: 2 },
+            ],
+            ..Default::default()
+        },
+        inferences: n_inf,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analog cases (Fig. 6b)
+// ---------------------------------------------------------------------------
+
+/// Case 1: single core, one large 1024x2048 tile holding both layers
+/// side by side; one CM_PROCESS per layer.
+fn analog_case1(m: MlpModel, n_inf: u32) -> Workload {
+    let n = m.dim;
+    let mut b = TraceBuilder::new();
+    b.push(TraceOp::CmInit {
+        tile: 0,
+        placement: Placement { row0: 0, col0: 0, rows: n as u32, cols: n as u32 },
+    });
+    b.push(TraceOp::CmInit {
+        tile: 0,
+        placement: Placement { row0: 0, col0: n as u32, rows: n as u32, cols: n as u32 },
+    });
+    let start = b.mark();
+    for i in 0..n_inf {
+        if i == 1 {
+            b.reserve_repeats(start, n_inf - 1);
+        }
+        emit_input_load(&mut b, i, n);
+        for _l in 0..m.layers {
+            emit_queue(&mut b, 0, n);
+            emit_process(&mut b, 0);
+            emit_dequeue(&mut b, 0, n);
+            emit_relu(&mut b, n);
+        }
+        emit_writeback(&mut b, i, n);
+    }
+    Workload {
+        label: "mlp/ANA-case1".into(),
+        traces: vec![b.build()],
+        spec: MachineSpec {
+            tiles: vec![TileSpec { rows: n as u32, cols: 2 * n as u32, coupling: Coupling::Tight }],
+            ..Default::default()
+        },
+        inferences: n_inf,
+    }
+}
+
+/// Case 2: single core, half-height tiles — each layer is split into two
+/// 512-row blocks (2 x CM_PROCESS per layer, partials accumulated by the
+/// tile-local digital logic), so CM_PROCESS fires twice as often (§VII.B).
+fn analog_case2(m: MlpModel, n_inf: u32) -> Workload {
+    let n = m.dim;
+    let half = (n / 2) as u32;
+    let mut b = TraceBuilder::new();
+    for t in 0..4usize {
+        b.push(TraceOp::CmInit {
+            tile: t,
+            placement: Placement { row0: 0, col0: 0, rows: half, cols: n as u32 },
+        });
+    }
+    let start = b.mark();
+    for i in 0..n_inf {
+        if i == 1 {
+            b.reserve_repeats(start, n_inf - 1);
+        }
+        emit_input_load(&mut b, i, n);
+        for l in 0..m.layers as usize {
+            let (ta, tb) = (2 * l, 2 * l + 1);
+            // Split the input vector across the two row-block tiles.
+            emit_queue(&mut b, ta, n / 2);
+            emit_queue(&mut b, tb, n / 2);
+            emit_process(&mut b, ta);
+            emit_process(&mut b, tb);
+            // Partial outputs accumulate digitally; one dequeue of the sum
+            // plus the extra adds.
+            emit_dequeue(&mut b, tb, n);
+            b.roi(RoiKind::AnalogDequeue, |b| {
+                b.compute(InstClass::SimdOp, n / 8);
+            });
+            emit_relu(&mut b, n);
+        }
+        emit_writeback(&mut b, i, n);
+    }
+    let tiles = (0..4)
+        .map(|_| TileSpec { rows: half, cols: n as u32, coupling: Coupling::Tight })
+        .collect();
+    Workload {
+        label: "mlp/ANA-case2".into(),
+        traces: vec![b.build()],
+        spec: MachineSpec { tiles, ..Default::default() },
+        inferences: n_inf,
+    }
+}
+
+/// Case 3: dual core, one layer per core. The hand-off buffer is the
+/// paper's mutex-synchronized shared activation array: the producer may
+/// not overwrite it until the consumer has finished the previous
+/// inference (§VII.C attributes the multi-core slowdown to exactly this
+/// inter-layer communication/synchronization).
+fn analog_case3(m: MlpModel, n_inf: u32) -> Workload {
+    let n = m.dim;
+    let mut c0 = TraceBuilder::new();
+    let mut c1 = TraceBuilder::new();
+    c0.push(TraceOp::CmInit {
+        tile: 0,
+        placement: Placement { row0: 0, col0: 0, rows: n as u32, cols: n as u32 },
+    });
+    c1.push(TraceOp::CmInit {
+        tile: 1,
+        placement: Placement { row0: 0, col0: 0, rows: n as u32, cols: n as u32 },
+    });
+    let (s0, s1) = (c0.mark(), c1.mark());
+    for i in 0..n_inf {
+        if i == 1 {
+            c0.reserve_repeats(s0, n_inf - 1);
+            c1.reserve_repeats(s1, n_inf - 1);
+        }
+        emit_input_load(&mut c0, i, n);
+        emit_queue(&mut c0, 0, n);
+        emit_process(&mut c0, 0);
+        emit_dequeue(&mut c0, 0, n);
+        emit_relu(&mut c0, n);
+        c0.roi(RoiKind::Communication, |b| {
+            if i > 0 {
+                b.push(TraceOp::Recv { ch: 1 }); // buffer-free ack
+            }
+            b.push(TraceOp::Send { ch: 0, bytes: 4 * n, addr: addr::channel(0, i) });
+        });
+
+        c1.roi(RoiKind::Communication, |b| {
+            b.push(TraceOp::Recv { ch: 0 });
+        });
+        emit_queue(&mut c1, 1, n);
+        emit_process(&mut c1, 1);
+        emit_dequeue(&mut c1, 1, n);
+        emit_relu(&mut c1, n);
+        emit_writeback(&mut c1, i, n);
+        c1.roi(RoiKind::Communication, |b| {
+            b.push(TraceOp::Send { ch: 1, bytes: 64, addr: addr::channel(1, i) });
+        });
+    }
+    Workload {
+        label: "mlp/ANA-case3".into(),
+        traces: vec![c0.build(), c1.build()],
+        spec: MachineSpec {
+            tiles: vec![
+                TileSpec { rows: n as u32, cols: n as u32, coupling: Coupling::Tight },
+                TileSpec { rows: n as u32, cols: n as u32, coupling: Coupling::Tight },
+            ],
+            channels: vec![
+                ChannelSpec { producer: 0, consumer: 1, capacity: 2 },
+                ChannelSpec { producer: 1, consumer: 0, capacity: 2 },
+            ],
+            ..Default::default()
+        },
+        inferences: n_inf,
+    }
+}
+
+/// Case 4: quad core, each layer's columns split across two cores; the
+/// layer-1 pair sync via a mutex, then both halves go to both layer-2
+/// cores (Fig. 6b case 4).
+fn analog_case4(m: MlpModel, n_inf: u32) -> Workload {
+    let n = m.dim;
+    let half = n / 2;
+    let mut cores: Vec<TraceBuilder> = (0..4).map(|_| TraceBuilder::new()).collect();
+    for (core, tile) in (0..4usize).zip(0..4usize) {
+        cores[core].push(TraceOp::CmInit {
+            tile,
+            placement: Placement { row0: 0, col0: 0, rows: n as u32, cols: half as u32 },
+        });
+    }
+    let ch = |p: usize, c: usize| -> usize {
+        match (p, c) {
+            (0, 2) => 0,
+            (0, 3) => 1,
+            (1, 2) => 2,
+            (1, 3) => 3,
+            _ => unreachable!(),
+        }
+    };
+    // Ack channels (shared-buffer synchronization, as in case 3):
+    // 2->0 (4), 2->1 (5), 3->0 (6), 3->1 (7).
+    let ack = |c: usize, p: usize| -> usize { 4 + (c - 2) * 2 + p };
+    let marks: Vec<usize> = cores.iter().map(TraceBuilder::mark).collect();
+    for i in 0..n_inf {
+        if i == 1 {
+            for (b, m) in cores.iter_mut().zip(&marks) {
+                b.reserve_repeats(*m, n_inf - 1);
+            }
+        }
+        for p in 0..2usize {
+            let b = &mut cores[p];
+            emit_input_load(b, i, n);
+            emit_queue(b, p, n); // full input rows, half the columns
+            emit_process(b, p);
+            emit_dequeue(b, p, half);
+            emit_relu(b, half);
+            b.roi(RoiKind::Sync, |b| {
+                b.push(TraceOp::MutexLock { id: 0 });
+                b.push(TraceOp::MutexUnlock { id: 0 });
+            });
+            b.roi(RoiKind::Communication, |b| {
+                if i > 0 {
+                    b.push(TraceOp::Recv { ch: ack(2, p) });
+                    b.push(TraceOp::Recv { ch: ack(3, p) });
+                }
+                b.push(TraceOp::Send { ch: ch(p, 2), bytes: 4 * half, addr: addr::channel(ch(p, 2), i) });
+                b.push(TraceOp::Send { ch: ch(p, 3), bytes: 4 * half, addr: addr::channel(ch(p, 3), i) });
+            });
+        }
+        for c in [2usize, 3] {
+            let b = &mut cores[c];
+            b.roi(RoiKind::Communication, |b| {
+                b.push(TraceOp::Recv { ch: ch(0, c) });
+                b.push(TraceOp::Recv { ch: ch(1, c) });
+            });
+            emit_queue(b, c, n);
+            emit_process(b, c);
+            emit_dequeue(b, c, half);
+            emit_relu(b, half);
+            b.roi(RoiKind::Sync, |b| {
+                b.push(TraceOp::MutexLock { id: 1 });
+                b.push(TraceOp::MutexUnlock { id: 1 });
+            });
+            emit_writeback(b, i, half);
+            b.roi(RoiKind::Communication, |b| {
+                b.push(TraceOp::Send { ch: ack(c, 0), bytes: 64, addr: addr::channel(ack(c, 0), i) });
+                b.push(TraceOp::Send { ch: ack(c, 1), bytes: 64, addr: addr::channel(ack(c, 1), i) });
+            });
+        }
+    }
+    let tiles = (0..4)
+        .map(|_| TileSpec { rows: n as u32, cols: half as u32, coupling: Coupling::Tight })
+        .collect();
+    Workload {
+        label: "mlp/ANA-case4".into(),
+        traces: cores.into_iter().map(|b| b.build()).collect(),
+        spec: MachineSpec {
+            tiles,
+            mutexes: 2,
+            channels: vec![
+                ChannelSpec { producer: 0, consumer: 2, capacity: 2 },
+                ChannelSpec { producer: 0, consumer: 3, capacity: 2 },
+                ChannelSpec { producer: 1, consumer: 2, capacity: 2 },
+                ChannelSpec { producer: 1, consumer: 3, capacity: 2 },
+                ChannelSpec { producer: 2, consumer: 0, capacity: 2 },
+                ChannelSpec { producer: 2, consumer: 1, capacity: 2 },
+                ChannelSpec { producer: 3, consumer: 0, capacity: 2 },
+                ChannelSpec { producer: 3, consumer: 1, capacity: 2 },
+            ],
+            ..Default::default()
+        },
+        inferences: n_inf,
+    }
+}
+
+/// §VII.B loosely-coupled: two pipelined tiles with dedicated ReLU units
+/// in an off-chip accelerator; a single CPU core feeds inputs and
+/// collects outputs over the peripheral I/O bus.
+fn analog_loose(m: MlpModel, n_inf: u32) -> Workload {
+    let n = m.dim;
+    let mut b = TraceBuilder::new();
+    b.push(TraceOp::CmInit {
+        tile: 0,
+        placement: Placement { row0: 0, col0: 0, rows: n as u32, cols: n as u32 },
+    });
+    b.push(TraceOp::CmInit {
+        tile: 1,
+        placement: Placement { row0: 0, col0: 0, rows: n as u32, cols: n as u32 },
+    });
+    let start = b.mark();
+    for i in 0..n_inf {
+        if i == 1 {
+            b.reserve_repeats(start, n_inf - 1);
+        }
+        emit_input_load(&mut b, i, n);
+        emit_queue(&mut b, 0, n);
+        // Both layers execute inside the accelerator (tile-to-tile
+        // forwarding through the dedicated ReLU units); the CPU only
+        // waits for the two processes.
+        emit_process(&mut b, 0);
+        emit_process(&mut b, 1);
+        emit_dequeue(&mut b, 1, n);
+        emit_relu(&mut b, n);
+        emit_writeback(&mut b, i, n);
+    }
+    Workload {
+        label: "mlp/ANA-loose".into(),
+        traces: vec![b.build()],
+        spec: MachineSpec {
+            tiles: vec![
+                TileSpec { rows: n as u32, cols: n as u32, coupling: Coupling::Loose },
+                TileSpec { rows: n as u32, cols: n as u32, coupling: Coupling::Loose },
+            ],
+            ..Default::default()
+        },
+        inferences: n_inf,
+    }
+}
+

@@ -1,0 +1,14 @@
+//! The retired hand-written workload generators, kept **verbatim** as
+//! the test oracle for the mapping compiler.
+//!
+//! `workload::{mlp,lstm,cnn}::generate` now lower every case through
+//! `(LayerGraph, Mapping)` + `workload::compile::compile`; the
+//! `ir_equivalence` integration tests (and the CI `ir-equivalence` gate)
+//! assert the compiled traces, machine specs and resulting `RunStats`
+//! are bit-identical to these generators for every paper case. Once the
+//! compiler path has soaked for a release, this module can be deleted
+//! along with those tests.
+
+pub mod cnn;
+pub mod lstm;
+pub mod mlp;

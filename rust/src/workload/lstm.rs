@@ -1,20 +1,22 @@
-//! LSTM workload generator — Exploration Two (§VIII, Fig. 9, Table II).
+//! LSTM workloads — Exploration Two (§VIII, Fig. 9, Table II) as a case
+//! table over the mapping compiler.
 //!
 //! One inference step = one character: cell-layer MVM (all four gates in
-//! a single CM_PROCESS, §VIII.D), digital gate activations + combination,
-//! dense layer, softmax. Cases: single-core with one large tile (1) or
-//! per-layer tiles (2), dual-core pipelined (3), quin-core with the cell
-//! column-sliced across four cores (4).
+//! a single CM_PROCESS, §VIII.D) + digital gate math, dense layer,
+//! softmax. Cases: single-core with one large tile (1) or per-layer
+//! tiles (2), dual-core pipelined (3), quin-core with the cell
+//! column-sliced across four cores via a leader-gather split (4), and
+//! the digital references on 1/2/5 cores.
 
 use crate::config::SystemConfig;
-use crate::isa::InstClass;
-use crate::nn::LstmModel;
+use crate::nn::{LayerGraph, LstmModel};
 use crate::sim::aimc::{Coupling, Placement};
-use crate::sim::machine::{ChannelSpec, MachineSpec, TileSpec};
-use crate::stats::RoiKind;
-use crate::workload::mlp::{emit_dequeue, emit_process, emit_queue};
-use crate::workload::trace::{TraceBuilder, TraceOp};
-use crate::workload::{addr, costs, Workload};
+use crate::sim::machine::TileSpec;
+use crate::workload::compile;
+use crate::workload::compile::mapping::{
+    Mapping, Place, SplitKind, Stage, StageInput, StageOutput, Step, TilePlacement,
+};
+use crate::workload::{Workload, WorkloadError};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LstmCase {
@@ -33,499 +35,190 @@ impl LstmCase {
     }
 }
 
-pub fn generate(case: LstmCase, n_h: u64, _cfg: &SystemConfig, n_inf: u32) -> Workload {
+/// Node ids of `LayerGraph::lstm`.
+const INPUT_NODE: usize = 0;
+const CELL_NODE: usize = 1;
+const DENSE_NODE: usize = 2;
+const SOFTMAX_NODE: usize = 3;
+const OUTPUT_NODE: usize = 4;
+
+pub fn generate(
+    case: LstmCase,
+    n_h: u64,
+    _cfg: &SystemConfig,
+    n_inf: u32,
+) -> Result<Workload, WorkloadError> {
+    let (graph, mapping) = case_table(case, n_h)?;
+    compile::compile(&graph, &mapping, n_inf)
+}
+
+/// The paper-case table: `LstmCase -> (LayerGraph, Mapping)`.
+pub fn case_table(case: LstmCase, n_h: u64) -> Result<(LayerGraph, Mapping), WorkloadError> {
     let m = LstmModel::paper(n_h);
-    match case {
-        LstmCase::Digital { cores: 1 } => digital_1core(m, n_inf),
-        LstmCase::Digital { cores: 2 } => digital_2core(m, n_inf),
-        LstmCase::Digital { cores: 5 } => digital_5core(m, n_inf),
-        LstmCase::Digital { cores } => panic!("unsupported digital core count {cores}"),
-        LstmCase::Analog { case: c @ (1 | 2) } => analog_single(m, n_inf, c),
-        LstmCase::Analog { case: 3 } => analog_case3(m, n_inf),
-        LstmCase::Analog { case: 4 } => analog_case4(m, n_inf),
-        LstmCase::Analog { case } => panic!("unsupported analog case {case}"),
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Digital building blocks
-// ---------------------------------------------------------------------------
-
-fn emit_input_load(b: &mut TraceBuilder, i: u32, m: &LstmModel) {
-    b.roi(RoiKind::InputLoad, |b| {
-        // fp32 character embedding, cold per step.
-        b.push(TraceOp::MemStream {
-            base: addr::input(i, 4 * m.x),
-            bytes: 4 * m.x,
-            write: false,
-            insts_per_line: 2,
-            prefetchable: false,
-        });
-        // Concatenate [h, x] into the staging buffer.
-        b.compute(InstClass::IntAlu, (m.n_h + m.x) / 4 + 30);
-    });
-}
-
-/// Cell-gate activations: 3x sigmoid + 1x tanh over n_h-vectors each.
-fn emit_gate_activations(b: &mut TraceBuilder, n_h: u64, fraction: u64) {
-    let n = n_h / fraction;
-    b.roi(RoiKind::Activation, |b| {
-        let fp = 3 * n * costs::activation_insts_per_elem(costs::Activation::Sigmoid)
-            + n * costs::activation_insts_per_elem(costs::Activation::Tanh);
-        b.compute(InstClass::FpOp, fp);
-    });
-}
-
-/// c/h update: elementwise mults/adds + tanh(c_new).
-fn emit_gate_combine(b: &mut TraceBuilder, n_h: u64, fraction: u64) {
-    let n = n_h / fraction;
-    b.roi(RoiKind::GateCombine, |b| {
-        b.compute(InstClass::SimdOp, n); // f*c + i*g etc., 4-wide fp32
-        b.compute(
-            InstClass::FpOp,
-            n * costs::activation_insts_per_elem(costs::Activation::Tanh),
-        );
-    });
-}
-
-fn emit_softmax(b: &mut TraceBuilder, y: u64) {
-    b.roi(RoiKind::Activation, |b| {
-        b.compute(
-            InstClass::FpOp,
-            y * costs::activation_insts_per_elem(costs::Activation::SoftmaxPerElem),
-        );
-    });
-}
-
-fn emit_writeback(b: &mut TraceBuilder, i: u32, y: u64) {
-    b.roi(RoiKind::Writeback, |b| {
-        b.stream_write(addr::output(i, y), y, 2);
-    });
-}
-
-/// Digital cell MVM: stream the 4-gate weight matrix, SDOT GEMV.
-fn emit_digital_cell(b: &mut TraceBuilder, m: &LstmModel, col_fraction: u64) {
-    let rows = m.cell_rows();
-    let cols = m.cell_cols() / col_fraction;
-    b.roi(RoiKind::DigitalMvm, |b| {
-        b.stream_read(addr::weights(0), rows * cols, 1);
-        let c = costs::gemv_row_insts(rows);
-        b.compute(InstClass::SimdOp, cols * c.simd_insts);
-        b.compute(InstClass::IntAlu, cols * c.alu_insts);
-    });
-}
-
-fn emit_digital_dense(b: &mut TraceBuilder, m: &LstmModel) {
-    b.roi(RoiKind::DigitalMvm, |b| {
-        b.stream_read(addr::weights(1), m.dense_rows() * m.dense_cols(), 1);
-        let c = costs::gemv_row_insts(m.dense_rows());
-        b.compute(InstClass::SimdOp, m.dense_cols() * c.simd_insts);
-        b.compute(InstClass::IntAlu, m.dense_cols() * c.alu_insts);
-    });
-}
-
-// ---------------------------------------------------------------------------
-// Digital cases
-// ---------------------------------------------------------------------------
-
-fn digital_1core(m: LstmModel, n_inf: u32) -> Workload {
-    let mut b = TraceBuilder::new();
-    let start = b.mark();
-    for i in 0..n_inf {
-        if i == 1 {
-            // Inference 0 sized one block; reserve the rest up front.
-            b.reserve_repeats(start, n_inf - 1);
-        }
-        emit_input_load(&mut b, i, &m);
-        emit_digital_cell(&mut b, &m, 1);
-        emit_gate_activations(&mut b, m.n_h, 1);
-        emit_gate_combine(&mut b, m.n_h, 1);
-        emit_digital_dense(&mut b, &m);
-        emit_softmax(&mut b, m.y);
-        emit_writeback(&mut b, i, m.y);
-    }
-    Workload {
-        label: format!("lstm{}/DIG-1core", m.n_h),
-        traces: vec![b.build()],
-        spec: MachineSpec::default(),
-        inferences: n_inf,
-    }
-}
-
-fn digital_2core(m: LstmModel, n_inf: u32) -> Workload {
-    let mut c0 = TraceBuilder::new();
-    let mut c1 = TraceBuilder::new();
-    let (s0, s1) = (c0.mark(), c1.mark());
-    for i in 0..n_inf {
-        if i == 1 {
-            c0.reserve_repeats(s0, n_inf - 1);
-            c1.reserve_repeats(s1, n_inf - 1);
-        }
-        emit_input_load(&mut c0, i, &m);
-        emit_digital_cell(&mut c0, &m, 1);
-        emit_gate_activations(&mut c0, m.n_h, 1);
-        emit_gate_combine(&mut c0, m.n_h, 1);
-        c0.roi(RoiKind::Communication, |b| {
-            b.push(TraceOp::Send { ch: 0, bytes: 4 * m.n_h, addr: addr::channel(0, i) });
-        });
-        c1.roi(RoiKind::Communication, |b| {
-            b.push(TraceOp::Recv { ch: 0 });
-        });
-        emit_digital_dense(&mut c1, &m);
-        emit_softmax(&mut c1, m.y);
-        emit_writeback(&mut c1, i, m.y);
-    }
-    Workload {
-        label: format!("lstm{}/DIG-2core", m.n_h),
-        traces: vec![c0.build(), c1.build()],
-        spec: MachineSpec {
-            channels: vec![ChannelSpec { producer: 0, consumer: 1, capacity: 2 }],
-            ..Default::default()
-        },
-        inferences: n_inf,
-    }
-}
-
-fn digital_5core(m: LstmModel, n_inf: u32) -> Workload {
-    // Cores 0-3: cell column slices; core 0 additionally assembles h and
-    // broadcasts it (for the recurrence) and feeds core 4 (dense).
-    let mut cores: Vec<TraceBuilder> = (0..5).map(|_| TraceBuilder::new()).collect();
-    let spec = quin_core_spec(&[], m.n_h);
-    let marks: Vec<usize> = cores.iter().map(TraceBuilder::mark).collect();
-    for i in 0..n_inf {
-        if i == 1 {
-            for (b, mk) in cores.iter_mut().zip(&marks) {
-                b.reserve_repeats(*mk, n_inf - 1);
-            }
-        }
-        quin_core_step(
-            &mut cores,
-            &m,
-            i,
-            |b, core, m| {
-                // Each cell core streams its quarter of the weight columns.
-                let rows = m.cell_rows();
-                let cols = m.cell_cols() / 4;
-                b.roi(RoiKind::DigitalMvm, |b| {
-                    b.stream_read(addr::weights(0) + core as u64 * rows * cols, rows * cols, 1);
-                    let c = costs::gemv_row_insts(rows);
-                    b.compute(InstClass::SimdOp, cols * c.simd_insts);
-                    b.compute(InstClass::IntAlu, cols * c.alu_insts);
-                });
-            },
-            |b, m, i| {
-                emit_digital_dense(b, m);
-                emit_softmax(b, m.y);
-                emit_writeback(b, i, m.y);
-            },
-        );
-    }
-    Workload {
-        label: format!("lstm{}/DIG-5core", m.n_h),
-        traces: cores.into_iter().map(|b| b.build()).collect(),
-        spec,
-        inferences: n_inf,
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Analog cases
-// ---------------------------------------------------------------------------
-
-/// Cases 1 and 2 (single core). Case 1 tiles cell + dense in one large
-/// crossbar (Table II-B case-1 dims); case 2 uses one tile per layer.
-fn analog_single(m: LstmModel, n_inf: u32, case: u8) -> Workload {
-    let mut b = TraceBuilder::new();
-    let (tiles, cell_tile, dense_tile): (Vec<TileSpec>, usize, usize) = if case == 1 {
-        let (r, c) = LstmModel::paper_tile_dims(m.n_h, 1)
-            .unwrap_or((m.cell_rows() + m.dense_rows(), m.cell_cols() + m.y));
-        (
-            vec![TileSpec { rows: r as u32, cols: c as u32, coupling: Coupling::Tight }],
-            0,
-            0,
-        )
-    } else {
-        (
-            vec![
-                TileSpec {
-                    rows: m.cell_rows() as u32,
-                    cols: m.cell_cols() as u32,
-                    coupling: Coupling::Tight,
-                },
-                TileSpec {
-                    rows: m.dense_rows() as u32,
-                    cols: m.dense_cols() as u32,
-                    coupling: Coupling::Tight,
-                },
-            ],
-            0,
-            1,
-        )
+    let graph = LayerGraph::lstm(&m);
+    let tight = |rows: u64, cols: u64| TileSpec {
+        rows: rows as u32,
+        cols: cols as u32,
+        coupling: Coupling::Tight,
     };
-    // Program: cell at (0,0); dense diagonally below-right in case 1.
-    b.push(TraceOp::CmInit {
-        tile: cell_tile,
-        placement: Placement {
-            row0: 0,
-            col0: 0,
-            rows: m.cell_rows() as u32,
-            cols: m.cell_cols() as u32,
-        },
-    });
-    let dense_placement = if case == 1 {
-        Placement {
-            row0: m.cell_rows() as u32,
-            col0: m.cell_cols() as u32,
-            rows: m.dense_rows() as u32,
-            cols: m.dense_cols() as u32,
-        }
-    } else {
-        Placement { row0: 0, col0: 0, rows: m.dense_rows() as u32, cols: m.dense_cols() as u32 }
+    let cell_pl = Placement {
+        row0: 0,
+        col0: 0,
+        rows: m.cell_rows() as u32,
+        cols: m.cell_cols() as u32,
     };
-    b.push(TraceOp::CmInit { tile: dense_tile, placement: dense_placement });
-
-    let start = b.mark();
-    for i in 0..n_inf {
-        if i == 1 {
-            b.reserve_repeats(start, n_inf - 1);
-        }
-        emit_input_load(&mut b, i, &m);
-        // Queue [h, x]; one CM_PROCESS yields all four gates (§VIII.D).
-        emit_queue(&mut b, cell_tile, m.cell_rows());
-        emit_process(&mut b, cell_tile);
-        emit_dequeue(&mut b, cell_tile, m.cell_cols());
-        emit_gate_activations(&mut b, m.n_h, 1);
-        emit_gate_combine(&mut b, m.n_h, 1);
-        emit_queue(&mut b, dense_tile, m.dense_rows());
-        emit_process(&mut b, dense_tile);
-        emit_dequeue(&mut b, dense_tile, m.dense_cols());
-        emit_softmax(&mut b, m.y);
-        emit_writeback(&mut b, i, m.y);
-    }
-    Workload {
-        label: format!("lstm{}/ANA-case{case}", m.n_h),
-        traces: vec![b.build()],
-        spec: MachineSpec { tiles, ..Default::default() },
-        inferences: n_inf,
-    }
-}
-
-/// Case 3: dual core — cell layer on core 0, dense on core 1.
-fn analog_case3(m: LstmModel, n_inf: u32) -> Workload {
-    let mut c0 = TraceBuilder::new();
-    let mut c1 = TraceBuilder::new();
-    c0.push(TraceOp::CmInit {
-        tile: 0,
-        placement: Placement {
-            row0: 0,
-            col0: 0,
-            rows: m.cell_rows() as u32,
-            cols: m.cell_cols() as u32,
-        },
-    });
-    c1.push(TraceOp::CmInit {
-        tile: 1,
-        placement: Placement { row0: 0, col0: 0, rows: m.dense_rows() as u32, cols: m.dense_cols() as u32 },
-    });
-    let (s0, s1) = (c0.mark(), c1.mark());
-    for i in 0..n_inf {
-        if i == 1 {
-            c0.reserve_repeats(s0, n_inf - 1);
-            c1.reserve_repeats(s1, n_inf - 1);
-        }
-        emit_input_load(&mut c0, i, &m);
-        emit_queue(&mut c0, 0, m.cell_rows());
-        emit_process(&mut c0, 0);
-        emit_dequeue(&mut c0, 0, m.cell_cols());
-        emit_gate_activations(&mut c0, m.n_h, 1);
-        emit_gate_combine(&mut c0, m.n_h, 1);
-        c0.roi(RoiKind::Communication, |b| {
-            b.push(TraceOp::Send { ch: 0, bytes: 4 * m.n_h, addr: addr::channel(0, i) });
-        });
-
-        c1.roi(RoiKind::Communication, |b| {
-            b.push(TraceOp::Recv { ch: 0 });
-        });
-        emit_queue(&mut c1, 1, m.dense_rows());
-        emit_process(&mut c1, 1);
-        emit_dequeue(&mut c1, 1, m.dense_cols());
-        emit_softmax(&mut c1, m.y);
-        emit_writeback(&mut c1, i, m.y);
-    }
-    let (r3, c3) = LstmModel::paper_tile_dims(m.n_h, 3)
-        .unwrap_or((m.cell_rows(), m.cell_cols()));
-    Workload {
-        label: format!("lstm{}/ANA-case3", m.n_h),
-        traces: vec![c0.build(), c1.build()],
-        spec: MachineSpec {
-            tiles: vec![
-                TileSpec { rows: r3 as u32, cols: c3 as u32, coupling: Coupling::Tight },
-                TileSpec {
-                    rows: m.dense_rows() as u32,
-                    cols: m.dense_cols() as u32,
-                    coupling: Coupling::Tight,
-                },
-            ],
-            channels: vec![ChannelSpec { producer: 0, consumer: 1, capacity: 2 }],
-            ..Default::default()
-        },
-        inferences: n_inf,
-    }
-}
-
-/// Shared quin-core step structure (used by ANA case 4 and DIG 5-core):
-/// cores 0-3 produce their quarter of the cell output (`cell_mvm` emits
-/// the per-core MVM work), sync through core 0, which broadcasts h for
-/// the recurrence and feeds the dense core 4.
-fn quin_core_step(
-    cores: &mut [TraceBuilder],
-    m: &LstmModel,
-    i: u32,
-    cell_mvm: impl Fn(&mut TraceBuilder, usize, &LstmModel),
-    dense_body: impl Fn(&mut TraceBuilder, &LstmModel, u32),
-) {
-    let quarter = m.n_h / 4;
-    // Channels: 1->0 (ch0), 2->0 (ch1), 3->0 (ch2);
-    // 0->1 (ch3), 0->2 (ch4), 0->3 (ch5); 0->4 (ch6).
-    for core in 0..4usize {
-        // Split borrow: we need one builder at a time.
-        let b = &mut cores[core];
-        if core == 0 {
-            emit_input_load(b, i, m);
-        } else {
-            // Non-leader cores read the same input (hits LLC after core 0).
-            b.roi(RoiKind::InputLoad, |b| {
-                b.push(TraceOp::MemStream {
-                    base: addr::input(i, m.x),
-                    bytes: m.x,
-                    write: false,
-                    insts_per_line: 2,
-                    prefetchable: false,
-                });
-                b.compute(InstClass::IntAlu, (m.n_h + m.x) / 4 + 30);
-            });
-        }
-        cell_mvm(b, core, m);
-        emit_gate_activations(b, m.n_h, 4);
-        emit_gate_combine(b, m.n_h, 4);
-        if core == 0 {
-            b.roi(RoiKind::Communication, |b| {
-                b.push(TraceOp::Recv { ch: 0 });
-                b.push(TraceOp::Recv { ch: 1 });
-                b.push(TraceOp::Recv { ch: 2 });
-                // Broadcast assembled h for the recurrence + dense layer.
-                for (k, ch) in [3usize, 4, 5, 6].iter().enumerate() {
-                    b.push(TraceOp::Send {
-                        ch: *ch,
-                        bytes: 4 * m.n_h,
-                        addr: addr::channel(*ch, i) + k as u64,
-                    });
-                }
-            });
-        } else {
-            b.roi(RoiKind::Communication, |b| {
-                b.push(TraceOp::Send {
-                    ch: core - 1,
-                    bytes: 4 * quarter,
-                    addr: addr::channel(core - 1, i),
-                });
-                b.push(TraceOp::Recv { ch: core + 2 }); // h broadcast
-            });
-        }
-    }
-    // Core 4: dense layer (body supplied by the variant).
-    let b = &mut cores[4];
-    b.roi(RoiKind::Communication, |b| {
-        b.push(TraceOp::Recv { ch: 6 });
-    });
-    dense_body(b, m, i);
-}
-
-fn quin_core_spec(tiles: &[TileSpec], _n_h: u64) -> MachineSpec {
-    MachineSpec {
-        tiles: tiles.to_vec(),
-        mutexes: 1,
-        channels: vec![
-            ChannelSpec { producer: 1, consumer: 0, capacity: 2 },
-            ChannelSpec { producer: 2, consumer: 0, capacity: 2 },
-            ChannelSpec { producer: 3, consumer: 0, capacity: 2 },
-            ChannelSpec { producer: 0, consumer: 1, capacity: 2 },
-            ChannelSpec { producer: 0, consumer: 2, capacity: 2 },
-            ChannelSpec { producer: 0, consumer: 3, capacity: 2 },
-            ChannelSpec { producer: 0, consumer: 4, capacity: 2 },
-        ],
-        ..Default::default()
-    }
-}
-
-/// Case 4: quin core — cell column-sliced over 4 tiles/cores (the
-/// four-consecutive-columns gate slicing of [37]), dense on core 4.
-fn analog_case4(m: LstmModel, n_inf: u32) -> Workload {
-    let quarter_cols = (m.cell_cols() / 4) as u32;
-    let (r4, c4) = LstmModel::paper_tile_dims(m.n_h, 4)
-        .unwrap_or((m.cell_rows(), m.cell_cols() / 4));
-    let mut tiles: Vec<TileSpec> = (0..4)
-        .map(|_| TileSpec { rows: r4 as u32, cols: c4 as u32, coupling: Coupling::Tight })
-        .collect();
-    tiles.push(TileSpec {
+    let dense_pl = Placement {
+        row0: 0,
+        col0: 0,
         rows: m.dense_rows() as u32,
         cols: m.dense_cols() as u32,
-        coupling: Coupling::Tight,
-    });
+    };
+    let label = |case: &LstmCase| format!("lstm{}/{}", n_h, case.label());
 
-    let mut cores: Vec<TraceBuilder> = (0..5).map(|_| TraceBuilder::new()).collect();
-    for core in 0..4usize {
-        cores[core].push(TraceOp::CmInit {
-            tile: core,
-            placement: Placement {
+    let mapping = match case {
+        LstmCase::Digital { cores: 1 } => {
+            let mut s = Stage::on_core(0);
+            s.input = StageInput::Memory { node: INPUT_NODE };
+            s.output = StageOutput::Memory { node: OUTPUT_NODE };
+            s.steps = vec![Step::cpu(CELL_NODE), Step::cpu(DENSE_NODE), Step::cpu(SOFTMAX_NODE)];
+            Mapping { label: label(&case), tiles: vec![], min_mutexes: 0, stages: vec![s] }
+        }
+        LstmCase::Digital { cores: 2 } => {
+            let mut s0 = Stage::on_core(0);
+            s0.input = StageInput::Memory { node: INPUT_NODE };
+            s0.output = StageOutput::Channel { bytes: 4 * m.n_h };
+            s0.steps = vec![Step::cpu(CELL_NODE)];
+            let mut s1 = Stage::on_core(1);
+            s1.input = StageInput::Channel;
+            s1.output = StageOutput::Memory { node: OUTPUT_NODE };
+            s1.steps = vec![Step::cpu(DENSE_NODE), Step::cpu(SOFTMAX_NODE)];
+            Mapping { label: label(&case), tiles: vec![], min_mutexes: 0, stages: vec![s0, s1] }
+        }
+        LstmCase::Digital { cores: 5 } => {
+            // Cores 0-3: cell column slices, core 0 gathers/broadcasts h;
+            // core 4: dense. (The platform declares one unused mutex.)
+            let mut s0 = Stage::on_core(0);
+            s0.cores = vec![0, 1, 2, 3];
+            s0.split = SplitKind::LeaderGather;
+            s0.input = StageInput::Memory { node: INPUT_NODE };
+            s0.output = StageOutput::Channel { bytes: 4 * m.n_h };
+            s0.steps = vec![Step::cpu(CELL_NODE)];
+            let mut s1 = Stage::on_core(4);
+            s1.input = StageInput::Channel;
+            s1.output = StageOutput::Memory { node: OUTPUT_NODE };
+            s1.steps = vec![Step::cpu(DENSE_NODE), Step::cpu(SOFTMAX_NODE)];
+            Mapping { label: label(&case), tiles: vec![], min_mutexes: 1, stages: vec![s0, s1] }
+        }
+        LstmCase::Analog { case: c @ (1 | 2) } => {
+            // Case 1: cell + dense tiled diagonally in one large crossbar
+            // (Table II-B dims); case 2: one tile per layer.
+            let (tiles, cell_tile, dense_tile, dense_placement) = if c == 1 {
+                let (r, cc) = LstmModel::paper_tile_dims(m.n_h, 1)
+                    .unwrap_or((m.cell_rows() + m.dense_rows(), m.cell_cols() + m.y));
+                let diag = Placement {
+                    row0: m.cell_rows() as u32,
+                    col0: m.cell_cols() as u32,
+                    rows: m.dense_rows() as u32,
+                    cols: m.dense_cols() as u32,
+                };
+                (vec![tight(r, cc)], 0usize, 0usize, diag)
+            } else {
+                (
+                    vec![
+                        tight(m.cell_rows(), m.cell_cols()),
+                        tight(m.dense_rows(), m.dense_cols()),
+                    ],
+                    0usize,
+                    1usize,
+                    dense_pl,
+                )
+            };
+            let mut s = Stage::on_core(0);
+            s.input = StageInput::Memory { node: INPUT_NODE };
+            s.output = StageOutput::Memory { node: OUTPUT_NODE };
+            s.steps = vec![
+                Step::tile(CELL_NODE, cell_tile, cell_pl),
+                Step::tile(DENSE_NODE, dense_tile, dense_placement),
+                Step::cpu(SOFTMAX_NODE),
+            ];
+            Mapping { label: label(&case), tiles, min_mutexes: 0, stages: vec![s] }
+        }
+        LstmCase::Analog { case: 3 } => {
+            // Cell on core 0/tile 0, dense on core 1/tile 1, pipelined.
+            let (r3, c3) =
+                LstmModel::paper_tile_dims(m.n_h, 3).unwrap_or((m.cell_rows(), m.cell_cols()));
+            let mut s0 = Stage::on_core(0);
+            s0.input = StageInput::Memory { node: INPUT_NODE };
+            s0.output = StageOutput::Channel { bytes: 4 * m.n_h };
+            s0.steps = vec![Step::tile(CELL_NODE, 0, cell_pl)];
+            let mut s1 = Stage::on_core(1);
+            s1.input = StageInput::Channel;
+            s1.output = StageOutput::Memory { node: OUTPUT_NODE };
+            s1.steps = vec![Step::tile(DENSE_NODE, 1, dense_pl), Step::cpu(SOFTMAX_NODE)];
+            Mapping {
+                label: label(&case),
+                tiles: vec![tight(r3, c3), tight(m.dense_rows(), m.dense_cols())],
+                min_mutexes: 0,
+                stages: vec![s0, s1],
+            }
+        }
+        LstmCase::Analog { case: 4 } => {
+            // Quin core: the cell column-sliced over 4 tiles/cores (the
+            // four-consecutive-columns gate slicing of [37]), dense on
+            // core 4. Leader-gather split; one declared (unused) mutex.
+            let quarter_cols = (m.cell_cols() / 4) as u32;
+            let (r4, c4) = LstmModel::paper_tile_dims(m.n_h, 4)
+                .unwrap_or((m.cell_rows(), m.cell_cols() / 4));
+            let slice_pl = Placement {
                 row0: 0,
                 col0: 0,
                 rows: m.cell_rows() as u32,
                 cols: quarter_cols.min(c4 as u32),
-            },
-        });
-    }
-    cores[4].push(TraceOp::CmInit {
-        tile: 4,
-        placement: Placement { row0: 0, col0: 0, rows: m.dense_rows() as u32, cols: m.dense_cols() as u32 },
-    });
-
-    let marks: Vec<usize> = cores.iter().map(TraceBuilder::mark).collect();
-    for i in 0..n_inf {
-        if i == 1 {
-            for (b, mk) in cores.iter_mut().zip(&marks) {
-                b.reserve_repeats(*mk, n_inf - 1);
-            }
+            };
+            let mut tiles: Vec<TileSpec> = (0..4).map(|_| tight(r4, c4)).collect();
+            tiles.push(tight(m.dense_rows(), m.dense_cols()));
+            let mut s0 = Stage::on_core(0);
+            s0.cores = vec![0, 1, 2, 3];
+            s0.split = SplitKind::LeaderGather;
+            s0.input = StageInput::Memory { node: INPUT_NODE };
+            s0.output = StageOutput::Channel { bytes: 4 * m.n_h };
+            s0.steps = vec![Step {
+                node: CELL_NODE,
+                place: Place::Tile {
+                    per_replica: (0..4)
+                        .map(|t| TilePlacement { tile: t, placement: slice_pl })
+                        .collect(),
+                },
+            }];
+            let mut s1 = Stage::on_core(4);
+            s1.input = StageInput::Channel;
+            s1.output = StageOutput::Memory { node: OUTPUT_NODE };
+            s1.steps = vec![Step::tile(DENSE_NODE, 4, dense_pl), Step::cpu(SOFTMAX_NODE)];
+            Mapping { label: label(&case), tiles, min_mutexes: 1, stages: vec![s0, s1] }
         }
-        quin_core_step(
-            &mut cores,
-            &m,
-            i,
-            |b, core, m| {
-                emit_queue(b, core, m.cell_rows());
-                emit_process(b, core);
-                emit_dequeue(b, core, m.n_h); // this core's quarter of all 4 gates
-            },
-            |b, m, i| {
-                emit_queue(b, 4, m.dense_rows());
-                emit_process(b, 4);
-                emit_dequeue(b, 4, m.dense_cols());
-                emit_softmax(b, m.y);
-                emit_writeback(b, i, m.y);
-            },
-        );
-    }
-    Workload {
-        label: format!("lstm{}/ANA-case4", m.n_h),
-        traces: cores.into_iter().map(|b| b.build()).collect(),
-        spec: quin_core_spec(&tiles, m.n_h),
-        inferences: n_inf,
-    }
+        LstmCase::Digital { cores } => {
+            return Err(WorkloadError::UnsupportedCase {
+                workload: "lstm",
+                case: format!("dig{cores}"),
+                supported: "dig1 dig2 dig5 ana1 ana2 ana3 ana4",
+            });
+        }
+        LstmCase::Analog { case } => {
+            return Err(WorkloadError::UnsupportedCase {
+                workload: "lstm",
+                case: format!("ana{case}"),
+                supported: "dig1 dig2 dig5 ana1 ana2 ana3 ana4",
+            });
+        }
+    };
+    Ok((graph, mapping))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::trace::TraceOp;
+    use crate::workload::addr;
 
     fn cfg() -> SystemConfig {
         SystemConfig::high_power()
@@ -543,16 +236,22 @@ mod tests {
                 LstmCase::Analog { case: 3 },
                 LstmCase::Analog { case: 4 },
             ] {
-                let w = generate(case, n_h, &cfg(), 2);
+                let w = generate(case, n_h, &cfg(), 2).unwrap();
                 assert!(w.total_ops() > 0, "{}", w.label);
             }
         }
     }
 
     #[test]
+    fn unsupported_cases_error_cleanly() {
+        assert!(generate(LstmCase::Digital { cores: 3 }, 256, &cfg(), 1).is_err());
+        assert!(generate(LstmCase::Analog { case: 7 }, 256, &cfg(), 1).is_err());
+    }
+
+    #[test]
     fn analog_case1_two_processes_per_step() {
         // One for the cell (all four gates at once, §VIII.D), one dense.
-        let w = generate(LstmCase::Analog { case: 1 }, 256, &cfg(), 4);
+        let w = generate(LstmCase::Analog { case: 1 }, 256, &cfg(), 4).unwrap();
         let procs = w.traces[0]
             .iter()
             .filter(|op| matches!(op, TraceOp::CmProcess { .. }))
@@ -562,14 +261,14 @@ mod tests {
 
     #[test]
     fn case4_uses_five_cores_and_tiles() {
-        let w = generate(LstmCase::Analog { case: 4 }, 512, &cfg(), 1);
+        let w = generate(LstmCase::Analog { case: 4 }, 512, &cfg(), 1).unwrap();
         assert_eq!(w.cores_used(), 5);
         assert_eq!(w.spec.tiles.len(), 5);
     }
 
     #[test]
     fn digital_cell_streams_gate_matrix() {
-        let w = generate(LstmCase::Digital { cores: 1 }, 256, &cfg(), 1);
+        let w = generate(LstmCase::Digital { cores: 1 }, 256, &cfg(), 1).unwrap();
         let m = LstmModel::paper(256);
         let bytes: u64 = w.traces[0]
             .iter()
@@ -587,7 +286,7 @@ mod tests {
 
     #[test]
     fn case1_tile_uses_paper_dims() {
-        let w = generate(LstmCase::Analog { case: 1 }, 750, &cfg(), 1);
+        let w = generate(LstmCase::Analog { case: 1 }, 750, &cfg(), 1).unwrap();
         assert_eq!(w.spec.tiles[0].rows, 1600);
         assert_eq!(w.spec.tiles[0].cols, 3050);
     }

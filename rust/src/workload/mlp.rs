@@ -1,18 +1,21 @@
-//! MLP workload generator — Exploration One (§VII, Fig. 6).
+//! MLP workloads — Exploration One (§VII, Fig. 6) as a case table.
 //!
-//! Digital references run on 1, 2 or 4 cores; analog cases 1-4 map the
-//! two 1024x1024 layers onto AIMC tiles in the four configurations of
-//! Fig. 6(b); the loosely-coupled variant of §VII.B places two pipelined
-//! tiles behind the peripheral I/O bus.
+//! Every case is a `(LayerGraph, Mapping)` pair lowered by the mapping
+//! compiler: digital references on 1/2/4 cores, the four analog tile
+//! configurations of Fig. 6(b), the loosely-coupled accelerator of
+//! §VII.B — plus *custom* MLPs of arbitrary shape ([`MlpShape`]) under
+//! digital or analog pipelined mappings not expressible before
+//! ([`CustomMlpMapping`]).
 
 use crate::config::SystemConfig;
-use crate::isa::InstClass;
-use crate::nn::MlpModel;
+use crate::nn::{LayerGraph, MlpModel};
 use crate::sim::aimc::{Coupling, Placement};
-use crate::sim::machine::{ChannelSpec, MachineSpec, TileSpec};
-use crate::stats::RoiKind;
-use crate::workload::trace::{TraceBuilder, TraceOp};
-use crate::workload::{addr, costs, Workload};
+use crate::sim::machine::TileSpec;
+use crate::workload::compile;
+use crate::workload::compile::mapping::{
+    Handoff, Mapping, Place, SplitKind, Stage, StageInput, StageOutput, Step, TilePlacement,
+};
+use crate::workload::{addr, Workload, WorkloadError};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MlpCase {
@@ -34,532 +37,475 @@ impl MlpCase {
     }
 }
 
-pub fn generate(case: MlpCase, _cfg: &SystemConfig, n_inf: u32) -> Workload {
-    let model = MlpModel::paper();
-    match case {
-        MlpCase::Digital { cores: 1 } => digital_1core(model, n_inf),
-        MlpCase::Digital { cores: 2 } => digital_2core(model, n_inf),
-        MlpCase::Digital { cores: 4 } => digital_4core(model, n_inf),
-        MlpCase::Digital { cores } => panic!("unsupported digital core count {cores}"),
-        MlpCase::Analog { case: 1 } => analog_case1(model, n_inf),
-        MlpCase::Analog { case: 2 } => analog_case2(model, n_inf),
-        MlpCase::Analog { case: 3 } => analog_case3(model, n_inf),
-        MlpCase::Analog { case: 4 } => analog_case4(model, n_inf),
-        MlpCase::Analog { case } => panic!("unsupported analog case {case}"),
-        MlpCase::AnalogLoose => analog_loose(model, n_inf),
-    }
+/// Node ids of `LayerGraph::mlp` chains (input, L x (dense, relu), output).
+fn dense_node(l: usize) -> usize {
+    1 + 2 * l
+}
+fn relu_node(l: usize) -> usize {
+    2 + 2 * l
+}
+fn output_node(layers: usize) -> usize {
+    1 + 2 * layers
+}
+const INPUT_NODE: usize = 0;
+
+pub fn generate(case: MlpCase, _cfg: &SystemConfig, n_inf: u32) -> Result<Workload, WorkloadError> {
+    let (graph, mapping) = case_table(case)?;
+    compile::compile(&graph, &mapping, n_inf)
 }
 
-// ---------------------------------------------------------------------------
-// Shared emission helpers
-// ---------------------------------------------------------------------------
-
-/// Digital GEMV over `rows x cols` int8 weights: weight stream + SIMD MACs.
-fn emit_digital_gemv(b: &mut TraceBuilder, w_base: u64, rows: u64, cols: u64) {
-    b.roi(RoiKind::DigitalMvm, |b| {
-        // The weight matrix streams through the cache hierarchy once per
-        // inference (this is the §VII.E thrashing working set).
-        b.stream_read(w_base, rows * cols, 1);
-        let c = costs::gemv_row_insts(rows); // dot over `rows` per output
-        b.compute(InstClass::SimdOp, cols * c.simd_insts);
-        b.compute(InstClass::IntAlu, cols * c.alu_insts);
-    });
-}
-
-/// AIMClib queueVector: f32 -> int8 cast + pack + CM_QUEUE beats.
-pub(crate) fn emit_queue(b: &mut TraceBuilder, tile: usize, elems: u64) {
-    b.roi(RoiKind::AnalogQueue, |b| {
-        b.compute(InstClass::SimdOp, costs::cast_insts(elems));
-        b.push(TraceOp::CmQueue { tile, bytes: elems });
-    });
-}
-
-pub(crate) fn emit_process(b: &mut TraceBuilder, tile: usize) {
-    b.roi(RoiKind::AnalogProcess, |b| {
-        b.push(TraceOp::CmProcess { tile });
-    });
-}
-
-pub(crate) fn emit_dequeue(b: &mut TraceBuilder, tile: usize, elems: u64) {
-    b.roi(RoiKind::AnalogDequeue, |b| {
-        b.push(TraceOp::CmDequeue { tile, bytes: elems });
-        b.compute(InstClass::SimdOp, costs::cast_insts(elems));
-    });
-}
-
-fn emit_relu(b: &mut TraceBuilder, elems: u64) {
-    b.roi(RoiKind::Activation, |b| {
-        b.compute(InstClass::SimdOp, elems / 8 + 4);
-    });
-}
-
-fn emit_input_load(b: &mut TraceBuilder, i: u32, elems: u64) {
-    b.roi(RoiKind::InputLoad, |b| {
-        // Fresh fp32 input per inference (casting to int8 is AIMClib's
-        // job, §IV.C): cold lines, and the short read doesn't ramp the
-        // stride prefetcher.
-        let bytes = 4 * elems;
-        b.push(TraceOp::MemStream {
-            base: addr::input(i, bytes),
-            bytes,
-            write: false,
-            insts_per_line: 2,
-            prefetchable: false,
-        });
-        // AIMClib input marshalling (bounds checks, pointer setup).
-        b.compute(InstClass::IntAlu, elems / 4 + 40);
-    });
-}
-
-fn emit_writeback(b: &mut TraceBuilder, i: u32, elems: u64) {
-    b.roi(RoiKind::Writeback, |b| {
-        b.stream_write(addr::output(i, 4 * elems), 4 * elems, 2);
-    });
-}
-
-// ---------------------------------------------------------------------------
-// Digital references
-// ---------------------------------------------------------------------------
-
-fn digital_1core(m: MlpModel, n_inf: u32) -> Workload {
-    let n = m.dim;
-    let mut b = TraceBuilder::new();
-    let start = b.mark();
-    for i in 0..n_inf {
-        if i == 1 {
-            // Inference 0 sized one block; reserve the rest up front.
-            b.reserve_repeats(start, n_inf - 1);
-        }
-        emit_input_load(&mut b, i, n);
-        for l in 0..m.layers as usize {
-            emit_digital_gemv(&mut b, addr::weights(l), n, n);
-            emit_relu(&mut b, n);
-        }
-        emit_writeback(&mut b, i, n);
-    }
-    Workload {
-        label: "mlp/DIG-1core".into(),
-        traces: vec![b.build()],
-        spec: MachineSpec::default(),
-        inferences: n_inf,
-    }
-}
-
-fn digital_2core(m: MlpModel, n_inf: u32) -> Workload {
-    let n = m.dim;
-    // Core 0: input + layer 1; core 1: layer 2 + writeback.
-    let mut c0 = TraceBuilder::new();
-    let mut c1 = TraceBuilder::new();
-    let (s0, s1) = (c0.mark(), c1.mark());
-    for i in 0..n_inf {
-        if i == 1 {
-            c0.reserve_repeats(s0, n_inf - 1);
-            c1.reserve_repeats(s1, n_inf - 1);
-        }
-        emit_input_load(&mut c0, i, n);
-        emit_digital_gemv(&mut c0, addr::weights(0), n, n);
-        emit_relu(&mut c0, n);
-        c0.roi(RoiKind::Communication, |b| {
-            b.push(TraceOp::Send { ch: 0, bytes: 4 * n, addr: addr::channel(0, i) });
-        });
-
-        c1.roi(RoiKind::Communication, |b| {
-            b.push(TraceOp::Recv { ch: 0 });
-        });
-        emit_digital_gemv(&mut c1, addr::weights(1), n, n);
-        emit_relu(&mut c1, n);
-        emit_writeback(&mut c1, i, n);
-    }
-    Workload {
-        label: "mlp/DIG-2core".into(),
-        traces: vec![c0.build(), c1.build()],
-        spec: MachineSpec {
-            channels: vec![ChannelSpec { producer: 0, consumer: 1, capacity: 2 }],
-            ..Default::default()
-        },
-        inferences: n_inf,
-    }
-}
-
-fn digital_4core(m: MlpModel, n_inf: u32) -> Workload {
+/// The paper-case table: `MlpCase -> (LayerGraph, Mapping)`.
+pub fn case_table(case: MlpCase) -> Result<(LayerGraph, Mapping), WorkloadError> {
+    let m = MlpModel::paper();
     let n = m.dim;
     let half = n / 2;
-    // Cores 0,1: column halves of layer 1; cores 2,3: halves of layer 2.
-    // Layer-1 halves are synced via a mutex before layer 2 proceeds.
-    let mut cores: Vec<TraceBuilder> = (0..4).map(|_| TraceBuilder::new()).collect();
-    // channels: 0->2, 0->3, 1->2, 1->3 (each layer-2 core needs both halves)
-    let ch = |p: usize, c: usize| -> usize {
-        match (p, c) {
-            (0, 2) => 0,
-            (0, 3) => 1,
-            (1, 2) => 2,
-            (1, 3) => 3,
-            _ => unreachable!(),
-        }
+    let graph = LayerGraph::mlp_paper(&m);
+    let tight = |rows: u64, cols: u64| TileSpec {
+        rows: rows as u32,
+        cols: cols as u32,
+        coupling: Coupling::Tight,
     };
-    let marks: Vec<usize> = cores.iter().map(TraceBuilder::mark).collect();
-    for i in 0..n_inf {
-        if i == 1 {
-            for (b, m) in cores.iter_mut().zip(&marks) {
-                b.reserve_repeats(*m, n_inf - 1);
+    let square = Placement { row0: 0, col0: 0, rows: n as u32, cols: n as u32 };
+
+    let mapping = match case {
+        MlpCase::Digital { cores: 1 } => {
+            let mut s = Stage::on_core(0);
+            s.input = StageInput::Memory { node: INPUT_NODE };
+            s.output = StageOutput::Memory { node: output_node(2) };
+            s.steps = vec![
+                Step::cpu(dense_node(0)),
+                Step::cpu(relu_node(0)),
+                Step::cpu(dense_node(1)),
+                Step::cpu(relu_node(1)),
+            ];
+            Mapping { label: "mlp/DIG-1core".into(), tiles: vec![], min_mutexes: 0, stages: vec![s] }
+        }
+        MlpCase::Digital { cores: 2 } => {
+            // Core 0: input + layer 1; core 1: layer 2 + writeback.
+            let mut s0 = Stage::on_core(0);
+            s0.input = StageInput::Memory { node: INPUT_NODE };
+            s0.output = StageOutput::Channel { bytes: 4 * n };
+            s0.steps = vec![Step::cpu(dense_node(0)), Step::cpu(relu_node(0))];
+            let mut s1 = Stage::on_core(1);
+            s1.input = StageInput::Channel;
+            s1.output = StageOutput::Memory { node: output_node(2) };
+            s1.steps = vec![Step::cpu(dense_node(1)), Step::cpu(relu_node(1))];
+            Mapping { label: "mlp/DIG-2core".into(), tiles: vec![], min_mutexes: 0, stages: vec![s0, s1] }
+        }
+        MlpCase::Digital { cores: 4 } => {
+            // Column halves of each layer on a core pair, mutex-synced.
+            let mut s0 = Stage::on_core(0);
+            s0.cores = vec![0, 1];
+            s0.split = SplitKind::Columns;
+            s0.input = StageInput::Memory { node: INPUT_NODE };
+            s0.output = StageOutput::Channel { bytes: 4 * half };
+            s0.barrier = true;
+            s0.steps = vec![Step::cpu(dense_node(0)), Step::cpu(relu_node(0))];
+            let mut s1 = Stage::on_core(2);
+            s1.cores = vec![2, 3];
+            s1.split = SplitKind::Columns;
+            s1.input = StageInput::Channel;
+            s1.output = StageOutput::Memory { node: output_node(2) };
+            s1.barrier = true;
+            s1.steps = vec![Step::cpu(dense_node(1)), Step::cpu(relu_node(1))];
+            Mapping { label: "mlp/DIG-4core".into(), tiles: vec![], min_mutexes: 0, stages: vec![s0, s1] }
+        }
+        MlpCase::Analog { case: 1 } => {
+            // One large tile holding both layers side by side.
+            let mut s = Stage::on_core(0);
+            s.input = StageInput::Memory { node: INPUT_NODE };
+            s.output = StageOutput::Memory { node: output_node(2) };
+            s.steps = vec![
+                Step::tile(dense_node(0), 0, square),
+                Step::cpu(relu_node(0)),
+                Step::tile(dense_node(1), 0, Placement { row0: 0, col0: n as u32, rows: n as u32, cols: n as u32 }),
+                Step::cpu(relu_node(1)),
+            ];
+            Mapping {
+                label: "mlp/ANA-case1".into(),
+                tiles: vec![tight(n, 2 * n)],
+                min_mutexes: 0,
+                stages: vec![s],
             }
         }
-        for p in 0..2usize {
-            let b = &mut cores[p];
-            emit_input_load(b, i, n);
-            // Half the columns: weight stream is half the matrix.
-            b.roi(RoiKind::DigitalMvm, |b| {
-                b.stream_read(addr::weights(0) + p as u64 * (n * half), n * half, 1);
-                let c = costs::gemv_row_insts(n);
-                b.compute(InstClass::SimdOp, half * c.simd_insts);
-                b.compute(InstClass::IntAlu, half * c.alu_insts);
-            });
-            emit_relu(b, half);
-            b.roi(RoiKind::Sync, |b| {
-                b.push(TraceOp::MutexLock { id: 0 });
-                b.push(TraceOp::MutexUnlock { id: 0 });
-            });
-            b.roi(RoiKind::Communication, |b| {
-                b.push(TraceOp::Send { ch: ch(p, 2), bytes: 4 * half, addr: addr::channel(ch(p, 2), i) });
-                b.push(TraceOp::Send { ch: ch(p, 3), bytes: 4 * half, addr: addr::channel(ch(p, 3), i) });
+        MlpCase::Analog { case: 2 } => {
+            // Half-height tiles: each layer row-split over two tiles with
+            // digital partial accumulation (2x CM_PROCESS rate, §VII.B).
+            let half_pl = Placement { row0: 0, col0: 0, rows: half as u32, cols: n as u32 };
+            let row_split = |ta: usize, tb: usize| Place::TileRowSplit {
+                tiles: vec![
+                    TilePlacement { tile: ta, placement: half_pl },
+                    TilePlacement { tile: tb, placement: half_pl },
+                ],
+            };
+            let mut s = Stage::on_core(0);
+            s.input = StageInput::Memory { node: INPUT_NODE };
+            s.output = StageOutput::Memory { node: output_node(2) };
+            s.steps = vec![
+                Step { node: dense_node(0), place: row_split(0, 1) },
+                Step::cpu(relu_node(0)),
+                Step { node: dense_node(1), place: row_split(2, 3) },
+                Step::cpu(relu_node(1)),
+            ];
+            Mapping {
+                label: "mlp/ANA-case2".into(),
+                tiles: (0..4).map(|_| tight(half, n)).collect(),
+                min_mutexes: 0,
+                stages: vec![s],
+            }
+        }
+        MlpCase::Analog { case: 3 } => {
+            // One layer per core; the hand-off is the paper's mutex-style
+            // shared activation buffer (§VII.C) -> SharedBuffer hand-off.
+            let mut s0 = Stage::on_core(0);
+            s0.input = StageInput::Memory { node: INPUT_NODE };
+            s0.output = StageOutput::Channel { bytes: 4 * n };
+            s0.handoff = Handoff::SharedBuffer;
+            s0.steps = vec![Step::tile(dense_node(0), 0, square), Step::cpu(relu_node(0))];
+            let mut s1 = Stage::on_core(1);
+            s1.input = StageInput::Channel;
+            s1.output = StageOutput::Memory { node: output_node(2) };
+            s1.steps = vec![Step::tile(dense_node(1), 1, square), Step::cpu(relu_node(1))];
+            Mapping {
+                label: "mlp/ANA-case3".into(),
+                tiles: vec![tight(n, n), tight(n, n)],
+                min_mutexes: 0,
+                stages: vec![s0, s1],
+            }
+        }
+        MlpCase::Analog { case: 4 } => {
+            // Each layer's columns split across two cores/tiles; pairs
+            // sync via mutexes, hand-offs are shared buffers (Fig. 6b).
+            let col_pl = Placement { row0: 0, col0: 0, rows: n as u32, cols: half as u32 };
+            let pair = |ta: usize, tb: usize| Place::Tile {
+                per_replica: vec![
+                    TilePlacement { tile: ta, placement: col_pl },
+                    TilePlacement { tile: tb, placement: col_pl },
+                ],
+            };
+            let mut s0 = Stage::on_core(0);
+            s0.cores = vec![0, 1];
+            s0.split = SplitKind::Columns;
+            s0.input = StageInput::Memory { node: INPUT_NODE };
+            s0.output = StageOutput::Channel { bytes: 4 * half };
+            s0.handoff = Handoff::SharedBuffer;
+            s0.barrier = true;
+            s0.steps = vec![Step { node: dense_node(0), place: pair(0, 1) }, Step::cpu(relu_node(0))];
+            let mut s1 = Stage::on_core(2);
+            s1.cores = vec![2, 3];
+            s1.split = SplitKind::Columns;
+            s1.input = StageInput::Channel;
+            s1.output = StageOutput::Memory { node: output_node(2) };
+            s1.barrier = true;
+            s1.steps = vec![Step { node: dense_node(1), place: pair(2, 3) }, Step::cpu(relu_node(1))];
+            Mapping {
+                label: "mlp/ANA-case4".into(),
+                tiles: (0..4).map(|_| tight(n, half)).collect(),
+                min_mutexes: 0,
+                stages: vec![s0, s1],
+            }
+        }
+        MlpCase::AnalogLoose => {
+            // Two pipelined tiles behind the peripheral I/O bus; layer-1
+            // ReLU and the tile-to-tile forward happen in-accelerator.
+            let loose = TileSpec { rows: n as u32, cols: n as u32, coupling: Coupling::Loose };
+            let mut s = Stage::on_core(0);
+            s.input = StageInput::Memory { node: INPUT_NODE };
+            s.output = StageOutput::Memory { node: output_node(2) };
+            s.steps = vec![
+                Step {
+                    node: dense_node(0),
+                    place: Place::TileChain {
+                        tiles: vec![
+                            TilePlacement { tile: 0, placement: square },
+                            TilePlacement { tile: 1, placement: square },
+                        ],
+                    },
+                },
+                Step { node: relu_node(0), place: Place::Fused },
+                Step { node: dense_node(1), place: Place::Fused },
+                Step::cpu(relu_node(1)),
+            ];
+            Mapping {
+                label: "mlp/ANA-loose".into(),
+                tiles: vec![loose, loose],
+                min_mutexes: 0,
+                stages: vec![s],
+            }
+        }
+        MlpCase::Digital { cores } => {
+            return Err(WorkloadError::UnsupportedCase {
+                workload: "mlp",
+                case: format!("dig{cores}"),
+                supported: "dig1 dig2 dig4 ana1 ana2 ana3 ana4 loose",
             });
         }
-        for (idx, c) in [2usize, 3].iter().enumerate() {
-            let b = &mut cores[*c];
-            b.roi(RoiKind::Communication, |b| {
-                b.push(TraceOp::Recv { ch: ch(0, *c) });
-                b.push(TraceOp::Recv { ch: ch(1, *c) });
+        MlpCase::Analog { case } => {
+            return Err(WorkloadError::UnsupportedCase {
+                workload: "mlp",
+                case: format!("ana{case}"),
+                supported: "dig1 dig2 dig4 ana1 ana2 ana3 ana4 loose",
             });
-            b.roi(RoiKind::DigitalMvm, |b| {
-                b.stream_read(addr::weights(1) + idx as u64 * (n * half), n * half, 1);
-                let cst = costs::gemv_row_insts(n);
-                b.compute(InstClass::SimdOp, half * cst.simd_insts);
-                b.compute(InstClass::IntAlu, half * cst.alu_insts);
-            });
-            emit_relu(b, half);
-            b.roi(RoiKind::Sync, |b| {
-                b.push(TraceOp::MutexLock { id: 1 });
-                b.push(TraceOp::MutexUnlock { id: 1 });
-            });
-            emit_writeback(b, i, half);
         }
-    }
-    Workload {
-        label: "mlp/DIG-4core".into(),
-        traces: cores.into_iter().map(|b| b.build()).collect(),
-        spec: MachineSpec {
-            mutexes: 2,
-            channels: vec![
-                ChannelSpec { producer: 0, consumer: 2, capacity: 2 },
-                ChannelSpec { producer: 0, consumer: 3, capacity: 2 },
-                ChannelSpec { producer: 1, consumer: 2, capacity: 2 },
-                ChannelSpec { producer: 1, consumer: 3, capacity: 2 },
-            ],
-            ..Default::default()
-        },
-        inferences: n_inf,
-    }
+    };
+    Ok((graph, mapping))
 }
 
 // ---------------------------------------------------------------------------
-// Analog cases (Fig. 6b)
+// Custom-shape MLPs (not expressible before the mapping compiler)
 // ---------------------------------------------------------------------------
 
-/// Case 1: single core, one large 1024x2048 tile holding both layers
-/// side by side; one CM_PROCESS per layer.
-fn analog_case1(m: MlpModel, n_inf: u32) -> Workload {
-    let n = m.dim;
-    let mut b = TraceBuilder::new();
-    b.push(TraceOp::CmInit {
-        tile: 0,
-        placement: Placement { row0: 0, col0: 0, rows: n as u32, cols: n as u32 },
-    });
-    b.push(TraceOp::CmInit {
-        tile: 0,
-        placement: Placement { row0: 0, col0: n as u32, rows: n as u32, cols: n as u32 },
-    });
-    let start = b.mark();
-    for i in 0..n_inf {
-        if i == 1 {
-            b.reserve_repeats(start, n_inf - 1);
+/// Maximum `in x h1 x .. x out` dims of a custom shape (8 layers).
+pub const MAX_SHAPE_DIMS: usize = 9;
+
+/// A fixed-capacity MLP shape, `Copy` so sweep cases stay plain data.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MlpShape {
+    dims: [u64; MAX_SHAPE_DIMS],
+    len: usize,
+}
+
+impl MlpShape {
+    pub fn new(dims: &[u64]) -> Result<MlpShape, WorkloadError> {
+        if dims.len() < 2 || dims.len() > MAX_SHAPE_DIMS {
+            return Err(WorkloadError::InvalidGraph(format!(
+                "shape needs 2..={MAX_SHAPE_DIMS} dims, got {}",
+                dims.len()
+            )));
         }
-        emit_input_load(&mut b, i, n);
-        for _l in 0..m.layers {
-            emit_queue(&mut b, 0, n);
-            emit_process(&mut b, 0);
-            emit_dequeue(&mut b, 0, n);
-            emit_relu(&mut b, n);
+        if dims.iter().any(|&d| d == 0) {
+            return Err(WorkloadError::InvalidGraph("shape dims must be > 0".into()));
         }
-        emit_writeback(&mut b, i, n);
+        // Tile/placement geometry is u32; reject dims that would wrap.
+        if dims.iter().any(|&d| d > u32::MAX as u64) {
+            return Err(WorkloadError::InvalidGraph(format!(
+                "shape dims must fit a {}-column crossbar axis (u32)",
+                u32::MAX
+            )));
+        }
+        // The synthetic address map spaces weight slots WEIGHTS_STRIDE
+        // apart and gives each I/O vector a bounded slice of its region;
+        // larger shapes would alias regions and corrupt cache statistics.
+        if dims.windows(2).any(|w| w[0].saturating_mul(w[1]) > addr::WEIGHTS_STRIDE) {
+            return Err(WorkloadError::InvalidGraph(format!(
+                "a layer's weight matrix exceeds the {} B weight-slot stride of the synthetic address map",
+                addr::WEIGHTS_STRIDE
+            )));
+        }
+        const MAX_VECTOR_BYTES: u64 = 0x0100_0000; // 16 MiB per fp32 vector
+        if dims.iter().any(|&d| 4 * d > MAX_VECTOR_BYTES) {
+            return Err(WorkloadError::InvalidGraph(format!(
+                "a {MAX_VECTOR_BYTES} B cap per fp32 activation vector keeps the input/output regions alias-free"
+            )));
+        }
+        let mut buf = [0u64; MAX_SHAPE_DIMS];
+        buf[..dims.len()].copy_from_slice(dims);
+        Ok(MlpShape { dims: buf, len: dims.len() })
     }
-    Workload {
-        label: "mlp/ANA-case1".into(),
-        traces: vec![b.build()],
-        spec: MachineSpec {
-            tiles: vec![TileSpec { rows: n as u32, cols: 2 * n as u32, coupling: Coupling::Tight }],
-            ..Default::default()
-        },
-        inferences: n_inf,
+
+    /// Parse `"784x512x512x10"`.
+    pub fn parse(s: &str) -> Result<MlpShape, WorkloadError> {
+        let dims: Result<Vec<u64>, _> = s.split('x').map(|p| p.trim().parse::<u64>()).collect();
+        match dims {
+            Ok(d) => MlpShape::new(&d),
+            Err(_) => Err(WorkloadError::InvalidGraph(format!(
+                "bad shape {s:?} (expected e.g. 784x512x512x10)"
+            ))),
+        }
+    }
+
+    pub fn dims(&self) -> &[u64] {
+        &self.dims[..self.len]
+    }
+
+    pub fn layers(&self) -> usize {
+        self.len - 1
     }
 }
 
-/// Case 2: single core, half-height tiles — each layer is split into two
-/// 512-row blocks (2 x CM_PROCESS per layer, partials accumulated by the
-/// tile-local digital logic), so CM_PROCESS fires twice as often (§VII.B).
-fn analog_case2(m: MlpModel, n_inf: u32) -> Workload {
-    let n = m.dim;
-    let half = (n / 2) as u32;
-    let mut b = TraceBuilder::new();
-    for t in 0..4usize {
-        b.push(TraceOp::CmInit {
-            tile: t,
-            placement: Placement { row0: 0, col0: 0, rows: half, cols: n as u32 },
-        });
-    }
-    let start = b.mark();
-    for i in 0..n_inf {
-        if i == 1 {
-            b.reserve_repeats(start, n_inf - 1);
-        }
-        emit_input_load(&mut b, i, n);
-        for l in 0..m.layers as usize {
-            let (ta, tb) = (2 * l, 2 * l + 1);
-            // Split the input vector across the two row-block tiles.
-            emit_queue(&mut b, ta, n / 2);
-            emit_queue(&mut b, tb, n / 2);
-            emit_process(&mut b, ta);
-            emit_process(&mut b, tb);
-            // Partial outputs accumulate digitally; one dequeue of the sum
-            // plus the extra adds.
-            emit_dequeue(&mut b, tb, n);
-            b.roi(RoiKind::AnalogDequeue, |b| {
-                b.compute(InstClass::SimdOp, n / 8);
-            });
-            emit_relu(&mut b, n);
-        }
-        emit_writeback(&mut b, i, n);
-    }
-    let tiles = (0..4)
-        .map(|_| TileSpec { rows: half, cols: n as u32, coupling: Coupling::Tight })
-        .collect();
-    Workload {
-        label: "mlp/ANA-case2".into(),
-        traces: vec![b.build()],
-        spec: MachineSpec { tiles, ..Default::default() },
-        inferences: n_inf,
+impl std::fmt::Display for MlpShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let parts: Vec<String> = self.dims().iter().map(|d| d.to_string()).collect();
+        write!(f, "{}", parts.join("x"))
     }
 }
 
-/// Case 3: dual core, one layer per core. The hand-off buffer is the
-/// paper's mutex-synchronized shared activation array: the producer may
-/// not overwrite it until the consumer has finished the previous
-/// inference (§VII.C attributes the multi-core slowdown to exactly this
-/// inter-layer communication/synchronization).
-fn analog_case3(m: MlpModel, n_inf: u32) -> Workload {
-    let n = m.dim;
-    let mut c0 = TraceBuilder::new();
-    let mut c1 = TraceBuilder::new();
-    c0.push(TraceOp::CmInit {
-        tile: 0,
-        placement: Placement { row0: 0, col0: 0, rows: n as u32, cols: n as u32 },
-    });
-    c1.push(TraceOp::CmInit {
-        tile: 1,
-        placement: Placement { row0: 0, col0: 0, rows: n as u32, cols: n as u32 },
-    });
-    let (s0, s1) = (c0.mark(), c1.mark());
-    for i in 0..n_inf {
-        if i == 1 {
-            c0.reserve_repeats(s0, n_inf - 1);
-            c1.reserve_repeats(s1, n_inf - 1);
-        }
-        emit_input_load(&mut c0, i, n);
-        emit_queue(&mut c0, 0, n);
-        emit_process(&mut c0, 0);
-        emit_dequeue(&mut c0, 0, n);
-        emit_relu(&mut c0, n);
-        c0.roi(RoiKind::Communication, |b| {
-            if i > 0 {
-                b.push(TraceOp::Recv { ch: 1 }); // buffer-free ack
-            }
-            b.push(TraceOp::Send { ch: 0, bytes: 4 * n, addr: addr::channel(0, i) });
-        });
+/// Mappings for custom-shape MLPs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CustomMlpMapping {
+    /// SIMD reference: 1 core, or one pipeline stage per layer
+    /// (`cores == layers`).
+    Digital { cores: usize },
+    /// AIMC: `pipeline == false` packs all layers onto one core
+    /// (`tiles` = 1 shared crossbar, or one tile per layer);
+    /// `pipeline == true` splits the layers into `tiles` channel-
+    /// connected stages, one core + one tile each.
+    Analog { tiles: usize, pipeline: bool },
+}
 
-        c1.roi(RoiKind::Communication, |b| {
-            b.push(TraceOp::Recv { ch: 0 });
-        });
-        emit_queue(&mut c1, 1, n);
-        emit_process(&mut c1, 1);
-        emit_dequeue(&mut c1, 1, n);
-        emit_relu(&mut c1, n);
-        emit_writeback(&mut c1, i, n);
-        c1.roi(RoiKind::Communication, |b| {
-            b.push(TraceOp::Send { ch: 1, bytes: 64, addr: addr::channel(1, i) });
-        });
-    }
-    Workload {
-        label: "mlp/ANA-case3".into(),
-        traces: vec![c0.build(), c1.build()],
-        spec: MachineSpec {
-            tiles: vec![
-                TileSpec { rows: n as u32, cols: n as u32, coupling: Coupling::Tight },
-                TileSpec { rows: n as u32, cols: n as u32, coupling: Coupling::Tight },
-            ],
-            channels: vec![
-                ChannelSpec { producer: 0, consumer: 1, capacity: 2 },
-                ChannelSpec { producer: 1, consumer: 0, capacity: 2 },
-            ],
-            ..Default::default()
-        },
-        inferences: n_inf,
+impl CustomMlpMapping {
+    pub fn label(&self) -> String {
+        match self {
+            CustomMlpMapping::Digital { cores: 1 } => "DIG-1core".into(),
+            CustomMlpMapping::Digital { cores } => format!("DIG-pipe{cores}"),
+            CustomMlpMapping::Analog { tiles, pipeline: false } => format!("ANA-{tiles}tile"),
+            CustomMlpMapping::Analog { tiles, pipeline: true } => format!("ANA-pipe{tiles}"),
+        }
     }
 }
 
-/// Case 4: quad core, each layer's columns split across two cores; the
-/// layer-1 pair sync via a mutex, then both halves go to both layer-2
-/// cores (Fig. 6b case 4).
-fn analog_case4(m: MlpModel, n_inf: u32) -> Workload {
-    let n = m.dim;
-    let half = n / 2;
-    let mut cores: Vec<TraceBuilder> = (0..4).map(|_| TraceBuilder::new()).collect();
-    for (core, tile) in (0..4usize).zip(0..4usize) {
-        cores[core].push(TraceOp::CmInit {
-            tile,
-            placement: Placement { row0: 0, col0: 0, rows: n as u32, cols: half as u32 },
-        });
-    }
-    let ch = |p: usize, c: usize| -> usize {
-        match (p, c) {
-            (0, 2) => 0,
-            (0, 3) => 1,
-            (1, 2) => 2,
-            (1, 3) => 3,
-            _ => unreachable!(),
-        }
+/// Generate a custom-shape MLP workload under the given mapping.
+pub fn generate_custom(
+    shape: MlpShape,
+    mapping: CustomMlpMapping,
+    n_inf: u32,
+) -> Result<Workload, WorkloadError> {
+    let (graph, m) = custom_table(shape, mapping)?;
+    compile::compile(&graph, &m, n_inf)
+}
+
+/// Build the `(LayerGraph, Mapping)` of a custom case.
+pub fn custom_table(
+    shape: MlpShape,
+    mapping: CustomMlpMapping,
+) -> Result<(LayerGraph, Mapping), WorkloadError> {
+    let dims = shape.dims();
+    let layers = shape.layers();
+    let graph = LayerGraph::mlp(dims);
+    let label = format!("mlp-custom[{shape}]/{}", mapping.label());
+    let out_node = output_node(layers);
+    let unsupported = |case: String| WorkloadError::UnsupportedCase {
+        workload: "mlp-custom",
+        case,
+        supported: "dig1, dig-pipe (cores == layers), ana packed (tiles = 1 or layers), ana-pipe (1..=layers stages)",
     };
-    // Ack channels (shared-buffer synchronization, as in case 3):
-    // 2->0 (4), 2->1 (5), 3->0 (6), 3->1 (7).
-    let ack = |c: usize, p: usize| -> usize { 4 + (c - 2) * 2 + p };
-    let marks: Vec<usize> = cores.iter().map(TraceBuilder::mark).collect();
-    for i in 0..n_inf {
-        if i == 1 {
-            for (b, m) in cores.iter_mut().zip(&marks) {
-                b.reserve_repeats(*m, n_inf - 1);
+
+    let m = match mapping {
+        CustomMlpMapping::Digital { cores: 1 } => {
+            let mut s = Stage::on_core(0);
+            s.input = StageInput::Memory { node: INPUT_NODE };
+            s.output = StageOutput::Memory { node: out_node };
+            for l in 0..layers {
+                s.steps.push(Step::cpu(dense_node(l)));
+                s.steps.push(Step::cpu(relu_node(l)));
+            }
+            Mapping { label, tiles: vec![], min_mutexes: 0, stages: vec![s] }
+        }
+        CustomMlpMapping::Digital { cores } if cores == layers => {
+            let mut stages = Vec::new();
+            for l in 0..layers {
+                let mut s = Stage::on_core(l);
+                s.input = if l == 0 { StageInput::Memory { node: INPUT_NODE } } else { StageInput::Channel };
+                s.output = if l == layers - 1 {
+                    StageOutput::Memory { node: out_node }
+                } else {
+                    StageOutput::Channel { bytes: 4 * dims[l + 1] }
+                };
+                s.steps = vec![Step::cpu(dense_node(l)), Step::cpu(relu_node(l))];
+                stages.push(s);
+            }
+            Mapping { label, tiles: vec![], min_mutexes: 0, stages }
+        }
+        CustomMlpMapping::Digital { cores } => {
+            return Err(unsupported(format!("dig{cores} for {layers} layers")));
+        }
+        CustomMlpMapping::Analog { tiles: 1, pipeline: false } => {
+            // All layers side by side on one shared crossbar.
+            let rows = *dims[..layers].iter().max().expect("layers >= 1");
+            let cols: u64 = dims[1..].iter().sum();
+            if cols > u32::MAX as u64 {
+                return Err(WorkloadError::InvalidMapping(format!(
+                    "packed crossbar needs {cols} columns, exceeding the u32 tile axis"
+                )));
+            }
+            let mut s = Stage::on_core(0);
+            s.input = StageInput::Memory { node: INPUT_NODE };
+            s.output = StageOutput::Memory { node: out_node };
+            let mut col0 = 0u64;
+            for l in 0..layers {
+                let pl = Placement {
+                    row0: 0,
+                    col0: col0 as u32,
+                    rows: dims[l] as u32,
+                    cols: dims[l + 1] as u32,
+                };
+                col0 += dims[l + 1];
+                s.steps.push(Step::tile(dense_node(l), 0, pl));
+                s.steps.push(Step::cpu(relu_node(l)));
+            }
+            Mapping {
+                label,
+                tiles: vec![TileSpec { rows: rows as u32, cols: cols as u32, coupling: Coupling::Tight }],
+                min_mutexes: 0,
+                stages: vec![s],
             }
         }
-        for p in 0..2usize {
-            let b = &mut cores[p];
-            emit_input_load(b, i, n);
-            emit_queue(b, p, n); // full input rows, half the columns
-            emit_process(b, p);
-            emit_dequeue(b, p, half);
-            emit_relu(b, half);
-            b.roi(RoiKind::Sync, |b| {
-                b.push(TraceOp::MutexLock { id: 0 });
-                b.push(TraceOp::MutexUnlock { id: 0 });
-            });
-            b.roi(RoiKind::Communication, |b| {
-                if i > 0 {
-                    b.push(TraceOp::Recv { ch: ack(2, p) });
-                    b.push(TraceOp::Recv { ch: ack(3, p) });
+        CustomMlpMapping::Analog { tiles, pipeline: false } if tiles == layers => {
+            // One tile per layer, all driven by a single core.
+            let mut s = Stage::on_core(0);
+            s.input = StageInput::Memory { node: INPUT_NODE };
+            s.output = StageOutput::Memory { node: out_node };
+            let mut tile_specs = Vec::new();
+            for l in 0..layers {
+                tile_specs.push(TileSpec {
+                    rows: dims[l] as u32,
+                    cols: dims[l + 1] as u32,
+                    coupling: Coupling::Tight,
+                });
+                let pl = Placement { row0: 0, col0: 0, rows: dims[l] as u32, cols: dims[l + 1] as u32 };
+                s.steps.push(Step::tile(dense_node(l), l, pl));
+                s.steps.push(Step::cpu(relu_node(l)));
+            }
+            Mapping { label, tiles: tile_specs, min_mutexes: 0, stages: vec![s] }
+        }
+        CustomMlpMapping::Analog { tiles, pipeline: true } if tiles >= 1 && tiles <= layers => {
+            // `tiles` channel-connected stages, each owning one core and
+            // one crossbar holding its contiguous block of layers.
+            let mut stages = Vec::new();
+            let mut tile_specs = Vec::new();
+            for t in 0..tiles {
+                let lo = t * layers / tiles;
+                let hi = (t + 1) * layers / tiles;
+                let rows = *dims[lo..hi].iter().max().expect("non-empty block");
+                let cols: u64 = dims[lo + 1..=hi].iter().sum();
+                if cols > u32::MAX as u64 {
+                    return Err(WorkloadError::InvalidMapping(format!(
+                        "pipeline stage {t} packs {cols} columns, exceeding the u32 tile axis"
+                    )));
                 }
-                b.push(TraceOp::Send { ch: ch(p, 2), bytes: 4 * half, addr: addr::channel(ch(p, 2), i) });
-                b.push(TraceOp::Send { ch: ch(p, 3), bytes: 4 * half, addr: addr::channel(ch(p, 3), i) });
-            });
+                tile_specs.push(TileSpec { rows: rows as u32, cols: cols as u32, coupling: Coupling::Tight });
+                let mut s = Stage::on_core(t);
+                s.input = if t == 0 { StageInput::Memory { node: INPUT_NODE } } else { StageInput::Channel };
+                s.output = if t == tiles - 1 {
+                    StageOutput::Memory { node: out_node }
+                } else {
+                    StageOutput::Channel { bytes: 4 * dims[hi] }
+                };
+                let mut col0 = 0u64;
+                for l in lo..hi {
+                    let pl = Placement { row0: 0, col0: col0 as u32, rows: dims[l] as u32, cols: dims[l + 1] as u32 };
+                    col0 += dims[l + 1];
+                    s.steps.push(Step::tile(dense_node(l), t, pl));
+                    s.steps.push(Step::cpu(relu_node(l)));
+                }
+                stages.push(s);
+            }
+            Mapping { label, tiles: tile_specs, min_mutexes: 0, stages }
         }
-        for c in [2usize, 3] {
-            let b = &mut cores[c];
-            b.roi(RoiKind::Communication, |b| {
-                b.push(TraceOp::Recv { ch: ch(0, c) });
-                b.push(TraceOp::Recv { ch: ch(1, c) });
-            });
-            emit_queue(b, c, n);
-            emit_process(b, c);
-            emit_dequeue(b, c, half);
-            emit_relu(b, half);
-            b.roi(RoiKind::Sync, |b| {
-                b.push(TraceOp::MutexLock { id: 1 });
-                b.push(TraceOp::MutexUnlock { id: 1 });
-            });
-            emit_writeback(b, i, half);
-            b.roi(RoiKind::Communication, |b| {
-                b.push(TraceOp::Send { ch: ack(c, 0), bytes: 64, addr: addr::channel(ack(c, 0), i) });
-                b.push(TraceOp::Send { ch: ack(c, 1), bytes: 64, addr: addr::channel(ack(c, 1), i) });
-            });
+        CustomMlpMapping::Analog { tiles, pipeline } => {
+            return Err(unsupported(format!(
+                "ana tiles={tiles} pipeline={pipeline} for {layers} layers"
+            )));
         }
-    }
-    let tiles = (0..4)
-        .map(|_| TileSpec { rows: n as u32, cols: half as u32, coupling: Coupling::Tight })
-        .collect();
-    Workload {
-        label: "mlp/ANA-case4".into(),
-        traces: cores.into_iter().map(|b| b.build()).collect(),
-        spec: MachineSpec {
-            tiles,
-            mutexes: 2,
-            channels: vec![
-                ChannelSpec { producer: 0, consumer: 2, capacity: 2 },
-                ChannelSpec { producer: 0, consumer: 3, capacity: 2 },
-                ChannelSpec { producer: 1, consumer: 2, capacity: 2 },
-                ChannelSpec { producer: 1, consumer: 3, capacity: 2 },
-                ChannelSpec { producer: 2, consumer: 0, capacity: 2 },
-                ChannelSpec { producer: 2, consumer: 1, capacity: 2 },
-                ChannelSpec { producer: 3, consumer: 0, capacity: 2 },
-                ChannelSpec { producer: 3, consumer: 1, capacity: 2 },
-            ],
-            ..Default::default()
-        },
-        inferences: n_inf,
-    }
-}
-
-/// §VII.B loosely-coupled: two pipelined tiles with dedicated ReLU units
-/// in an off-chip accelerator; a single CPU core feeds inputs and
-/// collects outputs over the peripheral I/O bus.
-fn analog_loose(m: MlpModel, n_inf: u32) -> Workload {
-    let n = m.dim;
-    let mut b = TraceBuilder::new();
-    b.push(TraceOp::CmInit {
-        tile: 0,
-        placement: Placement { row0: 0, col0: 0, rows: n as u32, cols: n as u32 },
-    });
-    b.push(TraceOp::CmInit {
-        tile: 1,
-        placement: Placement { row0: 0, col0: 0, rows: n as u32, cols: n as u32 },
-    });
-    let start = b.mark();
-    for i in 0..n_inf {
-        if i == 1 {
-            b.reserve_repeats(start, n_inf - 1);
-        }
-        emit_input_load(&mut b, i, n);
-        emit_queue(&mut b, 0, n);
-        // Both layers execute inside the accelerator (tile-to-tile
-        // forwarding through the dedicated ReLU units); the CPU only
-        // waits for the two processes.
-        emit_process(&mut b, 0);
-        emit_process(&mut b, 1);
-        emit_dequeue(&mut b, 1, n);
-        emit_relu(&mut b, n);
-        emit_writeback(&mut b, i, n);
-    }
-    Workload {
-        label: "mlp/ANA-loose".into(),
-        traces: vec![b.build()],
-        spec: MachineSpec {
-            tiles: vec![
-                TileSpec { rows: n as u32, cols: n as u32, coupling: Coupling::Loose },
-                TileSpec { rows: n as u32, cols: n as u32, coupling: Coupling::Loose },
-            ],
-            ..Default::default()
-        },
-        inferences: n_inf,
-    }
+    };
+    Ok((graph, m))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::trace::TraceOp;
+    use crate::workload::{addr, Workload};
 
     fn cfg() -> SystemConfig {
         SystemConfig::high_power()
@@ -577,15 +523,22 @@ mod tests {
             MlpCase::Analog { case: 4 },
             MlpCase::AnalogLoose,
         ] {
-            let w = generate(case, &cfg(), 2);
+            let w = generate(case, &cfg(), 2).unwrap();
             assert!(w.total_ops() > 0, "{}", w.label);
             assert!(w.cores_used() >= 1);
         }
     }
 
     #[test]
+    fn unsupported_cases_error_cleanly() {
+        let e = generate(MlpCase::Digital { cores: 3 }, &cfg(), 1).unwrap_err();
+        assert!(matches!(e, WorkloadError::UnsupportedCase { workload: "mlp", .. }), "{e}");
+        assert!(generate(MlpCase::Analog { case: 9 }, &cfg(), 1).is_err());
+    }
+
+    #[test]
     fn analog_case1_has_two_processes_per_inference() {
-        let w = generate(MlpCase::Analog { case: 1 }, &cfg(), 3);
+        let w = generate(MlpCase::Analog { case: 1 }, &cfg(), 3).unwrap();
         let procs = w.traces[0]
             .iter()
             .filter(|op| matches!(op, TraceOp::CmProcess { .. }))
@@ -597,8 +550,8 @@ mod tests {
     fn analog_case2_has_double_the_processes() {
         // §VII.B: "the CM_PROCESS instruction needs to be called twice as
         // much ... in Case 2".
-        let c1 = generate(MlpCase::Analog { case: 1 }, &cfg(), 5);
-        let c2 = generate(MlpCase::Analog { case: 2 }, &cfg(), 5);
+        let c1 = generate(MlpCase::Analog { case: 1 }, &cfg(), 5).unwrap();
+        let c2 = generate(MlpCase::Analog { case: 2 }, &cfg(), 5).unwrap();
         let count = |w: &Workload| {
             w.traces
                 .iter()
@@ -611,14 +564,14 @@ mod tests {
 
     #[test]
     fn case_core_counts_match_fig6() {
-        assert_eq!(generate(MlpCase::Analog { case: 1 }, &cfg(), 1).cores_used(), 1);
-        assert_eq!(generate(MlpCase::Analog { case: 3 }, &cfg(), 1).cores_used(), 2);
-        assert_eq!(generate(MlpCase::Analog { case: 4 }, &cfg(), 1).cores_used(), 4);
+        assert_eq!(generate(MlpCase::Analog { case: 1 }, &cfg(), 1).unwrap().cores_used(), 1);
+        assert_eq!(generate(MlpCase::Analog { case: 3 }, &cfg(), 1).unwrap().cores_used(), 2);
+        assert_eq!(generate(MlpCase::Analog { case: 4 }, &cfg(), 1).unwrap().cores_used(), 4);
     }
 
     #[test]
     fn digital_streams_full_weight_matrix() {
-        let w = generate(MlpCase::Digital { cores: 1 }, &cfg(), 1);
+        let w = generate(MlpCase::Digital { cores: 1 }, &cfg(), 1).unwrap();
         let weight_bytes: u64 = w.traces[0]
             .iter()
             .filter_map(|op| match op {
@@ -631,7 +584,70 @@ mod tests {
 
     #[test]
     fn loose_case_uses_loose_tiles() {
-        let w = generate(MlpCase::AnalogLoose, &cfg(), 1);
+        let w = generate(MlpCase::AnalogLoose, &cfg(), 1).unwrap();
         assert!(w.spec.tiles.iter().all(|t| t.coupling == Coupling::Loose));
+    }
+
+    #[test]
+    fn shape_parsing() {
+        let s = MlpShape::parse("784x512x512x10").unwrap();
+        assert_eq!(s.dims(), &[784, 512, 512, 10]);
+        assert_eq!(s.layers(), 3);
+        assert_eq!(s.to_string(), "784x512x512x10");
+        assert!(MlpShape::parse("784").is_err());
+        assert!(MlpShape::parse("784x0x10").is_err());
+        assert!(MlpShape::parse("12ax3").is_err());
+    }
+
+    #[test]
+    fn custom_shape_digital_compiles() {
+        let shape = MlpShape::parse("784x512x512x10").unwrap();
+        let w = generate_custom(shape, CustomMlpMapping::Digital { cores: 1 }, 2).unwrap();
+        assert_eq!(w.traces.len(), 1);
+        assert!(w.label.contains("784x512x512x10"));
+        // Layer weight streams: 784*512 + 512*512 + 512*10 per inference.
+        let per_inf: u64 = 784 * 512 + 512 * 512 + 512 * 10;
+        let weight_bytes: u64 = w.traces[0]
+            .iter()
+            .filter_map(|op| match op {
+                TraceOp::MemStream { base, bytes, .. } if *base >= addr::WEIGHTS && *base < addr::INPUTS => Some(*bytes),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(weight_bytes, 2 * per_inf);
+    }
+
+    #[test]
+    fn custom_three_stage_analog_pipeline() {
+        let shape = MlpShape::parse("784x512x512x10").unwrap();
+        let w = generate_custom(shape, CustomMlpMapping::Analog { tiles: 3, pipeline: true }, 2).unwrap();
+        assert_eq!(w.cores_used(), 3, "one core per pipeline stage");
+        assert_eq!(w.spec.tiles.len(), 3);
+        assert_eq!(w.spec.channels.len(), 2, "3-stage pipeline has 2 boundaries");
+        assert!(w.label.contains("ANA-pipe3"));
+        // One CM_PROCESS per layer per inference.
+        let procs: usize = w
+            .traces
+            .iter()
+            .flatten()
+            .filter(|op| matches!(op, TraceOp::CmProcess { .. }))
+            .count();
+        assert_eq!(procs, 3 * 2);
+    }
+
+    #[test]
+    fn custom_packed_single_tile() {
+        let shape = MlpShape::parse("256x128x64").unwrap();
+        let w = generate_custom(shape, CustomMlpMapping::Analog { tiles: 1, pipeline: false }, 1).unwrap();
+        assert_eq!(w.spec.tiles.len(), 1);
+        assert_eq!(w.spec.tiles[0].rows, 256);
+        assert_eq!(w.spec.tiles[0].cols, 128 + 64);
+    }
+
+    #[test]
+    fn custom_invalid_mappings_error() {
+        let shape = MlpShape::parse("784x512x10").unwrap();
+        assert!(generate_custom(shape, CustomMlpMapping::Digital { cores: 5 }, 1).is_err());
+        assert!(generate_custom(shape, CustomMlpMapping::Analog { tiles: 7, pipeline: true }, 1).is_err());
     }
 }

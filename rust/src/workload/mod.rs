@@ -1,7 +1,13 @@
-//! Workload generators: compile the paper's neural-network mappings
-//! (Fig. 6 MLP cases, Fig. 9 LSTM cases, Fig. 12 CNN pipeline) into
-//! per-core `TraceOp` streams plus the machine specification (tiles,
-//! mutexes, channels) they require.
+//! Workloads: compile neural-network mappings into per-core `TraceOp`
+//! streams plus the machine specification (tiles, mutexes, channels)
+//! they require.
+//!
+//! Every workload is described as a [`crate::nn::LayerGraph`] plus a
+//! [`compile::mapping::Mapping`] and lowered by [`compile::compile`];
+//! the paper's cases (Fig. 6 MLP, Fig. 9 LSTM, Fig. 12 CNN pipeline)
+//! are thin case tables in [`mlp`], [`lstm`] and [`cnn`]. The retired
+//! hand-written generators live under [`legacy`] as the bit-equivalence
+//! oracle.
 //!
 //! Address-space layout is synthetic but consistent: weights, inputs,
 //! activations, outputs and channel buffers live in disjoint regions so
@@ -9,13 +15,48 @@
 //! paper's working-set analysis predicts.
 
 pub mod cnn;
+pub mod compile;
 pub mod costs;
+pub mod legacy;
 pub mod lstm;
 pub mod mlp;
 pub mod trace;
 
 use crate::sim::machine::MachineSpec;
+use std::fmt;
 use trace::TraceOp;
+
+/// Errors from workload construction: an unsupported case selection, or
+/// a layer graph / mapping pair the compiler rejects. Surfaced as clean
+/// CLI errors by `main.rs` (the legacy generators panicked instead).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WorkloadError {
+    /// A case table was asked for a configuration it does not define.
+    UnsupportedCase {
+        workload: &'static str,
+        case: String,
+        supported: &'static str,
+    },
+    /// The layer graph itself is malformed.
+    InvalidGraph(String),
+    /// The mapping does not fit the graph/platform (bad core/tile/channel
+    /// topology, placement out of bounds, ...).
+    InvalidMapping(String),
+}
+
+impl fmt::Display for WorkloadError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WorkloadError::UnsupportedCase { workload, case, supported } => {
+                write!(f, "unsupported {workload} case {case:?} (supported: {supported})")
+            }
+            WorkloadError::InvalidGraph(msg) => write!(f, "invalid layer graph: {msg}"),
+            WorkloadError::InvalidMapping(msg) => write!(f, "invalid mapping: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WorkloadError {}
 
 /// A fully-generated workload, ready for `sim::Machine::run`.
 pub struct Workload {

@@ -12,7 +12,7 @@ use crate::isa::InstClass;
 use crate::sim::aimc::Placement;
 use crate::stats::RoiKind;
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TraceOp {
     /// Execute `insts` instructions of `class` back to back.
     Compute { class: InstClass, insts: u64 },

@@ -1,0 +1,219 @@
+//! Property tests of the mapping compiler: for random small layer
+//! graphs + random valid mappings, the emitted `MachineSpec` must be
+//! self-consistent (every trace tile/mutex/channel index is declared,
+//! every channel is driven only by its declared producer/consumer
+//! cores, ROI markers balance) and the machine must run the compiled
+//! workload to completion without deadlock.
+
+use alpine::config::SystemConfig;
+use alpine::nn::{ActKind, LayerGraph, LayerKind, NodeId};
+use alpine::sim::aimc::{Coupling, Placement};
+use alpine::sim::machine::{Machine, TileSpec};
+use alpine::util::miniprop;
+use alpine::util::rng::Rng;
+use alpine::workload::compile::mapping::{
+    Handoff, Mapping, Place, SplitKind, Stage, StageInput, StageOutput, Step, TilePlacement,
+};
+use alpine::workload::compile::{compile, CHANNEL_CAPACITY};
+use alpine::workload::trace::TraceOp;
+use alpine::workload::Workload;
+
+/// One random layer block: a Dense plus a random elementwise tail.
+struct Block {
+    dense: NodeId,
+    tail: Vec<NodeId>,
+    d_in: u64,
+    d_out: u64,
+}
+
+/// Build a random chain graph; returns the blocks for mapping.
+fn random_graph(rng: &mut Rng) -> (LayerGraph, Vec<Block>, NodeId, NodeId) {
+    let mut g = LayerGraph::new("prop");
+    let n_layers = 1 + rng.below(3) as usize;
+    let dim = |rng: &mut Rng| 8 * (1 + rng.below(8));
+    let d0 = dim(rng);
+    let input = g.add(LayerKind::Input { bytes: 4 * d0, marshal_insts: d0 / 4 + 40, raw_bytes: d0 });
+    let mut prev = input;
+    let mut d_in = d0;
+    let mut blocks = Vec::new();
+    for l in 0..n_layers {
+        let d_out = dim(rng);
+        let dense = g.chain(prev, LayerKind::Dense { rows: d_in, cols: d_out, weight_slot: l });
+        prev = dense;
+        let mut tail = Vec::new();
+        match rng.below(3) {
+            0 => {
+                let relu = g.chain(prev, LayerKind::Activation { kind: ActKind::Relu, elems: d_out });
+                tail.push(relu);
+                prev = relu;
+            }
+            1 => {
+                let relu = g.chain(prev, LayerKind::Activation { kind: ActKind::Relu, elems: d_out });
+                let pool = g.chain(relu, LayerKind::Pool { elems: d_out, window: 2 });
+                tail.push(relu);
+                tail.push(pool);
+                prev = pool;
+            }
+            _ => {
+                let ew = g.chain(prev, LayerKind::Elementwise { simd_insts: d_out, fp_insts: d_out / 2 });
+                tail.push(ew);
+                prev = ew;
+            }
+        }
+        blocks.push(Block { dense, tail, d_in, d_out });
+        d_in = d_out;
+    }
+    let output = g.chain(prev, LayerKind::Output { bytes: 4 * d_in });
+    (g, blocks, input, output)
+}
+
+/// Build a random valid mapping over the blocks.
+fn random_mapping(rng: &mut Rng, blocks: &[Block], input: NodeId, output: NodeId) -> Mapping {
+    let n_stages = 1 + rng.below(blocks.len().min(3) as u64) as usize;
+    let mut tiles: Vec<TileSpec> = Vec::new();
+    let mut stages: Vec<Stage> = Vec::new();
+    let mut next_core = 0usize;
+    for s in 0..n_stages {
+        let lo = s * blocks.len() / n_stages;
+        let hi = (s + 1) * blocks.len() / n_stages;
+        // Occasionally column-split a stage across two cores.
+        let split = rng.below(4) == 0;
+        let parts = if split { 2u64 } else { 1 };
+        let mut stage = Stage::on_core(next_core);
+        if split {
+            stage.cores = vec![next_core, next_core + 1];
+            stage.split = SplitKind::Columns;
+        }
+        next_core += parts as usize;
+        stage.input = if s == 0 { StageInput::Memory { node: input } } else { StageInput::Channel };
+        stage.output = if s == n_stages - 1 {
+            StageOutput::Memory { node: output }
+        } else {
+            StageOutput::Channel { bytes: 4 * blocks[hi - 1].d_out / parts }
+        };
+        if s < n_stages - 1 && rng.below(2) == 0 {
+            stage.handoff = Handoff::SharedBuffer;
+        }
+        stage.barrier = rng.below(4) == 0;
+        for b in &blocks[lo..hi] {
+            let analog = rng.below(2) == 0;
+            if analog {
+                let mut per_replica = Vec::new();
+                for _ in 0..parts {
+                    let tile = tiles.len();
+                    tiles.push(TileSpec {
+                        rows: b.d_in as u32,
+                        cols: (b.d_out / parts) as u32,
+                        coupling: Coupling::Tight,
+                    });
+                    per_replica.push(TilePlacement {
+                        tile,
+                        placement: Placement {
+                            row0: 0,
+                            col0: 0,
+                            rows: b.d_in as u32,
+                            cols: (b.d_out / parts) as u32,
+                        },
+                    });
+                }
+                stage.steps.push(Step { node: b.dense, place: Place::Tile { per_replica } });
+            } else {
+                stage.steps.push(Step::cpu(b.dense));
+            }
+            for &t in &b.tail {
+                stage.steps.push(Step::cpu(t));
+            }
+        }
+        stages.push(stage);
+    }
+    Mapping { label: "prop/compiled".into(), tiles, min_mutexes: 0, stages }
+}
+
+/// Spec self-consistency: every index a trace op references is declared,
+/// channels are driven only by their declared endpoints, ROIs balance,
+/// and channel send/recv counts stay within the ping-pong capacity.
+fn check_self_consistent(w: &Workload) {
+    let spec = &w.spec;
+    let mut sends = vec![0u64; spec.channels.len()];
+    let mut recvs = vec![0u64; spec.channels.len()];
+    for (core, trace) in w.traces.iter().enumerate() {
+        let mut roi_depth = 0i64;
+        for op in trace {
+            match op {
+                TraceOp::CmInit { tile, .. }
+                | TraceOp::CmQueue { tile, .. }
+                | TraceOp::CmProcess { tile }
+                | TraceOp::CmDequeue { tile, .. } => {
+                    assert!(*tile < spec.tiles.len(), "tile {tile} not declared");
+                }
+                TraceOp::MutexLock { id } | TraceOp::MutexUnlock { id } => {
+                    assert!(*id < spec.mutexes, "mutex {id} not declared");
+                }
+                TraceOp::Send { ch, .. } => {
+                    assert!(*ch < spec.channels.len(), "channel {ch} not declared");
+                    assert_eq!(spec.channels[*ch].producer, core, "send from non-producer core");
+                    sends[*ch] += 1;
+                }
+                TraceOp::Recv { ch } => {
+                    assert!(*ch < spec.channels.len(), "channel {ch} not declared");
+                    assert_eq!(spec.channels[*ch].consumer, core, "recv on non-consumer core");
+                    recvs[*ch] += 1;
+                }
+                TraceOp::RoiPush { .. } => roi_depth += 1,
+                TraceOp::RoiPop => {
+                    roi_depth -= 1;
+                    assert!(roi_depth >= 0, "unbalanced RoiPop on core {core}");
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(roi_depth, 0, "unbalanced ROI markers on core {core}");
+    }
+    for (ch, spec_ch) in spec.channels.iter().enumerate() {
+        assert!(sends[ch] > 0, "channel {ch} has no producer traffic");
+        assert!(recvs[ch] > 0, "channel {ch} has no consumer traffic");
+        assert!(sends[ch] >= recvs[ch], "channel {ch} under-produced");
+        assert!(
+            sends[ch] - recvs[ch] <= CHANNEL_CAPACITY as u64,
+            "channel {ch} would overfill its ping-pong buffer"
+        );
+        assert_ne!(spec_ch.producer, spec_ch.consumer, "channel {ch} loops back");
+    }
+}
+
+#[test]
+fn compiled_random_mappings_are_self_consistent_and_run() {
+    miniprop::check("compile/self-consistent-and-deadlock-free", 0xA171E5, |rng| {
+        let (graph, blocks, input, output) = random_graph(rng);
+        let mapping = random_mapping(rng, &blocks, input, output);
+        let n_inf = 1 + rng.below(3) as u32;
+        let w = compile(&graph, &mapping, n_inf).expect("generated mapping must be valid");
+        check_self_consistent(&w);
+        // Runs to completion (a deadlock panics inside the machine).
+        let mut machine = Machine::new(SystemConfig::high_power(), w.spec.clone());
+        let stats = machine.run(w.traces.clone());
+        assert!(stats.roi_time_ps > 0, "machine made no progress");
+    });
+}
+
+#[test]
+fn paper_case_tables_are_self_consistent() {
+    use alpine::nn::CnnVariant;
+    use alpine::workload::{cnn, lstm, mlp};
+    let cfg = SystemConfig::high_power();
+    let mut all: Vec<Workload> = Vec::new();
+    for case in [
+        mlp::MlpCase::Digital { cores: 4 },
+        mlp::MlpCase::Analog { case: 3 },
+        mlp::MlpCase::Analog { case: 4 },
+        mlp::MlpCase::AnalogLoose,
+    ] {
+        all.push(mlp::generate(case, &cfg, 2).unwrap());
+    }
+    all.push(lstm::generate(lstm::LstmCase::Digital { cores: 5 }, 256, &cfg, 2).unwrap());
+    all.push(lstm::generate(lstm::LstmCase::Analog { case: 4 }, 512, &cfg, 2).unwrap());
+    all.push(cnn::generate(cnn::CnnCase::Analog, CnnVariant::Fast, &cfg, 1).unwrap());
+    for w in &all {
+        check_self_consistent(w);
+    }
+}

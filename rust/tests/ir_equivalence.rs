@@ -1,0 +1,151 @@
+//! The IR-equivalence gate: for every paper case, the `(LayerGraph,
+//! Mapping)` pair compiled by `workload::compile` must be **bit-
+//! identical** to the legacy hand-written generator it replaced — same
+//! per-core `TraceOp` streams, same `MachineSpec`, and therefore the
+//! same `RunStats` down to the last bit. CI runs this file as the
+//! `ir-equivalence` job; once the compiler has soaked, `workload::legacy`
+//! and this file can be deleted together.
+
+use alpine::config::{SystemConfig, SystemKind};
+use alpine::coordinator::run_workload;
+use alpine::nn::CnnVariant;
+use alpine::stats::RoiKind;
+use alpine::workload::cnn::{self, CnnCase};
+use alpine::workload::legacy;
+use alpine::workload::lstm::{self, LstmCase};
+use alpine::workload::mlp::{self, MlpCase};
+use alpine::workload::Workload;
+
+const MLP_CASES: [MlpCase; 8] = [
+    MlpCase::Digital { cores: 1 },
+    MlpCase::Digital { cores: 2 },
+    MlpCase::Digital { cores: 4 },
+    MlpCase::Analog { case: 1 },
+    MlpCase::Analog { case: 2 },
+    MlpCase::Analog { case: 3 },
+    MlpCase::Analog { case: 4 },
+    MlpCase::AnalogLoose,
+];
+
+const LSTM_CASES: [LstmCase; 7] = [
+    LstmCase::Digital { cores: 1 },
+    LstmCase::Digital { cores: 2 },
+    LstmCase::Digital { cores: 5 },
+    LstmCase::Analog { case: 1 },
+    LstmCase::Analog { case: 2 },
+    LstmCase::Analog { case: 3 },
+    LstmCase::Analog { case: 4 },
+];
+
+fn hp() -> SystemConfig {
+    SystemConfig::high_power()
+}
+
+/// Traces + spec, op by op (per-op compare keeps failure output small
+/// even on multi-megaop CNN traces).
+fn assert_workloads_identical(oracle: &Workload, compiled: &Workload) {
+    assert_eq!(compiled.label, oracle.label, "label");
+    assert_eq!(compiled.inferences, oracle.inferences, "{}", oracle.label);
+    assert_eq!(compiled.spec, oracle.spec, "{}: MachineSpec differs", oracle.label);
+    assert_eq!(compiled.traces.len(), oracle.traces.len(), "{}: core count", oracle.label);
+    for (core, (a, b)) in oracle.traces.iter().zip(&compiled.traces).enumerate() {
+        assert_eq!(a.len(), b.len(), "{} core {core}: op count", oracle.label);
+        for (k, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x, y, "{} core {core} op {k}", oracle.label);
+        }
+    }
+}
+
+/// Full-run statistics, bit for bit.
+fn assert_stats_identical(kind: SystemKind, oracle: Workload, compiled: Workload) {
+    let a = run_workload(kind, oracle);
+    let b = run_workload(kind, compiled);
+    assert_eq!(a.label, b.label);
+    assert_eq!(a.time_s.to_bits(), b.time_s.to_bits(), "{}", a.label);
+    assert_eq!(a.time_per_inference_s.to_bits(), b.time_per_inference_s.to_bits(), "{}", a.label);
+    assert_eq!(a.llc_mpki.to_bits(), b.llc_mpki.to_bits(), "{}", a.label);
+    assert_eq!(a.energy.total_j().to_bits(), b.energy.total_j().to_bits(), "{}", a.label);
+    assert_eq!(a.total_insts, b.total_insts, "{}", a.label);
+    assert_eq!(a.dram_accesses, b.dram_accesses, "{}", a.label);
+    assert_eq!(a.aimc_processes, b.aimc_processes, "{}", a.label);
+    assert_eq!(a.per_core_ipc.len(), b.per_core_ipc.len());
+    for (x, y) in a.per_core_ipc.iter().zip(&b.per_core_ipc) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{}", a.label);
+    }
+    for (x, y) in a.per_core_idle.iter().zip(&b.per_core_idle) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{}", a.label);
+    }
+    for (x, y) in a.per_core_wfm.iter().zip(&b.per_core_wfm) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{}", a.label);
+    }
+    for kind in RoiKind::ALL {
+        assert_eq!(a.roi.get(kind), b.roi.get(kind), "{} roi {kind:?}", a.label);
+    }
+}
+
+#[test]
+fn mlp_traces_bit_identical_to_legacy() {
+    for case in MLP_CASES {
+        let oracle = legacy::mlp::generate(case, &hp(), 3);
+        let compiled = mlp::generate(case, &hp(), 3).unwrap();
+        assert_workloads_identical(&oracle, &compiled);
+    }
+}
+
+#[test]
+fn lstm_traces_bit_identical_to_legacy() {
+    for n_h in [256u64, 512, 750] {
+        for case in LSTM_CASES {
+            let oracle = legacy::lstm::generate(case, n_h, &hp(), 3);
+            let compiled = lstm::generate(case, n_h, &hp(), 3).unwrap();
+            assert_workloads_identical(&oracle, &compiled);
+        }
+    }
+}
+
+#[test]
+fn cnn_traces_bit_identical_to_legacy() {
+    for variant in CnnVariant::ALL {
+        for case in [CnnCase::Digital, CnnCase::Analog] {
+            let oracle = legacy::cnn::generate(case, variant, &hp(), 2);
+            let compiled = cnn::generate(case, variant, &hp(), 2).unwrap();
+            assert_workloads_identical(&oracle, &compiled);
+        }
+    }
+}
+
+#[test]
+fn mlp_runstats_bit_identical_to_legacy() {
+    for kind in SystemKind::ALL {
+        let cfg = SystemConfig::for_kind(kind);
+        for case in MLP_CASES {
+            let oracle = legacy::mlp::generate(case, &cfg, 2);
+            let compiled = mlp::generate(case, &cfg, 2).unwrap();
+            assert_stats_identical(kind, oracle, compiled);
+        }
+    }
+}
+
+#[test]
+fn lstm_runstats_bit_identical_to_legacy() {
+    for (n_h, case) in [
+        (256u64, LstmCase::Digital { cores: 1 }),
+        (256, LstmCase::Digital { cores: 5 }),
+        (256, LstmCase::Analog { case: 1 }),
+        (512, LstmCase::Analog { case: 3 }),
+        (750, LstmCase::Analog { case: 4 }),
+    ] {
+        let oracle = legacy::lstm::generate(case, n_h, &hp(), 2);
+        let compiled = lstm::generate(case, n_h, &hp(), 2).unwrap();
+        assert_stats_identical(SystemKind::HighPower, oracle, compiled);
+    }
+}
+
+#[test]
+fn cnn_runstats_bit_identical_to_legacy() {
+    for case in [CnnCase::Digital, CnnCase::Analog] {
+        let oracle = legacy::cnn::generate(case, CnnVariant::Fast, &hp(), 1);
+        let compiled = cnn::generate(case, CnnVariant::Fast, &hp(), 1).unwrap();
+        assert_stats_identical(SystemKind::HighPower, oracle, compiled);
+    }
+}

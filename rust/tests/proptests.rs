@@ -329,8 +329,8 @@ fn workload_generation_scales_linearly_with_inferences() {
     check("workload-linear", 0x51, |rng| {
         let n = 1 + rng.below(6) as u32;
         let cfg = SystemConfig::high_power();
-        let w1 = mlp::generate(MlpCase::Analog { case: 1 }, &cfg, n);
-        let w2 = mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2 * n);
+        let w1 = mlp::generate(MlpCase::Analog { case: 1 }, &cfg, n).unwrap();
+        let w2 = mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2 * n).unwrap();
         // Ops scale ~linearly (init ops are constant).
         let per1 = (w1.total_ops() - 2) as f64 / n as f64;
         let per2 = (w2.total_ops() - 2) as f64 / (2 * n) as f64;
@@ -343,8 +343,8 @@ fn more_inferences_take_proportionally_longer() {
     check("inference-scaling", 0x52, |rng| {
         let n = 2 + rng.below(4) as u32;
         let cfg = SystemConfig::high_power();
-        let r1 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, n));
-        let r2 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2 * n));
+        let r1 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, n).unwrap());
+        let r2 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2 * n).unwrap());
         let ratio = r2.time_s / r1.time_s;
         assert!(
             (1.6..2.4).contains(&ratio),
