@@ -8,10 +8,12 @@
 use alpine::config::SystemConfig;
 use alpine::nn::CnnVariant;
 use alpine::util::benchkit::{bench, black_box, json_report};
+use alpine::workload::automap::{self, TopologyBudget};
 use alpine::workload::cnn::{self, CnnCase};
 use alpine::workload::legacy;
 use alpine::workload::lstm::{self, LstmCase};
 use alpine::workload::mlp::{self, MlpCase};
+use alpine::workload::transformer::{self, TransformerCase, TransformerShape};
 
 fn main() {
     let cfg = SystemConfig::high_power();
@@ -58,6 +60,28 @@ fn main() {
                 .unwrap(),
         );
     }));
+
+    // Transformer-encoder compile throughput (new workload class).
+    let tshape = TransformerShape::new(256, 4, 64, 2, 1024).unwrap();
+    results.push(bench("workload/compile_transformer_ana", 50, || {
+        black_box(transformer::generate(tshape, TransformerCase::Analog, 10).unwrap());
+    }));
+
+    // Automap search throughput: enumerate + cost-prune the full mapping
+    // space of a 2-layer encoder (no simulation) under a Table-I budget.
+    let tgraph = tshape.graph();
+    let budget = TopologyBudget { cores: 8, tiles: 16, tile_rows: 256, tile_cols: 256, channels: 64 };
+    let searched = bench("workload/automap_search_transformer_l2", 5, || {
+        black_box(automap::search(&tgraph, &budget, &cfg, 8).unwrap());
+    });
+    let outcome = automap::search(&tgraph, &budget, &cfg, 8).unwrap();
+    println!(
+        "workload/automap_search_transformer_l2: {} enumerated, {} feasible, {:.1} candidates/ms",
+        outcome.enumerated,
+        outcome.feasible,
+        outcome.enumerated as f64 / (searched.mean_ns / 1e6)
+    );
+    results.push(searched);
 
     json_report(&results, "BENCH_workloads.json").expect("writing BENCH_workloads.json");
 }

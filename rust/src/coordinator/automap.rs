@@ -1,0 +1,154 @@
+//! Automap validation: simulate the search's surviving candidates on
+//! the target system — fanned out across the same worker pool as the
+//! figure sweeps — and compute the Pareto front on *simulated*
+//! (cycles, energy). The all-digital single-core baseline always rides
+//! along, so every report answers "how much better than naive?".
+//!
+//! Determinism: the candidate list is produced serially by
+//! `workload::automap::search`, `parallel_map` preserves input order,
+//! every simulation is self-contained, and Pareto/best selection break
+//! ties on the candidate descriptor — so rows are bit-identical at any
+//! `--jobs N` (enforced by `tests/automap.rs`).
+
+use crate::config::{SystemConfig, SystemKind};
+use crate::nn::LayerGraph;
+use crate::util::parallel;
+use crate::workload::automap::{self, Candidate, TopologyBudget};
+use crate::workload::{compile, WorkloadError};
+
+use super::{run_workload, CaseResult};
+
+#[derive(Clone, Copy, Debug)]
+pub struct AutomapOptions {
+    /// Candidates validated by simulation (plus energy-ranked extras).
+    pub top_k: usize,
+    /// Inferences per validation run.
+    pub n_inf: u32,
+    /// Worker threads for the validation fan-out.
+    pub jobs: usize,
+}
+
+impl Default for AutomapOptions {
+    fn default() -> AutomapOptions {
+        AutomapOptions { top_k: 8, n_inf: 5, jobs: 1 }
+    }
+}
+
+/// One validated candidate.
+pub struct AutomapRow {
+    pub desc: String,
+    /// Analytic estimate that ranked this candidate.
+    pub est_cycles: f64,
+    /// Full simulation outcome.
+    pub result: CaseResult,
+    /// On the Pareto front of simulated (time, energy).
+    pub pareto: bool,
+    /// This row is the all-digital single-core baseline.
+    pub baseline: bool,
+}
+
+pub struct AutomapReport {
+    pub enumerated: usize,
+    pub feasible: usize,
+    pub truncated: bool,
+    pub rows: Vec<AutomapRow>,
+    /// Index of the fastest simulated row.
+    pub best: usize,
+    /// Index of the baseline row.
+    pub baseline: usize,
+}
+
+impl AutomapReport {
+    pub fn best_row(&self) -> &AutomapRow {
+        &self.rows[self.best]
+    }
+
+    pub fn baseline_row(&self) -> &AutomapRow {
+        &self.rows[self.baseline]
+    }
+
+    pub fn speedup_vs_baseline(&self) -> f64 {
+        self.baseline_row().result.time_s / self.best_row().result.time_s
+    }
+
+    pub fn front(&self) -> impl Iterator<Item = &AutomapRow> {
+        self.rows.iter().filter(|r| r.pareto)
+    }
+}
+
+/// Search the mapping space and validate the survivors on `kind`.
+pub fn run_search(
+    graph: &LayerGraph,
+    budget: &TopologyBudget,
+    kind: SystemKind,
+    opts: AutomapOptions,
+) -> Result<AutomapReport, WorkloadError> {
+    let cfg = SystemConfig::for_kind(kind);
+    if budget.cores > cfg.num_cores {
+        return Err(WorkloadError::InvalidMapping(format!(
+            "budget of {} cores exceeds the {} system's {} cores",
+            budget.cores,
+            kind.name(),
+            cfg.num_cores
+        )));
+    }
+    let outcome = automap::search(graph, budget, &cfg, opts.top_k)?;
+    let (base_mapping, base_desc) = automap::digital_baseline(graph)?;
+
+    let mut cands = outcome.ranked;
+    let baseline_idx = match cands.iter().position(|c| c.desc == base_desc) {
+        Some(i) => i,
+        None => {
+            let est = automap::estimate(graph, &base_mapping, &cfg)?;
+            cands.push(Candidate { mapping: base_mapping, desc: base_desc, est });
+            cands.len() - 1
+        }
+    };
+
+    let workloads = cands
+        .iter()
+        .map(|c| compile::compile(graph, &c.mapping, opts.n_inf))
+        .collect::<Result<Vec<_>, _>>()?;
+    let results = parallel::parallel_map(workloads, opts.jobs, |w| run_workload(kind, w));
+
+    let mut rows: Vec<AutomapRow> = cands
+        .into_iter()
+        .zip(results)
+        .enumerate()
+        .map(|(i, (c, result))| AutomapRow {
+            desc: c.desc,
+            est_cycles: c.est.cycles_per_inf,
+            result,
+            pareto: false,
+            baseline: i == baseline_idx,
+        })
+        .collect();
+
+    let metrics: Vec<(f64, f64)> =
+        rows.iter().map(|r| (r.result.time_s, r.result.energy.total_j())).collect();
+    for (i, row) in rows.iter_mut().enumerate() {
+        let (ti, ei) = metrics[i];
+        row.pareto = !metrics
+            .iter()
+            .enumerate()
+            .any(|(j, &(tj, ej))| j != i && tj <= ti && ej <= ei && (tj < ti || ej < ei));
+    }
+    let best = (0..rows.len())
+        .min_by(|&a, &b| {
+            rows[a]
+                .result
+                .time_s
+                .total_cmp(&rows[b].result.time_s)
+                .then_with(|| rows[a].desc.cmp(&rows[b].desc))
+        })
+        .expect("at least the baseline row exists");
+
+    Ok(AutomapReport {
+        enumerated: outcome.enumerated,
+        feasible: outcome.feasible,
+        truncated: outcome.truncated,
+        rows,
+        best,
+        baseline: baseline_idx,
+    })
+}

@@ -14,13 +14,16 @@ use crate::util::parallel;
 use crate::workload::cnn::{self, CnnCase};
 use crate::workload::lstm::{self, LstmCase};
 use crate::workload::mlp::{self, CustomMlpMapping, MlpCase, MlpShape};
+use crate::workload::transformer::{self, TransformerCase, TransformerShape};
 
 use super::{run_workload, CaseResult};
 
-/// Default inference counts (§VI.C: 10 for MLP/LSTM, 3 for CNN).
+/// Default inference counts (§VI.C: 10 for MLP/LSTM, 3 for CNN; the
+/// transformer token steps match the MLP count).
 pub const MLP_INFERENCES: u32 = 10;
 pub const LSTM_INFERENCES: u32 = 10;
 pub const CNN_INFERENCES: u32 = 3;
+pub const TRANSFORMER_INFERENCES: u32 = 10;
 
 pub const MLP_CASES: [MlpCase; 7] = [
     MlpCase::Digital { cores: 1 },
@@ -54,6 +57,9 @@ pub enum SweepCase {
     /// A custom-shape MLP under one of the compiler-backed mappings
     /// (validate with `mlp::generate_custom` before enqueueing).
     CustomMlp { kind: SystemKind, shape: MlpShape, mapping: CustomMlpMapping },
+    /// A transformer encoder under one of the hand-written case-table
+    /// mappings (the automap search goes through `coordinator::automap`).
+    Transformer { kind: SystemKind, shape: TransformerShape, case: TransformerCase },
 }
 
 /// Generate and simulate one sweep case (runs inside a worker). Sweep
@@ -76,6 +82,10 @@ pub fn run_case(case: SweepCase, n_inf: u32) -> CaseResult {
         SweepCase::CustomMlp { kind, shape, mapping } => run_workload(
             kind,
             mlp::generate_custom(shape, mapping, n_inf).expect("custom sweep case was pre-validated"),
+        ),
+        SweepCase::Transformer { kind, shape, case } => run_workload(
+            kind,
+            transformer::generate(shape, case, n_inf).expect("transformer sweep case was pre-validated"),
         ),
     }
 }
@@ -259,6 +269,23 @@ pub fn custom_mlp(shape: MlpShape, n_inf: u32) -> Vec<CaseResult> {
     run_sweep(custom_mlp_cases(shape), n_inf)
 }
 
+/// Case list of a transformer sweep: both hand-written mappings on both
+/// systems.
+pub fn transformer_cases(shape: TransformerShape) -> Vec<SweepCase> {
+    let mut out = Vec::new();
+    for kind in SystemKind::ALL {
+        for case in [TransformerCase::Digital, TransformerCase::Analog] {
+            out.push(SweepCase::Transformer { kind, shape, case });
+        }
+    }
+    out
+}
+
+/// Sweep the transformer hand mappings across both systems.
+pub fn transformer_sweep(shape: TransformerShape, n_inf: u32) -> Vec<CaseResult> {
+    run_sweep(transformer_cases(shape), n_inf)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -295,6 +322,29 @@ mod tests {
         assert_eq!(fig14_cases().len(), 2);
         let shape = MlpShape::parse("784x512x512x10").unwrap();
         assert_eq!(custom_mlp_cases(shape).len(), 8);
+        let t = TransformerShape::new(64, 2, 16, 1, 128).unwrap();
+        assert_eq!(transformer_cases(t).len(), 4);
+    }
+
+    /// Acceptance: the transformer encoder — a workload class the paper
+    /// never ran — sweeps end-to-end through the parallel engine, and
+    /// the packed analog mapping beats the digital reference. (At tiny
+    /// dims the fp32<->int8 cast cost erodes the analog win, so this
+    /// asserts at d_model = 128.)
+    #[test]
+    fn transformer_sweep_runs_end_to_end() {
+        let shape = TransformerShape::new(128, 4, 32, 1, 256).unwrap();
+        let rows = run_cases(&transformer_cases(shape), 2, 2);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.time_s > 0.0, "{}", r.label);
+            assert!(r.energy.total_j() > 0.0, "{}", r.label);
+        }
+        let hp: Vec<&CaseResult> =
+            rows.iter().filter(|r| r.system == SystemKind::HighPower).collect();
+        let dig = hp.iter().find(|r| r.label.ends_with("DIG-1core")).unwrap();
+        let ana = hp.iter().find(|r| r.label.ends_with("ANA-packed")).unwrap();
+        assert!(ana.time_s < dig.time_s, "analog {} vs digital {}", ana.time_s, dig.time_s);
     }
 
     /// Acceptance: a custom-shape MLP and a 3-stage pipelined analog

@@ -2,6 +2,7 @@
 //! collects results, and drives the figure/table sweeps of the paper's
 //! evaluation (§VII-§IX).
 
+pub mod automap;
 pub mod experiments;
 pub mod server;
 

@@ -10,15 +10,18 @@
 //! (Hand-rolled argument parsing: clap is not in the offline vendor set.)
 
 use alpine::config::{SystemConfig, SystemKind};
+use alpine::coordinator::automap::{self as automap_driver, AutomapOptions};
 use alpine::coordinator::{experiments, run_workload};
-use alpine::nn::CnnVariant;
+use alpine::nn::{CnnVariant, LayerGraph};
 use alpine::report;
 use alpine::runtime::{default_artifacts_dir, Runtime};
 use alpine::util::parallel;
 use alpine::util::table::Table;
+use alpine::workload::automap::TopologyBudget;
 use alpine::workload::cnn::{self, CnnCase};
 use alpine::workload::lstm::{self, LstmCase};
 use alpine::workload::mlp::{self, CustomMlpMapping, MlpCase, MlpShape};
+use alpine::workload::transformer::TransformerShape;
 use anyhow::{bail, Context, Result};
 
 fn main() {
@@ -66,6 +69,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "list-configs" => list_configs(),
         "run" => cmd_run(&args[1..]),
         "custom" => cmd_custom(&args[1..]),
+        "automap" => cmd_automap(&args[1..]),
+        "transformer" => cmd_transformer(&args[1..]),
         "fig7" => {
             let rows = experiments::fig7_mlp(opt_u32(&args[1..], "--inferences", experiments::MLP_INFERENCES)?);
             report::aggregate_table("Fig. 7 — MLP aggregate", &rows).print();
@@ -136,6 +141,17 @@ fn print_help() {
          \x20                          compile + run a custom MLP mapping\n\
          \x20                          (no --tiles/--pipeline: sweep the\n\
          \x20                          default mappings on both systems)\n\
+         \x20 automap --shape AxBxC | --d-model N [--heads N] [--seq N]\n\
+         \x20     [--layers N] [--d-ff N] [--cores N] [--tiles N]\n\
+         \x20     [--tile-dims RxC] [--channels N] [--top K]\n\
+         \x20     [--system hp|lp] [--inferences N]\n\
+         \x20                          search the mapping space, validate\n\
+         \x20                          the top-K by simulation, print the\n\
+         \x20                          Pareto front on (cycles, energy)\n\
+         \x20 transformer [--d-model N] [--heads N] [--seq N] [--layers N]\n\
+         \x20     [--d-ff N] [--system hp|lp] [--inferences N]\n\
+         \x20                          sweep the transformer-encoder hand\n\
+         \x20                          mappings (digital vs packed analog)\n\
          \x20 fig7|fig8|fig10|fig11|fig13|fig14|loose   regenerate a figure\n\
          \x20 validate                 PJRT probe-check all AOT artifacts\n\
          \n\
@@ -275,6 +291,104 @@ fn cmd_custom(args: &[String]) -> Result<()> {
         report::aggregate_table(&format!("custom MLP {shape} — default mappings"), &rows).print();
         report::gains_table("gains vs DIG-1core", &rows, |r| r.label.contains("DIG-1core")).print();
     }
+    Ok(())
+}
+
+/// Transformer shape from `--d-model/--heads/--seq/--layers/--d-ff`
+/// (defaults: a small 2-layer encoder, d_model 256 / heads 4 / seq 64 /
+/// d_ff 1024).
+fn parse_transformer_shape(args: &[String]) -> Result<TransformerShape> {
+    let get = |name: &str, default: u64| -> Result<u64> {
+        match opt(args, name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{name} expects a number")),
+        }
+    };
+    Ok(TransformerShape::new(
+        get("--d-model", 256)?,
+        get("--heads", 4)?,
+        get("--seq", 64)?,
+        get("--layers", 2)?,
+        get("--d-ff", 1024)?,
+    )?)
+}
+
+/// `automap` — search the mapping space of an MLP or transformer chain
+/// under a topology budget, validate the top-K candidates on the
+/// simulator, and print the Pareto front on (cycles, energy).
+fn cmd_automap(args: &[String]) -> Result<()> {
+    let system = SystemKind::parse(&opt(args, "--system").unwrap_or_else(|| "hp".into()))
+        .context("bad --system (hp|lp)")?;
+    let cfg = SystemConfig::for_kind(system);
+    let graph: LayerGraph = if let Some(shape_s) = opt(args, "--shape") {
+        let shape = MlpShape::parse(&shape_s)?;
+        LayerGraph::mlp(shape.dims())
+    } else if opt(args, "--d-model").is_some() {
+        parse_transformer_shape(args)?.graph()
+    } else {
+        bail!("automap needs --shape AxBxC (MLP) or --d-model N [...] (transformer)");
+    };
+
+    let mut budget = TopologyBudget::for_config(&cfg);
+    if let Some(v) = opt(args, "--cores") {
+        budget.cores = v.parse().context("--cores expects a number >= 1")?;
+    }
+    if let Some(v) = opt(args, "--tiles") {
+        budget.tiles = v.parse().context("--tiles expects a number")?;
+    }
+    if let Some(v) = opt(args, "--channels") {
+        budget.channels = v.parse().context("--channels expects a number")?;
+    }
+    if let Some(v) = opt(args, "--tile-dims") {
+        let (r, c) = v
+            .split_once('x')
+            .and_then(|(r, c)| Some((r.trim().parse().ok()?, c.trim().parse().ok()?)))
+            .context("--tile-dims expects RxC, e.g. 1024x1024")?;
+        budget.tile_rows = r;
+        budget.tile_cols = c;
+    }
+    if budget.cores == 0 {
+        bail!("--cores expects a number >= 1");
+    }
+
+    let opts = AutomapOptions {
+        top_k: opt_u32(args, "--top", 8)? as usize,
+        n_inf: opt_u32(args, "--inferences", 5)?,
+        jobs: parallel::jobs(),
+    };
+    let rep = automap_driver::run_search(&graph, &budget, system, opts)?;
+    println!(
+        "automap: {} candidates enumerated, {} feasible{}; validated {} by simulation on {}",
+        rep.enumerated,
+        rep.feasible,
+        if rep.truncated { " (space truncated)" } else { "" },
+        rep.rows.len(),
+        system.name(),
+    );
+    report::automap_table(&format!("automap — {}", graph.name), &rep).print();
+    println!(
+        "best: {} — {:.2}x vs the all-digital single-core baseline; {} mapping(s) on the Pareto front",
+        rep.best_row().desc,
+        rep.speedup_vs_baseline(),
+        rep.front().count(),
+    );
+    Ok(())
+}
+
+/// `transformer` — sweep the hand-written transformer-encoder mappings
+/// (digital reference vs packed analog) through the parallel engine.
+fn cmd_transformer(args: &[String]) -> Result<()> {
+    let shape = parse_transformer_shape(args)?;
+    let n = opt_u32(args, "--inferences", experiments::TRANSFORMER_INFERENCES)?;
+    let mut cases = experiments::transformer_cases(shape);
+    if let Some(sys) = opt(args, "--system") {
+        let sys = SystemKind::parse(&sys).context("bad --system (hp|lp)")?;
+        cases.retain(|c| matches!(c, experiments::SweepCase::Transformer { kind, .. } if *kind == sys));
+    }
+    let rows = experiments::run_cases(&cases, n, parallel::jobs());
+    report::aggregate_table(&format!("transformer {shape} — hand mappings"), &rows).print();
+    report::gains_table("gains vs DIG-1core", &rows, |r| r.label.ends_with("DIG-1core")).print();
+    println!("hint: `alpine automap --d-model {}` searches beyond these hand mappings", shape.d_model);
     Ok(())
 }
 

@@ -60,6 +60,20 @@ pub enum LayerKind {
     /// SIMD / scalar-FP instruction budgets.
     Elementwise { simd_insts: u64, fp_insts: u64 },
 
+    /// Multi-head self-attention for one token step against a cached
+    /// sequence of `seq` keys/values (transformer-encoder workloads).
+    /// The four `d_model x d_model` projection matrices (Wq|Wk|Wv|Wo)
+    /// are weight-stationary — AIMC-mappable — and live packed at
+    /// `addr::weights(weight_slot)`; the score/softmax/context GEMVs run
+    /// against the *dynamic* K/V caches (`addr::kv(weight_slot)`) and
+    /// therefore always lower digitally (a PCM crossbar cannot be
+    /// re-programmed per token).
+    Attention { d_model: u64, heads: u64, seq: u64, weight_slot: usize },
+
+    /// Layer normalization over `elems` values (mean/variance reduction
+    /// plus per-element normalize, scale and shift).
+    LayerNorm { elems: u64 },
+
     /// Result sink: `bytes` written back per inference.
     Output { bytes: u64 },
 }
@@ -67,6 +81,8 @@ pub enum LayerKind {
 impl LayerKind {
     /// Input-vector length of the layer's MVM, if it has one (the number
     /// of elements queued into an AIMC tile mapped to this layer).
+    /// `Attention` deliberately returns `None`: it is four MVMs plus a
+    /// digital score block, placed through `Place::AttentionTiles`.
     pub fn mvm_rows(&self) -> Option<u64> {
         match self {
             LayerKind::Dense { rows, .. } => Some(*rows),
@@ -179,6 +195,40 @@ impl LayerGraph {
         g
     }
 
+    /// A pre-norm transformer encoder running one token step against a
+    /// `seq`-deep KV cache — a workload class the paper never evaluated.
+    /// Per encoder layer: LayerNorm -> Attention -> residual ->
+    /// LayerNorm -> Dense(d_model x d_ff) + ReLU -> Dense(d_ff x
+    /// d_model) -> residual; a final LayerNorm precedes the output.
+    /// Weight slots: layer `l` uses `3l` (packed Wq|Wk|Wv|Wo), `3l + 1`
+    /// (FFN up) and `3l + 2` (FFN down).
+    pub fn transformer(d_model: u64, heads: u64, seq: u64, layers: u64, d_ff: u64) -> LayerGraph {
+        assert!(layers >= 1, "a transformer needs at least one encoder layer");
+        assert!(heads >= 1 && d_model % heads == 0, "heads must divide d_model");
+        let mut g = LayerGraph::new(format!(
+            "transformer[d{d_model}h{heads}s{seq}l{layers}f{d_ff}]"
+        ));
+        let mut prev = g.add(LayerKind::Input {
+            bytes: 4 * d_model,
+            marshal_insts: d_model / 4 + 40,
+            raw_bytes: d_model,
+        });
+        let residual = LayerKind::Elementwise { simd_insts: d_model / 4 + 4, fp_insts: 0 };
+        for l in 0..layers as usize {
+            prev = g.chain(prev, LayerKind::LayerNorm { elems: d_model });
+            prev = g.chain(prev, LayerKind::Attention { d_model, heads, seq, weight_slot: 3 * l });
+            prev = g.chain(prev, residual);
+            prev = g.chain(prev, LayerKind::LayerNorm { elems: d_model });
+            prev = g.chain(prev, LayerKind::Dense { rows: d_model, cols: d_ff, weight_slot: 3 * l + 1 });
+            prev = g.chain(prev, LayerKind::Activation { kind: ActKind::Relu, elems: d_ff });
+            prev = g.chain(prev, LayerKind::Dense { rows: d_ff, cols: d_model, weight_slot: 3 * l + 2 });
+            prev = g.chain(prev, residual);
+        }
+        prev = g.chain(prev, LayerKind::LayerNorm { elems: d_model });
+        g.chain(prev, LayerKind::Output { bytes: 4 * d_model });
+        g
+    }
+
     /// The paper's CNNs (§IX): 5 conv layers (fused post-ops) + 3 dense
     /// layers + softmax. Node ids: 0 input, 1..=5 convs, then
     /// (dense, act) pairs, last node output.
@@ -253,6 +303,30 @@ mod tests {
         assert_eq!(g.nodes.len(), 13);
         assert!(matches!(g.nodes[0].kind, LayerKind::Input { bytes, .. } if bytes == 224 * 224 * 3));
         assert!(matches!(g.nodes[12].kind, LayerKind::Output { bytes: 1000 }));
+    }
+
+    #[test]
+    fn transformer_graph_shape() {
+        let g = LayerGraph::transformer(256, 4, 64, 2, 1024);
+        // input + 2 x 8 encoder nodes + final LN + output
+        assert_eq!(g.nodes.len(), 2 * 8 + 3);
+        assert_eq!(g.edges.len(), g.nodes.len() - 1);
+        assert!(matches!(
+            g.nodes[2].kind,
+            LayerKind::Attention { d_model: 256, heads: 4, seq: 64, weight_slot: 0 }
+        ));
+        assert!(matches!(g.nodes[5].kind, LayerKind::Dense { rows: 256, cols: 1024, weight_slot: 1 }));
+        assert!(matches!(g.nodes[10].kind, LayerKind::Attention { weight_slot: 3, .. }));
+        assert!(matches!(g.nodes[17].kind, LayerKind::LayerNorm { elems: 256 }));
+        assert!(matches!(g.nodes[18].kind, LayerKind::Output { bytes: 1024 }));
+        // Attention is not a single MVM: placed via AttentionTiles, not Tile.
+        assert_eq!(g.nodes[2].kind.mvm_rows(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "heads must divide d_model")]
+    fn transformer_rejects_bad_heads() {
+        let _ = LayerGraph::transformer(100, 3, 8, 1, 64);
     }
 
     #[test]

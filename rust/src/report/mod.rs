@@ -75,6 +75,27 @@ pub fn utilization_table(title: &str, rows: &[CaseResult]) -> Table {
     t
 }
 
+/// Automap validation table: analytic estimate vs simulation per
+/// candidate, speedup over the all-digital baseline, Pareto-front mark.
+pub fn automap_table(title: &str, report: &crate::coordinator::automap::AutomapReport) -> Table {
+    let mut t = Table::new(
+        title,
+        &["mapping", "est cyc/inf", "time/inf", "energy/inf", "speedup", "front"],
+    );
+    let base_time = report.baseline_row().result.time_s;
+    for row in &report.rows {
+        t.row(vec![
+            format!("{}{}", row.desc, if row.baseline { " (baseline)" } else { "" }),
+            format!("{:.3e}", row.est_cycles),
+            fmt_time(row.result.time_per_inference_s),
+            fmt_energy(row.result.energy_per_inference_j()),
+            format!("{:.2}x", base_time / row.result.time_s),
+            if row.pareto { "*".to_string() } else { String::new() },
+        ]);
+    }
+    t
+}
+
 /// Speedup/energy-gain summary vs a baseline predicate.
 pub fn gains_table(
     title: &str,

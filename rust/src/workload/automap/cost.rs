@@ -1,0 +1,241 @@
+//! The fast analytic cost model that prunes the mapping space.
+//!
+//! Rather than duplicating per-layer formulas (which would drift from
+//! the compiler), the model compiles the candidate to its real trace
+//! (two inferences) and walks the ops with closed-form timing: issue
+//! cycles per instruction class, stream stalls classified by working-set
+//! residency, AIMC I/O at the port throughput, the 100 ns MVM latency on
+//! the dependent dequeue, and the calibrated channel/mutex constants.
+//! No cache state, no event scheduling — O(ops), microseconds per
+//! candidate — while staying within a small factor of the simulator
+//! (pinned by `tests/automap.rs::cost_model_tracks_simulated_cycles`).
+//!
+//! Pipeline steady-state throughput is the slowest core, so the
+//! per-inference estimate is the max over per-core estimates.
+
+use crate::config::SystemConfig;
+use crate::nn::LayerGraph;
+use crate::sim::aimc::Coupling;
+use crate::workload::compile::{self, mapping::Mapping};
+use crate::workload::trace::TraceOp;
+use crate::workload::{addr, costs, WorkloadError};
+
+/// Analytic per-inference estimate of one mapped workload.
+#[derive(Clone, Debug)]
+pub struct CostEstimate {
+    /// Steady-state cycles per inference (max over cores).
+    pub cycles_per_inf: f64,
+    /// Per-core cycles per inference, trace order.
+    pub per_core_cycles: Vec<f64>,
+    /// Coarse energy per inference (core active/idle + static + DRAM +
+    /// AIMC), joules.
+    pub energy_per_inf_j: f64,
+}
+
+/// Fraction of the LLC a streamed working set may occupy and still be
+/// classified as cache-resident.
+const LLC_RESIDENT_FRACTION: f64 = 0.7;
+/// Miss-path overhead beyond the raw DRAM latency (bus frontend/forward
+/// hops), cycles.
+const MISS_OVERHEAD_CYCLES: f64 = 10.0;
+
+/// Estimate one candidate. Compiles the mapping (two inferences, so
+/// steady-state effects like shared-buffer acks are represented) and
+/// walks the traces.
+pub fn estimate(graph: &LayerGraph, mapping: &Mapping, cfg: &SystemConfig) -> Result<CostEstimate, WorkloadError> {
+    const N_INF: f64 = 2.0;
+    let w = compile::compile(graph, mapping, N_INF as u32)?;
+
+    // Channel payloads (a Recv op does not carry the message size).
+    let mut ch_bytes = vec![0u64; w.spec.channels.len()];
+    for trace in &w.traces {
+        for op in trace {
+            if let TraceOp::Send { ch, bytes, .. } = op {
+                if ch_bytes[*ch] == 0 {
+                    ch_bytes[*ch] = *bytes;
+                }
+            }
+        }
+    }
+
+    // Residency classification: per-inference streamed working sets.
+    let (mut weight_bytes, mut kv_bytes) = (0u64, 0u64);
+    for trace in &w.traces {
+        for op in trace {
+            if let TraceOp::MemStream { base, bytes, .. } = op {
+                if (addr::WEIGHTS..addr::INPUTS).contains(base) {
+                    weight_bytes += *bytes;
+                } else if *base >= addr::KV {
+                    kv_bytes += *bytes;
+                }
+            }
+        }
+    }
+    weight_bytes = (weight_bytes as f64 / N_INF) as u64;
+    kv_bytes = (kv_bytes as f64 / N_INF) as u64;
+    let llc_budget = (cfg.llc.size_bytes as f64 * LLC_RESIDENT_FRACTION) as u64;
+    let weights_resident = weight_bytes <= llc_budget;
+    let kv_resident =
+        kv_bytes <= llc_budget.saturating_sub(if weights_resident { weight_bytes } else { 0 });
+
+    let freq = cfg.freq_hz;
+    let line = 64f64;
+    let hit_stall = cfg.llc.hit_latency_cycles as f64;
+    let miss_stall = cfg.dram_latency_s * freq + hit_stall + MISS_OVERHEAD_CYCLES;
+    let proc_cycles = cfg.aimc.process_latency_s * freq;
+    let tight_cyc_per_byte = freq / cfg.aimc.io_throughput_bps;
+
+    let mut per_core: Vec<f64> = Vec::with_capacity(w.traces.len());
+    let mut dram_lines = 0f64;
+    let mut aimc_j = 0f64;
+    for trace in &w.traces {
+        let mut cyc = 0f64;
+        for op in trace {
+            match *op {
+                TraceOp::Compute { class, insts } => cyc += (insts * class.cycles()) as f64,
+                TraceOp::MemStream { base, bytes, insts_per_line, prefetchable, .. } => {
+                    let lines = (bytes as f64 / line).ceil().max(1.0);
+                    let stall = if (addr::WEIGHTS..addr::INPUTS).contains(&base) {
+                        if weights_resident {
+                            hit_stall
+                        } else {
+                            dram_lines += lines;
+                            miss_stall
+                        }
+                    } else if base >= addr::KV {
+                        if kv_resident {
+                            hit_stall
+                        } else {
+                            dram_lines += lines;
+                            miss_stall
+                        }
+                    } else if (addr::INPUTS..addr::ACTIVATIONS).contains(&base) {
+                        // Fresh per-inference data is always cold.
+                        dram_lines += lines;
+                        miss_stall
+                    } else {
+                        hit_stall
+                    };
+                    let stall_total = if prefetchable {
+                        stall + (lines - 1.0) * stall / costs::PREFETCH_DEPTH as f64
+                    } else {
+                        lines * stall
+                    };
+                    cyc += lines * insts_per_line as f64 + stall_total;
+                }
+                TraceOp::CmQueue { tile, bytes } => {
+                    cyc += cm_io_cycles(&w.spec.tiles[tile].coupling, bytes, cfg, tight_cyc_per_byte, 0.0);
+                    aimc_j += bytes as f64 * cfg.aimc.io_energy_j_per_byte();
+                }
+                TraceOp::CmProcess { tile } => {
+                    cyc += 1.0;
+                    let t = &w.spec.tiles[tile];
+                    aimc_j += cfg.aimc.mvm_energy_j(t.rows, t.cols);
+                    if t.coupling == Coupling::Loose {
+                        cyc += proc_cycles;
+                    }
+                }
+                TraceOp::CmDequeue { tile, bytes } => {
+                    // The dependent dequeue observes the 100 ns MVM.
+                    let wait = if w.spec.tiles[tile].coupling == Coupling::Tight { proc_cycles } else { 0.0 };
+                    cyc += cm_io_cycles(&w.spec.tiles[tile].coupling, bytes, cfg, tight_cyc_per_byte, wait);
+                    aimc_j += bytes as f64 * cfg.aimc.io_energy_j_per_byte();
+                }
+                TraceOp::Send { bytes, .. } => {
+                    cyc += costs::CHANNEL_INSTS as f64 + (bytes as f64 / line).ceil() * 2.0;
+                }
+                TraceOp::Recv { ch } => {
+                    let lines = (ch_bytes[ch] as f64 / line).ceil();
+                    cyc += costs::CHANNEL_INSTS as f64 + lines * (1.0 + hit_stall / 2.0);
+                }
+                TraceOp::MutexLock { .. } => cyc += costs::MUTEX_INSTS as f64,
+                TraceOp::MutexUnlock { .. } => cyc += costs::MUTEX_INSTS as f64 / 2.0,
+                TraceOp::CmInit { .. } => cyc += 1.0,
+                TraceOp::RoiPush { .. } | TraceOp::RoiPop => {}
+            }
+        }
+        per_core.push(cyc / N_INF);
+    }
+    dram_lines /= N_INF;
+    aimc_j /= N_INF;
+
+    let cycles_per_inf = per_core.iter().copied().fold(1.0, f64::max);
+    let p = &cfg.power;
+    let active_j: f64 = per_core.iter().map(|c| c * p.active_core_j_per_cycle).sum();
+    let idle_j: f64 = per_core
+        .iter()
+        .map(|c| (cycles_per_inf - c) * p.idle_core_j_per_cycle)
+        .sum::<f64>()
+        + cfg.num_cores.saturating_sub(per_core.len()) as f64
+            * cycles_per_inf
+            * p.idle_core_j_per_cycle;
+    let t_inf_s = cycles_per_inf / freq;
+    let static_j = (p.mem_ctrl_io_w + p.llc_leakage_w(cfg.llc.size_bytes)) * t_inf_s;
+    let energy_per_inf_j = active_j + idle_j + static_j + dram_lines * p.dram_j_per_access + aimc_j;
+
+    Ok(CostEstimate { cycles_per_inf, per_core_cycles: per_core, energy_per_inf_j })
+}
+
+/// Cycles of one CM_QUEUE/CM_DEQUEUE: the beat issue overlaps the device
+/// transfer, so the op costs whichever is longer — plus `extra_wait`
+/// device cycles the transfer cannot start before (the pending MVM).
+fn cm_io_cycles(
+    coupling: &Coupling,
+    bytes: u64,
+    cfg: &SystemConfig,
+    tight_cyc_per_byte: f64,
+    extra_wait: f64,
+) -> f64 {
+    let beats = bytes.div_ceil(costs::CM_IO_BYTES_PER_INST) as f64;
+    let active = beats * (1.0 + costs::CM_IO_OVERHEAD_PER_INST_X1000 as f64 / 1000.0);
+    let transfer = match coupling {
+        Coupling::Tight => bytes as f64 * tight_cyc_per_byte,
+        Coupling::Loose => {
+            (cfg.aimc.pio_transaction_s + bytes as f64 / cfg.aimc.pio_throughput_bps) * cfg.freq_hz
+        }
+    };
+    active.max(extra_wait + transfer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::mlp::{self, MlpCase};
+
+    fn est(case: MlpCase) -> CostEstimate {
+        let (g, m) = mlp::case_table(case).unwrap();
+        estimate(&g, &m, &SystemConfig::high_power()).unwrap()
+    }
+
+    #[test]
+    fn analog_estimated_faster_than_digital() {
+        let dig = est(MlpCase::Digital { cores: 1 });
+        let ana = est(MlpCase::Analog { case: 1 });
+        assert!(
+            ana.cycles_per_inf * 4.0 < dig.cycles_per_inf,
+            "analog {} vs digital {}",
+            ana.cycles_per_inf,
+            dig.cycles_per_inf
+        );
+        assert!(ana.energy_per_inf_j < dig.energy_per_inf_j);
+    }
+
+    #[test]
+    fn pipeline_estimate_takes_the_max_stage() {
+        let two = est(MlpCase::Digital { cores: 2 });
+        assert_eq!(two.per_core_cycles.len(), 2);
+        let max = two.per_core_cycles.iter().copied().fold(0.0, f64::max);
+        assert_eq!(two.cycles_per_inf, max);
+        // Splitting the two layers roughly halves the per-inference bound.
+        let one = est(MlpCase::Digital { cores: 1 });
+        assert!(two.cycles_per_inf < 0.8 * one.cycles_per_inf);
+    }
+
+    #[test]
+    fn estimates_are_deterministic() {
+        let a = est(MlpCase::Analog { case: 3 });
+        let b = est(MlpCase::Analog { case: 3 });
+        assert_eq!(a.cycles_per_inf.to_bits(), b.cycles_per_inf.to_bits());
+        assert_eq!(a.energy_per_inf_j.to_bits(), b.energy_per_inf_j.to_bits());
+    }
+}

@@ -1,0 +1,495 @@
+//! Candidate enumeration: carve a chain [`LayerGraph`] into anchors,
+//! walk the (pipeline depth x partition x per-layer engine x replication
+//! x hand-off) space, and construct a concrete [`Mapping`] for each
+//! feasible point — packing analog MVM regions onto budget tiles
+//! greedily, column-major, opening a new tile when the current one runs
+//! out of columns.
+//!
+//! [`LayerGraph`]: crate::nn::LayerGraph
+
+use crate::nn::{LayerGraph, LayerKind, NodeId};
+use crate::sim::aimc::{Coupling, Placement};
+use crate::sim::machine::TileSpec;
+use crate::workload::compile::mapping::{
+    Handoff, Mapping, Place, SplitKind, Stage, StageInput, StageOutput, Step, TilePlacement,
+};
+use crate::workload::WorkloadError;
+
+use super::TopologyBudget;
+
+/// One mappable unit of a chain graph: at most one MVM-bearing layer
+/// plus its elementwise companions, in dataflow order.
+pub(crate) struct Anchor {
+    pub nodes: Vec<NodeId>,
+    pub mvm: Option<MvmInfo>,
+    /// Activation width (elements) flowing out of this anchor.
+    pub out_width: u64,
+}
+
+#[derive(Clone, Copy)]
+pub(crate) enum MvmInfo {
+    Dense { node: NodeId, rows: u64, cols: u64 },
+    Lstm { node: NodeId, rows: u64, cols: u64 },
+    Attention { node: NodeId, d_model: u64 },
+}
+
+impl MvmInfo {
+    fn node(&self) -> NodeId {
+        match self {
+            MvmInfo::Dense { node, .. } | MvmInfo::Lstm { node, .. } | MvmInfo::Attention { node, .. } => *node,
+        }
+    }
+}
+
+fn err(msg: String) -> WorkloadError {
+    WorkloadError::InvalidGraph(msg)
+}
+
+/// Split a linear chain graph into anchors. Returns the anchors plus the
+/// graph's input and output node ids.
+pub(crate) fn anchors(graph: &LayerGraph) -> Result<(Vec<Anchor>, NodeId, NodeId), WorkloadError> {
+    let n = graph.nodes.len();
+    if n < 3 {
+        return Err(err("automap needs at least input -> layer -> output".into()));
+    }
+    if graph.edges.len() != n - 1 || graph.edges.iter().enumerate().any(|(i, &(a, b))| a != i || b != i + 1)
+    {
+        return Err(err("automap searches linear chain graphs only".into()));
+    }
+    let LayerKind::Input { raw_bytes, .. } = graph.nodes[0].kind else {
+        return Err(err("automap chains must start at an Input node".into()));
+    };
+    if !matches!(graph.nodes[n - 1].kind, LayerKind::Output { .. }) {
+        return Err(err("automap chains must end at an Output node".into()));
+    }
+
+    let mut out: Vec<Anchor> = Vec::new();
+    let mut pending: Vec<NodeId> = Vec::new();
+    let mut width = raw_bytes;
+    for node in &graph.nodes[1..n - 1] {
+        let mvm = match node.kind {
+            LayerKind::Conv2d { .. } => {
+                return Err(err("automap does not search row-streamed conv pipelines".into()));
+            }
+            LayerKind::Input { .. } | LayerKind::Output { .. } => {
+                return Err(err(format!("interior input/output node {}", node.id)));
+            }
+            LayerKind::Dense { rows, cols, .. } => Some(MvmInfo::Dense { node: node.id, rows, cols }),
+            LayerKind::LstmCell { x, n_h, .. } => {
+                Some(MvmInfo::Lstm { node: node.id, rows: n_h + x, cols: 4 * n_h })
+            }
+            LayerKind::Attention { d_model, .. } => Some(MvmInfo::Attention { node: node.id, d_model }),
+            _ => None,
+        };
+        width = match node.kind {
+            LayerKind::Dense { cols, .. } => cols,
+            LayerKind::LstmCell { n_h, .. } => n_h,
+            LayerKind::Attention { d_model, .. } => d_model,
+            LayerKind::Pool { elems, .. } => elems / 4,
+            _ => width,
+        };
+        if let Some(m) = mvm {
+            let mut nodes = std::mem::take(&mut pending);
+            nodes.push(node.id);
+            out.push(Anchor { nodes, mvm: Some(m), out_width: width });
+        } else if let Some(last) = out.last_mut() {
+            last.nodes.push(node.id);
+            last.out_width = width;
+        } else {
+            pending.push(node.id);
+        }
+    }
+    if !pending.is_empty() {
+        out.push(Anchor { nodes: pending, mvm: None, out_width: width });
+    }
+    Ok((out, 0, n - 1))
+}
+
+/// One point of the search space, small enough to hold for every
+/// enumerated candidate (the full `Mapping` is rebuilt on demand).
+#[derive(Clone, Debug)]
+pub(crate) struct CandidateSpec {
+    /// Stage start indices into the anchor list (`starts[0] == 0`).
+    pub starts: Vec<usize>,
+    /// Bit `i`: the `i`-th MVM anchor (in chain order) goes on AIMC.
+    pub analog_mask: u64,
+    /// Replication factor applied to every column-replicable stage.
+    pub replicas: usize,
+    pub handoff: Handoff,
+}
+
+/// Deepest pipeline the enumerator will try.
+const MAX_STAGES: usize = 6;
+/// Above this many MVM anchors, only the all-digital and all-analog
+/// engine assignments are enumerated (the full 2^m mask space explodes).
+const FULL_MASK_ANCHORS: usize = 12;
+
+/// Enumerate candidate specs in a fixed deterministic order (stage count
+/// ascending, cut positions lexicographic, engine mask ascending,
+/// replication ascending, ping-pong before shared-buffer). Returns the
+/// specs and whether the walk hit `cap` (truncated).
+pub(crate) fn enumerate_specs(
+    anchors: &[Anchor],
+    budget: &TopologyBudget,
+    cap: usize,
+) -> (Vec<CandidateSpec>, bool) {
+    let n = anchors.len();
+    let m = anchors.iter().filter(|a| a.mvm.is_some()).count();
+    let masks: Vec<u64> = if m <= FULL_MASK_ANCHORS {
+        (0..(1u64 << m)).collect()
+    } else {
+        // Mask space too large: keep the all-digital and all-analog ends.
+        vec![0, (1u64 << m.min(63)) - 1]
+    };
+    let reduced_masks = m > FULL_MASK_ANCHORS;
+    let replica_opts: Vec<usize> = [1usize, 2, 4].iter().copied().filter(|&r| r <= budget.cores).collect();
+    let max_stages = MAX_STAGES.min(budget.cores).min(n.max(1));
+
+    let mut specs = Vec::new();
+    let mut truncated = reduced_masks;
+    'outer: for s in 1..=max_stages {
+        let handoffs: &[Handoff] = if s == 1 {
+            &[Handoff::PingPong]
+        } else {
+            &[Handoff::PingPong, Handoff::SharedBuffer]
+        };
+        let mut done = false;
+        for_each_starts(n, s, &mut |starts| {
+            for &mask in &masks {
+                for &r in &replica_opts {
+                    for &h in handoffs {
+                        if specs.len() >= cap {
+                            done = true;
+                            return false;
+                        }
+                        specs.push(CandidateSpec {
+                            starts: starts.to_vec(),
+                            analog_mask: mask,
+                            replicas: r,
+                            handoff: h,
+                        });
+                    }
+                }
+            }
+            true
+        });
+        if done {
+            truncated = true;
+            break 'outer;
+        }
+    }
+    (specs, truncated)
+}
+
+/// Visit every way of cutting `n` anchors into `s` contiguous stages,
+/// passing the stage start indices. The visitor returns `false` to stop.
+fn for_each_starts(n: usize, s: usize, f: &mut impl FnMut(&[usize]) -> bool) {
+    let k = s - 1;
+    if k == 0 {
+        f(&[0]);
+        return;
+    }
+    if k >= n {
+        return;
+    }
+    // Combinations of k cut positions from 1..n, lexicographic.
+    let mut c: Vec<usize> = (1..=k).collect();
+    let mut starts = vec![0usize; s];
+    loop {
+        starts[1..].copy_from_slice(&c);
+        if !f(&starts) {
+            return;
+        }
+        let mut i = k;
+        loop {
+            if i == 0 {
+                return;
+            }
+            i -= 1;
+            if c[i] < n - k + i {
+                c[i] += 1;
+                for j in i + 1..k {
+                    c[j] = c[j - 1] + 1;
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Greedy column-packing of one `rows x cols` region onto the budget
+/// tiles: reuse the last open tile when the region fits next to what is
+/// already there, otherwise open a new tile. `floor` is the first tile
+/// the current core may reuse — tiles are core-private (tight coupling,
+/// Fig. 2), so callers pass the tile count at their stage boundary and
+/// regions never share a tile across cores.
+fn pack(
+    budget: &TopologyBudget,
+    tiles: &mut Vec<TileSpec>,
+    used_cols: &mut Vec<u32>,
+    floor: usize,
+    rows: u64,
+    cols: u64,
+) -> Option<TilePlacement> {
+    if rows == 0 || cols == 0 || rows > budget.tile_rows as u64 || cols > budget.tile_cols as u64 {
+        return None;
+    }
+    let (r, c) = (rows as u32, cols as u32);
+    if let Some(last) = tiles.len().checked_sub(1) {
+        if last >= floor && used_cols[last] + c <= budget.tile_cols {
+            let tp = TilePlacement {
+                tile: last,
+                placement: Placement { row0: 0, col0: used_cols[last], rows: r, cols: c },
+            };
+            used_cols[last] += c;
+            return Some(tp);
+        }
+    }
+    if tiles.len() >= budget.tiles {
+        return None;
+    }
+    tiles.push(TileSpec { rows: budget.tile_rows, cols: budget.tile_cols, coupling: Coupling::Tight });
+    used_cols.push(c);
+    Some(TilePlacement { tile: tiles.len() - 1, placement: Placement { row0: 0, col0: 0, rows: r, cols: c } })
+}
+
+/// Construct the `Mapping` of one spec, or `None` when the spec is
+/// infeasible under the budget (tile geometry, tile count, core count,
+/// channel count) or degenerate (replication requested but no stage
+/// eligible). Also returns the human-readable descriptor, e.g.
+/// `"s2 r2 pp AD|DA"` (stages, replicas, hand-off, engine per anchor
+/// with `.` for MVM-less anchors and `|` at stage cuts).
+pub(crate) fn build_mapping(
+    graph: &LayerGraph,
+    anchors: &[Anchor],
+    input_node: NodeId,
+    output_node: NodeId,
+    spec: &CandidateSpec,
+    budget: &TopologyBudget,
+) -> Option<(Mapping, String)> {
+    let s_count = spec.starts.len();
+    let mut stages: Vec<Stage> = Vec::with_capacity(s_count);
+    let mut tiles: Vec<TileSpec> = Vec::new();
+    let mut used_cols: Vec<u32> = Vec::new();
+    let mut next_core = 0usize;
+    let mut any_replicated = false;
+    let mut mvm_idx = 0usize;
+    let mut pat = String::new();
+
+    for si in 0..s_count {
+        let lo = spec.starts[si];
+        let hi = if si + 1 < s_count { spec.starts[si + 1] } else { anchors.len() };
+        let range = &anchors[lo..hi];
+        // A stage replicates only when every slice is exact: truncated
+        // `cols / parts` slices would compile a smaller network than the
+        // r = 1 candidates and bias the search toward replication.
+        let r = spec.replicas as u64;
+        let replicable = r > 1
+            && range.iter().all(|a| match a.mvm {
+                None => true,
+                Some(MvmInfo::Dense { cols, .. }) => cols % r == 0,
+                Some(_) => false,
+            })
+            && range.last().expect("stages are non-empty").out_width % r == 0;
+        let parts = if replicable { spec.replicas } else { 1 };
+        any_replicated |= parts > 1;
+
+        let mut st = Stage::on_core(next_core);
+        if parts > 1 {
+            st.cores = (next_core..next_core + parts).collect();
+            st.split = SplitKind::Columns;
+            st.barrier = true;
+        }
+        next_core += parts;
+        if next_core > budget.cores {
+            return None;
+        }
+        // Tiles are core-private (tight coupling): this stage's single
+        // core may pack onto tiles opened from here on, never onto a
+        // previous stage's.
+        let stage_floor = tiles.len();
+
+        for a in range {
+            let analog = match a.mvm {
+                Some(_) => {
+                    let bit = (spec.analog_mask >> mvm_idx) & 1 == 1;
+                    mvm_idx += 1;
+                    bit
+                }
+                None => false,
+            };
+            pat.push(match (a.mvm.is_some(), analog) {
+                (false, _) => '.',
+                (true, false) => 'D',
+                (true, true) => 'A',
+            });
+            for &nid in &a.nodes {
+                let is_mvm = a.mvm.is_some_and(|mvm| mvm.node() == nid);
+                if !is_mvm || !analog {
+                    st.steps.push(Step::cpu(nid));
+                    continue;
+                }
+                match a.mvm.expect("is_mvm checked") {
+                    MvmInfo::Dense { node, rows, cols } => {
+                        let slice = cols / parts as u64;
+                        if rows <= budget.tile_rows as u64 && slice <= budget.tile_cols as u64 {
+                            let mut per_replica = Vec::with_capacity(parts);
+                            for _ in 0..parts {
+                                // Replicas run on distinct cores, so each
+                                // slice gets a fresh tile when replicated.
+                                let floor = if parts > 1 { tiles.len() } else { stage_floor };
+                                per_replica.push(pack(budget, &mut tiles, &mut used_cols, floor, rows, slice)?);
+                            }
+                            st.steps.push(Step { node, place: Place::Tile { per_replica } });
+                        } else if parts == 1
+                            && rows > budget.tile_rows as u64
+                            && cols <= budget.tile_cols as u64
+                            && rows % rows.div_ceil(budget.tile_rows as u64) == 0
+                        {
+                            // Tall matrix: row-split over k tiles with
+                            // digital partial accumulation (Fig. 6b case 2).
+                            // Non-divisible splits are rejected: the
+                            // `rows / k` lowering would silently drop the
+                            // remainder rows and bias the analog-vs-digital
+                            // comparison in the search. Each sub-region
+                            // gets its own tile — parallel crossbars are
+                            // the point of the split.
+                            let k = rows.div_ceil(budget.tile_rows as u64);
+                            let sub = rows / k;
+                            let mut split = Vec::with_capacity(k as usize);
+                            for _ in 0..k {
+                                let floor = tiles.len();
+                                split.push(pack(budget, &mut tiles, &mut used_cols, floor, sub, cols)?);
+                            }
+                            st.steps.push(Step { node, place: Place::TileRowSplit { tiles: split } });
+                        } else {
+                            return None;
+                        }
+                    }
+                    MvmInfo::Lstm { node, rows, cols } => {
+                        let tp = pack(budget, &mut tiles, &mut used_cols, stage_floor, rows, cols)?;
+                        st.steps.push(Step {
+                            node,
+                            place: Place::Tile { per_replica: vec![tp] },
+                        });
+                    }
+                    MvmInfo::Attention { node, d_model } => {
+                        let q = pack(budget, &mut tiles, &mut used_cols, stage_floor, d_model, d_model)?;
+                        let k = pack(budget, &mut tiles, &mut used_cols, stage_floor, d_model, d_model)?;
+                        let v = pack(budget, &mut tiles, &mut used_cols, stage_floor, d_model, d_model)?;
+                        let o = pack(budget, &mut tiles, &mut used_cols, stage_floor, d_model, d_model)?;
+                        st.steps.push(Step { node, place: Place::AttentionTiles { q, k, v, o } });
+                    }
+                }
+            }
+        }
+
+        st.input = if si == 0 { StageInput::Memory { node: input_node } } else { StageInput::Channel };
+        st.output = if si + 1 == s_count {
+            StageOutput::Memory { node: output_node }
+        } else {
+            let width = range.last().expect("stages are non-empty").out_width;
+            StageOutput::Channel { bytes: 4 * width / parts as u64 }
+        };
+        st.handoff = spec.handoff;
+        stages.push(st);
+        if si + 1 < s_count {
+            pat.push('|');
+        }
+    }
+
+    if spec.replicas > 1 && !any_replicated {
+        return None; // identical to the r = 1 spec
+    }
+    let mut channels = 0usize;
+    for i in 0..stages.len().saturating_sub(1) {
+        let fan = stages[i].cores.len() * stages[i + 1].cores.len();
+        channels += fan * if spec.handoff == Handoff::SharedBuffer { 2 } else { 1 };
+    }
+    if channels > budget.channels {
+        return None;
+    }
+
+    let desc = format!(
+        "s{s_count} r{} {} {pat}",
+        spec.replicas,
+        match spec.handoff {
+            Handoff::PingPong => "pp",
+            Handoff::SharedBuffer => "sb",
+        }
+    );
+    let label = format!("automap/{desc}");
+    Some((Mapping { label, tiles, min_mutexes: 0, stages }, desc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_chain_splits_into_dense_anchors() {
+        let g = LayerGraph::mlp(&[64, 32, 16]);
+        let (a, input, output) = anchors(&g).unwrap();
+        assert_eq!(a.len(), 2);
+        assert_eq!((input, output), (0, 5));
+        assert!(matches!(a[0].mvm, Some(MvmInfo::Dense { rows: 64, cols: 32, .. })));
+        assert_eq!(a[0].out_width, 32);
+        assert_eq!(a[1].out_width, 16);
+        // Each anchor holds its dense + relu.
+        assert_eq!(a[0].nodes, vec![1, 2]);
+    }
+
+    #[test]
+    fn transformer_chain_attaches_leading_norms() {
+        let g = LayerGraph::transformer(64, 2, 16, 1, 128);
+        let (a, _, _) = anchors(&g).unwrap();
+        // attention anchor, FFN-up anchor, FFN-down anchor
+        assert_eq!(a.len(), 3);
+        assert!(matches!(a[0].mvm, Some(MvmInfo::Attention { d_model: 64, .. })));
+        // The pre-attention LayerNorm rides in the attention anchor.
+        assert_eq!(a[0].nodes[0], 1);
+        assert_eq!(a[2].out_width, 64);
+    }
+
+    #[test]
+    fn non_chain_graphs_are_rejected() {
+        let mut g = LayerGraph::new("dag");
+        let i = g.add(LayerKind::Input { bytes: 64, marshal_insts: 4, raw_bytes: 16 });
+        let d = g.chain(i, LayerKind::Dense { rows: 16, cols: 16, weight_slot: 0 });
+        let o = g.chain(d, LayerKind::Output { bytes: 64 });
+        g.edges.push((i, o)); // skip edge -> not a chain
+        assert!(anchors(&g).is_err());
+    }
+
+    #[test]
+    fn starts_enumeration_counts_compositions() {
+        // 4 anchors into 2 stages: C(3,1) = 3 compositions.
+        let mut seen = Vec::new();
+        for_each_starts(4, 2, &mut |s| {
+            seen.push(s.to_vec());
+            true
+        });
+        assert_eq!(seen, vec![vec![0, 1], vec![0, 2], vec![0, 3]]);
+    }
+
+    #[test]
+    fn packer_opens_new_tile_when_columns_run_out() {
+        let budget = TopologyBudget { cores: 4, tiles: 3, tile_rows: 64, tile_cols: 100, channels: 8 };
+        let mut tiles = Vec::new();
+        let mut used = Vec::new();
+        let a = pack(&budget, &mut tiles, &mut used, 0, 64, 60).unwrap();
+        let b = pack(&budget, &mut tiles, &mut used, 0, 32, 30).unwrap();
+        let c = pack(&budget, &mut tiles, &mut used, 0, 64, 60).unwrap();
+        assert_eq!((a.tile, b.tile, c.tile), (0, 0, 1));
+        assert_eq!(b.placement.col0, 60);
+        // A raised floor (next pipeline stage / replica) never reuses an
+        // earlier core's open tile even though columns remain.
+        let d = pack(&budget, &mut tiles, &mut used, 2, 16, 10).unwrap();
+        assert_eq!(d.tile, 2);
+        assert_eq!(d.placement.col0, 0);
+        // Budget of 3 tiles exhausted.
+        assert!(pack(&budget, &mut tiles, &mut used, 3, 64, 90).is_none());
+        // Oversized regions never fit.
+        assert!(pack(&budget, &mut tiles, &mut used, 0, 65, 10).is_none());
+    }
+}

@@ -1,0 +1,261 @@
+//! Automatic mapping search over the `(LayerGraph, Mapping)` space.
+//!
+//! Given any linear-chain [`LayerGraph`] and a machine topology budget
+//! (cores, tiles, tile dims, channels), the search enumerates candidate
+//! [`Mapping`]s — digital vs. analog placement per layer, greedy
+//! column-packing of MVM regions onto budget tiles, row-splitting of
+//! tall matrices, column-replication across cores, 1..N-stage
+//! pipelining, and ping-pong vs. shared-buffer hand-offs — prunes them
+//! with the fast analytic cost model in [`cost`] (closed-form timing of
+//! the real compiled traces), and returns the top candidates ranked by
+//! estimated cycles (plus the most energy-efficient ones, so the
+//! validated Pareto front sees both axes).
+//!
+//! Simulation of the surviving candidates lives in
+//! `coordinator::automap`, which fans them out across the parallel
+//! sweep engine and computes the Pareto front on *simulated*
+//! (cycles, energy).
+//!
+//! Everything here is deterministic: enumeration order is fixed,
+//! ranking breaks f64 ties on the candidate descriptor, and no
+//! randomness is involved — so `--jobs N` cannot change the result.
+//!
+//! [`LayerGraph`]: crate::nn::LayerGraph
+
+pub mod cost;
+mod enumerate;
+
+pub use cost::{estimate, CostEstimate};
+
+use crate::config::SystemConfig;
+use crate::nn::LayerGraph;
+use crate::workload::compile::mapping::{Handoff, Mapping};
+use crate::workload::WorkloadError;
+use enumerate::CandidateSpec;
+
+/// The machine resources a mapping may claim.
+#[derive(Clone, Copy, Debug)]
+pub struct TopologyBudget {
+    pub cores: usize,
+    pub tiles: usize,
+    pub tile_rows: u32,
+    pub tile_cols: u32,
+    /// Cap on compiled channel count (boundary fan-out x hand-off acks).
+    pub channels: usize,
+}
+
+impl TopologyBudget {
+    /// Budget matching a Table-I system: its cores and its physical
+    /// crossbar dimensions, with generous tile/channel headroom.
+    pub fn for_config(cfg: &SystemConfig) -> TopologyBudget {
+        TopologyBudget {
+            cores: cfg.num_cores,
+            tiles: 16,
+            tile_rows: cfg.aimc.tile_rows,
+            tile_cols: cfg.aimc.tile_cols,
+            channels: 64,
+        }
+    }
+}
+
+/// A surviving candidate: the concrete mapping plus its analytic cost.
+pub struct Candidate {
+    pub mapping: Mapping,
+    /// Human-readable point in the search space, e.g. `"s2 r2 pp AD|DA"`.
+    pub desc: String,
+    pub est: CostEstimate,
+}
+
+/// Result of [`search`].
+pub struct SearchOutcome {
+    /// Specs enumerated (including budget-infeasible ones).
+    pub enumerated: usize,
+    /// Specs that produced a valid mapping under the budget.
+    pub feasible: usize,
+    /// The walk hit [`CANDIDATE_CAP`] (or the mask space was reduced).
+    pub truncated: bool,
+    /// Top candidates, sorted by estimated cycles (stable tie-break on
+    /// the descriptor).
+    pub ranked: Vec<Candidate>,
+}
+
+/// Hard cap on enumerated candidates — keeps degenerate budgets bounded.
+pub const CANDIDATE_CAP: usize = 60_000;
+
+/// Search the mapping space of `graph` under `budget`, returning the
+/// `top_k` candidates by estimated cycles plus up to `top_k / 2`
+/// energy-ranked extras (deduplicated).
+pub fn search(
+    graph: &LayerGraph,
+    budget: &TopologyBudget,
+    cfg: &SystemConfig,
+    top_k: usize,
+) -> Result<SearchOutcome, WorkloadError> {
+    let (anchors, input, output) = enumerate::anchors(graph)?;
+    let (specs, truncated) = enumerate::enumerate_specs(&anchors, budget, CANDIDATE_CAP);
+    let enumerated = specs.len();
+
+    struct Eval {
+        spec_idx: usize,
+        desc: String,
+        est: CostEstimate,
+    }
+    let mut evals: Vec<Eval> = Vec::new();
+    for (spec_idx, spec) in specs.iter().enumerate() {
+        let Some((mapping, desc)) = enumerate::build_mapping(graph, &anchors, input, output, spec, budget)
+        else {
+            continue;
+        };
+        match cost::estimate(graph, &mapping, cfg) {
+            Ok(est) => evals.push(Eval { spec_idx, desc, est }),
+            Err(e) => {
+                debug_assert!(false, "automap built an uncompilable mapping ({desc}): {e}");
+            }
+        }
+    }
+    let feasible = evals.len();
+
+    let mut by_cycles: Vec<usize> = (0..evals.len()).collect();
+    by_cycles.sort_by(|&a, &b| {
+        evals[a]
+            .est
+            .cycles_per_inf
+            .total_cmp(&evals[b].est.cycles_per_inf)
+            .then_with(|| evals[a].desc.cmp(&evals[b].desc))
+    });
+    let mut selected: Vec<usize> = by_cycles.iter().copied().take(top_k).collect();
+    let mut by_energy: Vec<usize> = (0..evals.len()).collect();
+    by_energy.sort_by(|&a, &b| {
+        evals[a]
+            .est
+            .energy_per_inf_j
+            .total_cmp(&evals[b].est.energy_per_inf_j)
+            .then_with(|| evals[a].desc.cmp(&evals[b].desc))
+    });
+    for &i in &by_energy {
+        if selected.len() >= top_k + top_k.div_ceil(2) {
+            break;
+        }
+        if !selected.contains(&i) {
+            selected.push(i);
+        }
+    }
+
+    // Rebuild only the winners' mappings; their estimates are reused.
+    let mut ranked: Vec<Candidate> = Vec::with_capacity(selected.len());
+    for &i in &selected {
+        let spec = &specs[evals[i].spec_idx];
+        let (mapping, desc) = enumerate::build_mapping(graph, &anchors, input, output, spec, budget)
+            .expect("spec was feasible on the first build");
+        ranked.push(Candidate { mapping, desc, est: evals[i].est.clone() });
+    }
+    ranked.sort_by(|a, b| {
+        a.est
+            .cycles_per_inf
+            .total_cmp(&b.est.cycles_per_inf)
+            .then_with(|| a.desc.cmp(&b.desc))
+    });
+    Ok(SearchOutcome { enumerated, feasible, truncated, ranked })
+}
+
+/// The naive all-digital single-core mapping — the acceptance baseline
+/// every searched mapping is compared against.
+pub fn digital_baseline(graph: &LayerGraph) -> Result<(Mapping, String), WorkloadError> {
+    let (anchors, input, output) = enumerate::anchors(graph)?;
+    let spec = CandidateSpec {
+        starts: vec![0],
+        analog_mask: 0,
+        replicas: 1,
+        handoff: Handoff::PingPong,
+    };
+    let budget = TopologyBudget { cores: 1, tiles: 0, tile_rows: 1, tile_cols: 1, channels: 0 };
+    enumerate::build_mapping(graph, &anchors, input, output, &spec, &budget)
+        .ok_or_else(|| WorkloadError::InvalidMapping("failed to build the all-digital baseline".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::compile;
+
+    fn hp() -> SystemConfig {
+        SystemConfig::high_power()
+    }
+
+    #[test]
+    fn search_ranks_analog_first_on_a_small_mlp() {
+        let g = LayerGraph::mlp(&[256, 128, 64]);
+        let budget = TopologyBudget { cores: 4, tiles: 8, tile_rows: 256, tile_cols: 256, channels: 32 };
+        let out = search(&g, &budget, &hp(), 6).unwrap();
+        assert!(out.feasible > 8, "space too small: {}", out.feasible);
+        assert!(!out.ranked.is_empty());
+        // The fastest estimate puts every layer on AIMC.
+        assert!(out.ranked[0].desc.contains('A'), "{}", out.ranked[0].desc);
+        assert!(!out.truncated);
+        // Every ranked candidate compiles.
+        for c in &out.ranked {
+            compile::compile(&g, &c.mapping, 1).unwrap();
+        }
+    }
+
+    #[test]
+    fn search_is_deterministic() {
+        let g = LayerGraph::transformer(64, 2, 16, 1, 128);
+        let budget = TopologyBudget { cores: 4, tiles: 8, tile_rows: 128, tile_cols: 256, channels: 32 };
+        let a = search(&g, &budget, &hp(), 5).unwrap();
+        let b = search(&g, &budget, &hp(), 5).unwrap();
+        assert_eq!(a.enumerated, b.enumerated);
+        assert_eq!(a.feasible, b.feasible);
+        let descs = |o: &SearchOutcome| o.ranked.iter().map(|c| c.desc.clone()).collect::<Vec<_>>();
+        assert_eq!(descs(&a), descs(&b));
+        for (x, y) in a.ranked.iter().zip(&b.ranked) {
+            assert_eq!(x.est.cycles_per_inf.to_bits(), y.est.cycles_per_inf.to_bits());
+        }
+    }
+
+    #[test]
+    fn tight_tile_budget_prunes_analog_candidates() {
+        let g = LayerGraph::mlp(&[256, 128, 64]);
+        let roomy = TopologyBudget { cores: 4, tiles: 8, tile_rows: 256, tile_cols: 256, channels: 32 };
+        let cramped = TopologyBudget { cores: 4, tiles: 0, tile_rows: 256, tile_cols: 256, channels: 32 };
+        let a = search(&g, &roomy, &hp(), 4).unwrap();
+        let b = search(&g, &cramped, &hp(), 4).unwrap();
+        assert!(b.feasible < a.feasible);
+        // With zero tiles only all-digital mappings survive.
+        assert!(b.ranked.iter().all(|c| !c.desc.contains('A')));
+    }
+
+    #[test]
+    fn wide_layers_need_column_replication_for_analog() {
+        // 128x512 dense: 512 output columns exceed a 256-wide tile, so
+        // analog placement is only reachable through a 2-way column
+        // split (256 per replica) — the search must find it.
+        let g = LayerGraph::mlp(&[128, 512]);
+        let budget = TopologyBudget { cores: 4, tiles: 8, tile_rows: 256, tile_cols: 256, channels: 32 };
+        let out = search(&g, &budget, &hp(), 8).unwrap();
+        let analog: Vec<&Candidate> = out.ranked.iter().filter(|c| c.desc.contains('A')).collect();
+        assert!(!analog.is_empty(), "no analog candidate found");
+        assert!(analog.iter().all(|c| !c.desc.contains("r1")), "analog requires replication here");
+    }
+
+    #[test]
+    fn baseline_is_single_core_all_digital() {
+        let g = LayerGraph::transformer(64, 2, 16, 1, 128);
+        let (m, desc) = digital_baseline(&g).unwrap();
+        assert_eq!(m.stages.len(), 1);
+        assert_eq!(m.stages[0].cores, vec![0]);
+        assert!(m.tiles.is_empty());
+        assert!(desc.starts_with("s1 r1 pp"));
+        compile::compile(&g, &m, 2).unwrap();
+    }
+
+    #[test]
+    fn rejects_conv_pipelines_cleanly() {
+        let g = LayerGraph::cnn(&crate::nn::CnnModel::paper(crate::nn::CnnVariant::Fast));
+        let budget = TopologyBudget::for_config(&hp());
+        assert!(matches!(
+            search(&g, &budget, &hp(), 4),
+            Err(WorkloadError::InvalidGraph(_))
+        ));
+    }
+}

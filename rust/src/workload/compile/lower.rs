@@ -97,6 +97,39 @@ pub(crate) fn elementwise(b: &mut TraceBuilder, simd_insts: u64, fp_insts: u64) 
     });
 }
 
+/// Layer normalization over `elems` values: vectorized mean/variance
+/// reductions plus a scalar-FP rsqrt and per-element normalize + affine
+/// (NEON handles the sums 4-wide; the normalize runs as fp32 pairs).
+pub(crate) fn layer_norm(b: &mut TraceBuilder, elems: u64) {
+    b.roi(RoiKind::Activation, |b| {
+        b.compute(InstClass::SimdOp, elems / 4 + 8);
+        b.compute(InstClass::FpOp, elems / 2 + 8);
+    });
+}
+
+/// The digital middle of a multi-head attention step: stream the int8
+/// K/V caches (`2 * seq * d_model` bytes, re-read every token), compute
+/// the `heads x seq` attention scores (q.K^T) and the context
+/// accumulation (A.V) as SDOT GEMVs, softmax the score rows. Always
+/// digital — the caches change per token, so they cannot be
+/// weight-stationary on a crossbar.
+pub(crate) fn attention_context(b: &mut TraceBuilder, d_model: u64, heads: u64, seq: u64, slot: usize) {
+    b.roi(RoiKind::DigitalMvm, |b| {
+        b.stream_read(addr::kv(slot), 2 * seq * d_model, 1);
+        // Scores + context are 2 * seq * d_model MACs total, plus the
+        // per-score reduction tails.
+        let macs = 2 * seq * d_model;
+        b.compute(InstClass::SimdOp, macs / costs::SIMD_MACS_PER_INST + heads * seq / 4 + 8);
+        b.compute(InstClass::IntAlu, macs / 64 + 8);
+    });
+    b.roi(RoiKind::Activation, |b| {
+        b.compute(
+            InstClass::FpOp,
+            heads * seq * costs::activation_insts_per_elem(costs::Activation::SoftmaxPerElem),
+        );
+    });
+}
+
 /// Fresh per-inference input: a cold, non-prefetchable stream of `bytes`
 /// plus AIMClib input marshalling.
 pub(crate) fn input_load(b: &mut TraceBuilder, inference: u32, bytes: u64, marshal_insts: u64) {
@@ -208,6 +241,29 @@ mod tests {
         let deqs = block.iter().filter(|op| matches!(op, TraceOp::CmDequeue { .. })).count() as u64;
         assert_eq!(procs, l.out_hw());
         assert_eq!(deqs, l.out_hw());
+    }
+
+    #[test]
+    fn attention_context_streams_kv_cache() {
+        let mut b = TraceBuilder::new();
+        attention_context(&mut b, 128, 4, 32, 0);
+        let kv_bytes: u64 = b
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                TraceOp::MemStream { base, bytes, .. } if *base >= addr::KV => Some(*bytes),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(kv_bytes, 2 * 32 * 128);
+    }
+
+    #[test]
+    fn layer_norm_emits_balanced_roi() {
+        let mut b = TraceBuilder::new();
+        layer_norm(&mut b, 256);
+        assert!(matches!(b.ops[0], TraceOp::RoiPush { kind: RoiKind::Activation }));
+        assert!(matches!(b.ops.last(), Some(TraceOp::RoiPop)));
     }
 
     #[test]

@@ -162,6 +162,13 @@ pub enum Place {
     /// tile, fire every tile, dequeue from the last; the layers between
     /// (marked [`Place::Fused`]) execute inside the accelerator (§VII.B).
     TileChain { tiles: Vec<TilePlacement> },
+    /// Multi-head attention on AIMC: the four `d_model x d_model`
+    /// projection regions (Wq, Wk, Wv, Wo) each get their own
+    /// queue/process/dequeue; the score/softmax/context block between
+    /// the V and O projections always lowers digitally (the K/V caches
+    /// change every token and cannot live on a PCM crossbar).
+    /// Single-replica stages only.
+    AttentionTiles { q: TilePlacement, k: TilePlacement, v: TilePlacement, o: TilePlacement },
     /// Executed by the preceding `TileChain` (dedicated in-accelerator
     /// units); emits no ops.
     Fused,

@@ -71,6 +71,11 @@ pub fn compile(graph: &LayerGraph, mapping: &Mapping, n_inf: u32) -> Result<Work
                             builders[core].push(TraceOp::CmInit { tile: tp.tile, placement: tp.placement });
                         }
                     }
+                    Place::AttentionTiles { q, k, v, o } => {
+                        for tp in [q, k, v, o] {
+                            builders[core].push(TraceOp::CmInit { tile: tp.tile, placement: tp.placement });
+                        }
+                    }
                     Place::Cpu | Place::Fused => {}
                 }
             }
@@ -409,6 +414,31 @@ fn emit_step(b: &mut TraceBuilder, graph: &LayerGraph, step: &Step, r: usize, pa
         LayerKind::Elementwise { simd_insts, fp_insts } => {
             lower::elementwise(b, simd_insts / parts, fp_insts / parts)
         }
+        LayerKind::LayerNorm { elems } => lower::layer_norm(b, elems / parts),
+        LayerKind::Attention { d_model, heads, seq, weight_slot } => {
+            let d = *d_model;
+            match &step.place {
+                Place::Cpu => {
+                    // Q|K|V projections share the input vector: one
+                    // digital GEMV over the packed d x 3d weight block.
+                    lower::digital_gemv(b, addr::weights(*weight_slot), d, 3 * d);
+                    lower::attention_context(b, d, *heads, *seq, *weight_slot);
+                    lower::digital_gemv(b, addr::weights(*weight_slot) + 3 * d * d, d, d);
+                }
+                Place::AttentionTiles { q, k, v, o } => {
+                    for tp in [q, k, v] {
+                        lower::queue(b, tp.tile, d);
+                        lower::process(b, tp.tile);
+                        lower::dequeue(b, tp.tile, d);
+                    }
+                    lower::attention_context(b, d, *heads, *seq, *weight_slot);
+                    lower::queue(b, o.tile, d);
+                    lower::process(b, o.tile);
+                    lower::dequeue(b, o.tile, d);
+                }
+                _ => unreachable!("validated: attention runs on Cpu or AttentionTiles"),
+            }
+        }
         LayerKind::Input { .. } | LayerKind::Output { .. } | LayerKind::Conv2d { .. } => {
             unreachable!("validated: not a per-inference step kind")
         }
@@ -453,6 +483,7 @@ fn emit_mvm(
         }
         Place::Fused => {}
         Place::TileChain { .. } => unreachable!("chains are lowered by the caller"),
+        Place::AttentionTiles { .. } => unreachable!("validated: attention lowers via emit_step"),
     }
 }
 
@@ -578,8 +609,13 @@ pub fn validate(graph: &LayerGraph, mapping: &Mapping) -> Result<(), WorkloadErr
         return Err(err("mapping has no stages".into()));
     }
     let mut seen_cores = std::collections::HashSet::new();
-    // Per-tile claimed regions, for bounds + overlap checking.
+    // Per-tile claimed regions, for bounds + overlap checking, plus the
+    // single core allowed to drive each tile (tiles are core-private:
+    // the device serializes its I/O port and pairs CM_PROCESS results
+    // with CM_DEQUEUEs in FIFO order, so two cores interleaving on one
+    // tile would cross-match results).
     let mut claims: Vec<Vec<crate::sim::aimc::Placement>> = vec![Vec::new(); mapping.tiles.len()];
+    let mut owners: Vec<Option<usize>> = vec![None; mapping.tiles.len()];
 
     for (idx, s) in mapping.stages.iter().enumerate() {
         let last = idx + 1 == mapping.stages.len();
@@ -698,7 +734,7 @@ pub fn validate(graph: &LayerGraph, mapping: &Mapping) -> Result<(), WorkloadErr
                 return Err(err(format!("stage {idx}: row-streamed producers need a single consumer core")));
             }
         }
-        validate_steps(graph, mapping, idx, s, &mut claims)?;
+        validate_steps(graph, mapping, idx, s, &mut claims, &mut owners)?;
     }
     validate_coverage(graph, mapping)?;
     Ok(())
@@ -742,6 +778,7 @@ fn validate_steps(
     idx: usize,
     s: &Stage,
     claims: &mut [Vec<crate::sim::aimc::Placement>],
+    owners: &mut [Option<usize>],
 ) -> Result<(), WorkloadError> {
     let mut after_chain = false;
     for (si, step) in s.steps.iter().enumerate() {
@@ -766,9 +803,23 @@ fn validate_steps(
                     return Err(err(format!("stage {idx}: LstmCell supports Cpu or Tile placement")));
                 }
             }
-            LayerKind::Activation { .. } | LayerKind::Pool { .. } | LayerKind::Elementwise { .. } => {
+            LayerKind::Activation { .. }
+            | LayerKind::Pool { .. }
+            | LayerKind::Elementwise { .. }
+            | LayerKind::LayerNorm { .. } => {
                 if !matches!(step.place, Place::Cpu | Place::Fused) {
                     return Err(err(format!("stage {idx}: elementwise layers run on Cpu (or Fused)")));
+                }
+            }
+            LayerKind::Attention { d_model, heads, .. } => {
+                if s.cores.len() != 1 {
+                    return Err(err(format!("stage {idx}: attention steps need a single-replica stage")));
+                }
+                if *heads == 0 || d_model % heads != 0 {
+                    return Err(err(format!("stage {idx}: attention heads must divide d_model")));
+                }
+                if !matches!(step.place, Place::Cpu | Place::AttentionTiles { .. }) {
+                    return Err(err(format!("stage {idx}: attention supports Cpu or AttentionTiles placement")));
                 }
             }
             LayerKind::Dense { .. } => {}
@@ -799,8 +850,8 @@ fn validate_steps(
                 let (Some(rows), Some(cols)) = (rows, cols) else {
                     return Err(err(format!("stage {idx}: node {} has no MVM to place on a tile", step.node)));
                 };
-                for tp in per_replica {
-                    claim_tile(mapping, claims, idx, tp, rows, cols / parts)?;
+                for (ri, tp) in per_replica.iter().enumerate() {
+                    claim_tile(mapping, claims, owners, s.cores[ri], idx, tp, rows, cols / parts)?;
                 }
             }
             Place::TileRowSplit { tiles } => {
@@ -816,7 +867,27 @@ fn validate_steps(
                 let (rows, cols) = (rows.unwrap_or(0), cols.unwrap_or(0));
                 let k = tiles.len() as u64;
                 for tp in tiles {
-                    claim_tile(mapping, claims, idx, tp, rows / k, cols)?;
+                    claim_tile(mapping, claims, owners, s.cores[0], idx, tp, rows / k, cols)?;
+                }
+            }
+            Place::AttentionTiles { q, k, v, o } => {
+                let LayerKind::Attention { d_model, .. } = node.kind else {
+                    return Err(err(format!(
+                        "stage {idx}: AttentionTiles placement on non-attention node {}",
+                        step.node
+                    )));
+                };
+                if d_model > u32::MAX as u64 {
+                    return Err(err(format!("stage {idx}: d_model exceeds the u32 tile axis")));
+                }
+                for tp in [q, k, v, o] {
+                    let p = tp.placement;
+                    if u64::from(p.rows) != d_model || u64::from(p.cols) != d_model {
+                        return Err(err(format!(
+                            "stage {idx}: attention projection region {p:?} is not {d_model}x{d_model}"
+                        )));
+                    }
+                    claim_tile(mapping, claims, owners, s.cores[0], idx, tp, d_model, d_model)?;
                 }
             }
             Place::TileChain { tiles } => {
@@ -847,7 +918,7 @@ fn validate_steps(
                 for (ti, tp) in tiles.iter().enumerate() {
                     let q = if ti == 0 { rows } else { 0 };
                     let d = if ti == last { chain_cols } else { 0 };
-                    claim_tile(mapping, claims, idx, tp, q, d)?;
+                    claim_tile(mapping, claims, owners, s.cores[0], idx, tp, q, d)?;
                 }
             }
         }
@@ -856,10 +927,14 @@ fn validate_steps(
 }
 
 /// Record a tile claim and check bounds: placement inside the tile,
-/// no overlap with earlier claims, queue/dequeue within I/O memory.
+/// no overlap with earlier claims, queue/dequeue within I/O memory,
+/// and single-core ownership (tiles are core-private).
+#[allow(clippy::too_many_arguments)]
 fn claim_tile(
     mapping: &Mapping,
     claims: &mut [Vec<crate::sim::aimc::Placement>],
+    owners: &mut [Option<usize>],
+    core: usize,
     idx: usize,
     tp: &mapping::TilePlacement,
     queue_elems: u64,
@@ -868,6 +943,15 @@ fn claim_tile(
     let Some(tile) = mapping.tiles.get(tp.tile) else {
         return Err(err(format!("stage {idx}: tile {} not declared", tp.tile)));
     };
+    match owners[tp.tile] {
+        Some(owner) if owner != core => {
+            return Err(err(format!(
+                "stage {idx}: tile {} is driven by core {owner} and core {core} (tiles are core-private)",
+                tp.tile
+            )));
+        }
+        _ => owners[tp.tile] = Some(core),
+    }
     let p = tp.placement;
     if u64::from(p.row0) + u64::from(p.rows) > u64::from(tile.rows)
         || u64::from(p.col0) + u64::from(p.cols) > u64::from(tile.cols)
@@ -968,12 +1052,33 @@ mod tests {
 
     #[test]
     fn rejects_overlapping_placements() {
+        // Both dense layers packed on core 0's tile 0 (stage 1 keeps the
+        // trailing relu so the pipeline shape stays intact).
+        let (g, mut m) = two_stage_digital();
+        m.tiles = vec![TileSpec { rows: 64, cols: 128, coupling: Coupling::Tight }];
+        m.stages[0].steps = vec![
+            Step::tile(1, 0, Placement { row0: 0, col0: 0, rows: 64, cols: 64 }),
+            Step::cpu(2),
+            Step::tile(3, 0, Placement { row0: 0, col0: 32, rows: 64, cols: 64 }),
+        ];
+        m.stages[1].steps = vec![Step::cpu(4)];
+        assert!(compile(&g, &m, 1).is_err());
+        m.stages[0].steps[2] = Step::tile(3, 0, Placement { row0: 0, col0: 64, rows: 64, cols: 64 });
+        assert!(compile(&g, &m, 1).is_ok());
+    }
+
+    #[test]
+    fn rejects_cross_core_tile_sharing() {
+        // Disjoint regions, but stage 0 (core 0) and stage 1 (core 1)
+        // would interleave on one device: tiles are core-private.
         let (g, mut m) = two_stage_digital();
         m.tiles = vec![TileSpec { rows: 64, cols: 128, coupling: Coupling::Tight }];
         m.stages[0].steps[0] = Step::tile(1, 0, Placement { row0: 0, col0: 0, rows: 64, cols: 64 });
-        m.stages[1].steps[0] = Step::tile(3, 0, Placement { row0: 0, col0: 32, rows: 64, cols: 64 });
-        assert!(compile(&g, &m, 1).is_err());
         m.stages[1].steps[0] = Step::tile(3, 0, Placement { row0: 0, col0: 64, rows: 64, cols: 64 });
+        assert!(compile(&g, &m, 1).is_err());
+        // On its own tile the second stage is fine.
+        m.tiles.push(TileSpec { rows: 64, cols: 64, coupling: Coupling::Tight });
+        m.stages[1].steps[0] = Step::tile(3, 1, Placement { row0: 0, col0: 0, rows: 64, cols: 64 });
         assert!(compile(&g, &m, 1).is_ok());
     }
 
@@ -1007,6 +1112,49 @@ mod tests {
         let (g, mut m) = two_stage_digital();
         m.stages[1].steps = vec![Step::cpu(3), Step::cpu(4), Step::cpu(3)]; // double-mapped
         assert!(compile(&g, &m, 1).is_err());
+    }
+
+    #[test]
+    fn compiles_attention_on_tiles_and_rejects_bad_regions() {
+        let g = LayerGraph::transformer(64, 2, 16, 1, 128);
+        // nodes: 0 in, 1 ln, 2 attn, 3 res, 4 ln, 5 ff1, 6 relu, 7 ff2,
+        // 8 res, 9 ln, 10 out
+        let pl = |col0: u32| Placement { row0: 0, col0, rows: 64, cols: 64 };
+        let att = Place::AttentionTiles {
+            q: TilePlacement { tile: 0, placement: pl(0) },
+            k: TilePlacement { tile: 0, placement: pl(64) },
+            v: TilePlacement { tile: 0, placement: pl(128) },
+            o: TilePlacement { tile: 0, placement: pl(192) },
+        };
+        let mut s = Stage::on_core(0);
+        s.input = StageInput::Memory { node: 0 };
+        s.output = StageOutput::Memory { node: 10 };
+        s.steps = vec![Step::cpu(1), Step { node: 2, place: att }];
+        s.steps.extend((3..=9).map(Step::cpu));
+        let m = Mapping {
+            label: "test/attn".into(),
+            tiles: vec![TileSpec { rows: 64, cols: 256, coupling: Coupling::Tight }],
+            min_mutexes: 0,
+            stages: vec![s],
+        };
+        let w = compile(&g, &m, 2).unwrap();
+        // Four projection MVMs fire per attention step per inference.
+        let procs = w.traces[0].iter().filter(|op| matches!(op, TraceOp::CmProcess { .. })).count();
+        assert_eq!(procs, 4 * 2);
+
+        // A projection region that is not d_model x d_model is rejected.
+        let mut bad = m.clone();
+        let Place::AttentionTiles { o, .. } = &mut bad.stages[0].steps[1].place else {
+            unreachable!()
+        };
+        o.placement.cols = 32;
+        assert!(compile(&g, &bad, 1).is_err());
+
+        // Attention on a replicated stage is rejected.
+        let mut split = m.clone();
+        split.stages[0].cores = vec![0, 1];
+        split.stages[0].split = SplitKind::Columns;
+        assert!(compile(&g, &split, 1).is_err());
     }
 
     #[test]

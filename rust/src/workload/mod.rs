@@ -14,6 +14,7 @@
 //! cache behaviour (thrashing vs. residency) emerges exactly as the
 //! paper's working-set analysis predicts.
 
+pub mod automap;
 pub mod cnn;
 pub mod compile;
 pub mod costs;
@@ -21,6 +22,7 @@ pub mod legacy;
 pub mod lstm;
 pub mod mlp;
 pub mod trace;
+pub mod transformer;
 
 use crate::sim::machine::MachineSpec;
 use std::fmt;
@@ -86,9 +88,17 @@ pub mod addr {
     pub const OUTPUTS: u64 = 0xA000_0000;
     pub const CHANNELS: u64 = 0xB000_0000;
     pub const CHANNEL_STRIDE: u64 = 0x0010_0000;
+    /// Per-token K/V caches of attention layers (re-read every token,
+    /// so they live in their own region away from the weight streams).
+    pub const KV: u64 = 0xD000_0000;
+    pub const KV_STRIDE: u64 = 0x0100_0000;
 
     pub fn weights(layer: usize) -> u64 {
         WEIGHTS + layer as u64 * WEIGHTS_STRIDE
+    }
+
+    pub fn kv(slot: usize) -> u64 {
+        KV + slot as u64 * KV_STRIDE
     }
 
     pub fn input(inference: u32, bytes_per: u64) -> u64 {
@@ -113,6 +123,10 @@ mod tests {
         assert!(addr::weights(3) < addr::INPUTS);
         assert!(addr::input(1000, 1024) < addr::ACTIVATIONS);
         assert!(addr::output(1000, 1024) < addr::CHANNELS);
+        // 64 channels (the automap budget cap) stay clear of the KV region.
+        assert!(addr::channel(64, 1) < addr::KV);
+        assert!(addr::kv(0) >= addr::KV);
+        assert_eq!(addr::kv(2) - addr::kv(1), addr::KV_STRIDE);
     }
 
     #[test]

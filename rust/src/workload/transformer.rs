@@ -1,0 +1,197 @@
+//! Transformer-encoder workloads — a network class the paper never ran,
+//! expressed as `(LayerGraph, Mapping)` pairs like every other workload.
+//!
+//! [`TransformerShape`] describes a pre-norm encoder running one token
+//! step against a `seq`-deep KV cache (see [`LayerGraph::transformer`]).
+//! The case table maps it two hand-written ways — the all-digital
+//! single-core reference and an idealized analog packing with one
+//! exactly-sized crossbar region per projection/FFN matrix — while
+//! `workload::automap` searches the constrained-budget mapping space
+//! automatically.
+
+use crate::nn::{LayerGraph, LayerKind};
+use crate::sim::aimc::{Coupling, Placement};
+use crate::sim::machine::TileSpec;
+use crate::workload::compile;
+use crate::workload::compile::mapping::{
+    Mapping, Place, Stage, StageInput, StageOutput, Step, TilePlacement,
+};
+use crate::workload::{addr, Workload, WorkloadError};
+
+/// A transformer-encoder shape, `Copy` so sweep cases stay plain data.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransformerShape {
+    pub d_model: u64,
+    pub heads: u64,
+    pub seq: u64,
+    pub layers: u64,
+    pub d_ff: u64,
+}
+
+impl TransformerShape {
+    pub fn new(d_model: u64, heads: u64, seq: u64, layers: u64, d_ff: u64) -> Result<TransformerShape, WorkloadError> {
+        let bad = |msg: String| Err(WorkloadError::InvalidGraph(msg));
+        if d_model == 0 || heads == 0 || seq == 0 || layers == 0 || d_ff == 0 {
+            return bad("transformer dims must be > 0".into());
+        }
+        if d_model % heads != 0 {
+            return bad(format!("heads ({heads}) must divide d_model ({d_model})"));
+        }
+        if d_model > 2048 || d_ff > 8192 || seq > 4096 || layers > 8 || heads > 16 {
+            return bad(format!(
+                "shape d{d_model}h{heads}s{seq}l{layers}f{d_ff} exceeds the supported caps \
+                 (d_model<=2048, d_ff<=8192, seq<=4096, layers<=8, heads<=16)"
+            ));
+        }
+        // Alias guards for the synthetic address map (cf. MlpShape).
+        if 4 * d_model * d_model > addr::WEIGHTS_STRIDE || d_model * d_ff > addr::WEIGHTS_STRIDE {
+            return bad("a weight block exceeds the weight-slot stride of the address map".into());
+        }
+        if 2 * seq * d_model > addr::KV_STRIDE {
+            return bad("the K/V cache exceeds its per-layer region of the address map".into());
+        }
+        Ok(TransformerShape { d_model, heads, seq, layers, d_ff })
+    }
+
+    pub fn graph(&self) -> LayerGraph {
+        LayerGraph::transformer(self.d_model, self.heads, self.seq, self.layers, self.d_ff)
+    }
+}
+
+impl std::fmt::Display for TransformerShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "d{}h{}s{}l{}f{}",
+            self.d_model, self.heads, self.seq, self.layers, self.d_ff
+        )
+    }
+}
+
+/// Hand-written transformer mappings (the automap search goes beyond
+/// these; they anchor the sweeps and the acceptance baseline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransformerCase {
+    /// All layers digital on one core — the naive reference mapping.
+    Digital,
+    /// One core driving exactly-sized crossbars: a `d x 4d` tile per
+    /// attention block (four projection regions side by side) and one
+    /// tile per FFN matrix.
+    Analog,
+}
+
+impl TransformerCase {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TransformerCase::Digital => "DIG-1core",
+            TransformerCase::Analog => "ANA-packed",
+        }
+    }
+}
+
+/// Generate a transformer workload under the given case.
+pub fn generate(shape: TransformerShape, case: TransformerCase, n_inf: u32) -> Result<Workload, WorkloadError> {
+    let (graph, mapping) = case_table(shape, case)?;
+    compile::compile(&graph, &mapping, n_inf)
+}
+
+/// Build the `(LayerGraph, Mapping)` of a transformer case.
+pub fn case_table(shape: TransformerShape, case: TransformerCase) -> Result<(LayerGraph, Mapping), WorkloadError> {
+    let graph = shape.graph();
+    let out_node = graph.nodes.len() - 1;
+    let label = format!("{}/{}", graph.name, case.label());
+    let mut s = Stage::on_core(0);
+    s.input = StageInput::Memory { node: 0 };
+    s.output = StageOutput::Memory { node: out_node };
+
+    let mut tiles: Vec<TileSpec> = Vec::new();
+    for node in &graph.nodes {
+        match node.kind {
+            LayerKind::Input { .. } | LayerKind::Output { .. } => {}
+            LayerKind::Attention { d_model, .. } if case == TransformerCase::Analog => {
+                let d = d_model as u32;
+                let tile = tiles.len();
+                tiles.push(TileSpec { rows: d, cols: 4 * d, coupling: Coupling::Tight });
+                let pl = |col0: u32| Placement { row0: 0, col0, rows: d, cols: d };
+                s.steps.push(Step {
+                    node: node.id,
+                    place: Place::AttentionTiles {
+                        q: TilePlacement { tile, placement: pl(0) },
+                        k: TilePlacement { tile, placement: pl(d) },
+                        v: TilePlacement { tile, placement: pl(2 * d) },
+                        o: TilePlacement { tile, placement: pl(3 * d) },
+                    },
+                });
+            }
+            LayerKind::Dense { rows, cols, .. } if case == TransformerCase::Analog => {
+                let tile = tiles.len();
+                tiles.push(TileSpec { rows: rows as u32, cols: cols as u32, coupling: Coupling::Tight });
+                s.steps.push(Step::tile(
+                    node.id,
+                    tile,
+                    Placement { row0: 0, col0: 0, rows: rows as u32, cols: cols as u32 },
+                ));
+            }
+            _ => s.steps.push(Step::cpu(node.id)),
+        }
+    }
+    Ok((graph, Mapping { label, tiles, min_mutexes: 0, stages: vec![s] }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::trace::TraceOp;
+
+    #[test]
+    fn shape_validation() {
+        assert!(TransformerShape::new(256, 4, 64, 2, 1024).is_ok());
+        assert!(TransformerShape::new(100, 3, 64, 2, 1024).is_err(), "heads must divide");
+        assert!(TransformerShape::new(0, 1, 1, 1, 1).is_err());
+        assert!(TransformerShape::new(4096, 4, 64, 2, 1024).is_err(), "over cap");
+        let s = TransformerShape::new(256, 4, 64, 2, 1024).unwrap();
+        assert_eq!(s.to_string(), "d256h4s64l2f1024");
+    }
+
+    #[test]
+    fn digital_case_compiles_single_core() {
+        let shape = TransformerShape::new(64, 2, 16, 1, 128).unwrap();
+        let w = generate(shape, TransformerCase::Digital, 2).unwrap();
+        assert_eq!(w.cores_used(), 1);
+        assert!(w.spec.tiles.is_empty());
+        assert!(w.label.ends_with("DIG-1core"));
+    }
+
+    #[test]
+    fn analog_case_fires_projections_and_ffns() {
+        let shape = TransformerShape::new(64, 2, 16, 2, 128).unwrap();
+        let w = generate(shape, TransformerCase::Analog, 3).unwrap();
+        // Per layer per inference: 4 projection MVMs + 2 FFN MVMs.
+        let procs = w
+            .traces
+            .iter()
+            .flatten()
+            .filter(|op| matches!(op, TraceOp::CmProcess { .. }))
+            .count();
+        assert_eq!(procs, 2 * 6 * 3);
+        // One d x 4d attention tile + two FFN tiles per layer.
+        assert_eq!(w.spec.tiles.len(), 2 * 3);
+        assert_eq!(w.spec.tiles[0].cols, 4 * 64);
+    }
+
+    #[test]
+    fn kv_cache_streamed_even_when_analog() {
+        let shape = TransformerShape::new(64, 2, 16, 1, 128).unwrap();
+        let w = generate(shape, TransformerCase::Analog, 1).unwrap();
+        let kv: u64 = w
+            .traces
+            .iter()
+            .flatten()
+            .filter_map(|op| match op {
+                TraceOp::MemStream { base, bytes, .. } if *base >= addr::KV => Some(*bytes),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(kv, 2 * 16 * 64);
+    }
+}

@@ -1,0 +1,145 @@
+//! Automap acceptance tests: the searched mapping space, the analytic
+//! cost model vs the simulator, determinism under `--jobs N`, and the
+//! ISSUE-3 acceptance criterion (best transformer mapping beats the
+//! naive all-digital single-core mapping on simulated cycles).
+
+use alpine::config::{SystemConfig, SystemKind};
+use alpine::coordinator::automap::{run_search, AutomapOptions};
+use alpine::nn::LayerGraph;
+use alpine::workload::automap::{self, TopologyBudget};
+use alpine::workload::mlp::{self, MlpCase};
+use alpine::workload::transformer::TransformerShape;
+
+fn transformer_graph() -> LayerGraph {
+    TransformerShape::new(128, 4, 32, 1, 256).unwrap().graph()
+}
+
+fn budget() -> TopologyBudget {
+    TopologyBudget { cores: 4, tiles: 12, tile_rows: 256, tile_cols: 256, channels: 32 }
+}
+
+/// ISSUE-3 acceptance: `automap` on a transformer-encoder `LayerGraph`
+/// returns a Pareto front whose best mapping runs end-to-end
+/// deadlock-free through the simulator (a deadlock panics) and beats
+/// the naive all-digital single-core mapping on simulated cycles.
+#[test]
+fn automap_transformer_beats_naive_digital() {
+    let graph = transformer_graph();
+    let opts = AutomapOptions { top_k: 6, n_inf: 3, jobs: 2 };
+    let rep = run_search(&graph, &budget(), SystemKind::HighPower, opts).unwrap();
+
+    assert!(rep.feasible > 4, "search space collapsed: {} feasible", rep.feasible);
+    assert!(rep.front().count() >= 1, "empty Pareto front");
+    let best = rep.best_row();
+    let base = rep.baseline_row();
+    assert!(
+        best.result.time_s < base.result.time_s,
+        "best {} ({}s) does not beat the digital baseline ({}s)",
+        best.desc,
+        best.result.time_s,
+        base.result.time_s
+    );
+    // The winner must actually use the AIMC fabric.
+    assert!(best.desc.contains('A'), "best mapping is not analog: {}", best.desc);
+    // The fastest row is by definition non-dominated.
+    assert!(best.pareto);
+}
+
+/// ISSUE-3 satellite: the search must be deterministic under `--jobs N`
+/// — same rows, bit-identical metrics, same front, at any worker count.
+#[test]
+fn automap_parallel_identical_to_serial() {
+    let graph = transformer_graph();
+    let serial = run_search(
+        &graph,
+        &budget(),
+        SystemKind::HighPower,
+        AutomapOptions { top_k: 5, n_inf: 2, jobs: 1 },
+    )
+    .unwrap();
+    let parallel = run_search(
+        &graph,
+        &budget(),
+        SystemKind::HighPower,
+        AutomapOptions { top_k: 5, n_inf: 2, jobs: 4 },
+    )
+    .unwrap();
+
+    assert_eq!(serial.enumerated, parallel.enumerated);
+    assert_eq!(serial.feasible, parallel.feasible);
+    assert_eq!(serial.rows.len(), parallel.rows.len());
+    assert_eq!(serial.best, parallel.best);
+    assert_eq!(serial.baseline, parallel.baseline);
+    for (a, b) in serial.rows.iter().zip(&parallel.rows) {
+        assert_eq!(a.desc, b.desc);
+        assert_eq!(a.pareto, b.pareto);
+        assert_eq!(a.baseline, b.baseline);
+        assert_eq!(a.est_cycles.to_bits(), b.est_cycles.to_bits(), "{}", a.desc);
+        assert_eq!(a.result.time_s.to_bits(), b.result.time_s.to_bits(), "{}", a.desc);
+        assert_eq!(
+            a.result.energy.total_j().to_bits(),
+            b.result.energy.total_j().to_bits(),
+            "{}",
+            a.desc
+        );
+        assert_eq!(a.result.total_insts, b.result.total_insts);
+        assert_eq!(a.result.dram_accesses, b.result.dram_accesses);
+        assert_eq!(a.result.aimc_processes, b.result.aimc_processes);
+    }
+}
+
+/// ISSUE-3 satellite: the analytic cost model stays within a fixed
+/// tolerance of simulated cycles for the paper's MLP cases. The model
+/// prunes a search space, so a bounded ratio — not exactness — is the
+/// contract. Single-stage mappings are pinned to [0.4, 2.5]; the
+/// pipelined case gets [0.3, 2.8] (the steady-state max-stage model
+/// ignores consumer wake latencies and ack round trips), and the
+/// digital-vs-analog ordering must match the simulator.
+#[test]
+fn cost_model_tracks_simulated_cycles() {
+    let cfg = SystemConfig::high_power();
+    let mut sim_cycles = Vec::new();
+    let mut est_cycles = Vec::new();
+    for (case, lo, hi) in [
+        (MlpCase::Digital { cores: 1 }, 0.4, 2.5),
+        (MlpCase::Analog { case: 1 }, 0.4, 2.5),
+        (MlpCase::Analog { case: 3 }, 0.3, 2.8),
+    ] {
+        let (graph, mapping) = mlp::case_table(case).unwrap();
+        let est = automap::estimate(&graph, &mapping, &cfg).unwrap();
+        let w = mlp::generate(case, &cfg, 10).unwrap();
+        let r = alpine::coordinator::run_workload(SystemKind::HighPower, w);
+        let sim = r.time_per_inference_s * cfg.freq_hz;
+        let ratio = est.cycles_per_inf / sim;
+        assert!(
+            (lo..=hi).contains(&ratio),
+            "{}: estimate {:.0} vs simulated {:.0} cycles/inf (ratio {:.2}, bound [{lo}, {hi}])",
+            r.label,
+            est.cycles_per_inf,
+            sim,
+            ratio
+        );
+        sim_cycles.push(sim);
+        est_cycles.push(est.cycles_per_inf);
+    }
+    // Ordering agreement: both rank ANA-case1 well ahead of DIG-1core.
+    assert!(sim_cycles[1] < sim_cycles[0]);
+    assert!(est_cycles[1] < est_cycles[0]);
+}
+
+/// The MLP space (the paper's own workload) also searches end-to-end:
+/// analog candidates appear and the best simulated mapping beats the
+/// digital baseline.
+#[test]
+fn automap_mlp_search_end_to_end() {
+    let graph = LayerGraph::mlp(&[256, 256, 64]);
+    let rep = run_search(
+        &graph,
+        &budget(),
+        SystemKind::HighPower,
+        AutomapOptions { top_k: 6, n_inf: 3, jobs: 2 },
+    )
+    .unwrap();
+    assert!(rep.speedup_vs_baseline() > 1.0, "speedup {:.2}", rep.speedup_vs_baseline());
+    assert!(rep.rows.iter().any(|r| r.desc.contains('A')));
+}

@@ -196,6 +196,39 @@ fn compiled_random_mappings_are_self_consistent_and_run() {
     });
 }
 
+/// Random transformer-encoder shapes (attention dims, heads, cache
+/// depth, FFN width) through the auto-mapper: the chosen mapping must
+/// compile, pass the spec self-consistency checks, and run to
+/// completion deadlock-free (a deadlock panics inside the machine).
+#[test]
+fn automap_transformer_choices_compile_and_run() {
+    use alpine::workload::automap::{self, TopologyBudget};
+    let cfg = SystemConfig::high_power();
+    miniprop::check("automap/transformer-chosen-mapping-runs", 0x7_0411, |rng| {
+        let heads = 1 << rng.below(3); // 1, 2, 4
+        let d_model = heads * 16 * (1 + rng.below(4)); // multiples of heads, <= 256
+        let seq = 8 << rng.below(3); // 8, 16, 32
+        let layers = 1 + rng.below(2);
+        let d_ff = 64 << rng.below(3); // 64, 128, 256
+        let graph = alpine::nn::LayerGraph::transformer(d_model, heads, seq, layers, d_ff);
+        let budget = TopologyBudget {
+            cores: 4,
+            tiles: 12,
+            tile_rows: 256,
+            tile_cols: 256,
+            channels: 64,
+        };
+        let out = automap::search(&graph, &budget, &cfg, 2).expect("chain graph must search");
+        assert!(!out.ranked.is_empty(), "no feasible mapping for {}", graph.name);
+        let best = &out.ranked[0];
+        let w = compile(&graph, &best.mapping, 2).expect("chosen mapping must compile");
+        check_self_consistent(&w);
+        let mut machine = Machine::new(cfg.clone(), w.spec.clone());
+        let stats = machine.run(w.traces.clone());
+        assert!(stats.roi_time_ps > 0, "machine made no progress ({})", best.desc);
+    });
+}
+
 #[test]
 fn paper_case_tables_are_self_consistent() {
     use alpine::nn::CnnVariant;

@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Compare benchkit JSON reports against committed baselines.
+
+The benchkit format (util/benchkit.rs::json_report) is a flat object:
+
+    { "bench/name": {"mean_ns": .., "min_ns": .., "stddev_ns": .., "iters": N}, .. }
+
+For every current report, the baseline of the same file name is looked
+up in --baseline. A tracked metric regresses when
+
+    (current - baseline) / baseline > threshold     (default 10%)
+
+on the chosen metric (default min_ns — the least noisy of the three on
+shared CI runners). Sub-floor benches (default < 50 us) are reported but
+never fail the build: at that scale runner jitter exceeds any real
+signal. New benches (no baseline entry) and removed ones are informational.
+
+Exit status: 1 if any metric regressed, else 0. Missing baseline files
+are the bootstrap case: the script reports them and exits 0 so the first
+toolchain run can go green and commit its artifact as the baseline (see
+BENCH_baseline/README.md for the update workflow).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_ns(ns):
+    if ns >= 1e9:
+        return f"{ns / 1e9:.3f} s"
+    if ns >= 1e6:
+        return f"{ns / 1e6:.3f} ms"
+    if ns >= 1e3:
+        return f"{ns / 1e3:.3f} us"
+    return f"{ns:.0f} ns"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="directory holding baseline BENCH_*.json files")
+    ap.add_argument("--current", nargs="+", required=True, help="freshly generated BENCH_*.json files")
+    ap.add_argument("--threshold", type=float, default=0.10, help="relative regression that fails the build")
+    ap.add_argument("--metric", default="min_ns", choices=["min_ns", "mean_ns"])
+    ap.add_argument("--noise-floor-ns", type=float, default=50_000.0,
+                    help="benches faster than this never fail (runner jitter dominates)")
+    ap.add_argument("--out", default=None, help="write the comparison table as markdown here")
+    args = ap.parse_args()
+
+    lines = ["| bench | baseline | current | delta | status |",
+             "|---|---|---|---|---|"]
+    regressions = []
+    bootstrap = []
+
+    for cur_path in args.current:
+        name = os.path.basename(cur_path)
+        cur = load(cur_path)
+        base_path = os.path.join(args.baseline, name)
+        if not os.path.exists(base_path):
+            bootstrap.append(name)
+            for bench in sorted(cur):
+                lines.append(f"| {bench} | — | {fmt_ns(cur[bench][args.metric])} | — | no baseline |")
+            continue
+        base = load(base_path)
+        for bench in sorted(set(cur) | set(base)):
+            if bench not in base:
+                lines.append(f"| {bench} | — | {fmt_ns(cur[bench][args.metric])} | — | new |")
+                continue
+            if bench not in cur:
+                lines.append(f"| {bench} | {fmt_ns(base[bench][args.metric])} | — | — | removed |")
+                continue
+            b, c = base[bench][args.metric], cur[bench][args.metric]
+            delta = (c - b) / b if b > 0 else 0.0
+            if delta > args.threshold and c >= args.noise_floor_ns:
+                status = f"REGRESSION (> {args.threshold:.0%})"
+                regressions.append((bench, b, c, delta))
+            elif delta > args.threshold:
+                status = "noisy (sub-floor, ignored)"
+            elif delta < -args.threshold:
+                status = "improved"
+            else:
+                status = "ok"
+            lines.append(f"| {bench} | {fmt_ns(b)} | {fmt_ns(c)} | {delta:+.1%} | {status} |")
+
+    table = "\n".join(lines)
+    print(table)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(f"# bench-regression ({args.metric}, threshold {args.threshold:.0%})\n\n")
+            f.write(table + "\n")
+            if bootstrap:
+                f.write("\nNo baseline for: " + ", ".join(bootstrap)
+                        + " — commit the current reports to BENCH_baseline/ to arm the gate.\n")
+
+    if bootstrap:
+        print(f"\nbootstrap: no baseline for {', '.join(bootstrap)}; "
+              "commit the generated reports to BENCH_baseline/ to arm the gate.")
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} metric(s) regressed more than {args.threshold:.0%}:")
+        for bench, b, c, delta in regressions:
+            print(f"  {bench}: {fmt_ns(b)} -> {fmt_ns(c)} ({delta:+.1%})")
+        sys.exit(1)
+    print("\nbench-regression: OK")
+
+
+if __name__ == "__main__":
+    main()
