@@ -46,6 +46,31 @@ fn main() {
         results.push(legacy_gen);
     }
 
+    // Looped-IR compile scaling (PR 4): the steady state is emitted once
+    // into a `Rep` body, so compile work is O(block) in the inference
+    // count while the legacy generator unrolls all N blocks.
+    {
+        let w = mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 1000).unwrap();
+        println!(
+            "workload/compile_mlp_dig1_1000inf_looped: {} stored ops for {} flattened ops",
+            w.stored_ops(),
+            w.total_ops()
+        );
+        drop(w);
+        let looped = bench("workload/compile_mlp_dig1_1000inf_looped", 20, || {
+            black_box(mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 1000).unwrap());
+        });
+        let unrolled = bench("workload/legacy_mlp_dig1_1000inf_unrolled", 5, || {
+            black_box(legacy::mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 1000));
+        });
+        println!(
+            "workload/compile_mlp_dig1_1000inf_looped: looped vs legacy-unrolled {:.2}x faster (mean)",
+            unrolled.mean_ns / looped.mean_ns
+        );
+        results.push(looped);
+        results.push(unrolled);
+    }
+
     // Case-table compile throughput for the smaller paper workloads.
     results.push(bench("workload/compile_mlp_ana4", 50, || {
         black_box(mlp::generate(MlpCase::Analog { case: 4 }, &cfg, 10).unwrap());

@@ -15,7 +15,7 @@
 //! I/O bus (`sim::bus::IoBus`) which the machine charges separately.
 
 use crate::config::AimcConfig;
-use crate::stats::AimcStats;
+use crate::stats::TileActivity;
 
 /// How the tile is attached to the system (§IV.A).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -98,7 +98,7 @@ pub struct AimcTile {
     /// *oldest* pending result (software pipelining queues pixel p+1 and
     /// fires its MVM before draining pixel p's outputs).
     pending_results_ps: std::collections::VecDeque<u64>,
-    pub stats: AimcStats,
+    pub stats: TileActivity,
 }
 
 impl AimcTile {
@@ -116,7 +116,7 @@ impl AimcTile {
             xbar_busy_until_ps: 0,
             last_queue_done_ps: 0,
             pending_results_ps: std::collections::VecDeque::new(),
-            stats: AimcStats::default(),
+            stats: TileActivity::default(),
         }
     }
 
@@ -161,7 +161,6 @@ impl AimcTile {
             return Err(AimcError::InputOverflow(bytes, self.input_mem_bytes()));
         }
         self.stats.queued_bytes += bytes;
-        self.stats.energy_j += bytes as f64 * self.io_energy_j_per_byte;
         let start = now_ps.max(self.io_busy_until_ps);
         let done = start + self.io_transfer_ps(bytes);
         self.io_busy_until_ps = done;
@@ -173,8 +172,6 @@ impl AimcTile {
     /// once the crossbar is free and its inputs have finished queueing.
     pub fn process(&mut self, now_ps: u64) -> u64 {
         self.stats.processes += 1;
-        self.stats.process_ops_weighted += self.rows as f64 * self.cols as f64;
-        self.stats.energy_j += self.mvm_energy_j;
         let start = now_ps.max(self.xbar_busy_until_ps).max(self.last_queue_done_ps);
         let done = start + self.process_ps;
         self.xbar_busy_until_ps = done;
@@ -189,7 +186,6 @@ impl AimcTile {
             return Err(AimcError::OutputOverflow(bytes, self.output_mem_bytes()));
         }
         self.stats.dequeued_bytes += bytes;
-        self.stats.energy_j += bytes as f64 * self.io_energy_j_per_byte;
         let result_ready = self.pending_results_ps.pop_front().unwrap_or(0);
         let start = now_ps.max(self.io_busy_until_ps).max(result_ready);
         let done = start + self.io_transfer_ps(bytes);
@@ -199,6 +195,43 @@ impl AimcTile {
 
     pub fn process_latency_ps(&self) -> u64 {
         self.process_ps
+    }
+
+    /// Tile energy, derived from the integer activity counters (rather
+    /// than accumulated per event): `processes * E_mvm + io_bytes *
+    /// E_io`. Deriving keeps a fast-forwarded run — which extrapolates
+    /// the counters in closed form — bit-identical to full replay.
+    pub fn energy_j(&self) -> f64 {
+        self.stats.processes as f64 * self.mvm_energy_j
+            + (self.stats.queued_bytes + self.stats.dequeued_bytes) as f64
+                * self.io_energy_j_per_byte
+    }
+
+    /// Sum over processes of (rows * cols), derived from the process
+    /// counter (every MVM on this tile has the same geometry).
+    pub fn process_ops_weighted(&self) -> f64 {
+        self.stats.processes as f64 * (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Time-offset state for the periodicity digest: port/crossbar
+    /// reservations and pending MVM completions relative to `t_ref`
+    /// (stale values clamp — see `sim::machine`).
+    pub(crate) fn ff_state(&self, t_ref: u64, out: &mut Vec<u64>) {
+        out.push(self.io_busy_until_ps.saturating_sub(t_ref));
+        out.push(self.xbar_busy_until_ps.saturating_sub(t_ref));
+        out.push(self.last_queue_done_ps.saturating_sub(t_ref));
+        out.push(self.pending_results_ps.len() as u64);
+        out.extend(self.pending_results_ps.iter().map(|r| r.saturating_sub(t_ref)));
+    }
+
+    /// Advance every internal clock by `d` ps (fast-forward jump).
+    pub(crate) fn shift_time(&mut self, d: u64) {
+        self.io_busy_until_ps += d;
+        self.xbar_busy_until_ps += d;
+        self.last_queue_done_ps += d;
+        for r in &mut self.pending_results_ps {
+            *r += d;
+        }
     }
 }
 
@@ -256,12 +289,13 @@ mod tests {
     #[test]
     fn energy_accumulates() {
         let mut t = tile();
-        let e0 = t.stats.energy_j;
+        let e0 = t.energy_j();
         t.process(0);
-        let e1 = t.stats.energy_j;
+        let e1 = t.energy_j();
         assert!(e1 > e0);
         t.queue(0, 512).unwrap();
-        assert!(t.stats.energy_j > e1);
+        assert!(t.energy_j() > e1);
+        assert!(t.process_ops_weighted() > 0.0);
     }
 
     #[test]

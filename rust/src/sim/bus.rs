@@ -51,6 +51,16 @@ impl MemBus {
         self.response_ps
     }
 
+    pub fn busy_until_ps(&self) -> u64 {
+        self.busy_until_ps
+    }
+
+    /// Advance the occupancy reservation by `d` ps (fast-forward jumps
+    /// shift every clock in the machine uniformly).
+    pub(crate) fn shift_time(&mut self, d: u64) {
+        self.busy_until_ps += d;
+    }
+
     pub fn reset(&mut self) {
         self.busy_until_ps = 0;
         self.transactions = 0;
@@ -90,6 +100,16 @@ impl IoBus {
         let done = start + self.transaction_ps + payload_ps;
         self.busy_until_ps = done;
         done
+    }
+
+    pub fn busy_until_ps(&self) -> u64 {
+        self.busy_until_ps
+    }
+
+    /// Advance the pipeline reservation by `d` ps (fast-forward jumps
+    /// shift every clock in the machine uniformly).
+    pub(crate) fn shift_time(&mut self, d: u64) {
+        self.busy_until_ps += d;
     }
 
     pub fn reset(&mut self) {

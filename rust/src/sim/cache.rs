@@ -220,6 +220,51 @@ impl Cache {
         false
     }
 
+    /// Visit the cache's monotonic counters in a fixed order (the trace
+    /// machine's fast-forward engine snapshots and extrapolates them).
+    pub(crate) fn for_each_counter(&mut self, f: &mut dyn FnMut(&mut u64)) {
+        f(&mut self.stats.read_hits);
+        f(&mut self.stats.read_misses);
+        f(&mut self.stats.write_hits);
+        f(&mut self.stats.write_misses);
+        f(&mut self.stats.writebacks);
+        f(&mut self.stamp);
+    }
+
+    /// Occupancy fingerprint for periodicity detection: total valid and
+    /// dirty lines plus a commutative hash over the per-set
+    /// (valid, dirty) counts. Commutativity matters: steady-state
+    /// streams over fresh per-inference addresses rotate their footprint
+    /// through the sets each iteration, which must not perturb the
+    /// digest — while a cache still *filling* (growing counts) must.
+    /// The trade-off: tags, LRU order and set *positions* are not
+    /// fingerprinted, so this is a necessary-not-sufficient periodicity
+    /// check (see the `sim::machine` module docs for why that is sound
+    /// for compiler-emitted workloads and how the equivalence gates pin
+    /// it).
+    pub(crate) fn occupancy_digest(&self) -> (u64, u64, u64) {
+        let mut valid = 0u64;
+        let mut dirty = 0u64;
+        let mut hash = 0u64;
+        for set in self.lines.chunks(self.assoc) {
+            let mut v = 0u64;
+            let mut d = 0u64;
+            for l in set {
+                if l.valid {
+                    v += 1;
+                    if l.dirty {
+                        d += 1;
+                    }
+                }
+            }
+            valid += v;
+            dirty += d;
+            let h = v.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ d.wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+            hash = hash.wrapping_add(h.wrapping_mul(h | 1));
+        }
+        (valid, dirty, hash)
+    }
+
     /// Does the cache currently hold this address? (no LRU update)
     pub fn probe(&self, addr: u64) -> bool {
         let (base, tag) = self.set_range_tag(addr);

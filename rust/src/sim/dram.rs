@@ -38,6 +38,16 @@ impl Dram {
         self.latency_ps
     }
 
+    pub fn busy_until_ps(&self) -> u64 {
+        self.busy_until_ps
+    }
+
+    /// Advance the channel reservation by `d` ps (fast-forward jumps
+    /// shift every clock in the machine uniformly).
+    pub(crate) fn shift_time(&mut self, d: u64) {
+        self.busy_until_ps += d;
+    }
+
     pub fn reset(&mut self) {
         self.busy_until_ps = 0;
         self.accesses = 0;

@@ -226,6 +226,47 @@ impl MemorySystem {
         }
     }
 
+    /// Visit every monotonic counter in a fixed order (fast-forward
+    /// snapshot/extrapolation — see `sim::machine`).
+    pub(crate) fn for_each_counter(&mut self, f: &mut dyn FnMut(&mut u64)) {
+        for c in &mut self.l1d {
+            c.for_each_counter(f);
+        }
+        self.llc.for_each_counter(f);
+        f(&mut self.llc_bytes_read);
+        f(&mut self.llc_bytes_written);
+        f(&mut self.dram.accesses);
+        f(&mut self.bus.transactions);
+    }
+
+    /// Cheap time-offset state for the periodicity digest: DRAM-channel
+    /// and memory-bus reservations relative to `t_ref` (values at or
+    /// before `t_ref` are behaviorally stale — every future access
+    /// happens at `t >= t_ref` — so they clamp to zero).
+    pub(crate) fn ff_state(&self, t_ref: u64, out: &mut Vec<u64>) {
+        out.push(self.dram.busy_until_ps().saturating_sub(t_ref));
+        out.push(self.bus.busy_until_ps().saturating_sub(t_ref));
+    }
+
+    /// Per-cache occupancy fingerprints (the expensive O(lines) digest
+    /// tier, computed only on candidate rounds).
+    pub(crate) fn occupancy_vec(&self) -> Vec<u64> {
+        let mut v = Vec::with_capacity(3 * (self.l1d.len() + 1));
+        for c in &self.l1d {
+            let (valid, dirty, hash) = c.occupancy_digest();
+            v.extend([valid, dirty, hash]);
+        }
+        let (valid, dirty, hash) = self.llc.occupancy_digest();
+        v.extend([valid, dirty, hash]);
+        v
+    }
+
+    /// Advance every internal clock by `d` ps (fast-forward jump).
+    pub(crate) fn shift_time(&mut self, d: u64) {
+        self.dram.shift_time(d);
+        self.bus.shift_time(d);
+    }
+
     pub fn l1_stats(&self, core: usize) -> &CacheStats {
         &self.l1d[core].stats
     }

@@ -1,4 +1,4 @@
-//! The trace machine: executes per-core `TraceOp` streams against the
+//! The trace machine: executes per-core [`Trace`] programs against the
 //! timing models (cores, memory hierarchy, AIMC tiles, sync primitives)
 //! and produces `RunStats`.
 //!
@@ -8,6 +8,38 @@
 //! order. A core blocked on a channel or mutex is advanced to just after
 //! the earliest other runnable core and retried — the standard
 //! lockstep-free conservative scheme.
+//!
+//! ## Steady-state fast-forward
+//!
+//! Traces store their per-inference block inside a `Rep` loop, and after
+//! warm-up the machine's whole state evolves periodically: every
+//! iteration adds the same stat deltas and advances every clock by the
+//! same Δt. The machine detects this with a cheap periodicity digest
+//! taken once per *round* (each time the globally slowest core finishes
+//! another `Rep` iteration): per-core cursor/lead/time offsets and stat
+//! deltas, ROI deltas, per-core cumulative stall/idle picoseconds,
+//! channel/mutex/tile/DRAM/bus timing offsets relative to the round's
+//! reference time, plus cache occupancy. When two consecutive rounds
+//! produce identical digests, the remaining iterations are applied in
+//! closed form — counters extrapolate linearly, stall/idle cycles via
+//! their exact cumulative-ps floor conversion, clocks shift by p·Δt —
+//! and execution resumes for the final iteration and epilogue. The
+//! result is bit-identical to full replay — enforced by unit tests, the
+//! `machine-fastforward-equivalence` proptest, the per-paper-case suite
+//! in `tests/fastforward.rs`, and the CI determinism gate;
+//! `set_fast_forward(false)` keeps the full replay path, exactly like
+//! `set_batched_streams`.
+//!
+//! The digest is a *detector*, not a proof: cache tag/LRU content is
+//! checked only through stat deltas and the occupancy fingerprint
+//! (deliberately rotation-invariant, because steady streams over fresh
+//! per-inference addresses march their footprint through the sets). A
+//! trace whose per-round stat deltas and occupancy repeat while some
+//! set-positional cache interaction still evolves could in principle be
+//! jumped unsoundly; no compiler-emitted workload has that shape (fresh
+//! regions are never revisited, resident regions are set-stationary),
+//! and the equivalence gates above are the contract that keeps it that
+//! way.
 
 use crate::config::SystemConfig;
 
@@ -17,7 +49,7 @@ use crate::sim::hierarchy::MemorySystem;
 use crate::sim::sync::{SimChannel, SimMutex};
 use crate::stats::{CoreStats, RoiKind, RoiTimes, RunStats};
 use crate::workload::costs;
-use crate::workload::trace::TraceOp;
+use crate::workload::trace::{apply_stride, Segment, Trace, TraceOp};
 
 /// Static description of the simulated platform's accelerator + sync
 /// fabric (which tile belongs to which core, channel topology).
@@ -42,17 +74,127 @@ pub struct ChannelSpec {
     pub capacity: usize,
 }
 
+/// Execution position inside a [`Trace`] program.
+#[derive(Clone, Copy, Debug, Default)]
+struct Cursor {
+    /// Index into `trace.segments`.
+    seg: usize,
+    /// Op index inside the current segment (`Ops` run or `Rep` body).
+    op: usize,
+    /// Current iteration of the current `Rep` segment.
+    iter: u32,
+}
+
+/// The op the cursor points at (cursor must be normalized and not done).
+fn cur_op(trace: &Trace, c: &Cursor) -> TraceOp {
+    match &trace.segments[c.seg] {
+        Segment::Ops(v) => v[c.op],
+        Segment::Rep { body, strides, .. } => {
+            apply_stride(body[c.op], strides.get(c.op).copied().unwrap_or(0), c.iter)
+        }
+    }
+}
+
+fn done(trace: &Trace, c: &Cursor) -> bool {
+    c.seg >= trace.segments.len()
+}
+
+/// Advance the cursor past exhausted runs/iterations until it points at
+/// a concrete op (or the end). Returns how many `Rep` iterations were
+/// completed by this normalization (0 or 1 for well-formed programs).
+fn normalize(trace: &Trace, c: &mut Cursor) -> u32 {
+    let mut completed = 0;
+    while c.seg < trace.segments.len() {
+        match &trace.segments[c.seg] {
+            Segment::Ops(v) => {
+                if c.op < v.len() {
+                    return completed;
+                }
+                c.seg += 1;
+                c.op = 0;
+                c.iter = 0;
+            }
+            Segment::Rep { body, count, .. } => {
+                if body.is_empty() || c.iter >= *count {
+                    c.seg += 1;
+                    c.op = 0;
+                    c.iter = 0;
+                } else if c.op < body.len() {
+                    return completed;
+                } else {
+                    completed += 1;
+                    c.iter += 1;
+                    c.op = 0;
+                    if c.iter >= *count {
+                        c.seg += 1;
+                        c.iter = 0;
+                    }
+                }
+            }
+        }
+    }
+    completed
+}
+
 struct CoreRun {
     now_ps: u64,
-    pc: usize,
+    cursor: Cursor,
     roi_stack: Vec<RoiKind>,
     stats: CoreStats,
-    /// This core was parked at the current pc (retry after a block): sync
+    /// This core was parked at the current op (retry after a block): sync
     /// ops must not complete earlier than the event that unparked them.
     retrying: bool,
     /// Sub-cycle remainders so ps->cycle conversion conserves time.
     wfm_residual_ps: u64,
     idle_residual_ps: u64,
+    /// Cumulative `Rep` iterations completed (fast-forward rounds).
+    completed_iters: u64,
+}
+
+/// Give up on fast-forward after this many rounds whose stat deltas
+/// repeat but whose cache occupancy is still evolving (a large LLC
+/// slowly filling with per-inference data can stay transient for the
+/// whole run; scanning it every round would cost more than it saves).
+const FF_MAX_OCCUPANCY_MISSES: u32 = 24;
+
+/// Steady-state detection state for one `run` (see the module docs).
+struct FfTracker {
+    enabled: bool,
+    /// Round index = min completed `Rep` iterations over running cores.
+    last_round: u64,
+    prev: Option<FfSnapshot>,
+    prev_digest: Option<Vec<u64>>,
+    prev_occupancy: Option<Vec<u64>>,
+    occupancy_misses: u32,
+}
+
+impl FfTracker {
+    fn new(enabled: bool) -> FfTracker {
+        FfTracker {
+            enabled,
+            last_round: 0,
+            prev: None,
+            prev_digest: None,
+            prev_occupancy: None,
+            occupancy_misses: 0,
+        }
+    }
+}
+
+/// Machine state captured at one round boundary.
+struct FfSnapshot {
+    round: u64,
+    t_ref: u64,
+    /// Positional/offset state: must repeat exactly between rounds.
+    state: Vec<u64>,
+    /// Monotonic counters: their per-round deltas must repeat.
+    counters: Vec<u64>,
+    /// Per-core cumulative stall/idle picoseconds (`cycles * cycle_ps +
+    /// residual`). Extrapolated in closed form so the floor-to-cycles
+    /// conversion stays bit-exact across a jump even when the
+    /// per-iteration stall is not a whole number of cycles.
+    cum_wfm_ps: Vec<u64>,
+    cum_idle_ps: Vec<u64>,
 }
 
 pub struct Machine {
@@ -69,6 +211,12 @@ pub struct Machine {
     /// path (default). The per-line reference loop is kept for the
     /// equivalence tests and the `micro_sim` baseline bench.
     batched_streams: bool,
+    /// Fast-forward `Rep` steady state in closed form (default). The
+    /// full replay path is kept for the equivalence tests and the
+    /// `micro_sim` baseline bench.
+    fast_forward: bool,
+    ff_jumps: u32,
+    ff_skipped_iters: u64,
 }
 
 enum StepResult {
@@ -94,6 +242,9 @@ impl Machine {
             roi: RoiTimes::default(),
             cycle_ps: cfg.cycle_ps(),
             batched_streams: true,
+            fast_forward: true,
+            ff_jumps: 0,
+            ff_skipped_iters: 0,
             cfg,
         }
     }
@@ -113,20 +264,48 @@ impl Machine {
         self.batched_streams = on;
     }
 
-    /// Execute one trace per core (empty traces = unused cores). Returns
+    /// Select between steady-state fast-forward of `Rep` loops (default)
+    /// and full op-by-op replay. Both produce bit-identical statistics;
+    /// the knob exists for equivalence tests and perf baselines.
+    pub fn set_fast_forward(&mut self, on: bool) {
+        self.fast_forward = on;
+    }
+
+    /// Closed-form jumps taken by the fast-forward engine so far.
+    pub fn fast_forward_jumps(&self) -> u32 {
+        self.ff_jumps
+    }
+
+    /// Total `Rep` iterations skipped in closed form so far.
+    pub fn fast_forward_skipped_iters(&self) -> u64 {
+        self.ff_skipped_iters
+    }
+
+    /// Execute one trace per core (empty traces = unused cores). Accepts
+    /// looped [`Trace`] programs or flat `Vec<TraceOp>` streams. Returns
     /// the full run statistics.
-    pub fn run(&mut self, traces: Vec<Vec<TraceOp>>) -> RunStats {
+    pub fn run<T: Into<Trace>>(&mut self, traces: Vec<T>) -> RunStats {
+        let traces: Vec<Trace> = traces.into_iter().map(Into::into).collect();
+        self.run_traces(traces)
+    }
+
+    fn run_traces(&mut self, traces: Vec<Trace>) -> RunStats {
         assert!(traces.len() <= self.cfg.num_cores, "more traces than cores");
         let n = traces.len();
         let mut cores: Vec<CoreRun> = (0..n)
-            .map(|_| CoreRun {
-                now_ps: 0,
-                pc: 0,
-                roi_stack: Vec::new(),
-                stats: CoreStats::default(),
-                retrying: false,
-                wfm_residual_ps: 0,
-                idle_residual_ps: 0,
+            .map(|i| {
+                let mut cursor = Cursor::default();
+                normalize(&traces[i], &mut cursor);
+                CoreRun {
+                    now_ps: 0,
+                    cursor,
+                    roi_stack: Vec::new(),
+                    stats: CoreStats::default(),
+                    retrying: false,
+                    wfm_residual_ps: 0,
+                    idle_residual_ps: 0,
+                    completed_iters: 0,
+                }
             })
             .collect();
 
@@ -135,10 +314,11 @@ impl Machine {
         // core progresses; the grant/ready timestamps of the sync
         // primitives supply the correct wait times on retry.
         let mut blocked = vec![false; n];
+        let mut ff = FfTracker::new(self.fast_forward);
         loop {
             let mut next: Option<usize> = None;
             for i in 0..n {
-                if cores[i].pc < traces[i].len() && !blocked[i] {
+                if !done(&traces[i], &cores[i].cursor) && !blocked[i] {
                     match next {
                         Some(j) if cores[j].now_ps <= cores[i].now_ps => {}
                         _ => next = Some(i),
@@ -150,14 +330,17 @@ impl Machine {
                 // multi-core deadlock is rarely diagnosable from the
                 // first victim alone.
                 let stuck: Vec<String> = (0..n)
-                    .filter(|&j| cores[j].pc < traces[j].len())
+                    .filter(|&j| !done(&traces[j], &cores[j].cursor))
                     .map(|j| {
+                        let c = &cores[j].cursor;
                         format!(
-                            "core {j} @ t={}ps op[{}/{}] {:?}",
+                            "core {j} @ t={}ps seg {}/{} op {} iter {}: {:?}",
                             cores[j].now_ps,
-                            cores[j].pc,
-                            traces[j].len(),
-                            traces[j][cores[j].pc]
+                            c.seg,
+                            traces[j].segments.len(),
+                            c.op,
+                            c.iter,
+                            cur_op(&traces[j], c)
                         )
                     })
                     .collect();
@@ -172,11 +355,17 @@ impl Machine {
             };
 
             match self.step(i, &mut cores, &traces) {
-                StepResult::Progressed => {
+                Some(completed) => {
                     blocked.iter_mut().for_each(|b| *b = false);
                     cores[i].retrying = false;
+                    if completed > 0 {
+                        cores[i].completed_iters += completed as u64;
+                        if ff.enabled {
+                            self.maybe_fast_forward(&traces, &mut cores, &mut ff);
+                        }
+                    }
                 }
-                StepResult::Blocked => {
+                None => {
                     blocked[i] = true;
                     cores[i].retrying = true;
                 }
@@ -205,24 +394,249 @@ impl Machine {
             rs.aimc.queued_bytes += t.stats.queued_bytes;
             rs.aimc.dequeued_bytes += t.stats.dequeued_bytes;
             rs.aimc.programmed_weights += t.stats.programmed_weights;
-            rs.aimc.process_ops_weighted += t.stats.process_ops_weighted;
-            rs.aimc.energy_j += t.stats.energy_j;
+            // Energy and weighted op counts are derived from the integer
+            // activity counters so a fast-forwarded run reproduces full
+            // replay bit for bit (per-event f64 accumulation would not
+            // extrapolate exactly).
+            rs.aimc.process_ops_weighted += t.process_ops_weighted();
+            rs.aimc.energy_j += t.energy_j();
         }
         rs.roi = self.roi.clone();
         rs
     }
 
-    fn step(&mut self, i: usize, cores: &mut [CoreRun], traces: &[Vec<TraceOp>]) -> StepResult {
-        let op = traces[i][cores[i].pc];
+    /// Execute one op on core `i`. `Some(k)` on progress (k = `Rep`
+    /// iterations completed by the cursor advance), `None` when blocked.
+    fn step(&mut self, i: usize, cores: &mut [CoreRun], traces: &[Trace]) -> Option<u32> {
+        let op = cur_op(&traces[i], &cores[i].cursor);
         let t0 = cores[i].now_ps;
-        let result = self.exec(i, &mut cores[i], op);
-        if matches!(result, StepResult::Progressed) {
-            let kind = cores[i].roi_stack.last().copied().unwrap_or(RoiKind::Misc);
-            self.roi.add(kind, cores[i].now_ps - t0);
-            cores[i].pc += 1;
+        match self.exec(i, &mut cores[i], op) {
+            StepResult::Blocked => None,
+            StepResult::Progressed => {
+                let kind = cores[i].roi_stack.last().copied().unwrap_or(RoiKind::Misc);
+                self.roi.add(kind, cores[i].now_ps - t0);
+                cores[i].cursor.op += 1;
+                Some(normalize(&traces[i], &mut cores[i].cursor))
+            }
         }
-        result
     }
+
+    // -----------------------------------------------------------------
+    // Steady-state fast-forward
+    // -----------------------------------------------------------------
+
+    /// Visit every monotonic machine counter in a fixed order (snapshot
+    /// and extrapolation must agree). Stall/idle cycles are *not* here:
+    /// their residual-carry floor conversion is extrapolated separately
+    /// in closed form.
+    fn for_each_counter(&mut self, cores: &mut [CoreRun], f: &mut dyn FnMut(&mut u64)) {
+        for c in cores.iter_mut() {
+            f(&mut c.stats.insts);
+            f(&mut c.stats.active_cycles);
+        }
+        self.roi.for_each_counter(f);
+        self.mem.for_each_counter(f);
+        for t in &mut self.tiles {
+            f(&mut t.stats.processes);
+            f(&mut t.stats.queued_bytes);
+            f(&mut t.stats.dequeued_bytes);
+            f(&mut t.stats.programmed_weights);
+        }
+        for m in &mut self.mutexes {
+            f(&mut m.acquisitions);
+            f(&mut m.contended);
+        }
+        for ch in &mut self.channels {
+            f(&mut ch.sends);
+            f(&mut ch.recvs);
+        }
+        f(&mut self.iobus.transactions);
+    }
+
+    fn ff_snapshot(&mut self, traces: &[Trace], cores: &mut [CoreRun], t_ref: u64, round: u64) -> FfSnapshot {
+        let cycle = self.cycle_ps;
+        let mut state = Vec::with_capacity(16 * cores.len() + 32);
+        for (i, c) in cores.iter().enumerate() {
+            state.push(done(&traces[i], &c.cursor) as u64);
+            state.push(c.cursor.seg as u64);
+            state.push(c.cursor.op as u64);
+            state.push(c.completed_iters.saturating_sub(round));
+            state.push(c.now_ps.saturating_sub(t_ref));
+            state.push(c.retrying as u64);
+            state.push(c.roi_stack.len() as u64);
+            state.extend(c.roi_stack.iter().map(|k| *k as u64));
+        }
+        self.mem.ff_state(t_ref, &mut state);
+        for t in &self.tiles {
+            t.ff_state(t_ref, &mut state);
+        }
+        for m in &self.mutexes {
+            state.push(m.is_locked() as u64);
+            state.push(m.last_release_ps().saturating_sub(t_ref));
+        }
+        for ch in &self.channels {
+            state.push(ch.len() as u64);
+            for msg in ch.msgs() {
+                state.push(msg.ready_ps.saturating_sub(t_ref));
+                state.push(msg.bytes);
+                state.push(msg.addr);
+            }
+            state.push(ch.last_recv_ps.saturating_sub(t_ref));
+        }
+        state.push(self.iobus.busy_until_ps().saturating_sub(t_ref));
+
+        let mut counters = Vec::with_capacity(64);
+        self.for_each_counter(cores, &mut |c| counters.push(*c));
+
+        let cum_wfm_ps = cores.iter().map(|c| c.stats.wfm_cycles * cycle + c.wfm_residual_ps).collect();
+        let cum_idle_ps = cores.iter().map(|c| c.stats.idle_cycles * cycle + c.idle_residual_ps).collect();
+        FfSnapshot { round, t_ref, state, counters, cum_wfm_ps, cum_idle_ps }
+    }
+
+    /// Delta-form digest of one round: the positional state verbatim plus
+    /// the per-round deltas of every counter and cumulative ps quantity.
+    fn ff_digest(cur: &FfSnapshot, prev: &FfSnapshot) -> Vec<u64> {
+        let mut d = cur.state.clone();
+        debug_assert_eq!(cur.counters.len(), prev.counters.len());
+        d.extend(cur.counters.iter().zip(&prev.counters).map(|(a, b)| a - b));
+        d.extend(cur.cum_wfm_ps.iter().zip(&prev.cum_wfm_ps).map(|(a, b)| a - b));
+        d.extend(cur.cum_idle_ps.iter().zip(&prev.cum_idle_ps).map(|(a, b)| a - b));
+        d
+    }
+
+    /// Round bookkeeping + periodicity detection; called whenever a core
+    /// completes a `Rep` iteration.
+    fn maybe_fast_forward(&mut self, traces: &[Trace], cores: &mut [CoreRun], ff: &mut FfTracker) {
+        let mut cur_min = u64::MAX;
+        let mut t_ref = u64::MAX;
+        let mut all_in_rep = true;
+        let mut running = 0usize;
+        for (i, c) in cores.iter().enumerate() {
+            if done(&traces[i], &c.cursor) {
+                continue;
+            }
+            running += 1;
+            cur_min = cur_min.min(c.completed_iters);
+            t_ref = t_ref.min(c.now_ps);
+            all_in_rep &= matches!(traces[i].segments.get(c.cursor.seg), Some(Segment::Rep { .. }));
+        }
+        if running == 0 || cur_min <= ff.last_round {
+            return;
+        }
+        ff.last_round = cur_min;
+        if !all_in_rep {
+            ff.prev = None;
+            ff.prev_digest = None;
+            ff.prev_occupancy = None;
+            return;
+        }
+
+        let snap = self.ff_snapshot(traces, cores, t_ref, cur_min);
+        let digest = match &ff.prev {
+            Some(p) if p.round + 1 == cur_min => Some(Self::ff_digest(&snap, p)),
+            _ => None,
+        };
+        let cheap_match =
+            matches!((&digest, &ff.prev_digest), (Some(d), Some(pd)) if d == pd);
+        if cheap_match {
+            // The cheap digest is a necessary condition; the cache
+            // occupancy scan (O(lines)) runs only on candidate rounds.
+            let occ = self.mem.occupancy_vec();
+            if ff.prev_occupancy.as_ref() == Some(&occ) {
+                // Skip every whole period we can while leaving each core
+                // at least one live iteration to run into its epilogue.
+                let mut p = u64::MAX;
+                for (i, c) in cores.iter().enumerate() {
+                    if done(&traces[i], &c.cursor) {
+                        continue;
+                    }
+                    let Some(Segment::Rep { count, .. }) = traces[i].segments.get(c.cursor.seg)
+                    else {
+                        unreachable!("all running cores verified inside a Rep")
+                    };
+                    p = p.min(*count as u64 - c.cursor.iter as u64 - 1);
+                }
+                if p >= 1 {
+                    let prev = ff.prev.take().expect("cheap_match implies a previous snapshot");
+                    let dt = snap.t_ref - prev.t_ref;
+                    self.apply_fast_forward(traces, cores, &prev, p, dt);
+                    ff.last_round = cur_min + p;
+                    ff.prev_digest = None;
+                    ff.prev_occupancy = None;
+                    return;
+                }
+                ff.prev_occupancy = Some(occ);
+            } else {
+                if ff.prev_occupancy.is_some() {
+                    ff.occupancy_misses += 1;
+                    if ff.occupancy_misses > FF_MAX_OCCUPANCY_MISSES {
+                        ff.enabled = false;
+                        return;
+                    }
+                }
+                ff.prev_occupancy = Some(occ);
+            }
+        } else {
+            ff.prev_occupancy = None;
+        }
+        ff.prev_digest = digest;
+        ff.prev = Some(snap);
+    }
+
+    /// Apply `p` whole periods in closed form: counters gain `p` more
+    /// per-round deltas, every clock shifts by `p * dt`, and each running
+    /// core's `Rep` cursor advances `p` iterations. Cache/tile *content*
+    /// is untouched: in steady state it is equivalent up to the renaming
+    /// of per-inference addresses that are never revisited.
+    fn apply_fast_forward(
+        &mut self,
+        traces: &[Trace],
+        cores: &mut [CoreRun],
+        prev: &FfSnapshot,
+        p: u64,
+        dt: u64,
+    ) {
+        let shift = p * dt;
+        let cycle = self.cycle_ps;
+        let mut idx = 0usize;
+        self.for_each_counter(cores, &mut |c| {
+            *c += p * (*c - prev.counters[idx]);
+            idx += 1;
+        });
+        for (i, c) in cores.iter_mut().enumerate() {
+            if done(&traces[i], &c.cursor) {
+                continue;
+            }
+            c.now_ps += shift;
+            c.cursor.iter += p as u32;
+            c.completed_iters += p;
+            let cum_w = c.stats.wfm_cycles * cycle + c.wfm_residual_ps;
+            let new_w = cum_w + p * (cum_w - prev.cum_wfm_ps[i]);
+            c.stats.wfm_cycles = new_w / cycle;
+            c.wfm_residual_ps = new_w % cycle;
+            let cum_i = c.stats.idle_cycles * cycle + c.idle_residual_ps;
+            let new_i = cum_i + p * (cum_i - prev.cum_idle_ps[i]);
+            c.stats.idle_cycles = new_i / cycle;
+            c.idle_residual_ps = new_i % cycle;
+        }
+        self.mem.shift_time(shift);
+        for t in &mut self.tiles {
+            t.shift_time(shift);
+        }
+        for m in &mut self.mutexes {
+            m.shift_time(shift);
+        }
+        for ch in &mut self.channels {
+            ch.shift_time(shift);
+        }
+        self.iobus.shift_time(shift);
+        self.ff_jumps += 1;
+        self.ff_skipped_iters += p;
+    }
+
+    // -----------------------------------------------------------------
+    // Op execution
+    // -----------------------------------------------------------------
 
     #[inline]
     fn active(&self, core: &mut CoreRun, cycles: u64, insts: u64) {
@@ -399,7 +813,8 @@ impl Machine {
                     self.active(core, 1, 1);
                     let o = self.mem.access(i, addr + k * line, true, core.now_ps);
                     if !o.l1_hit {
-                        self.wfm(core, (o.completion_ps - core.now_ps) / costs::PREFETCH_DEPTH);
+                        let stall = o.completion_ps.saturating_sub(core.now_ps);
+                        self.wfm(core, stall / costs::PREFETCH_DEPTH);
                     }
                 }
                 let ok = self.channels[ch].try_send(core.now_ps, bytes, addr);
@@ -428,7 +843,8 @@ impl Machine {
                 for k in 0..msg.bytes.div_ceil(line) {
                     self.active(core, 1, 1);
                     let o = self.mem.shared_transfer(producer, i, msg.addr + k * line, core.now_ps);
-                    self.wfm(core, (o.completion_ps - core.now_ps) / 2);
+                    let stall = o.completion_ps.saturating_sub(core.now_ps);
+                    self.wfm(core, stall / 2);
                 }
             }
 
@@ -452,6 +868,13 @@ mod tests {
 
     fn hp_machine(spec: MachineSpec) -> Machine {
         Machine::new(SystemConfig::high_power(), spec)
+    }
+
+    fn assert_stats_identical(a: &RunStats, b: &RunStats) {
+        // Exhaustive destructuring comparison shared with the
+        // integration gates (a new RunStats field cannot be silently
+        // excluded).
+        a.assert_bit_identical(b, "machine");
     }
 
     #[test]
@@ -662,5 +1085,153 @@ mod tests {
         assert!(rs.roi.fraction(RoiKind::Activation) > 0.1);
         let sum = rs.roi.total();
         assert_eq!(sum, rs.roi_time_ps);
+    }
+
+    // -----------------------------------------------------------------
+    // Looped-trace execution + steady-state fast-forward
+    // -----------------------------------------------------------------
+
+    /// One MLP-ish steady-state iteration: a big fixed-address weight
+    /// stream (LLC-thrashing), a fresh per-iteration input stream, a
+    /// fresh output write, and compute.
+    fn steady_iteration(b: &mut TraceBuilder, k: u32) {
+        b.roi(RoiKind::InputLoad, |b| {
+            b.stream_read(0x8000_0000 + k as u64 * 0x1_0000, 48 * 1024, 2);
+        });
+        b.roi(RoiKind::DigitalMvm, |b| {
+            b.stream_read(0x1000_0000, 2 * 1024 * 1024, 1);
+            b.compute(InstClass::SimdOp, 40_000);
+        });
+        b.roi(RoiKind::Writeback, |b| {
+            b.stream_write(0xA000_0000 + k as u64 * 0x1_0000, 4 * 1024, 2);
+        });
+    }
+
+    #[test]
+    fn looped_trace_executes_like_flat() {
+        let mut lb = TraceBuilder::new();
+        lb.compute(InstClass::IntAlu, 500);
+        lb.repeat(12, steady_iteration);
+        lb.compute(InstClass::FpOp, 100);
+        let looped = lb.build_trace();
+
+        let flat = looped.flatten();
+        let mut m1 = hp_machine(MachineSpec::default());
+        m1.set_fast_forward(false);
+        let a = m1.run(vec![looped.clone()]);
+        let mut m2 = hp_machine(MachineSpec::default());
+        m2.set_fast_forward(false);
+        let b = m2.run(vec![flat]);
+        assert_stats_identical(&a, &b);
+    }
+
+    #[test]
+    fn fast_forward_bit_identical_on_steady_loop() {
+        let mut b = TraceBuilder::new();
+        b.repeat(40, steady_iteration);
+        let trace = b.build_trace();
+        let run = |ff: bool| {
+            let mut m = hp_machine(MachineSpec::default());
+            m.set_fast_forward(ff);
+            let rs = m.run(vec![trace.clone()]);
+            (rs, m.fast_forward_jumps(), m.fast_forward_skipped_iters())
+        };
+        let (fast, jumps, skipped) = run(true);
+        let (reference, no_jumps, _) = run(false);
+        assert_stats_identical(&fast, &reference);
+        assert!(jumps >= 1, "fast-forward never engaged");
+        assert!(skipped > 20, "skipped only {skipped} iterations");
+        assert_eq!(no_jumps, 0, "knob off must fully replay");
+    }
+
+    #[test]
+    fn fast_forward_bit_identical_with_channels_mutexes_tiles() {
+        // A two-stage pipeline: core 0 queues/fires/drains a tile, takes
+        // a mutex barrier and sends to core 1, which streams fresh
+        // per-iteration data and receives. Exercises every interacting
+        // machine resource under the digest.
+        let spec = MachineSpec {
+            tiles: vec![TileSpec { rows: 512, cols: 512, coupling: Coupling::Tight }],
+            mutexes: 1,
+            channels: vec![ChannelSpec { producer: 0, consumer: 1, capacity: 2 }],
+        };
+        let n = 30u32;
+        let mut p = TraceBuilder::new();
+        p.push(TraceOp::CmInit {
+            tile: 0,
+            placement: Placement { row0: 0, col0: 0, rows: 512, cols: 512 },
+        });
+        p.repeat(n, |b, k| {
+            b.roi(RoiKind::InputLoad, |b| {
+                b.stream_read(0x8000_0000 + k as u64 * 0x800, 2048, 2);
+            });
+            b.roi(RoiKind::DigitalMvm, |b| {
+                // LLC-thrashing fixed weight stream: occupancy reaches
+                // its steady state within the first couple of iterations,
+                // so the fast-forward digest can lock on.
+                b.stream_read(0x1000_0000, 2 * 1024 * 1024, 1);
+            });
+            b.push(TraceOp::CmQueue { tile: 0, bytes: 512 });
+            b.push(TraceOp::CmProcess { tile: 0 });
+            b.push(TraceOp::CmDequeue { tile: 0, bytes: 512 });
+            b.push(TraceOp::MutexLock { id: 0 });
+            b.push(TraceOp::MutexUnlock { id: 0 });
+            // Fixed buffer address (iteration-invariant, so the emission
+            // stays affine-encodable as a single Rep body).
+            b.push(TraceOp::Send { ch: 0, bytes: 2048, addr: 0xB000_0000 });
+        });
+        let mut c = TraceBuilder::new();
+        c.repeat(n, |b, k| {
+            b.push(TraceOp::Recv { ch: 0 });
+            b.push(TraceOp::MutexLock { id: 0 });
+            b.compute(InstClass::SimdOp, 3000);
+            b.push(TraceOp::MutexUnlock { id: 0 });
+            // L1-thrashing fixed re-read so the consumer's cache
+            // occupancy also stabilizes within a couple of iterations.
+            b.stream_read(0x2000_0000, 64 * 1024, 1);
+            b.roi(RoiKind::Writeback, |b| {
+                b.stream_write(0xA000_0000 + k as u64 * 0x800, 1024, 2);
+            });
+        });
+        let traces = vec![p.build_trace(), c.build_trace()];
+        let run = |ff: bool| {
+            let mut m = hp_machine(spec.clone());
+            m.set_fast_forward(ff);
+            let rs = m.run(traces.clone());
+            (rs, m.fast_forward_jumps())
+        };
+        let (fast, jumps) = run(true);
+        let (reference, _) = run(false);
+        assert_stats_identical(&fast, &reference);
+        assert!(jumps >= 1, "fast-forward never engaged on the pipeline");
+    }
+
+    #[test]
+    fn fast_forward_handles_uneven_rep_counts() {
+        // Producer loops 30 times, consumer receives 30 messages but in
+        // a Rep of 15 double-iterations: leads and periods differ.
+        let spec = MachineSpec {
+            channels: vec![ChannelSpec { producer: 0, consumer: 1, capacity: 2 }],
+            ..Default::default()
+        };
+        let mut p = TraceBuilder::new();
+        p.repeat(30, |b, k| {
+            b.compute(InstClass::IntAlu, 2000);
+            b.push(TraceOp::Send { ch: 0, bytes: 256, addr: 0xB000_0000 + k as u64 * 0x400 });
+        });
+        let mut c = TraceBuilder::new();
+        c.repeat(15, |b, _| {
+            b.push(TraceOp::Recv { ch: 0 });
+            b.compute(InstClass::SimdOp, 1500);
+            b.push(TraceOp::Recv { ch: 0 });
+            b.compute(InstClass::SimdOp, 1500);
+        });
+        let traces = vec![p.build_trace(), c.build_trace()];
+        let run = |ff: bool| {
+            let mut m = hp_machine(spec.clone());
+            m.set_fast_forward(ff);
+            m.run(traces.clone())
+        };
+        assert_stats_identical(&run(true), &run(false));
     }
 }

@@ -49,6 +49,16 @@ impl SimMutex {
     pub fn is_locked(&self) -> bool {
         self.locked
     }
+
+    pub fn last_release_ps(&self) -> u64 {
+        self.last_release_ps
+    }
+
+    /// Advance the release timestamp by `d` ps (fast-forward jumps shift
+    /// every clock in the machine uniformly).
+    pub(crate) fn shift_time(&mut self, d: u64) {
+        self.last_release_ps += d;
+    }
 }
 
 /// A single-producer single-consumer message channel (ping-pong buffer).
@@ -116,6 +126,20 @@ impl SimChannel {
 
     pub fn is_empty(&self) -> bool {
         self.msgs.is_empty()
+    }
+
+    /// In-flight messages, oldest first (fast-forward digest).
+    pub fn msgs(&self) -> impl Iterator<Item = &Msg> {
+        self.msgs.iter()
+    }
+
+    /// Advance every message timestamp by `d` ps (fast-forward jumps
+    /// shift every clock in the machine uniformly).
+    pub(crate) fn shift_time(&mut self, d: u64) {
+        for m in &mut self.msgs {
+            m.ready_ps += d;
+        }
+        self.last_recv_ps += d;
     }
 }
 

@@ -83,6 +83,23 @@ impl CacheStats {
     }
 }
 
+/// Integer activity counters of one AIMC tile. Energy and weighted op
+/// totals are *derived* from these at run aggregation
+/// (`AimcTile::energy_j` / `process_ops_weighted`) rather than
+/// accumulated per event, so the fast-forward engine's closed-form
+/// counter extrapolation reproduces full replay bit for bit.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TileActivity {
+    /// CM_PROCESS invocations.
+    pub processes: u64,
+    /// Bytes moved CPU -> tile input memory (CM_QUEUE).
+    pub queued_bytes: u64,
+    /// Bytes moved tile output memory -> CPU (CM_DEQUEUE).
+    pub dequeued_bytes: u64,
+    /// Devices programmed by CM_INITIALIZE (one-time, outside ROI).
+    pub programmed_weights: u64,
+}
+
 /// AIMC tile usage counters (per run, summed over tiles).
 #[derive(Clone, Debug, Default)]
 pub struct AimcStats {
@@ -94,9 +111,12 @@ pub struct AimcStats {
     pub dequeued_bytes: u64,
     /// Devices programmed by CM_INITIALIZE (one-time, outside ROI).
     pub programmed_weights: u64,
-    /// Sum over processes of (rows*cols) — for energy.
+    /// Sum over processes of (rows*cols) — for energy. Derived from the
+    /// per-tile [`TileActivity`] counters at run aggregation
+    /// (`AimcTile::process_ops_weighted`).
     pub process_ops_weighted: f64,
-    /// Energy already accumulated for tile activity, joules.
+    /// Tile activity energy, joules. Derived at run aggregation
+    /// (`AimcTile::energy_j`) from the per-tile [`TileActivity`].
     pub energy_j: f64,
 }
 
@@ -121,6 +141,51 @@ impl RunStats {
             cores: vec![CoreStats::default(); num_cores],
             ..Default::default()
         }
+    }
+
+    /// Panic unless `self` and `other` agree **bit for bit** (f64 fields
+    /// compared by bit pattern). This is THE equivalence check behind
+    /// the fast-forward / batched-stream / parallel-sweep guarantees —
+    /// it destructures both structs completely, so adding a `RunStats`
+    /// field without extending the comparison is a compile error.
+    pub fn assert_bit_identical(&self, other: &RunStats, label: &str) {
+        let RunStats {
+            roi_time_ps,
+            cores,
+            l1d,
+            llc,
+            dram_accesses,
+            llc_bytes_read,
+            llc_bytes_written,
+            aimc,
+            roi,
+        } = self;
+        assert_eq!(*roi_time_ps, other.roi_time_ps, "{label}: roi_time_ps");
+        assert_eq!(*cores, other.cores, "{label}: per-core stats");
+        assert_eq!(*l1d, other.l1d, "{label}: L1D stats");
+        assert_eq!(*llc, other.llc, "{label}: LLC stats");
+        assert_eq!(*dram_accesses, other.dram_accesses, "{label}: dram accesses");
+        assert_eq!(*llc_bytes_read, other.llc_bytes_read, "{label}: llc bytes read");
+        assert_eq!(*llc_bytes_written, other.llc_bytes_written, "{label}: llc bytes written");
+        let AimcStats {
+            processes,
+            queued_bytes,
+            dequeued_bytes,
+            programmed_weights,
+            process_ops_weighted,
+            energy_j,
+        } = aimc;
+        assert_eq!(*processes, other.aimc.processes, "{label}: aimc processes");
+        assert_eq!(*queued_bytes, other.aimc.queued_bytes, "{label}: aimc queued bytes");
+        assert_eq!(*dequeued_bytes, other.aimc.dequeued_bytes, "{label}: aimc dequeued bytes");
+        assert_eq!(*programmed_weights, other.aimc.programmed_weights, "{label}: aimc programmed");
+        assert_eq!(
+            process_ops_weighted.to_bits(),
+            other.aimc.process_ops_weighted.to_bits(),
+            "{label}: aimc process_ops_weighted"
+        );
+        assert_eq!(energy_j.to_bits(), other.aimc.energy_j.to_bits(), "{label}: aimc energy");
+        assert_eq!(*roi, other.roi, "{label}: roi times");
     }
 
     pub fn total_insts(&self) -> u64 {

@@ -72,7 +72,7 @@ impl RoiKind {
 
 /// Accumulated picoseconds per sub-ROI (summed across cores: the paper's
 /// run-time-percentage figures normalize by the summed distribution).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RoiTimes {
     ps: [u64; 11],
 }
@@ -97,6 +97,14 @@ impl RoiTimes {
             0.0
         } else {
             self.get(kind) as f64 / t as f64
+        }
+    }
+
+    /// Visit every per-kind accumulator in a fixed order (the trace
+    /// machine's fast-forward engine snapshots and extrapolates them).
+    pub fn for_each_counter(&mut self, f: &mut dyn FnMut(&mut u64)) {
+        for v in &mut self.ps {
+            f(v);
         }
     }
 

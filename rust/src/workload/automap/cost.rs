@@ -47,29 +47,33 @@ pub fn estimate(graph: &LayerGraph, mapping: &Mapping, cfg: &SystemConfig) -> Re
     let w = compile::compile(graph, mapping, N_INF as u32)?;
 
     // Channel payloads (a Recv op does not carry the message size).
+    // Walks visit each stored op once with its `Rep` multiplicity, so
+    // looped traces cost one period regardless of the inference count;
+    // strided ops report iteration-0 addresses, which is region-exact
+    // (the synthetic address regions are stride-closed).
     let mut ch_bytes = vec![0u64; w.spec.channels.len()];
     for trace in &w.traces {
-        for op in trace {
+        trace.for_each_weighted(&mut |op, _| {
             if let TraceOp::Send { ch, bytes, .. } = op {
-                if ch_bytes[*ch] == 0 {
-                    ch_bytes[*ch] = *bytes;
+                if ch_bytes[ch] == 0 {
+                    ch_bytes[ch] = bytes;
                 }
             }
-        }
+        });
     }
 
     // Residency classification: per-inference streamed working sets.
     let (mut weight_bytes, mut kv_bytes) = (0u64, 0u64);
     for trace in &w.traces {
-        for op in trace {
+        trace.for_each_weighted(&mut |op, mult| {
             if let TraceOp::MemStream { base, bytes, .. } = op {
-                if (addr::WEIGHTS..addr::INPUTS).contains(base) {
-                    weight_bytes += *bytes;
-                } else if *base >= addr::KV {
-                    kv_bytes += *bytes;
+                if (addr::WEIGHTS..addr::INPUTS).contains(&base) {
+                    weight_bytes += mult * bytes;
+                } else if base >= addr::KV {
+                    kv_bytes += mult * bytes;
                 }
             }
-        }
+        });
     }
     weight_bytes = (weight_bytes as f64 / N_INF) as u64;
     kv_bytes = (kv_bytes as f64 / N_INF) as u64;
@@ -90,28 +94,32 @@ pub fn estimate(graph: &LayerGraph, mapping: &Mapping, cfg: &SystemConfig) -> Re
     let mut aimc_j = 0f64;
     for trace in &w.traces {
         let mut cyc = 0f64;
-        for op in trace {
-            match *op {
-                TraceOp::Compute { class, insts } => cyc += (insts * class.cycles()) as f64,
+        // Per-op costs are position-independent, so walking one `Rep`
+        // period and multiplying by its count is exactly the flattened
+        // walk — O(stored ops), not O(executed ops).
+        trace.for_each_weighted(&mut |op, mult| {
+            let mult = mult as f64;
+            match op {
+                TraceOp::Compute { class, insts } => cyc += mult * (insts * class.cycles()) as f64,
                 TraceOp::MemStream { base, bytes, insts_per_line, prefetchable, .. } => {
                     let lines = (bytes as f64 / line).ceil().max(1.0);
                     let stall = if (addr::WEIGHTS..addr::INPUTS).contains(&base) {
                         if weights_resident {
                             hit_stall
                         } else {
-                            dram_lines += lines;
+                            dram_lines += mult * lines;
                             miss_stall
                         }
                     } else if base >= addr::KV {
                         if kv_resident {
                             hit_stall
                         } else {
-                            dram_lines += lines;
+                            dram_lines += mult * lines;
                             miss_stall
                         }
                     } else if (addr::INPUTS..addr::ACTIVATIONS).contains(&base) {
                         // Fresh per-inference data is always cold.
-                        dram_lines += lines;
+                        dram_lines += mult * lines;
                         miss_stall
                     } else {
                         hit_stall
@@ -121,39 +129,41 @@ pub fn estimate(graph: &LayerGraph, mapping: &Mapping, cfg: &SystemConfig) -> Re
                     } else {
                         lines * stall
                     };
-                    cyc += lines * insts_per_line as f64 + stall_total;
+                    cyc += mult * (lines * insts_per_line as f64 + stall_total);
                 }
                 TraceOp::CmQueue { tile, bytes } => {
-                    cyc += cm_io_cycles(&w.spec.tiles[tile].coupling, bytes, cfg, tight_cyc_per_byte, 0.0);
-                    aimc_j += bytes as f64 * cfg.aimc.io_energy_j_per_byte();
+                    cyc += mult
+                        * cm_io_cycles(&w.spec.tiles[tile].coupling, bytes, cfg, tight_cyc_per_byte, 0.0);
+                    aimc_j += mult * bytes as f64 * cfg.aimc.io_energy_j_per_byte();
                 }
                 TraceOp::CmProcess { tile } => {
-                    cyc += 1.0;
+                    cyc += mult;
                     let t = &w.spec.tiles[tile];
-                    aimc_j += cfg.aimc.mvm_energy_j(t.rows, t.cols);
+                    aimc_j += mult * cfg.aimc.mvm_energy_j(t.rows, t.cols);
                     if t.coupling == Coupling::Loose {
-                        cyc += proc_cycles;
+                        cyc += mult * proc_cycles;
                     }
                 }
                 TraceOp::CmDequeue { tile, bytes } => {
                     // The dependent dequeue observes the 100 ns MVM.
                     let wait = if w.spec.tiles[tile].coupling == Coupling::Tight { proc_cycles } else { 0.0 };
-                    cyc += cm_io_cycles(&w.spec.tiles[tile].coupling, bytes, cfg, tight_cyc_per_byte, wait);
-                    aimc_j += bytes as f64 * cfg.aimc.io_energy_j_per_byte();
+                    cyc += mult
+                        * cm_io_cycles(&w.spec.tiles[tile].coupling, bytes, cfg, tight_cyc_per_byte, wait);
+                    aimc_j += mult * bytes as f64 * cfg.aimc.io_energy_j_per_byte();
                 }
                 TraceOp::Send { bytes, .. } => {
-                    cyc += costs::CHANNEL_INSTS as f64 + (bytes as f64 / line).ceil() * 2.0;
+                    cyc += mult * (costs::CHANNEL_INSTS as f64 + (bytes as f64 / line).ceil() * 2.0);
                 }
                 TraceOp::Recv { ch } => {
                     let lines = (ch_bytes[ch] as f64 / line).ceil();
-                    cyc += costs::CHANNEL_INSTS as f64 + lines * (1.0 + hit_stall / 2.0);
+                    cyc += mult * (costs::CHANNEL_INSTS as f64 + lines * (1.0 + hit_stall / 2.0));
                 }
-                TraceOp::MutexLock { .. } => cyc += costs::MUTEX_INSTS as f64,
-                TraceOp::MutexUnlock { .. } => cyc += costs::MUTEX_INSTS as f64 / 2.0,
-                TraceOp::CmInit { .. } => cyc += 1.0,
+                TraceOp::MutexLock { .. } => cyc += mult * costs::MUTEX_INSTS as f64,
+                TraceOp::MutexUnlock { .. } => cyc += mult * costs::MUTEX_INSTS as f64 / 2.0,
+                TraceOp::CmInit { .. } => cyc += mult,
                 TraceOp::RoiPush { .. } | TraceOp::RoiPop => {}
             }
-        }
+        });
         per_core.push(cyc / N_INF);
     }
     dram_lines /= N_INF;

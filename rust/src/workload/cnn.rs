@@ -147,7 +147,7 @@ mod tests {
         let model = CnnModel::paper(CnnVariant::Fast);
         for (k, l) in model.convs.iter().enumerate() {
             let procs = w.traces[k]
-                .iter()
+                .iter_ops()
                 .filter(|op| matches!(op, TraceOp::CmProcess { tile } if *tile == k))
                 .count() as u64;
             assert_eq!(procs, l.output_pixels(), "layer {k}");

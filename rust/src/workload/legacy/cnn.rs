@@ -94,7 +94,7 @@ pub fn generate(case: CnnCase, variant: CnnVariant, _cfg: &SystemConfig, n_inf: 
 
     Workload {
         label: format!("cnn-{}/{}", variant.name(), case.label()),
-        traces: cores.into_iter().map(|b| b.build()).collect(),
+        traces: cores.into_iter().map(|b| b.build().into()).collect(),
         spec: MachineSpec { tiles, channels, mutexes: 0 },
         inferences: n_inf,
     }

@@ -125,7 +125,7 @@ fn digital_1core(m: LstmModel, n_inf: u32) -> Workload {
     }
     Workload {
         label: format!("lstm{}/DIG-1core", m.n_h),
-        traces: vec![b.build()],
+        traces: vec![b.build().into()],
         spec: MachineSpec::default(),
         inferences: n_inf,
     }
@@ -156,7 +156,7 @@ fn digital_2core(m: LstmModel, n_inf: u32) -> Workload {
     }
     Workload {
         label: format!("lstm{}/DIG-2core", m.n_h),
-        traces: vec![c0.build(), c1.build()],
+        traces: vec![c0.build().into(), c1.build().into()],
         spec: MachineSpec {
             channels: vec![ChannelSpec { producer: 0, consumer: 1, capacity: 2 }],
             ..Default::default()
@@ -201,7 +201,7 @@ fn digital_5core(m: LstmModel, n_inf: u32) -> Workload {
     }
     Workload {
         label: format!("lstm{}/DIG-5core", m.n_h),
-        traces: cores.into_iter().map(|b| b.build()).collect(),
+        traces: cores.into_iter().map(|b| b.build().into()).collect(),
         spec,
         inferences: n_inf,
     }
@@ -283,7 +283,7 @@ fn analog_single(m: LstmModel, n_inf: u32, case: u8) -> Workload {
     }
     Workload {
         label: format!("lstm{}/ANA-case{case}", m.n_h),
-        traces: vec![b.build()],
+        traces: vec![b.build().into()],
         spec: MachineSpec { tiles, ..Default::default() },
         inferences: n_inf,
     }
@@ -335,7 +335,7 @@ fn analog_case3(m: LstmModel, n_inf: u32) -> Workload {
         .unwrap_or((m.cell_rows(), m.cell_cols()));
     Workload {
         label: format!("lstm{}/ANA-case3", m.n_h),
-        traces: vec![c0.build(), c1.build()],
+        traces: vec![c0.build().into(), c1.build().into()],
         spec: MachineSpec {
             tiles: vec![
                 TileSpec { rows: r3 as u32, cols: c3 as u32, coupling: Coupling::Tight },
@@ -496,7 +496,7 @@ fn analog_case4(m: LstmModel, n_inf: u32) -> Workload {
     }
     Workload {
         label: format!("lstm{}/ANA-case4", m.n_h),
-        traces: cores.into_iter().map(|b| b.build()).collect(),
+        traces: cores.into_iter().map(|b| b.build().into()).collect(),
         spec: quin_core_spec(&tiles, m.n_h),
         inferences: n_inf,
     }

@@ -119,7 +119,7 @@ fn digital_1core(m: MlpModel, n_inf: u32) -> Workload {
     }
     Workload {
         label: "mlp/DIG-1core".into(),
-        traces: vec![b.build()],
+        traces: vec![b.build().into()],
         spec: MachineSpec::default(),
         inferences: n_inf,
     }
@@ -152,7 +152,7 @@ fn digital_2core(m: MlpModel, n_inf: u32) -> Workload {
     }
     Workload {
         label: "mlp/DIG-2core".into(),
-        traces: vec![c0.build(), c1.build()],
+        traces: vec![c0.build().into(), c1.build().into()],
         spec: MachineSpec {
             channels: vec![ChannelSpec { producer: 0, consumer: 1, capacity: 2 }],
             ..Default::default()
@@ -226,7 +226,7 @@ fn digital_4core(m: MlpModel, n_inf: u32) -> Workload {
     }
     Workload {
         label: "mlp/DIG-4core".into(),
-        traces: cores.into_iter().map(|b| b.build()).collect(),
+        traces: cores.into_iter().map(|b| b.build().into()).collect(),
         spec: MachineSpec {
             mutexes: 2,
             channels: vec![
@@ -274,7 +274,7 @@ fn analog_case1(m: MlpModel, n_inf: u32) -> Workload {
     }
     Workload {
         label: "mlp/ANA-case1".into(),
-        traces: vec![b.build()],
+        traces: vec![b.build().into()],
         spec: MachineSpec {
             tiles: vec![TileSpec { rows: n as u32, cols: 2 * n as u32, coupling: Coupling::Tight }],
             ..Default::default()
@@ -324,7 +324,7 @@ fn analog_case2(m: MlpModel, n_inf: u32) -> Workload {
         .collect();
     Workload {
         label: "mlp/ANA-case2".into(),
-        traces: vec![b.build()],
+        traces: vec![b.build().into()],
         spec: MachineSpec { tiles, ..Default::default() },
         inferences: n_inf,
     }
@@ -379,7 +379,7 @@ fn analog_case3(m: MlpModel, n_inf: u32) -> Workload {
     }
     Workload {
         label: "mlp/ANA-case3".into(),
-        traces: vec![c0.build(), c1.build()],
+        traces: vec![c0.build().into(), c1.build().into()],
         spec: MachineSpec {
             tiles: vec![
                 TileSpec { rows: n as u32, cols: n as u32, coupling: Coupling::Tight },
@@ -473,7 +473,7 @@ fn analog_case4(m: MlpModel, n_inf: u32) -> Workload {
         .collect();
     Workload {
         label: "mlp/ANA-case4".into(),
-        traces: cores.into_iter().map(|b| b.build()).collect(),
+        traces: cores.into_iter().map(|b| b.build().into()).collect(),
         spec: MachineSpec {
             tiles,
             mutexes: 2,
@@ -525,7 +525,7 @@ fn analog_loose(m: MlpModel, n_inf: u32) -> Workload {
     }
     Workload {
         label: "mlp/ANA-loose".into(),
-        traces: vec![b.build()],
+        traces: vec![b.build().into()],
         spec: MachineSpec {
             tiles: vec![
                 TileSpec { rows: n as u32, cols: n as u32, coupling: Coupling::Loose },

@@ -253,7 +253,7 @@ mod tests {
         // One for the cell (all four gates at once, §VIII.D), one dense.
         let w = generate(LstmCase::Analog { case: 1 }, 256, &cfg(), 4).unwrap();
         let procs = w.traces[0]
-            .iter()
+            .iter_ops()
             .filter(|op| matches!(op, TraceOp::CmProcess { .. }))
             .count();
         assert_eq!(procs, 2 * 4);
@@ -271,12 +271,12 @@ mod tests {
         let w = generate(LstmCase::Digital { cores: 1 }, 256, &cfg(), 1).unwrap();
         let m = LstmModel::paper(256);
         let bytes: u64 = w.traces[0]
-            .iter()
+            .iter_ops()
             .filter_map(|op| match op {
                 TraceOp::MemStream { base, bytes, .. }
-                    if *base >= addr::WEIGHTS && *base < addr::INPUTS =>
+                    if base >= addr::WEIGHTS && base < addr::INPUTS =>
                 {
-                    Some(*bytes)
+                    Some(bytes)
                 }
                 _ => None,
             })

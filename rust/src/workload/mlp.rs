@@ -540,7 +540,7 @@ mod tests {
     fn analog_case1_has_two_processes_per_inference() {
         let w = generate(MlpCase::Analog { case: 1 }, &cfg(), 3).unwrap();
         let procs = w.traces[0]
-            .iter()
+            .iter_ops()
             .filter(|op| matches!(op, TraceOp::CmProcess { .. }))
             .count();
         assert_eq!(procs, 2 * 3);
@@ -555,7 +555,7 @@ mod tests {
         let count = |w: &Workload| {
             w.traces
                 .iter()
-                .flatten()
+                .flat_map(crate::workload::trace::Trace::iter_ops)
                 .filter(|op| matches!(op, TraceOp::CmProcess { .. }))
                 .count()
         };
@@ -573,9 +573,9 @@ mod tests {
     fn digital_streams_full_weight_matrix() {
         let w = generate(MlpCase::Digital { cores: 1 }, &cfg(), 1).unwrap();
         let weight_bytes: u64 = w.traces[0]
-            .iter()
+            .iter_ops()
             .filter_map(|op| match op {
-                TraceOp::MemStream { base, bytes, .. } if *base >= addr::WEIGHTS && *base < addr::INPUTS => Some(*bytes),
+                TraceOp::MemStream { base, bytes, .. } if base >= addr::WEIGHTS && base < addr::INPUTS => Some(bytes),
                 _ => None,
             })
             .sum();
@@ -608,9 +608,9 @@ mod tests {
         // Layer weight streams: 784*512 + 512*512 + 512*10 per inference.
         let per_inf: u64 = 784 * 512 + 512 * 512 + 512 * 10;
         let weight_bytes: u64 = w.traces[0]
-            .iter()
+            .iter_ops()
             .filter_map(|op| match op {
-                TraceOp::MemStream { base, bytes, .. } if *base >= addr::WEIGHTS && *base < addr::INPUTS => Some(*bytes),
+                TraceOp::MemStream { base, bytes, .. } if base >= addr::WEIGHTS && base < addr::INPUTS => Some(bytes),
                 _ => None,
             })
             .sum();
@@ -629,7 +629,7 @@ mod tests {
         let procs: usize = w
             .traces
             .iter()
-            .flatten()
+            .flat_map(crate::workload::trace::Trace::iter_ops)
             .filter(|op| matches!(op, TraceOp::CmProcess { .. }))
             .count();
         assert_eq!(procs, 3 * 2);

@@ -26,7 +26,7 @@ pub mod transformer;
 
 use crate::sim::machine::MachineSpec;
 use std::fmt;
-use trace::TraceOp;
+use trace::Trace;
 
 /// Errors from workload construction: an unsupported case selection, or
 /// a layer graph / mapping pair the compiler rejects. Surfaced as clean
@@ -60,10 +60,13 @@ impl fmt::Display for WorkloadError {
 
 impl std::error::Error for WorkloadError {}
 
-/// A fully-generated workload, ready for `sim::Machine::run`.
+/// A fully-generated workload, ready for `sim::Machine::run`. Traces are
+/// looped [`Trace`] programs: steady-state workloads hold their
+/// per-inference block once inside a `Rep` segment, so workload memory
+/// stays O(block) regardless of the inference count.
 pub struct Workload {
     pub label: String,
-    pub traces: Vec<Vec<TraceOp>>,
+    pub traces: Vec<Trace>,
     pub spec: MachineSpec,
     /// Number of inferences in the region of interest.
     pub inferences: u32,
@@ -74,8 +77,14 @@ impl Workload {
         self.traces.iter().filter(|t| !t.is_empty()).count()
     }
 
+    /// Flattened op count (what a fully unrolled trace would execute).
     pub fn total_ops(&self) -> usize {
-        self.traces.iter().map(|t| t.len()).sum()
+        self.traces.iter().map(Trace::op_count).sum()
+    }
+
+    /// Physically stored op count (`Rep` bodies count once).
+    pub fn stored_ops(&self) -> usize {
+        self.traces.iter().map(Trace::stored_ops).sum()
     }
 }
 

@@ -1,12 +1,17 @@
 //! The trace IR: the interface between workload generators and the
 //! trace machine.
 //!
-//! A workload is one `Vec<TraceOp>` per core. Ops are either *local*
-//! (compute bursts, memory streams) or *interacting* (AIMC tile ops,
-//! mutexes, channels). Memory is line-granular: `MemStream` walks cache
-//! lines through the full hierarchy, so cache behaviour (and therefore
-//! LLCMPI and DRAM energy) emerges from the actual access pattern rather
-//! than analytic formulas.
+//! A workload is one [`Trace`] per core: a program of [`Segment`]s that
+//! is either straight-line ops or an explicit `Rep { body, count }`
+//! loop. Steady-state workloads (N inferences of the same network) store
+//! the per-inference block *once* inside a `Rep` instead of cloning it N
+//! times, so trace memory and compile time are O(block), not O(N*block);
+//! [`Trace::flatten`] recovers the exact flat stream for oracle
+//! comparisons. Ops are either *local* (compute bursts, memory streams)
+//! or *interacting* (AIMC tile ops, mutexes, channels). Memory is
+//! line-granular: `MemStream` walks cache lines through the full
+//! hierarchy, so cache behaviour (and therefore LLCMPI and DRAM energy)
+//! emerges from the actual access pattern rather than analytic formulas.
 
 use crate::isa::InstClass;
 use crate::sim::aimc::Placement;
@@ -59,10 +64,219 @@ pub enum TraceOp {
     RoiPop,
 }
 
-/// Builder helper so generators read naturally.
+/// Shift the iteration-affine address of `op` by `iter * stride`.
+/// Only `MemStream` bases and `Send` buffer addresses evolve across
+/// `Rep` iterations (fresh per-inference input/output regions); every
+/// other field is iteration-invariant by construction.
+#[inline]
+pub fn apply_stride(op: TraceOp, stride: i64, iter: u32) -> TraceOp {
+    if stride == 0 || iter == 0 {
+        return op;
+    }
+    let delta = stride.wrapping_mul(iter as i64);
+    match op {
+        TraceOp::MemStream { base, bytes, write, insts_per_line, prefetchable } => {
+            TraceOp::MemStream {
+                base: base.wrapping_add_signed(delta),
+                bytes,
+                write,
+                insts_per_line,
+                prefetchable,
+            }
+        }
+        TraceOp::Send { ch, bytes, addr } => {
+            TraceOp::Send { ch, bytes, addr: addr.wrapping_add_signed(delta) }
+        }
+        other => other,
+    }
+}
+
+/// Per-op address delta between two sample iterations, if the two ops
+/// are the same op modulo an affine address shift.
+fn stride_between(a: TraceOp, b: TraceOp) -> Option<i64> {
+    if a == b {
+        return Some(0);
+    }
+    match (a, b) {
+        (
+            TraceOp::MemStream { base: ba, bytes, write, insts_per_line, prefetchable },
+            TraceOp::MemStream { base: bb, bytes: b2, write: w2, insts_per_line: i2, prefetchable: p2 },
+        ) if bytes == b2 && write == w2 && insts_per_line == i2 && prefetchable == p2 => {
+            Some(bb.wrapping_sub(ba) as i64)
+        }
+        (TraceOp::Send { ch, bytes, addr: aa }, TraceOp::Send { ch: c2, bytes: b2, addr: ab })
+            if ch == c2 && bytes == b2 =>
+        {
+            Some(ab.wrapping_sub(aa) as i64)
+        }
+        _ => None,
+    }
+}
+
+/// One segment of a [`Trace`] program.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Segment {
+    /// A straight-line run of ops, executed once.
+    Ops(Vec<TraceOp>),
+    /// `count` iterations of `body`. `strides` (empty = all zero) holds
+    /// one per-iteration address delta per body op: in iteration `k`,
+    /// op `j` runs as `apply_stride(body[j], strides[j], k)`.
+    Rep {
+        body: Vec<TraceOp>,
+        count: u32,
+        strides: Vec<i64>,
+    },
+}
+
+impl Segment {
+    /// Flattened op count of this segment.
+    pub fn op_count(&self) -> usize {
+        match self {
+            Segment::Ops(v) => v.len(),
+            Segment::Rep { body, count, .. } => body.len() * *count as usize,
+        }
+    }
+
+    /// Physically stored op count (a `Rep` body counts once).
+    pub fn stored_ops(&self) -> usize {
+        match self {
+            Segment::Ops(v) => v.len(),
+            Segment::Rep { body, .. } => body.len(),
+        }
+    }
+
+    /// Build a `Rep` from sampled iterations when the emission is
+    /// iteration-affine: every `(sample, k)` in `checks` must equal
+    /// `first` (= iteration 0) op for op with its addresses advanced by
+    /// `k` per-op strides (derived from the first check). Callers sample
+    /// iterations 1, 2 AND `count - 1` — collinearity at 0..2 plus the
+    /// far endpoint rejects any periodic or piecewise pattern that
+    /// merely starts out straight — and fall back to flat unrolling on
+    /// `None`, so the encoding is always bit-exact.
+    pub fn rep_from_samples(
+        first: &[TraceOp],
+        checks: &[(&[TraceOp], u32)],
+        count: u32,
+    ) -> Option<Segment> {
+        let (second, k1) = *checks.first()?;
+        if first.len() != second.len() || k1 != 1 {
+            return None;
+        }
+        let mut strides = vec![0i64; first.len()];
+        let mut any = false;
+        for (j, (&a, &b)) in first.iter().zip(second).enumerate() {
+            let s = stride_between(a, b)?;
+            strides[j] = s;
+            any |= s != 0;
+        }
+        for &(sample, k) in &checks[1..] {
+            if sample.len() != first.len() {
+                return None;
+            }
+            for (j, (&a, &c)) in first.iter().zip(sample).enumerate() {
+                if apply_stride(a, strides[j], k) != c {
+                    return None;
+                }
+            }
+        }
+        Some(Segment::Rep {
+            body: first.to_vec(),
+            count,
+            strides: if any { strides } else { Vec::new() },
+        })
+    }
+}
+
+/// A per-core trace program: segments executed in order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub segments: Vec<Segment>,
+}
+
+impl Trace {
+    /// True if the flattened program has no ops.
+    pub fn is_empty(&self) -> bool {
+        self.segments.iter().all(|s| s.op_count() == 0)
+    }
+
+    /// Flattened op count (what a fully unrolled trace would hold).
+    pub fn op_count(&self) -> usize {
+        self.segments.iter().map(Segment::op_count).sum()
+    }
+
+    /// Physically stored op count (`Rep` bodies count once).
+    pub fn stored_ops(&self) -> usize {
+        self.segments.iter().map(Segment::stored_ops).sum()
+    }
+
+    /// Iterate the flattened op stream (repeating `Rep` bodies `count`
+    /// times with their address strides applied). Yields ops by value —
+    /// strided ops are materialized per iteration.
+    pub fn iter_ops(&self) -> impl Iterator<Item = TraceOp> + '_ {
+        fn segment_ops(seg: &Segment) -> Box<dyn Iterator<Item = TraceOp> + '_> {
+            match seg {
+                Segment::Ops(v) => Box::new(v.iter().copied()),
+                Segment::Rep { body, count, strides } => {
+                    Box::new((0..*count).flat_map(move |k| {
+                        body.iter().enumerate().map(move |(j, &op)| {
+                            apply_stride(op, strides.get(j).copied().unwrap_or(0), k)
+                        })
+                    }))
+                }
+            }
+        }
+        self.segments.iter().flat_map(segment_ops)
+    }
+
+    /// Visit each *stored* op once with its total execution multiplicity
+    /// (`Rep` body ops carry `count`). Strided ops are reported with their
+    /// iteration-0 address — the synthetic address regions are stride-
+    /// closed, so region classification is exact for every iteration.
+    pub fn for_each_weighted(&self, f: &mut impl FnMut(TraceOp, u64)) {
+        for seg in &self.segments {
+            match seg {
+                Segment::Ops(v) => {
+                    for &op in v {
+                        f(op, 1);
+                    }
+                }
+                Segment::Rep { body, count, .. } => {
+                    for &op in body {
+                        f(op, *count as u64);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fully unroll into a flat op vector (the legacy representation; the
+    /// `legacy/` oracle tests compare against this form).
+    pub fn flatten(&self) -> Vec<TraceOp> {
+        let mut out = Vec::with_capacity(self.op_count());
+        out.extend(self.iter_ops());
+        out
+    }
+}
+
+impl From<Vec<TraceOp>> for Trace {
+    fn from(ops: Vec<TraceOp>) -> Trace {
+        if ops.is_empty() {
+            Trace::default()
+        } else {
+            Trace { segments: vec![Segment::Ops(ops)] }
+        }
+    }
+}
+
+/// Builder helper so generators read naturally. Plain pushes accumulate
+/// into an open straight-line run (`ops`); [`TraceBuilder::repeat`] and
+/// [`TraceBuilder::push_segment`] close it and append looped segments.
 #[derive(Clone, Debug, Default)]
 pub struct TraceBuilder {
+    /// The open straight-line tail (kept public: generators inspect and
+    /// manipulate it directly).
     pub ops: Vec<TraceOp>,
+    segments: Vec<Segment>,
 }
 
 impl TraceBuilder {
@@ -74,7 +288,7 @@ impl TraceBuilder {
     /// trace size up front avoid the re-allocation churn of multi-megaop
     /// CNN traces).
     pub fn with_capacity(cap: usize) -> TraceBuilder {
-        TraceBuilder { ops: Vec::with_capacity(cap) }
+        TraceBuilder { ops: Vec::with_capacity(cap), segments: Vec::new() }
     }
 
     /// Reserve room for at least `additional` more ops.
@@ -83,7 +297,8 @@ impl TraceBuilder {
         self
     }
 
-    /// Current op count — pair with [`TraceBuilder::reserve_repeats`].
+    /// Current op count of the open run — pair with
+    /// [`TraceBuilder::reserve_repeats`].
     pub fn mark(&self) -> usize {
         self.ops.len()
     }
@@ -132,14 +347,89 @@ impl TraceBuilder {
         self
     }
 
+    /// Close the open straight-line run into its own segment.
+    fn flush(&mut self) {
+        if !self.ops.is_empty() {
+            self.segments.push(Segment::Ops(std::mem::take(&mut self.ops)));
+        }
+    }
+
+    /// Append a pre-built segment (closing the open run first).
+    pub fn push_segment(&mut self, seg: Segment) -> &mut Self {
+        self.flush();
+        self.segments.push(seg);
+        self
+    }
+
+    /// Emit `count` iterations of `f(builder, k)`. When the emission is
+    /// iteration-affine (identical ops modulo linearly-advancing
+    /// `MemStream`/`Send` addresses — verified against sampled
+    /// iterations 1, 2 and `count - 1`) the result is a single looped
+    /// `Rep` segment of one body; otherwise every iteration is unrolled
+    /// flat. Either way the flattened trace is bit-identical to calling
+    /// `f` for k in 0..count, so `f` must depend only on `k` (not on
+    /// call order).
+    pub fn repeat(&mut self, count: u32, mut f: impl FnMut(&mut TraceBuilder, u32)) -> &mut Self {
+        fn sample(f: &mut dyn FnMut(&mut TraceBuilder, u32), k: u32) -> Vec<TraceOp> {
+            let mut sb = TraceBuilder::new();
+            f(&mut sb, k);
+            sb.build()
+        }
+        // Below 5 iterations the 4 affinity samples cost as much as the
+        // loop; just unroll.
+        if count < 5 {
+            for k in 0..count {
+                let ops = sample(&mut f, k);
+                self.ops.extend_from_slice(&ops);
+            }
+            return self;
+        }
+        let s0 = sample(&mut f, 0);
+        let s1 = sample(&mut f, 1);
+        let s2 = sample(&mut f, 2);
+        let s_last = sample(&mut f, count - 1);
+        let checks = [(s1.as_slice(), 1u32), (s2.as_slice(), 2), (s_last.as_slice(), count - 1)];
+        match Segment::rep_from_samples(&s0, &checks, count) {
+            Some(seg) => {
+                self.push_segment(seg);
+            }
+            None => {
+                self.ops.extend_from_slice(&s0);
+                self.ops.extend_from_slice(&s1);
+                self.ops.extend_from_slice(&s2);
+                for k in 3..count - 1 {
+                    let ops = sample(&mut f, k);
+                    self.ops.extend_from_slice(&ops);
+                }
+                self.ops.extend_from_slice(&s_last);
+            }
+        }
+        self
+    }
+
+    /// Finish as a flat op vector (any looped segments are unrolled).
     pub fn build(self) -> Vec<TraceOp> {
-        self.ops
+        if self.segments.is_empty() {
+            return self.ops;
+        }
+        let mut t = Trace { segments: self.segments };
+        if !self.ops.is_empty() {
+            t.segments.push(Segment::Ops(self.ops));
+        }
+        t.flatten()
+    }
+
+    /// Finish as a looped [`Trace`] program.
+    pub fn build_trace(mut self) -> Trace {
+        self.flush();
+        Trace { segments: self.segments }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::addr;
 
     #[test]
     fn builder_skips_zero_compute() {
@@ -183,5 +473,134 @@ mod tests {
         assert!(matches!(b.ops[0], TraceOp::RoiPush { kind: RoiKind::InputLoad }));
         assert!(matches!(b.ops[2], TraceOp::RoiPop));
         assert_eq!(b.ops.len(), 3);
+    }
+
+    /// One iteration of a representative affine block: a fixed-address
+    /// weight stream, a fresh (iteration-advancing) input stream, and a
+    /// compute burst.
+    fn affine_block(b: &mut TraceBuilder, k: u32) {
+        b.stream_read(addr::weights(0), 4096, 1);
+        b.stream_read(addr::input(k, 256), 256, 2);
+        b.compute(InstClass::SimdOp, 100);
+    }
+
+    #[test]
+    fn repeat_affine_emits_single_rep() {
+        let mut b = TraceBuilder::new();
+        b.repeat(50, affine_block);
+        let t = b.build_trace();
+        assert_eq!(t.segments.len(), 1);
+        let Segment::Rep { body, count, strides } = &t.segments[0] else {
+            panic!("expected a Rep, got {:?}", t.segments[0]);
+        };
+        assert_eq!(*count, 50);
+        assert_eq!(body.len(), 3);
+        assert_eq!(strides[0], 0, "weight stream is iteration-invariant");
+        assert_eq!(strides[1], addr::input(1, 256) as i64 - addr::input(0, 256) as i64);
+        assert_eq!(t.stored_ops(), 3);
+        assert_eq!(t.op_count(), 150);
+    }
+
+    #[test]
+    fn repeat_flatten_matches_unrolled_emission() {
+        let mut looped = TraceBuilder::new();
+        looped.repeat(23, affine_block);
+        let mut flat = TraceBuilder::new();
+        for k in 0..23 {
+            affine_block(&mut flat, k);
+        }
+        assert_eq!(looped.build_trace().flatten(), flat.build());
+    }
+
+    #[test]
+    fn repeat_non_affine_falls_back_to_unroll() {
+        // Iteration-dependent instruction counts are not affine-encodable.
+        let f = |b: &mut TraceBuilder, k: u32| {
+            b.compute(InstClass::IntAlu, 10 + k as u64);
+        };
+        let mut looped = TraceBuilder::new();
+        looped.repeat(9, f);
+        let t = looped.build_trace();
+        assert!(t.segments.iter().all(|s| matches!(s, Segment::Ops(_))));
+        let mut flat = TraceBuilder::new();
+        for k in 0..9 {
+            f(&mut flat, k);
+        }
+        assert_eq!(t.flatten(), flat.build());
+    }
+
+    #[test]
+    fn repeat_small_counts_unroll() {
+        let mut b = TraceBuilder::new();
+        b.repeat(3, affine_block);
+        let t = b.build_trace();
+        assert!(t.segments.iter().all(|s| matches!(s, Segment::Ops(_))));
+        assert_eq!(t.op_count(), 9);
+    }
+
+    #[test]
+    fn period_three_collinear_prefix_is_rejected() {
+        // k % 3 addresses are collinear over samples 0..2; only the
+        // far-endpoint (count - 1) check exposes them.
+        let f = |b: &mut TraceBuilder, k: u32| {
+            b.stream_read(0x1000 + (k as u64 % 3) * 0x1000, 64, 1);
+        };
+        let mut looped = TraceBuilder::new();
+        looped.repeat(9, f);
+        let t = looped.build_trace();
+        assert!(t.segments.iter().all(|s| matches!(s, Segment::Ops(_))));
+        let mut flat = TraceBuilder::new();
+        for k in 0..9 {
+            f(&mut flat, k);
+        }
+        assert_eq!(t.flatten(), flat.build());
+    }
+
+    #[test]
+    fn period_two_masquerading_as_affine_is_rejected() {
+        // Alternating addresses diff "cleanly" between samples 0 and 1
+        // but fail the third-sample affinity check.
+        let f = |b: &mut TraceBuilder, k: u32| {
+            b.stream_read(0x1000 + (k as u64 % 2) * 0x8000, 64, 1);
+        };
+        let mut looped = TraceBuilder::new();
+        looped.repeat(8, f);
+        let t = looped.build_trace();
+        assert!(t.segments.iter().all(|s| matches!(s, Segment::Ops(_))));
+        let mut flat = TraceBuilder::new();
+        for k in 0..8 {
+            f(&mut flat, k);
+        }
+        assert_eq!(t.flatten(), flat.build());
+    }
+
+    #[test]
+    fn iter_ops_and_weighted_agree_with_flatten() {
+        let mut b = TraceBuilder::new();
+        b.compute(InstClass::IntAlu, 7);
+        b.repeat(12, affine_block);
+        b.compute(InstClass::FpOp, 3);
+        let t = b.build_trace();
+        let flat = t.flatten();
+        assert_eq!(flat.len(), t.op_count());
+        assert_eq!(t.iter_ops().count(), flat.len());
+        assert!(t.iter_ops().zip(&flat).all(|(a, &b)| a == b));
+        // Weighted walk covers the same multiset of op executions.
+        let mut weighted = 0u64;
+        t.for_each_weighted(&mut |_, w| weighted += w);
+        assert_eq!(weighted as usize, flat.len());
+    }
+
+    #[test]
+    fn trace_from_flat_vec_roundtrips() {
+        let ops = vec![
+            TraceOp::Compute { class: InstClass::IntAlu, insts: 4 },
+            TraceOp::RoiPush { kind: RoiKind::Misc },
+            TraceOp::RoiPop,
+        ];
+        let t = Trace::from(ops.clone());
+        assert_eq!(t.flatten(), ops);
+        assert!(!t.is_empty());
+        assert!(Trace::from(Vec::new()).is_empty());
     }
 }

@@ -141,7 +141,7 @@ pub fn case_table(shape: TransformerShape, case: TransformerCase) -> Result<(Lay
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::trace::TraceOp;
+    use crate::workload::trace::{Trace, TraceOp};
 
     #[test]
     fn shape_validation() {
@@ -170,7 +170,7 @@ mod tests {
         let procs = w
             .traces
             .iter()
-            .flatten()
+            .flat_map(Trace::iter_ops)
             .filter(|op| matches!(op, TraceOp::CmProcess { .. }))
             .count();
         assert_eq!(procs, 2 * 6 * 3);
@@ -186,9 +186,9 @@ mod tests {
         let kv: u64 = w
             .traces
             .iter()
-            .flatten()
+            .flat_map(Trace::iter_ops)
             .filter_map(|op| match op {
-                TraceOp::MemStream { base, bytes, .. } if *base >= addr::KV => Some(*bytes),
+                TraceOp::MemStream { base, bytes, .. } if base >= addr::KV => Some(bytes),
                 _ => None,
             })
             .sum();

@@ -138,26 +138,26 @@ fn check_self_consistent(w: &Workload) {
     let mut recvs = vec![0u64; spec.channels.len()];
     for (core, trace) in w.traces.iter().enumerate() {
         let mut roi_depth = 0i64;
-        for op in trace {
+        for op in trace.iter_ops() {
             match op {
                 TraceOp::CmInit { tile, .. }
                 | TraceOp::CmQueue { tile, .. }
                 | TraceOp::CmProcess { tile }
                 | TraceOp::CmDequeue { tile, .. } => {
-                    assert!(*tile < spec.tiles.len(), "tile {tile} not declared");
+                    assert!(tile < spec.tiles.len(), "tile {tile} not declared");
                 }
                 TraceOp::MutexLock { id } | TraceOp::MutexUnlock { id } => {
-                    assert!(*id < spec.mutexes, "mutex {id} not declared");
+                    assert!(id < spec.mutexes, "mutex {id} not declared");
                 }
                 TraceOp::Send { ch, .. } => {
-                    assert!(*ch < spec.channels.len(), "channel {ch} not declared");
-                    assert_eq!(spec.channels[*ch].producer, core, "send from non-producer core");
-                    sends[*ch] += 1;
+                    assert!(ch < spec.channels.len(), "channel {ch} not declared");
+                    assert_eq!(spec.channels[ch].producer, core, "send from non-producer core");
+                    sends[ch] += 1;
                 }
                 TraceOp::Recv { ch } => {
-                    assert!(*ch < spec.channels.len(), "channel {ch} not declared");
-                    assert_eq!(spec.channels[*ch].consumer, core, "recv on non-consumer core");
-                    recvs[*ch] += 1;
+                    assert!(ch < spec.channels.len(), "channel {ch} not declared");
+                    assert_eq!(spec.channels[ch].consumer, core, "recv on non-consumer core");
+                    recvs[ch] += 1;
                 }
                 TraceOp::RoiPush { .. } => roi_depth += 1,
                 TraceOp::RoiPop => {
@@ -186,7 +186,9 @@ fn compiled_random_mappings_are_self_consistent_and_run() {
     miniprop::check("compile/self-consistent-and-deadlock-free", 0xA171E5, |rng| {
         let (graph, blocks, input, output) = random_graph(rng);
         let mapping = random_mapping(rng, &blocks, input, output);
-        let n_inf = 1 + rng.below(3) as u32;
+        // Straddle the looped-encoding threshold (>= 10 inferences store
+        // the steady state in a Rep segment).
+        let n_inf = 1 + rng.below(14) as u32;
         let w = compile(&graph, &mapping, n_inf).expect("generated mapping must be valid");
         check_self_consistent(&w);
         // Runs to completion (a deadlock panics inside the machine).

@@ -1,0 +1,255 @@
+//! The fast-forward equivalence gate: steady-state fast-forward must
+//! produce **bit-identical** `RunStats` to full op-by-op replay — for
+//! every paper workload case (MLP / LSTM / CNN / transformer) and for
+//! random multi-core trace programs with channels, mutexes and tiles
+//! (the `machine-fastforward-equivalence` property). CI runs this file
+//! as part of the determinism gate.
+
+use alpine::config::{SystemConfig, SystemKind};
+use alpine::isa::InstClass;
+use alpine::nn::CnnVariant;
+use alpine::sim::machine::{ChannelSpec, Machine, MachineSpec, TileSpec};
+use alpine::sim::{Coupling, Placement};
+use alpine::stats::RunStats;
+use alpine::util::miniprop;
+use alpine::util::rng::Rng;
+use alpine::workload::cnn::{self, CnnCase};
+use alpine::workload::lstm::{self, LstmCase};
+use alpine::workload::mlp::{self, MlpCase};
+use alpine::workload::trace::{TraceBuilder, TraceOp};
+use alpine::workload::transformer::{self, TransformerCase, TransformerShape};
+use alpine::workload::Workload;
+
+// The exhaustive field-destructuring comparison lives on RunStats
+// itself (`assert_bit_identical`), so a future stats field cannot be
+// silently excluded from this gate.
+
+/// Run a compiled workload with fast-forward on/off; returns the stats
+/// and the number of closed-form jumps taken.
+fn run_with(cfg: &SystemConfig, w: &Workload, ff: bool) -> (RunStats, u32) {
+    let mut m = Machine::new(cfg.clone(), w.spec.clone());
+    m.set_fast_forward(ff);
+    let rs = m.run(w.traces.clone());
+    (rs, m.fast_forward_jumps())
+}
+
+fn check_case(cfg: &SystemConfig, w: &Workload) -> u32 {
+    let (fast, jumps) = run_with(cfg, w, true);
+    let (reference, ref_jumps) = run_with(cfg, w, false);
+    assert_eq!(ref_jumps, 0, "{}: knob off must fully replay", w.label);
+    fast.assert_bit_identical(&reference, &w.label);
+    jumps
+}
+
+#[test]
+fn mlp_cases_fastforward_bit_identical() {
+    let cfg = SystemConfig::high_power();
+    let mut total_jumps = 0;
+    for case in [
+        MlpCase::Digital { cores: 1 },
+        MlpCase::Digital { cores: 2 },
+        MlpCase::Digital { cores: 4 },
+        MlpCase::Analog { case: 1 },
+        MlpCase::Analog { case: 2 },
+        MlpCase::Analog { case: 3 },
+        MlpCase::Analog { case: 4 },
+        MlpCase::AnalogLoose,
+    ] {
+        let w = mlp::generate(case, &cfg, 24).unwrap();
+        let jumps = check_case(&cfg, &w);
+        if case == (MlpCase::Digital { cores: 1 }) {
+            assert!(jumps >= 1, "{}: fast-forward never engaged", w.label);
+        }
+        total_jumps += jumps;
+    }
+    assert!(total_jumps >= 1, "no MLP case fast-forwarded at all");
+}
+
+#[test]
+fn lstm_cases_fastforward_bit_identical() {
+    let cfg = SystemConfig::high_power();
+    for case in [
+        LstmCase::Digital { cores: 1 },
+        LstmCase::Digital { cores: 2 },
+        LstmCase::Digital { cores: 5 },
+        LstmCase::Analog { case: 1 },
+        LstmCase::Analog { case: 2 },
+        LstmCase::Analog { case: 3 },
+        LstmCase::Analog { case: 4 },
+    ] {
+        let w = lstm::generate(case, 256, &cfg, 16).unwrap();
+        check_case(&cfg, &w);
+    }
+    // One larger size on the low-power system for coverage.
+    let lp = SystemConfig::for_kind(SystemKind::LowPower);
+    let w = lstm::generate(LstmCase::Analog { case: 3 }, 512, &lp, 16).unwrap();
+    check_case(&lp, &w);
+}
+
+#[test]
+fn cnn_cases_fastforward_bit_identical() {
+    let cfg = SystemConfig::high_power();
+    for case in [CnnCase::Digital, CnnCase::Analog] {
+        let w = cnn::generate(case, CnnVariant::Fast, &cfg, 12).unwrap();
+        check_case(&cfg, &w);
+    }
+}
+
+#[test]
+fn transformer_cases_fastforward_bit_identical() {
+    let cfg = SystemConfig::high_power();
+    let shape = TransformerShape::new(64, 2, 16, 1, 128).unwrap();
+    for case in [TransformerCase::Digital, TransformerCase::Analog] {
+        let w = transformer::generate(shape, case, 24).unwrap();
+        check_case(&cfg, &w);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property: random multi-core looped workloads
+// ---------------------------------------------------------------------
+
+/// Abstract per-iteration op recipe — generated once per core so every
+/// `Rep` iteration emits the same op skeleton (only addresses may
+/// advance with the iteration index).
+#[derive(Clone, Copy)]
+enum RecipeOp {
+    Compute { insts: u64 },
+    /// Fixed-address stream (weights-like: re-read every iteration).
+    StreamFixed { base: u64, bytes: u64, write: bool },
+    /// Fresh per-iteration stream (inputs/outputs-like: base advances).
+    StreamFresh { base: u64, bytes: u64, stride: u64, write: bool },
+    /// queue -> process -> dequeue on the core-private tile.
+    Tile { bytes: u64 },
+    /// lock -> short burst -> unlock on the shared mutex.
+    Mutex { insts: u64 },
+}
+
+fn emit_recipe(b: &mut TraceBuilder, core: usize, ops: &[RecipeOp], k: u32) {
+    for op in ops {
+        match *op {
+            RecipeOp::Compute { insts } => {
+                b.compute(InstClass::IntAlu, insts);
+            }
+            RecipeOp::StreamFixed { base, bytes, write } => {
+                if write {
+                    b.stream_write(base, bytes, 2);
+                } else {
+                    b.stream_read(base, bytes, 2);
+                }
+            }
+            RecipeOp::StreamFresh { base, bytes, stride, write } => {
+                let at = base + k as u64 * stride;
+                if write {
+                    b.stream_write(at, bytes, 2);
+                } else {
+                    b.stream_read(at, bytes, 2);
+                }
+            }
+            RecipeOp::Tile { bytes } => {
+                b.push(TraceOp::CmQueue { tile: core, bytes });
+                b.push(TraceOp::CmProcess { tile: core });
+                b.push(TraceOp::CmDequeue { tile: core, bytes });
+            }
+            RecipeOp::Mutex { insts } => {
+                b.push(TraceOp::MutexLock { id: 0 });
+                b.compute(InstClass::SimdOp, insts);
+                b.push(TraceOp::MutexUnlock { id: 0 });
+            }
+        }
+    }
+}
+
+fn random_recipe(rng: &mut Rng, core: usize, with_tile: bool) -> Vec<RecipeOp> {
+    let n = 1 + rng.below(4) as usize;
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        ops.push(match rng.below(if with_tile { 5 } else { 4 }) {
+            0 => RecipeOp::Compute { insts: 200 + rng.below(4000) },
+            1 => RecipeOp::StreamFixed {
+                base: 0x1000_0000 + core as u64 * 0x0400_0000 + rng.below(8) * 0x1_0000,
+                bytes: (1 + rng.below(64)) * 64,
+                write: rng.below(4) == 0,
+            },
+            2 => RecipeOp::StreamFresh {
+                base: 0x8000_0000 + core as u64 * 0x1000_0000,
+                bytes: (1 + rng.below(32)) * 64,
+                stride: (1 + rng.below(64)) * 64,
+                write: rng.below(2) == 0,
+            },
+            3 => RecipeOp::Mutex { insts: 50 + rng.below(500) },
+            _ => RecipeOp::Tile { bytes: 1 + rng.below(256) },
+        });
+    }
+    ops
+}
+
+/// Random multi-core pipelines (chain of channels, shared mutex,
+/// core-private tiles, fixed + per-iteration-fresh streams) must
+/// simulate bit-identically with fast-forward on and off.
+#[test]
+fn machine_fastforward_equivalence() {
+    miniprop::check("machine-fastforward-equivalence", 0xFF_2024, |rng| {
+        let n_cores = 2 + rng.below(2) as usize; // 2..3
+        let iters = 16 + rng.below(48) as u32;
+        let with_tiles = rng.below(2) == 0;
+        let spec = MachineSpec {
+            tiles: if with_tiles {
+                (0..n_cores)
+                    .map(|_| TileSpec { rows: 256, cols: 256, coupling: Coupling::Tight })
+                    .collect()
+            } else {
+                Vec::new()
+            },
+            mutexes: 1,
+            channels: (0..n_cores - 1)
+                .map(|c| ChannelSpec { producer: c, consumer: c + 1, capacity: 2 })
+                .collect(),
+        };
+        let msg_bytes: Vec<u64> = (0..n_cores - 1).map(|_| (1 + rng.below(16)) * 64).collect();
+
+        let mut traces = Vec::with_capacity(n_cores);
+        for core in 0..n_cores {
+            let recipe = random_recipe(rng, core, with_tiles);
+            let mut b = TraceBuilder::new();
+            if with_tiles {
+                b.push(TraceOp::CmInit {
+                    tile: core,
+                    placement: Placement { row0: 0, col0: 0, rows: 256, cols: 256 },
+                });
+            }
+            // Optional non-looped prologue.
+            if rng.below(2) == 0 {
+                b.compute(InstClass::IntAlu, 100 + rng.below(2000));
+            }
+            let recv_ch = core.checked_sub(1);
+            let send_ch = (core + 1 < n_cores).then_some(core);
+            let bytes = msg_bytes.clone();
+            b.repeat(iters, |b, k| {
+                if let Some(ch) = recv_ch {
+                    b.push(TraceOp::Recv { ch });
+                }
+                emit_recipe(b, core, &recipe, k);
+                if let Some(ch) = send_ch {
+                    // Fixed buffer address: iteration-invariant and
+                    // therefore affine-encodable.
+                    b.push(TraceOp::Send {
+                        ch,
+                        bytes: bytes[ch],
+                        addr: 0xB000_0000 + ch as u64 * 0x0010_0000,
+                    });
+                }
+            });
+            traces.push(b.build_trace());
+        }
+
+        let run = |ff: bool| {
+            let mut m = Machine::new(SystemConfig::high_power(), spec.clone());
+            m.set_fast_forward(ff);
+            m.run(traces.clone())
+        };
+        let fast = run(true);
+        let reference = run(false);
+        fast.assert_bit_identical(&reference, "machine-fastforward-equivalence");
+    });
+}

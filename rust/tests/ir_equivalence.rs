@@ -41,16 +41,18 @@ fn hp() -> SystemConfig {
     SystemConfig::high_power()
 }
 
-/// Traces + spec, op by op (per-op compare keeps failure output small
-/// even on multi-megaop CNN traces).
+/// Traces + spec, op by op on the *flattened* form (the compiler stores
+/// looped `Rep` programs; the oracle generators emit flat streams — the
+/// per-op compare keeps failure output small even on multi-megaop CNN
+/// traces).
 fn assert_workloads_identical(oracle: &Workload, compiled: &Workload) {
     assert_eq!(compiled.label, oracle.label, "label");
     assert_eq!(compiled.inferences, oracle.inferences, "{}", oracle.label);
     assert_eq!(compiled.spec, oracle.spec, "{}: MachineSpec differs", oracle.label);
     assert_eq!(compiled.traces.len(), oracle.traces.len(), "{}: core count", oracle.label);
     for (core, (a, b)) in oracle.traces.iter().zip(&compiled.traces).enumerate() {
-        assert_eq!(a.len(), b.len(), "{} core {core}: op count", oracle.label);
-        for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(a.op_count(), b.op_count(), "{} core {core}: op count", oracle.label);
+        for (k, (x, y)) in a.iter_ops().zip(b.iter_ops()).enumerate() {
             assert_eq!(x, y, "{} core {core} op {k}", oracle.label);
         }
     }
@@ -112,6 +114,56 @@ fn cnn_traces_bit_identical_to_legacy() {
             assert_workloads_identical(&oracle, &compiled);
         }
     }
+}
+
+/// At inference counts past the loop threshold the compiler stores the
+/// per-inference block once inside a `Rep`; its flattened stream must
+/// still reproduce the legacy unrolled emission exactly.
+#[test]
+fn looped_traces_flatten_to_legacy_unrolled_form() {
+    const N: u32 = 12; // past the warm-up + 4-pair loop threshold
+    for case in MLP_CASES {
+        let oracle = legacy::mlp::generate(case, &hp(), N);
+        let compiled = mlp::generate(case, &hp(), N).unwrap();
+        assert!(
+            compiled.stored_ops() < compiled.total_ops(),
+            "{}: expected a looped trace at {N} inferences",
+            compiled.label
+        );
+        assert_workloads_identical(&oracle, &compiled);
+    }
+    for case in LSTM_CASES {
+        let oracle = legacy::lstm::generate(case, 256, &hp(), N);
+        let compiled = lstm::generate(case, 256, &hp(), N).unwrap();
+        assert!(compiled.stored_ops() < compiled.total_ops(), "{}", compiled.label);
+        assert_workloads_identical(&oracle, &compiled);
+    }
+    for case in [CnnCase::Digital, CnnCase::Analog] {
+        let oracle = legacy::cnn::generate(case, CnnVariant::Fast, &hp(), 10);
+        let compiled = cnn::generate(case, CnnVariant::Fast, &hp(), 10).unwrap();
+        assert!(compiled.stored_ops() < compiled.total_ops(), "{}", compiled.label);
+        assert_workloads_identical(&oracle, &compiled);
+    }
+}
+
+/// Looped compiled traces must also *simulate* bit-identically to the
+/// legacy flat oracle (fast-forward enabled, as in production sweeps).
+#[test]
+fn looped_runstats_bit_identical_to_legacy() {
+    const N: u32 = 12;
+    for case in [
+        MlpCase::Digital { cores: 1 },
+        MlpCase::Digital { cores: 4 },
+        MlpCase::Analog { case: 3 },
+        MlpCase::AnalogLoose,
+    ] {
+        let oracle = legacy::mlp::generate(case, &hp(), N);
+        let compiled = mlp::generate(case, &hp(), N).unwrap();
+        assert_stats_identical(SystemKind::HighPower, oracle, compiled);
+    }
+    let oracle = legacy::lstm::generate(LstmCase::Analog { case: 4 }, 512, &hp(), N);
+    let compiled = lstm::generate(LstmCase::Analog { case: 4 }, 512, &hp(), N).unwrap();
+    assert_stats_identical(SystemKind::HighPower, oracle, compiled);
 }
 
 #[test]
