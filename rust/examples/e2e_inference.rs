@@ -56,11 +56,15 @@ fn main() -> Result<()> {
     // packs up to 8 requests per execution.
     let t0 = std::time::Instant::now();
     let (responses, stats) = server::serve_batched(&analog, requests.clone(), 8, dim)?;
+    let pcts = stats.percentiles(&[50.0, 95.0, 99.0]);
     println!(
-        "\nserved {} requests in {:?}: mean latency {:?}, max {:?}, {:.0} req/s, mean batch {:.1}",
+        "\nserved {} requests in {:?}: mean latency {:?} (p50 {:?} / p95 {:?} / p99 {:?}, max {:?}), {:.0} req/s, mean batch {:.1}",
         stats.requests,
         t0.elapsed(),
         stats.mean_latency(),
+        pcts[0],
+        pcts[1],
+        pcts[2],
         stats.max_latency,
         stats.throughput_rps(),
         stats.mean_batch()

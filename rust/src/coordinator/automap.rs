@@ -13,7 +13,7 @@
 use crate::config::{SystemConfig, SystemKind};
 use crate::nn::LayerGraph;
 use crate::util::parallel;
-use crate::workload::automap::{self, Candidate, TopologyBudget};
+use crate::workload::automap::{self, Candidate, CostModel, SearchOptions, TopologyBudget};
 use crate::workload::{compile, WorkloadError};
 
 use super::{run_workload, CaseResult};
@@ -24,13 +24,31 @@ pub struct AutomapOptions {
     pub top_k: usize,
     /// Inferences per validation run.
     pub n_inf: u32,
-    /// Worker threads for the validation fan-out.
+    /// Worker threads for the search fan-out and the validation fan-out.
     pub jobs: usize,
+    /// Cost engine used to rank the space (compositional by default;
+    /// `Compiled` is the full-trace oracle knob).
+    pub model: CostModel,
+    /// `Some(n)`: legacy capped-exhaustive enumeration. `None`:
+    /// branch-and-bound over the whole space.
+    pub cap: Option<usize>,
+    /// Deepest pipeline partition searched (1..=8).
+    pub depth: usize,
+    /// Largest column-replication factor searched (of {1, 2, 4, 8}).
+    pub max_replica: usize,
 }
 
 impl Default for AutomapOptions {
     fn default() -> AutomapOptions {
-        AutomapOptions { top_k: 8, n_inf: 5, jobs: 1 }
+        AutomapOptions {
+            top_k: 8,
+            n_inf: 5,
+            jobs: 1,
+            model: CostModel::Compositional,
+            cap: None,
+            depth: 8,
+            max_replica: 8,
+        }
     }
 }
 
@@ -49,6 +67,8 @@ pub struct AutomapRow {
 
 pub struct AutomapReport {
     pub enumerated: usize,
+    /// Candidates skipped by branch-and-bound lower bounds.
+    pub pruned: usize,
     pub feasible: usize,
     pub truncated: bool,
     pub rows: Vec<AutomapRow>,
@@ -92,7 +112,19 @@ pub fn run_search(
             cfg.num_cores
         )));
     }
-    let outcome = automap::search(graph, budget, &cfg, opts.top_k)?;
+    let outcome = automap::search_opts(
+        graph,
+        budget,
+        &cfg,
+        &SearchOptions {
+            top_k: opts.top_k,
+            model: opts.model,
+            cap: opts.cap,
+            max_depth: opts.depth,
+            max_replica: opts.max_replica,
+            jobs: opts.jobs,
+        },
+    )?;
     let (base_mapping, base_desc) = automap::digital_baseline(graph)?;
 
     let mut cands = outcome.ranked;
@@ -145,6 +177,7 @@ pub fn run_search(
 
     Ok(AutomapReport {
         enumerated: outcome.enumerated,
+        pruned: outcome.pruned,
         feasible: outcome.feasible,
         truncated: outcome.truncated,
         rows,

@@ -34,6 +34,10 @@ pub struct ServerStats {
     pub total_latency: Duration,
     pub max_latency: Duration,
     pub wall: Duration,
+    /// Per-request latency samples, completion order (sorted on demand
+    /// by [`ServerStats::percentile`] — a mean/max pair hides tail
+    /// behaviour, and serving SLOs are stated in percentiles).
+    pub latencies: Vec<Duration>,
 }
 
 impl ServerStats {
@@ -43,6 +47,40 @@ impl ServerStats {
         } else {
             self.total_latency / self.requests as u32
         }
+    }
+
+    /// Nearest-rank latency percentiles (each `p` in 0..=100) over the
+    /// recorded samples — one sort serves every requested rank;
+    /// `Duration::ZERO` entries when nothing was served.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<Duration> {
+        if self.latencies.is_empty() {
+            return vec![Duration::ZERO; ps.len()];
+        }
+        let mut sorted = self.latencies.clone();
+        sorted.sort_unstable();
+        ps.iter()
+            .map(|&p| {
+                let rank = ((p.clamp(0.0, 100.0) / 100.0) * sorted.len() as f64).ceil() as usize;
+                sorted[rank.clamp(1, sorted.len()) - 1]
+            })
+            .collect()
+    }
+
+    /// Nearest-rank latency percentile (`p` in 0..=100).
+    pub fn percentile(&self, p: f64) -> Duration {
+        self.percentiles(&[p])[0]
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> Duration {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> Duration {
+        self.percentile(99.0)
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -131,6 +169,7 @@ pub fn serve_batched(
             stats.requests += 1;
             stats.total_latency += latency;
             stats.max_latency = stats.max_latency.max(latency);
+            stats.latencies.push(latency);
             responses.push(Response {
                 output: out[k * per_out..(k + 1) * per_out].to_vec(),
                 latency,
@@ -156,6 +195,7 @@ mod tests {
             total_latency: Duration::from_millis(100),
             max_latency: Duration::from_millis(30),
             wall: Duration::from_millis(500),
+            latencies: Vec::new(),
         };
         assert_eq!(s.mean_latency(), Duration::from_millis(10));
         assert!((s.throughput_rps() - 20.0).abs() < 1e-9);
@@ -168,5 +208,29 @@ mod tests {
         assert_eq!(s.mean_latency(), Duration::ZERO);
         assert_eq!(s.throughput_rps(), 0.0);
         assert_eq!(s.mean_batch(), 0.0);
+        assert_eq!(s.p50(), Duration::ZERO);
+        assert_eq!(s.p99(), Duration::ZERO);
+    }
+
+    #[test]
+    fn percentiles_are_nearest_rank_over_unsorted_samples() {
+        // 1..=100 ms, shuffled-ish insertion order: p50 = 50 ms,
+        // p95 = 95 ms, p99 = 99 ms, p100 = max.
+        let mut s = ServerStats::default();
+        for ms in (1..=100u64).rev() {
+            s.latencies.push(Duration::from_millis(ms));
+        }
+        assert_eq!(s.p50(), Duration::from_millis(50));
+        assert_eq!(s.p95(), Duration::from_millis(95));
+        assert_eq!(s.p99(), Duration::from_millis(99));
+        assert_eq!(s.percentile(100.0), Duration::from_millis(100));
+        // Tiny sample sets stay in range.
+        let mut t = ServerStats::default();
+        t.latencies.push(Duration::from_millis(7));
+        assert_eq!(t.p50(), Duration::from_millis(7));
+        assert_eq!(t.p99(), Duration::from_millis(7));
+        // Degenerate percentile arguments clamp instead of panicking.
+        assert_eq!(t.percentile(0.0), Duration::from_millis(7));
+        assert_eq!(t.percentile(250.0), Duration::from_millis(7));
     }
 }

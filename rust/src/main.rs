@@ -17,7 +17,7 @@ use alpine::report;
 use alpine::runtime::{default_artifacts_dir, Runtime};
 use alpine::util::parallel;
 use alpine::util::table::Table;
-use alpine::workload::automap::TopologyBudget;
+use alpine::workload::automap::{CostModel, TopologyBudget};
 use alpine::workload::cnn::{self, CnnCase};
 use alpine::workload::lstm::{self, LstmCase};
 use alpine::workload::mlp::{self, CustomMlpMapping, MlpCase, MlpShape};
@@ -144,10 +144,14 @@ fn print_help() {
          \x20 automap --shape AxBxC | --d-model N [--heads N] [--seq N]\n\
          \x20     [--layers N] [--d-ff N] [--cores N] [--tiles N]\n\
          \x20     [--tile-dims RxC] [--channels N] [--top K]\n\
+         \x20     [--depth N] [--max-replica N] [--cap N]\n\
+         \x20     [--cost-model compositional|compiled]\n\
          \x20     [--system hp|lp] [--inferences N]\n\
-         \x20                          search the mapping space, validate\n\
-         \x20                          the top-K by simulation, print the\n\
-         \x20                          Pareto front on (cycles, energy)\n\
+         \x20                          search the mapping space (lazy\n\
+         \x20                          branch-and-bound, uncapped unless\n\
+         \x20                          --cap), validate the top-K by\n\
+         \x20                          simulation, print the Pareto front\n\
+         \x20                          on (cycles, energy)\n\
          \x20 transformer [--d-model N] [--heads N] [--seq N] [--layers N]\n\
          \x20     [--d-ff N] [--system hp|lp] [--inferences N]\n\
          \x20                          sweep the transformer-encoder hand\n\
@@ -351,15 +355,46 @@ fn cmd_automap(args: &[String]) -> Result<()> {
         bail!("--cores expects a number >= 1");
     }
 
+    let model = match opt(args, "--cost-model").as_deref() {
+        None | Some("compositional") => CostModel::Compositional,
+        Some("compiled") => CostModel::Compiled,
+        Some(other) => bail!("bad --cost-model {other:?} (compositional|compiled)"),
+    };
+    let cap = match opt(args, "--cap") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => Some(n),
+            _ => bail!("--cap expects a number >= 1"),
+        },
+        None => None,
+    };
     let opts = AutomapOptions {
         top_k: opt_u32(args, "--top", 8)? as usize,
         n_inf: opt_u32(args, "--inferences", 5)?,
         jobs: parallel::jobs(),
+        model,
+        cap,
+        depth: opt_u32(args, "--depth", 8)? as usize,
+        max_replica: opt_u32(args, "--max-replica", 8)? as usize,
     };
+    println!(
+        "automap: searching {} (depth 1..{}, replication <= {}, {} cost model, {}) ...",
+        graph.name,
+        opts.depth,
+        opts.max_replica,
+        match opts.model {
+            CostModel::Compositional => "compositional",
+            CostModel::Compiled => "compiled-oracle",
+        },
+        match opts.cap {
+            Some(c) => format!("capped at {c}"),
+            None => "branch-and-bound, uncapped".into(),
+        },
+    );
     let rep = automap_driver::run_search(&graph, &budget, system, opts)?;
     println!(
-        "automap: {} candidates enumerated, {} feasible{}; validated {} by simulation on {}",
+        "automap: {} candidates enumerated / {} pruned by bounds / {} scored feasible{}; {} simulated on {}",
         rep.enumerated,
+        rep.pruned,
         rep.feasible,
         if rep.truncated { " (space truncated)" } else { "" },
         rep.rows.len(),

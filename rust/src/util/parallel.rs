@@ -118,6 +118,22 @@ where
         .collect()
 }
 
+/// Map `f` over `items` in parallel (order-preserving, like
+/// [`parallel_map`]) and fold the results **in input order** into
+/// `init` with `merge`. Because the fold order is the input order, the
+/// reduction is bit-identical to the serial path for any merge
+/// function, associative or not — the primitive the automap
+/// branch-and-bound fan-out merges partition-subtree results with.
+pub fn parallel_reduce<T, R, A, F, M>(items: Vec<T>, jobs: usize, init: A, f: F, mut merge: M) -> A
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+    M: FnMut(A, R) -> A,
+{
+    parallel_map(items, jobs, f).into_iter().fold(init, &mut merge)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,5 +193,18 @@ mod tests {
     #[test]
     fn jobs_is_at_least_one() {
         assert!(jobs() >= 1);
+    }
+
+    #[test]
+    fn reduce_folds_in_input_order() {
+        // A non-associative, non-commutative merge: order mistakes show.
+        let items: Vec<u64> = (1..=32).collect();
+        let expect = items.iter().map(|v| v * 3).fold(String::new(), |acc, v| format!("{acc}/{v}"));
+        for jobs in [1, 4, 16] {
+            let got = parallel_reduce(items.clone(), jobs, String::new(), |v| v * 3, |acc, v| {
+                format!("{acc}/{v}")
+            });
+            assert_eq!(got, expect, "jobs={jobs}");
+        }
     }
 }

@@ -1,24 +1,49 @@
-//! The fast analytic cost model that prunes the mapping space.
+//! The fast analytic cost models that prune the mapping space.
 //!
-//! Rather than duplicating per-layer formulas (which would drift from
-//! the compiler), the model compiles the candidate to its real trace
-//! (two inferences) and walks the ops with closed-form timing: issue
-//! cycles per instruction class, stream stalls classified by working-set
-//! residency, AIMC I/O at the port throughput, the 100 ns MVM latency on
-//! the dependent dequeue, and the calibrated channel/mutex constants.
-//! No cache state, no event scheduling — O(ops), microseconds per
-//! candidate — while staying within a small factor of the simulator
-//! (pinned by `tests/automap.rs::cost_model_tracks_simulated_cycles`).
+//! Two engines share one set of per-op timing formulas:
+//!
+//! * [`estimate`] — the **oracle**: compiles the candidate to its real
+//!   trace (two inferences) and walks the ops with closed-form timing.
+//!   O(ops) per candidate, exact by construction, but the compile
+//!   dominates large searches.
+//! * [`CostEngine`] — the **compositional** engine: compiles each anchor
+//!   region *in isolation* once per `(anchor, engine, replication)`
+//!   combination (O(anchors x engines x shapes) compiles per search),
+//!   then scores any candidate by composing the cached profiles across
+//!   its pipeline partition, replication factor, and hand-off kind plus
+//!   closed-form boundary terms (channel sends/receives, barrier
+//!   mutexes, shared-buffer acks, CM_INITIALIZE preambles). Because the
+//!   profiles are emitted by the *same* lowering rules the compiler
+//!   uses ([`compile::emit_step`]) and walked by the *same* per-op
+//!   formulas, a composed score covers exactly the op multiset of the
+//!   compiled trace — it differs from the oracle only in f64 summation
+//!   order (sub-ulp), so candidate ranking and the Pareto front agree
+//!   up to exact-tie round-off (gated by `tests/automap.rs`).
+//!
+//! Per-op timing: issue cycles per instruction class, stream stalls
+//! classified by working-set residency, AIMC I/O at the port
+//! throughput, the 100 ns MVM latency on the dependent dequeue, and the
+//! calibrated channel/mutex constants. No cache state, no event
+//! scheduling — microseconds per compiled walk, sub-microsecond per
+//! composed score.
 //!
 //! Pipeline steady-state throughput is the slowest core, so the
 //! per-inference estimate is the max over per-core estimates.
 
 use crate::config::SystemConfig;
-use crate::nn::LayerGraph;
-use crate::sim::aimc::Coupling;
-use crate::workload::compile::{self, mapping::Mapping};
-use crate::workload::trace::TraceOp;
+use crate::nn::{LayerGraph, LayerKind};
+use crate::sim::aimc::{Coupling, Placement};
+use crate::sim::machine::TileSpec;
+use crate::workload::compile::mapping::{Handoff, Mapping, Place, Step, TilePlacement};
+use crate::workload::compile::{self, ACK_BYTES};
+use crate::workload::trace::{TraceBuilder, TraceOp};
 use crate::workload::{addr, costs, WorkloadError};
+
+use super::enumerate::{
+    analog_shape, anchor_replicable, mask_bit, place_shape, stage_layout, AnalogShape, Anchor,
+    CandidateSpec, MvmInfo, Packer,
+};
+use super::TopologyBudget;
 
 /// Analytic per-inference estimate of one mapped workload.
 #[derive(Clone, Debug)]
@@ -38,13 +63,199 @@ const LLC_RESIDENT_FRACTION: f64 = 0.7;
 /// Miss-path overhead beyond the raw DRAM latency (bus frontend/forward
 /// hops), cycles.
 const MISS_OVERHEAD_CYCLES: f64 = 10.0;
+/// Inferences the oracle compiles per candidate (steady-state effects
+/// like shared-buffer acks appear from inference 1 on).
+const N_INF: f64 = 2.0;
 
-/// Estimate one candidate. Compiles the mapping (two inferences, so
-/// steady-state effects like shared-buffer acks are represented) and
-/// walks the traces.
+/// Per-config timing constants shared by both engines.
+#[derive(Clone, Debug)]
+pub(crate) struct Consts {
+    hit_stall: f64,
+    miss_stall: f64,
+    proc_cycles: f64,
+    tight_cyc_per_byte: f64,
+    llc_budget: u64,
+}
+
+impl Consts {
+    pub(crate) fn new(cfg: &SystemConfig) -> Consts {
+        let freq = cfg.freq_hz;
+        let hit_stall = cfg.llc.hit_latency_cycles as f64;
+        Consts {
+            hit_stall,
+            miss_stall: cfg.dram_latency_s * freq + hit_stall + MISS_OVERHEAD_CYCLES,
+            proc_cycles: cfg.aimc.process_latency_s * freq,
+            tight_cyc_per_byte: freq / cfg.aimc.io_throughput_bps,
+            llc_budget: (cfg.llc.size_bytes as f64 * LLC_RESIDENT_FRACTION) as u64,
+        }
+    }
+}
+
+/// A residency-parametric cost accumulator: every op's cycles either
+/// land in `fixed` or in a per-region stall coefficient, so the same
+/// walked profile can be priced under any (weights, kv) residency
+/// outcome. Byte totals stay integral so the residency *classification*
+/// is bit-identical between the oracle and the compositional engine.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct Profile {
+    fixed: f64,
+    w_stall: f64,
+    w_lines: f64,
+    kv_stall: f64,
+    kv_lines: f64,
+    dram_lines: f64,
+    aimc_j: f64,
+    w_bytes: u64,
+    kv_bytes: u64,
+}
+
+impl Profile {
+    /// Fold one trace op (with its `Rep` multiplicity) into the profile.
+    /// `ch_bytes` resolves Recv payloads (a Recv op does not carry the
+    /// message size); profiles emitted from isolated anchor regions
+    /// contain no channel ops and may pass an empty slice.
+    pub(crate) fn absorb(
+        &mut self,
+        op: TraceOp,
+        mult: u64,
+        tiles: &[TileSpec],
+        ch_bytes: &[u64],
+        cfg: &SystemConfig,
+        k: &Consts,
+    ) {
+        let line = 64f64;
+        let multi = mult;
+        let mult = mult as f64;
+        match op {
+            TraceOp::Compute { class, insts } => self.fixed += mult * (insts * class.cycles()) as f64,
+            TraceOp::MemStream { base, bytes, insts_per_line, prefetchable, .. } => {
+                let lines = (bytes as f64 / line).ceil().max(1.0);
+                // Prefetchable streams overlap misses beyond the first.
+                let stall_mult = if prefetchable {
+                    1.0 + (lines - 1.0) / costs::PREFETCH_DEPTH as f64
+                } else {
+                    lines
+                };
+                self.fixed += mult * lines * insts_per_line as f64;
+                if (addr::WEIGHTS..addr::INPUTS).contains(&base) {
+                    self.w_stall += mult * stall_mult;
+                    self.w_lines += mult * lines;
+                    self.w_bytes += multi * bytes;
+                } else if base >= addr::KV {
+                    self.kv_stall += mult * stall_mult;
+                    self.kv_lines += mult * lines;
+                    self.kv_bytes += multi * bytes;
+                } else if (addr::INPUTS..addr::ACTIVATIONS).contains(&base) {
+                    // Fresh per-inference data is always cold.
+                    self.fixed += mult * stall_mult * k.miss_stall;
+                    self.dram_lines += mult * lines;
+                } else {
+                    self.fixed += mult * stall_mult * k.hit_stall;
+                }
+            }
+            TraceOp::CmQueue { tile, bytes } => {
+                self.fixed +=
+                    mult * cm_io_cycles(&tiles[tile].coupling, bytes, cfg, k.tight_cyc_per_byte, 0.0);
+                self.aimc_j += mult * bytes as f64 * cfg.aimc.io_energy_j_per_byte();
+            }
+            TraceOp::CmProcess { tile } => {
+                self.fixed += mult;
+                let t = &tiles[tile];
+                self.aimc_j += mult * cfg.aimc.mvm_energy_j(t.rows, t.cols);
+                if t.coupling == Coupling::Loose {
+                    self.fixed += mult * k.proc_cycles;
+                }
+            }
+            TraceOp::CmDequeue { tile, bytes } => {
+                // The dependent dequeue observes the 100 ns MVM.
+                let wait = if tiles[tile].coupling == Coupling::Tight { k.proc_cycles } else { 0.0 };
+                self.fixed +=
+                    mult * cm_io_cycles(&tiles[tile].coupling, bytes, cfg, k.tight_cyc_per_byte, wait);
+                self.aimc_j += mult * bytes as f64 * cfg.aimc.io_energy_j_per_byte();
+            }
+            TraceOp::Send { bytes, .. } => self.fixed += mult * send_cycles(bytes),
+            TraceOp::Recv { ch } => self.fixed += mult * recv_cycles(ch_bytes[ch], k),
+            TraceOp::MutexLock { .. } => self.fixed += mult * costs::MUTEX_INSTS as f64,
+            TraceOp::MutexUnlock { .. } => self.fixed += mult * costs::MUTEX_INSTS as f64 / 2.0,
+            TraceOp::CmInit { .. } => self.fixed += mult,
+            TraceOp::RoiPush { .. } | TraceOp::RoiPop => {}
+        }
+    }
+
+    pub(crate) fn add(&mut self, o: &Profile) {
+        self.fixed += o.fixed;
+        self.w_stall += o.w_stall;
+        self.w_lines += o.w_lines;
+        self.kv_stall += o.kv_stall;
+        self.kv_lines += o.kv_lines;
+        self.dram_lines += o.dram_lines;
+        self.aimc_j += o.aimc_j;
+        self.w_bytes += o.w_bytes;
+        self.kv_bytes += o.kv_bytes;
+    }
+
+    /// Price the profile under a residency outcome.
+    pub(crate) fn cycles(&self, w_resident: bool, kv_resident: bool, k: &Consts) -> f64 {
+        let w = if w_resident { k.hit_stall } else { k.miss_stall };
+        let kv = if kv_resident { k.hit_stall } else { k.miss_stall };
+        self.fixed + self.w_stall * w + self.kv_stall * kv
+    }
+
+    fn dram(&self, w_resident: bool, kv_resident: bool) -> f64 {
+        let mut d = self.dram_lines;
+        if !w_resident {
+            d += self.w_lines;
+        }
+        if !kv_resident {
+            d += self.kv_lines;
+        }
+        d
+    }
+}
+
+/// One ping-pong channel send of `bytes`.
+fn send_cycles(bytes: u64) -> f64 {
+    costs::CHANNEL_INSTS as f64 + (bytes as f64 / 64.0).ceil() * 2.0
+}
+
+/// One channel receive of a `bytes`-sized message (drained line by line
+/// out of the LLC-resident channel buffer).
+fn recv_cycles(bytes: u64, k: &Consts) -> f64 {
+    costs::CHANNEL_INSTS as f64 + (bytes as f64 / 64.0).ceil() * (1.0 + k.hit_stall / 2.0)
+}
+
+/// Residency classification from per-inference streamed working sets.
+fn residency(weight_bytes: u64, kv_bytes: u64, k: &Consts) -> (bool, bool) {
+    let weights_resident = weight_bytes <= k.llc_budget;
+    let kv_resident =
+        kv_bytes <= k.llc_budget.saturating_sub(if weights_resident { weight_bytes } else { 0 });
+    (weights_resident, kv_resident)
+}
+
+/// Assemble the estimate from per-inference per-core cycles + DRAM/AIMC
+/// totals — the shared back end of both engines.
+fn finish(per_core: Vec<f64>, dram_lines: f64, aimc_j: f64, cfg: &SystemConfig) -> CostEstimate {
+    let cycles_per_inf = per_core.iter().copied().fold(1.0, f64::max);
+    let p = &cfg.power;
+    let active_j: f64 = per_core.iter().map(|c| c * p.active_core_j_per_cycle).sum();
+    let idle_j: f64 = per_core
+        .iter()
+        .map(|c| (cycles_per_inf - c) * p.idle_core_j_per_cycle)
+        .sum::<f64>()
+        + cfg.num_cores.saturating_sub(per_core.len()) as f64
+            * cycles_per_inf
+            * p.idle_core_j_per_cycle;
+    let t_inf_s = cycles_per_inf / cfg.freq_hz;
+    let static_j = (p.mem_ctrl_io_w + p.llc_leakage_w(cfg.llc.size_bytes)) * t_inf_s;
+    let energy_per_inf_j = active_j + idle_j + static_j + dram_lines * p.dram_j_per_access + aimc_j;
+    CostEstimate { cycles_per_inf, per_core_cycles: per_core, energy_per_inf_j }
+}
+
+/// Estimate one candidate through the **oracle** path: compile the
+/// mapping (two inferences) and walk the real traces.
 pub fn estimate(graph: &LayerGraph, mapping: &Mapping, cfg: &SystemConfig) -> Result<CostEstimate, WorkloadError> {
-    const N_INF: f64 = 2.0;
     let w = compile::compile(graph, mapping, N_INF as u32)?;
+    let k = Consts::new(cfg);
 
     // Channel payloads (a Recv op does not carry the message size).
     // Walks visit each stored op once with its `Rep` multiplicity, so
@@ -62,128 +273,29 @@ pub fn estimate(graph: &LayerGraph, mapping: &Mapping, cfg: &SystemConfig) -> Re
         });
     }
 
-    // Residency classification: per-inference streamed working sets.
-    let (mut weight_bytes, mut kv_bytes) = (0u64, 0u64);
-    for trace in &w.traces {
-        trace.for_each_weighted(&mut |op, mult| {
-            if let TraceOp::MemStream { base, bytes, .. } = op {
-                if (addr::WEIGHTS..addr::INPUTS).contains(&base) {
-                    weight_bytes += mult * bytes;
-                } else if base >= addr::KV {
-                    kv_bytes += mult * bytes;
-                }
-            }
-        });
-    }
-    weight_bytes = (weight_bytes as f64 / N_INF) as u64;
-    kv_bytes = (kv_bytes as f64 / N_INF) as u64;
-    let llc_budget = (cfg.llc.size_bytes as f64 * LLC_RESIDENT_FRACTION) as u64;
-    let weights_resident = weight_bytes <= llc_budget;
-    let kv_resident =
-        kv_bytes <= llc_budget.saturating_sub(if weights_resident { weight_bytes } else { 0 });
-
-    let freq = cfg.freq_hz;
-    let line = 64f64;
-    let hit_stall = cfg.llc.hit_latency_cycles as f64;
-    let miss_stall = cfg.dram_latency_s * freq + hit_stall + MISS_OVERHEAD_CYCLES;
-    let proc_cycles = cfg.aimc.process_latency_s * freq;
-    let tight_cyc_per_byte = freq / cfg.aimc.io_throughput_bps;
-
-    let mut per_core: Vec<f64> = Vec::with_capacity(w.traces.len());
-    let mut dram_lines = 0f64;
-    let mut aimc_j = 0f64;
-    for trace in &w.traces {
-        let mut cyc = 0f64;
-        // Per-op costs are position-independent, so walking one `Rep`
-        // period and multiplying by its count is exactly the flattened
-        // walk — O(stored ops), not O(executed ops).
-        trace.for_each_weighted(&mut |op, mult| {
-            let mult = mult as f64;
-            match op {
-                TraceOp::Compute { class, insts } => cyc += mult * (insts * class.cycles()) as f64,
-                TraceOp::MemStream { base, bytes, insts_per_line, prefetchable, .. } => {
-                    let lines = (bytes as f64 / line).ceil().max(1.0);
-                    let stall = if (addr::WEIGHTS..addr::INPUTS).contains(&base) {
-                        if weights_resident {
-                            hit_stall
-                        } else {
-                            dram_lines += mult * lines;
-                            miss_stall
-                        }
-                    } else if base >= addr::KV {
-                        if kv_resident {
-                            hit_stall
-                        } else {
-                            dram_lines += mult * lines;
-                            miss_stall
-                        }
-                    } else if (addr::INPUTS..addr::ACTIVATIONS).contains(&base) {
-                        // Fresh per-inference data is always cold.
-                        dram_lines += mult * lines;
-                        miss_stall
-                    } else {
-                        hit_stall
-                    };
-                    let stall_total = if prefetchable {
-                        stall + (lines - 1.0) * stall / costs::PREFETCH_DEPTH as f64
-                    } else {
-                        lines * stall
-                    };
-                    cyc += mult * (lines * insts_per_line as f64 + stall_total);
-                }
-                TraceOp::CmQueue { tile, bytes } => {
-                    cyc += mult
-                        * cm_io_cycles(&w.spec.tiles[tile].coupling, bytes, cfg, tight_cyc_per_byte, 0.0);
-                    aimc_j += mult * bytes as f64 * cfg.aimc.io_energy_j_per_byte();
-                }
-                TraceOp::CmProcess { tile } => {
-                    cyc += mult;
-                    let t = &w.spec.tiles[tile];
-                    aimc_j += mult * cfg.aimc.mvm_energy_j(t.rows, t.cols);
-                    if t.coupling == Coupling::Loose {
-                        cyc += mult * proc_cycles;
-                    }
-                }
-                TraceOp::CmDequeue { tile, bytes } => {
-                    // The dependent dequeue observes the 100 ns MVM.
-                    let wait = if w.spec.tiles[tile].coupling == Coupling::Tight { proc_cycles } else { 0.0 };
-                    cyc += mult
-                        * cm_io_cycles(&w.spec.tiles[tile].coupling, bytes, cfg, tight_cyc_per_byte, wait);
-                    aimc_j += mult * bytes as f64 * cfg.aimc.io_energy_j_per_byte();
-                }
-                TraceOp::Send { bytes, .. } => {
-                    cyc += mult * (costs::CHANNEL_INSTS as f64 + (bytes as f64 / line).ceil() * 2.0);
-                }
-                TraceOp::Recv { ch } => {
-                    let lines = (ch_bytes[ch] as f64 / line).ceil();
-                    cyc += mult * (costs::CHANNEL_INSTS as f64 + lines * (1.0 + hit_stall / 2.0));
-                }
-                TraceOp::MutexLock { .. } => cyc += mult * costs::MUTEX_INSTS as f64,
-                TraceOp::MutexUnlock { .. } => cyc += mult * costs::MUTEX_INSTS as f64 / 2.0,
-                TraceOp::CmInit { .. } => cyc += mult,
-                TraceOp::RoiPush { .. } | TraceOp::RoiPop => {}
-            }
-        });
-        per_core.push(cyc / N_INF);
-    }
-    dram_lines /= N_INF;
-    aimc_j /= N_INF;
-
-    let cycles_per_inf = per_core.iter().copied().fold(1.0, f64::max);
-    let p = &cfg.power;
-    let active_j: f64 = per_core.iter().map(|c| c * p.active_core_j_per_cycle).sum();
-    let idle_j: f64 = per_core
+    // Per-op costs are position-independent, so walking one `Rep`
+    // period and multiplying by its count is exactly the flattened
+    // walk — O(stored ops), not O(executed ops).
+    let profiles: Vec<Profile> = w
+        .traces
         .iter()
-        .map(|c| (cycles_per_inf - c) * p.idle_core_j_per_cycle)
-        .sum::<f64>()
-        + cfg.num_cores.saturating_sub(per_core.len()) as f64
-            * cycles_per_inf
-            * p.idle_core_j_per_cycle;
-    let t_inf_s = cycles_per_inf / freq;
-    let static_j = (p.mem_ctrl_io_w + p.llc_leakage_w(cfg.llc.size_bytes)) * t_inf_s;
-    let energy_per_inf_j = active_j + idle_j + static_j + dram_lines * p.dram_j_per_access + aimc_j;
+        .map(|trace| {
+            let mut p = Profile::default();
+            trace.for_each_weighted(&mut |op, mult| {
+                p.absorb(op, mult, &w.spec.tiles, &ch_bytes, cfg, &k);
+            });
+            p
+        })
+        .collect();
 
-    Ok(CostEstimate { cycles_per_inf, per_core_cycles: per_core, energy_per_inf_j })
+    let weight_bytes = (profiles.iter().map(|p| p.w_bytes).sum::<u64>() as f64 / N_INF) as u64;
+    let kv_bytes = (profiles.iter().map(|p| p.kv_bytes).sum::<u64>() as f64 / N_INF) as u64;
+    let (w_res, kv_res) = residency(weight_bytes, kv_bytes, &k);
+
+    let per_core: Vec<f64> = profiles.iter().map(|p| p.cycles(w_res, kv_res, &k) / N_INF).collect();
+    let dram_lines = profiles.iter().map(|p| p.dram(w_res, kv_res)).sum::<f64>() / N_INF;
+    let aimc_j = profiles.iter().map(|p| p.aimc_j).sum::<f64>() / N_INF;
+    Ok(finish(per_core, dram_lines, aimc_j, cfg))
 }
 
 /// Cycles of one CM_QUEUE/CM_DEQUEUE: the beat issue overlaps the device
@@ -205,6 +317,387 @@ fn cm_io_cycles(
         }
     };
     active.max(extra_wait + transfer)
+}
+
+// ---------------------------------------------------------------------------
+// Compositional engine
+// ---------------------------------------------------------------------------
+
+/// Cached profile of one `(anchor, engine, replication)` combination:
+/// the walked cost of the anchor's steps emitted in isolation, plus the
+/// CM_INITIALIZE preamble ops the compiler would add for its tiles.
+#[derive(Clone, Copy, Debug)]
+struct AnchorProfile {
+    prof: Profile,
+    cminit: f64,
+}
+
+struct AnchorCosts {
+    dig: Vec<Option<AnchorProfile>>,
+    ana: Vec<Option<AnchorProfile>>,
+    /// Admissible per-anchor cycle floors (best-case residency, best
+    /// engine/replication) for branch-and-bound lower bounds.
+    min_any: f64,
+    min_dig: f64,
+    min_ana: f64,
+}
+
+/// The compositional cost engine of one `(graph, budget, config)`
+/// search: all per-anchor profiles, the boundary-phase profiles, and the
+/// admissible lower-bound tables.
+pub(crate) struct CostEngine {
+    cfg: SystemConfig,
+    k: Consts,
+    budget: TopologyBudget,
+    replica_opts: Vec<usize>,
+    anchors_cost: Vec<AnchorCosts>,
+    input_prof: Profile,
+    /// Writeback profile per replica-option index (last stage only).
+    wb_prof: Vec<Profile>,
+    /// Admissible energy floor per estimated cycle (idle fleet + static).
+    floor_rate: f64,
+}
+
+impl CostEngine {
+    /// Build the engine: one isolated-region compile + walk per
+    /// `(anchor, engine, replication)` combination — O(anchors x
+    /// engines x shapes), independent of how many candidates are
+    /// scored.
+    pub(crate) fn new(
+        graph: &LayerGraph,
+        anchors: &[Anchor],
+        input_node: usize,
+        output_node: usize,
+        budget: &TopologyBudget,
+        cfg: &SystemConfig,
+        replica_opts: &[usize],
+    ) -> CostEngine {
+        let k = Consts::new(cfg);
+        // All automap tiles are budget-dimension, tightly coupled; the
+        // profile walker only reads coupling + full-tile dims, so one
+        // dummy tile stands in for any packing outcome.
+        let dummy_tiles =
+            vec![TileSpec { rows: budget.tile_rows, cols: budget.tile_cols, coupling: Coupling::Tight }];
+        let walk = |ops: Vec<TraceOp>| -> Profile {
+            let mut p = Profile::default();
+            for op in ops {
+                p.absorb(op, 1, &dummy_tiles, &[], cfg, &k);
+            }
+            p
+        };
+
+        let anchors_cost: Vec<AnchorCosts> = anchors
+            .iter()
+            .map(|a| {
+                let mut dig: Vec<Option<AnchorProfile>> = Vec::with_capacity(replica_opts.len());
+                let mut ana: Vec<Option<AnchorProfile>> = Vec::with_capacity(replica_opts.len());
+                for &r in replica_opts {
+                    // A profile exists for every replication the anchor
+                    // could run under inside SOME stage. This is the
+                    // per-anchor half of `stage_parts` only — the
+                    // stage-level out-width condition applies to a
+                    // stage's *last* anchor, which need not be this one.
+                    let usable = r == 1 || anchor_replicable(a, r as u64);
+                    dig.push(if usable {
+                        Some(AnchorProfile {
+                            prof: walk(emit_anchor(graph, a, false, r as u64, budget)
+                                .expect("digital lowering is always expressible")),
+                            cminit: 0.0,
+                        })
+                    } else {
+                        None
+                    });
+                    ana.push(if usable && a.mvm.is_some() {
+                        emit_anchor(graph, a, true, r as u64, budget).map(|ops| AnchorProfile {
+                            prof: walk(ops),
+                            cminit: cminit_count(a.mvm.as_ref().expect("checked"), r as u64, budget),
+                        })
+                    } else {
+                        None
+                    });
+                }
+                let best = |side: &[Option<AnchorProfile>]| {
+                    side.iter()
+                        .flatten()
+                        .map(|p| p.prof.cycles(true, true, &k))
+                        .fold(f64::INFINITY, f64::min)
+                };
+                let (min_dig, min_ana) = (best(&dig), best(&ana));
+                AnchorCosts { dig, ana, min_any: min_dig.min(min_ana), min_dig, min_ana }
+            })
+            .collect();
+
+        let input_prof = match graph.nodes[input_node].kind {
+            LayerKind::Input { bytes, marshal_insts, .. } => {
+                let mut b = TraceBuilder::new();
+                compile::lower::input_load(&mut b, 0, bytes, marshal_insts);
+                walk(b.build())
+            }
+            _ => Profile::default(),
+        };
+        let out_bytes = match graph.nodes[output_node].kind {
+            LayerKind::Output { bytes } => bytes,
+            _ => 0,
+        };
+        let wb_prof: Vec<Profile> = replica_opts
+            .iter()
+            .map(|&r| {
+                let mut b = TraceBuilder::new();
+                compile::lower::writeback(&mut b, 0, out_bytes / r as u64);
+                walk(b.build())
+            })
+            .collect();
+
+        // Admissible energy floor per estimated cycle: the bottleneck
+        // core is active for every cycle, every other core at least
+        // idles, and the uncore static power burns for the whole
+        // inference; DRAM and AIMC energy are >= 0.
+        let p = &cfg.power;
+        let (act, idle) = (p.active_core_j_per_cycle, p.idle_core_j_per_cycle);
+        let core_floor = if act >= idle {
+            act + (cfg.num_cores as f64 - 1.0) * idle
+        } else {
+            cfg.num_cores as f64 * act
+        };
+        let floor_rate =
+            core_floor + (p.mem_ctrl_io_w + p.llc_leakage_w(cfg.llc.size_bytes)) / cfg.freq_hz;
+
+        CostEngine {
+            cfg: cfg.clone(),
+            k,
+            budget: *budget,
+            replica_opts: replica_opts.to_vec(),
+            anchors_cost,
+            input_prof,
+            wb_prof,
+            floor_rate,
+        }
+    }
+
+    fn opt_idx(&self, parts: u64) -> usize {
+        self.replica_opts
+            .iter()
+            .position(|&r| r as u64 == parts)
+            .expect("stage parts is always one of the replica options")
+    }
+
+    /// Admissible cycle lower bound of any candidate on this partition
+    /// (max over stages of the sum of per-anchor best-case floors;
+    /// boundary phases and CM preambles are >= 0).
+    pub(crate) fn partition_lower_bound(&self, anchors: &[Anchor], starts: &[usize]) -> f64 {
+        self.stage_max(starts, anchors.len(), |ai| self.anchors_cost[ai].min_any)
+    }
+
+    /// Admissible cycle lower bound once the engine assignment (analog
+    /// mask over MVM anchors) is fixed.
+    pub(crate) fn mask_lower_bound(
+        &self,
+        anchors: &[Anchor],
+        mvm_index: &[Option<usize>],
+        starts: &[usize],
+        mask: u64,
+    ) -> f64 {
+        self.stage_max(starts, anchors.len(), |ai| match mvm_index[ai] {
+            Some(mi) if mask_bit(mask, mi) => self.anchors_cost[ai].min_ana,
+            Some(_) | None => self.anchors_cost[ai].min_dig,
+        })
+    }
+
+    /// Admissible energy floor for a candidate whose cycles are at least
+    /// `cycles_lb` (an idle fleet plus static power for that long).
+    pub(crate) fn energy_floor(&self, cycles_lb: f64) -> f64 {
+        cycles_lb * self.floor_rate
+    }
+
+    fn stage_max(&self, starts: &[usize], n: usize, f: impl Fn(usize) -> f64) -> f64 {
+        let mut lb = 0f64;
+        for (si, &lo) in starts.iter().enumerate() {
+            let hi = if si + 1 < starts.len() { starts[si + 1] } else { n };
+            let stage: f64 = (lo..hi).map(&f).sum();
+            lb = lb.max(stage);
+        }
+        lb
+    }
+
+    /// Score one candidate spec by composing cached profiles — no trace
+    /// compilation. Returns `None` exactly when `build_mapping` would
+    /// (budget infeasibility or a degenerate replication request); on
+    /// `Some`, the estimate covers the same op multiset as the oracle's
+    /// compiled walk.
+    pub(crate) fn score(&self, anchors: &[Anchor], spec: &CandidateSpec) -> Option<CostEstimate> {
+        let s_count = spec.starts.len();
+        let n = anchors.len();
+        let range = |si: usize| {
+            let lo = spec.starts[si];
+            let hi = if si + 1 < s_count { spec.starts[si + 1] } else { n };
+            (lo, hi)
+        };
+
+        // Pass A: per-stage replication under the core/channel budgets —
+        // the exact helper `build_mapping` uses, so feasibility cannot
+        // drift between the two walks.
+        let parts = stage_layout(anchors, spec, &self.budget)?;
+        let next_core: usize = parts.iter().map(|&p| p as usize).sum();
+
+        // Pass B: compose stage profiles + greedy tile packing.
+        let mut packer = Packer::new();
+        let mut mvm_idx = 0usize;
+        // (per-core per-inference profile, once-only cycles, preamble cycles)
+        let mut stage_costs: Vec<(Profile, f64, f64)> = Vec::with_capacity(s_count);
+        let mut out_width: Vec<u64> = Vec::with_capacity(s_count);
+        for si in 0..s_count {
+            let (lo, hi) = range(si);
+            let p = parts[si];
+            let pi = self.opt_idx(p);
+            let stage_floor = packer.count();
+            let mut prof = Profile::default();
+            let mut cminit = 0.0;
+            for (ai, a) in anchors.iter().enumerate().take(hi).skip(lo) {
+                let analog = match a.mvm {
+                    Some(_) => {
+                        let bit = mask_bit(spec.analog_mask, mvm_idx);
+                        mvm_idx += 1;
+                        bit
+                    }
+                    None => false,
+                };
+                let side = if analog { &self.anchors_cost[ai].ana } else { &self.anchors_cost[ai].dig };
+                let ap = side[pi].as_ref()?;
+                if analog {
+                    // The exact greedy column-packing walk `build_mapping`
+                    // runs (shared helper), counting tiles only.
+                    let mvm = a.mvm.as_ref().expect("analog anchors have an MVM");
+                    let shape = analog_shape(mvm, p, self.budget.tile_rows, self.budget.tile_cols)?;
+                    place_shape(&mut packer, &self.budget, stage_floor, &shape, p, |_, _, _, _| {})?;
+                }
+                prof.add(&ap.prof);
+                cminit += ap.cminit;
+            }
+            out_width.push(anchors[hi - 1].out_width);
+
+            // Boundary phases (closed-form twins of the compiler's
+            // input/barrier/output/ack emission).
+            let mut once = 0.0;
+            if si == 0 {
+                prof.add(&self.input_prof);
+            } else {
+                let prev_bytes = 4 * out_width[si - 1] / parts[si - 1];
+                prof.fixed += parts[si - 1] as f64 * recv_cycles(prev_bytes, &self.k);
+                if spec.handoff == Handoff::SharedBuffer {
+                    // Ack the incoming shared buffer, every inference.
+                    prof.fixed += parts[si - 1] as f64 * send_cycles(ACK_BYTES);
+                }
+            }
+            if p > 1 {
+                prof.fixed += costs::MUTEX_INSTS as f64 * 1.5; // barrier lock+unlock
+            }
+            if si + 1 == s_count {
+                prof.add(&self.wb_prof[pi]);
+            } else {
+                let fwd = 4 * out_width[si] / p;
+                let nc = parts[si + 1] as f64;
+                prof.fixed += nc * send_cycles(fwd);
+                if spec.handoff == Handoff::SharedBuffer {
+                    // The consumer's ack is awaited from inference 1 on:
+                    // once across the oracle's two compiled inferences.
+                    once += nc * recv_cycles(ACK_BYTES, &self.k);
+                }
+            }
+            stage_costs.push((prof, once, cminit));
+        }
+
+        // Residency classification over the whole candidate (all cores).
+        let weight_bytes: u64 = stage_costs.iter().zip(&parts).map(|((pr, _, _), &p)| p * pr.w_bytes).sum();
+        let kv_bytes: u64 = stage_costs.iter().zip(&parts).map(|((pr, _, _), &p)| p * pr.kv_bytes).sum();
+        let (w_res, kv_res) = residency(weight_bytes, kv_bytes, &self.k);
+
+        let mut per_core: Vec<f64> = Vec::with_capacity(next_core);
+        let mut dram_lines = 0f64;
+        let mut aimc_j = 0f64;
+        for ((prof, once, cminit), &p) in stage_costs.iter().zip(&parts) {
+            // Amortize exactly like the oracle: one preamble + one ack
+            // wait across N_INF compiled inferences.
+            let c = (cminit + once + N_INF * prof.cycles(w_res, kv_res, &self.k)) / N_INF;
+            for _ in 0..p {
+                per_core.push(c);
+            }
+            dram_lines += p as f64 * prof.dram(w_res, kv_res);
+            aimc_j += p as f64 * prof.aimc_j;
+        }
+        Some(finish(per_core, dram_lines, aimc_j, &self.cfg))
+    }
+}
+
+/// CM_INITIALIZE ops one replica's preamble emits for an analog MVM.
+fn cminit_count(mvm: &MvmInfo, parts: u64, budget: &TopologyBudget) -> f64 {
+    match analog_shape(mvm, parts, budget.tile_rows, budget.tile_cols) {
+        Some(AnalogShape::Direct { .. }) => 1.0,
+        Some(AnalogShape::RowSplit { k, .. }) => k as f64,
+        Some(AnalogShape::One { .. }) => 1.0,
+        Some(AnalogShape::Quad { .. }) => 4.0,
+        None => 0.0,
+    }
+}
+
+/// Emit one anchor's steps in isolation through the compiler's own
+/// lowering rules (`compile::emit_step`), with dummy tile indices — the
+/// walker only reads coupling and full-tile dimensions, which are
+/// uniform across automap tiles. Returns `None` when the analog shape
+/// is geometrically infeasible under the budget.
+fn emit_anchor(
+    graph: &LayerGraph,
+    a: &Anchor,
+    analog: bool,
+    parts: u64,
+    budget: &TopologyBudget,
+) -> Option<Vec<TraceOp>> {
+    let dummy = |rows: u64, cols: u64| TilePlacement {
+        tile: 0,
+        placement: Placement { row0: 0, col0: 0, rows: rows as u32, cols: cols as u32 },
+    };
+    let mut b = TraceBuilder::new();
+    for &nid in &a.nodes {
+        let is_mvm = a.mvm.as_ref().is_some_and(|m| m.node() == nid);
+        let place = if is_mvm && analog {
+            let mvm = a.mvm.as_ref().expect("is_mvm checked");
+            match analog_shape(mvm, parts, budget.tile_rows, budget.tile_cols)? {
+                AnalogShape::Direct { rows, slice } => {
+                    if !fits(rows, slice, budget) {
+                        return None;
+                    }
+                    Place::Tile { per_replica: vec![dummy(rows, slice); parts as usize] }
+                }
+                AnalogShape::RowSplit { k, sub, cols } => {
+                    if !fits(sub, cols, budget) {
+                        return None;
+                    }
+                    Place::TileRowSplit { tiles: vec![dummy(sub, cols); k as usize] }
+                }
+                AnalogShape::One { rows, cols } => {
+                    if !fits(rows, cols, budget) {
+                        return None;
+                    }
+                    Place::Tile { per_replica: vec![dummy(rows, cols)] }
+                }
+                AnalogShape::Quad { d } => {
+                    if !fits(d, d, budget) {
+                        return None;
+                    }
+                    Place::AttentionTiles { q: dummy(d, d), k: dummy(d, d), v: dummy(d, d), o: dummy(d, d) }
+                }
+            }
+        } else {
+            Place::Cpu
+        };
+        let step = Step { node: nid, place };
+        compile::emit_step(&mut b, graph, &step, 0, parts);
+    }
+    Some(b.build())
+}
+
+/// The geometry half of `Packer::place`: a region fits a budget tile.
+fn fits(rows: u64, cols: u64, budget: &TopologyBudget) -> bool {
+    rows > 0 && cols > 0 && rows <= budget.tile_rows as u64 && cols <= budget.tile_cols as u64
 }
 
 #[cfg(test)]
@@ -247,5 +740,81 @@ mod tests {
         let b = est(MlpCase::Analog { case: 3 });
         assert_eq!(a.cycles_per_inf.to_bits(), b.cycles_per_inf.to_bits());
         assert_eq!(a.energy_per_inf_j.to_bits(), b.energy_per_inf_j.to_bits());
+    }
+
+    #[test]
+    fn composed_score_matches_oracle_on_every_feasible_spec() {
+        use crate::nn::LayerGraph;
+        // Exhaustively cross-check the compositional engine against the
+        // compiled oracle over a small space that exercises replication,
+        // row-splitting, pipelining, and both hand-offs.
+        let g = LayerGraph::mlp(&[256, 128, 64]);
+        let budget = TopologyBudget { cores: 4, tiles: 8, tile_rows: 128, tile_cols: 256, channels: 32 };
+        let cfg = SystemConfig::high_power();
+        let (anchors, input, output) = super::super::enumerate::anchors(&g).unwrap();
+        let opts = [1usize, 2, 4];
+        let engine = CostEngine::new(&g, &anchors, input, output, &budget, &cfg, &opts);
+
+        let mut checked = 0;
+        for starts in super::super::enumerate::partitions(anchors.len(), 4, usize::MAX).0 {
+            for mask in 0u64..4 {
+                for &r in &opts {
+                    for h in [Handoff::PingPong, Handoff::SharedBuffer] {
+                        let spec = CandidateSpec {
+                            starts: starts.clone(),
+                            analog_mask: mask,
+                            replicas: r,
+                            handoff: h,
+                        };
+                        let built = super::super::enumerate::build_mapping(
+                            &g, &anchors, input, output, &spec, &budget,
+                        );
+                        let composed = engine.score(&anchors, &spec);
+                        assert_eq!(built.is_some(), composed.is_some(), "feasibility drift on {spec:?}");
+                        let (Some((mapping, desc)), Some(c)) = (built, composed) else { continue };
+                        let o = estimate(&g, &mapping, &cfg).unwrap();
+                        let rel = (c.cycles_per_inf - o.cycles_per_inf).abs() / o.cycles_per_inf;
+                        assert!(rel < 1e-9, "{desc}: composed {} vs oracle {}", c.cycles_per_inf, o.cycles_per_inf);
+                        let rel_e = (c.energy_per_inf_j - o.energy_per_inf_j).abs() / o.energy_per_inf_j;
+                        assert!(rel_e < 1e-9, "{desc}: composed energy {} vs oracle {}", c.energy_per_inf_j, o.energy_per_inf_j);
+                        assert_eq!(c.per_core_cycles.len(), o.per_core_cycles.len(), "{desc}");
+                        checked += 1;
+                    }
+                }
+            }
+        }
+        assert!(checked > 20, "cross-check space collapsed: {checked}");
+    }
+
+    #[test]
+    fn lower_bounds_are_admissible() {
+        use crate::nn::LayerGraph;
+        let g = LayerGraph::mlp(&[256, 128, 64]);
+        let budget = TopologyBudget { cores: 4, tiles: 8, tile_rows: 256, tile_cols: 256, channels: 32 };
+        let cfg = SystemConfig::high_power();
+        let (anchors, input, output) = super::super::enumerate::anchors(&g).unwrap();
+        let opts = [1usize, 2, 4];
+        let engine = CostEngine::new(&g, &anchors, input, output, &budget, &cfg, &opts);
+        let mvm_index: Vec<Option<usize>> = {
+            let mut k = 0;
+            anchors.iter().map(|a| a.mvm.as_ref().map(|_| { let i = k; k += 1; i })).collect()
+        };
+        for starts in super::super::enumerate::partitions(anchors.len(), 4, usize::MAX).0 {
+            let plb = engine.partition_lower_bound(&anchors, &starts);
+            for mask in 0u64..4 {
+                let mlb = engine.mask_lower_bound(&anchors, &mvm_index, &starts, mask);
+                assert!(mlb + 1e-9 >= plb, "mask bound below partition bound");
+                for &r in &opts {
+                    for h in [Handoff::PingPong, Handoff::SharedBuffer] {
+                        let spec = CandidateSpec { starts: starts.clone(), analog_mask: mask, replicas: r, handoff: h };
+                        if let Some(est) = engine.score(&anchors, &spec) {
+                            assert!(est.cycles_per_inf >= mlb - 1e-9, "score below mask bound");
+                            assert!(est.cycles_per_inf >= plb - 1e-9, "score below partition bound");
+                            assert!(est.energy_per_inf_j * (1.0 + 1e-9) >= engine.energy_floor(plb));
+                        }
+                    }
+                }
+            }
+        }
     }
 }

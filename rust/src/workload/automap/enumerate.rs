@@ -1,9 +1,15 @@
-//! Candidate enumeration: carve a chain [`LayerGraph`] into anchors,
-//! walk the (pipeline depth x partition x per-layer engine x replication
-//! x hand-off) space, and construct a concrete [`Mapping`] for each
-//! feasible point — packing analog MVM regions onto budget tiles
-//! greedily, column-major, opening a new tile when the current one runs
-//! out of columns.
+//! Candidate enumeration: carve a chain [`LayerGraph`] into anchors and
+//! construct a concrete [`Mapping`] for any point of the (pipeline depth
+//! x partition x per-layer engine x replication x hand-off) space —
+//! packing analog MVM regions onto budget tiles greedily, column-major,
+//! opening a new tile when the current one runs out of columns.
+//!
+//! The *walk* over the space lives in the parent module's
+//! branch-and-bound search; this module owns the shared pieces both the
+//! mapping constructor and the compositional cost engine must agree on
+//! byte-for-byte: per-stage replication ([`stage_parts`]), analog
+//! placement geometry ([`analog_shape`]), the greedy tile packer
+//! ([`Packer`]), and the candidate descriptor ([`spec_desc`]).
 //!
 //! [`LayerGraph`]: crate::nn::LayerGraph
 
@@ -34,7 +40,7 @@ pub(crate) enum MvmInfo {
 }
 
 impl MvmInfo {
-    fn node(&self) -> NodeId {
+    pub(crate) fn node(&self) -> NodeId {
         match self {
             MvmInfo::Dense { node, .. } | MvmInfo::Lstm { node, .. } | MvmInfo::Attention { node, .. } => *node,
         }
@@ -118,67 +124,65 @@ pub(crate) struct CandidateSpec {
     pub handoff: Handoff,
 }
 
-/// Deepest pipeline the enumerator will try.
-const MAX_STAGES: usize = 6;
 /// Above this many MVM anchors, only the all-digital and all-analog
 /// engine assignments are enumerated (the full 2^m mask space explodes).
-const FULL_MASK_ANCHORS: usize = 12;
+pub(crate) const FULL_MASK_ANCHORS: usize = 12;
 
-/// Enumerate candidate specs in a fixed deterministic order (stage count
-/// ascending, cut positions lexicographic, engine mask ascending,
-/// replication ascending, ping-pong before shared-buffer). Returns the
-/// specs and whether the walk hit `cap` (truncated).
-pub(crate) fn enumerate_specs(
-    anchors: &[Anchor],
-    budget: &TopologyBudget,
-    cap: usize,
-) -> (Vec<CandidateSpec>, bool) {
-    let n = anchors.len();
-    let m = anchors.iter().filter(|a| a.mvm.is_some()).count();
-    let masks: Vec<u64> = if m <= FULL_MASK_ANCHORS {
-        (0..(1u64 << m)).collect()
+/// The engine-mask axis of the space for `m` MVM anchors, plus whether
+/// it was reduced to the all-digital/all-analog extremes.
+pub(crate) fn engine_masks(m: usize) -> (Vec<u64>, bool) {
+    if m <= FULL_MASK_ANCHORS {
+        ((0..(1u64 << m)).collect(), false)
     } else {
-        // Mask space too large: keep the all-digital and all-analog ends.
-        vec![0, (1u64 << m.min(63)) - 1]
-    };
-    let reduced_masks = m > FULL_MASK_ANCHORS;
-    let replica_opts: Vec<usize> = [1usize, 2, 4].iter().copied().filter(|&r| r <= budget.cores).collect();
-    let max_stages = MAX_STAGES.min(budget.cores).min(n.max(1));
+        (vec![0, (1u64 << m.min(63)) - 1], true)
+    }
+}
 
-    let mut specs = Vec::new();
-    let mut truncated = reduced_masks;
-    'outer: for s in 1..=max_stages {
-        let handoffs: &[Handoff] = if s == 1 {
-            &[Handoff::PingPong]
-        } else {
-            &[Handoff::PingPong, Handoff::SharedBuffer]
-        };
-        let mut done = false;
+/// Engine bit of MVM anchor `idx` — the one mask reader every consumer
+/// (descriptor, mapping constructor, cost engine, lower bounds) goes
+/// through. Anchors past the u64 mask width read as digital instead of
+/// shifting out of range (only reachable through the reduced-mask
+/// extremes of 64+-MVM chains, where the "all-analog" seed is then
+/// analog on the first 63 anchors — consistently so across every
+/// reader).
+pub(crate) fn mask_bit(mask: u64, idx: usize) -> bool {
+    idx < 64 && (mask >> idx) & 1 == 1
+}
+
+/// Hard bound on materialized pipeline partitions (~tens of MB of cut
+/// lists). `sum_{s<=8} C(n-1, s-1)` explodes combinatorially for deep
+/// chains; past this bound the walk keeps the canonical prefix and
+/// reports the space as truncated rather than exhausting memory.
+pub(crate) const MAX_PARTITIONS: usize = 250_000;
+
+/// Every way of cutting `n` anchors into 1..=`max_stages` contiguous
+/// stages, as stage-start index lists — the subtree roots of the
+/// branch-and-bound walk, in the canonical enumeration order (stage
+/// count ascending, cut positions lexicographic). At most
+/// `limit.min(MAX_PARTITIONS)` lists are materialized (a capped walk
+/// can never consume more partitions than candidates, so callers pass
+/// the candidate cap); the second return is true when the bound cut
+/// the list short.
+pub(crate) fn partitions(n: usize, max_stages: usize, limit: usize) -> (Vec<Vec<usize>>, bool) {
+    let limit = limit.min(MAX_PARTITIONS);
+    let mut out = Vec::new();
+    let mut truncated = false;
+    'all: for s in 1..=max_stages.min(n.max(1)).max(1) {
+        let mut full = true;
         for_each_starts(n, s, &mut |starts| {
-            for &mask in &masks {
-                for &r in &replica_opts {
-                    for &h in handoffs {
-                        if specs.len() >= cap {
-                            done = true;
-                            return false;
-                        }
-                        specs.push(CandidateSpec {
-                            starts: starts.to_vec(),
-                            analog_mask: mask,
-                            replicas: r,
-                            handoff: h,
-                        });
-                    }
-                }
+            if out.len() >= limit {
+                full = false;
+                return false;
             }
+            out.push(starts.to_vec());
             true
         });
-        if done {
+        if !full {
             truncated = true;
-            break 'outer;
+            break 'all;
         }
     }
-    (specs, truncated)
+    (out, truncated)
 }
 
 /// Visit every way of cutting `n` anchors into `s` contiguous stages,
@@ -217,48 +221,258 @@ fn for_each_starts(n: usize, s: usize, f: &mut impl FnMut(&[usize]) -> bool) {
     }
 }
 
-/// Greedy column-packing of one `rows x cols` region onto the budget
-/// tiles: reuse the last open tile when the region fits next to what is
-/// already there, otherwise open a new tile. `floor` is the first tile
-/// the current core may reuse — tiles are core-private (tight coupling,
-/// Fig. 2), so callers pass the tile count at their stage boundary and
-/// regions never share a tile across cores.
-fn pack(
+/// Per-anchor half of the replication rule: can this anchor run inside
+/// an `r`-way column-replicated stage? (Dense MVMs need exact column
+/// slices; non-Dense MVMs pin their stage to a single replica.)
+pub(crate) fn anchor_replicable(a: &Anchor, r: u64) -> bool {
+    match a.mvm {
+        None => true,
+        Some(MvmInfo::Dense { cols, .. }) => cols % r == 0,
+        Some(_) => false,
+    }
+}
+
+/// Replica count a stage actually runs with: `replicas` when every
+/// anchor is replicable *and* the stage's output width slices exactly
+/// (truncated slices would compile a smaller network than the r = 1
+/// candidates and bias the search toward replication), else 1.
+pub(crate) fn stage_parts(range: &[Anchor], replicas: usize) -> u64 {
+    let r = replicas as u64;
+    let replicable = r > 1
+        && range.iter().all(|a| anchor_replicable(a, r))
+        && range.last().expect("stages are non-empty").out_width % r == 0;
+    if replicable {
+        r
+    } else {
+        1
+    }
+}
+
+/// Analog placement geometry of one MVM under a replication factor —
+/// the single source of truth shared by the mapping constructor, the
+/// tile-packing feasibility walk, and the profile emitter.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum AnalogShape {
+    /// One `rows x slice` region per replica.
+    Direct { rows: u64, slice: u64 },
+    /// Tall matrix row-split over `k` stacked `sub x cols` regions with
+    /// digital partial accumulation (Fig. 6b case 2). Non-divisible
+    /// splits are rejected: the `rows / k` lowering would silently drop
+    /// the remainder rows and bias the analog-vs-digital comparison.
+    RowSplit { k: u64, sub: u64, cols: u64 },
+    /// A single `rows x cols` region (LSTM gate block).
+    One { rows: u64, cols: u64 },
+    /// Four `d x d` projection regions (attention Wq|Wk|Wv|Wo).
+    Quad { d: u64 },
+}
+
+pub(crate) fn analog_shape(mvm: &MvmInfo, parts: u64, tile_rows: u32, tile_cols: u32) -> Option<AnalogShape> {
+    match *mvm {
+        MvmInfo::Dense { rows, cols, .. } => {
+            let slice = cols / parts;
+            if rows <= tile_rows as u64 && slice <= tile_cols as u64 {
+                Some(AnalogShape::Direct { rows, slice })
+            } else if parts == 1
+                && rows > tile_rows as u64
+                && cols <= tile_cols as u64
+                && rows % rows.div_ceil(tile_rows as u64) == 0
+            {
+                let k = rows.div_ceil(tile_rows as u64);
+                Some(AnalogShape::RowSplit { k, sub: rows / k, cols })
+            } else {
+                None
+            }
+        }
+        MvmInfo::Lstm { rows, cols, .. } => Some(AnalogShape::One { rows, cols }),
+        MvmInfo::Attention { d_model, .. } => Some(AnalogShape::Quad { d: d_model }),
+    }
+}
+
+/// Per-stage replica counts of a spec, with the core-budget,
+/// channel-budget, and degenerate-replication checks applied — `None`
+/// exactly when the spec is infeasible on those axes. The single
+/// source of truth shared by `build_mapping` and the compositional
+/// cost engine's `score`, so the two cannot drift.
+pub(crate) fn stage_layout(
+    anchors: &[Anchor],
+    spec: &CandidateSpec,
     budget: &TopologyBudget,
-    tiles: &mut Vec<TileSpec>,
-    used_cols: &mut Vec<u32>,
-    floor: usize,
-    rows: u64,
-    cols: u64,
-) -> Option<TilePlacement> {
-    if rows == 0 || cols == 0 || rows > budget.tile_rows as u64 || cols > budget.tile_cols as u64 {
+) -> Option<Vec<u64>> {
+    let s_count = spec.starts.len();
+    let mut parts: Vec<u64> = Vec::with_capacity(s_count);
+    let mut next_core = 0usize;
+    let mut any_replicated = false;
+    for si in 0..s_count {
+        let lo = spec.starts[si];
+        let hi = if si + 1 < s_count { spec.starts[si + 1] } else { anchors.len() };
+        let p = stage_parts(&anchors[lo..hi], spec.replicas);
+        any_replicated |= p > 1;
+        next_core += p as usize;
+        if next_core > budget.cores {
+            return None;
+        }
+        parts.push(p);
+    }
+    if spec.replicas > 1 && !any_replicated {
+        return None; // identical to the r = 1 spec
+    }
+    let mut channels = 0usize;
+    for i in 0..s_count.saturating_sub(1) {
+        let fan = (parts[i] * parts[i + 1]) as usize;
+        channels += fan * if spec.handoff == Handoff::SharedBuffer { 2 } else { 1 };
+    }
+    if channels > budget.channels {
         return None;
     }
-    let (r, c) = (rows as u32, cols as u32);
-    if let Some(last) = tiles.len().checked_sub(1) {
-        if last >= floor && used_cols[last] + c <= budget.tile_cols {
-            let tp = TilePlacement {
-                tile: last,
-                placement: Placement { row0: 0, col0: used_cols[last], rows: r, cols: c },
-            };
-            used_cols[last] += c;
-            return Some(tp);
+    Some(parts)
+}
+
+/// Claim every tile region of one analog MVM shape through the packer,
+/// in packing order with the shape's floor rules (fresh tile per
+/// replica when replicated, per-sub-region floors for row splits,
+/// the stage floor otherwise), feeding each claim to `sink` as
+/// `(tile, col0, rows, cols)`. `None` when any region fails geometry
+/// or the tile budget. The single packing walk shared by
+/// `build_mapping` (which materializes placements) and the cost
+/// engine's `score` (which only counts).
+pub(crate) fn place_shape(
+    packer: &mut Packer,
+    budget: &TopologyBudget,
+    stage_floor: usize,
+    shape: &AnalogShape,
+    parts: u64,
+    mut sink: impl FnMut(usize, u32, u64, u64),
+) -> Option<()> {
+    match *shape {
+        AnalogShape::Direct { rows, slice } => {
+            for _ in 0..parts {
+                // Replicas run on distinct cores, so each slice gets a
+                // fresh tile when replicated.
+                let floor = if parts > 1 { packer.count() } else { stage_floor };
+                let (t, c0) = packer.place(budget, floor, rows, slice)?;
+                sink(t, c0, rows, slice);
+            }
+        }
+        AnalogShape::RowSplit { k, sub, cols } => {
+            // Each sub-region gets its own tile — parallel crossbars
+            // are the point of the split.
+            for _ in 0..k {
+                let floor = packer.count();
+                let (t, c0) = packer.place(budget, floor, sub, cols)?;
+                sink(t, c0, sub, cols);
+            }
+        }
+        AnalogShape::One { rows, cols } => {
+            let (t, c0) = packer.place(budget, stage_floor, rows, cols)?;
+            sink(t, c0, rows, cols);
+        }
+        AnalogShape::Quad { d } => {
+            for _ in 0..4 {
+                let (t, c0) = packer.place(budget, stage_floor, d, d)?;
+                sink(t, c0, d, d);
+            }
         }
     }
-    if tiles.len() >= budget.tiles {
-        return None;
+    Some(())
+}
+
+/// Greedy column-major tile packer. Only the most recently opened tile
+/// is ever reusable, so the full state is a tile count plus the open
+/// tile's used columns — cheap enough to run per scored candidate.
+/// `floor` is the first tile the current region may reuse: tiles are
+/// core-private (tight coupling, Fig. 2), so callers pass the tile
+/// count at their stage/replica boundary and regions never share a
+/// tile across cores.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct Packer {
+    count: usize,
+    open_cols: u32,
+}
+
+impl Packer {
+    pub(crate) fn new() -> Packer {
+        Packer::default()
     }
-    tiles.push(TileSpec { rows: budget.tile_rows, cols: budget.tile_cols, coupling: Coupling::Tight });
-    used_cols.push(c);
-    Some(TilePlacement { tile: tiles.len() - 1, placement: Placement { row0: 0, col0: 0, rows: r, cols: c } })
+
+    pub(crate) fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Claim a `rows x cols` region: reuse the open tile when the region
+    /// fits next to what is already there (and the tile is at or above
+    /// `floor`), otherwise open a new tile. Returns the `(tile, col0)`
+    /// of the claim, or `None` when the region is geometrically
+    /// oversized or the tile budget is exhausted.
+    pub(crate) fn place(
+        &mut self,
+        budget: &TopologyBudget,
+        floor: usize,
+        rows: u64,
+        cols: u64,
+    ) -> Option<(usize, u32)> {
+        if rows == 0 || cols == 0 || rows > budget.tile_rows as u64 || cols > budget.tile_cols as u64 {
+            return None;
+        }
+        let c = cols as u32;
+        if let Some(last) = self.count.checked_sub(1) {
+            if last >= floor && self.open_cols as u64 + c as u64 <= budget.tile_cols as u64 {
+                let col0 = self.open_cols;
+                self.open_cols += c;
+                return Some((last, col0));
+            }
+        }
+        if self.count >= budget.tiles {
+            return None;
+        }
+        self.count += 1;
+        self.open_cols = c;
+        Some((self.count - 1, 0))
+    }
+}
+
+/// Human-readable point in the search space, e.g. `"s2 r2 pp AD|DA"`
+/// (stages, replicas, hand-off, engine per anchor with `.` for MVM-less
+/// anchors and `|` at stage cuts). Unique per spec, so it doubles as the
+/// deterministic ranking tie-break.
+pub(crate) fn spec_desc(anchors: &[Anchor], spec: &CandidateSpec) -> String {
+    let s_count = spec.starts.len();
+    let mut pat = String::new();
+    let mut mvm_idx = 0usize;
+    for si in 0..s_count {
+        let lo = spec.starts[si];
+        let hi = if si + 1 < s_count { spec.starts[si + 1] } else { anchors.len() };
+        for a in &anchors[lo..hi] {
+            pat.push(match a.mvm {
+                None => '.',
+                Some(_) => {
+                    let bit = mask_bit(spec.analog_mask, mvm_idx);
+                    mvm_idx += 1;
+                    if bit {
+                        'A'
+                    } else {
+                        'D'
+                    }
+                }
+            });
+        }
+        if si + 1 < s_count {
+            pat.push('|');
+        }
+    }
+    format!(
+        "s{s_count} r{} {} {pat}",
+        spec.replicas,
+        match spec.handoff {
+            Handoff::PingPong => "pp",
+            Handoff::SharedBuffer => "sb",
+        }
+    )
 }
 
 /// Construct the `Mapping` of one spec, or `None` when the spec is
 /// infeasible under the budget (tile geometry, tile count, core count,
 /// channel count) or degenerate (replication requested but no stage
-/// eligible). Also returns the human-readable descriptor, e.g.
-/// `"s2 r2 pp AD|DA"` (stages, replicas, hand-off, engine per anchor
-/// with `.` for MVM-less anchors and `|` at stage cuts).
+/// eligible). Also returns the descriptor from [`spec_desc`].
 pub(crate) fn build_mapping(
     graph: &LayerGraph,
     anchors: &[Anchor],
@@ -268,31 +482,19 @@ pub(crate) fn build_mapping(
     budget: &TopologyBudget,
 ) -> Option<(Mapping, String)> {
     let s_count = spec.starts.len();
+    let parts_per_stage = stage_layout(anchors, spec, budget)?;
     let mut stages: Vec<Stage> = Vec::with_capacity(s_count);
     let mut tiles: Vec<TileSpec> = Vec::new();
-    let mut used_cols: Vec<u32> = Vec::new();
+    let mut packer = Packer::new();
     let mut next_core = 0usize;
-    let mut any_replicated = false;
     let mut mvm_idx = 0usize;
-    let mut pat = String::new();
 
     for si in 0..s_count {
         let lo = spec.starts[si];
         let hi = if si + 1 < s_count { spec.starts[si + 1] } else { anchors.len() };
         let range = &anchors[lo..hi];
-        // A stage replicates only when every slice is exact: truncated
-        // `cols / parts` slices would compile a smaller network than the
-        // r = 1 candidates and bias the search toward replication.
-        let r = spec.replicas as u64;
-        let replicable = r > 1
-            && range.iter().all(|a| match a.mvm {
-                None => true,
-                Some(MvmInfo::Dense { cols, .. }) => cols % r == 0,
-                Some(_) => false,
-            })
-            && range.last().expect("stages are non-empty").out_width % r == 0;
-        let parts = if replicable { spec.replicas } else { 1 };
-        any_replicated |= parts > 1;
+        let parts_n = parts_per_stage[si];
+        let parts = parts_n as usize;
 
         let mut st = Stage::on_core(next_core);
         if parts > 1 {
@@ -301,86 +503,55 @@ pub(crate) fn build_mapping(
             st.barrier = true;
         }
         next_core += parts;
-        if next_core > budget.cores {
-            return None;
-        }
         // Tiles are core-private (tight coupling): this stage's single
         // core may pack onto tiles opened from here on, never onto a
         // previous stage's.
-        let stage_floor = tiles.len();
+        let stage_floor = packer.count();
 
         for a in range {
             let analog = match a.mvm {
                 Some(_) => {
-                    let bit = (spec.analog_mask >> mvm_idx) & 1 == 1;
+                    let bit = mask_bit(spec.analog_mask, mvm_idx);
                     mvm_idx += 1;
                     bit
                 }
                 None => false,
             };
-            pat.push(match (a.mvm.is_some(), analog) {
-                (false, _) => '.',
-                (true, false) => 'D',
-                (true, true) => 'A',
-            });
             for &nid in &a.nodes {
                 let is_mvm = a.mvm.is_some_and(|mvm| mvm.node() == nid);
                 if !is_mvm || !analog {
                     st.steps.push(Step::cpu(nid));
                     continue;
                 }
-                match a.mvm.expect("is_mvm checked") {
-                    MvmInfo::Dense { node, rows, cols } => {
-                        let slice = cols / parts as u64;
-                        if rows <= budget.tile_rows as u64 && slice <= budget.tile_cols as u64 {
-                            let mut per_replica = Vec::with_capacity(parts);
-                            for _ in 0..parts {
-                                // Replicas run on distinct cores, so each
-                                // slice gets a fresh tile when replicated.
-                                let floor = if parts > 1 { tiles.len() } else { stage_floor };
-                                per_replica.push(pack(budget, &mut tiles, &mut used_cols, floor, rows, slice)?);
-                            }
-                            st.steps.push(Step { node, place: Place::Tile { per_replica } });
-                        } else if parts == 1
-                            && rows > budget.tile_rows as u64
-                            && cols <= budget.tile_cols as u64
-                            && rows % rows.div_ceil(budget.tile_rows as u64) == 0
-                        {
-                            // Tall matrix: row-split over k tiles with
-                            // digital partial accumulation (Fig. 6b case 2).
-                            // Non-divisible splits are rejected: the
-                            // `rows / k` lowering would silently drop the
-                            // remainder rows and bias the analog-vs-digital
-                            // comparison in the search. Each sub-region
-                            // gets its own tile — parallel crossbars are
-                            // the point of the split.
-                            let k = rows.div_ceil(budget.tile_rows as u64);
-                            let sub = rows / k;
-                            let mut split = Vec::with_capacity(k as usize);
-                            for _ in 0..k {
-                                let floor = tiles.len();
-                                split.push(pack(budget, &mut tiles, &mut used_cols, floor, sub, cols)?);
-                            }
-                            st.steps.push(Step { node, place: Place::TileRowSplit { tiles: split } });
-                        } else {
-                            return None;
-                        }
-                    }
-                    MvmInfo::Lstm { node, rows, cols } => {
-                        let tp = pack(budget, &mut tiles, &mut used_cols, stage_floor, rows, cols)?;
-                        st.steps.push(Step {
-                            node,
-                            place: Place::Tile { per_replica: vec![tp] },
+                let mvm = a.mvm.expect("is_mvm checked");
+                let node = mvm.node();
+                let shape = analog_shape(&mvm, parts_n, budget.tile_rows, budget.tile_cols)?;
+                let mut claims: Vec<TilePlacement> = Vec::new();
+                place_shape(&mut packer, budget, stage_floor, &shape, parts_n, |tile, col0, rows, cols| {
+                    while tiles.len() <= tile {
+                        tiles.push(TileSpec {
+                            rows: budget.tile_rows,
+                            cols: budget.tile_cols,
+                            coupling: Coupling::Tight,
                         });
                     }
-                    MvmInfo::Attention { node, d_model } => {
-                        let q = pack(budget, &mut tiles, &mut used_cols, stage_floor, d_model, d_model)?;
-                        let k = pack(budget, &mut tiles, &mut used_cols, stage_floor, d_model, d_model)?;
-                        let v = pack(budget, &mut tiles, &mut used_cols, stage_floor, d_model, d_model)?;
-                        let o = pack(budget, &mut tiles, &mut used_cols, stage_floor, d_model, d_model)?;
-                        st.steps.push(Step { node, place: Place::AttentionTiles { q, k, v, o } });
+                    claims.push(TilePlacement {
+                        tile,
+                        placement: Placement { row0: 0, col0, rows: rows as u32, cols: cols as u32 },
+                    });
+                })?;
+                let place = match shape {
+                    AnalogShape::Direct { .. } | AnalogShape::One { .. } => {
+                        Place::Tile { per_replica: claims }
                     }
-                }
+                    AnalogShape::RowSplit { .. } => Place::TileRowSplit { tiles: claims },
+                    AnalogShape::Quad { .. } => {
+                        let [q, k, v, o] = <[TilePlacement; 4]>::try_from(claims)
+                            .expect("Quad shapes claim exactly four regions");
+                        Place::AttentionTiles { q, k, v, o }
+                    }
+                };
+                st.steps.push(Step { node, place });
             }
         }
 
@@ -393,31 +564,9 @@ pub(crate) fn build_mapping(
         };
         st.handoff = spec.handoff;
         stages.push(st);
-        if si + 1 < s_count {
-            pat.push('|');
-        }
     }
 
-    if spec.replicas > 1 && !any_replicated {
-        return None; // identical to the r = 1 spec
-    }
-    let mut channels = 0usize;
-    for i in 0..stages.len().saturating_sub(1) {
-        let fan = stages[i].cores.len() * stages[i + 1].cores.len();
-        channels += fan * if spec.handoff == Handoff::SharedBuffer { 2 } else { 1 };
-    }
-    if channels > budget.channels {
-        return None;
-    }
-
-    let desc = format!(
-        "s{s_count} r{} {} {pat}",
-        spec.replicas,
-        match spec.handoff {
-            Handoff::PingPong => "pp",
-            Handoff::SharedBuffer => "sb",
-        }
-    );
+    let desc = spec_desc(anchors, spec);
     let label = format!("automap/{desc}");
     Some((Mapping { label, tiles, min_mutexes: 0, stages }, desc))
 }
@@ -473,23 +622,74 @@ mod tests {
     }
 
     #[test]
+    fn partitions_cover_all_depths_in_order() {
+        let (p, truncated) = partitions(4, 3, usize::MAX);
+        // s=1: 1; s=2: C(3,1)=3; s=3: C(3,2)=3.
+        assert!(!truncated);
+        assert_eq!(p.len(), 7);
+        assert_eq!(p[0], vec![0]);
+        assert_eq!(p[1], vec![0, 1]);
+        assert_eq!(p[6], vec![0, 2, 3]);
+        // Depth never exceeds the anchor count.
+        assert_eq!(partitions(2, 8, usize::MAX).0.len(), 2);
+        // Combinatorial blow-ups are bounded, kept to the canonical
+        // prefix, and reported as truncated instead of exhausting memory.
+        let (big, big_truncated) = partitions(60, 8, usize::MAX);
+        assert!(big_truncated);
+        assert_eq!(big.len(), MAX_PARTITIONS);
+        assert_eq!(big[0], vec![0]);
+        // A candidate cap bounds the materialization too.
+        let (capped, capped_truncated) = partitions(60, 8, 10);
+        assert!(capped_truncated);
+        assert_eq!(capped.len(), 10);
+    }
+
+    #[test]
     fn packer_opens_new_tile_when_columns_run_out() {
         let budget = TopologyBudget { cores: 4, tiles: 3, tile_rows: 64, tile_cols: 100, channels: 8 };
-        let mut tiles = Vec::new();
-        let mut used = Vec::new();
-        let a = pack(&budget, &mut tiles, &mut used, 0, 64, 60).unwrap();
-        let b = pack(&budget, &mut tiles, &mut used, 0, 32, 30).unwrap();
-        let c = pack(&budget, &mut tiles, &mut used, 0, 64, 60).unwrap();
-        assert_eq!((a.tile, b.tile, c.tile), (0, 0, 1));
-        assert_eq!(b.placement.col0, 60);
+        let mut p = Packer::new();
+        let a = p.place(&budget, 0, 64, 60).unwrap();
+        let b = p.place(&budget, 0, 32, 30).unwrap();
+        let c = p.place(&budget, 0, 64, 60).unwrap();
+        assert_eq!((a.0, b.0, c.0), (0, 0, 1));
+        assert_eq!(b.1, 60);
         // A raised floor (next pipeline stage / replica) never reuses an
         // earlier core's open tile even though columns remain.
-        let d = pack(&budget, &mut tiles, &mut used, 2, 16, 10).unwrap();
-        assert_eq!(d.tile, 2);
-        assert_eq!(d.placement.col0, 0);
+        let d = p.place(&budget, 2, 16, 10).unwrap();
+        assert_eq!(d, (2, 0));
         // Budget of 3 tiles exhausted.
-        assert!(pack(&budget, &mut tiles, &mut used, 3, 64, 90).is_none());
+        assert!(p.place(&budget, 3, 64, 90).is_none());
         // Oversized regions never fit.
-        assert!(pack(&budget, &mut tiles, &mut used, 0, 65, 10).is_none());
+        assert!(p.place(&budget, 0, 65, 10).is_none());
+    }
+
+    #[test]
+    fn spec_desc_matches_build_mapping() {
+        let g = LayerGraph::mlp(&[64, 32, 16]);
+        let (a, input, output) = anchors(&g).unwrap();
+        let budget = TopologyBudget { cores: 4, tiles: 4, tile_rows: 64, tile_cols: 64, channels: 8 };
+        let spec = CandidateSpec {
+            starts: vec![0, 1],
+            analog_mask: 0b10,
+            replicas: 1,
+            handoff: Handoff::SharedBuffer,
+        };
+        let (_, desc) = build_mapping(&g, &a, input, output, &spec, &budget).unwrap();
+        assert_eq!(desc, spec_desc(&a, &spec));
+        assert_eq!(desc, "s2 r1 sb D|A");
+    }
+
+    #[test]
+    fn stage_parts_requires_exact_slices() {
+        let g = LayerGraph::mlp(&[64, 48, 16]);
+        let (a, _, _) = anchors(&g).unwrap();
+        // 48 % 4 == 0 and out widths divide: both anchors replicate at 2.
+        assert_eq!(stage_parts(&a[0..1], 2), 2);
+        // 48 % 32 != 0: not replicable at 32.
+        assert_eq!(stage_parts(&a[0..1], 32), 1);
+        // A non-Dense MVM pins the stage to one replica.
+        let lg = LayerGraph::lstm(&crate::nn::LstmModel::paper(750));
+        let (la, _, _) = anchors(&lg).unwrap();
+        assert_eq!(stage_parts(&la[0..1], 2), 1);
     }
 }

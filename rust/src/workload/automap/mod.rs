@@ -1,24 +1,41 @@
 //! Automatic mapping search over the `(LayerGraph, Mapping)` space.
 //!
 //! Given any linear-chain [`LayerGraph`] and a machine topology budget
-//! (cores, tiles, tile dims, channels), the search enumerates candidate
-//! [`Mapping`]s — digital vs. analog placement per layer, greedy
+//! (cores, tiles, tile dims, channels), the search walks candidate
+//! mappings — digital vs. analog placement per layer, greedy
 //! column-packing of MVM regions onto budget tiles, row-splitting of
-//! tall matrices, column-replication across cores, 1..N-stage
-//! pipelining, and ping-pong vs. shared-buffer hand-offs — prunes them
-//! with the fast analytic cost model in [`cost`] (closed-form timing of
-//! the real compiled traces), and returns the top candidates ranked by
-//! estimated cycles (plus the most energy-efficient ones, so the
-//! validated Pareto front sees both axes).
+//! tall matrices, column-replication across cores (1/2/4/8), 1..8-stage
+//! pipelining, and ping-pong vs. shared-buffer hand-offs — scores them
+//! with the **compositional cost engine** in [`cost`] (per-anchor stage
+//! profiles compiled once per search, composed per candidate; the
+//! full-compile estimator survives behind [`CostModel::Compiled`] as
+//! the oracle), and returns the top candidates ranked by estimated
+//! cycles plus the estimated-(cycles, energy) Pareto front.
+//!
+//! Enumeration is **lazy branch-and-bound**: partition subtrees carry
+//! admissible per-partition and per-engine-mask cycle lower bounds, and
+//! a subtree is skipped once it provably cannot reach the top-k (by
+//! cycles or energy) nor the incrementally maintained Pareto front —
+//! so the space needs no hard candidate cap (the old 60k
+//! `CANDIDATE_CAP` is gone; `SearchOptions::cap` restores the legacy
+//! collect-then-cap walk for bounded exploration and as the exhaustive
+//! reference in tests). The one residual bound is combinatorial: past
+//! `MAX_PARTITIONS` pipeline partitions (chains of ~30+ anchors at
+//! depth 8) the partition axis keeps its canonical prefix and the
+//! outcome reports `truncated`. Subtrees fan out across the same worker pool as
+//! the sweep engine (`util::parallel`); each chunk of consecutive
+//! partitions prunes against its own deterministic local state, so the
+//! merged result is bit-identical to the serial walk at any `--jobs N`.
+//!
+//! Pruning is *exact*, not heuristic: a candidate is only skipped when
+//! an admissible lower bound proves it cannot enter the result, so the
+//! pruned search returns exactly the same ranked list and Pareto front
+//! as exhaustive scoring (gated by `tests/automap.rs`).
 //!
 //! Simulation of the surviving candidates lives in
 //! `coordinator::automap`, which fans them out across the parallel
 //! sweep engine and computes the Pareto front on *simulated*
 //! (cycles, energy).
-//!
-//! Everything here is deterministic: enumeration order is fixed,
-//! ranking breaks f64 ties on the candidate descriptor, and no
-//! randomness is involved — so `--jobs N` cannot change the result.
 //!
 //! [`LayerGraph`]: crate::nn::LayerGraph
 
@@ -29,9 +46,10 @@ pub use cost::{estimate, CostEstimate};
 
 use crate::config::SystemConfig;
 use crate::nn::LayerGraph;
+use crate::util::parallel;
 use crate::workload::compile::mapping::{Handoff, Mapping};
 use crate::workload::WorkloadError;
-use enumerate::CandidateSpec;
+use enumerate::{Anchor, CandidateSpec};
 
 /// The machine resources a mapping may claim.
 #[derive(Clone, Copy, Debug)]
@@ -58,6 +76,52 @@ impl TopologyBudget {
     }
 }
 
+/// Which cost engine scores candidates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostModel {
+    /// Compose cached per-anchor profiles — O(1) compiles per
+    /// candidate; the default.
+    Compositional,
+    /// Compile every candidate's full trace and walk it — the oracle
+    /// the compositional engine is gated against.
+    Compiled,
+}
+
+/// Search knobs. `Default` gives the full production search:
+/// compositional scoring, branch-and-bound (no cap), pipeline depth up
+/// to 8, replication up to 8, serial walk.
+#[derive(Clone, Debug)]
+pub struct SearchOptions {
+    /// Candidates returned by estimated cycles (plus up to `top_k / 2`
+    /// energy-ranked extras).
+    pub top_k: usize,
+    pub model: CostModel,
+    /// `Some(n)`: legacy collect-then-cap walk — enumerate at most `n`
+    /// candidates in canonical order, score all of them, no pruning
+    /// (this is also the exhaustive reference the pruned walk is gated
+    /// against). `None`: lazy branch-and-bound over the whole space.
+    pub cap: Option<usize>,
+    /// Deepest pipeline partition to try (clamped to cores and anchors).
+    pub max_depth: usize,
+    /// Largest column-replication factor to try (of {1, 2, 4, 8}).
+    pub max_replica: usize,
+    /// Worker threads for the partition-subtree fan-out.
+    pub jobs: usize,
+}
+
+impl Default for SearchOptions {
+    fn default() -> SearchOptions {
+        SearchOptions {
+            top_k: 8,
+            model: CostModel::Compositional,
+            cap: None,
+            max_depth: 8,
+            max_replica: 8,
+            jobs: 1,
+        }
+    }
+}
+
 /// A surviving candidate: the concrete mapping plus its analytic cost.
 pub struct Candidate {
     pub mapping: Mapping,
@@ -66,96 +130,538 @@ pub struct Candidate {
     pub est: CostEstimate,
 }
 
+/// One point of the estimated Pareto front. Deliberately mapping-free:
+/// front members outside the ranked list are reported, not simulated,
+/// so rebuilding their full `Mapping`s would be discarded work.
+pub struct FrontPoint {
+    pub desc: String,
+    pub est: CostEstimate,
+}
+
 /// Result of [`search`].
 pub struct SearchOutcome {
-    /// Specs enumerated (including budget-infeasible ones).
+    /// Candidate points visited, including pruned subtrees (the full
+    /// space size when uncapped).
     pub enumerated: usize,
-    /// Specs that produced a valid mapping under the budget.
+    /// Candidates skipped by branch-and-bound lower bounds.
+    pub pruned: usize,
+    /// Scored candidates that produced a valid mapping under the budget.
     pub feasible: usize,
-    /// The walk hit [`CANDIDATE_CAP`] (or the mask space was reduced).
+    /// The space was not fully covered: the walk hit
+    /// `SearchOptions::cap`, the engine-mask axis was reduced to its
+    /// extremes (> 12 MVM anchors), or the partition axis hit the
+    /// `MAX_PARTITIONS` materialization bound (very deep chains).
     pub truncated: bool,
     /// Top candidates, sorted by estimated cycles (stable tie-break on
     /// the descriptor).
     pub ranked: Vec<Candidate>,
+    /// The Pareto front on estimated (cycles, energy) over the whole
+    /// feasible space, sorted by cycles.
+    pub front: Vec<FrontPoint>,
 }
 
-/// Hard cap on enumerated candidates — keeps degenerate budgets bounded.
-pub const CANDIDATE_CAP: usize = 60_000;
-
-/// Search the mapping space of `graph` under `budget`, returning the
-/// `top_k` candidates by estimated cycles plus up to `top_k / 2`
-/// energy-ranked extras (deduplicated).
+/// Search with the default options (compositional branch-and-bound over
+/// the full space) at the given `top_k`.
 pub fn search(
     graph: &LayerGraph,
     budget: &TopologyBudget,
     cfg: &SystemConfig,
     top_k: usize,
 ) -> Result<SearchOutcome, WorkloadError> {
-    let (anchors, input, output) = enumerate::anchors(graph)?;
-    let (specs, truncated) = enumerate::enumerate_specs(&anchors, budget, CANDIDATE_CAP);
-    let enumerated = specs.len();
+    search_opts(graph, budget, cfg, &SearchOptions { top_k, ..SearchOptions::default() })
+}
 
-    struct Eval {
-        spec_idx: usize,
-        desc: String,
-        est: CostEstimate,
+/// One scored point of the space, light enough to keep in the pruning
+/// state (the full `Mapping` is rebuilt for winners only).
+struct Scored {
+    spec: CandidateSpec,
+    desc: String,
+    est: CostEstimate,
+}
+
+impl Scored {
+    fn cycles(&self) -> f64 {
+        self.est.cycles_per_inf
     }
-    let mut evals: Vec<Eval> = Vec::new();
-    for (spec_idx, spec) in specs.iter().enumerate() {
-        let Some((mapping, desc)) = enumerate::build_mapping(graph, &anchors, input, output, spec, budget)
-        else {
-            continue;
+
+    fn energy(&self) -> f64 {
+        self.est.energy_per_inf_j
+    }
+}
+
+fn strictly_dominates(ac: f64, ae: f64, bc: f64, be: f64) -> bool {
+    ac <= bc && ae <= be && (ac < bc || ae < be)
+}
+
+/// The incrementally maintained result state of one walk: best `top_k`
+/// by cycles, best `top_k + ceil(top_k/2)` by energy (the most the
+/// final selection can ever consume), and the (cycles, energy) Pareto
+/// front. Everything outside these sets provably cannot appear in the
+/// search outcome, which is what makes bound pruning exact.
+struct Keeper {
+    top_k: usize,
+    n_en: usize,
+    items: Vec<Scored>,
+    by_cyc: Vec<usize>,
+    by_en: Vec<usize>,
+    front: Vec<usize>,
+}
+
+impl Keeper {
+    fn new(top_k: usize) -> Keeper {
+        Keeper {
+            top_k,
+            n_en: top_k + top_k.div_ceil(2),
+            items: Vec::new(),
+            by_cyc: Vec::new(),
+            by_en: Vec::new(),
+            front: Vec::new(),
+        }
+    }
+
+    /// Worst kept cycles, once the cycles list is full (`None` before).
+    fn cyc_bound(&self) -> Option<f64> {
+        if self.top_k == 0 {
+            return Some(f64::NEG_INFINITY);
+        }
+        (self.by_cyc.len() >= self.top_k).then(|| self.items[self.by_cyc[self.top_k - 1]].cycles())
+    }
+
+    fn en_bound(&self) -> Option<f64> {
+        if self.n_en == 0 {
+            return Some(f64::NEG_INFINITY);
+        }
+        (self.by_en.len() >= self.n_en).then(|| self.items[self.by_en[self.n_en - 1]].energy())
+    }
+
+    /// May every candidate with cycles >= `clb` and energy >= `elb` be
+    /// skipped? True only when the bound proves it cannot enter the
+    /// cycles top-k (strictly worse than the kth — ties may still win
+    /// on the descriptor tie-break), cannot enter the energy keep, and
+    /// is strictly dominated on the front corner by a kept or seed
+    /// point (strictness makes exact front ties survive).
+    fn can_prune(&self, seeds: &[(f64, f64)], clb: f64, elb: f64) -> bool {
+        let Some(cb) = self.cyc_bound() else { return false };
+        if clb <= cb {
+            return false;
+        }
+        let Some(eb) = self.en_bound() else { return false };
+        if elb <= eb {
+            return false;
+        }
+        self.front
+            .iter()
+            .map(|&i| (self.items[i].cycles(), self.items[i].energy()))
+            .chain(seeds.iter().copied())
+            .any(|(c, e)| strictly_dominates(c, e, clb, elb))
+    }
+
+    fn offer(&mut self, s: Scored) {
+        let cyc_less = |a: &Scored, b: &Scored| {
+            a.cycles().total_cmp(&b.cycles()).then_with(|| a.desc.cmp(&b.desc)) == std::cmp::Ordering::Less
         };
-        match cost::estimate(graph, &mapping, cfg) {
-            Ok(est) => evals.push(Eval { spec_idx, desc, est }),
-            Err(e) => {
-                debug_assert!(false, "automap built an uncompilable mapping ({desc}): {e}");
+        let en_less = |a: &Scored, b: &Scored| {
+            a.energy().total_cmp(&b.energy()).then_with(|| a.desc.cmp(&b.desc)) == std::cmp::Ordering::Less
+        };
+        let want_cyc = self.top_k > 0
+            && (self.by_cyc.len() < self.top_k
+                || cyc_less(&s, &self.items[*self.by_cyc.last().expect("non-empty")]));
+        let want_en = self.n_en > 0
+            && (self.by_en.len() < self.n_en
+                || en_less(&s, &self.items[*self.by_en.last().expect("non-empty")]));
+        let want_front = !self
+            .front
+            .iter()
+            .any(|&i| strictly_dominates(self.items[i].cycles(), self.items[i].energy(), s.cycles(), s.energy()));
+        if !(want_cyc || want_en || want_front) {
+            return;
+        }
+        self.items.push(s);
+        let idx = self.items.len() - 1;
+        if want_cyc {
+            let pos = self.by_cyc.partition_point(|&i| cyc_less(&self.items[i], &self.items[idx]));
+            self.by_cyc.insert(pos, idx);
+            self.by_cyc.truncate(self.top_k);
+        }
+        if want_en {
+            let pos = self.by_en.partition_point(|&i| en_less(&self.items[i], &self.items[idx]));
+            self.by_en.insert(pos, idx);
+            self.by_en.truncate(self.n_en);
+        }
+        if want_front {
+            let (c, e) = (self.items[idx].cycles(), self.items[idx].energy());
+            self.front.retain(|&i| {
+                !strictly_dominates(c, e, self.items[i].cycles(), self.items[i].energy())
+            });
+            self.front.push(idx);
+        }
+        self.maybe_compact();
+    }
+
+    /// Drop items evicted from every list so memory stays proportional
+    /// to the live result state, not to the number of improving offers.
+    fn maybe_compact(&mut self) {
+        let live = self.by_cyc.len() + self.by_en.len() + self.front.len();
+        if self.items.len() < 256 || self.items.len() < 3 * live {
+            return;
+        }
+        let mut alive = vec![false; self.items.len()];
+        for &i in self.by_cyc.iter().chain(&self.by_en).chain(&self.front) {
+            alive[i] = true;
+        }
+        let mut remap = vec![usize::MAX; self.items.len()];
+        let mut items = Vec::with_capacity(live);
+        for (old, s) in std::mem::take(&mut self.items).into_iter().enumerate() {
+            if alive[old] {
+                remap[old] = items.len();
+                items.push(s);
+            }
+        }
+        self.items = items;
+        for list in [&mut self.by_cyc, &mut self.by_en, &mut self.front] {
+            for i in list.iter_mut() {
+                *i = remap[*i];
             }
         }
     }
-    let feasible = evals.len();
 
+    /// All live kept candidates (union of the three lists), deduplicated,
+    /// in item-insertion order.
+    fn into_kept(self) -> Vec<Scored> {
+        let mut keep: Vec<usize> = self
+            .by_cyc
+            .iter()
+            .chain(&self.by_en)
+            .chain(&self.front)
+            .copied()
+            .collect();
+        keep.sort_unstable();
+        keep.dedup();
+        let mut slots: Vec<Option<Scored>> = self.items.into_iter().map(Some).collect();
+        keep.into_iter()
+            .map(|i| slots[i].take().expect("kept index is live"))
+            .collect()
+    }
+}
+
+/// Result of one walked chunk of partition subtrees.
+struct SubResult {
+    kept: Vec<Scored>,
+    enumerated: usize,
+    pruned: usize,
+    feasible: usize,
+    truncated: bool,
+}
+
+/// Walk a chunk of consecutive partitions in canonical order. With
+/// `bounds`, subtrees and engine-mask groups are pruned against the
+/// chunk-local keeper + the global seed points (deterministic: the
+/// chunk's decisions depend only on its own inputs). With `cap`, the
+/// walk is the legacy exhaustive one and stops after `cap` candidates.
+#[allow(clippy::too_many_arguments)]
+fn walk_chunk<F>(
+    chunk: &[Vec<usize>],
+    masks: &[u64],
+    replica_opts: &[usize],
+    top_k: usize,
+    seeds: &[(f64, f64)],
+    bounds: Option<(&cost::CostEngine, &[Anchor], &[Option<usize>])>,
+    score: &F,
+    cap: Option<usize>,
+) -> SubResult
+where
+    F: Fn(&CandidateSpec) -> Option<(String, CostEstimate)>,
+{
+    let mut keeper = Keeper::new(top_k);
+    let (mut enumerated, mut pruned, mut feasible) = (0usize, 0usize, 0usize);
+    let mut truncated = false;
+    'outer: for starts in chunk {
+        let s = starts.len();
+        let handoffs: &[Handoff] =
+            if s == 1 { &[Handoff::PingPong] } else { &[Handoff::PingPong, Handoff::SharedBuffer] };
+        let per_mask = replica_opts.len() * handoffs.len();
+        if cap.is_none() {
+            if let Some((eng, anchors, _)) = bounds {
+                let plb = eng.partition_lower_bound(anchors, starts);
+                if keeper.can_prune(seeds, plb, eng.energy_floor(plb)) {
+                    enumerated += masks.len() * per_mask;
+                    pruned += masks.len() * per_mask;
+                    continue;
+                }
+            }
+        }
+        // One reusable spec per partition: the inner loops only flip its
+        // scalar axes, and an owned copy is made just for the (rare)
+        // candidates the keeper actually retains.
+        let mut spec = CandidateSpec {
+            starts: starts.clone(),
+            analog_mask: 0,
+            replicas: 1,
+            handoff: Handoff::PingPong,
+        };
+        for &mask in masks {
+            if cap.is_none() {
+                if let Some((eng, anchors, mvm_index)) = bounds {
+                    let mlb = eng.mask_lower_bound(anchors, mvm_index, starts, mask);
+                    if keeper.can_prune(seeds, mlb, eng.energy_floor(mlb)) {
+                        enumerated += per_mask;
+                        pruned += per_mask;
+                        continue;
+                    }
+                }
+            }
+            for &r in replica_opts {
+                for &h in handoffs {
+                    if let Some(c) = cap {
+                        if enumerated >= c {
+                            truncated = true;
+                            break 'outer;
+                        }
+                    }
+                    enumerated += 1;
+                    spec.analog_mask = mask;
+                    spec.replicas = r;
+                    spec.handoff = h;
+                    if let Some((desc, est)) = score(&spec) {
+                        feasible += 1;
+                        keeper.offer(Scored { spec: spec.clone(), desc, est });
+                    }
+                }
+            }
+        }
+    }
+    SubResult { kept: keeper.into_kept(), enumerated, pruned, feasible, truncated }
+}
+
+/// Search the mapping space of `graph` under `budget` with explicit
+/// [`SearchOptions`].
+pub fn search_opts(
+    graph: &LayerGraph,
+    budget: &TopologyBudget,
+    cfg: &SystemConfig,
+    opts: &SearchOptions,
+) -> Result<SearchOutcome, WorkloadError> {
+    let (anchors, input, output) = enumerate::anchors(graph)?;
+    let n = anchors.len();
+    let m = anchors.iter().filter(|a| a.mvm.is_some()).count();
+    let (masks, reduced_masks) = enumerate::engine_masks(m);
+    let replica_opts: Vec<usize> = [1usize, 2, 4, 8]
+        .iter()
+        .copied()
+        .filter(|&r| r <= budget.cores && r <= opts.max_replica.max(1))
+        .collect();
+    let max_stages = opts.max_depth.max(1).min(budget.cores).min(n.max(1));
+    // A capped walk touches at most `cap` partitions (each yields >= 1
+    // candidate), so don't materialize cut lists past the cap.
+    let (parts_list, parts_truncated) =
+        enumerate::partitions(n, max_stages, opts.cap.unwrap_or(usize::MAX));
+    let mvm_index: Vec<Option<usize>> = {
+        let mut k = 0usize;
+        anchors
+            .iter()
+            .map(|a| {
+                a.mvm.as_ref().map(|_| {
+                    let i = k;
+                    k += 1;
+                    i
+                })
+            })
+            .collect()
+    };
+
+    let engine = match opts.model {
+        CostModel::Compositional => Some(cost::CostEngine::new(
+            graph,
+            &anchors,
+            input,
+            output,
+            budget,
+            cfg,
+            &replica_opts,
+        )),
+        CostModel::Compiled => None,
+    };
+    let score = |spec: &CandidateSpec| -> Option<(String, CostEstimate)> {
+        match &engine {
+            Some(eng) => {
+                let est = eng.score(&anchors, spec)?;
+                Some((enumerate::spec_desc(&anchors, spec), est))
+            }
+            None => {
+                let (mapping, desc) = enumerate::build_mapping(graph, &anchors, input, output, spec, budget)?;
+                match cost::estimate(graph, &mapping, cfg) {
+                    Ok(est) => Some((desc, est)),
+                    Err(e) => {
+                        debug_assert!(false, "automap built an uncompilable mapping ({desc}): {e}");
+                        None
+                    }
+                }
+            }
+        }
+    };
+
+    #[derive(Default)]
+    struct Merged {
+        enumerated: usize,
+        pruned: usize,
+        feasible: usize,
+        truncated: bool,
+        evals: Vec<Scored>,
+    }
+    let fold = |mut acc: Merged, r: SubResult| -> Merged {
+        acc.enumerated += r.enumerated;
+        acc.pruned += r.pruned;
+        acc.feasible += r.feasible;
+        acc.truncated |= r.truncated;
+        acc.evals.extend(r.kept);
+        acc
+    };
+
+    let merged: Merged = if let Some(cap) = opts.cap {
+        // Legacy exhaustive-capped walk: serial, unpruned, canonical
+        // order — the reference the branch-and-bound walk is gated
+        // against.
+        fold(
+            Merged::default(),
+            walk_chunk(&parts_list, &masks, &replica_opts, opts.top_k, &[], None, &score, Some(cap)),
+        )
+    } else {
+        // Seed the chunk-local pruners with the single-stage extremes so
+        // even the first subtrees can discard dominated regions.
+        let seeds: Vec<(f64, f64)> = match &engine {
+            Some(eng) => {
+                let mut seed_specs = vec![CandidateSpec {
+                    starts: vec![0],
+                    analog_mask: 0,
+                    replicas: 1,
+                    handoff: Handoff::PingPong,
+                }];
+                if let Some(&all) = masks.last() {
+                    if all != 0 {
+                        seed_specs.push(CandidateSpec {
+                            starts: vec![0],
+                            analog_mask: all,
+                            replicas: 1,
+                            handoff: Handoff::PingPong,
+                        });
+                    }
+                }
+                seed_specs
+                    .iter()
+                    .filter_map(|s| eng.score(&anchors, s))
+                    .map(|e| (e.cycles_per_inf, e.energy_per_inf_j))
+                    .collect()
+            }
+            None => Vec::new(),
+        };
+        let bounds = engine
+            .as_ref()
+            .map(|e| (e, anchors.as_slice(), mvm_index.as_slice()));
+        // Fixed-size chunking (independent of the worker count) keeps
+        // the per-chunk pruning decisions — and therefore every counter
+        // — bit-identical at any `--jobs N`.
+        let chunk = parts_list.len().div_ceil(64).max(1);
+        let tasks: Vec<&[Vec<usize>]> = parts_list.chunks(chunk).collect();
+        parallel::parallel_reduce(
+            tasks,
+            opts.jobs,
+            Merged::default(),
+            |task| walk_chunk(task, &masks, &replica_opts, opts.top_k, &seeds, bounds, &score, None),
+            fold,
+        )
+    };
+    let Merged { enumerated, pruned, feasible, truncated, evals } = merged;
+    let truncated = truncated || reduced_masks || parts_truncated;
+
+    // Exact final selection over the union of kept candidates — the
+    // same rule the collect-everything walk used, so pruning is
+    // outcome-invisible: top_k by cycles, then energy-ranked extras.
     let mut by_cycles: Vec<usize> = (0..evals.len()).collect();
     by_cycles.sort_by(|&a, &b| {
         evals[a]
-            .est
-            .cycles_per_inf
-            .total_cmp(&evals[b].est.cycles_per_inf)
+            .cycles()
+            .total_cmp(&evals[b].cycles())
             .then_with(|| evals[a].desc.cmp(&evals[b].desc))
     });
-    let mut selected: Vec<usize> = by_cycles.iter().copied().take(top_k).collect();
+    let mut selected: Vec<usize> = by_cycles.iter().copied().take(opts.top_k).collect();
     let mut by_energy: Vec<usize> = (0..evals.len()).collect();
     by_energy.sort_by(|&a, &b| {
         evals[a]
-            .est
-            .energy_per_inf_j
-            .total_cmp(&evals[b].est.energy_per_inf_j)
+            .energy()
+            .total_cmp(&evals[b].energy())
             .then_with(|| evals[a].desc.cmp(&evals[b].desc))
     });
     for &i in &by_energy {
-        if selected.len() >= top_k + top_k.div_ceil(2) {
+        if selected.len() >= opts.top_k + opts.top_k.div_ceil(2) {
             break;
         }
         if !selected.contains(&i) {
             selected.push(i);
         }
     }
+    // Pareto front by sorted sweep (O(n log n), not pairwise O(n^2)):
+    // walk cycles-ascending groups of equal cycles; a group's min-energy
+    // points survive iff they beat the best energy of every strictly
+    // faster candidate (ties on both axes are non-dominated and all
+    // kept — the same strict-dominance rule the simulated front uses).
+    let mut order: Vec<usize> = (0..evals.len()).collect();
+    order.sort_by(|&a, &b| {
+        evals[a]
+            .cycles()
+            .total_cmp(&evals[b].cycles())
+            .then_with(|| evals[a].energy().total_cmp(&evals[b].energy()))
+            .then_with(|| evals[a].desc.cmp(&evals[b].desc))
+    });
+    let mut front_idx: Vec<usize> = Vec::new();
+    let mut best_energy = f64::INFINITY;
+    let mut i = 0usize;
+    while i < order.len() {
+        let mut j = i;
+        while j < order.len()
+            && evals[order[j]].cycles().total_cmp(&evals[order[i]].cycles()).is_eq()
+        {
+            j += 1;
+        }
+        let group_min = evals[order[i]].energy();
+        if group_min < best_energy {
+            for &idx in &order[i..j] {
+                if evals[idx].energy().total_cmp(&group_min).is_eq() {
+                    front_idx.push(idx);
+                } else {
+                    break;
+                }
+            }
+            best_energy = group_min;
+        }
+        i = j;
+    }
+    front_idx.sort_by(|&a, &b| {
+        evals[a]
+            .cycles()
+            .total_cmp(&evals[b].cycles())
+            .then_with(|| evals[a].desc.cmp(&evals[b].desc))
+    });
 
     // Rebuild only the winners' mappings; their estimates are reused.
-    let mut ranked: Vec<Candidate> = Vec::with_capacity(selected.len());
-    for &i in &selected {
-        let spec = &specs[evals[i].spec_idx];
-        let (mapping, desc) = enumerate::build_mapping(graph, &anchors, input, output, spec, budget)
-            .expect("spec was feasible on the first build");
-        ranked.push(Candidate { mapping, desc, est: evals[i].est.clone() });
-    }
+    let build = |i: usize| -> Candidate {
+        let (mapping, desc) = enumerate::build_mapping(graph, &anchors, input, output, &evals[i].spec, budget)
+            .expect("spec was feasible when scored");
+        debug_assert_eq!(desc, evals[i].desc);
+        Candidate { mapping, desc, est: evals[i].est.clone() }
+    };
+    let mut ranked: Vec<Candidate> = selected.iter().map(|&i| build(i)).collect();
     ranked.sort_by(|a, b| {
         a.est
             .cycles_per_inf
             .total_cmp(&b.est.cycles_per_inf)
             .then_with(|| a.desc.cmp(&b.desc))
     });
-    Ok(SearchOutcome { enumerated, feasible, truncated, ranked })
+    let front: Vec<FrontPoint> = front_idx
+        .iter()
+        .map(|&i| FrontPoint { desc: evals[i].desc.clone(), est: evals[i].est.clone() })
+        .collect();
+
+    Ok(SearchOutcome { enumerated, pruned, feasible, truncated, ranked, front })
 }
 
 /// The naive all-digital single-core mapping — the acceptance baseline
@@ -192,6 +698,7 @@ mod tests {
         // The fastest estimate puts every layer on AIMC.
         assert!(out.ranked[0].desc.contains('A'), "{}", out.ranked[0].desc);
         assert!(!out.truncated);
+        assert!(!out.front.is_empty());
         // Every ranked candidate compiles.
         for c in &out.ranked {
             compile::compile(&g, &c.mapping, 1).unwrap();
@@ -205,12 +712,59 @@ mod tests {
         let a = search(&g, &budget, &hp(), 5).unwrap();
         let b = search(&g, &budget, &hp(), 5).unwrap();
         assert_eq!(a.enumerated, b.enumerated);
+        assert_eq!(a.pruned, b.pruned);
         assert_eq!(a.feasible, b.feasible);
         let descs = |o: &SearchOutcome| o.ranked.iter().map(|c| c.desc.clone()).collect::<Vec<_>>();
         assert_eq!(descs(&a), descs(&b));
         for (x, y) in a.ranked.iter().zip(&b.ranked) {
             assert_eq!(x.est.cycles_per_inf.to_bits(), y.est.cycles_per_inf.to_bits());
         }
+    }
+
+    #[test]
+    fn parallel_walk_is_bit_identical_to_serial() {
+        let g = LayerGraph::transformer(64, 2, 16, 1, 128);
+        let budget = TopologyBudget { cores: 4, tiles: 8, tile_rows: 128, tile_cols: 256, channels: 32 };
+        let serial = search_opts(&g, &budget, &hp(), &SearchOptions { top_k: 5, jobs: 1, ..Default::default() }).unwrap();
+        let parallel = search_opts(&g, &budget, &hp(), &SearchOptions { top_k: 5, jobs: 4, ..Default::default() }).unwrap();
+        assert_eq!(serial.enumerated, parallel.enumerated);
+        assert_eq!(serial.pruned, parallel.pruned);
+        assert_eq!(serial.feasible, parallel.feasible);
+        assert_eq!(serial.ranked.len(), parallel.ranked.len());
+        for (a, b) in serial.ranked.iter().zip(&parallel.ranked) {
+            assert_eq!(a.desc, b.desc);
+            assert_eq!(a.est.cycles_per_inf.to_bits(), b.est.cycles_per_inf.to_bits());
+            assert_eq!(a.est.energy_per_inf_j.to_bits(), b.est.energy_per_inf_j.to_bits());
+        }
+        let fd = |o: &SearchOutcome| o.front.iter().map(|c| c.desc.clone()).collect::<Vec<_>>();
+        assert_eq!(fd(&serial), fd(&parallel));
+    }
+
+    #[test]
+    fn capped_walk_truncates_and_reports_it() {
+        let g = LayerGraph::mlp(&[256, 128, 64]);
+        let budget = TopologyBudget { cores: 4, tiles: 8, tile_rows: 256, tile_cols: 256, channels: 32 };
+        let out = search_opts(&g, &budget, &hp(), &SearchOptions { top_k: 4, cap: Some(10), ..Default::default() })
+            .unwrap();
+        assert!(out.truncated);
+        assert_eq!(out.enumerated, 10);
+        assert_eq!(out.pruned, 0);
+        // An ample cap behaves like the exhaustive walk.
+        let full = search_opts(
+            &g,
+            &budget,
+            &hp(),
+            &SearchOptions { top_k: 4, cap: Some(usize::MAX), ..Default::default() },
+        )
+        .unwrap();
+        assert!(!full.truncated);
+        let pruned = search_opts(&g, &budget, &hp(), &SearchOptions { top_k: 4, ..Default::default() }).unwrap();
+        assert_eq!(full.enumerated, pruned.enumerated);
+        assert!(pruned.feasible <= full.feasible);
+        let descs = |o: &SearchOutcome| o.ranked.iter().map(|c| c.desc.clone()).collect::<Vec<_>>();
+        assert_eq!(descs(&full), descs(&pruned));
+        let fronts = |o: &SearchOutcome| o.front.iter().map(|c| c.desc.clone()).collect::<Vec<_>>();
+        assert_eq!(fronts(&full), fronts(&pruned));
     }
 
     #[test]
@@ -236,6 +790,27 @@ mod tests {
         let analog: Vec<&Candidate> = out.ranked.iter().filter(|c| c.desc.contains('A')).collect();
         assert!(!analog.is_empty(), "no analog candidate found");
         assert!(analog.iter().all(|c| !c.desc.contains("r1")), "analog requires replication here");
+    }
+
+    #[test]
+    fn deeper_pipelines_and_octal_replication_are_searched() {
+        // 7 dense anchors on an 8-core budget: the enlarged space
+        // (depth 1..8, replication {1,2,4,8}) must exceed the removed
+        // 60k cap, and narrowing either axis must shrink it.
+        let dims: Vec<u64> = vec![512; 8];
+        let g = LayerGraph::mlp(&dims);
+        let budget = TopologyBudget { cores: 8, tiles: 16, tile_rows: 512, tile_cols: 512, channels: 64 };
+        let out = search_opts(&g, &budget, &hp(), &SearchOptions { top_k: 8, ..Default::default() }).unwrap();
+        assert!(out.enumerated > 60_000, "enlarged space should exceed the old cap: {}", out.enumerated);
+        assert!(!out.truncated);
+        let narrow_r = search_opts(&g, &budget, &hp(), &SearchOptions { top_k: 8, max_replica: 4, ..Default::default() })
+            .unwrap();
+        let shallow = search_opts(&g, &budget, &hp(), &SearchOptions { top_k: 8, max_depth: 6, ..Default::default() })
+            .unwrap();
+        assert!(narrow_r.enumerated < out.enumerated, "r8 axis missing");
+        assert!(shallow.enumerated < out.enumerated, "depth 7..8 axis missing");
+        // The best deep-space mapping still compiles.
+        compile::compile(&g, &out.ranked[0].mapping, 1).unwrap();
     }
 
     #[test]

@@ -453,8 +453,10 @@ fn emit_replica(
 }
 
 /// Lower one non-chain layer step for replica `r` of a stage split
-/// `parts` ways.
-fn emit_step(b: &mut TraceBuilder, graph: &LayerGraph, step: &Step, r: usize, parts: u64) {
+/// `parts` ways. Exposed crate-wide so the automap compositional cost
+/// engine can emit anchor regions in isolation through the exact same
+/// lowering rules the full compile uses (profiles cannot drift).
+pub(crate) fn emit_step(b: &mut TraceBuilder, graph: &LayerGraph, step: &Step, r: usize, parts: u64) {
     let node = &graph.nodes[step.node];
     match &node.kind {
         LayerKind::Dense { rows, cols, weight_slot } => {

@@ -1,12 +1,16 @@
 //! Automap acceptance tests: the searched mapping space, the analytic
-//! cost model vs the simulator, determinism under `--jobs N`, and the
+//! cost models vs the simulator, determinism under `--jobs N`, the
 //! ISSUE-3 acceptance criterion (best transformer mapping beats the
-//! naive all-digital single-core mapping on simulated cycles).
+//! naive all-digital single-core mapping on simulated cycles), and the
+//! ISSUE-5 equivalence gates: the compositional cost engine ranks
+//! candidates identically to the full-compile oracle, and the pruned
+//! branch-and-bound walk returns exactly the exhaustive walk's outcome.
 
 use alpine::config::{SystemConfig, SystemKind};
 use alpine::coordinator::automap::{run_search, AutomapOptions};
 use alpine::nn::LayerGraph;
-use alpine::workload::automap::{self, TopologyBudget};
+use alpine::util::miniprop;
+use alpine::workload::automap::{self, CostModel, SearchOptions, TopologyBudget};
 use alpine::workload::mlp::{self, MlpCase};
 use alpine::workload::transformer::TransformerShape;
 
@@ -25,7 +29,7 @@ fn budget() -> TopologyBudget {
 #[test]
 fn automap_transformer_beats_naive_digital() {
     let graph = transformer_graph();
-    let opts = AutomapOptions { top_k: 6, n_inf: 3, jobs: 2 };
+    let opts = AutomapOptions { top_k: 6, n_inf: 3, jobs: 2, ..Default::default() };
     let rep = run_search(&graph, &budget(), SystemKind::HighPower, opts).unwrap();
 
     assert!(rep.feasible > 4, "search space collapsed: {} feasible", rep.feasible);
@@ -54,18 +58,19 @@ fn automap_parallel_identical_to_serial() {
         &graph,
         &budget(),
         SystemKind::HighPower,
-        AutomapOptions { top_k: 5, n_inf: 2, jobs: 1 },
+        AutomapOptions { top_k: 5, n_inf: 2, jobs: 1, ..Default::default() },
     )
     .unwrap();
     let parallel = run_search(
         &graph,
         &budget(),
         SystemKind::HighPower,
-        AutomapOptions { top_k: 5, n_inf: 2, jobs: 4 },
+        AutomapOptions { top_k: 5, n_inf: 2, jobs: 4, ..Default::default() },
     )
     .unwrap();
 
     assert_eq!(serial.enumerated, parallel.enumerated);
+    assert_eq!(serial.pruned, parallel.pruned);
     assert_eq!(serial.feasible, parallel.feasible);
     assert_eq!(serial.rows.len(), parallel.rows.len());
     assert_eq!(serial.best, parallel.best);
@@ -137,9 +142,220 @@ fn automap_mlp_search_end_to_end() {
         &graph,
         &budget(),
         SystemKind::HighPower,
-        AutomapOptions { top_k: 6, n_inf: 3, jobs: 2 },
+        AutomapOptions { top_k: 6, n_inf: 3, jobs: 2, ..Default::default() },
     )
     .unwrap();
     assert!(rep.speedup_vs_baseline() > 1.0, "speedup {:.2}", rep.speedup_vs_baseline());
     assert!(rep.rows.iter().any(|r| r.desc.contains('A')));
+}
+
+fn descs(o: &automap::SearchOutcome) -> Vec<String> {
+    o.ranked.iter().map(|c| c.desc.clone()).collect()
+}
+
+fn front_descs(o: &automap::SearchOutcome) -> Vec<String> {
+    o.front.iter().map(|c| c.desc.clone()).collect()
+}
+
+/// The two engines sum the same op multiset in different f64 orders, so
+/// exact math ties may resolve a round-off apart and legally swap
+/// positions (or hop across the top-k boundary / a front-dominance
+/// test). Equivalence therefore means: same chosen mapping, per-desc
+/// costs within round-off, and any set/order difference confined to
+/// sub-round-off near-ties — a real modeling divergence blows far past
+/// `REL_EPS` and still fails loudly.
+const REL_EPS: f64 = 1e-9;
+/// `top_k` both gate searches run with (the cycles-cut boundary of the
+/// near-tie fallback in `assert_ranked_equivalent`).
+const GATE_TOP_K: usize = 6;
+
+fn ranked_of(o: &automap::SearchOutcome) -> Vec<(String, f64, f64)> {
+    o.ranked.iter().map(|c| (c.desc.clone(), c.est.cycles_per_inf, c.est.energy_per_inf_j)).collect()
+}
+
+fn front_of(o: &automap::SearchOutcome) -> Vec<(String, f64, f64)> {
+    o.front.iter().map(|c| (c.desc.clone(), c.est.cycles_per_inf, c.est.energy_per_inf_j)).collect()
+}
+
+fn assert_ranked_equivalent(name: &str, a: &automap::SearchOutcome, b: &automap::SearchOutcome) {
+    assert_eq!(
+        a.ranked[0].desc, b.ranked[0].desc,
+        "{name}: chosen mapping differs ({} vs {})",
+        a.ranked[0].desc, b.ranked[0].desc
+    );
+    let (ra, rb) = (ranked_of(a), ranked_of(b));
+    for (xs, ys, side) in [(&ra, &rb, "first"), (&rb, &ra, "second")] {
+        for (desc, cyc, en) in xs {
+            match ys.iter().find(|(d, _, _)| d == desc) {
+                Some((_, c2, e2)) => {
+                    assert!(
+                        (cyc - c2).abs() <= REL_EPS * cyc && (en - e2).abs() <= REL_EPS * en,
+                        "{name} {desc}: cost drift beyond round-off ({cyc} vs {c2}, {en} vs {e2})"
+                    );
+                }
+                None => {
+                    // Only admissible when it straddles a selection
+                    // boundary by round-off: its cycles sit at the other
+                    // side's top-k-by-cycles cut, or its energy at the
+                    // worst kept energy (an upper bound on the
+                    // energy-extras cut), within eps. A genuinely
+                    // better-or-worse candidate missing from one side
+                    // still fails.
+                    let mut cycs: Vec<f64> = ys.iter().map(|(_, c2, _)| *c2).collect();
+                    cycs.sort_by(f64::total_cmp);
+                    let cyc_cut = cycs.get(GATE_TOP_K - 1).copied().unwrap_or(f64::INFINITY);
+                    let worst_e = ys.iter().map(|(_, _, e2)| *e2).fold(0f64, f64::max);
+                    let near_cyc = (cyc - cyc_cut).abs() <= REL_EPS * cyc_cut;
+                    let near_en = (en - worst_e).abs() <= REL_EPS * worst_e;
+                    assert!(
+                        near_cyc || near_en,
+                        "{name}: candidate {desc} ranked only on the {side} side and is no near-tie"
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn assert_front_equivalent(name: &str, a: &automap::SearchOutcome, b: &automap::SearchOutcome) {
+    let (fa, fb) = (front_of(a), front_of(b));
+    for (xs, ys, side) in [(&fa, &fb, "first"), (&fb, &fa, "second")] {
+        for (desc, cyc, en) in xs {
+            if ys.iter().any(|(d, _, _)| d == desc) {
+                continue;
+            }
+            // A front point missing from the other side must be within
+            // round-off of being dominated there (an ulp-scale dominance
+            // flip, not a modeling divergence).
+            let nearly_dominated = ys
+                .iter()
+                .any(|(_, c2, e2)| *c2 <= cyc * (1.0 + REL_EPS) && *e2 <= en * (1.0 + REL_EPS));
+            assert!(
+                nearly_dominated,
+                "{name}: front point {desc} only on the {side} side and is no near-tie"
+            );
+        }
+    }
+}
+
+/// ISSUE-5 gate: on every pinned MLP + transformer case, the
+/// compositional engine must (a) agree with the compiled oracle on
+/// which candidates are feasible, (b) return the same chosen mapping,
+/// ranked candidates, and estimated Pareto front (modulo sub-round-off
+/// near-ties — see `REL_EPS`), and (c) estimate every candidate within
+/// f64 round-off of the oracle.
+#[test]
+fn compositional_matches_compiled_oracle_on_pinned_cases() {
+    let cfg = SystemConfig::high_power();
+    let cases: Vec<(&str, LayerGraph)> = vec![
+        ("mlp-256-128-64", LayerGraph::mlp(&[256, 128, 64])),
+        ("mlp-256-256-64", LayerGraph::mlp(&[256, 256, 64])),
+        ("mlp-784-512-256-128-10", LayerGraph::mlp(&[784, 512, 256, 128, 10])),
+        ("mlp-wide-128-512", LayerGraph::mlp(&[128, 512])),
+        ("transformer-l1", transformer_graph()),
+        ("transformer-l2", TransformerShape::new(128, 4, 32, 2, 256).unwrap().graph()),
+    ];
+    for (name, graph) in cases {
+        // Exhaustive on both engines (cap = MAX disables pruning) so
+        // feasibility can be compared 1:1, depth/replication clamped to
+        // keep the compiled walk fast.
+        let exhaustive = |model: CostModel| SearchOptions {
+            top_k: GATE_TOP_K,
+            model,
+            cap: Some(usize::MAX),
+            max_depth: 4,
+            max_replica: 4,
+            jobs: 1,
+        };
+        let oracle =
+            automap::search_opts(&graph, &budget(), &cfg, &exhaustive(CostModel::Compiled)).unwrap();
+        let composed =
+            automap::search_opts(&graph, &budget(), &cfg, &exhaustive(CostModel::Compositional))
+                .unwrap();
+        assert_eq!(oracle.enumerated, composed.enumerated, "{name}: enumerated drift");
+        assert_eq!(oracle.feasible, composed.feasible, "{name}: feasibility drift");
+        assert_ranked_equivalent(name, &oracle, &composed);
+        assert_front_equivalent(name, &oracle, &composed);
+        // The pruned branch-and-bound walk (the production default)
+        // returns the same chosen mapping and front as the oracle.
+        let bnb = automap::search_opts(
+            &graph,
+            &budget(),
+            &cfg,
+            &SearchOptions {
+                top_k: GATE_TOP_K,
+                max_depth: 4,
+                max_replica: 4,
+                jobs: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_ranked_equivalent(name, &oracle, &bnb);
+        assert_front_equivalent(name, &oracle, &bnb);
+        // Within one engine there is no fp-order ambiguity: pruned ==
+        // exhaustive compositional exactly.
+        assert_eq!(descs(&composed), descs(&bnb), "{name}: pruned ranking drift");
+        assert_eq!(front_descs(&composed), front_descs(&bnb), "{name}: pruned front drift");
+    }
+}
+
+/// ISSUE-5 gate (proptest): over random MLP chains, budgets, and
+/// worker counts, the branch-and-bound walk returns bit-identical
+/// outcomes to the exhaustive compositional walk — same ranked descs,
+/// same estimated Pareto front, same estimates to the bit — and the
+/// parallel walk is bit-identical to serial.
+#[test]
+fn pruned_search_equals_exhaustive_under_proptest() {
+    let cfg = SystemConfig::high_power();
+    miniprop::check("automap/bnb-equals-exhaustive", 0x5_0711, |rng| {
+        let n_layers = 1 + rng.below(3) as usize;
+        let mut dims: Vec<u64> = vec![8 * (1 + rng.below(32))];
+        for _ in 0..n_layers {
+            dims.push(8 * (1 + rng.below(32)));
+        }
+        let graph = LayerGraph::mlp(&dims);
+        let budget = TopologyBudget {
+            cores: 1 + rng.below(6) as usize,
+            tiles: rng.below(8) as usize,
+            tile_rows: 64u32 << rng.below(3),
+            tile_cols: 64u32 << rng.below(3),
+            channels: rng.below(48) as usize,
+        };
+        let top_k = 1 + rng.below(6) as usize;
+        let jobs = [1, 3, 8][rng.below(3) as usize];
+        let base = SearchOptions { top_k, ..Default::default() };
+        let exhaustive = automap::search_opts(
+            &graph,
+            &budget,
+            &cfg,
+            &SearchOptions { cap: Some(usize::MAX), ..base.clone() },
+        )
+        .unwrap();
+        let pruned = automap::search_opts(&graph, &budget, &cfg, &base).unwrap();
+        let parallel = automap::search_opts(
+            &graph,
+            &budget,
+            &cfg,
+            &SearchOptions { jobs, ..base.clone() },
+        )
+        .unwrap();
+        assert!(!exhaustive.truncated);
+        assert_eq!(exhaustive.enumerated, pruned.enumerated, "space size drift");
+        assert_eq!(descs(&exhaustive), descs(&pruned), "pruned ranking drift");
+        assert_eq!(front_descs(&exhaustive), front_descs(&pruned), "pruned front drift");
+        for (a, b) in exhaustive.ranked.iter().zip(&pruned.ranked) {
+            assert_eq!(a.est.cycles_per_inf.to_bits(), b.est.cycles_per_inf.to_bits(), "{}", a.desc);
+            assert_eq!(a.est.energy_per_inf_j.to_bits(), b.est.energy_per_inf_j.to_bits(), "{}", a.desc);
+        }
+        // Parallel == serial, to the bit, including the counters.
+        assert_eq!(pruned.enumerated, parallel.enumerated);
+        assert_eq!(pruned.pruned, parallel.pruned);
+        assert_eq!(pruned.feasible, parallel.feasible);
+        assert_eq!(descs(&pruned), descs(&parallel));
+        assert_eq!(front_descs(&pruned), front_descs(&parallel));
+        for (a, b) in pruned.ranked.iter().zip(&parallel.ranked) {
+            assert_eq!(a.est.cycles_per_inf.to_bits(), b.est.cycles_per_inf.to_bits(), "{}", a.desc);
+        }
+    });
 }
