@@ -8,7 +8,7 @@ use alpine::coordinator::experiments;
 use alpine::report;
 
 fn main() {
-    let rows = experiments::fig10_lstm(experiments::LSTM_INFERENCES);
+    let rows = experiments::fig10_lstm(experiments::LSTM_INFERENCES).unwrap();
     report::aggregate_table("Fig. 10 — LSTM aggregate (10 inferences)", &rows).print();
 
     // Per-size gains vs the single-core digital reference (high-power).

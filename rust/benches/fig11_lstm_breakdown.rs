@@ -9,7 +9,7 @@ use alpine::report;
 use alpine::stats::RoiKind;
 
 fn main() {
-    let rows = experiments::fig11_lstm_breakdown(experiments::LSTM_INFERENCES);
+    let rows = experiments::fig11_lstm_breakdown(experiments::LSTM_INFERENCES).unwrap();
     report::roi_table("Fig. 11 — LSTM sub-ROI breakdown (high-power)", &rows).print();
 
     for r in &rows {

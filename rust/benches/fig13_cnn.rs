@@ -8,7 +8,7 @@ use alpine::coordinator::experiments;
 use alpine::report;
 
 fn main() {
-    let rows = experiments::fig13_cnn(experiments::CNN_INFERENCES);
+    let rows = experiments::fig13_cnn(experiments::CNN_INFERENCES).unwrap();
     report::aggregate_table("Fig. 13 — CNN aggregate (3 inferences)", &rows).print();
 
     for sys in SystemKind::ALL {

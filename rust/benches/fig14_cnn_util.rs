@@ -7,7 +7,7 @@ use alpine::coordinator::experiments;
 use alpine::report;
 
 fn main() {
-    let rows = experiments::fig14_cnn_utilization(experiments::CNN_INFERENCES);
+    let rows = experiments::fig14_cnn_utilization(experiments::CNN_INFERENCES).unwrap();
     report::utilization_table(
         "Fig. 14 — CNN-S per-core utilization (high-power; cores 0-4 = conv1-5, 5-7 = dense1-3)",
         &rows,

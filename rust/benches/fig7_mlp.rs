@@ -8,7 +8,7 @@ use alpine::report;
 use alpine::util::benchkit;
 
 fn main() {
-    let rows = experiments::fig7_mlp(experiments::MLP_INFERENCES);
+    let rows = experiments::fig7_mlp(experiments::MLP_INFERENCES).unwrap();
     report::aggregate_table("Fig. 7 — MLP aggregate (10 inferences)", &rows).print();
     report::gains_table("Fig. 7 — gains vs DIG-1core", &rows, |r| {
         r.label.contains("DIG-1core")
@@ -17,6 +17,6 @@ fn main() {
 
     // Simulator throughput for this sweep (meta-benchmark).
     benchkit::bench("sim/fig7_full_sweep", 3, || {
-        benchkit::black_box(experiments::fig7_mlp(2));
+        benchkit::black_box(experiments::fig7_mlp(2).unwrap());
     });
 }

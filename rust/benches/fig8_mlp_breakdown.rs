@@ -7,7 +7,7 @@ use alpine::report;
 use alpine::stats::RoiKind;
 
 fn main() {
-    let rows = experiments::fig8_mlp_breakdown(experiments::MLP_INFERENCES);
+    let rows = experiments::fig8_mlp_breakdown(experiments::MLP_INFERENCES).unwrap();
     report::roi_table("Fig. 8 — MLP sub-ROI run-time breakdown", &rows).print();
 
     // The paper's qualitative checks, printed for eyeballing:

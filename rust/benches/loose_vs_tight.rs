@@ -8,7 +8,7 @@ use alpine::coordinator::experiments;
 use alpine::report;
 
 fn main() {
-    let rows = experiments::loose_vs_tight(experiments::MLP_INFERENCES);
+    let rows = experiments::loose_vs_tight(experiments::MLP_INFERENCES).unwrap();
     report::aggregate_table("§VII.B — coupling comparison (MLP)", &rows).print();
 
     for sys in SystemKind::ALL {

@@ -8,7 +8,8 @@ use alpine::aimclib::checker::{self, Matrix};
 use alpine::config::SystemConfig;
 use alpine::nn::CnnVariant;
 use alpine::sim::cache::{Access, Cache};
-use alpine::sim::machine::{Machine, MachineSpec};
+use alpine::sim::machine::{Machine, MachineSpec, TileSpec};
+use alpine::sim::{Coupling, TileFaultModel};
 use alpine::util::benchkit::{bench, black_box, json_report, BenchResult};
 use alpine::util::rng::Rng;
 use alpine::workload::cnn::{self, CnnCase};
@@ -59,7 +60,7 @@ fn main() {
     let run_stream = |batched: bool, trace: &[alpine::workload::trace::TraceOp]| {
         let mut m = Machine::new(SystemConfig::high_power(), MachineSpec::default());
         m.set_batched_streams(batched);
-        m.run(vec![trace.to_vec()])
+        m.run(vec![trace.to_vec()]).unwrap()
     };
     let fast = run_stream(true, &trace);
     let reference = run_stream(false, &trace);
@@ -79,6 +80,49 @@ fn main() {
     );
     results.push(batched);
     results.push(per_line);
+
+    // Fault-hook overhead on the disabled path (PR 6): the same 64 MiB
+    // stream on a machine that carries a tile with an explicit — but
+    // inactive — `TileFaultModel::none()`. The fault checks are gated
+    // behind an `is_none()` early-out outside the streaming hot loop, so
+    // the disabled path must cost < 1% over the plain run. Compared on
+    // min_ns (the noise-robust statistic) against a same-shape baseline.
+    let tiled_spec = MachineSpec {
+        tiles: vec![TileSpec { rows: 256, cols: 256, coupling: Coupling::Tight }],
+        ..MachineSpec::default()
+    };
+    let run_stream_tiled = |hooked: bool, trace: &[alpine::workload::trace::TraceOp]| {
+        let mut m = Machine::new(SystemConfig::high_power(), tiled_spec.clone());
+        if hooked {
+            m.set_tile_fault(0, TileFaultModel::none());
+        }
+        m.run(vec![trace.to_vec()]).unwrap()
+    };
+    let plain = bench("machine/stream_64MB_lines_nofault_base", 5, || {
+        black_box(run_stream_tiled(false, &trace));
+    });
+    let hooked = bench("machine/stream_64MB_lines_faults_disabled", 5, || {
+        black_box(run_stream_tiled(true, &trace));
+    });
+    let overhead = hooked.min_ns / plain.min_ns;
+    println!(
+        "machine/stream_64MB_lines: faults-disabled overhead {:.4}x (min), {:.4}x (mean)",
+        overhead,
+        hooked.mean_ns / plain.mean_ns,
+    );
+    assert!(
+        overhead < 1.01,
+        "faults-disabled path costs {overhead:.4}x over baseline (>1% overhead)",
+    );
+    results.push(BenchResult {
+        name: "machine/stream_64MB_lines_fault_overhead_x".to_string(),
+        mean_ns: hooked.mean_ns / plain.mean_ns,
+        min_ns: overhead,
+        stddev_ns: 0.0,
+        iters: 1,
+    });
+    results.push(plain);
+    results.push(hooked);
 
     // Hit-heavy streaming (L1-resident working set): the bulk walk's
     // early-out case.
@@ -104,7 +148,7 @@ fn main() {
     let run_w = |w: &Workload, ff: bool| {
         let mut m = Machine::new(SystemConfig::high_power(), w.spec.clone());
         m.set_fast_forward(ff);
-        m.run(w.traces.clone())
+        m.run(w.traces.clone()).unwrap()
     };
     let mut ff_case = |results: &mut Vec<BenchResult>,
                        tag: &str,

@@ -24,7 +24,7 @@ fn main() {
     }
     println!();
 
-    let rows = experiments::fig13_cnn(experiments::CNN_INFERENCES);
+    let rows = experiments::fig13_cnn(experiments::CNN_INFERENCES).unwrap();
     report::aggregate_table("CNN aggregate (Fig. 13)", &rows).print();
     report::gains_table(
         "Gains vs DIG (paper: up to 20.5x/20.8x on CNN-S high-power)",
@@ -33,7 +33,7 @@ fn main() {
     )
     .print();
 
-    let util = experiments::fig14_cnn_utilization(experiments::CNN_INFERENCES);
+    let util = experiments::fig14_cnn_utilization(experiments::CNN_INFERENCES).unwrap();
     report::utilization_table(
         "CNN-S per-core utilization (Fig. 14; cores 0-4 conv, 5-7 dense)",
         &util,

@@ -122,8 +122,8 @@ fn main() -> Result<()> {
     println!("\nsimulated ALPINE hardware on the same MLP workload (10 inferences):");
     for kind in SystemKind::ALL {
         let cfg = alpine::config::SystemConfig::for_kind(kind);
-        let dig = run_workload(kind, mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 10).unwrap());
-        let ana = run_workload(kind, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 10).unwrap());
+        let dig = run_workload(kind, mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 10).unwrap()).unwrap();
+        let ana = run_workload(kind, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 10).unwrap()).unwrap();
         println!(
             "  [{:>10}] ANA {:>9}/inf {:>10.3e} J/inf | speedup {:>5.1}x energy {:>5.1}x vs DIG",
             kind.name(),

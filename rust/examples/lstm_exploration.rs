@@ -10,7 +10,7 @@ use alpine::nn::LstmModel;
 use alpine::report;
 
 fn main() {
-    let rows = experiments::fig10_lstm(experiments::LSTM_INFERENCES);
+    let rows = experiments::fig10_lstm(experiments::LSTM_INFERENCES).unwrap();
     report::aggregate_table("LSTM aggregate (Fig. 10)", &rows).print();
 
     for n_h in experiments::LSTM_SIZES {
@@ -35,6 +35,6 @@ fn main() {
         .print();
     }
 
-    let breakdown = experiments::fig11_lstm_breakdown(experiments::LSTM_INFERENCES);
+    let breakdown = experiments::fig11_lstm_breakdown(experiments::LSTM_INFERENCES).unwrap();
     report::roi_table("LSTM analog sub-ROI breakdown (Fig. 11)", &breakdown).print();
 }

@@ -10,17 +10,17 @@ use alpine::report;
 fn main() {
     let n = experiments::MLP_INFERENCES;
 
-    let rows = experiments::fig7_mlp(n);
+    let rows = experiments::fig7_mlp(n).unwrap();
     report::aggregate_table("MLP aggregate (Fig. 7)", &rows).print();
     report::gains_table("Gains vs DIG-1core (paper max: 12.8x time / 12.5x energy)", &rows, |r| {
         r.label.contains("DIG-1core")
     })
     .print();
 
-    let breakdown = experiments::fig8_mlp_breakdown(n);
+    let breakdown = experiments::fig8_mlp_breakdown(n).unwrap();
     report::roi_table("Sub-ROI breakdown (Fig. 8)", &breakdown).print();
 
-    let coupling = experiments::loose_vs_tight(n);
+    let coupling = experiments::loose_vs_tight(n).unwrap();
     report::aggregate_table("Loose vs tight coupling (§VII.B)", &coupling).print();
 
     // The paper's multi-core observation: Case 1 outperforms Cases 3/4.

@@ -63,8 +63,8 @@ fn main() -> anyhow::Result<()> {
     println!("\nfull-system simulation (10 inferences of the 1024x1024x2 MLP):\n");
     for kind in SystemKind::ALL {
         let cfg = SystemConfig::for_kind(kind);
-        let dig = run_workload(kind, mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 10).unwrap());
-        let ana = run_workload(kind, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 10).unwrap());
+        let dig = run_workload(kind, mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 10).unwrap()).unwrap();
+        let ana = run_workload(kind, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 10).unwrap()).unwrap();
         println!(
             "  [{:>10}] DIG {:>10}/inf  ANA {:>10}/inf  => speedup {:>5.1}x, energy gain {:>5.1}x",
             kind.name(),

@@ -13,6 +13,7 @@
 
 pub mod activation;
 pub mod checker;
+pub mod faults;
 
 use checker::{AimcSpec, Matrix};
 

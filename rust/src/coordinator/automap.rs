@@ -141,7 +141,11 @@ pub fn run_search(
         .iter()
         .map(|c| compile::compile(graph, &c.mapping, opts.n_inf))
         .collect::<Result<Vec<_>, _>>()?;
-    let results = parallel::parallel_map(workloads, opts.jobs, |w| run_workload(kind, w));
+    // `parallel_map` preserves input order, so the first failing
+    // candidate (in rank order, not worker order) aborts the validation.
+    let results = parallel::parallel_map(workloads, opts.jobs, |w| run_workload(kind, w))
+        .into_iter()
+        .collect::<Result<Vec<_>, _>>()?;
 
     let mut rows: Vec<AutomapRow> = cands
         .into_iter()

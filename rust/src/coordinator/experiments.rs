@@ -10,6 +10,7 @@
 
 use crate::config::{SystemConfig, SystemKind};
 use crate::nn::CnnVariant;
+use crate::sim::RunError;
 use crate::util::parallel;
 use crate::workload::cnn::{self, CnnCase};
 use crate::workload::lstm::{self, LstmCase};
@@ -64,8 +65,9 @@ pub enum SweepCase {
 
 /// Generate and simulate one sweep case (runs inside a worker). Sweep
 /// case lists are built from the fixed figure tables or pre-validated
-/// CLI input, so an unsupported case here is a caller bug.
-pub fn run_case(case: SweepCase, n_inf: u32) -> CaseResult {
+/// CLI input, so an unsupported case here is a caller bug; a machine
+/// failure (deadlock, injected tile fault) is a typed `RunError`.
+pub fn run_case(case: SweepCase, n_inf: u32) -> Result<CaseResult, RunError> {
     match case {
         SweepCase::Mlp { kind, case } => {
             let cfg = SystemConfig::for_kind(kind);
@@ -93,12 +95,19 @@ pub fn run_case(case: SweepCase, n_inf: u32) -> CaseResult {
 /// Run a sweep on `jobs` workers. Rows are returned in `cases` order;
 /// with `jobs == 1` this is exactly the serial loop the figures used to
 /// run (and any `jobs` produces bit-identical rows — each case is an
-/// isolated deterministic simulation).
-pub fn run_cases(cases: &[SweepCase], n_inf: u32, jobs: usize) -> Vec<CaseResult> {
+/// isolated deterministic simulation). The first failing case (in
+/// `cases` order, independent of worker scheduling) aborts the sweep.
+pub fn run_cases(
+    cases: &[SweepCase],
+    n_inf: u32,
+    jobs: usize,
+) -> Result<Vec<CaseResult>, RunError> {
     parallel::parallel_map(cases.to_vec(), jobs, |c| run_case(c, n_inf))
+        .into_iter()
+        .collect()
 }
 
-fn run_sweep(cases: Vec<SweepCase>, n_inf: u32) -> Vec<CaseResult> {
+fn run_sweep(cases: Vec<SweepCase>, n_inf: u32) -> Result<Vec<CaseResult>, RunError> {
     run_cases(&cases, n_inf, parallel::jobs())
 }
 
@@ -114,7 +123,7 @@ pub fn fig7_cases() -> Vec<SweepCase> {
 }
 
 /// Fig. 7: all MLP cases on both systems.
-pub fn fig7_mlp(n_inf: u32) -> Vec<CaseResult> {
+pub fn fig7_mlp(n_inf: u32) -> Result<Vec<CaseResult>, RunError> {
     run_sweep(fig7_cases(), n_inf)
 }
 
@@ -136,7 +145,7 @@ pub fn fig8_cases() -> Vec<SweepCase> {
 }
 
 /// Fig. 8: sub-ROI breakdown for the MLP reference + analog cases 1/3/4.
-pub fn fig8_mlp_breakdown(n_inf: u32) -> Vec<CaseResult> {
+pub fn fig8_mlp_breakdown(n_inf: u32) -> Result<Vec<CaseResult>, RunError> {
     run_sweep(fig8_cases(), n_inf)
 }
 
@@ -156,7 +165,7 @@ pub fn loose_vs_tight_cases() -> Vec<SweepCase> {
 }
 
 /// §VII.B: loosely-coupled vs tightly-coupled vs digital single-core.
-pub fn loose_vs_tight(n_inf: u32) -> Vec<CaseResult> {
+pub fn loose_vs_tight(n_inf: u32) -> Result<Vec<CaseResult>, RunError> {
     run_sweep(loose_vs_tight_cases(), n_inf)
 }
 
@@ -174,7 +183,7 @@ pub fn fig10_cases() -> Vec<SweepCase> {
 }
 
 /// Fig. 10: all LSTM cases x sizes x systems.
-pub fn fig10_lstm(n_inf: u32) -> Vec<CaseResult> {
+pub fn fig10_lstm(n_inf: u32) -> Result<Vec<CaseResult>, RunError> {
     run_sweep(fig10_cases(), n_inf)
 }
 
@@ -195,7 +204,7 @@ pub fn fig11_cases() -> Vec<SweepCase> {
 }
 
 /// Fig. 11: LSTM analog sub-ROI breakdown (high-power, all sizes).
-pub fn fig11_lstm_breakdown(n_inf: u32) -> Vec<CaseResult> {
+pub fn fig11_lstm_breakdown(n_inf: u32) -> Result<Vec<CaseResult>, RunError> {
     run_sweep(fig11_cases(), n_inf)
 }
 
@@ -213,7 +222,7 @@ pub fn fig13_cases() -> Vec<SweepCase> {
 }
 
 /// Fig. 13: CNN F/M/S, digital vs analog, both systems.
-pub fn fig13_cnn(n_inf: u32) -> Vec<CaseResult> {
+pub fn fig13_cnn(n_inf: u32) -> Result<Vec<CaseResult>, RunError> {
     run_sweep(fig13_cases(), n_inf)
 }
 
@@ -230,7 +239,7 @@ pub fn fig14_cases() -> Vec<SweepCase> {
 }
 
 /// Fig. 14: CNN-S per-core utilization on the high-power system.
-pub fn fig14_cnn_utilization(n_inf: u32) -> Vec<CaseResult> {
+pub fn fig14_cnn_utilization(n_inf: u32) -> Result<Vec<CaseResult>, RunError> {
     run_sweep(fig14_cases(), n_inf)
 }
 
@@ -265,7 +274,7 @@ pub fn custom_mlp_cases(shape: MlpShape) -> Vec<SweepCase> {
 }
 
 /// Sweep a custom-shape MLP across the default mappings and both systems.
-pub fn custom_mlp(shape: MlpShape, n_inf: u32) -> Vec<CaseResult> {
+pub fn custom_mlp(shape: MlpShape, n_inf: u32) -> Result<Vec<CaseResult>, RunError> {
     run_sweep(custom_mlp_cases(shape), n_inf)
 }
 
@@ -282,7 +291,7 @@ pub fn transformer_cases(shape: TransformerShape) -> Vec<SweepCase> {
 }
 
 /// Sweep the transformer hand mappings across both systems.
-pub fn transformer_sweep(shape: TransformerShape, n_inf: u32) -> Vec<CaseResult> {
+pub fn transformer_sweep(shape: TransformerShape, n_inf: u32) -> Result<Vec<CaseResult>, RunError> {
     run_sweep(transformer_cases(shape), n_inf)
 }
 
@@ -292,14 +301,14 @@ mod tests {
 
     #[test]
     fn fig7_row_count() {
-        let rows = fig7_mlp(1);
+        let rows = fig7_mlp(1).unwrap();
         assert_eq!(rows.len(), 2 * 7);
     }
 
     #[test]
     fn loose_tight_ordering_holds() {
         // §VII.B: tight > loose > digital.
-        let rows = loose_vs_tight(2);
+        let rows = loose_vs_tight(2).unwrap();
         let hp: Vec<&CaseResult> = rows
             .iter()
             .filter(|r| r.system == SystemKind::HighPower)
@@ -334,7 +343,7 @@ mod tests {
     #[test]
     fn transformer_sweep_runs_end_to_end() {
         let shape = TransformerShape::new(128, 4, 32, 1, 256).unwrap();
-        let rows = run_cases(&transformer_cases(shape), 2, 2);
+        let rows = run_cases(&transformer_cases(shape), 2, 2).unwrap();
         assert_eq!(rows.len(), 4);
         for r in &rows {
             assert!(r.time_s > 0.0, "{}", r.label);
@@ -353,7 +362,7 @@ mod tests {
     #[test]
     fn custom_mlp_sweep_runs_end_to_end() {
         let shape = MlpShape::parse("784x512x512x10").unwrap();
-        let rows = run_cases(&custom_mlp_cases(shape), 2, 2);
+        let rows = run_cases(&custom_mlp_cases(shape), 2, 2).unwrap();
         assert_eq!(rows.len(), 8);
         for r in &rows {
             assert!(r.time_s > 0.0, "{}", r.label);
@@ -370,8 +379,8 @@ mod tests {
     #[test]
     fn fig7_parallel_rows_identical_to_serial() {
         let cases = fig7_cases();
-        let serial = run_cases(&cases, 1, 1);
-        let parallel = run_cases(&cases, 1, 4);
+        let serial = run_cases(&cases, 1, 1).unwrap();
+        let parallel = run_cases(&cases, 1, 4).unwrap();
         assert_eq!(serial.len(), parallel.len());
         for (a, b) in serial.iter().zip(&parallel) {
             assert_eq!(a.label, b.label);

@@ -1,0 +1,392 @@
+//! The `alpine faults` scenario driver: sweep fault intensity from 0
+//! (fault-free) to 1 and measure graceful degradation on both axes of
+//! the model —
+//!
+//! * **accuracy**: a seed-driven [`FaultPlan`] (conductance noise,
+//!   drift, stuck lines) applied to the checker's programmed weights,
+//!   scored by [`assess_mvm`] against the fault-free checker;
+//! * **timing/energy**: deterministic transient tile stalls
+//!   ([`TileFaultModel`]) injected into every tile of the automap-best
+//!   MLP pipeline, simulated end to end.
+//!
+//! With `--fail-tile T@C` a hard tile failure is injected at cycle `C`,
+//! the typed [`RunError`] it surfaces is recorded, and the
+//! graceful-degradation pass ([`automap::degrade_mapping`]) remaps the
+//! failed tile's anchors to the digital CPU path and re-simulates —
+//! reporting the degraded cycle/energy cost instead of crashing.
+//!
+//! Determinism: intensity points fan out over `util::parallel` in input
+//! order, every point re-derives its own state from the scenario seed,
+//! and the intensity-0 point runs the unmodified fault-free machine —
+//! so reports are bit-identical at any `--jobs N` and the zero point is
+//! bit-identical to a plain `run_workload` of the same mapping.
+
+use crate::aimclib::faults::{assess_mvm, FaultPlan};
+use crate::config::{SystemConfig, SystemKind};
+use crate::nn::LayerGraph;
+use crate::sim::{RunError, TileFaultModel};
+use crate::util::parallel;
+use crate::workload::automap::{self, SearchOptions, TopologyBudget};
+use crate::workload::{compile, WorkloadError};
+
+use super::{run_workload, run_workload_with, CaseResult};
+
+/// PCM drift exponent used by the sweep (Le Gallo et al., ~0.05).
+pub const DRIFT_NU: f64 = 0.05;
+
+/// Window of the deterministic transient-stall model (1 us).
+pub const TRANSIENT_PERIOD_PS: u64 = 1_000_000;
+
+/// Knobs of one fault sweep. Intensity `x` in `[0, 1]` scales every
+/// `max_*` field linearly; `x = 0` is the bit-identical fault-free run.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultScenarioOptions {
+    pub system: SystemKind,
+    pub seed: u64,
+    /// Conductance-noise sigma at intensity 1 (`--noise`).
+    pub max_noise_sigma: f32,
+    /// Drift observation time, seconds, at intensity 1 (`--drift`).
+    pub max_drift_t_s: f64,
+    /// Stuck row/column rate at intensity 1.
+    pub max_stuck_rate: f64,
+    /// Transient-stall duty fraction of the window at intensity 1
+    /// (kept below 1 so faulty runs still complete).
+    pub max_stall_duty: f64,
+    /// Intensity points on the curve (>= 2; includes 0 and 1).
+    pub steps: usize,
+    /// Inferences per simulated point.
+    pub n_inf: u32,
+    /// Worker threads for the intensity fan-out.
+    pub jobs: usize,
+    /// `--fail-tile T@C`: hard-fail tile `T` at core cycle `C`.
+    pub fail_tile: Option<(usize, u64)>,
+}
+
+impl Default for FaultScenarioOptions {
+    fn default() -> FaultScenarioOptions {
+        FaultScenarioOptions {
+            system: SystemKind::HighPower,
+            seed: 0xA19E,
+            max_noise_sigma: 0.1,
+            max_drift_t_s: 1.0e6,
+            max_stuck_rate: 0.05,
+            max_stall_duty: 0.5,
+            steps: 5,
+            n_inf: 8,
+            jobs: 1,
+            fail_tile: None,
+        }
+    }
+}
+
+/// One point of the degradation curve.
+#[derive(Clone, Debug)]
+pub struct FaultCurvePoint {
+    pub intensity: f64,
+    /// The device fault plan this point scored accuracy under.
+    pub plan: FaultPlan,
+    /// Transient stall injected per tile-IO window, picoseconds.
+    pub stall_ps: u64,
+    /// Accuracy proxy: output MSE vs the fault-free checker.
+    pub mse: f64,
+    /// Accuracy proxy: top-1 agreement with the fault-free checker.
+    pub top1_agreement: f64,
+    /// Simulated ROI time under the transient stalls.
+    pub time_s: f64,
+    pub energy_j: f64,
+}
+
+/// Outcome of the injected hard tile failure + degradation remap.
+#[derive(Clone, Debug)]
+pub struct FailureOutcome {
+    pub tile: usize,
+    pub fail_at_ps: u64,
+    /// The typed error the failing run surfaced (`None` when the run
+    /// finished before ever touching the tile after the failure time).
+    pub error: Option<RunError>,
+    /// Descriptor of the degraded (remapped) candidate.
+    pub degraded_desc: String,
+    /// Chain-order MVM anchor indices moved to the digital CPU path.
+    pub remapped_anchors: Vec<usize>,
+    /// Fault-free run of the original mapping.
+    pub healthy: CaseResult,
+    /// Fault-free run of the degraded mapping.
+    pub degraded: CaseResult,
+}
+
+impl FailureOutcome {
+    /// Degraded-over-healthy runtime ratio (>= 1 in practice: the
+    /// remapped anchors now run on the digital cores).
+    pub fn slowdown(&self) -> f64 {
+        self.degraded.time_s / self.healthy.time_s
+    }
+}
+
+/// Full report of one `alpine faults` invocation.
+pub struct FaultReport {
+    pub system: SystemKind,
+    /// Descriptor of the automap candidate the curve runs on.
+    pub desc: String,
+    /// Tiles the candidate occupies.
+    pub tiles: usize,
+    pub curve: Vec<FaultCurvePoint>,
+    pub failure: Option<FailureOutcome>,
+}
+
+/// The pipeline the sweep degrades: the paper's 3-layer MLP shape,
+/// mapped by the automap search under the target system's budget.
+fn scenario_graph() -> LayerGraph {
+    LayerGraph::mlp(&[256, 128, 64])
+}
+
+/// Run the fault sweep (and the optional hard-failure injection).
+pub fn run_scenario(opts: &FaultScenarioOptions) -> Result<FaultReport, WorkloadError> {
+    let cfg = SystemConfig::for_kind(opts.system);
+    let graph = scenario_graph();
+    let budget = TopologyBudget::for_config(&cfg);
+    let out = automap::search_opts(
+        &graph,
+        &budget,
+        &cfg,
+        &SearchOptions { top_k: 4, jobs: opts.jobs, ..SearchOptions::default() },
+    )?;
+    let best = out.ranked.first().ok_or_else(|| {
+        WorkloadError::InvalidMapping("automap found no feasible candidate".into())
+    })?;
+    let n_tiles = best.mapping.tiles.len();
+
+    let steps = opts.steps.max(2);
+    let duty = opts.max_stall_duty.clamp(0.0, 0.95);
+    let xs: Vec<f64> = (0..steps).map(|i| i as f64 / (steps - 1) as f64).collect();
+    let point = |x: f64| -> Result<FaultCurvePoint, WorkloadError> {
+        let plan = if x <= 0.0 {
+            FaultPlan::none()
+        } else {
+            FaultPlan {
+                seed: opts.seed,
+                noise_sigma: opts.max_noise_sigma * x as f32,
+                drift_t_s: 1.0 + (opts.max_drift_t_s - 1.0).max(0.0) * x,
+                drift_nu: DRIFT_NU,
+                stuck_row_rate: opts.max_stuck_rate * x,
+                stuck_col_rate: opts.max_stuck_rate * x,
+            }
+        };
+        // Accuracy proxy on the pipeline's first (largest) dense layer.
+        let impact = assess_mvm(
+            &plan,
+            256,
+            128,
+            cfg.aimc.tile_rows as usize,
+            cfg.aimc.tile_cols as usize,
+            32,
+        );
+        let stall_ps = (duty * x * TRANSIENT_PERIOD_PS as f64).round() as u64;
+        let fault = TileFaultModel {
+            hard_fail_at_ps: None,
+            transient_stall_ps: stall_ps,
+            transient_period_ps: TRANSIENT_PERIOD_PS,
+        };
+        let faults: Vec<(usize, TileFaultModel)> = if stall_ps == 0 {
+            Vec::new() // intensity 0: the untouched fault-free machine
+        } else {
+            (0..n_tiles).map(|t| (t, fault)).collect()
+        };
+        let w = compile::compile(&graph, &best.mapping, opts.n_inf)?;
+        let r = run_workload_with(opts.system, w, &faults)?;
+        Ok(FaultCurvePoint {
+            intensity: x,
+            plan,
+            stall_ps,
+            mse: impact.mse,
+            top1_agreement: impact.top1_agreement,
+            time_s: r.time_s,
+            energy_j: r.energy.total_j(),
+        })
+    };
+    let curve: Vec<FaultCurvePoint> = parallel::parallel_map(xs, opts.jobs, point)
+        .into_iter()
+        .collect::<Result<_, _>>()?;
+
+    let failure = match opts.fail_tile {
+        None => None,
+        Some((tile, at_cycles)) => {
+            if tile >= n_tiles {
+                return Err(WorkloadError::InvalidMapping(format!(
+                    "--fail-tile {tile}: candidate {} uses only {n_tiles} tile(s)",
+                    best.desc
+                )));
+            }
+            let fail_at_ps = cfg.cycles_to_ps(at_cycles);
+            let healthy =
+                run_workload(opts.system, compile::compile(&graph, &best.mapping, opts.n_inf)?)?;
+            // Run with the injected hard failure: the machine must surface
+            // a typed error, never panic. (A run short enough to finish
+            // before touching the tile again simply completes.)
+            let hard = TileFaultModel {
+                hard_fail_at_ps: Some(fail_at_ps),
+                transient_stall_ps: 0,
+                transient_period_ps: 0,
+            };
+            let w = compile::compile(&graph, &best.mapping, opts.n_inf)?;
+            let error = run_workload_with(opts.system, w, &[(tile, hard)]).err();
+            // Graceful degradation: remap the tile's anchors to the
+            // digital cores and re-simulate.
+            let d = automap::degrade_mapping(&graph, &best.mapping, tile, &budget)?;
+            let degraded =
+                run_workload(opts.system, compile::compile(&graph, &d.mapping, opts.n_inf)?)?;
+            Some(FailureOutcome {
+                tile,
+                fail_at_ps,
+                error,
+                degraded_desc: d.desc,
+                remapped_anchors: d.remapped_anchors,
+                healthy,
+                degraded,
+            })
+        }
+    };
+
+    Ok(FaultReport { system: opts.system, desc: best.desc.clone(), tiles: n_tiles, curve, failure })
+}
+
+/// Minimal JSON string escaping (error messages may quote identifiers).
+fn esc(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Write the degradation curves as hand-rolled JSON (serde is not in
+/// the offline vendor set), in the spirit of `benchkit::json_report`.
+pub fn write_report(report: &FaultReport, path: &str) -> std::io::Result<()> {
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"system\": \"{}\",\n", report.system.name()));
+    s.push_str(&format!("  \"mapping\": \"{}\",\n", esc(&report.desc)));
+    s.push_str(&format!("  \"tiles\": {},\n", report.tiles));
+    s.push_str("  \"curve\": [\n");
+    for (i, p) in report.curve.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"intensity\": {:.4}, \"noise_sigma\": {:.6}, \"drift_t_s\": {:.3}, \
+             \"stuck_rate\": {:.6}, \"stall_ps\": {}, \"mse\": {:.6e}, \
+             \"top1_agreement\": {:.4}, \"time_s\": {:.6e}, \"energy_j\": {:.6e}}}{}\n",
+            p.intensity,
+            p.plan.noise_sigma,
+            p.plan.drift_t_s,
+            p.plan.stuck_row_rate,
+            p.stall_ps,
+            p.mse,
+            p.top1_agreement,
+            p.time_s,
+            p.energy_j,
+            if i + 1 < report.curve.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]");
+    if let Some(f) = &report.failure {
+        s.push_str(",\n  \"failure\": {\n");
+        s.push_str(&format!("    \"tile\": {},\n", f.tile));
+        s.push_str(&format!("    \"fail_at_ps\": {},\n", f.fail_at_ps));
+        s.push_str(&format!(
+            "    \"error\": {},\n",
+            match &f.error {
+                Some(e) => format!("\"{}\"", esc(&e.to_string())),
+                None => "null".to_string(),
+            }
+        ));
+        s.push_str(&format!("    \"degraded_mapping\": \"{}\",\n", esc(&f.degraded_desc)));
+        s.push_str(&format!(
+            "    \"remapped_anchors\": [{}],\n",
+            f.remapped_anchors.iter().map(|a| a.to_string()).collect::<Vec<_>>().join(", ")
+        ));
+        s.push_str(&format!("    \"healthy_time_s\": {:.6e},\n", f.healthy.time_s));
+        s.push_str(&format!("    \"degraded_time_s\": {:.6e},\n", f.degraded.time_s));
+        s.push_str(&format!("    \"slowdown\": {:.4}\n", f.slowdown()));
+        s.push_str("  }");
+    }
+    s.push_str("\n}\n");
+    std::fs::write(path, s)?;
+    println!(
+        "faults: wrote {} curve point(s){} to {path}",
+        report.curve.len(),
+        if report.failure.is_some() { " + failure outcome" } else { "" }
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(fail: Option<(usize, u64)>) -> FaultScenarioOptions {
+        FaultScenarioOptions {
+            steps: 3,
+            n_inf: 2,
+            fail_tile: fail,
+            ..FaultScenarioOptions::default()
+        }
+    }
+
+    #[test]
+    fn fault_free_endpoint_is_pristine_and_curve_degrades() {
+        let report = run_scenario(&quick(None)).unwrap();
+        assert_eq!(report.curve.len(), 3);
+        assert!(report.tiles > 0, "best MLP candidate should be analog: {}", report.desc);
+        let first = &report.curve[0];
+        let last = &report.curve[report.curve.len() - 1];
+        assert_eq!(first.intensity, 0.0);
+        assert_eq!(first.mse, 0.0);
+        assert_eq!(first.top1_agreement, 1.0);
+        assert_eq!(first.stall_ps, 0);
+        // Accuracy proxy decreases, degraded cycles increase (ISSUE-6
+        // acceptance shape).
+        assert!(last.mse > first.mse);
+        assert!(last.top1_agreement <= first.top1_agreement);
+        assert!(last.time_s > first.time_s, "{} !> {}", last.time_s, first.time_s);
+        assert!(last.energy_j >= first.energy_j);
+    }
+
+    #[test]
+    fn hard_failure_yields_typed_error_and_degraded_remap() {
+        let report = run_scenario(&quick(Some((0, 0)))).unwrap();
+        let f = report.failure.expect("failure outcome requested");
+        assert_eq!(f.tile, 0);
+        // Failing at cycle 0 is hit on the tile's very first IO op.
+        assert!(
+            matches!(f.error, Some(RunError::TileFailed { tile: 0, .. })),
+            "expected TileFailed, got {:?}",
+            f.error
+        );
+        assert!(!f.remapped_anchors.is_empty());
+        assert!(f.slowdown() >= 1.0, "digital fallback should not be faster: {}", f.slowdown());
+    }
+
+    #[test]
+    fn bad_fail_tile_is_a_clean_error() {
+        assert!(matches!(
+            run_scenario(&quick(Some((99, 0)))),
+            Err(WorkloadError::InvalidMapping(_))
+        ));
+    }
+
+    #[test]
+    fn report_writes_parseable_json() {
+        let report = run_scenario(&quick(Some((0, 0)))).unwrap();
+        let dir = std::env::temp_dir().join("alpine_faults_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_faults.json");
+        write_report(&report, path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.trim_start().starts_with('{'));
+        assert!(text.trim_end().ends_with('}'));
+        assert!(text.contains("\"curve\": ["));
+        assert!(text.contains("\"top1_agreement\""));
+        assert!(text.contains("\"failure\": {"));
+        assert!(text.contains("\"degraded_mapping\""));
+    }
+}

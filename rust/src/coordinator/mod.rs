@@ -4,11 +4,12 @@
 
 pub mod automap;
 pub mod experiments;
+pub mod faults;
 pub mod server;
 
 use crate::config::{SystemConfig, SystemKind};
 use crate::energy::{self, EnergyBreakdown};
-use crate::sim::Machine;
+use crate::sim::{Machine, RunError, TileFaultModel};
 use crate::stats::{RoiTimes, RunStats};
 use crate::workload::Workload;
 
@@ -42,13 +43,30 @@ impl CaseResult {
 /// The workload is consumed in place: spec and traces move straight
 /// into the machine (the spec clone + trace copy this used to make cost
 /// a full trace duplication per case on the multi-megaop CNN sweeps).
-pub fn run_workload(kind: SystemKind, workload: Workload) -> CaseResult {
+/// A machine-level failure (deadlock, injected tile fault) surfaces as
+/// a typed [`RunError`] instead of aborting the sweep.
+pub fn run_workload(kind: SystemKind, workload: Workload) -> Result<CaseResult, RunError> {
+    run_workload_with(kind, workload, &[])
+}
+
+/// [`run_workload`] with per-tile fault models injected before the run
+/// (the `alpine faults` scenario driver). Tile indices must be valid
+/// for the workload's machine spec. An empty slice is the fault-free
+/// path and stays bit-identical to [`run_workload`].
+pub fn run_workload_with(
+    kind: SystemKind,
+    workload: Workload,
+    faults: &[(usize, TileFaultModel)],
+) -> Result<CaseResult, RunError> {
     let Workload { label, traces, spec, inferences } = workload;
     let cfg = SystemConfig::for_kind(kind);
     let mut machine = Machine::new(cfg.clone(), spec);
-    let stats: RunStats = machine.run(traces);
+    for &(tile, model) in faults {
+        machine.set_tile_fault(tile, model);
+    }
+    let stats: RunStats = machine.run(traces)?;
     let energy = energy::compute(&cfg, &stats);
-    CaseResult {
+    Ok(CaseResult {
         label,
         system: kind,
         inferences,
@@ -67,7 +85,7 @@ pub fn run_workload(kind: SystemKind, workload: Workload) -> CaseResult {
             .iter()
             .map(|c| c.wfm_cycles as f64 / c.total_cycles().max(1) as f64)
             .collect(),
-    }
+    })
 }
 
 /// Speedup of `b` relative to `a` (a.time / b.time).
@@ -89,7 +107,7 @@ mod tests {
     fn run_workload_produces_sane_result() {
         let cfg = SystemConfig::high_power();
         let w = mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2).unwrap();
-        let r = run_workload(SystemKind::HighPower, w);
+        let r = run_workload(SystemKind::HighPower, w).unwrap();
         assert!(r.time_s > 0.0);
         assert!(r.energy.total_j() > 0.0);
         assert_eq!(r.aimc_processes, 4); // 2 layers x 2 inferences
@@ -102,11 +120,13 @@ mod tests {
         let dig = run_workload(
             SystemKind::HighPower,
             mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 2).unwrap(),
-        );
+        )
+        .unwrap();
         let ana = run_workload(
             SystemKind::HighPower,
             mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2).unwrap(),
-        );
+        )
+        .unwrap();
         let s = speedup(&dig, &ana);
         assert!(s > 1.0, "analog should win: {s}");
         assert!(energy_gain(&dig, &ana) > 1.0);

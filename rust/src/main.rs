@@ -11,6 +11,7 @@
 
 use alpine::config::{SystemConfig, SystemKind};
 use alpine::coordinator::automap::{self as automap_driver, AutomapOptions};
+use alpine::coordinator::faults::{self as faults_driver, FaultScenarioOptions};
 use alpine::coordinator::{experiments, run_workload};
 use alpine::nn::{CnnVariant, LayerGraph};
 use alpine::report;
@@ -71,8 +72,9 @@ fn dispatch(args: &[String]) -> Result<()> {
         "custom" => cmd_custom(&args[1..]),
         "automap" => cmd_automap(&args[1..]),
         "transformer" => cmd_transformer(&args[1..]),
+        "faults" => cmd_faults(&args[1..]),
         "fig7" => {
-            let rows = experiments::fig7_mlp(opt_u32(&args[1..], "--inferences", experiments::MLP_INFERENCES)?);
+            let rows = experiments::fig7_mlp(opt_u32(&args[1..], "--inferences", experiments::MLP_INFERENCES)?)?;
             report::aggregate_table("Fig. 7 — MLP aggregate", &rows).print();
             report::gains_table("Fig. 7 — gains vs DIG-1core", &rows, |r| {
                 r.label.contains("DIG-1core")
@@ -81,12 +83,12 @@ fn dispatch(args: &[String]) -> Result<()> {
             Ok(())
         }
         "fig8" => {
-            let rows = experiments::fig8_mlp_breakdown(opt_u32(&args[1..], "--inferences", experiments::MLP_INFERENCES)?);
+            let rows = experiments::fig8_mlp_breakdown(opt_u32(&args[1..], "--inferences", experiments::MLP_INFERENCES)?)?;
             report::roi_table("Fig. 8 — MLP sub-ROI breakdown", &rows).print();
             Ok(())
         }
         "loose" => {
-            let rows = experiments::loose_vs_tight(opt_u32(&args[1..], "--inferences", experiments::MLP_INFERENCES)?);
+            let rows = experiments::loose_vs_tight(opt_u32(&args[1..], "--inferences", experiments::MLP_INFERENCES)?)?;
             report::aggregate_table("§VII.B — loose vs tight coupling", &rows).print();
             report::gains_table("§VII.B — gains vs DIG-1core", &rows, |r| {
                 r.label.contains("DIG-1core")
@@ -95,24 +97,24 @@ fn dispatch(args: &[String]) -> Result<()> {
             Ok(())
         }
         "fig10" => {
-            let rows = experiments::fig10_lstm(opt_u32(&args[1..], "--inferences", experiments::LSTM_INFERENCES)?);
+            let rows = experiments::fig10_lstm(opt_u32(&args[1..], "--inferences", experiments::LSTM_INFERENCES)?)?;
             report::aggregate_table("Fig. 10 — LSTM aggregate", &rows).print();
             Ok(())
         }
         "fig11" => {
-            let rows = experiments::fig11_lstm_breakdown(opt_u32(&args[1..], "--inferences", experiments::LSTM_INFERENCES)?);
+            let rows = experiments::fig11_lstm_breakdown(opt_u32(&args[1..], "--inferences", experiments::LSTM_INFERENCES)?)?;
             report::roi_table("Fig. 11 — LSTM sub-ROI breakdown", &rows).print();
             Ok(())
         }
         "fig13" => {
-            let rows = experiments::fig13_cnn(opt_u32(&args[1..], "--inferences", experiments::CNN_INFERENCES)?);
+            let rows = experiments::fig13_cnn(opt_u32(&args[1..], "--inferences", experiments::CNN_INFERENCES)?)?;
             report::aggregate_table("Fig. 13 — CNN aggregate", &rows).print();
             report::gains_table("Fig. 13 — gains vs DIG", &rows, |r| r.label.ends_with("DIG"))
                 .print();
             Ok(())
         }
         "fig14" => {
-            let rows = experiments::fig14_cnn_utilization(opt_u32(&args[1..], "--inferences", experiments::CNN_INFERENCES)?);
+            let rows = experiments::fig14_cnn_utilization(opt_u32(&args[1..], "--inferences", experiments::CNN_INFERENCES)?)?;
             report::utilization_table("Fig. 14 — CNN-S per-core utilization (high-power)", &rows)
                 .print();
             Ok(())
@@ -156,6 +158,16 @@ fn print_help() {
          \x20     [--d-ff N] [--system hp|lp] [--inferences N]\n\
          \x20                          sweep the transformer-encoder hand\n\
          \x20                          mappings (digital vs packed analog)\n\
+         \x20 faults [--seed S] [--noise SIGMA] [--drift SECONDS]\n\
+         \x20     [--stuck RATE] [--steps N] [--fail-tile T@CYCLE]\n\
+         \x20     [--system hp|lp] [--inferences N] [--out FILE]\n\
+         \x20                          sweep fault intensity 0..1 (device\n\
+         \x20                          noise/drift/stuck lines + transient\n\
+         \x20                          tile stalls), print the degradation\n\
+         \x20                          curve and write BENCH_faults.json;\n\
+         \x20                          --fail-tile injects a hard failure\n\
+         \x20                          and reruns with the digital-fallback\n\
+         \x20                          remap instead of crashing\n\
          \x20 fig7|fig8|fig10|fig11|fig13|fig14|loose   regenerate a figure\n\
          \x20 validate                 PJRT probe-check all AOT artifacts\n\
          \n\
@@ -221,7 +233,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
         }
         other => bail!("unknown workload {other:?}"),
     };
-    let r = run_workload(system, w);
+    let r = run_workload(system, w)?;
     report::aggregate_table("run", std::slice::from_ref(&r)).print();
     report::roi_table("sub-ROI breakdown", std::slice::from_ref(&r)).print();
     Ok(())
@@ -276,7 +288,7 @@ fn cmd_custom(args: &[String]) -> Result<()> {
         let system = SystemKind::parse(&opt(args, "--system").unwrap_or_else(|| "hp".into()))
             .context("bad --system (hp|lp)")?;
         let w = mlp::generate_custom(shape, mapping, n)?;
-        let r = run_workload(system, w);
+        let r = run_workload(system, w)?;
         report::aggregate_table(&format!("custom MLP {shape}"), std::slice::from_ref(&r)).print();
         report::roi_table("sub-ROI breakdown", std::slice::from_ref(&r)).print();
     } else {
@@ -291,7 +303,7 @@ fn cmd_custom(args: &[String]) -> Result<()> {
             let sys = SystemKind::parse(&sys).context("bad --system (hp|lp)")?;
             cases.retain(|c| matches!(c, experiments::SweepCase::CustomMlp { kind, .. } if *kind == sys));
         }
-        let rows = experiments::run_cases(&cases, n, parallel::jobs());
+        let rows = experiments::run_cases(&cases, n, parallel::jobs())?;
         report::aggregate_table(&format!("custom MLP {shape} — default mappings"), &rows).print();
         report::gains_table("gains vs DIG-1core", &rows, |r| r.label.contains("DIG-1core")).print();
     }
@@ -420,10 +432,88 @@ fn cmd_transformer(args: &[String]) -> Result<()> {
         let sys = SystemKind::parse(&sys).context("bad --system (hp|lp)")?;
         cases.retain(|c| matches!(c, experiments::SweepCase::Transformer { kind, .. } if *kind == sys));
     }
-    let rows = experiments::run_cases(&cases, n, parallel::jobs());
+    let rows = experiments::run_cases(&cases, n, parallel::jobs())?;
     report::aggregate_table(&format!("transformer {shape} — hand mappings"), &rows).print();
     report::gains_table("gains vs DIG-1core", &rows, |r| r.label.ends_with("DIG-1core")).print();
     println!("hint: `alpine automap --d-model {}` searches beyond these hand mappings", shape.d_model);
+    Ok(())
+}
+
+/// `faults` — sweep fault intensity and report graceful degradation
+/// (§IV.C non-idealities + hard tile failure with digital-fallback
+/// remapping). Writes the machine-readable curve to `--out`
+/// (default BENCH_faults.json).
+fn cmd_faults(args: &[String]) -> Result<()> {
+    let system = SystemKind::parse(&opt(args, "--system").unwrap_or_else(|| "hp".into()))
+        .context("bad --system (hp|lp)")?;
+    let mut opts =
+        FaultScenarioOptions { system, jobs: parallel::jobs(), ..FaultScenarioOptions::default() };
+    if let Some(v) = opt(args, "--seed") {
+        opts.seed = v.parse().context("--seed expects a number")?;
+    }
+    if let Some(v) = opt(args, "--noise") {
+        opts.max_noise_sigma = v.parse().context("--noise expects a sigma, e.g. 0.1")?;
+    }
+    if let Some(v) = opt(args, "--drift") {
+        opts.max_drift_t_s = v.parse().context("--drift expects seconds, e.g. 1e6")?;
+    }
+    if let Some(v) = opt(args, "--stuck") {
+        opts.max_stuck_rate = v.parse().context("--stuck expects a rate in [0, 1]")?;
+    }
+    opts.steps = opt_u32(args, "--steps", opts.steps as u32)? as usize;
+    opts.n_inf = opt_u32(args, "--inferences", opts.n_inf)?;
+    if let Some(v) = opt(args, "--fail-tile") {
+        let (t, c) = v
+            .split_once('@')
+            .and_then(|(t, c)| Some((t.trim().parse().ok()?, c.trim().parse().ok()?)))
+            .context("--fail-tile expects T@CYCLE, e.g. 0@50000")?;
+        opts.fail_tile = Some((t, c));
+    }
+
+    let rep = faults_driver::run_scenario(&opts)?;
+    println!(
+        "faults: {} on {} ({} tile(s)), seed {}",
+        rep.desc,
+        rep.system.name(),
+        rep.tiles,
+        opts.seed
+    );
+    let mut t = Table::new(
+        "fault-intensity degradation curve",
+        &["intensity", "sigma", "drift [s]", "stall [ns]", "mse", "top-1", "time [us]", "energy [uJ]"],
+    );
+    for p in &rep.curve {
+        t.row(vec![
+            format!("{:.2}", p.intensity),
+            format!("{:.4}", p.plan.noise_sigma),
+            format!("{:.1}", p.plan.drift_t_s),
+            format!("{:.1}", p.stall_ps as f64 / 1e3),
+            format!("{:.3e}", p.mse),
+            format!("{:.3}", p.top1_agreement),
+            format!("{:.3}", p.time_s * 1e6),
+            format!("{:.3}", p.energy_j * 1e6),
+        ]);
+    }
+    t.print();
+    if let Some(f) = &rep.failure {
+        match &f.error {
+            Some(e) => println!("hard failure of tile {} at {} ps: {e}", f.tile, f.fail_at_ps),
+            None => println!(
+                "hard failure of tile {} at {} ps: run completed before touching the tile",
+                f.tile, f.fail_at_ps
+            ),
+        }
+        println!(
+            "degraded remap: {} ({} anchor(s) to digital CPU) — {:.2}x slowdown ({:.3} us -> {:.3} us)",
+            f.degraded_desc,
+            f.remapped_anchors.len(),
+            f.slowdown(),
+            f.healthy.time_s * 1e6,
+            f.degraded.time_s * 1e6,
+        );
+    }
+    let out = opt(args, "--out").unwrap_or_else(|| "BENCH_faults.json".into());
+    faults_driver::write_report(&rep, &out)?;
     Ok(())
 }
 

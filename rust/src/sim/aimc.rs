@@ -51,6 +51,11 @@ pub enum AimcError {
     Overlap(Placement, Placement),
     InputOverflow(u64, u64),
     OutputOverflow(u64, u64),
+    /// The tile's hard-failure time has passed; no further op completes.
+    TileFailed { at_ps: u64 },
+    /// The I/O port is inside a transient stall window; the op may be
+    /// retried at `retry_at_ps` (the machine adds exponential backoff).
+    TransientStall { retry_at_ps: u64 },
 }
 
 // Manual Display/Error impls: thiserror is not in the offline vendor set.
@@ -69,11 +74,44 @@ impl std::fmt::Display for AimcError {
             AimcError::OutputOverflow(bytes, cap) => {
                 write!(f, "dequeue of {bytes} bytes exceeds output memory of {cap} bytes")
             }
+            AimcError::TileFailed { at_ps } => {
+                write!(f, "tile hard-failed at t={at_ps}ps")
+            }
+            AimcError::TransientStall { retry_at_ps } => {
+                write!(f, "tile I/O port transiently stalled (retry at t={retry_at_ps}ps)")
+            }
         }
     }
 }
 
 impl std::error::Error for AimcError {}
+
+/// Deterministic transient/hard fault model of one tile. All faults are
+/// parameterized by absolute simulated time — no randomness lives in
+/// the device, so runs are reproducible at any `--jobs N` (seed-driven
+/// randomness stays in the scenario layer, `coordinator::faults`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TileFaultModel {
+    /// Tile stops serving queue/dequeue at this time (hard failure).
+    pub hard_fail_at_ps: Option<u64>,
+    /// Transient stall window length at the start of every period
+    /// (models periodic recalibration / refresh glitches of the analog
+    /// periphery). `0` disables transient stalls.
+    pub transient_stall_ps: u64,
+    /// Period of the transient stall windows. `0` disables.
+    pub transient_period_ps: u64,
+}
+
+impl TileFaultModel {
+    /// The fault-free model (the default): every check short-circuits.
+    pub fn none() -> TileFaultModel {
+        TileFaultModel::default()
+    }
+
+    pub fn is_none(&self) -> bool {
+        *self == TileFaultModel::default()
+    }
+}
 
 /// The device: geometry, placements, busy-until reservation, counters.
 #[derive(Clone, Debug)]
@@ -98,6 +136,8 @@ pub struct AimcTile {
     /// *oldest* pending result (software pipelining queues pixel p+1 and
     /// fires its MVM before draining pixel p's outputs).
     pending_results_ps: std::collections::VecDeque<u64>,
+    /// Injected fault model (default: fault-free).
+    fault: TileFaultModel,
     pub stats: TileActivity,
 }
 
@@ -116,8 +156,39 @@ impl AimcTile {
             xbar_busy_until_ps: 0,
             last_queue_done_ps: 0,
             pending_results_ps: std::collections::VecDeque::new(),
+            fault: TileFaultModel::none(),
             stats: TileActivity::default(),
         }
+    }
+
+    pub fn set_fault_model(&mut self, fault: TileFaultModel) {
+        self.fault = fault;
+    }
+
+    pub fn fault_model(&self) -> &TileFaultModel {
+        &self.fault
+    }
+
+    /// Gate an I/O op at `now_ps` against the injected fault model.
+    #[inline]
+    fn fault_check(&self, now_ps: u64) -> Result<(), AimcError> {
+        if self.fault.is_none() {
+            return Ok(());
+        }
+        if let Some(t) = self.fault.hard_fail_at_ps {
+            if now_ps >= t {
+                return Err(AimcError::TileFailed { at_ps: t });
+            }
+        }
+        if self.fault.transient_period_ps > 0 && self.fault.transient_stall_ps > 0 {
+            let phase = now_ps % self.fault.transient_period_ps;
+            if phase < self.fault.transient_stall_ps {
+                return Err(AimcError::TransientStall {
+                    retry_at_ps: now_ps - phase + self.fault.transient_stall_ps,
+                });
+            }
+        }
+        Ok(())
     }
 
     /// Input memory capacity: one int8 per word line (Table I-C: "M B").
@@ -157,6 +228,7 @@ impl AimcTile {
     /// completion time at the device. Uses the I/O port only — a queue
     /// for the *next* MVM may overlap a running CM_PROCESS.
     pub fn queue(&mut self, now_ps: u64, bytes: u64) -> Result<u64, AimcError> {
+        self.fault_check(now_ps)?;
         if bytes > self.input_mem_bytes() {
             return Err(AimcError::InputOverflow(bytes, self.input_mem_bytes()));
         }
@@ -182,6 +254,7 @@ impl AimcTile {
     /// CM_DEQUEUE: `bytes` out of output memory. Waits for the pending
     /// MVM (ADC registers hold its result) and the I/O port.
     pub fn dequeue(&mut self, now_ps: u64, bytes: u64) -> Result<u64, AimcError> {
+        self.fault_check(now_ps)?;
         if bytes > self.output_mem_bytes() {
             return Err(AimcError::OutputOverflow(bytes, self.output_mem_bytes()));
         }
@@ -305,5 +378,41 @@ mod tests {
         t.dequeue(0, 50).unwrap();
         assert_eq!(t.stats.queued_bytes, 100);
         assert_eq!(t.stats.dequeued_bytes, 50);
+    }
+
+    #[test]
+    fn fault_model_gates_io_ops() {
+        let mut t = tile();
+        // Transient window: first 10 ns of every 100 ns.
+        t.set_fault_model(TileFaultModel {
+            transient_stall_ps: 10_000,
+            transient_period_ps: 100_000,
+            ..TileFaultModel::none()
+        });
+        assert!(matches!(
+            t.queue(5_000, 64),
+            Err(AimcError::TransientStall { retry_at_ps: 10_000 })
+        ));
+        // Outside the window the op proceeds and counts.
+        assert!(t.queue(20_000, 64).is_ok());
+        assert_eq!(t.stats.queued_bytes, 64);
+        // Hard failure dominates from its onset time.
+        t.set_fault_model(TileFaultModel {
+            hard_fail_at_ps: Some(50_000),
+            ..TileFaultModel::none()
+        });
+        assert!(t.dequeue(40_000, 64).is_ok());
+        assert!(matches!(t.queue(60_000, 64), Err(AimcError::TileFailed { at_ps: 50_000 })));
+        // Failed attempts must not perturb the activity counters.
+        assert_eq!(t.stats.queued_bytes, 64);
+        assert_eq!(t.stats.dequeued_bytes, 64);
+    }
+
+    #[test]
+    fn none_fault_model_is_default_and_cheap() {
+        let mut t = tile();
+        assert!(t.fault_model().is_none());
+        t.set_fault_model(TileFaultModel::none());
+        assert!(t.queue(0, 64).is_ok());
     }
 }

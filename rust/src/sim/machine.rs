@@ -43,7 +43,7 @@
 
 use crate::config::SystemConfig;
 
-use crate::sim::aimc::{AimcTile, Coupling};
+use crate::sim::aimc::{AimcError, AimcTile, Coupling, TileFaultModel};
 use crate::sim::bus::IoBus;
 use crate::sim::hierarchy::MemorySystem;
 use crate::sim::sync::{SimChannel, SimMutex};
@@ -73,6 +73,55 @@ pub struct ChannelSpec {
     pub consumer: usize,
     pub capacity: usize,
 }
+
+/// Structured run failure. Replaces the machine's former `panic!`s so
+/// callers (sweeps, the auto-mapper, the server, the CLI) can degrade —
+/// remap around a failed tile, drop a case, report an error row —
+/// instead of aborting the whole process.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RunError {
+    /// No core can make progress. One diagnostic line per blocked core
+    /// (`core j @ t=...ps seg s/n op k iter i: <op>`).
+    Deadlock { blocked_cores: Vec<String> },
+    /// A tile's hard-failure time was reached; the op can never complete.
+    TileFailed { tile: usize, at_ps: u64 },
+    /// Retry-with-exponential-backoff exhausted its attempts against a
+    /// tile that stayed transiently stalled.
+    Timeout { core: usize, tile: usize, attempts: u32, at_ps: u64 },
+    /// A device/sync op failed in a way the trace cannot recover from
+    /// (placement out of bounds, queue overflow, poisoned channel).
+    Device { core: usize, op: &'static str, reason: String },
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunError::Deadlock { blocked_cores } => write!(
+                f,
+                "deadlock: {} core(s) blocked with no runnable peers:\n  {}",
+                blocked_cores.len(),
+                blocked_cores.join("\n  ")
+            ),
+            RunError::TileFailed { tile, at_ps } => {
+                write!(f, "tile {tile} hard-failed at t={at_ps}ps")
+            }
+            RunError::Timeout { core, tile, attempts, at_ps } => write!(
+                f,
+                "core {core}: tile {tile} op timed out after {attempts} backoff retries (t={at_ps}ps)"
+            ),
+            RunError::Device { core, op, reason } => {
+                write!(f, "core {core}: {op} failed: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RunError {}
+
+/// First backoff wait after a transient tile stall (doubles per retry).
+pub const BACKOFF_BASE_PS: u64 = 1_000;
+/// Give up (-> `RunError::Timeout`) after this many backoff retries.
+pub const BACKOFF_MAX_RETRIES: u32 = 8;
 
 /// Execution position inside a [`Trace`] program.
 #[derive(Clone, Copy, Debug, Default)]
@@ -281,15 +330,30 @@ impl Machine {
         self.ff_skipped_iters
     }
 
+    /// Attach (or clear, with `TileFaultModel::none()`) a fault model to
+    /// one tile. Any active fault model disables steady-state
+    /// fast-forward for subsequent runs: transient stall windows are
+    /// phased against absolute time, which a closed-form clock shift
+    /// would silently re-phase. The fault-free default path is untouched.
+    pub fn set_tile_fault(&mut self, tile: usize, model: TileFaultModel) {
+        self.tiles[tile].set_fault_model(model);
+    }
+
+    /// True if any tile has an active fault model.
+    pub fn has_tile_faults(&self) -> bool {
+        self.tiles.iter().any(|t| !t.fault_model().is_none())
+    }
+
     /// Execute one trace per core (empty traces = unused cores). Accepts
     /// looped [`Trace`] programs or flat `Vec<TraceOp>` streams. Returns
-    /// the full run statistics.
-    pub fn run<T: Into<Trace>>(&mut self, traces: Vec<T>) -> RunStats {
+    /// the full run statistics, or a typed [`RunError`] (deadlock, tile
+    /// failure, retry timeout) instead of panicking.
+    pub fn run<T: Into<Trace>>(&mut self, traces: Vec<T>) -> Result<RunStats, RunError> {
         let traces: Vec<Trace> = traces.into_iter().map(Into::into).collect();
         self.run_traces(traces)
     }
 
-    fn run_traces(&mut self, traces: Vec<Trace>) -> RunStats {
+    fn run_traces(&mut self, traces: Vec<Trace>) -> Result<RunStats, RunError> {
         assert!(traces.len() <= self.cfg.num_cores, "more traces than cores");
         let n = traces.len();
         let mut cores: Vec<CoreRun> = (0..n)
@@ -314,7 +378,7 @@ impl Machine {
         // core progresses; the grant/ready timestamps of the sync
         // primitives supply the correct wait times on retry.
         let mut blocked = vec![false; n];
-        let mut ff = FfTracker::new(self.fast_forward);
+        let mut ff = FfTracker::new(self.fast_forward && !self.has_tile_faults());
         loop {
             let mut next: Option<usize> = None;
             for i in 0..n {
@@ -345,16 +409,12 @@ impl Machine {
                     })
                     .collect();
                 if !stuck.is_empty() {
-                    panic!(
-                        "deadlock: {} core(s) blocked with no runnable peers:\n  {}",
-                        stuck.len(),
-                        stuck.join("\n  ")
-                    );
+                    return Err(RunError::Deadlock { blocked_cores: stuck });
                 }
                 break;
             };
 
-            match self.step(i, &mut cores, &traces) {
+            match self.step(i, &mut cores, &traces)? {
                 Some(completed) => {
                     blocked.iter_mut().for_each(|b| *b = false);
                     cores[i].retrying = false;
@@ -402,21 +462,26 @@ impl Machine {
             rs.aimc.energy_j += t.energy_j();
         }
         rs.roi = self.roi.clone();
-        rs
+        Ok(rs)
     }
 
     /// Execute one op on core `i`. `Some(k)` on progress (k = `Rep`
     /// iterations completed by the cursor advance), `None` when blocked.
-    fn step(&mut self, i: usize, cores: &mut [CoreRun], traces: &[Trace]) -> Option<u32> {
+    fn step(
+        &mut self,
+        i: usize,
+        cores: &mut [CoreRun],
+        traces: &[Trace],
+    ) -> Result<Option<u32>, RunError> {
         let op = cur_op(&traces[i], &cores[i].cursor);
         let t0 = cores[i].now_ps;
-        match self.exec(i, &mut cores[i], op) {
-            StepResult::Blocked => None,
+        match self.exec(i, &mut cores[i], op)? {
+            StepResult::Blocked => Ok(None),
             StepResult::Progressed => {
                 let kind = cores[i].roi_stack.last().copied().unwrap_or(RoiKind::Misc);
                 self.roi.add(kind, cores[i].now_ps - t0);
                 cores[i].cursor.op += 1;
-                Some(normalize(&traces[i], &mut cores[i].cursor))
+                Ok(Some(normalize(&traces[i], &mut cores[i].cursor)))
             }
         }
     }
@@ -661,7 +726,46 @@ impl Machine {
         core.now_ps += ps;
     }
 
-    fn exec(&mut self, i: usize, core: &mut CoreRun, op: TraceOp) -> StepResult {
+    /// Issue a fallible tile I/O op with retry-with-exponential-backoff:
+    /// a transiently-stalled tile is retried at `retry_at + base << k`
+    /// (the wait lands in the caller's WFM stall via the returned
+    /// completion time); a hard failure or exhausted retry budget
+    /// surfaces as a typed error.
+    fn tile_io_with_retry(
+        &mut self,
+        core_id: usize,
+        tile: usize,
+        mut start: u64,
+        op: &'static str,
+        f: impl Fn(&mut AimcTile, u64) -> Result<u64, AimcError>,
+    ) -> Result<u64, RunError> {
+        let mut attempt = 0u32;
+        loop {
+            match f(&mut self.tiles[tile], start) {
+                Ok(done) => return Ok(done),
+                Err(AimcError::TileFailed { at_ps }) => {
+                    return Err(RunError::TileFailed { tile, at_ps })
+                }
+                Err(AimcError::TransientStall { retry_at_ps }) => {
+                    if attempt >= BACKOFF_MAX_RETRIES {
+                        return Err(RunError::Timeout {
+                            core: core_id,
+                            tile,
+                            attempts: attempt,
+                            at_ps: start,
+                        });
+                    }
+                    start = retry_at_ps.max(start) + (BACKOFF_BASE_PS << attempt);
+                    attempt += 1;
+                }
+                Err(e) => {
+                    return Err(RunError::Device { core: core_id, op, reason: e.to_string() })
+                }
+            }
+        }
+    }
+
+    fn exec(&mut self, i: usize, core: &mut CoreRun, op: TraceOp) -> Result<StepResult, RunError> {
         match op {
             TraceOp::Compute { class, insts } => {
                 self.active(core, insts * class.cycles(), insts);
@@ -716,9 +820,11 @@ impl Machine {
             }
 
             TraceOp::CmInit { tile, placement } => {
-                self.tiles[tile]
-                    .map_matrix(placement)
-                    .expect("workload generator produced an invalid placement");
+                self.tiles[tile].map_matrix(placement).map_err(|e| RunError::Device {
+                    core: i,
+                    op: "CM_INITIALIZE",
+                    reason: e.to_string(),
+                })?;
                 self.active(core, 1, 1);
             }
 
@@ -730,15 +836,14 @@ impl Machine {
                 let beats = bytes.div_ceil(costs::CM_IO_BYTES_PER_INST);
                 let overhead = beats * costs::CM_IO_OVERHEAD_PER_INST_X1000 / 1000;
                 let done = match self.tiles[tile].coupling {
-                    Coupling::Tight => self.tiles[tile]
-                        .queue(start, bytes)
-                        .expect("queue exceeds tile input memory"),
+                    Coupling::Tight => self
+                        .tile_io_with_retry(i, tile, start, "CM_QUEUE", |t, at| t.queue(at, bytes))?,
                     Coupling::Loose => {
                         let bus_done = self.iobus.transfer(start, bytes);
-                        self.tiles[tile]
-                            .queue(bus_done, 0)
-                            .expect("zero-byte device op cannot overflow");
-                        bus_done
+                        self.tile_io_with_retry(i, tile, bus_done, "CM_QUEUE", |t, at| {
+                            t.queue(at, 0)
+                        })?
+                        .max(bus_done)
                     }
                 };
                 self.active(core, beats + overhead, beats + overhead);
@@ -763,15 +868,15 @@ impl Machine {
                 let beats = bytes.div_ceil(costs::CM_IO_BYTES_PER_INST);
                 let overhead = beats * costs::CM_IO_OVERHEAD_PER_INST_X1000 / 1000;
                 let done = match self.tiles[tile].coupling {
-                    Coupling::Tight => self.tiles[tile]
-                        .dequeue(start, bytes)
-                        .expect("dequeue exceeds tile output memory"),
+                    Coupling::Tight => self.tile_io_with_retry(i, tile, start, "CM_DEQUEUE", |t, at| {
+                        t.dequeue(at, bytes)
+                    })?,
                     Coupling::Loose => {
                         let bus_done = self.iobus.transfer(start, bytes);
-                        self.tiles[tile]
-                            .dequeue(bus_done, 0)
-                            .expect("zero-byte device op cannot overflow");
-                        bus_done
+                        self.tile_io_with_retry(i, tile, bus_done, "CM_DEQUEUE", |t, at| {
+                            t.dequeue(at, 0)
+                        })?
+                        .max(bus_done)
                     }
                 };
                 self.active(core, beats + overhead, beats + overhead);
@@ -781,7 +886,7 @@ impl Machine {
 
             TraceOp::MutexLock { id } => {
                 let Some(granted) = self.mutexes[id].try_acquire(core.now_ps) else {
-                    return StepResult::Blocked;
+                    return Ok(StepResult::Blocked);
                 };
                 self.mutexes[id].lock();
                 if granted > core.now_ps {
@@ -798,7 +903,7 @@ impl Machine {
 
             TraceOp::Send { ch, bytes, addr } => {
                 if self.channels[ch].len() >= self.channels[ch].capacity {
-                    return StepResult::Blocked;
+                    return Ok(StepResult::Blocked);
                 }
                 // If this send was parked on a full buffer, it resumes no
                 // earlier than the drain that freed the slot.
@@ -823,7 +928,7 @@ impl Machine {
 
             TraceOp::Recv { ch } => {
                 let msg = match self.channels[ch].head_ready_ps() {
-                    None => return StepResult::Blocked,
+                    None => return Ok(StepResult::Blocked),
                     Some(ready) => {
                         // If the message is already there, the condvar
                         // fast-path applies (no sleep). If the consumer
@@ -834,7 +939,18 @@ impl Machine {
                             let wait = ready + wake_ps - core.now_ps;
                             self.idle(core, wait);
                         }
-                        self.channels[ch].try_recv(core.now_ps).unwrap()
+                        match self.channels[ch].try_recv(core.now_ps) {
+                            Some(msg) => msg,
+                            None => {
+                                return Err(RunError::Device {
+                                    core: i,
+                                    op: "Recv",
+                                    reason: format!(
+                                        "channel {ch} advertised a ready message but delivered none"
+                                    ),
+                                })
+                            }
+                        }
                     }
                 };
                 self.active(core, costs::CHANNEL_INSTS, costs::CHANNEL_INSTS);
@@ -855,7 +971,7 @@ impl Machine {
                 core.roi_stack.pop();
             }
         }
-        StepResult::Progressed
+        Ok(StepResult::Progressed)
     }
 }
 
@@ -882,7 +998,7 @@ mod tests {
         let mut m = hp_machine(MachineSpec::default());
         let mut b = TraceBuilder::new();
         b.compute(InstClass::IntAlu, 100_000);
-        let rs = m.run(vec![b.build()]);
+        let rs = m.run(vec![b.build()]).unwrap();
         assert!((rs.cores[0].ipc() - 1.0).abs() < 0.01);
         assert_eq!(rs.total_insts(), 100_000);
     }
@@ -892,7 +1008,7 @@ mod tests {
         let mut m = hp_machine(MachineSpec::default());
         let mut b = TraceBuilder::new();
         b.stream_read(0x10_0000, 4 * 1024 * 1024, 4); // 4 MiB > 1 MiB LLC
-        let rs = m.run(vec![b.build()]);
+        let rs = m.run(vec![b.build()]).unwrap();
         assert!(rs.dram_accesses > 60_000, "{}", rs.dram_accesses);
         assert!(rs.cores[0].wfm_cycles > 0);
     }
@@ -903,7 +1019,7 @@ mod tests {
         let mut b = TraceBuilder::new();
         b.stream_read(0, 8 * 1024, 4);
         b.stream_read(0, 8 * 1024, 4);
-        let rs = m.run(vec![b.build()]);
+        let rs = m.run(vec![b.build()]).unwrap();
         // Second pass hits: misses only from first pass.
         assert_eq!(rs.l1d.read_misses, 8 * 1024 / 64);
     }
@@ -926,7 +1042,7 @@ mod tests {
             // DAC/ADC registers let software overlap the next queue).
             TraceOp::CmDequeue { tile: 0, bytes: 4 },
         ];
-        let rs = m.run(vec![ops]);
+        let rs = m.run(vec![ops]).unwrap();
         assert!(rs.roi_time_ps >= 100_000, "{}", rs.roi_time_ps);
         assert_eq!(rs.aimc.processes, 1);
     }
@@ -939,7 +1055,7 @@ mod tests {
         };
         let mut m = hp_machine(spec);
         let ops = vec![TraceOp::CmQueue { tile: 0, bytes: 4096 }];
-        let rs = m.run(vec![ops]);
+        let rs = m.run(vec![ops]).unwrap();
         // 4096B at 4GB/s = 1024ns; issue of 1024+512 insts at 2.3GHz ~ 668ns,
         // so the transfer dominates and total ~ 1024ns.
         assert!(rs.roi_time_ps >= 1_024_000, "{}", rs.roi_time_ps);
@@ -959,7 +1075,7 @@ mod tests {
                 TraceOp::CmProcess { tile: 0 },
                 TraceOp::CmDequeue { tile: 0, bytes: 1024 },
             ];
-            m.run(vec![ops]).roi_time_ps
+            m.run(vec![ops]).unwrap().roi_time_ps
         };
         let tight = run(Coupling::Tight);
         let loose = run(Coupling::Loose);
@@ -979,7 +1095,7 @@ mod tests {
         let mut c = TraceBuilder::new();
         c.push(TraceOp::Recv { ch: 0 });
         c.compute(InstClass::IntAlu, 1000);
-        let rs = m.run(vec![p.build(), c.build()]);
+        let rs = m.run(vec![p.build(), c.build()]).unwrap();
         // Consumer idled waiting for the producer.
         assert!(rs.cores[1].idle_cycles > 0);
         assert_eq!(rs.cores.len(), 2);
@@ -1001,7 +1117,7 @@ mod tests {
         for _ in 0..4 {
             c.push(TraceOp::Recv { ch: 0 });
         }
-        let rs = m.run(vec![p.build(), c.build()]);
+        let rs = m.run(vec![p.build(), c.build()]).unwrap();
         assert!(rs.cores[0].idle_cycles > 100_000, "{}", rs.cores[0].idle_cycles);
     }
 
@@ -1016,14 +1132,13 @@ mod tests {
             b.push(TraceOp::MutexUnlock { id: 0 });
             b.build()
         };
-        let rs = m.run(vec![critical(0), critical(1)]);
+        let rs = m.run(vec![critical(0), critical(1)]).unwrap();
         // Both critical sections serialized: ~200k cycles total.
         let total_cycles = rs.roi_time_ps / SystemConfig::high_power().cycle_ps();
         assert!(total_cycles > 195_000, "{total_cycles}");
     }
 
     #[test]
-    #[should_panic(expected = "deadlock")]
     fn recv_without_sender_deadlocks() {
         let spec = MachineSpec {
             channels: vec![ChannelSpec { producer: 0, consumer: 1, capacity: 1 }],
@@ -1031,7 +1146,15 @@ mod tests {
         };
         let mut m = hp_machine(spec);
         let c = vec![TraceOp::Recv { ch: 0 }];
-        m.run(vec![Vec::new(), c]);
+        let err = m.run(vec![Vec::new(), c]).unwrap_err();
+        match err {
+            RunError::Deadlock { blocked_cores } => {
+                assert_eq!(blocked_cores.len(), 1, "{blocked_cores:?}");
+                assert!(blocked_cores[0].starts_with("core 1 "), "{}", blocked_cores[0]);
+                assert!(blocked_cores[0].contains("Recv"), "{}", blocked_cores[0]);
+            }
+            other => panic!("expected RunError::Deadlock, got {other:?}"),
+        }
     }
 
     #[test]
@@ -1057,7 +1180,7 @@ mod tests {
         let run = |batched: bool| {
             let mut m = hp_machine(MachineSpec::default());
             m.set_batched_streams(batched);
-            m.run(vec![trace.clone()])
+            m.run(vec![trace.clone()]).unwrap()
         };
         let fast = run(true);
         let reference = run(false);
@@ -1080,7 +1203,7 @@ mod tests {
         b.roi(RoiKind::Activation, |b| {
             b.compute(InstClass::FpOp, 1_000);
         });
-        let rs = m.run(vec![b.build()]);
+        let rs = m.run(vec![b.build()]).unwrap();
         assert!(rs.roi.fraction(RoiKind::DigitalMvm) > 0.7);
         assert!(rs.roi.fraction(RoiKind::Activation) > 0.1);
         let sum = rs.roi.total();
@@ -1118,10 +1241,10 @@ mod tests {
         let flat = looped.flatten();
         let mut m1 = hp_machine(MachineSpec::default());
         m1.set_fast_forward(false);
-        let a = m1.run(vec![looped.clone()]);
+        let a = m1.run(vec![looped.clone()]).unwrap();
         let mut m2 = hp_machine(MachineSpec::default());
         m2.set_fast_forward(false);
-        let b = m2.run(vec![flat]);
+        let b = m2.run(vec![flat]).unwrap();
         assert_stats_identical(&a, &b);
     }
 
@@ -1133,7 +1256,7 @@ mod tests {
         let run = |ff: bool| {
             let mut m = hp_machine(MachineSpec::default());
             m.set_fast_forward(ff);
-            let rs = m.run(vec![trace.clone()]);
+            let rs = m.run(vec![trace.clone()]).unwrap();
             (rs, m.fast_forward_jumps(), m.fast_forward_skipped_iters())
         };
         let (fast, jumps, skipped) = run(true);
@@ -1197,7 +1320,7 @@ mod tests {
         let run = |ff: bool| {
             let mut m = hp_machine(spec.clone());
             m.set_fast_forward(ff);
-            let rs = m.run(traces.clone());
+            let rs = m.run(traces.clone()).unwrap();
             (rs, m.fast_forward_jumps())
         };
         let (fast, jumps) = run(true);
@@ -1230,8 +1353,92 @@ mod tests {
         let run = |ff: bool| {
             let mut m = hp_machine(spec.clone());
             m.set_fast_forward(ff);
-            m.run(traces.clone())
+            m.run(traces.clone()).unwrap()
         };
         assert_stats_identical(&run(true), &run(false));
+    }
+
+    // -----------------------------------------------------------------
+    // Tile fault injection
+    // -----------------------------------------------------------------
+
+    fn tile_pipeline_trace(iters: u32) -> Vec<TraceOp> {
+        let mut ops = vec![TraceOp::CmInit {
+            tile: 0,
+            placement: Placement { row0: 0, col0: 0, rows: 512, cols: 512 },
+        }];
+        for _ in 0..iters {
+            ops.push(TraceOp::CmQueue { tile: 0, bytes: 512 });
+            ops.push(TraceOp::CmProcess { tile: 0 });
+            ops.push(TraceOp::CmDequeue { tile: 0, bytes: 512 });
+        }
+        ops
+    }
+
+    fn tile_spec() -> MachineSpec {
+        MachineSpec {
+            tiles: vec![TileSpec { rows: 512, cols: 512, coupling: Coupling::Tight }],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn explicit_none_fault_model_is_bit_identical() {
+        let run = |set_none: bool| {
+            let mut m = hp_machine(tile_spec());
+            if set_none {
+                m.set_tile_fault(0, TileFaultModel::none());
+            }
+            m.run(vec![tile_pipeline_trace(8)]).unwrap()
+        };
+        assert_stats_identical(&run(true), &run(false));
+    }
+
+    #[test]
+    fn transient_stalls_slow_the_run_but_complete() {
+        let run = |model: TileFaultModel| {
+            let mut m = hp_machine(tile_spec());
+            m.set_tile_fault(0, model);
+            m.run(vec![tile_pipeline_trace(8)]).unwrap().roi_time_ps
+        };
+        let clean = run(TileFaultModel::none());
+        let faulty = run(TileFaultModel {
+            transient_period_ps: 400_000,
+            transient_stall_ps: 60_000,
+            ..TileFaultModel::none()
+        });
+        assert!(faulty > clean, "clean {clean} faulty {faulty}");
+    }
+
+    #[test]
+    fn hard_tile_failure_is_a_typed_error() {
+        let mut m = hp_machine(tile_spec());
+        m.set_tile_fault(0, TileFaultModel { hard_fail_at_ps: Some(500_000), ..TileFaultModel::none() });
+        let err = m.run(vec![tile_pipeline_trace(64)]).unwrap_err();
+        assert!(
+            matches!(err, RunError::TileFailed { tile: 0, at_ps: 500_000 }),
+            "expected TileFailed, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn permanent_transient_stall_times_out() {
+        // Stall window covers the whole period: every backoff retry
+        // lands back inside a stall, so the retry budget must exhaust
+        // into a typed Timeout rather than spinning forever.
+        let mut m = hp_machine(tile_spec());
+        m.set_tile_fault(
+            0,
+            TileFaultModel {
+                transient_period_ps: 100_000,
+                transient_stall_ps: 100_000,
+                ..TileFaultModel::none()
+            },
+        );
+        let err = m.run(vec![tile_pipeline_trace(4)]).unwrap_err();
+        assert!(
+            matches!(err, RunError::Timeout { tile: 0, attempts: BACKOFF_MAX_RETRIES, .. }),
+            "expected Timeout, got {err:?}"
+        );
     }
 }

@@ -15,5 +15,5 @@ pub mod hierarchy;
 pub mod machine;
 pub mod sync;
 
-pub use aimc::{AimcTile, Coupling, Placement};
-pub use machine::{ChannelSpec, Machine, MachineSpec, TileSpec};
+pub use aimc::{AimcTile, Coupling, Placement, TileFaultModel};
+pub use machine::{ChannelSpec, Machine, MachineSpec, RunError, TileSpec};

@@ -47,7 +47,7 @@ pub use cost::{estimate, CostEstimate};
 use crate::config::SystemConfig;
 use crate::nn::LayerGraph;
 use crate::util::parallel;
-use crate::workload::compile::mapping::{Handoff, Mapping};
+use crate::workload::compile::mapping::{Handoff, Mapping, Place};
 use crate::workload::WorkloadError;
 use enumerate::{Anchor, CandidateSpec};
 
@@ -679,6 +679,129 @@ pub fn digital_baseline(graph: &LayerGraph) -> Result<(Mapping, String), Workloa
         .ok_or_else(|| WorkloadError::InvalidMapping("failed to build the all-digital baseline".into()))
 }
 
+/// Result of the graceful-degradation pass: the rebuilt mapping after a
+/// hard tile failure, with every MVM anchor that had a region on the
+/// failed tile moved to digital CPU fallback.
+pub struct Degraded {
+    pub mapping: Mapping,
+    /// Descriptor of the degraded point of the space (same format as
+    /// [`Candidate::desc`]).
+    pub desc: String,
+    /// Chain-order indices of the MVM anchors remapped off the tile.
+    pub remapped_anchors: Vec<usize>,
+}
+
+/// All tile indices a step's placement touches (empty for digital).
+fn place_tiles(place: &Place) -> Vec<usize> {
+    match place {
+        Place::Cpu | Place::Fused => Vec::new(),
+        Place::Tile { per_replica } => per_replica.iter().map(|t| t.tile).collect(),
+        Place::TileRowSplit { tiles } | Place::TileChain { tiles } => {
+            tiles.iter().map(|t| t.tile).collect()
+        }
+        Place::AttentionTiles { q, k, v, o } => vec![q.tile, k.tile, v.tile, o.tile],
+    }
+}
+
+/// Graceful degradation after a hard tile failure: reconstruct the
+/// search-space point of `mapping` (stage cuts, engine mask,
+/// replication, hand-off), clear the engine bit of every MVM anchor
+/// with a region on `failed_tile`, and rebuild the mapping through the
+/// same constructor the search uses — so the surviving analog anchors
+/// are repacked onto the remaining (logical) tiles and the failed
+/// anchors lower to the digital CPU path. Deterministic; errors cleanly
+/// when `mapping` is not an automap-style chain mapping or the tile
+/// hosts no analog region.
+///
+/// `budget` must be the topology budget the mapping was built under
+/// (its tile geometry governs how the survivors repack).
+pub fn degrade_mapping(
+    graph: &LayerGraph,
+    mapping: &Mapping,
+    failed_tile: usize,
+    budget: &TopologyBudget,
+) -> Result<Degraded, WorkloadError> {
+    let bad = |msg: String| WorkloadError::InvalidMapping(msg);
+    let (anchors, input, output) = enumerate::anchors(graph)?;
+
+    // Where did the original mapping put every node?
+    let mut node_stage: Vec<Option<usize>> = vec![None; graph.nodes.len()];
+    let mut node_place: Vec<Option<&Place>> = vec![None; graph.nodes.len()];
+    for (si, st) in mapping.stages.iter().enumerate() {
+        for step in &st.steps {
+            if step.node >= node_stage.len() {
+                return Err(bad(format!("mapping {} places unknown node {}", mapping.label, step.node)));
+            }
+            node_stage[step.node] = Some(si);
+            node_place[step.node] = Some(&step.place);
+        }
+    }
+
+    // Stage cuts: anchors must cover the stages contiguously in order.
+    let mut starts: Vec<usize> = Vec::new();
+    let mut prev_stage: Option<usize> = None;
+    for (ai, a) in anchors.iter().enumerate() {
+        let first = a.nodes[0];
+        let si = node_stage[first]
+            .ok_or_else(|| bad(format!("mapping {} does not place node {first}", mapping.label)))?;
+        match prev_stage {
+            None if si == 0 => starts.push(ai),
+            Some(p) if si == p => {}
+            Some(p) if si == p + 1 => starts.push(ai),
+            _ => {
+                return Err(bad(format!(
+                    "mapping {} is not a contiguous automap pipeline (anchor {ai} lands on stage {si})",
+                    mapping.label
+                )));
+            }
+        }
+        prev_stage = Some(si);
+    }
+    if starts.len() != mapping.stages.len() {
+        return Err(bad(format!(
+            "mapping {} has {} stages but its anchors span {}",
+            mapping.label,
+            mapping.stages.len(),
+            starts.len()
+        )));
+    }
+
+    // Engine mask, minus everything that lived on the failed tile.
+    let mut analog_mask = 0u64;
+    let mut remapped_anchors: Vec<usize> = Vec::new();
+    let mut mvm_idx = 0usize;
+    for a in &anchors {
+        let Some(m) = a.mvm else { continue };
+        let place = node_place[m.node()]
+            .ok_or_else(|| bad(format!("mapping {} does not place MVM node {}", mapping.label, m.node())))?;
+        let tiles = place_tiles(place);
+        if !tiles.is_empty() {
+            if tiles.contains(&failed_tile) {
+                remapped_anchors.push(mvm_idx);
+            } else if mvm_idx < 64 {
+                analog_mask |= 1 << mvm_idx;
+            }
+        }
+        mvm_idx += 1;
+    }
+    if remapped_anchors.is_empty() {
+        return Err(bad(format!(
+            "tile {failed_tile} hosts no analog region of mapping {}",
+            mapping.label
+        )));
+    }
+
+    let spec = CandidateSpec {
+        starts,
+        analog_mask,
+        replicas: mapping.stages.iter().map(|s| s.cores.len()).max().unwrap_or(1),
+        handoff: mapping.stages.first().map(|s| s.handoff).unwrap_or(Handoff::PingPong),
+    };
+    let (mapping, desc) = enumerate::build_mapping(graph, &anchors, input, output, &spec, budget)
+        .ok_or_else(|| bad(format!("degraded spec {spec:?} is infeasible under the budget")))?;
+    Ok(Degraded { mapping, desc, remapped_anchors })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -822,6 +945,50 @@ mod tests {
         assert!(m.tiles.is_empty());
         assert!(desc.starts_with("s1 r1 pp"));
         compile::compile(&g, &m, 2).unwrap();
+    }
+
+    #[test]
+    fn degrade_moves_failed_tile_anchors_to_cpu() {
+        let g = LayerGraph::mlp(&[256, 128, 64]);
+        let budget = TopologyBudget { cores: 4, tiles: 8, tile_rows: 256, tile_cols: 256, channels: 32 };
+        let out = search(&g, &budget, &hp(), 4).unwrap();
+        let best = &out.ranked[0];
+        let analog_steps = |m: &Mapping| {
+            m.stages
+                .iter()
+                .flat_map(|s| &s.steps)
+                .filter(|st| !matches!(st.place, Place::Cpu))
+                .count()
+        };
+        let before = analog_steps(&best.mapping);
+        assert!(before > 0, "best MLP candidate should be analog: {}", best.desc);
+
+        let d = degrade_mapping(&g, &best.mapping, 0, &budget).unwrap();
+        assert!(!d.remapped_anchors.is_empty());
+        assert_eq!(analog_steps(&d.mapping), before - d.remapped_anchors.len());
+        // The degraded mapping still compiles and costs at least as much
+        // as the (rank-0) original point of the same space.
+        compile::compile(&g, &d.mapping, 1).unwrap();
+        let est = estimate(&g, &d.mapping, &hp()).unwrap();
+        assert!(est.cycles_per_inf >= best.est.cycles_per_inf);
+        // Deterministic.
+        let d2 = degrade_mapping(&g, &best.mapping, 0, &budget).unwrap();
+        assert_eq!(d.desc, d2.desc);
+        assert_eq!(d.remapped_anchors, d2.remapped_anchors);
+    }
+
+    #[test]
+    fn degrade_rejects_tiles_hosting_nothing() {
+        let g = LayerGraph::mlp(&[256, 128, 64]);
+        let budget = TopologyBudget { cores: 4, tiles: 8, tile_rows: 256, tile_cols: 256, channels: 32 };
+        let out = search(&g, &budget, &hp(), 4).unwrap();
+        assert!(matches!(
+            degrade_mapping(&g, &out.ranked[0].mapping, 99, &budget),
+            Err(WorkloadError::InvalidMapping(_))
+        ));
+        // An all-digital mapping has nothing to degrade either.
+        let (m, _) = digital_baseline(&g).unwrap();
+        assert!(degrade_mapping(&g, &m, 0, &budget).is_err());
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub mod mlp;
 pub mod trace;
 pub mod transformer;
 
-use crate::sim::machine::MachineSpec;
+use crate::sim::machine::{MachineSpec, RunError};
 use std::fmt;
 use trace::Trace;
 
@@ -44,6 +44,10 @@ pub enum WorkloadError {
     /// The mapping does not fit the graph/platform (bad core/tile/channel
     /// topology, placement out of bounds, ...).
     InvalidMapping(String),
+    /// A machine-level failure while simulating the workload (deadlock,
+    /// injected tile fault) — carried so mixed compile/run pipelines such
+    /// as the automap validator report one error type.
+    Run(RunError),
 }
 
 impl fmt::Display for WorkloadError {
@@ -54,11 +58,18 @@ impl fmt::Display for WorkloadError {
             }
             WorkloadError::InvalidGraph(msg) => write!(f, "invalid layer graph: {msg}"),
             WorkloadError::InvalidMapping(msg) => write!(f, "invalid mapping: {msg}"),
+            WorkloadError::Run(e) => write!(f, "simulation failed: {e}"),
         }
     }
 }
 
 impl std::error::Error for WorkloadError {}
+
+impl From<RunError> for WorkloadError {
+    fn from(e: RunError) -> WorkloadError {
+        WorkloadError::Run(e)
+    }
+}
 
 /// A fully-generated workload, ready for `sim::Machine::run`. Traces are
 /// looped [`Trace`] programs: steady-state workloads hold their

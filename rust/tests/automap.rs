@@ -24,7 +24,7 @@ fn budget() -> TopologyBudget {
 
 /// ISSUE-3 acceptance: `automap` on a transformer-encoder `LayerGraph`
 /// returns a Pareto front whose best mapping runs end-to-end
-/// deadlock-free through the simulator (a deadlock panics) and beats
+/// deadlock-free through the simulator (a deadlock is a `RunError`) and beats
 /// the naive all-digital single-core mapping on simulated cycles.
 #[test]
 fn automap_transformer_beats_naive_digital() {
@@ -113,7 +113,7 @@ fn cost_model_tracks_simulated_cycles() {
         let (graph, mapping) = mlp::case_table(case).unwrap();
         let est = automap::estimate(&graph, &mapping, &cfg).unwrap();
         let w = mlp::generate(case, &cfg, 10).unwrap();
-        let r = alpine::coordinator::run_workload(SystemKind::HighPower, w);
+        let r = alpine::coordinator::run_workload(SystemKind::HighPower, w).unwrap();
         let sim = r.time_per_inference_s * cfg.freq_hz;
         let ratio = est.cycles_per_inf / sim;
         assert!(

@@ -191,9 +191,9 @@ fn compiled_random_mappings_are_self_consistent_and_run() {
         let n_inf = 1 + rng.below(14) as u32;
         let w = compile(&graph, &mapping, n_inf).expect("generated mapping must be valid");
         check_self_consistent(&w);
-        // Runs to completion (a deadlock panics inside the machine).
+        // Runs to completion (a deadlock is a typed RunError).
         let mut machine = Machine::new(SystemConfig::high_power(), w.spec.clone());
-        let stats = machine.run(w.traces.clone());
+        let stats = machine.run(w.traces.clone()).unwrap();
         assert!(stats.roi_time_ps > 0, "machine made no progress");
     });
 }
@@ -201,7 +201,7 @@ fn compiled_random_mappings_are_self_consistent_and_run() {
 /// Random transformer-encoder shapes (attention dims, heads, cache
 /// depth, FFN width) through the auto-mapper: the chosen mapping must
 /// compile, pass the spec self-consistency checks, and run to
-/// completion deadlock-free (a deadlock panics inside the machine).
+/// completion deadlock-free (a deadlock surfaces as a typed RunError).
 #[test]
 fn automap_transformer_choices_compile_and_run() {
     use alpine::workload::automap::{self, TopologyBudget};
@@ -226,7 +226,7 @@ fn automap_transformer_choices_compile_and_run() {
         let w = compile(&graph, &best.mapping, 2).expect("chosen mapping must compile");
         check_self_consistent(&w);
         let mut machine = Machine::new(cfg.clone(), w.spec.clone());
-        let stats = machine.run(w.traces.clone());
+        let stats = machine.run(w.traces.clone()).unwrap();
         assert!(stats.roi_time_ps > 0, "machine made no progress ({})", best.desc);
     });
 }

@@ -29,7 +29,7 @@ use alpine::workload::Workload;
 fn run_with(cfg: &SystemConfig, w: &Workload, ff: bool) -> (RunStats, u32) {
     let mut m = Machine::new(cfg.clone(), w.spec.clone());
     m.set_fast_forward(ff);
-    let rs = m.run(w.traces.clone());
+    let rs = m.run(w.traces.clone()).unwrap();
     (rs, m.fast_forward_jumps())
 }
 
@@ -246,7 +246,7 @@ fn machine_fastforward_equivalence() {
         let run = |ff: bool| {
             let mut m = Machine::new(SystemConfig::high_power(), spec.clone());
             m.set_fast_forward(ff);
-            m.run(traces.clone())
+            m.run(traces.clone()).unwrap()
         };
         let fast = run(true);
         let reference = run(false);

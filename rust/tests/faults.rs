@@ -1,0 +1,186 @@
+//! The fault-injection gate: the fault-free path must stay
+//! **bit-identical** to the pre-fault simulator for every paper
+//! workload case, faulty runs must be deterministic in the scenario
+//! seed at any `--jobs N`, and an injected hard tile failure must
+//! always end in a degraded remap or a typed [`RunError`] — never a
+//! panic. CI runs this file as the `fault-determinism` job.
+
+use alpine::config::{SystemConfig, SystemKind};
+use alpine::coordinator::faults::{run_scenario, FaultScenarioOptions};
+use alpine::coordinator::run_workload_with;
+use alpine::nn::{CnnVariant, LayerGraph};
+use alpine::sim::machine::Machine;
+use alpine::sim::{RunError, TileFaultModel};
+use alpine::workload::automap::{self, CostModel, SearchOptions, TopologyBudget};
+use alpine::workload::cnn::{self, CnnCase};
+use alpine::workload::lstm::{self, LstmCase};
+use alpine::workload::mlp::{self, MlpCase};
+use alpine::workload::transformer::{self, TransformerCase, TransformerShape};
+use alpine::workload::{compile, Workload};
+use alpine::util::miniprop;
+
+/// Simulate `w` twice — once on the untouched machine, once with an
+/// explicit (but inactive) `TileFaultModel::none()` attached to every
+/// tile — and require bit-identical statistics. This pins the promise
+/// that merely *having* the fault hooks compiled in changes nothing.
+fn check_fault_free_identity(cfg: &SystemConfig, w: &Workload) {
+    let pristine = Machine::new(cfg.clone(), w.spec.clone())
+        .run(w.traces.clone())
+        .unwrap();
+    let mut hooked = Machine::new(cfg.clone(), w.spec.clone());
+    for t in 0..w.spec.tiles.len() {
+        hooked.set_tile_fault(t, TileFaultModel::none());
+    }
+    assert!(!hooked.has_tile_faults(), "none() must not count as a fault");
+    let hooked = hooked.run(w.traces.clone()).unwrap();
+    hooked.assert_bit_identical(&pristine, &w.label);
+}
+
+#[test]
+fn mlp_cases_fault_free_bit_identical() {
+    let cfg = SystemConfig::high_power();
+    for case in [
+        MlpCase::Digital { cores: 1 },
+        MlpCase::Digital { cores: 2 },
+        MlpCase::Digital { cores: 4 },
+        MlpCase::Analog { case: 1 },
+        MlpCase::Analog { case: 2 },
+        MlpCase::Analog { case: 3 },
+        MlpCase::Analog { case: 4 },
+        MlpCase::AnalogLoose,
+    ] {
+        let w = mlp::generate(case, &cfg, 24).unwrap();
+        check_fault_free_identity(&cfg, &w);
+    }
+}
+
+#[test]
+fn lstm_cases_fault_free_bit_identical() {
+    let cfg = SystemConfig::high_power();
+    for case in [
+        LstmCase::Digital { cores: 1 },
+        LstmCase::Digital { cores: 2 },
+        LstmCase::Digital { cores: 5 },
+        LstmCase::Analog { case: 1 },
+        LstmCase::Analog { case: 2 },
+        LstmCase::Analog { case: 3 },
+        LstmCase::Analog { case: 4 },
+    ] {
+        let w = lstm::generate(case, 256, &cfg, 16).unwrap();
+        check_fault_free_identity(&cfg, &w);
+    }
+    let lp = SystemConfig::for_kind(SystemKind::LowPower);
+    let w = lstm::generate(LstmCase::Analog { case: 3 }, 512, &lp, 16).unwrap();
+    check_fault_free_identity(&lp, &w);
+}
+
+#[test]
+fn cnn_cases_fault_free_bit_identical() {
+    let cfg = SystemConfig::high_power();
+    for case in [CnnCase::Digital, CnnCase::Analog] {
+        let w = cnn::generate(case, CnnVariant::Fast, &cfg, 12).unwrap();
+        check_fault_free_identity(&cfg, &w);
+    }
+}
+
+#[test]
+fn transformer_cases_fault_free_bit_identical() {
+    let cfg = SystemConfig::high_power();
+    let shape = TransformerShape::new(64, 2, 16, 1, 128).unwrap();
+    for case in [TransformerCase::Digital, TransformerCase::Analog] {
+        let w = transformer::generate(shape, case, 24).unwrap();
+        check_fault_free_identity(&cfg, &w);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scenario determinism
+// ---------------------------------------------------------------------
+
+/// Same seed ⇒ bit-identical faulty sweep, regardless of worker count.
+#[test]
+fn faulty_scenario_is_bit_identical_across_jobs() {
+    let opts = |jobs| FaultScenarioOptions {
+        steps: 3,
+        n_inf: 2,
+        jobs,
+        fail_tile: Some((0, 0)),
+        ..FaultScenarioOptions::default()
+    };
+    let serial = run_scenario(&opts(1)).unwrap();
+    let parallel = run_scenario(&opts(4)).unwrap();
+
+    assert_eq!(serial.desc, parallel.desc);
+    assert_eq!(serial.curve.len(), parallel.curve.len());
+    for (a, b) in serial.curve.iter().zip(&parallel.curve) {
+        assert_eq!(a.intensity.to_bits(), b.intensity.to_bits());
+        assert_eq!(a.stall_ps, b.stall_ps);
+        assert_eq!(a.mse.to_bits(), b.mse.to_bits(), "mse at x={}", a.intensity);
+        assert_eq!(a.top1_agreement.to_bits(), b.top1_agreement.to_bits());
+        assert_eq!(a.time_s.to_bits(), b.time_s.to_bits(), "time at x={}", a.intensity);
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+    }
+    let (fa, fb) = (serial.failure.unwrap(), parallel.failure.unwrap());
+    assert_eq!(fa.degraded_desc, fb.degraded_desc);
+    assert_eq!(fa.remapped_anchors, fb.remapped_anchors);
+    assert_eq!(fa.healthy.time_s.to_bits(), fb.healthy.time_s.to_bits());
+    assert_eq!(fa.degraded.time_s.to_bits(), fb.degraded.time_s.to_bits());
+}
+
+// ---------------------------------------------------------------------
+// Property: hard failure never panics
+// ---------------------------------------------------------------------
+
+/// Injecting a hard tile failure at *any* (tile, cycle) into an analog
+/// workload either completes, or surfaces a typed `RunError::TileFailed`
+/// — and the degradation pass always produces a CPU-fallback remap for
+/// any tile the mapping occupies. `miniprop::check` fails the property
+/// on any panic, so this is also the zero-panic gate.
+#[test]
+fn hard_tile_failure_is_typed_or_degraded_never_a_panic() {
+    let cfg = SystemConfig::high_power();
+    let graph = LayerGraph::mlp(&[256, 128, 64]);
+    let budget = TopologyBudget::for_config(&cfg);
+    let outcome = automap::search_opts(
+        &graph,
+        &budget,
+        &cfg,
+        &SearchOptions {
+            top_k: 2,
+            model: CostModel::Compositional,
+            cap: None,
+            max_depth: 4,
+            max_replica: 2,
+            jobs: 1,
+        },
+    )
+    .unwrap();
+    let best = &outcome.ranked[0];
+    let w = compile::compile(&graph, &best.mapping, 2).unwrap();
+    let n_tiles = w.spec.tiles.len();
+    assert!(n_tiles > 0, "best candidate should use analog tiles");
+
+    miniprop::check("hard-tile-failure-never-panics", 0xFA_17, |rng| {
+        let tile = rng.below(n_tiles as u64) as usize;
+        let fail_at_ps = rng.below(2_000_000);
+        let model = TileFaultModel {
+            hard_fail_at_ps: Some(fail_at_ps),
+            ..TileFaultModel::none()
+        };
+        let w = compile::compile(&graph, &best.mapping, 2).unwrap();
+        match run_workload_with(SystemKind::HighPower, w, &[(tile, model)]) {
+            Ok(r) => assert!(r.time_s > 0.0),
+            Err(RunError::TileFailed { tile: t, .. }) => assert_eq!(t, tile),
+            Err(e) => panic!("unexpected error kind: {e}"),
+        }
+
+        // The degradation pass must remap any occupied tile cleanly.
+        let occupied: Vec<usize> = (0..n_tiles)
+            .filter(|&t| automap::degrade_mapping(&graph, &best.mapping, t, &budget).is_ok())
+            .collect();
+        assert!(!occupied.is_empty(), "no tile of the best mapping is degradable");
+        let pick = occupied[rng.below(occupied.len() as u64) as usize];
+        let d = automap::degrade_mapping(&graph, &best.mapping, pick, &budget).unwrap();
+        assert!(!d.remapped_anchors.is_empty());
+    });
+}

@@ -23,8 +23,8 @@ fn hp() -> SystemConfig {
 fn mlp_analog_beats_digital_on_both_systems() {
     for kind in SystemKind::ALL {
         let cfg = SystemConfig::for_kind(kind);
-        let dig = run_workload(kind, mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 5).unwrap());
-        let ana = run_workload(kind, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 5).unwrap());
+        let dig = run_workload(kind, mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 5).unwrap()).unwrap();
+        let ana = run_workload(kind, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 5).unwrap()).unwrap();
         let s = speedup(&dig, &ana);
         let e = energy_gain(&dig, &ana);
         assert!(s > 4.0, "[{}] speedup {s}", kind.name());
@@ -36,8 +36,8 @@ fn mlp_analog_beats_digital_on_both_systems() {
 fn mlp_case1_slightly_beats_case2() {
     // §VII.B: case 1 wins "by a slight margin" (2x the CM_PROCESS calls
     // in case 2, but process is a small slice of the ROI).
-    let c1 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &hp(), 10).unwrap());
-    let c2 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 2 }, &hp(), 10).unwrap());
+    let c1 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &hp(), 10).unwrap()).unwrap();
+    let c2 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 2 }, &hp(), 10).unwrap()).unwrap();
     assert!(c1.time_s < c2.time_s, "case1 {} vs case2 {}", c1.time_s, c2.time_s);
     assert!(c2.time_s / c1.time_s < 1.6, "margin should be slight: {}", c2.time_s / c1.time_s);
 }
@@ -46,9 +46,9 @@ fn mlp_case1_slightly_beats_case2() {
 fn mlp_multicore_analog_is_slower_than_single_core() {
     // §VII.C: "the performance and energy of the system worsens with
     // increasing number of CPU cores" for the analog MLP.
-    let c1 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &hp(), 10).unwrap());
-    let c3 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 3 }, &hp(), 10).unwrap());
-    let c4 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 4 }, &hp(), 10).unwrap());
+    let c1 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &hp(), 10).unwrap()).unwrap();
+    let c3 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 3 }, &hp(), 10).unwrap()).unwrap();
+    let c4 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 4 }, &hp(), 10).unwrap()).unwrap();
     assert!(c1.time_s < c3.time_s, "case1 should beat case3");
     assert!(c1.time_s < c4.time_s, "case1 should beat case4");
     assert!(c3.time_s < c4.time_s, "case3 should beat case4");
@@ -58,8 +58,8 @@ fn mlp_multicore_analog_is_slower_than_single_core() {
 fn mlp_analog_memory_intensity_much_lower() {
     // Fig. 7 middle column: LLCMPI drops sharply for analog mappings
     // (weights never traverse the hierarchy).
-    let dig = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Digital { cores: 1 }, &hp(), 5).unwrap());
-    let ana = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &hp(), 5).unwrap());
+    let dig = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Digital { cores: 1 }, &hp(), 5).unwrap()).unwrap();
+    let ana = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &hp(), 5).unwrap()).unwrap();
     assert!(
         dig.llc_mpki > 5.0 * ana.llc_mpki.max(1e-6),
         "dig {} vs ana {}",
@@ -72,10 +72,10 @@ fn mlp_analog_memory_intensity_much_lower() {
 fn mlp_digital_dominated_by_mvm_analog_by_linear_ops() {
     // Fig. 8: the reference spends most time in the digital MVM; the
     // analog cases in input load + queue/dequeue (linear terms).
-    let dig = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Digital { cores: 1 }, &hp(), 5).unwrap());
+    let dig = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Digital { cores: 1 }, &hp(), 5).unwrap()).unwrap();
     assert!(dig.roi.fraction(RoiKind::DigitalMvm) > 0.6, "{:?}", dig.roi.breakdown());
 
-    let ana = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &hp(), 5).unwrap());
+    let ana = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &hp(), 5).unwrap()).unwrap();
     let linear = ana.roi.fraction(RoiKind::InputLoad)
         + ana.roi.fraction(RoiKind::AnalogQueue)
         + ana.roi.fraction(RoiKind::AnalogDequeue);
@@ -90,9 +90,9 @@ fn mlp_digital_dominated_by_mvm_analog_by_linear_ops() {
 #[test]
 fn mlp_loose_between_digital_and_tight() {
     // §VII.B: loose ~4.1x over digital, ~3.1x slower than tight.
-    let dig = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Digital { cores: 1 }, &hp(), 5).unwrap());
-    let tight = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &hp(), 5).unwrap());
-    let loose = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::AnalogLoose, &hp(), 5).unwrap());
+    let dig = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Digital { cores: 1 }, &hp(), 5).unwrap()).unwrap();
+    let tight = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &hp(), 5).unwrap()).unwrap();
+    let loose = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::AnalogLoose, &hp(), 5).unwrap()).unwrap();
     let s_loose = dig.time_s / loose.time_s;
     let slowdown = loose.time_s / tight.time_s;
     assert!(s_loose > 1.5, "loose over digital: {s_loose}");
@@ -103,7 +103,7 @@ fn mlp_loose_between_digital_and_tight() {
 fn mlp_working_set_drives_dram_traffic() {
     // The digital working set (2.1 MB) exceeds the HP LLC (1 MB): every
     // inference must re-stream weights from DRAM.
-    let dig = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Digital { cores: 1 }, &hp(), 4).unwrap());
+    let dig = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Digital { cores: 1 }, &hp(), 4).unwrap()).unwrap();
     let model = MlpModel::paper();
     let lines_per_inf = model.total_weight_bytes() / 64;
     assert!(
@@ -125,11 +125,11 @@ fn lstm_gains_grow_with_hidden_size() {
         let dig = run_workload(
             SystemKind::HighPower,
             lstm::generate(LstmCase::Digital { cores: 1 }, n_h, &hp(), 5).unwrap(),
-        );
+        ).unwrap();
         let ana = run_workload(
             SystemKind::HighPower,
             lstm::generate(LstmCase::Analog { case: 1 }, n_h, &hp(), 5).unwrap(),
-        );
+        ).unwrap();
         let s = speedup(&dig, &ana);
         assert!(s > prev, "gain should grow with n_h: {s} at {n_h} (prev {prev})");
         prev = s;
@@ -143,11 +143,11 @@ fn lstm_multicore_analog_helps_unlike_mlp() {
     let c1 = run_workload(
         SystemKind::HighPower,
         lstm::generate(LstmCase::Analog { case: 1 }, 750, &hp(), 10).unwrap(),
-    );
+    ).unwrap();
     let c4 = run_workload(
         SystemKind::HighPower,
         lstm::generate(LstmCase::Analog { case: 4 }, 750, &hp(), 10).unwrap(),
-    );
+    ).unwrap();
     assert!(c4.time_s < c1.time_s, "case4 {} should beat case1 {}", c4.time_s, c1.time_s);
 }
 
@@ -157,7 +157,7 @@ fn lstm_analog_bottleneck_is_dequeue_plus_activation() {
     let ana = run_workload(
         SystemKind::HighPower,
         lstm::generate(LstmCase::Analog { case: 1 }, 750, &hp(), 5).unwrap(),
-    );
+    ).unwrap();
     let deq_act = ana.roi.fraction(RoiKind::AnalogDequeue) + ana.roi.fraction(RoiKind::Activation);
     assert!(deq_act > 0.4, "dequeue+activation should dominate: {:?}", ana.roi.breakdown());
 }
@@ -168,7 +168,7 @@ fn lstm_digital_dominated_by_cell_mvm() {
     let dig = run_workload(
         SystemKind::HighPower,
         lstm::generate(LstmCase::Digital { cores: 1 }, 750, &hp(), 5).unwrap(),
-    );
+    ).unwrap();
     let mvm_act = dig.roi.fraction(RoiKind::DigitalMvm)
         + dig.roi.fraction(RoiKind::Activation)
         + dig.roi.fraction(RoiKind::GateCombine);
@@ -199,11 +199,11 @@ fn cnn_analog_beats_digital_all_variants() {
         let dig = run_workload(
             SystemKind::HighPower,
             cnn::generate(CnnCase::Digital, variant, &hp(), 1).unwrap(),
-        );
+        ).unwrap();
         let ana = run_workload(
             SystemKind::HighPower,
             cnn::generate(CnnCase::Analog, variant, &hp(), 1).unwrap(),
-        );
+        ).unwrap();
         let s = speedup(&dig, &ana);
         assert!(s > 3.0, "{}: speedup {s}", variant.name());
     }
@@ -217,11 +217,11 @@ fn cnn_s_sees_largest_gains() {
         let dig = run_workload(
             SystemKind::HighPower,
             cnn::generate(CnnCase::Digital, variant, &hp(), 1).unwrap(),
-        );
+        ).unwrap();
         let ana = run_workload(
             SystemKind::HighPower,
             cnn::generate(CnnCase::Analog, variant, &hp(), 1).unwrap(),
-        );
+        ).unwrap();
         gains.push((variant.name(), speedup(&dig, &ana)));
     }
     let s_gain = gains.iter().find(|(n, _)| *n == "CNN-S").unwrap().1;
@@ -237,7 +237,7 @@ fn cnn_dense_cores_idle_most_in_digital() {
     let dig = run_workload(
         SystemKind::HighPower,
         cnn::generate(CnnCase::Digital, CnnVariant::Slow, &hp(), 2).unwrap(),
-    );
+    ).unwrap();
     let conv_idle: f64 = dig.per_core_idle[..5].iter().sum::<f64>() / 5.0;
     let dense_idle: f64 = dig.per_core_idle[5..8].iter().sum::<f64>() / 3.0;
     assert!(
@@ -256,11 +256,11 @@ fn cnn_memory_traffic_improves_with_aimc() {
     let dig = run_workload(
         SystemKind::HighPower,
         cnn::generate(CnnCase::Digital, CnnVariant::Slow, &hp(), 1).unwrap(),
-    );
+    ).unwrap();
     let ana = run_workload(
         SystemKind::HighPower,
         cnn::generate(CnnCase::Analog, CnnVariant::Slow, &hp(), 1).unwrap(),
-    );
+    ).unwrap();
     assert!(
         dig.dram_accesses as f64 > 1.5 * ana.dram_accesses as f64,
         "dig {} vs ana {}",
@@ -279,8 +279,8 @@ fn low_power_system_sees_smaller_gains_than_high_power() {
     // comparison to the high-power system" (smaller L1).
     let gain = |kind: SystemKind| {
         let cfg = SystemConfig::for_kind(kind);
-        let dig = run_workload(kind, mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 5).unwrap());
-        let ana = run_workload(kind, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 5).unwrap());
+        let dig = run_workload(kind, mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 5).unwrap()).unwrap();
+        let ana = run_workload(kind, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 5).unwrap()).unwrap();
         speedup(&dig, &ana)
     };
     let hp_gain = gain(SystemKind::HighPower);
@@ -294,7 +294,7 @@ fn low_power_system_sees_smaller_gains_than_high_power() {
 #[test]
 fn simulation_is_deterministic() {
     let run = || {
-        run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 3 }, &hp(), 3).unwrap())
+        run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 3 }, &hp(), 3).unwrap()).unwrap()
     };
     let a = run();
     let b = run();
@@ -307,6 +307,6 @@ fn simulation_is_deterministic() {
 fn process_latency_insensitivity() {
     // §VII.C: "even estimates of the latency increased 10x are observed
     // to have minimal impact" — check CM_PROCESS is a small ROI share.
-    let ana = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &hp(), 10).unwrap());
+    let ana = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &hp(), 10).unwrap()).unwrap();
     assert!(ana.roi.fraction(RoiKind::AnalogProcess) < 0.2, "{:?}", ana.roi.breakdown());
 }

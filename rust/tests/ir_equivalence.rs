@@ -60,8 +60,8 @@ fn assert_workloads_identical(oracle: &Workload, compiled: &Workload) {
 
 /// Full-run statistics, bit for bit.
 fn assert_stats_identical(kind: SystemKind, oracle: Workload, compiled: Workload) {
-    let a = run_workload(kind, oracle);
-    let b = run_workload(kind, compiled);
+    let a = run_workload(kind, oracle).unwrap();
+    let b = run_workload(kind, compiled).unwrap();
     assert_eq!(a.label, b.label);
     assert_eq!(a.time_s.to_bits(), b.time_s.to_bits(), "{}", a.label);
     assert_eq!(a.time_per_inference_s.to_bits(), b.time_per_inference_s.to_bits(), "{}", a.label);

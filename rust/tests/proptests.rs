@@ -152,7 +152,7 @@ fn machine_batched_streams_equal_per_line_reference() {
         let run = |batched: bool| {
             let mut m = Machine::new(SystemConfig::high_power(), MachineSpec::default());
             m.set_batched_streams(batched);
-            m.run(vec![trace.clone()])
+            m.run(vec![trace.clone()]).unwrap()
         };
         let fast = run(true);
         let reference = run(false);
@@ -174,7 +174,7 @@ fn machine_time_monotone_in_work() {
             let mut m = Machine::new(SystemConfig::high_power(), MachineSpec::default());
             let mut b = TraceBuilder::new();
             b.compute(InstClass::IntAlu, n);
-            m.run(vec![b.build()]).roi_time_ps
+            m.run(vec![b.build()]).unwrap().roi_time_ps
         };
         assert!(run(insts + 1000) > run(insts));
     });
@@ -190,7 +190,7 @@ fn machine_stats_conserve_time() {
             b.compute(InstClass::IntAlu, 100 + rng.below(10_000));
             b.stream_read(0x1000_0000 + rng.below(1 << 20) * 64, (1 + rng.below(64)) * 64, 2);
         }
-        let rs = m.run(vec![b.build()]);
+        let rs = m.run(vec![b.build()]).unwrap();
         let cfg = SystemConfig::high_power();
         let total = rs.roi_time_ps / cfg.cycle_ps();
         let accounted = rs.cores[0].total_cycles();
@@ -210,7 +210,7 @@ fn energy_positive_and_monotone_in_time() {
         let mut m = Machine::new(cfg.clone(), MachineSpec::default());
         let mut b = TraceBuilder::new();
         b.compute(InstClass::IntAlu, 1000 + rng.below(50_000));
-        let rs = m.run(vec![b.build()]);
+        let rs = m.run(vec![b.build()]).unwrap();
         let e = energy::compute(&cfg, &rs);
         assert!(e.total_j() > 0.0);
         assert!(e.core_active_j > 0.0);
@@ -296,9 +296,9 @@ fn pipeline_never_loses_messages() {
             c.compute(InstClass::IntAlu, 1 + rng.below(5000));
             c.push(TraceOp::Recv { ch: 0 });
         }
-        let rs = m.run(vec![p.build(), c.build()]);
+        let rs = m.run(vec![p.build(), c.build()]).unwrap();
         assert!(rs.roi_time_ps > 0);
-        // If a message were lost the consumer would deadlock-panic.
+        // If a message were lost the consumer would deadlock (a RunError).
     });
 }
 
@@ -319,7 +319,7 @@ fn mutex_workloads_complete_without_deadlock() {
                 b.build()
             })
             .collect();
-        let rs = m.run(traces);
+        let rs = m.run(traces).unwrap();
         assert!(rs.roi_time_ps > 0);
     });
 }
@@ -343,8 +343,8 @@ fn more_inferences_take_proportionally_longer() {
     check("inference-scaling", 0x52, |rng| {
         let n = 2 + rng.below(4) as u32;
         let cfg = SystemConfig::high_power();
-        let r1 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, n).unwrap());
-        let r2 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2 * n).unwrap());
+        let r1 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, n).unwrap()).unwrap();
+        let r2 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2 * n).unwrap()).unwrap();
         let ratio = r2.time_s / r1.time_s;
         assert!(
             (1.6..2.4).contains(&ratio),
