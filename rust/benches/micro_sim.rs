@@ -194,12 +194,66 @@ fn main() {
     // inference).
     let mlp_w = mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 1000).unwrap();
     ff_case(&mut results, "mlp_dig1_1000inf", &mlp_w, 5, 3, 5.0);
-    // A 64-inference digital CNN-F pipeline (8 cores, row-streamed
-    // channels) — the largest CNN configuration the bench budget allows
-    // at full replay. No enforced floor (engagement depends on the
-    // pipeline's fill transient), just tracked ratios.
+
+    // Nested-periodicity fast-forward (PR 7): a 64-inference digital
+    // CNN-F pipeline (8 cores, row-streamed channels) whose trace
+    // carries per-row `Rep` loops *inside* the inference loop. The
+    // per-segment cursor stack detects periodicity at both nesting
+    // levels, so jumps engage where the flat single-level detector
+    // stalled on the pipeline's fill transient. All three paths are
+    // asserted bit-identical before timing; both the replay ratio (the
+    // ISSUE-7 >= 5x acceptance floor) and the nested-vs-flat gain are
+    // persisted to BENCH_sim.json.
     let cnn_w = cnn::generate(CnnCase::Digital, CnnVariant::Fast, &cfg, 64).unwrap();
-    ff_case(&mut results, "cnn_fast_dig_64inf", &cnn_w, 3, 3, 0.0);
+    let run_nested = |w: &Workload, ff: bool, nested: bool| {
+        let mut m = Machine::new(SystemConfig::high_power(), w.spec.clone());
+        m.set_fast_forward(ff);
+        m.set_nested_fast_forward(nested);
+        m.run(w.traces.clone()).unwrap()
+    };
+    let nested_stats = run_nested(&cnn_w, true, true);
+    let flat_stats = run_nested(&cnn_w, true, false);
+    let reference = run_nested(&cnn_w, false, false);
+    nested_stats.assert_bit_identical(&reference, "cnn_fast_dig_64inf nested-ff");
+    flat_stats.assert_bit_identical(&reference, "cnn_fast_dig_64inf flat-ff");
+    let b_nested = bench("machine/cnn_fast_dig_64inf_fastforward", 3, || {
+        black_box(run_nested(&cnn_w, true, true));
+    });
+    let b_flat = bench("machine/cnn_fast_dig_64inf_flat_ff", 3, || {
+        black_box(run_nested(&cnn_w, true, false));
+    });
+    let b_replay = bench("machine/cnn_fast_dig_64inf_replay", 3, || {
+        black_box(run_nested(&cnn_w, false, false));
+    });
+    println!(
+        "machine/cnn_fast_dig_64inf: nested-ff vs replay {:.2}x (mean), {:.2}x (min); \
+         nested-ff vs flat-ff {:.2}x (min)",
+        b_replay.mean_ns / b_nested.mean_ns,
+        b_replay.min_ns / b_nested.min_ns,
+        b_flat.min_ns / b_nested.min_ns,
+    );
+    assert!(
+        b_replay.min_ns / b_nested.min_ns >= 5.0,
+        "machine/cnn_fast_dig_64inf: nested fast-forward speedup {:.2}x below the 5x floor",
+        b_replay.min_ns / b_nested.min_ns,
+    );
+    results.push(BenchResult {
+        name: "machine/cnn_fast_dig_64inf_ff_speedup_x".to_string(),
+        mean_ns: b_replay.mean_ns / b_nested.mean_ns,
+        min_ns: b_replay.min_ns / b_nested.min_ns,
+        stddev_ns: 0.0,
+        iters: 1,
+    });
+    results.push(BenchResult {
+        name: "machine/cnn_fast_dig_64inf_nested_gain_x".to_string(),
+        mean_ns: b_flat.mean_ns / b_nested.mean_ns,
+        min_ns: b_flat.min_ns / b_nested.min_ns,
+        stddev_ns: 0.0,
+        iters: 1,
+    });
+    results.push(b_nested);
+    results.push(b_flat);
+    results.push(b_replay);
 
     // AIMClib functional MVM (the checker used in e2e validation).
     let mut rng = Rng::new(1);

@@ -14,7 +14,9 @@ use crate::config::{SystemConfig, SystemKind};
 use crate::nn::LayerGraph;
 use crate::util::parallel;
 use crate::workload::automap::{self, Candidate, CostModel, SearchOptions, TopologyBudget};
+use crate::workload::compile::cache::{CompileCache, CompileCacheStats};
 use crate::workload::{compile, WorkloadError};
+use std::sync::Mutex;
 
 use super::{run_workload, CaseResult};
 
@@ -36,6 +38,9 @@ pub struct AutomapOptions {
     pub depth: usize,
     /// Largest column-replication factor searched (of {1, 2, 4, 8}).
     pub max_replica: usize,
+    /// Share lowered step fragments across `Compiled`-oracle scoring and
+    /// the top-K validation compiles (bit-identical output either way).
+    pub compile_cache: bool,
 }
 
 impl Default for AutomapOptions {
@@ -48,6 +53,7 @@ impl Default for AutomapOptions {
             cap: None,
             depth: 8,
             max_replica: 8,
+            compile_cache: true,
         }
     }
 }
@@ -76,6 +82,12 @@ pub struct AutomapReport {
     pub best: usize,
     /// Index of the baseline row.
     pub baseline: usize,
+    /// Compile-cache counters of the `Compiled`-oracle search, if it ran
+    /// with the cache enabled (excluded from row-identity comparisons).
+    pub search_cache: Option<CompileCacheStats>,
+    /// Compile-cache counters of the top-K validation compiles, if they
+    /// ran with the cache enabled.
+    pub validate_cache: Option<CompileCacheStats>,
 }
 
 impl AutomapReport {
@@ -123,6 +135,7 @@ pub fn run_search(
             max_depth: opts.depth,
             max_replica: opts.max_replica,
             jobs: opts.jobs,
+            compile_cache: opts.compile_cache,
         },
     )?;
     let (base_mapping, base_desc) = automap::digital_baseline(graph)?;
@@ -137,9 +150,21 @@ pub fn run_search(
         }
     };
 
+    // The top-K compiles share one materialize-mode fragment cache:
+    // step lowerings repeat across inferences (emission is i-invariant)
+    // and across candidates that place the same anchors, so the winners'
+    // full traces splice mostly-cached fragments. Output is
+    // bit-identical to plain `compile` (debug builds assert per hit).
+    let vcache = opts.compile_cache.then(|| Mutex::new(CompileCache::new(true)));
     let workloads = cands
         .iter()
-        .map(|c| compile::compile(graph, &c.mapping, opts.n_inf))
+        .map(|c| match &vcache {
+            Some(vc) => {
+                let mut ctx = compile::CacheCtx::materialize(vc);
+                compile::compile_with(graph, &c.mapping, opts.n_inf, Some(&mut ctx))
+            }
+            None => compile::compile(graph, &c.mapping, opts.n_inf),
+        })
         .collect::<Result<Vec<_>, _>>()?;
     // `parallel_map` preserves input order, so the first failing
     // candidate (in rank order, not worker order) aborts the validation.
@@ -187,5 +212,8 @@ pub fn run_search(
         rows,
         best,
         baseline: baseline_idx,
+        search_cache: outcome.cache,
+        validate_cache: vcache
+            .map(|c| c.into_inner().expect("compile cache poisoned").stats()),
     })
 }

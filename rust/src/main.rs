@@ -65,6 +65,14 @@ fn dispatch(args: &[String]) -> Result<()> {
         parallel::set_jobs(n);
         args.drain(i..=i + 1);
     }
+    // Global simulator knob: `--no-nested-ff` disables hierarchical
+    // steady-state fast-forward (full replay of every loop iteration)
+    // for every run this invocation performs — the A/B switch behind
+    // the nested-ff equivalence gates.
+    while let Some(i) = args.iter().position(|a| a == "--no-nested-ff") {
+        alpine::sim::machine::set_nested_fast_forward_default(false);
+        args.remove(i);
+    }
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "list-configs" => list_configs(),
@@ -147,7 +155,7 @@ fn print_help() {
          \x20     [--layers N] [--d-ff N] [--cores N] [--tiles N]\n\
          \x20     [--tile-dims RxC] [--channels N] [--top K]\n\
          \x20     [--depth N] [--max-replica N] [--cap N]\n\
-         \x20     [--cost-model compositional|compiled]\n\
+         \x20     [--cost-model compositional|compiled] [--no-compile-cache]\n\
          \x20     [--system hp|lp] [--inferences N]\n\
          \x20                          search the mapping space (lazy\n\
          \x20                          branch-and-bound, uncapped unless\n\
@@ -175,6 +183,13 @@ fn print_help() {
          \x20 --jobs N                 sweep worker threads (default: all\n\
          \x20                          cores; ALPINE_JOBS env also works).\n\
          \x20                          Rows are identical at any N.\n\
+         \x20 --no-nested-ff           disable hierarchical steady-state\n\
+         \x20                          fast-forward (replay every loop\n\
+         \x20                          iteration; results are identical,\n\
+         \x20                          only slower)\n\
+         \x20 --no-compile-cache       (automap) compile every oracle\n\
+         \x20                          candidate from scratch instead of\n\
+         \x20                          splicing cached step fragments\n\
          \n\
          case syntax: dig1 dig2 dig4 dig5 ana1 ana2 ana3 ana4 loose (per workload)"
     );
@@ -387,6 +402,7 @@ fn cmd_automap(args: &[String]) -> Result<()> {
         cap,
         depth: opt_u32(args, "--depth", 8)? as usize,
         max_replica: opt_u32(args, "--max-replica", 8)? as usize,
+        compile_cache: !args.iter().any(|a| a == "--no-compile-cache"),
     };
     println!(
         "automap: searching {} (depth 1..{}, replication <= {}, {} cost model, {}) ...",
@@ -412,6 +428,20 @@ fn cmd_automap(args: &[String]) -> Result<()> {
         rep.rows.len(),
         system.name(),
     );
+    let cache_line = |tag: &str, s: &alpine::workload::compile::cache::CompileCacheStats| {
+        println!(
+            "automap: {tag} compile cache: {} hits / {} misses, {:.1} KiB fragment arena",
+            s.hits,
+            s.misses,
+            s.arena_bytes as f64 / 1024.0,
+        );
+    };
+    if let Some(s) = &rep.search_cache {
+        cache_line("search", s);
+    }
+    if let Some(s) = &rep.validate_cache {
+        cache_line("validate", s);
+    }
     report::automap_table(&format!("automap — {}", graph.name), &rep).print();
     println!(
         "best: {} — {:.2}x vs the all-digital single-core baseline; {} mapping(s) on the Pareto front",

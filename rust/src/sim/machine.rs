@@ -11,23 +11,35 @@
 //!
 //! ## Steady-state fast-forward
 //!
-//! Traces store their per-inference block inside a `Rep` loop, and after
-//! warm-up the machine's whole state evolves periodically: every
-//! iteration adds the same stat deltas and advances every clock by the
-//! same Δt. The machine detects this with a cheap periodicity digest
-//! taken once per *round* (each time the globally slowest core finishes
-//! another `Rep` iteration): per-core cursor/lead/time offsets and stat
-//! deltas, ROI deltas, per-core cumulative stall/idle picoseconds,
-//! channel/mutex/tile/DRAM/bus timing offsets relative to the round's
-//! reference time, plus cache occupancy. When two consecutive rounds
-//! produce identical digests, the remaining iterations are applied in
-//! closed form — counters extrapolate linearly, stall/idle cycles via
-//! their exact cumulative-ps floor conversion, clocks shift by p·Δt —
-//! and execution resumes for the final iteration and epilogue. The
-//! result is bit-identical to full replay — enforced by unit tests, the
-//! `machine-fastforward-equivalence` proptest, the per-paper-case suite
-//! in `tests/fastforward.rs`, and the CI determinism gate;
-//! `set_fast_forward(false)` keeps the full replay path, exactly like
+//! Traces store their per-inference block inside a `Rep` loop (possibly
+//! nested under `Loop` segments — a CNN row-loop inside the
+//! per-inference loop), and after warm-up the machine's whole state
+//! evolves periodically: every iteration adds the same stat deltas and
+//! advances every clock by the same Δt. The machine detects this with a
+//! cheap periodicity digest taken once per *round* (each time the
+//! globally slowest core finishes another innermost-`Rep` iteration):
+//! per-core cursor/stack/lead/time offsets and stat deltas, ROI deltas,
+//! per-core cumulative stall/idle picoseconds, channel/mutex/tile/
+//! DRAM/bus timing offsets relative to the round's reference time, plus
+//! cache occupancy. Loop-level iteration counters live in a separate
+//! per-round *progress* vector: the digest matches when the positional
+//! state repeats and every counter's per-round delta repeats, which
+//! gives each loop level of each core a constant per-round *velocity*
+//! (0 for an outer loop that only wraps occasionally, 1 for the
+//! innermost `Rep`, k for a core running k iterations per round). The
+//! remaining periods are then applied in closed form — counters
+//! extrapolate linearly, stall/idle cycles via their exact
+//! cumulative-ps floor conversion, clocks shift by p·Δt, every loop
+//! level advances by p·velocity — capped so each level keeps at least
+//! one live iteration. An inner `Rep` therefore closed-form-jumps even
+//! when the enclosing loop never reaches a whole-trace steady state;
+//! the whole-trace digest of flat `Rep` programs is the degenerate
+//! single-scope case. The result is bit-identical to full replay —
+//! enforced by unit tests, the `machine-fastforward-equivalence`
+//! proptest, the per-paper-case suite in `tests/fastforward.rs`, and
+//! the CI determinism gate; `set_fast_forward(false)` keeps the full
+//! replay path, and `set_nested_fast_forward(false)` restricts jumps to
+//! top-level `Rep` segments (the pre-nesting behaviour), exactly like
 //! `set_batched_streams`.
 //!
 //! The digest is a *detector*, not a proof: cache tag/LRU content is
@@ -81,7 +93,7 @@ pub struct ChannelSpec {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum RunError {
     /// No core can make progress. One diagnostic line per blocked core
-    /// (`core j @ t=...ps seg s/n op k iter i: <op>`).
+    /// (`core j @ t=...ps depth d seg s/n op k iter i: <op>`).
     Deadlock { blocked_cores: Vec<String> },
     /// A tile's hard-failure time was reached; the op can never complete.
     TileFailed { tile: usize, at_ps: u64 },
@@ -123,10 +135,28 @@ pub const BACKOFF_BASE_PS: u64 = 1_000;
 /// Give up (-> `RunError::Timeout`) after this many backoff retries.
 pub const BACKOFF_MAX_RETRIES: u32 = 8;
 
-/// Execution position inside a [`Trace`] program.
-#[derive(Clone, Copy, Debug, Default)]
+/// One level of loop nesting: the cursor is inside the body of the
+/// `Loop` at index `seg` of the enclosing segment list.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+struct Frame {
+    /// Index of the `Loop` segment in its enclosing segment list.
+    seg: usize,
+    /// Current iteration of that `Loop`.
+    iter: u32,
+    /// Stored-op offset of the current child segment within the `Loop`
+    /// body (sum of `stored_ops` of the body segments before it), so
+    /// per-op stride lookups stay O(depth) without rescanning the body.
+    base: usize,
+}
+
+/// Execution position inside a [`Trace`] program: the enclosing `Loop`
+/// frames (outermost first) plus the position inside the innermost
+/// segment list.
+#[derive(Clone, Debug, Default)]
 struct Cursor {
-    /// Index into `trace.segments`.
+    /// Enclosing `Loop` levels, outermost first (empty = top level).
+    stack: Vec<Frame>,
+    /// Index into the innermost segment list.
     seg: usize,
     /// Op index inside the current segment (`Ops` run or `Rep` body).
     op: usize,
@@ -134,40 +164,103 @@ struct Cursor {
     iter: u32,
 }
 
-/// The op the cursor points at (cursor must be normalized and not done).
+/// The innermost segment list the cursor currently executes.
+fn cur_segments<'t>(trace: &'t Trace, c: &Cursor) -> &'t [Segment] {
+    let mut segs: &[Segment] = &trace.segments;
+    for f in &c.stack {
+        let Segment::Loop { body, .. } = &segs[f.seg] else {
+            unreachable!("cursor frame does not sit on a Loop segment");
+        };
+        segs = body;
+    }
+    segs
+}
+
+/// The op the cursor points at (cursor must be normalized and not
+/// done). Address shifts compose additively across loop levels: each
+/// enclosing `Loop` contributes `strides[j] * iter` for the stored-op
+/// index `j` of the op within that level's body (the suffix sum of the
+/// frame bases below it plus the in-segment op index).
 fn cur_op(trace: &Trace, c: &Cursor) -> TraceOp {
-    match &trace.segments[c.seg] {
+    let mut idx: usize = c.op + c.stack.iter().map(|f| f.base).sum::<usize>();
+    let mut shift: i64 = 0;
+    let mut segs: &[Segment] = &trace.segments;
+    for f in &c.stack {
+        let Segment::Loop { body, strides, .. } = &segs[f.seg] else {
+            unreachable!("cursor frame does not sit on a Loop segment");
+        };
+        shift = shift
+            .wrapping_add(strides.get(idx).copied().unwrap_or(0).wrapping_mul(i64::from(f.iter)));
+        idx -= f.base;
+        segs = body;
+    }
+    let op = match &segs[c.seg] {
         Segment::Ops(v) => v[c.op],
         Segment::Rep { body, strides, .. } => {
             apply_stride(body[c.op], strides.get(c.op).copied().unwrap_or(0), c.iter)
         }
-    }
+        Segment::Loop { .. } => unreachable!("normalized cursor never rests on a Loop"),
+    };
+    apply_stride(op, shift, 1)
 }
 
 fn done(trace: &Trace, c: &Cursor) -> bool {
-    c.seg >= trace.segments.len()
+    c.stack.is_empty() && c.seg >= trace.segments.len()
 }
 
-/// Advance the cursor past exhausted runs/iterations until it points at
-/// a concrete op (or the end). Returns how many `Rep` iterations were
-/// completed by this normalization (0 or 1 for well-formed programs).
+/// Step the cursor past the current segment (holding `stored` stored
+/// ops), crediting them to the enclosing frame's stride base.
+fn advance_past(c: &mut Cursor, stored: usize) {
+    if let Some(f) = c.stack.last_mut() {
+        f.base += stored;
+    }
+    c.seg += 1;
+    c.op = 0;
+    c.iter = 0;
+}
+
+/// Advance the cursor past exhausted runs/iterations/loop levels until
+/// it points at a concrete op (or the end). Returns how many innermost
+/// `Rep` iterations were completed by this normalization (0 or 1 for
+/// well-formed programs).
 fn normalize(trace: &Trace, c: &mut Cursor) -> u32 {
     let mut completed = 0;
-    while c.seg < trace.segments.len() {
-        match &trace.segments[c.seg] {
+    loop {
+        // Re-resolve the innermost list each step: the borrow is tied to
+        // `trace` only, and nesting depth is tiny.
+        let segs = cur_segments(trace, c);
+        if c.seg >= segs.len() {
+            let Some(mut f) = c.stack.pop() else {
+                return completed; // end of the whole trace
+            };
+            let parent = cur_segments(trace, c);
+            let Segment::Loop { count, .. } = &parent[f.seg] else {
+                unreachable!("cursor frame does not sit on a Loop segment");
+            };
+            f.iter += 1;
+            if f.iter < *count {
+                f.base = 0;
+                c.stack.push(f);
+                c.seg = 0;
+                c.op = 0;
+                c.iter = 0;
+            } else {
+                c.seg = f.seg;
+                let stored = parent[c.seg].stored_ops();
+                advance_past(c, stored);
+            }
+            continue;
+        }
+        match &segs[c.seg] {
             Segment::Ops(v) => {
                 if c.op < v.len() {
                     return completed;
                 }
-                c.seg += 1;
-                c.op = 0;
-                c.iter = 0;
+                advance_past(c, v.len());
             }
             Segment::Rep { body, count, .. } => {
                 if body.is_empty() || c.iter >= *count {
-                    c.seg += 1;
-                    c.op = 0;
-                    c.iter = 0;
+                    advance_past(c, body.len());
                 } else if c.op < body.len() {
                     return completed;
                 } else {
@@ -175,14 +268,22 @@ fn normalize(trace: &Trace, c: &mut Cursor) -> u32 {
                     c.iter += 1;
                     c.op = 0;
                     if c.iter >= *count {
-                        c.seg += 1;
-                        c.iter = 0;
+                        advance_past(c, body.len());
                     }
+                }
+            }
+            seg @ Segment::Loop { body, count, .. } => {
+                if *count == 0 || body.iter().all(|s| s.flat_len() == Some(0)) {
+                    advance_past(c, seg.stored_ops());
+                } else {
+                    c.stack.push(Frame { seg: c.seg, iter: 0, base: 0 });
+                    c.seg = 0;
+                    c.op = 0;
+                    c.iter = 0;
                 }
             }
         }
     }
-    completed
 }
 
 struct CoreRun {
@@ -236,6 +337,12 @@ struct FfSnapshot {
     t_ref: u64,
     /// Positional/offset state: must repeat exactly between rounds.
     state: Vec<u64>,
+    /// Per-core loop-level iteration counters (`completed_iters`, each
+    /// stack frame's iteration, the innermost `Rep` iteration). Their
+    /// per-round deltas are the levels' *velocities*: they must repeat
+    /// between rounds, and the closed-form jump advances each level by
+    /// `p * velocity`.
+    progress: Vec<u64>,
     /// Monotonic counters: their per-round deltas must repeat.
     counters: Vec<u64>,
     /// Per-core cumulative stall/idle picoseconds (`cycles * cycle_ps +
@@ -264,8 +371,24 @@ pub struct Machine {
     /// full replay path is kept for the equivalence tests and the
     /// `micro_sim` baseline bench.
     fast_forward: bool,
+    /// Allow closed-form jumps of `Rep` segments nested under `Loop`
+    /// levels (default). Off restricts jumps to top-level `Rep`
+    /// segments — the pre-nesting eligibility rule.
+    nested_fast_forward: bool,
     ff_jumps: u32,
     ff_skipped_iters: u64,
+}
+
+/// Process-wide default for [`Machine::set_nested_fast_forward`], so
+/// sweep drivers (`--no-nested-ff`) reach every internally-constructed
+/// machine without threading a flag through each call site — the same
+/// idiom as `util::parallel::set_jobs`.
+static NESTED_FF_DEFAULT: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(true);
+
+/// Set the process-wide default for nested fast-forward (read once per
+/// `Machine::new`; per-machine `set_nested_fast_forward` overrides).
+pub fn set_nested_fast_forward_default(on: bool) {
+    NESTED_FF_DEFAULT.store(on, std::sync::atomic::Ordering::Relaxed);
 }
 
 enum StepResult {
@@ -292,6 +415,7 @@ impl Machine {
             cycle_ps: cfg.cycle_ps(),
             batched_streams: true,
             fast_forward: true,
+            nested_fast_forward: NESTED_FF_DEFAULT.load(std::sync::atomic::Ordering::Relaxed),
             ff_jumps: 0,
             ff_skipped_iters: 0,
             cfg,
@@ -318,6 +442,15 @@ impl Machine {
     /// the knob exists for equivalence tests and perf baselines.
     pub fn set_fast_forward(&mut self, on: bool) {
         self.fast_forward = on;
+    }
+
+    /// Select between segment-scoped steady-state detection that also
+    /// jumps `Rep` segments nested under `Loop` levels (default) and
+    /// the top-level-only eligibility rule. Both produce bit-identical
+    /// statistics; the knob exists for equivalence tests and perf
+    /// baselines (`--no-nested-ff`).
+    pub fn set_nested_fast_forward(&mut self, on: bool) {
+        self.nested_fast_forward = on;
     }
 
     /// Closed-form jumps taken by the fast-forward engine so far.
@@ -398,10 +531,11 @@ impl Machine {
                     .map(|j| {
                         let c = &cores[j].cursor;
                         format!(
-                            "core {j} @ t={}ps seg {}/{} op {} iter {}: {:?}",
+                            "core {j} @ t={}ps depth {} seg {}/{} op {} iter {}: {:?}",
                             cores[j].now_ps,
+                            c.stack.len(),
                             c.seg,
-                            traces[j].segments.len(),
+                            cur_segments(&traces[j], c).len(),
                             c.op,
                             c.iter,
                             cur_op(&traces[j], c)
@@ -521,15 +655,26 @@ impl Machine {
     fn ff_snapshot(&mut self, traces: &[Trace], cores: &mut [CoreRun], t_ref: u64, round: u64) -> FfSnapshot {
         let cycle = self.cycle_ps;
         let mut state = Vec::with_capacity(16 * cores.len() + 32);
+        let mut progress = Vec::with_capacity(3 * cores.len());
         for (i, c) in cores.iter().enumerate() {
             state.push(done(&traces[i], &c.cursor) as u64);
+            state.push(c.cursor.stack.len() as u64);
+            for f in &c.cursor.stack {
+                state.push(f.seg as u64);
+                state.push(f.base as u64);
+            }
             state.push(c.cursor.seg as u64);
             state.push(c.cursor.op as u64);
-            state.push(c.completed_iters.saturating_sub(round));
             state.push(c.now_ps.saturating_sub(t_ref));
             state.push(c.retrying as u64);
             state.push(c.roi_stack.len() as u64);
             state.extend(c.roi_stack.iter().map(|k| *k as u64));
+            // Loop-level iteration counters, outermost first. The state
+            // above pins the stack *shape*, so matching rounds always
+            // produce identically-shaped progress vectors.
+            progress.push(c.completed_iters);
+            progress.extend(c.cursor.stack.iter().map(|f| u64::from(f.iter)));
+            progress.push(u64::from(c.cursor.iter));
         }
         self.mem.ff_state(t_ref, &mut state);
         for t in &self.tiles {
@@ -555,26 +700,85 @@ impl Machine {
 
         let cum_wfm_ps = cores.iter().map(|c| c.stats.wfm_cycles * cycle + c.wfm_residual_ps).collect();
         let cum_idle_ps = cores.iter().map(|c| c.stats.idle_cycles * cycle + c.idle_residual_ps).collect();
-        FfSnapshot { round, t_ref, state, counters, cum_wfm_ps, cum_idle_ps }
+        FfSnapshot { round, t_ref, state, progress, counters, cum_wfm_ps, cum_idle_ps }
     }
 
     /// Delta-form digest of one round: the positional state verbatim plus
     /// the per-round deltas of every counter and cumulative ps quantity.
+    /// Progress deltas are wrapping: an iteration counter that *wrapped*
+    /// (a whole inner `Rep` restarting each round) still digests to a
+    /// stable value, and the jump-budget check separately rejects
+    /// non-monotone levels before extrapolating.
     fn ff_digest(cur: &FfSnapshot, prev: &FfSnapshot) -> Vec<u64> {
         let mut d = cur.state.clone();
         debug_assert_eq!(cur.counters.len(), prev.counters.len());
+        debug_assert_eq!(cur.progress.len(), prev.progress.len());
+        d.extend(cur.progress.iter().zip(&prev.progress).map(|(a, b)| a.wrapping_sub(*b)));
         d.extend(cur.counters.iter().zip(&prev.counters).map(|(a, b)| a - b));
         d.extend(cur.cum_wfm_ps.iter().zip(&prev.cum_wfm_ps).map(|(a, b)| a - b));
         d.extend(cur.cum_idle_ps.iter().zip(&prev.cum_idle_ps).map(|(a, b)| a - b));
         d
     }
 
+    /// Largest whole-period jump the current velocities allow: every
+    /// loop level of every running core must keep at least one live
+    /// iteration (`iter + p*v <= count - 1`), and every level must be
+    /// non-decreasing over the last round (a wrapped level cannot be
+    /// extrapolated). `None` if any level wrapped or nothing is capped.
+    fn ff_jump_budget(
+        traces: &[Trace],
+        cores: &[CoreRun],
+        snap: &FfSnapshot,
+        prev: &FfSnapshot,
+    ) -> Option<u64> {
+        let mut p = u64::MAX;
+        let mut pi = 0usize;
+        for (i, c) in cores.iter().enumerate() {
+            let entries = 2 + c.cursor.stack.len();
+            if done(&traces[i], &c.cursor) {
+                pi += entries;
+                continue;
+            }
+            // completed_iters: monotonic by construction, never capped.
+            pi += 1;
+            let mut cap = |count: u32, iter: u32, pi: usize| -> Option<()> {
+                let v = snap.progress[pi].checked_sub(prev.progress[pi])?;
+                if v > 0 {
+                    let rem = u64::from(count - 1).saturating_sub(u64::from(iter));
+                    p = p.min(rem / v);
+                }
+                Some(())
+            };
+            let mut segs: &[Segment] = &traces[i].segments;
+            for f in &c.cursor.stack {
+                let Segment::Loop { body, count, .. } = &segs[f.seg] else {
+                    unreachable!("cursor frame does not sit on a Loop segment");
+                };
+                cap(*count, f.iter, pi)?;
+                pi += 1;
+                segs = body;
+            }
+            match segs.get(c.cursor.seg) {
+                Some(Segment::Rep { count, .. }) => cap(*count, c.cursor.iter, pi)?,
+                // Inside a Loop but between inner Reps: the innermost
+                // iteration counter is pinned at 0 by the matched state.
+                _ => {
+                    if snap.progress[pi] != prev.progress[pi] {
+                        return None;
+                    }
+                }
+            }
+            pi += 1;
+        }
+        (p >= 1 && p != u64::MAX).then_some(p)
+    }
+
     /// Round bookkeeping + periodicity detection; called whenever a core
-    /// completes a `Rep` iteration.
+    /// completes an innermost `Rep` iteration.
     fn maybe_fast_forward(&mut self, traces: &[Trace], cores: &mut [CoreRun], ff: &mut FfTracker) {
         let mut cur_min = u64::MAX;
         let mut t_ref = u64::MAX;
-        let mut all_in_rep = true;
+        let mut eligible = true;
         let mut running = 0usize;
         for (i, c) in cores.iter().enumerate() {
             if done(&traces[i], &c.cursor) {
@@ -583,13 +787,25 @@ impl Machine {
             running += 1;
             cur_min = cur_min.min(c.completed_iters);
             t_ref = t_ref.min(c.now_ps);
-            all_in_rep &= matches!(traces[i].segments.get(c.cursor.seg), Some(Segment::Rep { .. }));
+            let in_rep = matches!(
+                cur_segments(&traces[i], &c.cursor).get(c.cursor.seg),
+                Some(Segment::Rep { .. })
+            );
+            // Nested mode: any periodic scope qualifies — an innermost
+            // `Rep`, or any position inside an enclosing `Loop` (its
+            // level velocity carries the jump). Top-level-only mode is
+            // the pre-nesting rule: a `Rep` with no enclosing frames.
+            eligible &= if self.nested_fast_forward {
+                in_rep || !c.cursor.stack.is_empty()
+            } else {
+                in_rep && c.cursor.stack.is_empty()
+            };
         }
         if running == 0 || cur_min <= ff.last_round {
             return;
         }
         ff.last_round = cur_min;
-        if !all_in_rep {
+        if !eligible {
             ff.prev = None;
             ff.prev_digest = None;
             ff.prev_occupancy = None;
@@ -598,7 +814,9 @@ impl Machine {
 
         let snap = self.ff_snapshot(traces, cores, t_ref, cur_min);
         let digest = match &ff.prev {
-            Some(p) if p.round + 1 == cur_min => Some(Self::ff_digest(&snap, p)),
+            Some(p) if p.round + 1 == cur_min && p.progress.len() == snap.progress.len() => {
+                Some(Self::ff_digest(&snap, p))
+            }
             _ => None,
         };
         let cheap_match =
@@ -608,20 +826,14 @@ impl Machine {
             // occupancy scan (O(lines)) runs only on candidate rounds.
             let occ = self.mem.occupancy_vec();
             if ff.prev_occupancy.as_ref() == Some(&occ) {
-                // Skip every whole period we can while leaving each core
-                // at least one live iteration to run into its epilogue.
-                let mut p = u64::MAX;
-                for (i, c) in cores.iter().enumerate() {
-                    if done(&traces[i], &c.cursor) {
-                        continue;
-                    }
-                    let Some(Segment::Rep { count, .. }) = traces[i].segments.get(c.cursor.seg)
-                    else {
-                        unreachable!("all running cores verified inside a Rep")
-                    };
-                    p = p.min(*count as u64 - c.cursor.iter as u64 - 1);
-                }
-                if p >= 1 {
+                // Skip every whole period the level velocities allow
+                // while leaving each loop level at least one live
+                // iteration to run into its wrap/epilogue.
+                let budget = {
+                    let prev = ff.prev.as_ref().expect("cheap_match implies a previous snapshot");
+                    Self::ff_jump_budget(traces, cores, &snap, prev)
+                };
+                if let Some(p) = budget {
                     let prev = ff.prev.take().expect("cheap_match implies a previous snapshot");
                     let dt = snap.t_ref - prev.t_ref;
                     self.apply_fast_forward(traces, cores, &prev, p, dt);
@@ -650,9 +862,10 @@ impl Machine {
 
     /// Apply `p` whole periods in closed form: counters gain `p` more
     /// per-round deltas, every clock shifts by `p * dt`, and each running
-    /// core's `Rep` cursor advances `p` iterations. Cache/tile *content*
-    /// is untouched: in steady state it is equivalent up to the renaming
-    /// of per-inference addresses that are never revisited.
+    /// core's loop levels advance `p` velocities' worth of iterations.
+    /// Cache/tile *content* is untouched: in steady state it is
+    /// equivalent up to the renaming of per-inference addresses that are
+    /// never revisited.
     fn apply_fast_forward(
         &mut self,
         traces: &[Trace],
@@ -668,13 +881,27 @@ impl Machine {
             *c += p * (*c - prev.counters[idx]);
             idx += 1;
         });
+        let mut pi = 0usize;
         for (i, c) in cores.iter_mut().enumerate() {
+            let entries = 2 + c.cursor.stack.len();
             if done(&traces[i], &c.cursor) {
+                pi += entries;
                 continue;
             }
             c.now_ps += shift;
-            c.cursor.iter += p as u32;
-            c.completed_iters += p;
+            // Advance every loop level by p * its per-round velocity
+            // (the jump budget already verified monotonicity and caps).
+            let v = c.completed_iters - prev.progress[pi];
+            c.completed_iters += p * v;
+            pi += 1;
+            for f in &mut c.cursor.stack {
+                let v = u64::from(f.iter) - prev.progress[pi];
+                f.iter += (p * v) as u32;
+                pi += 1;
+            }
+            let v = u64::from(c.cursor.iter) - prev.progress[pi];
+            c.cursor.iter += (p * v) as u32;
+            pi += 1;
             let cum_w = c.stats.wfm_cycles * cycle + c.wfm_residual_ps;
             let new_w = cum_w + p * (cum_w - prev.cum_wfm_ps[i]);
             c.stats.wfm_cycles = new_w / cycle;
@@ -1356,6 +1583,105 @@ mod tests {
             m.run(traces.clone()).unwrap()
         };
         assert_stats_identical(&run(true), &run(false));
+    }
+
+    /// A CNN-ish nested steady state: an outer per-inference `Loop`
+    /// whose body is an inner row-group `Rep` (fresh input slice + an
+    /// LLC-thrashing fixed weight stream + compute) plus a small
+    /// per-inference epilogue — the outer loop never reaches a
+    /// whole-trace steady state, only the inner `Rep` is periodic.
+    fn nested_workload(outer: u32, rows: u32) -> Trace {
+        let mut b = TraceBuilder::new();
+        b.repeat_nested(outer, move |b, k| {
+            b.repeat(rows, move |b, g| {
+                b.roi(RoiKind::InputLoad, |b| {
+                    b.stream_read(0x8000_0000 + k as u64 * 0x10_0000 + g as u64 * 0x800, 2048, 2);
+                });
+                b.roi(RoiKind::DigitalMvm, |b| {
+                    b.stream_read(0x1000_0000, 2 * 1024 * 1024, 1);
+                    b.compute(InstClass::SimdOp, 6_000);
+                });
+            });
+            b.roi(RoiKind::Writeback, |b| {
+                b.stream_write(0xA000_0000 + k as u64 * 0x1000, 1024, 2);
+            });
+        });
+        b.build_trace()
+    }
+
+    #[test]
+    fn nested_loop_trace_executes_like_flat() {
+        let looped = nested_workload(6, 8);
+        assert!(
+            looped.segments.iter().any(|s| matches!(s, Segment::Loop { .. })),
+            "workload should encode as a nested Loop"
+        );
+        let flat = looped.flatten();
+        let mut m1 = hp_machine(MachineSpec::default());
+        m1.set_fast_forward(false);
+        let a = m1.run(vec![looped]).unwrap();
+        let mut m2 = hp_machine(MachineSpec::default());
+        m2.set_fast_forward(false);
+        let b = m2.run(vec![flat]).unwrap();
+        assert_stats_identical(&a, &b);
+    }
+
+    #[test]
+    fn nested_fast_forward_jumps_inner_rep_and_stays_bit_identical() {
+        let trace = nested_workload(8, 24);
+        let run = |ff: bool, nested: bool| {
+            let mut m = hp_machine(MachineSpec::default());
+            m.set_fast_forward(ff);
+            m.set_nested_fast_forward(nested);
+            let rs = m.run(vec![trace.clone()]).unwrap();
+            (rs, m.fast_forward_jumps(), m.fast_forward_skipped_iters())
+        };
+        let (fast, jumps, skipped) = run(true, true);
+        let (reference, no_jumps, _) = run(false, true);
+        assert_stats_identical(&fast, &reference);
+        assert!(jumps >= 2, "inner Rep never fast-forwarded (jumps {jumps})");
+        assert!(skipped > 8 * 24 / 2, "skipped only {skipped} of {} iterations", 8 * 24);
+        assert_eq!(no_jumps, 0, "knob off must fully replay");
+        // Top-level-only mode: the cursor is always inside the Loop, so
+        // the pre-nesting eligibility rule never fires a jump — but the
+        // stats stay bit-identical all the same.
+        let (legacy, legacy_jumps, _) = run(true, false);
+        assert_stats_identical(&legacy, &reference);
+        assert_eq!(legacy_jumps, 0, "nested-ff off must not jump inside a Loop");
+    }
+
+    #[test]
+    fn velocity_scheme_jumps_heterogeneous_periods() {
+        // Producer runs 2 iterations per consumer iteration: the
+        // per-round velocities are (2, 1), which the pre-velocity digest
+        // (lead offsets in positional state) could never match.
+        let spec = MachineSpec {
+            channels: vec![ChannelSpec { producer: 0, consumer: 1, capacity: 2 }],
+            ..Default::default()
+        };
+        let mut p = TraceBuilder::new();
+        p.repeat(60, |b, _| {
+            b.compute(InstClass::IntAlu, 2000);
+            b.push(TraceOp::Send { ch: 0, bytes: 256, addr: 0xB000_0000 });
+        });
+        let mut c = TraceBuilder::new();
+        c.repeat(30, |b, _| {
+            b.push(TraceOp::Recv { ch: 0 });
+            b.compute(InstClass::SimdOp, 1500);
+            b.push(TraceOp::Recv { ch: 0 });
+            b.compute(InstClass::SimdOp, 1500);
+        });
+        let traces = vec![p.build_trace(), c.build_trace()];
+        let run = |ff: bool| {
+            let mut m = hp_machine(spec.clone());
+            m.set_fast_forward(ff);
+            let rs = m.run(traces.clone()).unwrap();
+            (rs, m.fast_forward_jumps())
+        };
+        let (fast, jumps) = run(true);
+        let (reference, _) = run(false);
+        assert_stats_identical(&fast, &reference);
+        assert!(jumps >= 1, "velocity-2 producer blocked the jump");
     }
 
     // -----------------------------------------------------------------

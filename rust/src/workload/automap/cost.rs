@@ -34,10 +34,12 @@ use crate::config::SystemConfig;
 use crate::nn::{LayerGraph, LayerKind};
 use crate::sim::aimc::{Coupling, Placement};
 use crate::sim::machine::TileSpec;
+use crate::workload::compile::cache::CompileCache;
 use crate::workload::compile::mapping::{Handoff, Mapping, Place, Step, TilePlacement};
-use crate::workload::compile::{self, ACK_BYTES};
-use crate::workload::trace::{TraceBuilder, TraceOp};
+use crate::workload::compile::{self, CacheCtx, FragSpan, ACK_BYTES};
+use crate::workload::trace::{Segment, TraceBuilder, TraceOp};
 use crate::workload::{addr, costs, WorkloadError};
+use std::sync::Mutex;
 
 use super::enumerate::{
     analog_shape, anchor_replicable, mask_bit, place_shape, stage_layout, AnalogShape, Anchor,
@@ -253,15 +255,42 @@ fn finish(per_core: Vec<f64>, dram_lines: f64, aimc_j: f64, cfg: &SystemConfig) 
 
 /// Estimate one candidate through the **oracle** path: compile the
 /// mapping (two inferences) and walk the real traces.
+///
+/// Runs [`estimate_with`] over a private disabled compile cache, so the
+/// walk takes the exact fragment-grouped code path a cache-backed
+/// search uses — cached and uncached scores are bit-identical by
+/// construction, not by numerical luck.
 pub fn estimate(graph: &LayerGraph, mapping: &Mapping, cfg: &SystemConfig) -> Result<CostEstimate, WorkloadError> {
-    let w = compile::compile(graph, mapping, N_INF as u32)?;
+    estimate_with(graph, mapping, cfg, &Mutex::new(CompileCache::new(false)))
+}
+
+/// The oracle against a shared compile cache: the candidate compiles in
+/// *scoring mode* — cached step fragments are recorded as spans, never
+/// materialized — and the walk absorbs the glue ops individually while
+/// adding one memoized [`Profile`] per fragment. A cache hit therefore
+/// skips both the step's lowering and its per-op walk; only the
+/// candidate-specific glue (wiring, boundary phases, preambles) is
+/// re-priced.
+pub(crate) fn estimate_with(
+    graph: &LayerGraph,
+    mapping: &Mapping,
+    cfg: &SystemConfig,
+    cache: &Mutex<CompileCache>,
+) -> Result<CostEstimate, WorkloadError> {
+    let mut spans: Vec<Vec<FragSpan>> = Vec::new();
+    let w = {
+        let mut ctx = CacheCtx::scoring(cache, &mut spans);
+        compile::compile_with(graph, mapping, N_INF as u32, Some(&mut ctx))?
+    };
     let k = Consts::new(cfg);
 
     // Channel payloads (a Recv op does not carry the message size).
     // Walks visit each stored op once with its `Rep` multiplicity, so
     // looped traces cost one period regardless of the inference count;
     // strided ops report iteration-0 addresses, which is region-exact
-    // (the synthetic address regions are stride-closed).
+    // (the synthetic address regions are stride-closed). Fragments are
+    // channel-free by construction, so the thinned traces carry every
+    // Send.
     let mut ch_bytes = vec![0u64; w.spec.channels.len()];
     for trace in &w.traces {
         trace.for_each_weighted(&mut |op, _| {
@@ -275,15 +304,48 @@ pub fn estimate(graph: &LayerGraph, mapping: &Mapping, cfg: &SystemConfig) -> Re
 
     // Per-op costs are position-independent, so walking one `Rep`
     // period and multiplying by its count is exactly the flattened
-    // walk — O(stored ops), not O(executed ops).
+    // walk — O(stored ops), not O(executed ops). Cores with recorded
+    // fragment spans walk glue ops + memoized fragment profiles
+    // instead; cores without (row-streamed stages, whose loops the
+    // cache bypasses) keep the weighted walk.
     let profiles: Vec<Profile> = w
         .traces
         .iter()
-        .map(|trace| {
+        .enumerate()
+        .map(|(core, trace)| {
             let mut p = Profile::default();
-            trace.for_each_weighted(&mut |op, mult| {
-                p.absorb(op, mult, &w.spec.tiles, &ch_bytes, cfg, &k);
-            });
+            let core_spans = spans.get(core).map_or(&[][..], Vec::as_slice);
+            if core_spans.is_empty() {
+                trace.for_each_weighted(&mut |op, mult| {
+                    p.absorb(op, mult, &w.spec.tiles, &ch_bytes, cfg, &k);
+                });
+                return p;
+            }
+            // Span positions index the flat op stream; per-inference
+            // stage cores never emit loop segments at N_INF = 2.
+            let ops: &[TraceOp] = match trace.segments.as_slice() {
+                [Segment::Ops(v)] => v,
+                _ => unreachable!("span-recorded traces are flat"),
+            };
+            let mut pos = 0usize;
+            let mut c = cache.lock().expect("compile cache poisoned");
+            for sp in core_spans {
+                for &op in &ops[pos..sp.pos] {
+                    p.absorb(op, 1, &w.spec.tiles, &ch_bytes, cfg, &k);
+                }
+                pos = sp.pos;
+                let fp = c.profile_for(sp.frag, &sp.specs, |frag_ops, specs| {
+                    let mut q = Profile::default();
+                    for &op in frag_ops {
+                        q.absorb(op, 1, specs, &[], cfg, &k);
+                    }
+                    q
+                });
+                p.add(&fp);
+            }
+            for &op in &ops[pos..] {
+                p.absorb(op, 1, &w.spec.tiles, &ch_bytes, cfg, &k);
+            }
             p
         })
         .collect();

@@ -47,9 +47,11 @@ pub use cost::{estimate, CostEstimate};
 use crate::config::SystemConfig;
 use crate::nn::LayerGraph;
 use crate::util::parallel;
+use crate::workload::compile::cache::{CompileCache, CompileCacheStats};
 use crate::workload::compile::mapping::{Handoff, Mapping, Place};
 use crate::workload::WorkloadError;
 use enumerate::{Anchor, CandidateSpec};
+use std::sync::Mutex;
 
 /// The machine resources a mapping may claim.
 #[derive(Clone, Copy, Debug)]
@@ -107,6 +109,11 @@ pub struct SearchOptions {
     pub max_replica: usize,
     /// Worker threads for the partition-subtree fan-out.
     pub jobs: usize,
+    /// Share lowered step fragments across `Compiled`-oracle candidate
+    /// compiles (keyed by anchor/engine/replication/alias shape). Scores
+    /// are bit-identical either way; off only costs time. Ignored under
+    /// `Compositional` scoring.
+    pub compile_cache: bool,
 }
 
 impl Default for SearchOptions {
@@ -118,6 +125,7 @@ impl Default for SearchOptions {
             max_depth: 8,
             max_replica: 8,
             jobs: 1,
+            compile_cache: true,
         }
     }
 }
@@ -158,6 +166,11 @@ pub struct SearchOutcome {
     /// The Pareto front on estimated (cycles, energy) over the whole
     /// feasible space, sorted by cycles.
     pub front: Vec<FrontPoint>,
+    /// Compile-cache counters of the `Compiled`-oracle walk (`None`
+    /// under compositional scoring or with the cache disabled).
+    /// Excluded from outcome-identity comparisons: hit/miss split
+    /// depends on thread interleaving even though scores do not.
+    pub cache: Option<CompileCacheStats>,
 }
 
 /// Search with the default options (compositional branch-and-bound over
@@ -481,6 +494,14 @@ pub fn search_opts(
         )),
         CostModel::Compiled => None,
     };
+    // One fragment cache shared by every `Compiled`-oracle candidate
+    // compile in this search (fragments are keyed candidate-
+    // independently, so the cache is safe — and hot — across the whole
+    // space and across worker threads). When disabled, each `estimate`
+    // call uses its own throwaway cache internally: same walk, no
+    // sharing, so the arena cannot grow with the space.
+    let cache = (opts.model == CostModel::Compiled && opts.compile_cache)
+        .then(|| Mutex::new(CompileCache::new(true)));
     let score = |spec: &CandidateSpec| -> Option<(String, CostEstimate)> {
         match &engine {
             Some(eng) => {
@@ -489,7 +510,11 @@ pub fn search_opts(
             }
             None => {
                 let (mapping, desc) = enumerate::build_mapping(graph, &anchors, input, output, spec, budget)?;
-                match cost::estimate(graph, &mapping, cfg) {
+                let est = match &cache {
+                    Some(c) => cost::estimate_with(graph, &mapping, cfg, c),
+                    None => cost::estimate(graph, &mapping, cfg),
+                };
+                match est {
                     Ok(est) => Some((desc, est)),
                     Err(e) => {
                         debug_assert!(false, "automap built an uncompilable mapping ({desc}): {e}");
@@ -661,7 +686,9 @@ pub fn search_opts(
         .map(|&i| FrontPoint { desc: evals[i].desc.clone(), est: evals[i].est.clone() })
         .collect();
 
-    Ok(SearchOutcome { enumerated, pruned, feasible, truncated, ranked, front })
+    let cache_stats =
+        cache.map(|c| c.into_inner().expect("compile cache poisoned").stats());
+    Ok(SearchOutcome { enumerated, pruned, feasible, truncated, ranked, front, cache: cache_stats })
 }
 
 /// The naive all-digital single-core mapping — the acceptance baseline
@@ -861,6 +888,49 @@ mod tests {
         }
         let fd = |o: &SearchOutcome| o.front.iter().map(|c| c.desc.clone()).collect::<Vec<_>>();
         assert_eq!(fd(&serial), fd(&parallel));
+    }
+
+    #[test]
+    fn compiled_oracle_cache_is_score_invisible() {
+        // Cache on vs. off under the full-compile oracle: every semantic
+        // outcome field must match bit for bit (only the `cache` stats
+        // field may differ — that is the whole point of the knob).
+        let g = LayerGraph::mlp(&[256, 128, 64]);
+        let budget = TopologyBudget { cores: 4, tiles: 8, tile_rows: 256, tile_cols: 256, channels: 32 };
+        let run = |cc: bool| {
+            search_opts(
+                &g,
+                &budget,
+                &hp(),
+                &SearchOptions {
+                    top_k: 5,
+                    model: CostModel::Compiled,
+                    cap: Some(400),
+                    compile_cache: cc,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let on = run(true);
+        let off = run(false);
+        assert_eq!(on.enumerated, off.enumerated);
+        assert_eq!(on.pruned, off.pruned);
+        assert_eq!(on.feasible, off.feasible);
+        assert_eq!(on.truncated, off.truncated);
+        assert_eq!(on.ranked.len(), off.ranked.len());
+        for (a, b) in on.ranked.iter().zip(&off.ranked) {
+            assert_eq!(a.desc, b.desc);
+            assert_eq!(a.est.cycles_per_inf.to_bits(), b.est.cycles_per_inf.to_bits());
+            assert_eq!(a.est.energy_per_inf_j.to_bits(), b.est.energy_per_inf_j.to_bits());
+        }
+        let fd = |o: &SearchOutcome| o.front.iter().map(|c| c.desc.clone()).collect::<Vec<_>>();
+        assert_eq!(fd(&on), fd(&off));
+        // The shared cache actually worked: hits dominate once the
+        // space revisits anchor/engine/replication combinations.
+        let stats = on.cache.expect("cache stats reported when enabled");
+        assert!(stats.hits > stats.misses, "cache never warmed: {stats:?}");
+        assert!(off.cache.is_none());
     }
 
     #[test]

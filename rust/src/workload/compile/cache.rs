@@ -1,0 +1,345 @@
+//! Cross-candidate compile cache: keyed `emit_step` fragments in a
+//! slab arena.
+//!
+//! One `CostModel::Compiled` search (and the top-K compile pass after
+//! it) lowers the *same* anchor steps thousands of times — candidates
+//! differ in pipeline cuts, replication, and hand-off, but a step's
+//! emitted ops depend only on its graph node, its engine shape, the
+//! replica index, and the stage replication. This module keys exactly
+//! that tuple ([`FragKey`]) and stores each fragment once in an
+//! arena-allocated `Vec<TraceOp>` slab with range handles, so repeat
+//! lowerings splice a stored fragment (a memcpy plus tile-id
+//! relocation) instead of re-running the lowering rules — the
+//! compositional engine's per-anchor-profile trick generalized to the
+//! simulator path.
+//!
+//! **Tile-id relocation.** Fragment ops are stored with tile fields
+//! *abstracted to slot indices* — the position of the tile in the
+//! placement's first-use order ([`tile_slots`]). A splice substitutes
+//! the target placement's slot table. Placements that alias one tile
+//! across slots carry their alias pattern in the key, so a stored
+//! fragment is only reused for placements that alias identically
+//! (which makes first-match slot abstraction exact).
+//!
+//! **Equivalence.** A cached splice is bit-identical to a fresh
+//! `emit_step` by construction (the key covers every input the
+//! lowering reads); debug builds re-emit every hit and assert it.
+//! The fragment-grouped cost walk in `automap::cost` additionally
+//! memoizes one [`Profile`] per fragment, so cache-on and cache-off
+//! oracle scores group their f64 sums identically and match bit for
+//! bit (gated by `tests/automap.rs`).
+
+use std::collections::HashMap;
+
+use crate::sim::machine::TileSpec;
+use crate::workload::automap::cost::Profile;
+use crate::workload::compile::mapping::{Place, Step};
+use crate::workload::trace::{TraceBuilder, TraceOp};
+
+/// Engine fingerprint of a step placement: everything `emit_step`'s
+/// output depends on *except* concrete tile ids (those are relocated on
+/// splice via the slot table). Placement coordinates are irrelevant —
+/// the lowering reads shapes from the graph node, not the region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub(crate) enum PlaceFp {
+    Cpu,
+    Tile,
+    RowSplit(usize),
+    Attention,
+}
+
+/// Cache key of one lowered step: (anchor node, engine fingerprint,
+/// replica index, stage replication, tile alias pattern). The graph is
+/// fixed per cache, so the node id pins rows/cols/weight-slot; `r`
+/// covers the replica-dependent CPU weight addressing; `parts` the
+/// column-slice denominator; `alias` the slot-aliasing shape (see
+/// module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub(crate) struct FragKey {
+    node: usize,
+    place: PlaceFp,
+    r: usize,
+    parts: u64,
+    alias: u64,
+}
+
+impl FragKey {
+    /// The key of a step lowering, or `None` when the step does not go
+    /// through `emit_step` (chain heads and fused riders lower inline
+    /// in `emit_replica`) or its slot table is too wide to encode.
+    pub(crate) fn for_step(step: &Step, r: usize, parts: u64) -> Option<FragKey> {
+        let place = match &step.place {
+            Place::Cpu => PlaceFp::Cpu,
+            Place::Tile { .. } => PlaceFp::Tile,
+            Place::TileRowSplit { tiles } => PlaceFp::RowSplit(tiles.len()),
+            Place::AttentionTiles { .. } => PlaceFp::Attention,
+            Place::TileChain { .. } | Place::Fused => return None,
+        };
+        let alias = alias_pattern(&tile_slots(&step.place, r))?;
+        Some(FragKey { node: step.node, place, r, parts, alias })
+    }
+}
+
+/// The tiles a placement drives, in slot order — the relocation table
+/// for spliced fragments.
+pub(crate) fn tile_slots(place: &Place, r: usize) -> Vec<usize> {
+    match place {
+        Place::Cpu | Place::Fused => Vec::new(),
+        Place::Tile { per_replica } => vec![per_replica[r].tile],
+        Place::TileRowSplit { tiles } | Place::TileChain { tiles } => {
+            tiles.iter().map(|tp| tp.tile).collect()
+        }
+        Place::AttentionTiles { q, k, v, o } => vec![q.tile, k.tile, v.tile, o.tile],
+    }
+}
+
+/// Canonical alias pattern of a slot table, nibble-encoded: slot `i`
+/// maps to the first slot holding the same tile id. Tables past 16
+/// slots don't fit the encoding and are not cached (`None`).
+fn alias_pattern(slots: &[usize]) -> Option<u64> {
+    if slots.len() > 16 {
+        return None;
+    }
+    let mut pat = 0u64;
+    for (i, &t) in slots.iter().enumerate() {
+        let first = slots.iter().position(|&u| u == t).expect("t is in slots") as u64;
+        pat |= first << (4 * i);
+    }
+    Some(pat)
+}
+
+/// Running hit/miss/footprint counters, surfaced through
+/// `SearchOutcome` and the `alpine automap` progress line.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CompileCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Bytes held by the fragment op slab.
+    pub arena_bytes: u64,
+}
+
+/// One stored fragment: a slab range (ops with slot-abstracted tile
+/// fields) plus the lazily memoized cost profile of those ops under a
+/// concrete slot -> `TileSpec` resolution.
+struct Fragment {
+    ops: std::ops::Range<u32>,
+    slots: u32,
+    profile: Option<(Vec<TileSpec>, Profile)>,
+}
+
+/// The arena-backed fragment cache. Callers wrap it in a `Mutex` to
+/// share across search worker threads; all methods take `&mut self`.
+///
+/// A *disabled* cache (`CompileCache::new(false)`) never registers or
+/// serves keys, but still arenas every fragment so the fragment-grouped
+/// cost walk runs the exact same code path — that is what makes
+/// cache-on vs. cache-off scores bit-identical.
+pub struct CompileCache {
+    enabled: bool,
+    slab: Vec<TraceOp>,
+    frags: Vec<Fragment>,
+    map: HashMap<FragKey, usize>,
+    hits: u64,
+    misses: u64,
+}
+
+impl CompileCache {
+    pub fn new(enabled: bool) -> CompileCache {
+        CompileCache {
+            enabled,
+            slab: Vec::new(),
+            frags: Vec::new(),
+            map: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn stats(&self) -> CompileCacheStats {
+        CompileCacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            arena_bytes: (self.slab.len() * std::mem::size_of::<TraceOp>()) as u64,
+        }
+    }
+
+    /// Serve a fragment id for `key`, counting a hit. Always misses on
+    /// a disabled cache.
+    pub(crate) fn lookup(&mut self, key: FragKey) -> Option<usize> {
+        if !self.enabled {
+            return None;
+        }
+        let fid = self.map.get(&key).copied();
+        if fid.is_some() {
+            self.hits += 1;
+        }
+        fid
+    }
+
+    /// Store a freshly emitted fragment (ops of one `emit_step` run
+    /// whose placement resolved to `slots`), counting a miss. Returns
+    /// the fragment id; under a lookup/insert race the earlier
+    /// registration wins and its id is returned.
+    pub(crate) fn insert(&mut self, key: FragKey, ops: &[TraceOp], slots: &[usize]) -> usize {
+        self.misses += 1;
+        if self.enabled {
+            if let Some(&fid) = self.map.get(&key) {
+                // Another worker registered the key between our lookup
+                // and this insert; the stored ops are identical because
+                // the key covers every lowering input.
+                debug_assert!(self.matches(fid, ops, slots), "compile cache key collision on {key:?}");
+                return fid;
+            }
+        }
+        let start = u32::try_from(self.slab.len()).expect("fragment arena exceeds u32 ops");
+        for &op in ops {
+            debug_assert!(
+                !matches!(
+                    op,
+                    TraceOp::Send { .. }
+                        | TraceOp::Recv { .. }
+                        | TraceOp::MutexLock { .. }
+                        | TraceOp::MutexUnlock { .. }
+                        | TraceOp::CmInit { .. }
+                ),
+                "step fragments are channel/mutex/preamble-free: {op:?}"
+            );
+            self.slab.push(abstract_op(op, slots));
+        }
+        let end = u32::try_from(self.slab.len()).expect("fragment arena exceeds u32 ops");
+        let fid = self.frags.len();
+        self.frags.push(Fragment { ops: start..end, slots: slots.len() as u32, profile: None });
+        if self.enabled {
+            self.map.insert(key, fid);
+        }
+        fid
+    }
+
+    /// Splice fragment `fid` into `b`, relocating slot indices through
+    /// the target placement's `slots` table.
+    pub(crate) fn splice(&self, fid: usize, slots: &[usize], b: &mut TraceBuilder) {
+        let f = &self.frags[fid];
+        debug_assert_eq!(f.slots as usize, slots.len(), "slot table shape drift");
+        b.reserve(f.ops.len());
+        for &op in &self.slab[f.ops.start as usize..f.ops.end as usize] {
+            b.push(concrete_op(op, slots));
+        }
+    }
+
+    /// The memoized cost profile of fragment `fid` under the given
+    /// slot -> spec resolution, computing (and storing) it on first use.
+    /// `walk` folds slot-abstracted ops with a spec table indexed by
+    /// slot — identical math whether the profile is fresh or reused.
+    pub(crate) fn profile_for(
+        &mut self,
+        fid: usize,
+        specs: &[TileSpec],
+        walk: impl FnOnce(&[TraceOp], &[TileSpec]) -> Profile,
+    ) -> Profile {
+        let range = self.frags[fid].ops.start as usize..self.frags[fid].ops.end as usize;
+        if let Some((memo_specs, p)) = &self.frags[fid].profile {
+            if memo_specs == specs {
+                return *p;
+            }
+            // Same fragment under differently-shaped tiles (not produced
+            // by automap searches, where every tile is budget-dim): walk
+            // fresh without disturbing the memo.
+            return walk(&self.slab[range], specs);
+        }
+        let p = walk(&self.slab[self.frags[fid].ops.start as usize..self.frags[fid].ops.end as usize], specs);
+        self.frags[fid].profile = Some((specs.to_vec(), p));
+        p
+    }
+
+    /// Debug oracle: does the stored fragment match `ops` under `slots`?
+    /// (Referenced from `debug_assert!` conditions, which type-check in
+    /// release builds too, so this stays unconditionally compiled.)
+    pub(crate) fn matches(&self, fid: usize, ops: &[TraceOp], slots: &[usize]) -> bool {
+        let f = &self.frags[fid];
+        let stored = &self.slab[f.ops.start as usize..f.ops.end as usize];
+        stored.len() == ops.len()
+            && stored.iter().zip(ops).all(|(&s, &o)| concrete_op(s, slots) == o)
+    }
+}
+
+/// Replace concrete tile ids with their slot index (first match — exact
+/// because aliasing placements carry their pattern in the key).
+fn abstract_op(op: TraceOp, slots: &[usize]) -> TraceOp {
+    map_tile(op, |tile| {
+        slots.iter().position(|&t| t == tile).expect("fragment op drives an unplaced tile")
+    })
+}
+
+/// Resolve slot indices back to the target placement's tile ids.
+fn concrete_op(op: TraceOp, slots: &[usize]) -> TraceOp {
+    map_tile(op, |slot| slots[slot])
+}
+
+fn map_tile(op: TraceOp, f: impl Fn(usize) -> usize) -> TraceOp {
+    match op {
+        TraceOp::CmQueue { tile, bytes } => TraceOp::CmQueue { tile: f(tile), bytes },
+        TraceOp::CmProcess { tile } => TraceOp::CmProcess { tile: f(tile) },
+        TraceOp::CmDequeue { tile, bytes } => TraceOp::CmDequeue { tile: f(tile), bytes },
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::InstClass;
+
+    #[test]
+    fn alias_pattern_distinguishes_sharing_shapes() {
+        assert_eq!(alias_pattern(&[]), Some(0));
+        assert_eq!(alias_pattern(&[7]), Some(0));
+        // Distinct tiles: identity pattern.
+        assert_eq!(alias_pattern(&[3, 5, 9]), Some(0x210));
+        // All four slots on one tile vs. two pairs.
+        assert_eq!(alias_pattern(&[2, 2, 2, 2]), Some(0));
+        assert_eq!(alias_pattern(&[2, 2, 4, 4]), Some(0x2200));
+        // Same pattern for different concrete ids.
+        assert_eq!(alias_pattern(&[8, 8, 1, 1]), alias_pattern(&[2, 2, 4, 4]));
+        assert!(alias_pattern(&vec![0usize; 17]).is_none());
+    }
+
+    #[test]
+    fn splice_relocates_tiles_and_preserves_everything_else() {
+        let mut c = CompileCache::new(true);
+        let ops = [
+            TraceOp::CmQueue { tile: 6, bytes: 128 },
+            TraceOp::Compute { class: InstClass::SimdOp, insts: 40 },
+            TraceOp::CmProcess { tile: 6 },
+            TraceOp::CmDequeue { tile: 9, bytes: 64 },
+        ];
+        let key = FragKey { node: 1, place: PlaceFp::RowSplit(2), r: 0, parts: 1, alias: 0x10 };
+        let fid = c.insert(key, &ops, &[6, 9]);
+        let mut b = TraceBuilder::new();
+        c.splice(fid, &[3, 0], &mut b);
+        assert_eq!(
+            b.ops,
+            vec![
+                TraceOp::CmQueue { tile: 3, bytes: 128 },
+                TraceOp::Compute { class: InstClass::SimdOp, insts: 40 },
+                TraceOp::CmProcess { tile: 3 },
+                TraceOp::CmDequeue { tile: 0, bytes: 64 },
+            ]
+        );
+        assert_eq!(c.stats().misses, 1);
+        assert_eq!(c.lookup(key), Some(fid));
+        assert_eq!(c.stats().hits, 1);
+        assert!(c.stats().arena_bytes > 0);
+    }
+
+    #[test]
+    fn disabled_cache_arenas_but_never_serves() {
+        let mut c = CompileCache::new(false);
+        let ops = [TraceOp::Compute { class: InstClass::IntAlu, insts: 8 }];
+        let key = FragKey { node: 0, place: PlaceFp::Cpu, r: 0, parts: 1, alias: 0 };
+        let a = c.insert(key, &ops, &[]);
+        assert_eq!(c.lookup(key), None);
+        let b = c.insert(key, &ops, &[]);
+        assert_ne!(a, b, "disabled caches store per occurrence");
+        assert_eq!(c.stats(), CompileCacheStats { hits: 0, misses: 2, arena_bytes: c.stats().arena_bytes });
+    }
+}

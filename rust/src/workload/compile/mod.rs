@@ -10,16 +10,19 @@
 //! survive under `workload::legacy` purely as the bit-equivalence
 //! oracle (see `tests/ir_equivalence.rs`).
 
+pub mod cache;
 pub mod lower;
 pub mod mapping;
 
 use crate::isa::InstClass;
 use crate::nn::{LayerGraph, LayerKind, NodeId};
-use crate::sim::machine::{ChannelSpec, MachineSpec};
+use crate::sim::machine::{ChannelSpec, MachineSpec, TileSpec};
 use crate::stats::RoiKind;
-use crate::workload::trace::{Segment, TraceBuilder, TraceOp};
+use crate::workload::trace::{Segment, Trace, TraceBuilder, TraceOp};
 use crate::workload::{addr, Workload, WorkloadError};
+use cache::{tile_slots, CompileCache, FragKey};
 use mapping::{Handoff, Mapping, Place, SplitKind, Stage, StageInput, StageOutput, Step};
+use std::sync::Mutex;
 
 /// Bounded ping-pong depth of every compiled channel.
 pub const CHANNEL_CAPACITY: usize = 2;
@@ -42,8 +45,134 @@ struct Wiring {
     mutex: Option<usize>,
 }
 
+/// One cached step occurrence inside a scoring-mode trace: the lowered
+/// fragment was *not* materialized into the builder; instead its id and
+/// position among the surrounding glue ops are recorded so the cost
+/// walk can absorb the glue individually and add the fragment's
+/// memoized profile (`automap::cost::estimate_with`).
+pub(crate) struct FragSpan {
+    /// Index into the core's flat op stream where the fragment would sit.
+    pub(crate) pos: usize,
+    /// Fragment id inside the shared [`CompileCache`].
+    pub(crate) frag: usize,
+    /// The step's slot table resolved to tile specs (the fragment's
+    /// per-slot cost context).
+    pub(crate) specs: Vec<TileSpec>,
+}
+
+/// Compile-cache session state threaded through one `compile_with` run.
+///
+/// Two modes share the same fragment arena:
+/// - **scoring** (`spans: Some`): per-candidate oracle compiles. Cached
+///   steps are never materialized — only a [`FragSpan`] is recorded —
+///   so a hit skips the lowering *and* the per-op cost walk. Only valid
+///   on the flat emission path (`n_inf` small enough to skip loop
+///   encoding), where builder positions survive into the final trace.
+/// - **materialize** (`spans: None`): real workload compiles (the
+///   coordinator's top-K). Cached steps splice their arena ops into the
+///   builder, relocated to the step's tiles; output is bit-identical to
+///   an uncached compile (debug builds re-emit every hit and assert it).
+pub(crate) struct CacheCtx<'a> {
+    cache: &'a Mutex<CompileCache>,
+    spans: Option<&'a mut Vec<Vec<FragSpan>>>,
+    /// Off-trace emission buffer for scoring-mode misses (and the
+    /// debug-build hit verifier).
+    scratch: TraceBuilder,
+}
+
+impl<'a> CacheCtx<'a> {
+    /// Scoring mode: record fragment spans per core instead of
+    /// materializing cached steps.
+    pub(crate) fn scoring(
+        cache: &'a Mutex<CompileCache>,
+        spans: &'a mut Vec<Vec<FragSpan>>,
+    ) -> CacheCtx<'a> {
+        CacheCtx { cache, spans: Some(spans), scratch: TraceBuilder::new() }
+    }
+
+    /// Materialize mode: splice cached fragments into the trace.
+    pub(crate) fn materialize(cache: &'a Mutex<CompileCache>) -> CacheCtx<'a> {
+        CacheCtx { cache, spans: None, scratch: TraceBuilder::new() }
+    }
+
+    /// Lower one step through the cache (uncacheable shapes fall back to
+    /// a direct `emit_step`).
+    fn step(
+        &mut self,
+        b: &mut TraceBuilder,
+        graph: &LayerGraph,
+        step: &Step,
+        r: usize,
+        parts: u64,
+        core: usize,
+        tiles: &[TileSpec],
+    ) {
+        let Some(key) = FragKey::for_step(step, r, parts) else {
+            emit_step(b, graph, step, r, parts);
+            return;
+        };
+        let slots = tile_slots(&step.place, r);
+        let hit = self.cache.lock().expect("compile cache poisoned").lookup(key);
+        if let Some(fid) = hit {
+            match &mut self.spans {
+                Some(spans) => {
+                    let specs = slots.iter().map(|&t| tiles[t]).collect();
+                    spans[core].push(FragSpan { pos: b.ops.len(), frag: fid, specs });
+                }
+                None => {
+                    #[cfg(debug_assertions)]
+                    {
+                        self.scratch.ops.clear();
+                        emit_step(&mut self.scratch, graph, step, r, parts);
+                        debug_assert!(
+                            self.cache
+                                .lock()
+                                .expect("compile cache poisoned")
+                                .matches(fid, &self.scratch.ops, &slots),
+                            "cached fragment diverges from fresh emission for {key:?}"
+                        );
+                    }
+                    self.cache.lock().expect("compile cache poisoned").splice(fid, &slots, b);
+                }
+            }
+            return;
+        }
+        match &mut self.spans {
+            Some(spans) => {
+                self.scratch.ops.clear();
+                emit_step(&mut self.scratch, graph, step, r, parts);
+                let fid = self
+                    .cache
+                    .lock()
+                    .expect("compile cache poisoned")
+                    .insert(key, &self.scratch.ops, &slots);
+                let specs = slots.iter().map(|&t| tiles[t]).collect();
+                spans[core].push(FragSpan { pos: b.ops.len(), frag: fid, specs });
+            }
+            None => {
+                let start = b.ops.len();
+                emit_step(b, graph, step, r, parts);
+                self.cache
+                    .lock()
+                    .expect("compile cache poisoned")
+                    .insert(key, &b.ops[start..], &slots);
+            }
+        }
+    }
+}
+
 /// Compile a mapped layer graph into per-core traces + machine spec.
 pub fn compile(graph: &LayerGraph, mapping: &Mapping, n_inf: u32) -> Result<Workload, WorkloadError> {
+    compile_with(graph, mapping, n_inf, None)
+}
+
+/// [`compile`] with an optional compile-cache context (see [`CacheCtx`]).
+pub(crate) fn compile_with(
+    graph: &LayerGraph,
+    mapping: &Mapping,
+    n_inf: u32,
+    mut ctx: Option<&mut CacheCtx>,
+) -> Result<Workload, WorkloadError> {
     validate(graph, mapping)?;
     let (wirings, channels, mutexes) = wire(mapping);
 
@@ -55,6 +184,12 @@ pub fn compile(graph: &LayerGraph, mapping: &Mapping, n_inf: u32) -> Result<Work
         .unwrap_or(0)
         + 1;
     let mut builders: Vec<TraceBuilder> = (0..n_cores).map(|_| TraceBuilder::new()).collect();
+    if let Some(c) = ctx.as_deref_mut() {
+        if let Some(spans) = &mut c.spans {
+            spans.clear();
+            spans.resize_with(n_cores, Vec::new);
+        }
+    }
 
     // CM_INITIALIZE preamble: program every claimed tile region, in
     // stage / replica / step order (one-time cost, outside the ROI loop).
@@ -103,63 +238,101 @@ pub fn compile(graph: &LayerGraph, mapping: &Mapping, n_inf: u32) -> Result<Work
         .collect();
 
     // Emit one whole inference `i`, stage by stage, into the per-core
-    // builders.
-    let emit_inference = |builders: &mut [TraceBuilder], i: u32| {
-        for (idx, s) in mapping.stages.iter().enumerate() {
-            if let Some(rg) = s.row_group {
-                emit_row_streamed(
-                    &mut builders[s.cores[0]],
-                    graph,
-                    mapping,
-                    &wirings,
-                    idx,
-                    rg,
-                    i,
-                    row_blocks[idx].as_deref(),
-                );
-            } else {
-                for r in 0..s.cores.len() {
-                    emit_replica(&mut builders[s.cores[r]], graph, mapping, &wirings, idx, r, i);
+    // builders. Row-streamed stages bypass the compile cache (their row
+    // loop is already compacted by the pre-built block + `Rep` pairs).
+    let emit_inference =
+        |builders: &mut [TraceBuilder], i: u32, mut ctx: Option<&mut CacheCtx>| {
+            for (idx, s) in mapping.stages.iter().enumerate() {
+                if let Some(rg) = s.row_group {
+                    emit_row_streamed(
+                        &mut builders[s.cores[0]],
+                        graph,
+                        mapping,
+                        &wirings,
+                        idx,
+                        rg,
+                        i,
+                        row_blocks[idx].as_deref(),
+                    );
+                } else {
+                    for r in 0..s.cores.len() {
+                        emit_replica(
+                            &mut builders[s.cores[r]],
+                            graph,
+                            mapping,
+                            &wirings,
+                            idx,
+                            r,
+                            i,
+                            ctx.as_deref_mut(),
+                        );
+                    }
                 }
             }
-        }
-    };
+        };
 
     // Steady-state loop encoding: inference emission is periodic once
     // the shared-buffer ack gating (`i > 0`) is past, with period 2
     // (ping-pong channel slots key on `i % 2`) and per-inference
     // input/output addresses advancing linearly. Peel the warm-up
-    // inferences flat, then store ONE period-2 pair per core inside a
-    // `Rep` segment — verified against three sampled pairs, with a flat
-    // unroll as the bit-exact fallback — so compile time and trace
-    // memory are O(block), not O(N * block).
+    // inferences flat, then store ONE period-2 pair per core — a `Rep`
+    // segment when the pair lowers to straight-line ops, a nested
+    // `Loop` when it carries inner loops (the row-group `Rep` of a
+    // row-streamed stage) — verified against three sampled pairs, with
+    // a flat unroll as the bit-exact fallback — so compile time and
+    // trace memory are O(block), not O(N * block).
     const REP_WARMUP: u32 = 2;
     const REP_PERIOD: u32 = 2;
     let pairs = n_inf.saturating_sub(REP_WARMUP) / REP_PERIOD;
     // Below 4 pairs the three affinity samples cost as much as unrolling.
     if pairs >= 4 {
+        // Span positions index a flat op stream; the loop-encoding path
+        // rearranges ops across sample builders, so scoring mode (which
+        // only compiles tiny n_inf) must never reach it.
+        debug_assert!(
+            ctx.as_deref_mut().map_or(true, |c| c.spans.is_none()),
+            "span recording requires the flat emission path"
+        );
         for i in 0..REP_WARMUP {
-            emit_inference(&mut builders, i);
+            emit_inference(&mut builders, i, ctx.as_deref_mut());
         }
-        let sample_pair = |k: u32| -> Vec<Vec<TraceOp>> {
+        let sample_pair = |k: u32, mut ctx: Option<&mut CacheCtx>| -> Vec<Trace> {
             let mut sb: Vec<TraceBuilder> = (0..n_cores).map(|_| TraceBuilder::new()).collect();
             for j in 0..REP_PERIOD {
-                emit_inference(&mut sb, REP_WARMUP + REP_PERIOD * k + j);
+                emit_inference(&mut sb, REP_WARMUP + REP_PERIOD * k + j, ctx.as_deref_mut());
             }
-            sb.into_iter().map(TraceBuilder::build).collect()
+            sb.into_iter().map(TraceBuilder::build_trace).collect()
         };
-        let s0 = sample_pair(0);
-        let s1 = sample_pair(1);
-        let s2 = sample_pair(2);
-        let s_last = sample_pair(pairs - 1); // far endpoint: rejects piecewise patterns
+        // A sample that is one straight-line run (or empty — an idle
+        // core) takes the flat `Rep` path, byte-for-byte the pre-nesting
+        // encoding; anything else goes through `loop_from_samples`.
+        fn flat_ops(t: &Trace) -> Option<&[TraceOp]> {
+            match t.segments.as_slice() {
+                [] => Some(&[]),
+                [Segment::Ops(v)] => Some(v.as_slice()),
+                _ => None,
+            }
+        }
+        let s0 = sample_pair(0, ctx.as_deref_mut());
+        let s1 = sample_pair(1, ctx.as_deref_mut());
+        let s2 = sample_pair(2, ctx.as_deref_mut());
+        let s_last = sample_pair(pairs - 1, ctx.as_deref_mut()); // far endpoint: rejects piecewise patterns
         let reps: Vec<Option<Segment>> = (0..n_cores)
             .map(|c| {
-                let checks = [
-                    (s1[c].as_slice(), 1u32),
-                    (s2[c].as_slice(), 2),
-                    (s_last[c].as_slice(), pairs - 1),
-                ];
-                Segment::rep_from_samples(&s0[c], &checks, pairs)
+                match (flat_ops(&s0[c]), flat_ops(&s1[c]), flat_ops(&s2[c]), flat_ops(&s_last[c])) {
+                    (Some(f0), Some(f1), Some(f2), Some(fl)) => {
+                        let checks = [(f1, 1u32), (f2, 2), (fl, pairs - 1)];
+                        Segment::rep_from_samples(f0, &checks, pairs)
+                    }
+                    _ => {
+                        let checks = [
+                            (s1[c].segments.as_slice(), 1u32),
+                            (s2[c].segments.as_slice(), 2),
+                            (s_last[c].segments.as_slice(), pairs - 1),
+                        ];
+                        Segment::loop_from_samples(&s0[c].segments, &checks, pairs)
+                    }
+                }
             })
             .collect();
         if reps.iter().all(Option::is_some) {
@@ -167,13 +340,13 @@ pub fn compile(graph: &LayerGraph, mapping: &Mapping, n_inf: u32) -> Result<Work
                 b.push_segment(seg.expect("all segments verified affine"));
             }
             for i in (REP_WARMUP + REP_PERIOD * pairs)..n_inf {
-                emit_inference(&mut builders, i); // odd tail inference
+                emit_inference(&mut builders, i, ctx.as_deref_mut()); // odd tail inference
             }
         } else {
             // Non-affine emission (not produced by any current lowering
             // rule): fall back to unrolling the rest flat.
             for i in REP_WARMUP..n_inf {
-                emit_inference(&mut builders, i);
+                emit_inference(&mut builders, i, ctx.as_deref_mut());
             }
         }
     } else {
@@ -185,13 +358,23 @@ pub fn compile(graph: &LayerGraph, mapping: &Mapping, n_inf: u32) -> Result<Work
                     b.reserve_repeats(*m, n_inf - 1);
                 }
             }
-            emit_inference(&mut builders, i);
+            emit_inference(&mut builders, i, ctx.as_deref_mut());
+        }
+    }
+
+    // Nested loop counts multiply: reject any trace whose flattened
+    // length overflows u64 with a typed error instead of letting the
+    // wrap surface as a bogus op count downstream.
+    let traces: Vec<Trace> = builders.into_iter().map(TraceBuilder::build_trace).collect();
+    for (core, t) in traces.iter().enumerate() {
+        if t.flat_len().is_none() {
+            return Err(WorkloadError::TraceTooLarge { core });
         }
     }
 
     Ok(Workload {
         label: mapping.label.clone(),
-        traces: builders.into_iter().map(TraceBuilder::build_trace).collect(),
+        traces,
         spec: MachineSpec { tiles: mapping.tiles.clone(), mutexes, channels },
         inferences: n_inf,
     })
@@ -292,6 +475,7 @@ fn emit_replica(
     idx: usize,
     r: usize,
     i: u32,
+    mut ctx: Option<&mut CacheCtx>,
 ) {
     let s = &mapping.stages[idx];
     let parts = s.parts();
@@ -358,7 +542,10 @@ fn emit_replica(
             lower::dequeue(b, tiles.last().expect("validated non-empty chain").tile, cols);
             si = j;
         } else {
-            emit_step(b, graph, step, r, parts);
+            match ctx.as_deref_mut() {
+                Some(c) => c.step(b, graph, step, r, parts, s.cores[r], &mapping.tiles),
+                None => emit_step(b, graph, step, r, parts),
+            }
             si += 1;
         }
     }
@@ -604,7 +791,9 @@ fn emit_row_streamed(
         None
     };
 
-    for g in 0..row_groups {
+    // One output-row group; factored out so the group-pair loop below
+    // can re-emit it per sampled iteration.
+    let emit_group = |b: &mut TraceBuilder, g: u64| {
         // ---- receive input rows (or load the image slice) -----------------
         if let Some((ch, counts)) = &in_info {
             let ch = *ch;
@@ -650,6 +839,33 @@ fn emit_row_streamed(
             b.roi(RoiKind::Communication, |b| {
                 b.push(TraceOp::Send { ch, bytes, addr: addr::channel(ch, i.wrapping_add(g as u32)) });
             });
+        }
+    };
+
+    // Encode the row loop as a `Rep` over *pairs* of groups: the
+    // forward Send's ping-pong slot keys on `(i + g) % 2`, so single
+    // groups are not iteration-affine but group pairs are. The ragged
+    // tail — the odd group, plus the short last group when `rg` does
+    // not divide `out_hw` — unrolls flat after the loop. Non-affine
+    // shapes (e.g. non-uniform per-group receive counts) fall back to
+    // a flat unroll inside `repeat`, bit-identical either way.
+    let full = if out_hw % rg == 0 { row_groups } else { row_groups.saturating_sub(1) };
+    match u32::try_from(full / 2) {
+        Ok(rep_pairs) => {
+            b.repeat(rep_pairs, |b, k| {
+                emit_group(b, 2 * u64::from(k));
+                emit_group(b, 2 * u64::from(k) + 1);
+            });
+            for g in u64::from(rep_pairs) * 2..row_groups {
+                emit_group(b, g);
+            }
+        }
+        // A pair count past u32 (no realizable conv shape gets close)
+        // cannot ride a `Rep`; emit every group flat.
+        Err(_) => {
+            for g in 0..row_groups {
+                emit_group(b, g);
+            }
         }
     }
 }
@@ -1216,6 +1432,91 @@ mod tests {
         split.stages[0].cores = vec![0, 1];
         split.stages[0].split = SplitKind::Columns;
         assert!(compile(&g, &split, 1).is_err());
+    }
+
+    #[test]
+    fn cached_materialize_compile_is_bit_identical() {
+        // The attention mapping below aliases all four projection slots
+        // on one tile — the hardest relocation case for the fragment
+        // cache — and n_inf = 16 exercises the loop-encoding path with
+        // cache hits across warm-up and sample pairs.
+        let g = LayerGraph::transformer(64, 2, 16, 1, 128);
+        let pl = |col0: u32| Placement { row0: 0, col0, rows: 64, cols: 64 };
+        let att = Place::AttentionTiles {
+            q: TilePlacement { tile: 0, placement: pl(0) },
+            k: TilePlacement { tile: 0, placement: pl(64) },
+            v: TilePlacement { tile: 0, placement: pl(128) },
+            o: TilePlacement { tile: 0, placement: pl(192) },
+        };
+        let mut s = Stage::on_core(0);
+        s.input = StageInput::Memory { node: 0 };
+        s.output = StageOutput::Memory { node: 10 };
+        s.steps = vec![Step::cpu(1), Step { node: 2, place: att }];
+        s.steps.extend((3..=9).map(Step::cpu));
+        let m = Mapping {
+            label: "test/attn-cache".into(),
+            tiles: vec![TileSpec { rows: 64, cols: 256, coupling: Coupling::Tight }],
+            min_mutexes: 0,
+            stages: vec![s],
+        };
+        for n_inf in [3, 16] {
+            let cache = Mutex::new(CompileCache::new(true));
+            let mut ctx = CacheCtx::materialize(&cache);
+            let cached = compile_with(&g, &m, n_inf, Some(&mut ctx)).unwrap();
+            let plain = compile(&g, &m, n_inf).unwrap();
+            assert_eq!(cached.traces, plain.traces, "n_inf={n_inf}");
+            let stats = cache.lock().unwrap().stats();
+            assert!(stats.hits > 0, "repeat inferences must hit: {stats:?}");
+        }
+    }
+
+    #[test]
+    fn cached_compile_relocates_across_replicas() {
+        // Two column-split replicas on distinct tiles: replica 1's MVM
+        // must splice with its own tile id, not replica 0's.
+        let g = LayerGraph::mlp(&[64, 64, 64]);
+        let mut s0 = Stage::on_core(0);
+        s0.cores = vec![0, 1];
+        s0.split = SplitKind::Columns;
+        s0.input = StageInput::Memory { node: 0 };
+        s0.output = StageOutput::Channel { bytes: 4 * 64 };
+        s0.steps = vec![
+            Step {
+                node: 1,
+                place: Place::Tile {
+                    per_replica: vec![
+                        TilePlacement {
+                            tile: 0,
+                            placement: Placement { row0: 0, col0: 0, rows: 64, cols: 32 },
+                        },
+                        TilePlacement {
+                            tile: 1,
+                            placement: Placement { row0: 0, col0: 0, rows: 64, cols: 32 },
+                        },
+                    ],
+                },
+            },
+            Step::cpu(2),
+        ];
+        let mut s1 = Stage::on_core(2);
+        s1.input = StageInput::Channel;
+        s1.output = StageOutput::Memory { node: 5 };
+        s1.steps = vec![Step::cpu(3), Step::cpu(4)];
+        let m = Mapping {
+            label: "test/replica-cache".into(),
+            tiles: vec![
+                TileSpec { rows: 64, cols: 32, coupling: Coupling::Tight },
+                TileSpec { rows: 64, cols: 32, coupling: Coupling::Tight },
+            ],
+            min_mutexes: 0,
+            stages: vec![s0, s1],
+        };
+        let cache = Mutex::new(CompileCache::new(true));
+        let mut ctx = CacheCtx::materialize(&cache);
+        let cached = compile_with(&g, &m, 4, Some(&mut ctx)).unwrap();
+        let plain = compile(&g, &m, 4).unwrap();
+        assert_eq!(cached.traces, plain.traces);
+        assert!(cached.traces[1].iter_ops().any(|op| matches!(op, TraceOp::CmProcess { tile: 1 })));
     }
 
     #[test]

@@ -48,6 +48,10 @@ pub enum WorkloadError {
     /// injected tile fault) — carried so mixed compile/run pipelines such
     /// as the automap validator report one error type.
     Run(RunError),
+    /// A core's trace would flatten to more than `u64::MAX` ops (nested
+    /// loop counts multiply): it could never be simulated or unrolled,
+    /// so the compiler rejects it instead of silently wrapping lengths.
+    TraceTooLarge { core: usize },
 }
 
 impl fmt::Display for WorkloadError {
@@ -59,6 +63,9 @@ impl fmt::Display for WorkloadError {
             WorkloadError::InvalidGraph(msg) => write!(f, "invalid layer graph: {msg}"),
             WorkloadError::InvalidMapping(msg) => write!(f, "invalid mapping: {msg}"),
             WorkloadError::Run(e) => write!(f, "simulation failed: {e}"),
+            WorkloadError::TraceTooLarge { core } => {
+                write!(f, "core {core}: flattened trace length overflows u64 (nested loop counts multiply)")
+            }
         }
     }
 }
@@ -89,8 +96,18 @@ impl Workload {
     }
 
     /// Flattened op count (what a fully unrolled trace would execute).
+    /// Panics on `usize` overflow; compiled workloads are pre-validated
+    /// (`compile` rejects overlong traces with
+    /// [`WorkloadError::TraceTooLarge`]), so guard hand-built nested
+    /// traces with [`Workload::flat_len`] first.
     pub fn total_ops(&self) -> usize {
         self.traces.iter().map(Trace::op_count).sum()
+    }
+
+    /// Checked flattened op count across every core: `None` if nested
+    /// loop counts multiply past `u64`.
+    pub fn flat_len(&self) -> Option<u64> {
+        self.traces.iter().try_fold(0u64, |acc, t| acc.checked_add(t.flat_len()?))
     }
 
     /// Physically stored op count (`Rep` bodies count once).

@@ -2,10 +2,14 @@
 //! trace machine.
 //!
 //! A workload is one [`Trace`] per core: a program of [`Segment`]s that
-//! is either straight-line ops or an explicit `Rep { body, count }`
-//! loop. Steady-state workloads (N inferences of the same network) store
-//! the per-inference block *once* inside a `Rep` instead of cloning it N
-//! times, so trace memory and compile time are O(block), not O(N*block);
+//! is straight-line ops, an explicit `Rep { body, count }` loop of a
+//! flat body, or a nested `Loop { body, count }` whose body is itself a
+//! segment program (a CNN row-loop inside the per-inference loop,
+//! per-request bodies in batched traces). Steady-state workloads
+//! (N inferences of the same network) store the per-inference block
+//! *once* inside a `Rep`/`Loop` instead of cloning it N times, so trace
+//! memory and compile time are O(block), not O(N*block); nested loops
+//! compose address strides additively across levels, and
 //! [`Trace::flatten`] recovers the exact flat stream for oracle
 //! comparisons. Ops are either *local* (compute bursts, memory streams)
 //! or *interacting* (AIMC tile ops, mutexes, channels). Memory is
@@ -113,35 +117,140 @@ fn stride_between(a: TraceOp, b: TraceOp) -> Option<i64> {
     }
 }
 
-/// One segment of a [`Trace`] program.
+/// One segment of a [`Trace`] program. Segments nest: a `Loop` body is
+/// itself a segment program, so a trace can hold e.g. a row-group `Rep`
+/// inside a per-inference `Loop` without unrolling either level.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Segment {
     /// A straight-line run of ops, executed once.
     Ops(Vec<TraceOp>),
-    /// `count` iterations of `body`. `strides` (empty = all zero) holds
-    /// one per-iteration address delta per body op: in iteration `k`,
-    /// op `j` runs as `apply_stride(body[j], strides[j], k)`.
+    /// `count` iterations of a flat `body`. `strides` (empty = all
+    /// zero) holds one per-iteration address delta per body op: in
+    /// iteration `k`, op `j` runs as `apply_stride(body[j], strides[j], k)`.
     Rep {
         body: Vec<TraceOp>,
+        count: u32,
+        strides: Vec<i64>,
+    },
+    /// `count` iterations of a nested segment program. `strides` (empty
+    /// = all zero) holds one per-iteration address delta per *stored*
+    /// op of `body` in recursive stored order: in outer iteration `k`,
+    /// stored op `j` shifts by `strides[j] * k` on top of whatever
+    /// shifts inner `Rep`/`Loop` levels apply — addresses are affine in
+    /// every enclosing loop index, composing by wrapping addition.
+    Loop {
+        body: Vec<Segment>,
         count: u32,
         strides: Vec<i64>,
     },
 }
 
 impl Segment {
-    /// Flattened op count of this segment.
+    /// Flattened op count of this segment. Panics if the (checked)
+    /// [`Segment::flat_len`] overflows `usize`; size-validate untrusted
+    /// nested traces with `flat_len` first.
     pub fn op_count(&self) -> usize {
+        self.flat_len()
+            .and_then(|n| usize::try_from(n).ok())
+            .expect("segment flat length overflows usize — validate with flat_len()")
+    }
+
+    /// Checked flattened op count. Nested loop counts multiply, so the
+    /// math is full checked `u64`: `None` means the product overflows
+    /// (a trace that could never be simulated or unrolled anyway).
+    pub fn flat_len(&self) -> Option<u64> {
         match self {
-            Segment::Ops(v) => v.len(),
-            Segment::Rep { body, count, .. } => body.len() * *count as usize,
+            Segment::Ops(v) => Some(v.len() as u64),
+            Segment::Rep { body, count, .. } => {
+                (body.len() as u64).checked_mul(u64::from(*count))
+            }
+            Segment::Loop { body, count, .. } => body
+                .iter()
+                .try_fold(0u64, |acc, s| acc.checked_add(s.flat_len()?))?
+                .checked_mul(u64::from(*count)),
         }
     }
 
-    /// Physically stored op count (a `Rep` body counts once).
+    /// Physically stored op count (a `Rep`/`Loop` body counts once;
+    /// `Loop` bodies count recursively).
     pub fn stored_ops(&self) -> usize {
         match self {
             Segment::Ops(v) => v.len(),
             Segment::Rep { body, .. } => body.len(),
+            Segment::Loop { body, .. } => body.iter().map(Segment::stored_ops).sum(),
+        }
+    }
+
+    /// Visit the flattened ops of this segment with `shifts[j]` (one
+    /// absolute address delta per stored op, missing = 0) already
+    /// accumulated from enclosing loop levels.
+    fn visit_shifted(&self, shifts: &[i64], f: &mut dyn FnMut(TraceOp)) {
+        let shift_at = |j: usize| shifts.get(j).copied().unwrap_or(0);
+        match self {
+            Segment::Ops(v) => {
+                for (j, &op) in v.iter().enumerate() {
+                    f(apply_stride(op, shift_at(j), 1));
+                }
+            }
+            Segment::Rep { body, count, strides } => {
+                for k in 0..*count {
+                    for (j, &op) in body.iter().enumerate() {
+                        let op = apply_stride(op, strides.get(j).copied().unwrap_or(0), k);
+                        f(apply_stride(op, shift_at(j), 1));
+                    }
+                }
+            }
+            Segment::Loop { body, count, strides } => {
+                for k in 0..*count {
+                    let mut base = 0usize;
+                    for child in body {
+                        let n = child.stored_ops();
+                        if shifts.is_empty() && (strides.is_empty() || k == 0) {
+                            child.visit_shifted(&[], f);
+                        } else {
+                            let child_shifts: Vec<i64> = (0..n)
+                                .map(|j| {
+                                    let s = strides.get(base + j).copied().unwrap_or(0);
+                                    shift_at(base + j)
+                                        .wrapping_add(s.wrapping_mul(i64::from(k)))
+                                })
+                                .collect();
+                            child.visit_shifted(&child_shifts, f);
+                        }
+                        base += n;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Visit every flattened op of this segment in order.
+    pub fn visit_flat(&self, f: &mut dyn FnMut(TraceOp)) {
+        self.visit_shifted(&[], f);
+    }
+
+    /// Visit each *stored* op once with its execution multiplicity
+    /// scaled by `mult` (saturating — use [`Segment::flat_len`] to
+    /// reject pathological count products up front).
+    fn for_each_weighted(&self, mult: u64, f: &mut dyn FnMut(TraceOp, u64)) {
+        match self {
+            Segment::Ops(v) => {
+                for &op in v {
+                    f(op, mult);
+                }
+            }
+            Segment::Rep { body, count, .. } => {
+                let m = mult.saturating_mul(u64::from(*count));
+                for &op in body {
+                    f(op, m);
+                }
+            }
+            Segment::Loop { body, count, .. } => {
+                let m = mult.saturating_mul(u64::from(*count));
+                for child in body {
+                    child.for_each_weighted(m, f);
+                }
+            }
         }
     }
 
@@ -185,6 +294,139 @@ impl Segment {
             strides: if any { strides } else { Vec::new() },
         })
     }
+
+    /// Nested analogue of [`Segment::rep_from_samples`]: build a `Loop`
+    /// from whole sampled iteration *programs* (each a segment list,
+    /// possibly containing inner `Rep`/`Loop` segments). Samples must be
+    /// structurally identical — same segment kinds, body lengths, inner
+    /// counts and inner strides — with stored-op addresses affine in the
+    /// outer iteration index. `checks` follows the same protocol
+    /// (iteration 1 first, then 2 and `count - 1` as far-endpoint
+    /// guards); callers fall back to splicing the samples flat on
+    /// `None`, so the encoding is always bit-exact.
+    ///
+    /// A single flat `Ops` sample degrades to a plain `Rep`, so nested
+    /// emission never pessimizes traces the flat encoder handles.
+    pub fn loop_from_samples(
+        first: &[Segment],
+        checks: &[(&[Segment], u32)],
+        count: u32,
+    ) -> Option<Segment> {
+        let (second, k1) = *checks.first()?;
+        if k1 != 1 {
+            return None;
+        }
+        let mut strides = Vec::new();
+        let any = derive_loop_strides(first, second, &mut strides)?;
+        for &(sample, k) in &checks[1..] {
+            let mut idx = 0usize;
+            if !check_loop_sample(first, sample, &strides, k, &mut idx) {
+                return None;
+            }
+        }
+        let strides = if any { strides } else { Vec::new() };
+        if let [Segment::Ops(body)] = first {
+            return Some(Segment::Rep { body: body.clone(), count, strides });
+        }
+        Some(Segment::Loop { body: first.to_vec(), count, strides })
+    }
+}
+
+/// Walk two structurally-identical segment programs in recursive
+/// stored-op order, appending the per-outer-iteration stride of every
+/// stored op to `out`. Returns `Some(any_nonzero)` on success, `None`
+/// on any structural mismatch or non-affine op pair.
+fn derive_loop_strides(a: &[Segment], b: &[Segment], out: &mut Vec<i64>) -> Option<bool> {
+    if a.len() != b.len() {
+        return None;
+    }
+    let mut any = false;
+    for (sa, sb) in a.iter().zip(b) {
+        match (sa, sb) {
+            (Segment::Ops(x), Segment::Ops(y)) => {
+                if x.len() != y.len() {
+                    return None;
+                }
+                for (&oa, &ob) in x.iter().zip(y) {
+                    let s = stride_between(oa, ob)?;
+                    any |= s != 0;
+                    out.push(s);
+                }
+            }
+            (
+                Segment::Rep { body: x, count: cx, strides: sx },
+                Segment::Rep { body: y, count: cy, strides: sy },
+            ) => {
+                // Inner strides must be outer-invariant: only the body's
+                // base addresses may advance with the outer index.
+                if cx != cy || sx != sy || x.len() != y.len() {
+                    return None;
+                }
+                for (&oa, &ob) in x.iter().zip(y) {
+                    let s = stride_between(oa, ob)?;
+                    any |= s != 0;
+                    out.push(s);
+                }
+            }
+            (
+                Segment::Loop { body: x, count: cx, strides: sx },
+                Segment::Loop { body: y, count: cy, strides: sy },
+            ) => {
+                if cx != cy || sx != sy {
+                    return None;
+                }
+                any |= derive_loop_strides(x, y, out)?;
+            }
+            _ => return None,
+        }
+    }
+    Some(any)
+}
+
+/// Verify that `sample` equals `first` with every stored op shifted by
+/// `strides[j] * k` (`j` advancing through `idx` in recursive stored
+/// order), with identical structure at every level.
+fn check_loop_sample(
+    first: &[Segment],
+    sample: &[Segment],
+    strides: &[i64],
+    k: u32,
+    idx: &mut usize,
+) -> bool {
+    if first.len() != sample.len() {
+        return false;
+    }
+    let check_ops = |x: &[TraceOp], y: &[TraceOp], idx: &mut usize| {
+        if x.len() != y.len() {
+            return false;
+        }
+        for (&oa, &ob) in x.iter().zip(y) {
+            let s = strides.get(*idx).copied().unwrap_or(0);
+            *idx += 1;
+            if apply_stride(oa, s, k) != ob {
+                return false;
+            }
+        }
+        true
+    };
+    for (sa, sb) in first.iter().zip(sample) {
+        let ok = match (sa, sb) {
+            (Segment::Ops(x), Segment::Ops(y)) => check_ops(x, y, idx),
+            (
+                Segment::Rep { body: x, count: cx, strides: sx },
+                Segment::Rep { body: y, count: cy, strides: sy },
+            ) => cx == cy && sx == sy && check_ops(x, y, idx),
+            (
+                Segment::Loop { body: x, count: cx, strides: sx },
+                Segment::Loop { body: y, count: cy, strides: sy },
+            ) => cx == cy && sx == sy && check_loop_sample(x, y, strides, k, idx),
+            _ => false,
+        };
+        if !ok {
+            return false;
+        }
+    }
+    true
 }
 
 /// A per-core trace program: segments executed in order.
@@ -196,22 +438,33 @@ pub struct Trace {
 impl Trace {
     /// True if the flattened program has no ops.
     pub fn is_empty(&self) -> bool {
-        self.segments.iter().all(|s| s.op_count() == 0)
+        self.segments.iter().all(|s| s.flat_len() == Some(0))
     }
 
     /// Flattened op count (what a fully unrolled trace would hold).
+    /// Panics on `usize` overflow; size-validate untrusted nested
+    /// traces with [`Trace::flat_len`] first.
     pub fn op_count(&self) -> usize {
-        self.segments.iter().map(Segment::op_count).sum()
+        self.flat_len()
+            .and_then(|n| usize::try_from(n).ok())
+            .expect("trace flat length overflows usize — validate with flat_len()")
     }
 
-    /// Physically stored op count (`Rep` bodies count once).
+    /// Checked flattened op count: `None` if nested loop counts multiply
+    /// past `u64` (see [`Segment::flat_len`]).
+    pub fn flat_len(&self) -> Option<u64> {
+        self.segments.iter().try_fold(0u64, |acc, s| acc.checked_add(s.flat_len()?))
+    }
+
+    /// Physically stored op count (`Rep`/`Loop` bodies count once).
     pub fn stored_ops(&self) -> usize {
         self.segments.iter().map(Segment::stored_ops).sum()
     }
 
-    /// Iterate the flattened op stream (repeating `Rep` bodies `count`
-    /// times with their address strides applied). Yields ops by value —
-    /// strided ops are materialized per iteration.
+    /// Iterate the flattened op stream (repeating `Rep`/`Loop` bodies
+    /// `count` times with their address strides applied). Yields ops by
+    /// value — strided ops are materialized per iteration; nested
+    /// `Loop` segments materialize their flattened body up front.
     pub fn iter_ops(&self) -> impl Iterator<Item = TraceOp> + '_ {
         fn segment_ops(seg: &Segment) -> Box<dyn Iterator<Item = TraceOp> + '_> {
             match seg {
@@ -223,29 +476,24 @@ impl Trace {
                         })
                     }))
                 }
+                Segment::Loop { .. } => {
+                    let mut v = Vec::with_capacity(seg.op_count());
+                    seg.visit_flat(&mut |op| v.push(op));
+                    Box::new(v.into_iter())
+                }
             }
         }
         self.segments.iter().flat_map(segment_ops)
     }
 
     /// Visit each *stored* op once with its total execution multiplicity
-    /// (`Rep` body ops carry `count`). Strided ops are reported with their
-    /// iteration-0 address — the synthetic address regions are stride-
-    /// closed, so region classification is exact for every iteration.
+    /// (loop body ops carry the product of their enclosing counts,
+    /// saturating). Strided ops are reported with their iteration-0
+    /// address — the synthetic address regions are stride-closed, so
+    /// region classification is exact for every iteration.
     pub fn for_each_weighted(&self, f: &mut impl FnMut(TraceOp, u64)) {
         for seg in &self.segments {
-            match seg {
-                Segment::Ops(v) => {
-                    for &op in v {
-                        f(op, 1);
-                    }
-                }
-                Segment::Rep { body, count, .. } => {
-                    for &op in body {
-                        f(op, *count as u64);
-                    }
-                }
-            }
+            seg.for_each_weighted(1, &mut *f);
         }
     }
 
@@ -405,6 +653,74 @@ impl TraceBuilder {
             }
         }
         self
+    }
+
+    /// Nested-loop analogue of [`TraceBuilder::repeat`]: `f` emits a
+    /// whole segment *program* per iteration (it may itself call
+    /// `repeat`/`push_segment`), and iteration-affine emissions collapse
+    /// into a single [`Segment::Loop`] — verified against sampled
+    /// iterations 1, 2 and `count - 1`, exactly like the flat encoder.
+    /// Non-affine emissions splice every sampled iteration's segments
+    /// back in order, so the flattened trace is always bit-identical to
+    /// calling `f` for k in 0..count (`f` must depend only on `k`).
+    pub fn repeat_nested(
+        &mut self,
+        count: u32,
+        mut f: impl FnMut(&mut TraceBuilder, u32),
+    ) -> &mut Self {
+        fn sample(f: &mut dyn FnMut(&mut TraceBuilder, u32), k: u32) -> Trace {
+            let mut sb = TraceBuilder::new();
+            f(&mut sb, k);
+            sb.build_trace()
+        }
+        // Below 5 iterations the 4 affinity samples cost as much as the
+        // loop; just splice.
+        if count < 5 {
+            for k in 0..count {
+                self.splice(sample(&mut f, k));
+            }
+            return self;
+        }
+        let s0 = sample(&mut f, 0);
+        let s1 = sample(&mut f, 1);
+        let s2 = sample(&mut f, 2);
+        let s_last = sample(&mut f, count - 1);
+        let checks = [
+            (s1.segments.as_slice(), 1u32),
+            (s2.segments.as_slice(), 2),
+            (s_last.segments.as_slice(), count - 1),
+        ];
+        match Segment::loop_from_samples(&s0.segments, &checks, count) {
+            Some(seg) => {
+                self.push_segment(seg);
+            }
+            None => {
+                self.splice(s0);
+                self.splice(s1);
+                self.splice(s2);
+                for k in 3..count - 1 {
+                    let s = sample(&mut f, k);
+                    self.splice(s);
+                }
+                self.splice(s_last);
+            }
+        }
+        self
+    }
+
+    /// Append another trace's segments in emission order (straight-line
+    /// runs merge into the open run; looped segments pass through).
+    fn splice(&mut self, t: Trace) {
+        for seg in t.segments {
+            match seg {
+                Segment::Ops(v) => {
+                    self.ops.extend_from_slice(&v);
+                }
+                other => {
+                    self.push_segment(other);
+                }
+            }
+        }
     }
 
     /// Finish as a flat op vector (any looped segments are unrolled).
@@ -602,5 +918,125 @@ mod tests {
         assert_eq!(t.flatten(), ops);
         assert!(!t.is_empty());
         assert!(Trace::from(Vec::new()).is_empty());
+    }
+
+    /// One iteration of a nested block: an outer-advancing input
+    /// stream, an inner affine row loop (base advancing with the outer
+    /// index, stride advancing with the inner index), and a tail burst.
+    fn nested_block(b: &mut TraceBuilder, k: u32) {
+        b.stream_read(addr::input(k, 256), 256, 2);
+        b.repeat(8, move |b, g| {
+            b.stream_read(addr::ACTIVATIONS + k as u64 * 0x1000 + g as u64 * 0x100, 64, 1);
+            b.compute(InstClass::SimdOp, 50);
+        });
+        b.compute(InstClass::FpOp, 10);
+    }
+
+    #[test]
+    fn repeat_nested_affine_emits_single_loop() {
+        let mut b = TraceBuilder::new();
+        b.repeat_nested(12, nested_block);
+        let t = b.build_trace();
+        assert_eq!(t.segments.len(), 1);
+        let Segment::Loop { body, count, strides } = &t.segments[0] else {
+            panic!("expected a Loop, got {:?}", t.segments[0]);
+        };
+        assert_eq!(*count, 12);
+        assert_eq!(body.len(), 3, "Ops / inner Rep / Ops");
+        assert!(matches!(body[1], Segment::Rep { count: 8, .. }));
+        // Stored order: input stream, inner body (stream, compute), tail.
+        assert_eq!(strides.as_slice(), &[256, 0x1000, 0, 0]);
+        assert_eq!(t.stored_ops(), 4);
+        assert_eq!(t.op_count(), 12 * (1 + 8 * 2 + 1));
+    }
+
+    #[test]
+    fn repeat_nested_flatten_matches_unrolled_emission() {
+        let mut looped = TraceBuilder::new();
+        looped.repeat_nested(11, nested_block);
+        let mut flat = TraceBuilder::new();
+        for k in 0..11 {
+            nested_block(&mut flat, k);
+        }
+        assert_eq!(looped.build_trace().flatten(), flat.build());
+    }
+
+    #[test]
+    fn repeat_nested_flat_body_degrades_to_rep() {
+        let mut nested = TraceBuilder::new();
+        nested.repeat_nested(50, affine_block);
+        let mut plain = TraceBuilder::new();
+        plain.repeat(50, affine_block);
+        assert_eq!(nested.build_trace(), plain.build_trace());
+    }
+
+    #[test]
+    fn repeat_nested_non_affine_falls_back_to_splice() {
+        // Outer-dependent inner trip counts are structurally non-affine.
+        let f = |b: &mut TraceBuilder, k: u32| {
+            b.repeat(6 + k, |b, g| {
+                b.stream_read(0x1000 + g as u64 * 64, 64, 1);
+            });
+        };
+        let mut looped = TraceBuilder::new();
+        looped.repeat_nested(7, f);
+        let t = looped.build_trace();
+        assert!(t.segments.iter().all(|s| !matches!(s, Segment::Loop { .. })));
+        let mut flat = TraceBuilder::new();
+        for k in 0..7 {
+            f(&mut flat, k);
+        }
+        assert_eq!(t.flatten(), flat.build());
+    }
+
+    #[test]
+    fn repeat_nested_far_endpoint_rejects_periodic_outer() {
+        // Inner bases periodic in the outer index mod 3: collinear over
+        // outer samples 0..2, exposed only by the count-1 endpoint.
+        let f = |b: &mut TraceBuilder, k: u32| {
+            b.repeat(6, move |b, g| {
+                b.stream_read(0x1000 + (k as u64 % 3) * 0x10000 + g as u64 * 64, 64, 1);
+            });
+        };
+        let mut looped = TraceBuilder::new();
+        looped.repeat_nested(9, f);
+        let t = looped.build_trace();
+        assert!(t.segments.iter().all(|s| !matches!(s, Segment::Loop { .. })));
+        let mut flat = TraceBuilder::new();
+        for k in 0..9 {
+            f(&mut flat, k);
+        }
+        assert_eq!(t.flatten(), flat.build());
+    }
+
+    #[test]
+    fn nested_iter_and_weighted_agree_with_flatten() {
+        let mut b = TraceBuilder::new();
+        b.compute(InstClass::IntAlu, 7);
+        b.repeat_nested(12, nested_block);
+        b.compute(InstClass::FpOp, 3);
+        let t = b.build_trace();
+        let flat = t.flatten();
+        assert_eq!(flat.len(), t.op_count());
+        assert_eq!(t.flat_len(), Some(flat.len() as u64));
+        assert_eq!(t.iter_ops().count(), flat.len());
+        assert!(t.iter_ops().zip(&flat).all(|(a, &b)| a == b));
+        let mut weighted = 0u64;
+        t.for_each_weighted(&mut |_, w| weighted += w);
+        assert_eq!(weighted as usize, flat.len());
+    }
+
+    #[test]
+    fn nested_flat_len_is_checked_not_wrapped() {
+        let op = TraceOp::Compute { class: InstClass::IntAlu, insts: 1 };
+        let inner = Segment::Rep { body: vec![op, op], count: u32::MAX, strides: Vec::new() };
+        assert_eq!(inner.flat_len(), Some(2 * (u32::MAX as u64)));
+        let outer = Segment::Loop { body: vec![inner], count: u32::MAX, strides: Vec::new() };
+        // 2 * (2^32-1)^2 > 2^64: the checked math reports the overflow
+        // instead of silently wrapping like the old usize multiply.
+        assert_eq!(outer.flat_len(), None);
+        let t = Trace { segments: vec![outer] };
+        assert_eq!(t.flat_len(), None);
+        assert!(!t.is_empty());
     }
 }

@@ -5,6 +5,9 @@
 //! ISSUE-5 equivalence gates: the compositional cost engine ranks
 //! candidates identically to the full-compile oracle, and the pruned
 //! branch-and-bound walk returns exactly the exhaustive walk's outcome.
+//! PR 7 adds the compile-cache gate: the compiled oracle returns
+//! bit-identical `SearchOutcome`s with the cross-candidate fragment
+//! cache on and off, at any `--jobs N`.
 
 use alpine::config::{SystemConfig, SystemKind};
 use alpine::coordinator::automap::{run_search, AutomapOptions};
@@ -266,6 +269,11 @@ fn compositional_matches_compiled_oracle_on_pinned_cases() {
             max_depth: 4,
             max_replica: 4,
             jobs: 1,
+            // The oracle leg runs with the PR-7 compile cache on: cached
+            // scoring is bit-identical to uncached by construction
+            // (gated under proptest below), so the ISSUE-5 comparison
+            // doubles as a cache-correctness check.
+            compile_cache: true,
         };
         let oracle =
             automap::search_opts(&graph, &budget(), &cfg, &exhaustive(CostModel::Compiled)).unwrap();
@@ -357,5 +365,38 @@ fn pruned_search_equals_exhaustive_under_proptest() {
         for (a, b) in pruned.ranked.iter().zip(&parallel.ranked) {
             assert_eq!(a.est.cycles_per_inf.to_bits(), b.est.cycles_per_inf.to_bits(), "{}", a.desc);
         }
+
+        // ISSUE-7 gate: the compiled-oracle compile cache is score
+        // invisible — cache-on (shared across workers, at a random
+        // `jobs`) and cache-off return bit-identical outcomes. Depth
+        // and replication are clamped to keep the per-candidate
+        // compile oracle affordable under proptest.
+        let compiled = |cc: bool, jobs: usize| SearchOptions {
+            top_k,
+            model: CostModel::Compiled,
+            cap: Some(usize::MAX),
+            max_depth: 3,
+            max_replica: 2,
+            jobs,
+            compile_cache: cc,
+        };
+        let cached = automap::search_opts(&graph, &budget, &cfg, &compiled(true, jobs)).unwrap();
+        let uncached = automap::search_opts(&graph, &budget, &cfg, &compiled(false, 1)).unwrap();
+        assert_eq!(cached.enumerated, uncached.enumerated);
+        assert_eq!(cached.pruned, uncached.pruned);
+        assert_eq!(cached.feasible, uncached.feasible);
+        assert_eq!(descs(&cached), descs(&uncached), "compile-cache ranking drift");
+        assert_eq!(front_descs(&cached), front_descs(&uncached), "compile-cache front drift");
+        for (a, b) in cached.ranked.iter().zip(&uncached.ranked) {
+            assert_eq!(a.est.cycles_per_inf.to_bits(), b.est.cycles_per_inf.to_bits(), "{}", a.desc);
+            assert_eq!(
+                a.est.energy_per_inf_j.to_bits(),
+                b.est.energy_per_inf_j.to_bits(),
+                "{}",
+                a.desc
+            );
+        }
+        assert!(cached.cache.is_some(), "cache-enabled compiled search must report stats");
+        assert!(uncached.cache.is_none(), "cache-disabled search must not report stats");
     });
 }

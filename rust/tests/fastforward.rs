@@ -1,9 +1,10 @@
-//! The fast-forward equivalence gate: steady-state fast-forward must
-//! produce **bit-identical** `RunStats` to full op-by-op replay — for
-//! every paper workload case (MLP / LSTM / CNN / transformer) and for
-//! random multi-core trace programs with channels, mutexes and tiles
-//! (the `machine-fastforward-equivalence` property). CI runs this file
-//! as part of the determinism gate.
+//! The fast-forward equivalence gate: steady-state fast-forward — both
+//! the flat single-level detector and the PR-7 nested per-segment one —
+//! must produce **bit-identical** `RunStats` to full op-by-op replay,
+//! for every paper workload case (MLP / LSTM / CNN / transformer) and
+//! for random multi-core trace programs with channels, mutexes and
+//! tiles (the `machine-fastforward-equivalence` property). CI runs this
+//! file as part of the determinism gate.
 
 use alpine::config::{SystemConfig, SystemKind};
 use alpine::isa::InstClass;
@@ -16,7 +17,7 @@ use alpine::util::rng::Rng;
 use alpine::workload::cnn::{self, CnnCase};
 use alpine::workload::lstm::{self, LstmCase};
 use alpine::workload::mlp::{self, MlpCase};
-use alpine::workload::trace::{TraceBuilder, TraceOp};
+use alpine::workload::trace::{Segment, TraceBuilder, TraceOp};
 use alpine::workload::transformer::{self, TransformerCase, TransformerShape};
 use alpine::workload::Workload;
 
@@ -24,20 +25,27 @@ use alpine::workload::Workload;
 // itself (`assert_bit_identical`), so a future stats field cannot be
 // silently excluded from this gate.
 
-/// Run a compiled workload with fast-forward on/off; returns the stats
-/// and the number of closed-form jumps taken.
-fn run_with(cfg: &SystemConfig, w: &Workload, ff: bool) -> (RunStats, u32) {
+/// Run a compiled workload with fast-forward and nested (per-segment)
+/// fast-forward toggled independently; returns the stats and the number
+/// of closed-form jumps taken.
+fn run_with(cfg: &SystemConfig, w: &Workload, ff: bool, nested: bool) -> (RunStats, u32) {
     let mut m = Machine::new(cfg.clone(), w.spec.clone());
     m.set_fast_forward(ff);
+    m.set_nested_fast_forward(nested);
     let rs = m.run(w.traces.clone()).unwrap();
     (rs, m.fast_forward_jumps())
 }
 
+/// Three-way check: nested fast-forward (the PR-7 default), flat
+/// single-level fast-forward (the PR-4 behaviour), and full replay must
+/// all produce bit-identical stats.
 fn check_case(cfg: &SystemConfig, w: &Workload) -> u32 {
-    let (fast, jumps) = run_with(cfg, w, true);
-    let (reference, ref_jumps) = run_with(cfg, w, false);
+    let (nested, jumps) = run_with(cfg, w, true, true);
+    let (flat, _) = run_with(cfg, w, true, false);
+    let (reference, ref_jumps) = run_with(cfg, w, false, false);
     assert_eq!(ref_jumps, 0, "{}: knob off must fully replay", w.label);
-    fast.assert_bit_identical(&reference, &w.label);
+    nested.assert_bit_identical(&reference, &w.label);
+    flat.assert_bit_identical(&reference, &w.label);
     jumps
 }
 
@@ -91,6 +99,18 @@ fn cnn_cases_fastforward_bit_identical() {
     let cfg = SystemConfig::high_power();
     for case in [CnnCase::Digital, CnnCase::Analog] {
         let w = cnn::generate(case, CnnVariant::Fast, &cfg, 12).unwrap();
+        // PR-7 structural guarantee: the digital CNN's per-row stream
+        // loops survive *inside* the inference loop as a nested
+        // `Segment::Loop` program — the shape the hierarchical
+        // fast-forward exists for.
+        if matches!(case, CnnCase::Digital) {
+            assert!(
+                w.traces
+                    .iter()
+                    .any(|t| t.segments.iter().any(|s| matches!(s, Segment::Loop { .. }))),
+                "digital CNN trace lost its nested Loop structure"
+            );
+        }
         check_case(&cfg, &w);
     }
 }
@@ -243,13 +263,16 @@ fn machine_fastforward_equivalence() {
             traces.push(b.build_trace());
         }
 
-        let run = |ff: bool| {
+        let run = |ff: bool, nested: bool| {
             let mut m = Machine::new(SystemConfig::high_power(), spec.clone());
             m.set_fast_forward(ff);
+            m.set_nested_fast_forward(nested);
             m.run(traces.clone()).unwrap()
         };
-        let fast = run(true);
-        let reference = run(false);
-        fast.assert_bit_identical(&reference, "machine-fastforward-equivalence");
+        let nested = run(true, true);
+        let flat = run(true, false);
+        let reference = run(false, false);
+        nested.assert_bit_identical(&reference, "machine-fastforward-equivalence");
+        flat.assert_bit_identical(&reference, "machine-fastforward-equivalence/flat");
     });
 }

@@ -167,6 +167,43 @@ fn machine_batched_streams_equal_per_line_reference() {
 }
 
 #[test]
+fn nested_repeat_flattens_to_unrolled_emission() {
+    // `repeat_nested` must encode — or splice — to a trace whose
+    // flattened ops are bit-identical to calling the emitter for every
+    // k in order, for random emitters mixing flat ops, inner `repeat`
+    // loops (affine and not) and per-iteration address advances. This
+    // is the PR-7 invariant the nested fast-forward rests on: the
+    // looped program is a lossless encoding of the unrolled one.
+    check("trace-nested-repeat-flatten", 0x74, |rng| {
+        let outer = 1 + rng.below(12) as u32;
+        let inner = 1 + rng.below(10) as u32;
+        let affine_inner = rng.below(2) == 0;
+        let affine_outer = rng.below(2) == 0;
+        let stride = (1 + rng.below(8)) * 64;
+        let emit = |b: &mut TraceBuilder, k: u32| {
+            b.compute(InstClass::IntAlu, 10 + if affine_outer { 0 } else { (k as u64 % 3) * 7 });
+            b.repeat(inner, |b, j| {
+                b.stream_read(0x4000_0000 + k as u64 * 0x1_0000 + j as u64 * stride, 128, 1);
+                if !affine_inner {
+                    b.compute(InstClass::SimdOp, 1 + (j as u64 % 2));
+                }
+            });
+            b.stream_write(0x9000_0000 + k as u64 * stride, 64, 1);
+        };
+        let mut nested = TraceBuilder::new();
+        nested.repeat_nested(outer, |b, k| emit(b, k));
+        let t = nested.build_trace();
+        let mut unrolled = TraceBuilder::new();
+        for k in 0..outer {
+            emit(&mut unrolled, k);
+        }
+        let flat = t.flatten();
+        assert_eq!(flat, unrolled.build(), "nested flatten != unrolled emission");
+        assert_eq!(t.flat_len(), Some(flat.len() as u64), "flat_len disagrees with flatten");
+    });
+}
+
+#[test]
 fn machine_time_monotone_in_work() {
     check("machine-monotone", 0x21, |rng| {
         let insts = 1000 + rng.below(100_000);
