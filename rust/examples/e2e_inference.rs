@@ -16,7 +16,7 @@
 //!     make artifacts && cargo run --release --example e2e_inference
 
 use alpine::config::SystemKind;
-use alpine::coordinator::{run_workload, server};
+use alpine::coordinator::{run_workload, server, RunOptions};
 use alpine::runtime::{default_artifacts_dir, read_f32_bin, Runtime};
 use alpine::util::rng::Rng;
 use alpine::util::table::fmt_time;
@@ -122,8 +122,9 @@ fn main() -> Result<()> {
     println!("\nsimulated ALPINE hardware on the same MLP workload (10 inferences):");
     for kind in SystemKind::ALL {
         let cfg = alpine::config::SystemConfig::for_kind(kind);
-        let dig = run_workload(kind, mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 10).unwrap()).unwrap();
-        let ana = run_workload(kind, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 10).unwrap()).unwrap();
+        let ro = RunOptions::default();
+        let dig = run_workload(kind, mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 10).unwrap(), &ro).unwrap();
+        let ana = run_workload(kind, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 10).unwrap(), &ro).unwrap();
         println!(
             "  [{:>10}] ANA {:>9}/inf {:>10.3e} J/inf | speedup {:>5.1}x energy {:>5.1}x vs DIG",
             kind.name(),

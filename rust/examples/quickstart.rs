@@ -7,7 +7,7 @@
 use alpine::aimclib::checker::{self, Matrix};
 use alpine::aimclib::{activation, AimcDevice};
 use alpine::config::{SystemConfig, SystemKind};
-use alpine::coordinator::run_workload;
+use alpine::coordinator::{run_workload, RunOptions};
 use alpine::util::rng::Rng;
 use alpine::util::table::fmt_time;
 use alpine::workload::mlp::{self, MlpCase};
@@ -63,8 +63,9 @@ fn main() -> anyhow::Result<()> {
     println!("\nfull-system simulation (10 inferences of the 1024x1024x2 MLP):\n");
     for kind in SystemKind::ALL {
         let cfg = SystemConfig::for_kind(kind);
-        let dig = run_workload(kind, mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 10).unwrap()).unwrap();
-        let ana = run_workload(kind, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 10).unwrap()).unwrap();
+        let ro = RunOptions::default();
+        let dig = run_workload(kind, mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 10).unwrap(), &ro).unwrap();
+        let ana = run_workload(kind, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 10).unwrap(), &ro).unwrap();
         println!(
             "  [{:>10}] DIG {:>10}/inf  ANA {:>10}/inf  => speedup {:>5.1}x, energy gain {:>5.1}x",
             kind.name(),

@@ -5,7 +5,7 @@
 //! (2.3 GHz, 64 kB L1, 1 MB LLC). Both are 8-core in-order (MinorCPU)
 //! ARMv8 systems with DDR4-2400 memory.
 
-pub mod power;
+pub(crate) mod power;
 
 pub use power::{AimcEnergyModel, PowerModel};
 

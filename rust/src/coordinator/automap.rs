@@ -18,7 +18,7 @@ use crate::workload::compile::cache::{CompileCache, CompileCacheStats};
 use crate::workload::{compile, WorkloadError};
 use std::sync::Mutex;
 
-use super::{run_workload, CaseResult};
+use super::{run_workload, CaseResult, RunOptions};
 
 #[derive(Clone, Copy, Debug)]
 pub struct AutomapOptions {
@@ -168,9 +168,11 @@ pub fn run_search(
         .collect::<Result<Vec<_>, _>>()?;
     // `parallel_map` preserves input order, so the first failing
     // candidate (in rank order, not worker order) aborts the validation.
-    let results = parallel::parallel_map(workloads, opts.jobs, |w| run_workload(kind, w))
-        .into_iter()
-        .collect::<Result<Vec<_>, _>>()?;
+    let ro = RunOptions { jobs: Some(opts.jobs), ..RunOptions::default() };
+    let results =
+        parallel::parallel_map(workloads, ro.jobs.unwrap_or(1), |w| run_workload(kind, w, &ro))
+            .into_iter()
+            .collect::<Result<Vec<_>, _>>()?;
 
     let mut rows: Vec<AutomapRow> = cands
         .into_iter()

@@ -17,7 +17,7 @@ use crate::workload::lstm::{self, LstmCase};
 use crate::workload::mlp::{self, CustomMlpMapping, MlpCase, MlpShape};
 use crate::workload::transformer::{self, TransformerCase, TransformerShape};
 
-use super::{run_workload, CaseResult};
+use super::{run_workload, CaseResult, RunOptions};
 
 /// Default inference counts (§VI.C: 10 for MLP/LSTM, 3 for CNN; the
 /// transformer token steps match the MLP count).
@@ -68,26 +68,29 @@ pub enum SweepCase {
 /// CLI input, so an unsupported case here is a caller bug; a machine
 /// failure (deadlock, injected tile fault) is a typed `RunError`.
 pub fn run_case(case: SweepCase, n_inf: u32) -> Result<CaseResult, RunError> {
+    let ro = RunOptions::default();
     match case {
         SweepCase::Mlp { kind, case } => {
             let cfg = SystemConfig::for_kind(kind);
-            run_workload(kind, mlp::generate(case, &cfg, n_inf).expect("sweep case table is valid"))
+            run_workload(kind, mlp::generate(case, &cfg, n_inf).expect("sweep case table is valid"), &ro)
         }
         SweepCase::Lstm { kind, case, n_h } => {
             let cfg = SystemConfig::for_kind(kind);
-            run_workload(kind, lstm::generate(case, n_h, &cfg, n_inf).expect("sweep case table is valid"))
+            run_workload(kind, lstm::generate(case, n_h, &cfg, n_inf).expect("sweep case table is valid"), &ro)
         }
         SweepCase::Cnn { kind, case, variant } => {
             let cfg = SystemConfig::for_kind(kind);
-            run_workload(kind, cnn::generate(case, variant, &cfg, n_inf).expect("sweep case table is valid"))
+            run_workload(kind, cnn::generate(case, variant, &cfg, n_inf).expect("sweep case table is valid"), &ro)
         }
         SweepCase::CustomMlp { kind, shape, mapping } => run_workload(
             kind,
             mlp::generate_custom(shape, mapping, n_inf).expect("custom sweep case was pre-validated"),
+            &ro,
         ),
         SweepCase::Transformer { kind, shape, case } => run_workload(
             kind,
             transformer::generate(shape, case, n_inf).expect("transformer sweep case was pre-validated"),
+            &ro,
         ),
     }
 }

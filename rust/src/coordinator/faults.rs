@@ -29,7 +29,7 @@ use crate::util::parallel;
 use crate::workload::automap::{self, SearchOptions, TopologyBudget};
 use crate::workload::{compile, WorkloadError};
 
-use super::{run_workload, run_workload_with, CaseResult};
+use super::{run_workload, CaseResult, RunOptions};
 
 /// PCM drift exponent used by the sweep (Le Gallo et al., ~0.05).
 pub const DRIFT_NU: f64 = 0.05;
@@ -192,7 +192,7 @@ pub fn run_scenario(opts: &FaultScenarioOptions) -> Result<FaultReport, Workload
             (0..n_tiles).map(|t| (t, fault)).collect()
         };
         let w = compile::compile(&graph, &best.mapping, opts.n_inf)?;
-        let r = run_workload_with(opts.system, w, &faults)?;
+        let r = run_workload(opts.system, w, &RunOptions::with_faults(faults))?;
         Ok(FaultCurvePoint {
             intensity: x,
             plan,
@@ -217,8 +217,11 @@ pub fn run_scenario(opts: &FaultScenarioOptions) -> Result<FaultReport, Workload
                 )));
             }
             let fail_at_ps = cfg.cycles_to_ps(at_cycles);
-            let healthy =
-                run_workload(opts.system, compile::compile(&graph, &best.mapping, opts.n_inf)?)?;
+            let healthy = run_workload(
+                opts.system,
+                compile::compile(&graph, &best.mapping, opts.n_inf)?,
+                &RunOptions::default(),
+            )?;
             // Run with the injected hard failure: the machine must surface
             // a typed error, never panic. (A run short enough to finish
             // before touching the tile again simply completes.)
@@ -228,12 +231,15 @@ pub fn run_scenario(opts: &FaultScenarioOptions) -> Result<FaultReport, Workload
                 transient_period_ps: 0,
             };
             let w = compile::compile(&graph, &best.mapping, opts.n_inf)?;
-            let error = run_workload_with(opts.system, w, &[(tile, hard)]).err();
+            let error = run_workload(opts.system, w, &RunOptions::with_faults(vec![(tile, hard)])).err();
             // Graceful degradation: remap the tile's anchors to the
             // digital cores and re-simulate.
             let d = automap::degrade_mapping(&graph, &best.mapping, tile, &budget)?;
-            let degraded =
-                run_workload(opts.system, compile::compile(&graph, &d.mapping, opts.n_inf)?)?;
+            let degraded = run_workload(
+                opts.system,
+                compile::compile(&graph, &d.mapping, opts.n_inf)?,
+                &RunOptions::default(),
+            )?;
             Some(FailureOutcome {
                 tile,
                 fail_at_ps,

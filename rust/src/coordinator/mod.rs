@@ -38,30 +38,77 @@ impl CaseResult {
     }
 }
 
-/// Simulate one workload on one system configuration.
+/// Knobs of one simulation run — the single options struct every
+/// [`run_workload`] caller passes, replacing both the old
+/// `run_workload` / `run_workload_with(faults)` pair and the scattered
+/// `Machine::set_*` calls drivers used to make by hand. `Default`
+/// reproduces the knob-free run of previous releases bit-identically:
+/// no faults, fast-forward on (nested per the process-wide default),
+/// batched stream modeling on.
+#[derive(Clone, Debug)]
+pub struct RunOptions {
+    /// Per-tile fault models injected before the run (the `alpine
+    /// faults` scenario driver). Tile indices must be valid for the
+    /// workload's machine spec; empty is the fault-free path.
+    pub faults: Vec<(usize, TileFaultModel)>,
+    /// Replay-identical fast-forward over detected steady-state periods
+    /// (`Machine::set_fast_forward`).
+    pub fast_forward: bool,
+    /// `Some(_)` overrides the process-wide nested fast-forward default
+    /// for this run (`Machine::set_nested_fast_forward`); `None` keeps
+    /// it.
+    pub nested_ff: Option<bool>,
+    /// Charge MemStream lines in overlapped batches
+    /// (`Machine::set_batched_streams`).
+    pub batched_streams: bool,
+    /// Worker threads for drivers that simulate many workloads under
+    /// one options value (e.g. the automap validation fan-out); `None`
+    /// keeps each driver's own default. A single `run_workload` call
+    /// ignores it.
+    pub jobs: Option<usize>,
+}
+
+impl Default for RunOptions {
+    fn default() -> RunOptions {
+        RunOptions {
+            faults: Vec::new(),
+            fast_forward: true,
+            nested_ff: None,
+            batched_streams: true,
+            jobs: None,
+        }
+    }
+}
+
+impl RunOptions {
+    /// `Default` plus per-tile fault models.
+    pub fn with_faults(faults: Vec<(usize, TileFaultModel)>) -> RunOptions {
+        RunOptions { faults, ..RunOptions::default() }
+    }
+}
+
+/// Simulate one workload on one system configuration under the given
+/// [`RunOptions`].
 ///
 /// The workload is consumed in place: spec and traces move straight
 /// into the machine (the spec clone + trace copy this used to make cost
 /// a full trace duplication per case on the multi-megaop CNN sweeps).
 /// A machine-level failure (deadlock, injected tile fault) surfaces as
 /// a typed [`RunError`] instead of aborting the sweep.
-pub fn run_workload(kind: SystemKind, workload: Workload) -> Result<CaseResult, RunError> {
-    run_workload_with(kind, workload, &[])
-}
-
-/// [`run_workload`] with per-tile fault models injected before the run
-/// (the `alpine faults` scenario driver). Tile indices must be valid
-/// for the workload's machine spec. An empty slice is the fault-free
-/// path and stays bit-identical to [`run_workload`].
-pub fn run_workload_with(
+pub fn run_workload(
     kind: SystemKind,
     workload: Workload,
-    faults: &[(usize, TileFaultModel)],
+    opts: &RunOptions,
 ) -> Result<CaseResult, RunError> {
     let Workload { label, traces, spec, inferences } = workload;
     let cfg = SystemConfig::for_kind(kind);
     let mut machine = Machine::new(cfg.clone(), spec);
-    for &(tile, model) in faults {
+    machine.set_fast_forward(opts.fast_forward);
+    if let Some(nested) = opts.nested_ff {
+        machine.set_nested_fast_forward(nested);
+    }
+    machine.set_batched_streams(opts.batched_streams);
+    for &(tile, model) in &opts.faults {
         machine.set_tile_fault(tile, model);
     }
     let stats: RunStats = machine.run(traces)?;
@@ -107,7 +154,7 @@ mod tests {
     fn run_workload_produces_sane_result() {
         let cfg = SystemConfig::high_power();
         let w = mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2).unwrap();
-        let r = run_workload(SystemKind::HighPower, w).unwrap();
+        let r = run_workload(SystemKind::HighPower, w, &RunOptions::default()).unwrap();
         assert!(r.time_s > 0.0);
         assert!(r.energy.total_j() > 0.0);
         assert_eq!(r.aimc_processes, 4); // 2 layers x 2 inferences
@@ -120,11 +167,13 @@ mod tests {
         let dig = run_workload(
             SystemKind::HighPower,
             mlp::generate(MlpCase::Digital { cores: 1 }, &cfg, 2).unwrap(),
+            &RunOptions::default(),
         )
         .unwrap();
         let ana = run_workload(
             SystemKind::HighPower,
             mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2).unwrap(),
+            &RunOptions::default(),
         )
         .unwrap();
         let s = speedup(&dig, &ana);

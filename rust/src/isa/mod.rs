@@ -15,7 +15,7 @@
 //! a 32-bit argument register; Ra carries the count of valid packed
 //! inputs, Rn the input/output-memory index, Rd the destination.
 
-pub mod encoding;
+pub(crate) mod encoding;
 
 pub use encoding::{decode, encode, CmInstruction, CmOp, DecodeError};
 

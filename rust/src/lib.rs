@@ -30,3 +30,37 @@ pub mod sim;
 pub mod stats;
 pub mod util;
 pub mod workload;
+
+/// The one-import surface of the end-to-end flow: build a graph
+/// ([`nn::LayerGraph`] / [`nn::GraphBuilder`]), map it ([`workload::automap`]
+/// or a hand-written [`workload::compile::mapping::Mapping`]), compile it
+/// ([`workload::compile`]), and simulate it
+/// ([`coordinator::run_workload`] under [`coordinator::RunOptions`],
+/// optionally perturbed by an [`aimclib::faults::FaultPlan`]).
+///
+/// ```no_run
+/// use alpine::prelude::*;
+///
+/// let graph = LayerGraph::resnet_block(8, 4, 10);
+/// let cfg = SystemConfig::high_power();
+/// let budget = TopologyBudget::for_config(&cfg);
+/// let out = search(&graph, &budget, &cfg, 4).unwrap();
+/// let w = compile(&graph, &out.ranked[0].mapping, 5).unwrap();
+/// let r = run_workload(SystemKind::HighPower, w, &RunOptions::default()).unwrap();
+/// println!("{}: {:.3} us/inf", graph.name, r.time_per_inference_s * 1e6);
+/// ```
+pub mod prelude {
+    pub use crate::aimclib::faults::FaultPlan;
+    pub use crate::config::{SystemConfig, SystemKind};
+    pub use crate::coordinator::{run_workload, CaseResult, RunOptions};
+    pub use crate::nn::{
+        ActKind, GraphBuilder, GraphError, LayerGraph, LayerKind, MergeOp, NodeId,
+    };
+    pub use crate::sim::{RunError, TileFaultModel};
+    pub use crate::workload::automap::{
+        search, search_opts, SearchOptions, TopologyBudget,
+    };
+    pub use crate::workload::compile::{compile, validate};
+    pub use crate::workload::compile::mapping::Mapping;
+    pub use crate::workload::{Workload, WorkloadError};
+}

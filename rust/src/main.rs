@@ -12,7 +12,7 @@
 use alpine::config::{SystemConfig, SystemKind};
 use alpine::coordinator::automap::{self as automap_driver, AutomapOptions};
 use alpine::coordinator::faults::{self as faults_driver, FaultScenarioOptions};
-use alpine::coordinator::{experiments, run_workload};
+use alpine::coordinator::{experiments, run_workload, RunOptions};
 use alpine::nn::{CnnVariant, LayerGraph};
 use alpine::report;
 use alpine::runtime::{default_artifacts_dir, Runtime};
@@ -79,6 +79,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "run" => cmd_run(&args[1..]),
         "custom" => cmd_custom(&args[1..]),
         "automap" => cmd_automap(&args[1..]),
+        "resnet" => cmd_resnet(&args[1..]),
+        "moe" => cmd_moe(&args[1..]),
         "transformer" => cmd_transformer(&args[1..]),
         "faults" => cmd_faults(&args[1..]),
         "fig7" => {
@@ -162,6 +164,19 @@ fn print_help() {
          \x20                          --cap), validate the top-K by\n\
          \x20                          simulation, print the Pareto front\n\
          \x20                          on (cycles, energy)\n\
+         \x20 resnet [--hw N] [--ch N] [--classes N] [--cores N]\n\
+         \x20     [--tiles N] [--tile-dims RxC] [--channels N] [--top K]\n\
+         \x20     [--depth N] [--system hp|lp] [--inferences N]\n\
+         \x20                          automap + simulate a residual block\n\
+         \x20                          (fork/join DAG: conv-conv vs identity\n\
+         \x20                          skip, elementwise-add join)\n\
+         \x20 moe [--d-in N] [--d-model N] [--experts N] [--top-k K]\n\
+         \x20     [--classes N] [--cores N] [--tiles N] [--tile-dims RxC]\n\
+         \x20     [--channels N] [--top K] [--depth N] [--system hp|lp]\n\
+         \x20     [--inferences N]\n\
+         \x20                          automap + simulate a top-k mixture\n\
+         \x20                          of experts (replicas double as\n\
+         \x20                          expert parallelism)\n\
          \x20 transformer [--d-model N] [--heads N] [--seq N] [--layers N]\n\
          \x20     [--d-ff N] [--system hp|lp] [--inferences N]\n\
          \x20                          sweep the transformer-encoder hand\n\
@@ -248,7 +263,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
         }
         other => bail!("unknown workload {other:?}"),
     };
-    let r = run_workload(system, w)?;
+    let r = run_workload(system, w, &RunOptions::default())?;
     report::aggregate_table("run", std::slice::from_ref(&r)).print();
     report::roi_table("sub-ROI breakdown", std::slice::from_ref(&r)).print();
     Ok(())
@@ -303,7 +318,7 @@ fn cmd_custom(args: &[String]) -> Result<()> {
         let system = SystemKind::parse(&opt(args, "--system").unwrap_or_else(|| "hp".into()))
             .context("bad --system (hp|lp)")?;
         let w = mlp::generate_custom(shape, mapping, n)?;
-        let r = run_workload(system, w)?;
+        let r = run_workload(system, w, &RunOptions::default())?;
         report::aggregate_table(&format!("custom MLP {shape}"), std::slice::from_ref(&r)).print();
         report::roi_table("sub-ROI breakdown", std::slice::from_ref(&r)).print();
     } else {
@@ -344,23 +359,10 @@ fn parse_transformer_shape(args: &[String]) -> Result<TransformerShape> {
     )?)
 }
 
-/// `automap` — search the mapping space of an MLP or transformer chain
-/// under a topology budget, validate the top-K candidates on the
-/// simulator, and print the Pareto front on (cycles, energy).
-fn cmd_automap(args: &[String]) -> Result<()> {
-    let system = SystemKind::parse(&opt(args, "--system").unwrap_or_else(|| "hp".into()))
-        .context("bad --system (hp|lp)")?;
-    let cfg = SystemConfig::for_kind(system);
-    let graph: LayerGraph = if let Some(shape_s) = opt(args, "--shape") {
-        let shape = MlpShape::parse(&shape_s)?;
-        LayerGraph::mlp(shape.dims())
-    } else if opt(args, "--d-model").is_some() {
-        parse_transformer_shape(args)?.graph()
-    } else {
-        bail!("automap needs --shape AxBxC (MLP) or --d-model N [...] (transformer)");
-    };
-
-    let mut budget = TopologyBudget::for_config(&cfg);
+/// Topology budget from `--cores/--tiles/--channels/--tile-dims`,
+/// defaulting to the system's own configuration.
+fn parse_budget(args: &[String], cfg: &SystemConfig) -> Result<TopologyBudget> {
+    let mut budget = TopologyBudget::for_config(cfg);
     if let Some(v) = opt(args, "--cores") {
         budget.cores = v.parse().context("--cores expects a number >= 1")?;
     }
@@ -381,6 +383,26 @@ fn cmd_automap(args: &[String]) -> Result<()> {
     if budget.cores == 0 {
         bail!("--cores expects a number >= 1");
     }
+    Ok(budget)
+}
+
+/// `automap` — search the mapping space of an MLP or transformer chain
+/// under a topology budget, validate the top-K candidates on the
+/// simulator, and print the Pareto front on (cycles, energy).
+fn cmd_automap(args: &[String]) -> Result<()> {
+    let system = SystemKind::parse(&opt(args, "--system").unwrap_or_else(|| "hp".into()))
+        .context("bad --system (hp|lp)")?;
+    let cfg = SystemConfig::for_kind(system);
+    let graph: LayerGraph = if let Some(shape_s) = opt(args, "--shape") {
+        let shape = MlpShape::parse(&shape_s)?;
+        LayerGraph::mlp(shape.dims())
+    } else if opt(args, "--d-model").is_some() {
+        parse_transformer_shape(args)?.graph()
+    } else {
+        bail!("automap needs --shape AxBxC (MLP) or --d-model N [...] (transformer)");
+    };
+
+    let budget = parse_budget(args, &cfg)?;
 
     let model = match opt(args, "--cost-model").as_deref() {
         None | Some("compositional") => CostModel::Compositional,
@@ -450,6 +472,79 @@ fn cmd_automap(args: &[String]) -> Result<()> {
         rep.front().count(),
     );
     Ok(())
+}
+
+/// Shared driver of the DAG deliverable subcommands (`resnet`, `moe`):
+/// automap the fork/join graph under the budget, validate the winners
+/// end-to-end on the trace machine (nested fast-forward intact), and
+/// print the Pareto front.
+fn run_dag_search(graph: LayerGraph, args: &[String]) -> Result<()> {
+    let system = SystemKind::parse(&opt(args, "--system").unwrap_or_else(|| "hp".into()))
+        .context("bad --system (hp|lp)")?;
+    let cfg = SystemConfig::for_kind(system);
+    let budget = parse_budget(args, &cfg)?;
+    let opts = AutomapOptions {
+        top_k: opt_u32(args, "--top", 4)? as usize,
+        n_inf: opt_u32(args, "--inferences", 5)?,
+        jobs: parallel::jobs(),
+        depth: opt_u32(args, "--depth", 4)? as usize,
+        ..AutomapOptions::default()
+    };
+    println!("{}: searching {} (depth 1..{}) ...", args_cmd_name(&graph), graph.name, opts.depth);
+    let rep = automap_driver::run_search(&graph, &budget, system, opts)?;
+    report::automap_table(&format!("automap — {}", graph.name), &rep).print();
+    println!(
+        "best: {} — {:.2}x vs the all-digital single-core baseline; {} mapping(s) on the Pareto front",
+        rep.best_row().desc,
+        rep.speedup_vs_baseline(),
+        rep.front().count(),
+    );
+    Ok(())
+}
+
+/// Subcommand tag for progress lines (derived from the graph family).
+fn args_cmd_name(graph: &LayerGraph) -> &'static str {
+    if graph.name.starts_with("moe") {
+        "moe"
+    } else if graph.name.starts_with("resnet") {
+        "resnet"
+    } else {
+        "dag"
+    }
+}
+
+/// `resnet` — a residual block (two 3x3 convolutions forked around an
+/// identity skip, joined by an elementwise add) + classifier head,
+/// automapped and simulated end-to-end.
+fn cmd_resnet(args: &[String]) -> Result<()> {
+    let hw = opt_u32(args, "--hw", 8)? as u64;
+    let ch = opt_u32(args, "--ch", 4)? as u64;
+    let classes = opt_u32(args, "--classes", 10)? as u64;
+    if hw < 3 || ch < 1 || classes < 1 {
+        bail!("resnet needs --hw >= 3, --ch >= 1, --classes >= 1");
+    }
+    if (hw * hw * ch) % 4 != 0 {
+        bail!("resnet needs hw*hw*ch divisible by 4 (got {hw}x{hw}x{ch})");
+    }
+    run_dag_search(LayerGraph::resnet_block(hw, ch, classes), args)
+}
+
+/// `moe` — a top-k mixture-of-experts layer (router + expert bank, the
+/// replica axis doubling as expert parallelism) + classifier head,
+/// automapped and simulated end-to-end.
+fn cmd_moe(args: &[String]) -> Result<()> {
+    let d_in = opt_u32(args, "--d-in", 64)? as u64;
+    let d_model = opt_u32(args, "--d-model", 32)? as u64;
+    let experts = opt_u32(args, "--experts", 4)? as u64;
+    let top_k = opt_u32(args, "--top-k", 2)? as u64;
+    let classes = opt_u32(args, "--classes", 10)? as u64;
+    if experts < 1 || top_k < 1 || top_k > experts {
+        bail!("moe needs --experts >= 1 and --top-k in 1..=experts");
+    }
+    if d_in < 4 || d_in % 4 != 0 {
+        bail!("moe needs --d-in to be a multiple of 4");
+    }
+    run_dag_search(LayerGraph::moe(d_in, d_model, experts, top_k, classes), args)
 }
 
 /// `transformer` — sweep the hand-written transformer-encoder mappings

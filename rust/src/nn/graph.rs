@@ -4,10 +4,28 @@
 //! nodes with shapes, independent of how (or where) each layer executes.
 //! The paper's three explorations are instances of it (`LayerGraph::mlp`
 //! / `lstm` / `cnn`), and arbitrary graphs can be built for new
-//! workloads. Execution placement — which core runs a layer, whether its
-//! MVM goes to the SIMD pipeline or an AIMC tile, how stages pipeline —
-//! lives in `workload::compile::Mapping`; the pair is lowered to per-core
-//! traces by `workload::compile::compile`.
+//! workloads — including true multi-branch dataflow: residual blocks
+//! ([`LayerGraph::resnet_block`]), transformers with genuinely parallel
+//! attention-head branches ([`LayerGraph::transformer_parallel`]) and
+//! mixture-of-experts layers ([`LayerGraph::moe`]). Execution placement
+//! — which core runs a layer, whether its MVM goes to the SIMD pipeline
+//! or an AIMC tile, how stages pipeline — lives in
+//! `workload::compile::Mapping`; the pair is lowered to per-core traces
+//! by `workload::compile::compile`.
+//!
+//! Graphs are built either through the chain helpers (`add` / `chain`,
+//! kept for the legacy constructors) or the fluent [`GraphBuilder`]:
+//!
+//! ```
+//! use alpine::nn::{GraphBuilder, LayerKind, MergeOp};
+//! let mut b = GraphBuilder::new("residual");
+//! let x = b.input(256, 68, 64);
+//! let d = b.layer(LayerKind::Dense { rows: 64, cols: 64, weight_slot: 0 }).after(&[x]);
+//! let m = b.layer(LayerKind::Merge { op: MergeOp::Add, elems: 64 }).after(&[d, x]);
+//! b.layer(LayerKind::Output { bytes: 256 }).after(&[m]);
+//! let g = b.finish().unwrap();
+//! assert_eq!(g.nodes.len(), 4);
+//! ```
 //!
 //! This mirrors the mapping flow of end-to-end AIMC compilers (Bruschi
 //! et al., Garofalo et al.): network description first, placement second,
@@ -15,6 +33,8 @@
 
 use crate::nn::cnn::CnnLayer;
 use crate::nn::{CnnModel, LstmModel, MlpModel};
+use std::collections::BTreeSet;
+use std::fmt;
 
 /// Index of a node in `LayerGraph::nodes`.
 pub type NodeId = usize;
@@ -24,6 +44,16 @@ pub type NodeId = usize;
 pub enum ActKind {
     Relu,
     Softmax,
+}
+
+/// How a multi-input [`LayerKind::Merge`] node combines its branches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeOp {
+    /// Elementwise sum of equally-shaped branches (residual add).
+    Add,
+    /// Concatenation of branch activations (multi-head joins); the
+    /// predecessor widths must sum to the node's `elems`.
+    Concat,
 }
 
 /// One typed layer of the graph, with everything the mapping compiler
@@ -60,6 +90,12 @@ pub enum LayerKind {
     /// SIMD / scalar-FP instruction budgets.
     Elementwise { simd_insts: u64, fp_insts: u64 },
 
+    /// Fork/join merge point of a DAG: combines every predecessor branch
+    /// into one `elems`-wide activation. `Add` requires every branch to
+    /// produce exactly `elems`; `Concat` requires the branch widths to
+    /// sum to `elems` (validated by [`LayerGraph::validate`]).
+    Merge { op: MergeOp, elems: u64 },
+
     /// Multi-head self-attention for one token step against a cached
     /// sequence of `seq` keys/values (transformer-encoder workloads).
     /// The four `d_model x d_model` projection matrices (Wq|Wk|Wv|Wo)
@@ -69,6 +105,23 @@ pub enum LayerKind {
     /// therefore always lower digitally (a PCM crossbar cannot be
     /// re-programmed per token).
     Attention { d_model: u64, heads: u64, seq: u64, weight_slot: usize },
+
+    /// One attention head's score/softmax/context block against a
+    /// `seq`-deep K/V cache at `addr::kv(kv_slot)` — the per-branch
+    /// counterpart of the fused `Attention` node, used when heads are
+    /// genuinely parallel graph branches (one QKV `Dense` + one
+    /// `AttnHead` per branch, joined by a `Merge::Concat`). Always
+    /// lowers digitally, like the score block of `Attention`.
+    AttnHead { d_head: u64, seq: u64, kv_slot: usize },
+
+    /// Mixture-of-experts layer: `experts` dense expert matrices of
+    /// `rows x cols` each, a `rows x experts` digital router, and a
+    /// digital top-`top_k` combine. Only the `top_k` routed experts run
+    /// per inference. Under automap column replication the layer becomes
+    /// expert-parallel: every replica holds a `cols / r` column slice of
+    /// *all* experts (one `rows x (experts * cols / r)` AIMC region),
+    /// routes redundantly and computes its slice of the routed experts.
+    MoE { rows: u64, cols: u64, experts: u64, top_k: u64, weight_slot: usize },
 
     /// Layer normalization over `elems` values (mean/variance reduction
     /// plus per-element normalize, scale and shift).
@@ -83,6 +136,8 @@ impl LayerKind {
     /// of elements queued into an AIMC tile mapped to this layer).
     /// `Attention` deliberately returns `None`: it is four MVMs plus a
     /// digital score block, placed through `Place::AttentionTiles`.
+    /// `MoE` also returns `None`: its expert bank is placed through the
+    /// dedicated MoE lowering, not the generic single-matrix path.
     pub fn mvm_rows(&self) -> Option<u64> {
         match self {
             LayerKind::Dense { rows, .. } => Some(*rows),
@@ -101,7 +156,116 @@ impl LayerKind {
             _ => None,
         }
     }
+
+    /// Activation width (in 4-byte words) flowing out of this layer,
+    /// given the width flowing in. The single width rule shared by graph
+    /// validation (join shape agreement) and the automap anchor carving,
+    /// so the two can never disagree.
+    pub fn out_width(&self, inherited: u64) -> u64 {
+        match self {
+            LayerKind::Input { raw_bytes, .. } => *raw_bytes,
+            LayerKind::Dense { cols, .. } => *cols,
+            LayerKind::Conv2d { layer, .. } => {
+                layer.pooled_hw() * layer.pooled_hw() * layer.out_ch / 4
+            }
+            LayerKind::LstmCell { n_h, .. } => *n_h,
+            LayerKind::Attention { d_model, .. } => *d_model,
+            LayerKind::AttnHead { d_head, .. } => *d_head,
+            LayerKind::Pool { elems, .. } => elems / 4,
+            LayerKind::Merge { elems, .. } => *elems,
+            LayerKind::MoE { cols, .. } => *cols,
+            _ => inherited,
+        }
+    }
 }
+
+/// A structural or shape defect of a [`LayerGraph`], reported by
+/// [`LayerGraph::validate`] / [`GraphBuilder::finish`]. Converts into
+/// `workload::WorkloadError::InvalidGraph` at the compile boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GraphError {
+    /// The graph has no nodes.
+    Empty,
+    /// An edge references a node id past the node list.
+    EdgeOutOfBounds { from: NodeId, to: NodeId },
+    /// A node feeds itself.
+    SelfLoop { node: NodeId },
+    /// The same `(producer, consumer)` edge appears twice.
+    DuplicateEdge { from: NodeId, to: NodeId },
+    /// The graph is not acyclic; `node` is on a cycle.
+    Cycle { node: NodeId },
+    /// A non-`Input` node has no producers.
+    Unreachable { node: NodeId },
+    /// A fork branch never rejoins: a non-`Output` node has no
+    /// consumers.
+    DanglingFork { node: NodeId },
+    /// An `Input` node has incoming edges.
+    InputHasPreds { node: NodeId },
+    /// An `Output` node has outgoing edges.
+    OutputHasSuccs { node: NodeId },
+    /// The graph must contain exactly one `Input` node.
+    InputCount { found: usize },
+    /// The graph must contain exactly one `Output` node.
+    OutputCount { found: usize },
+    /// Only `Merge` nodes may join multiple branches.
+    MultiInput { node: NodeId, preds: usize },
+    /// A `Merge` node needs at least two branches to join.
+    JoinArity { node: NodeId, preds: usize },
+    /// A branch flowing into a join has the wrong width.
+    JoinShapeMismatch { node: NodeId, expected: u64, got: u64 },
+    /// A `MoE` node's expert/top-k/shape parameters are inconsistent.
+    BadMoE { node: NodeId, reason: &'static str },
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::Empty => write!(f, "graph has no nodes"),
+            GraphError::EdgeOutOfBounds { from, to } => {
+                write!(f, "edge ({from}, {to}) references a node past the node list")
+            }
+            GraphError::SelfLoop { node } => write!(f, "node {node} feeds itself"),
+            GraphError::DuplicateEdge { from, to } => {
+                write!(f, "duplicate edge ({from}, {to})")
+            }
+            GraphError::Cycle { node } => {
+                write!(f, "graph contains a cycle through node {node}")
+            }
+            GraphError::Unreachable { node } => {
+                write!(f, "node {node} has no producers and is not an Input")
+            }
+            GraphError::DanglingFork { node } => {
+                write!(f, "dangling fork branch: node {node} has no consumers and is not an Output")
+            }
+            GraphError::InputHasPreds { node } => {
+                write!(f, "Input node {node} has incoming edges")
+            }
+            GraphError::OutputHasSuccs { node } => {
+                write!(f, "Output node {node} has outgoing edges")
+            }
+            GraphError::InputCount { found } => {
+                write!(f, "graph needs exactly one Input node, found {found}")
+            }
+            GraphError::OutputCount { found } => {
+                write!(f, "graph needs exactly one Output node, found {found}")
+            }
+            GraphError::MultiInput { node, preds } => {
+                write!(f, "node {node} joins {preds} branches but only Merge nodes may join")
+            }
+            GraphError::JoinArity { node, preds } => {
+                write!(f, "Merge node {node} joins {preds} branch(es), needs at least 2")
+            }
+            GraphError::JoinShapeMismatch { node, expected, got } => {
+                write!(f, "join shape mismatch at node {node}: branch width {got} vs {expected}")
+            }
+            GraphError::BadMoE { node, reason } => {
+                write!(f, "MoE node {node}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
 
 /// A node of the layer graph.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -140,6 +304,191 @@ impl LayerGraph {
 
     pub fn node(&self, id: NodeId) -> Option<&LayerNode> {
         self.nodes.get(id)
+    }
+
+    /// Producers of `id`, in edge-insertion order.
+    pub fn preds(&self, id: NodeId) -> Vec<NodeId> {
+        self.edges.iter().filter(|&&(_, b)| b == id).map(|&(a, _)| a).collect()
+    }
+
+    /// Consumers of `id`, in edge-insertion order.
+    pub fn succs(&self, id: NodeId) -> Vec<NodeId> {
+        self.edges.iter().filter(|&&(a, _)| a == id).map(|&(_, b)| b).collect()
+    }
+
+    /// Is this the classic linear chain (`edges[i] == (i, i + 1)`)? Such
+    /// graphs take the exact pre-DAG compile and automap paths and stay
+    /// bit-identical to them.
+    pub fn is_chain(&self) -> bool {
+        self.edges.len() + 1 == self.nodes.len()
+            && self.edges.iter().enumerate().all(|(i, &(a, b))| a == i && b == i + 1)
+    }
+
+    /// Kahn topological order with a smallest-id-first tie-break, so
+    /// branch nodes created consecutively stay consecutive in the
+    /// linearization (and a chain graph linearizes to `0..n`).
+    /// Deterministic; errors on cycles or out-of-range edges.
+    pub fn topo_order(&self) -> Result<Vec<NodeId>, GraphError> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        let mut succs: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for &(a, b) in &self.edges {
+            if a >= n || b >= n {
+                return Err(GraphError::EdgeOutOfBounds { from: a, to: b });
+            }
+            if a == b {
+                return Err(GraphError::SelfLoop { node: a });
+            }
+            indeg[b] += 1;
+            succs[a].push(b);
+        }
+        let mut ready: BTreeSet<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order: Vec<NodeId> = Vec::with_capacity(n);
+        while let Some(&id) = ready.iter().next() {
+            ready.remove(&id);
+            order.push(id);
+            for &s in &succs[id] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    ready.insert(s);
+                }
+            }
+        }
+        if order.len() != n {
+            let node = (0..n).find(|&i| indeg[i] > 0).unwrap_or(0);
+            return Err(GraphError::Cycle { node });
+        }
+        Ok(order)
+    }
+
+    /// Activation width (4-byte words) flowing out of every node,
+    /// computed in topological order with [`LayerKind::out_width`]. A
+    /// multi-pred node inherits from its first predecessor (only `Merge`
+    /// nodes may have several, and they never inherit).
+    pub fn node_widths(&self) -> Result<Vec<u64>, GraphError> {
+        let order = self.topo_order()?;
+        let mut widths = vec![0u64; self.nodes.len()];
+        for id in order {
+            let inherited = self.preds(id).first().map(|&p| widths[p]).unwrap_or(0);
+            widths[id] = self.nodes[id].kind.out_width(inherited);
+        }
+        Ok(widths)
+    }
+
+    /// Full structural + shape validation: in-bounds deduplicated edges,
+    /// acyclicity, exactly one `Input` and one `Output`, no dangling
+    /// fork branches or unreachable nodes, joins only at `Merge` nodes,
+    /// and width agreement at every join (`Add`: every branch equals
+    /// `elems`; `Concat`: branch widths sum to `elems`).
+    pub fn validate(&self) -> Result<(), GraphError> {
+        if self.nodes.is_empty() {
+            return Err(GraphError::Empty);
+        }
+        let mut seen: BTreeSet<(NodeId, NodeId)> = BTreeSet::new();
+        for &(a, b) in &self.edges {
+            if a >= self.nodes.len() || b >= self.nodes.len() {
+                return Err(GraphError::EdgeOutOfBounds { from: a, to: b });
+            }
+            if !seen.insert((a, b)) {
+                return Err(GraphError::DuplicateEdge { from: a, to: b });
+            }
+        }
+        let widths = self.node_widths()?; // checks self-loops + cycles
+        let inputs = self
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, LayerKind::Input { .. }))
+            .count();
+        if inputs != 1 {
+            return Err(GraphError::InputCount { found: inputs });
+        }
+        let outputs = self
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, LayerKind::Output { .. }))
+            .count();
+        if outputs != 1 {
+            return Err(GraphError::OutputCount { found: outputs });
+        }
+        for node in &self.nodes {
+            let preds = self.preds(node.id);
+            let succs = self.succs(node.id);
+            match node.kind {
+                LayerKind::Input { .. } => {
+                    if !preds.is_empty() {
+                        return Err(GraphError::InputHasPreds { node: node.id });
+                    }
+                }
+                _ if preds.is_empty() => {
+                    return Err(GraphError::Unreachable { node: node.id });
+                }
+                _ => {}
+            }
+            match node.kind {
+                LayerKind::Output { .. } => {
+                    if !succs.is_empty() {
+                        return Err(GraphError::OutputHasSuccs { node: node.id });
+                    }
+                }
+                _ if succs.is_empty() => {
+                    return Err(GraphError::DanglingFork { node: node.id });
+                }
+                _ => {}
+            }
+            match node.kind {
+                LayerKind::Merge { op, elems } => {
+                    if preds.len() < 2 {
+                        return Err(GraphError::JoinArity { node: node.id, preds: preds.len() });
+                    }
+                    match op {
+                        MergeOp::Add => {
+                            for &p in &preds {
+                                if widths[p] != elems {
+                                    return Err(GraphError::JoinShapeMismatch {
+                                        node: node.id,
+                                        expected: elems,
+                                        got: widths[p],
+                                    });
+                                }
+                            }
+                        }
+                        MergeOp::Concat => {
+                            let sum: u64 = preds.iter().map(|&p| widths[p]).sum();
+                            if sum != elems {
+                                return Err(GraphError::JoinShapeMismatch {
+                                    node: node.id,
+                                    expected: elems,
+                                    got: sum,
+                                });
+                            }
+                        }
+                    }
+                }
+                LayerKind::MoE { rows, cols, experts, top_k, .. } => {
+                    if experts == 0 {
+                        return Err(GraphError::BadMoE { node: node.id, reason: "experts == 0" });
+                    }
+                    if top_k == 0 || top_k > experts {
+                        return Err(GraphError::BadMoE {
+                            node: node.id,
+                            reason: "top_k must be in 1..=experts",
+                        });
+                    }
+                    if rows == 0 || cols == 0 {
+                        return Err(GraphError::BadMoE { node: node.id, reason: "empty expert matrix" });
+                    }
+                    if preds.len() != 1 {
+                        return Err(GraphError::MultiInput { node: node.id, preds: preds.len() });
+                    }
+                }
+                _ => {
+                    if preds.len() > 1 {
+                        return Err(GraphError::MultiInput { node: node.id, preds: preds.len() });
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// An MLP as a linear chain: `dims = [in, h1, .., out]` gives
@@ -202,6 +551,12 @@ impl LayerGraph {
     /// d_model) -> residual; a final LayerNorm precedes the output.
     /// Weight slots: layer `l` uses `3l` (packed Wq|Wk|Wv|Wo), `3l + 1`
     /// (FFN up) and `3l + 2` (FFN down).
+    ///
+    /// The residuals here are *linear-chain* `Elementwise` stages (the
+    /// skip connection is folded into the node's instruction budget), so
+    /// the graph compiles through the exact pre-DAG path. For residuals
+    /// as true fork/join branches — and per-head branch parallelism —
+    /// see [`LayerGraph::transformer_parallel`].
     pub fn transformer(d_model: u64, heads: u64, seq: u64, layers: u64, d_ff: u64) -> LayerGraph {
         assert!(layers >= 1, "a transformer needs at least one encoder layer");
         assert!(heads >= 1 && d_model % heads == 0, "heads must divide d_model");
@@ -256,6 +611,234 @@ impl LayerGraph {
         }
         g.chain(prev, LayerKind::Output { bytes: m.dense[2] });
         g
+    }
+
+    /// A residual CNN basic block with a classifier head — the smallest
+    /// true fork/join graph: a stem conv produces `x`, a two-conv branch
+    /// computes `F(x)`, and a `Merge::Add` joins `F(x) + x` (the
+    /// identity shortcut is a real second graph edge, not a folded
+    /// instruction budget). All convs are 3x3 stride-1 pad-1 with `ch`
+    /// channels over an `hw x hw` map, so both branches agree on the
+    /// `hw * hw * ch / 4`-word join width. Weight slots: stem 0, branch
+    /// 1 and 2, head dense 3.
+    pub fn resnet_block(hw: u64, ch: u64, classes: u64) -> LayerGraph {
+        assert!(hw >= 3 && ch >= 1 && classes >= 1, "resnet_block needs hw >= 3, ch, classes >= 1");
+        assert_eq!((hw * hw * ch) % 4, 0, "hw * hw * ch must be a multiple of 4");
+        let conv = |name: &'static str| CnnLayer {
+            name,
+            in_hw: hw,
+            in_ch: ch,
+            kernel: 3,
+            out_ch: ch,
+            stride: 1,
+            pad: 1,
+            pool: 1,
+            pool_stride: 1,
+            lrn: false,
+        };
+        let width = hw * hw * ch / 4;
+        let image_bytes = hw * hw * ch;
+        let mut b = GraphBuilder::new(format!("resnet[{hw}x{hw}x{ch}c{classes}]"));
+        let input = b.input(image_bytes, 0, image_bytes);
+        let stem = b
+            .layer(LayerKind::Conv2d { layer: conv("rb_stem"), weight_slot: 0 })
+            .after(&[input]);
+        let f1 = b
+            .layer(LayerKind::Conv2d { layer: conv("rb_conv_a"), weight_slot: 1 })
+            .after(&[stem]);
+        let f2 = b
+            .layer(LayerKind::Conv2d { layer: conv("rb_conv_b"), weight_slot: 2 })
+            .after(&[f1]);
+        let add = b
+            .layer(LayerKind::Merge { op: MergeOp::Add, elems: width })
+            .after(&[f2, stem]);
+        let relu = b
+            .layer(LayerKind::Activation { kind: ActKind::Relu, elems: hw * hw * ch })
+            .after(&[add]);
+        let head = b
+            .layer(LayerKind::Dense { rows: width, cols: classes, weight_slot: 3 })
+            .after(&[relu]);
+        let sm = b
+            .layer(LayerKind::Activation { kind: ActKind::Softmax, elems: classes })
+            .after(&[head]);
+        b.layer(LayerKind::Output { bytes: 4 * classes }).after(&[sm]);
+        b.finish().expect("resnet_block constructs a valid graph")
+    }
+
+    /// A pre-norm transformer encoder with **genuinely parallel
+    /// attention-head branches**: each head is its own graph branch (a
+    /// `d_model x 3*d_head` QKV `Dense` followed by an [`AttnHead`]
+    /// score block), the heads join through a `Merge::Concat`, and both
+    /// residuals are true fork/join `Merge::Add` joins — so automap can
+    /// place heads on disjoint cores/tiles and pipeline them
+    /// branch-parallel. Weight slots: layer `l` uses `l * (heads + 3) +
+    /// h` for head `h`'s QKV, `.. + heads` for Wo, `.. + heads + 1` /
+    /// `.. + heads + 2` for the FFN; head `h`'s KV cache lives at slot
+    /// `l * heads + h`.
+    ///
+    /// [`AttnHead`]: LayerKind::AttnHead
+    pub fn transformer_parallel(
+        d_model: u64,
+        heads: u64,
+        seq: u64,
+        layers: u64,
+        d_ff: u64,
+    ) -> LayerGraph {
+        assert!(layers >= 1, "a transformer needs at least one encoder layer");
+        assert!(heads >= 1 && d_model % heads == 0, "heads must divide d_model");
+        let d_head = d_model / heads;
+        let mut b = GraphBuilder::new(format!(
+            "transformer-par[d{d_model}h{heads}s{seq}l{layers}f{d_ff}]"
+        ));
+        let mut x = b.input(4 * d_model, d_model / 4 + 40, d_model);
+        for l in 0..layers as usize {
+            let slot0 = l * (heads as usize + 3);
+            let ln1 = b.layer(LayerKind::LayerNorm { elems: d_model }).after(&[x]);
+            let head_outs: Vec<NodeId> = (0..heads as usize)
+                .map(|h| {
+                    let qkv = b
+                        .layer(LayerKind::Dense {
+                            rows: d_model,
+                            cols: 3 * d_head,
+                            weight_slot: slot0 + h,
+                        })
+                        .after(&[ln1]);
+                    b.layer(LayerKind::AttnHead {
+                        d_head,
+                        seq,
+                        kv_slot: l * heads as usize + h,
+                    })
+                    .after(&[qkv])
+                })
+                .collect();
+            let cat = b
+                .layer(LayerKind::Merge { op: MergeOp::Concat, elems: d_model })
+                .after(&head_outs);
+            let wo = b
+                .layer(LayerKind::Dense {
+                    rows: d_model,
+                    cols: d_model,
+                    weight_slot: slot0 + heads as usize,
+                })
+                .after(&[cat]);
+            let add1 = b
+                .layer(LayerKind::Merge { op: MergeOp::Add, elems: d_model })
+                .after(&[wo, x]);
+            let ln2 = b.layer(LayerKind::LayerNorm { elems: d_model }).after(&[add1]);
+            let ff1 = b
+                .layer(LayerKind::Dense {
+                    rows: d_model,
+                    cols: d_ff,
+                    weight_slot: slot0 + heads as usize + 1,
+                })
+                .after(&[ln2]);
+            let relu = b
+                .layer(LayerKind::Activation { kind: ActKind::Relu, elems: d_ff })
+                .after(&[ff1]);
+            let ff2 = b
+                .layer(LayerKind::Dense {
+                    rows: d_ff,
+                    cols: d_model,
+                    weight_slot: slot0 + heads as usize + 2,
+                })
+                .after(&[relu]);
+            x = b
+                .layer(LayerKind::Merge { op: MergeOp::Add, elems: d_model })
+                .after(&[ff2, add1]);
+        }
+        let ln = b.layer(LayerKind::LayerNorm { elems: d_model }).after(&[x]);
+        b.layer(LayerKind::Output { bytes: 4 * d_model }).after(&[ln]);
+        b.finish().expect("transformer_parallel constructs a valid graph")
+    }
+
+    /// A single mixture-of-experts classifier: router + `experts` expert
+    /// matrices of `d_in x d_model` (top-`top_k` routed per inference),
+    /// ReLU, and a dense head to `classes` outputs. A linear chain at
+    /// the graph level — the expert parallelism lives inside the
+    /// [`LayerKind::MoE`] node, where automap's column replication
+    /// slices every expert across cores. Weight slots: expert bank 0,
+    /// head dense 1.
+    pub fn moe(d_in: u64, d_model: u64, experts: u64, top_k: u64, classes: u64) -> LayerGraph {
+        assert!(experts >= 1 && top_k >= 1 && top_k <= experts, "top_k must be in 1..=experts");
+        let mut b = GraphBuilder::new(format!("moe[{d_in}x{d_model}e{experts}k{top_k}c{classes}]"));
+        let input = b.input(4 * d_in, d_in / 4 + 40, d_in);
+        let moe = b
+            .layer(LayerKind::MoE { rows: d_in, cols: d_model, experts, top_k, weight_slot: 0 })
+            .after(&[input]);
+        let relu = b
+            .layer(LayerKind::Activation { kind: ActKind::Relu, elems: d_model })
+            .after(&[moe]);
+        let head = b
+            .layer(LayerKind::Dense { rows: d_model, cols: classes, weight_slot: 1 })
+            .after(&[relu]);
+        let sm = b
+            .layer(LayerKind::Activation { kind: ActKind::Softmax, elems: classes })
+            .after(&[head]);
+        b.layer(LayerKind::Output { bytes: 4 * classes }).after(&[sm]);
+        b.finish().expect("moe constructs a valid graph")
+    }
+}
+
+/// Fluent DAG constructor: `input(..)` once, `layer(kind).after(&[..])`
+/// per node, `finish()` to validate and take the graph. Node ids are
+/// assigned in call order, so builders produce the same ids as the
+/// legacy `add`/`chain` helpers would.
+pub struct GraphBuilder {
+    graph: LayerGraph,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>) -> GraphBuilder {
+        GraphBuilder { graph: LayerGraph::new(name) }
+    }
+
+    /// Add the graph's `Input` node (fp32 `bytes`, `marshal_insts` of
+    /// AIMClib marshalling, int8 `raw_bytes`).
+    pub fn input(&mut self, bytes: u64, marshal_insts: u64, raw_bytes: u64) -> NodeId {
+        self.graph.add(LayerKind::Input { bytes, marshal_insts, raw_bytes })
+    }
+
+    /// Add a layer node; wire its producers with
+    /// [`PendingNode::after`].
+    pub fn layer(&mut self, kind: LayerKind) -> PendingNode<'_> {
+        let id = self.graph.add(kind);
+        PendingNode { builder: self, id }
+    }
+
+    /// Validate and return the finished graph.
+    pub fn finish(self) -> Result<LayerGraph, GraphError> {
+        self.graph.validate()?;
+        Ok(self.graph)
+    }
+
+    /// The graph built so far, without validation (tests of the
+    /// validator itself use this to construct deliberately bad graphs).
+    pub fn into_unvalidated(self) -> LayerGraph {
+        self.graph
+    }
+}
+
+/// A freshly added node awaiting its input edges.
+pub struct PendingNode<'a> {
+    builder: &'a mut GraphBuilder,
+    id: NodeId,
+}
+
+impl PendingNode<'_> {
+    /// Wire this node after the given producers (edge order is
+    /// preserved — it is the branch order a `Merge::Concat` joins in)
+    /// and return its id.
+    pub fn after(self, preds: &[NodeId]) -> NodeId {
+        for &p in preds {
+            self.builder.graph.edges.push((p, self.id));
+        }
+        self.id
+    }
+
+    /// The node's id without wiring any inputs (only valid for nodes
+    /// that legitimately have none).
+    pub fn id(self) -> NodeId {
+        self.id
     }
 }
 
@@ -332,9 +915,164 @@ mod tests {
     #[test]
     fn chain_edges_connect() {
         let g = LayerGraph::mlp(&[8, 4]);
+        assert!(g.is_chain());
         for (i, (a, b)) in g.edges.iter().enumerate() {
             assert_eq!(*a, i);
             assert_eq!(*b, i + 1);
         }
+    }
+
+    #[test]
+    fn legacy_constructors_validate() {
+        LayerGraph::mlp(&[64, 32, 16]).validate().unwrap();
+        LayerGraph::lstm(&LstmModel::paper(256)).validate().unwrap();
+        LayerGraph::transformer(64, 2, 16, 1, 128).validate().unwrap();
+        LayerGraph::cnn(&CnnModel::paper(crate::nn::CnnVariant::Fast)).validate().unwrap();
+    }
+
+    #[test]
+    fn builder_matches_chain_construction() {
+        let legacy = LayerGraph::mlp(&[64, 32]);
+        let mut b = GraphBuilder::new("mlp[64x32]");
+        let i = b.input(256, 56, 64);
+        let d = b.layer(LayerKind::Dense { rows: 64, cols: 32, weight_slot: 0 }).after(&[i]);
+        let r = b.layer(LayerKind::Activation { kind: ActKind::Relu, elems: 32 }).after(&[d]);
+        b.layer(LayerKind::Output { bytes: 128 }).after(&[r]);
+        let g = b.finish().unwrap();
+        assert_eq!(g, legacy);
+    }
+
+    #[test]
+    fn topo_order_is_min_id_kahn() {
+        let g = LayerGraph::resnet_block(8, 4, 10);
+        let order = g.topo_order().unwrap();
+        // Construction order is already topological here.
+        assert_eq!(order, (0..g.nodes.len()).collect::<Vec<_>>());
+        assert!(!g.is_chain());
+    }
+
+    #[test]
+    fn node_widths_follow_branches() {
+        let g = LayerGraph::transformer_parallel(64, 2, 16, 1, 128);
+        g.validate().unwrap();
+        let w = g.node_widths().unwrap();
+        // Input and every residual join carry d_model words.
+        assert_eq!(w[0], 64);
+        for n in &g.nodes {
+            match n.kind {
+                LayerKind::AttnHead { .. } => assert_eq!(w[n.id], 32),
+                LayerKind::Merge { .. } => assert_eq!(w[n.id], 64),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn validate_detects_cycles() {
+        let mut g = LayerGraph::new("cyclic");
+        let i = g.add(LayerKind::Input { bytes: 64, marshal_insts: 4, raw_bytes: 16 });
+        let a = g.chain(i, LayerKind::Dense { rows: 16, cols: 16, weight_slot: 0 });
+        let m = g.add(LayerKind::Merge { op: MergeOp::Add, elems: 16 });
+        g.edges.push((a, m));
+        g.edges.push((m, a)); // cycle a -> m -> a
+        g.chain(m, LayerKind::Output { bytes: 64 });
+        assert!(matches!(g.validate(), Err(GraphError::Cycle { .. })));
+    }
+
+    #[test]
+    fn validate_detects_join_shape_mismatch() {
+        let mut b = GraphBuilder::new("bad-join");
+        let i = b.input(256, 56, 64);
+        let a = b.layer(LayerKind::Dense { rows: 64, cols: 32, weight_slot: 0 }).after(&[i]);
+        let c = b.layer(LayerKind::Dense { rows: 64, cols: 64, weight_slot: 1 }).after(&[i]);
+        let m = b.layer(LayerKind::Merge { op: MergeOp::Add, elems: 64 }).after(&[a, c]);
+        b.layer(LayerKind::Output { bytes: 256 }).after(&[m]);
+        assert!(matches!(
+            b.finish(),
+            Err(GraphError::JoinShapeMismatch { expected: 64, got: 32, .. })
+        ));
+    }
+
+    #[test]
+    fn validate_detects_dangling_fork() {
+        let mut b = GraphBuilder::new("dangling");
+        let i = b.input(256, 56, 64);
+        let a = b.layer(LayerKind::Dense { rows: 64, cols: 64, weight_slot: 0 }).after(&[i]);
+        // Second branch forks off the input and never rejoins.
+        let dead = b.layer(LayerKind::Dense { rows: 64, cols: 64, weight_slot: 1 }).after(&[i]);
+        b.layer(LayerKind::Output { bytes: 256 }).after(&[a]);
+        let err = b.finish().unwrap_err();
+        assert_eq!(err, GraphError::DanglingFork { node: dead });
+    }
+
+    #[test]
+    fn validate_rejects_non_merge_joins() {
+        let mut b = GraphBuilder::new("bad-multi");
+        let i = b.input(256, 56, 64);
+        let a = b.layer(LayerKind::Dense { rows: 64, cols: 64, weight_slot: 0 }).after(&[i]);
+        // LayerNorm cannot join two branches.
+        let ln = b.layer(LayerKind::LayerNorm { elems: 64 }).after(&[a, i]);
+        b.layer(LayerKind::Output { bytes: 256 }).after(&[ln]);
+        assert!(matches!(b.finish(), Err(GraphError::MultiInput { preds: 2, .. })));
+    }
+
+    #[test]
+    fn resnet_block_shape() {
+        let g = LayerGraph::resnet_block(16, 8, 10);
+        g.validate().unwrap();
+        // input, stem, conv_a, conv_b, add, relu, dense, softmax, output
+        assert_eq!(g.nodes.len(), 9);
+        assert_eq!(g.edges.len(), 9); // chain edges + the skip edge
+        assert_eq!(g.preds(4), vec![3, 1]); // add joins conv_b and the stem
+        let w = g.node_widths().unwrap();
+        assert_eq!(w[1], 16 * 16 * 8 / 4);
+        assert_eq!(w[4], 16 * 16 * 8 / 4);
+    }
+
+    #[test]
+    fn transformer_parallel_shape() {
+        let g = LayerGraph::transformer_parallel(64, 2, 16, 2, 128);
+        g.validate().unwrap();
+        // Per layer: ln + 2*(qkv, head) + cat + wo + add + ln + ff1 +
+        // relu + ff2 + add = 13 nodes; plus input, final ln, output.
+        assert_eq!(g.nodes.len(), 2 * 13 + 3);
+        let heads = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, LayerKind::AttnHead { d_head: 32, seq: 16, .. }))
+            .count();
+        assert_eq!(heads, 4);
+        // The concat joins both heads of the layer.
+        let cat = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.kind, LayerKind::Merge { op: MergeOp::Concat, .. }))
+            .unwrap();
+        assert_eq!(g.preds(cat.id).len(), 2);
+    }
+
+    #[test]
+    fn moe_graph_shape() {
+        let g = LayerGraph::moe(128, 64, 4, 2, 10);
+        g.validate().unwrap();
+        assert!(g.is_chain());
+        assert!(matches!(
+            g.nodes[1].kind,
+            LayerKind::MoE { rows: 128, cols: 64, experts: 4, top_k: 2, weight_slot: 0 }
+        ));
+        assert_eq!(g.node_widths().unwrap()[1], 64);
+        // MoE is not a generic single-matrix MVM.
+        assert_eq!(g.nodes[1].kind.mvm_rows(), None);
+    }
+
+    #[test]
+    fn moe_validation_rejects_bad_top_k() {
+        let mut b = GraphBuilder::new("bad-moe");
+        let i = b.input(256, 56, 64);
+        let m = b
+            .layer(LayerKind::MoE { rows: 64, cols: 32, experts: 2, top_k: 3, weight_slot: 0 })
+            .after(&[i]);
+        b.layer(LayerKind::Output { bytes: 128 }).after(&[m]);
+        assert!(matches!(b.finish(), Err(GraphError::BadMoE { .. })));
     }
 }

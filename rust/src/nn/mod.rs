@@ -9,6 +9,9 @@ pub mod lstm;
 pub mod mlp;
 
 pub use cnn::{CnnLayer, CnnModel, CnnVariant};
-pub use graph::{ActKind, LayerGraph, LayerKind, LayerNode, NodeId};
+pub use graph::{
+    ActKind, GraphBuilder, GraphError, LayerGraph, LayerKind, LayerNode, MergeOp, NodeId,
+    PendingNode,
+};
 pub use lstm::LstmModel;
 pub use mlp::MlpModel;

@@ -8,12 +8,12 @@
 //! traces against all of these and emits `stats::RunStats`.
 
 pub mod aimc;
-pub mod bus;
+pub(crate) mod bus;
 pub mod cache;
-pub mod dram;
-pub mod hierarchy;
+pub(crate) mod dram;
+pub(crate) mod hierarchy;
 pub mod machine;
-pub mod sync;
+pub(crate) mod sync;
 
 pub use aimc::{AimcTile, Coupling, Placement, TileFaultModel};
 pub use machine::{ChannelSpec, Machine, MachineSpec, RunError, TileSpec};

@@ -5,7 +5,7 @@
 //! tile counters, and the sub-ROI timing breakdown the paper uses in
 //! Figs. 8 and 11. `RunStats` is the single input to the energy model.
 
-pub mod roi;
+pub(crate) mod roi;
 
 pub use roi::{RoiKind, RoiTimes};
 

@@ -42,8 +42,8 @@ use crate::workload::{addr, costs, WorkloadError};
 use std::sync::Mutex;
 
 use super::enumerate::{
-    analog_shape, anchor_replicable, mask_bit, place_shape, stage_layout, AnalogShape, Anchor,
-    CandidateSpec, MvmInfo, Packer,
+    analog_shape, anchor_dag, anchor_replicable, mask_bit, place_shape, stage_edges, stage_layout,
+    AnalogShape, Anchor, AnchorDag, CandidateSpec, MvmInfo, Packer,
 };
 use super::TopologyBudget;
 
@@ -412,6 +412,9 @@ pub(crate) struct CostEngine {
     k: Consts,
     budget: TopologyBudget,
     replica_opts: Vec<usize>,
+    /// Anchor-level dataflow — the same derivation `build_mapping` runs,
+    /// so stage boundaries (and their boundary terms) cannot drift.
+    dag: AnchorDag,
     anchors_cost: Vec<AnchorCosts>,
     input_prof: Profile,
     /// Writeback profile per replica-option index (last stage only).
@@ -529,6 +532,7 @@ impl CostEngine {
             k,
             budget: *budget,
             replica_opts: replica_opts.to_vec(),
+            dag: anchor_dag(graph, anchors, input_node),
             anchors_cost,
             input_prof,
             wb_prof,
@@ -597,8 +601,10 @@ impl CostEngine {
 
         // Pass A: per-stage replication under the core/channel budgets —
         // the exact helper `build_mapping` uses, so feasibility cannot
-        // drift between the two walks.
-        let parts = stage_layout(anchors, spec, &self.budget)?;
+        // drift between the two walks — plus the stage-boundary dataflow
+        // the candidate's partition induces on the anchor DAG.
+        let parts = stage_layout(anchors, &self.dag, spec, &self.budget)?;
+        let edges = stage_edges(&self.dag, anchors, &spec.starts);
         let next_core: usize = parts.iter().map(|&p| p as usize).sum();
 
         // Pass B: compose stage profiles + greedy tile packing.
@@ -606,7 +612,6 @@ impl CostEngine {
         let mut mvm_idx = 0usize;
         // (per-core per-inference profile, once-only cycles, preamble cycles)
         let mut stage_costs: Vec<(Profile, f64, f64)> = Vec::with_capacity(s_count);
-        let mut out_width: Vec<u64> = Vec::with_capacity(s_count);
         for si in 0..s_count {
             let (lo, hi) = range(si);
             let p = parts[si];
@@ -635,35 +640,50 @@ impl CostEngine {
                 prof.add(&ap.prof);
                 cminit += ap.cminit;
             }
-            out_width.push(anchors[hi - 1].out_width);
-
             // Boundary phases (closed-form twins of the compiler's
-            // input/barrier/output/ack emission).
+            // input/join/barrier/fanout/ack emission). Per stage edge
+            // `src -> si` the consumer receives one slice message from
+            // each of the producer's `parts[src]` replicas; per edge
+            // `si -> tgt` each replica sends `parts[tgt]` slice messages.
+            // The legacy chain terms are exactly the single-in-edge /
+            // single-out-edge case of these sums.
             let mut once = 0.0;
-            if si == 0 {
+            if (lo..hi).any(|ai| self.dag.reads_input[ai]) {
+                // `StageInput::Memory` on stage 0 or an input-fed branch,
+                // or the `mem` tap of a residual `StageInput::Join`.
                 prof.add(&self.input_prof);
-            } else {
-                let prev_bytes = 4 * out_width[si - 1] / parts[si - 1];
-                prof.fixed += parts[si - 1] as f64 * recv_cycles(prev_bytes, &self.k);
+            }
+            for &(src, tgt, bytes) in &edges {
+                if tgt != si {
+                    continue;
+                }
+                let np = parts[src];
+                prof.fixed += np as f64 * recv_cycles(bytes / np, &self.k);
                 if spec.handoff == Handoff::SharedBuffer {
                     // Ack the incoming shared buffer, every inference.
-                    prof.fixed += parts[si - 1] as f64 * send_cycles(ACK_BYTES);
+                    prof.fixed += np as f64 * send_cycles(ACK_BYTES);
                 }
             }
             if p > 1 {
                 prof.fixed += costs::MUTEX_INSTS as f64 * 1.5; // barrier lock+unlock
             }
-            if si + 1 == s_count {
-                prof.add(&self.wb_prof[pi]);
-            } else {
-                let fwd = 4 * out_width[si] / p;
-                let nc = parts[si + 1] as f64;
-                prof.fixed += nc * send_cycles(fwd);
+            let mut sinks = false;
+            for &(src, tgt, bytes) in &edges {
+                if src != si {
+                    continue;
+                }
+                sinks = true;
+                let nc = parts[tgt] as f64;
+                prof.fixed += nc * send_cycles(bytes / p);
                 if spec.handoff == Handoff::SharedBuffer {
                     // The consumer's ack is awaited from inference 1 on:
                     // once across the oracle's two compiled inferences.
                     once += nc * recv_cycles(ACK_BYTES, &self.k);
                 }
+            }
+            if !sinks {
+                // No consumer stage: the graph output writes back here.
+                prof.add(&self.wb_prof[pi]);
             }
             stage_costs.push((prof, once, cminit));
         }
@@ -846,6 +866,77 @@ mod tests {
             }
         }
         assert!(checked > 20, "cross-check space collapsed: {checked}");
+    }
+
+    #[test]
+    fn compositional_matches_compiled_oracle_on_pinned_dag_cases() {
+        use crate::nn::LayerGraph;
+        // Pinned DAG cases: a residual fork/join block, an MoE expert
+        // bank (a chain, so it also cross-checks expert replication at
+        // r = 2), and a two-head parallel-attention encoder. Every
+        // feasible (partition, mask, replicas, hand-off) point must
+        // score identically to the compiled oracle, and feasibility
+        // itself must agree between `score` and `build_mapping`.
+        let cases = [
+            LayerGraph::resnet_block(8, 4, 10),
+            LayerGraph::moe(64, 32, 4, 2, 10),
+            LayerGraph::transformer_parallel(16, 2, 8, 1, 32),
+        ];
+        let budget =
+            TopologyBudget { cores: 4, tiles: 12, tile_rows: 256, tile_cols: 256, channels: 64 };
+        let cfg = SystemConfig::high_power();
+        let opts = [1usize, 2];
+        for g in &cases {
+            let (anchors, input, output) = super::super::enumerate::anchors(g).unwrap();
+            let engine = CostEngine::new(g, &anchors, input, output, &budget, &cfg, &opts);
+            let n_mvm = anchors.iter().filter(|a| a.mvm.is_some()).count();
+            let masks: Vec<u64> = if n_mvm <= 4 {
+                (0..(1u64 << n_mvm)).collect()
+            } else {
+                vec![0, (1u64 << n_mvm) - 1]
+            };
+            let mut checked = 0;
+            for starts in super::super::enumerate::partitions(anchors.len(), 3, usize::MAX).0 {
+                for &mask in &masks {
+                    for &r in &opts {
+                        for h in [Handoff::PingPong, Handoff::SharedBuffer] {
+                            let spec = CandidateSpec {
+                                starts: starts.clone(),
+                                analog_mask: mask,
+                                replicas: r,
+                                handoff: h,
+                            };
+                            let built = super::super::enumerate::build_mapping(
+                                g, &anchors, input, output, &spec, &budget,
+                            );
+                            let composed = engine.score(&anchors, &spec);
+                            assert_eq!(
+                                built.is_some(),
+                                composed.is_some(),
+                                "{}: feasibility drift on {spec:?}",
+                                g.name
+                            );
+                            let (Some((mapping, desc)), Some(c)) = (built, composed) else { continue };
+                            let o = estimate(g, &mapping, &cfg).unwrap();
+                            let rel = (c.cycles_per_inf - o.cycles_per_inf).abs() / o.cycles_per_inf;
+                            assert!(
+                                rel < 1e-9,
+                                "{}/{desc}: composed {} vs oracle {}",
+                                g.name,
+                                c.cycles_per_inf,
+                                o.cycles_per_inf
+                            );
+                            let rel_e =
+                                (c.energy_per_inf_j - o.energy_per_inf_j).abs() / o.energy_per_inf_j;
+                            assert!(rel_e < 1e-9, "{}/{desc}: composed energy drift", g.name);
+                            assert_eq!(c.per_core_cycles.len(), o.per_core_cycles.len(), "{desc}");
+                            checked += 1;
+                        }
+                    }
+                }
+            }
+            assert!(checked > 5, "{}: cross-check space collapsed: {checked}", g.name);
+        }
     }
 
     #[test]

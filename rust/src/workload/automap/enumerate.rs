@@ -1,14 +1,23 @@
-//! Candidate enumeration: carve a chain [`LayerGraph`] into anchors and
+//! Candidate enumeration: carve a [`LayerGraph`] — linear chain or true
+//! fork/join DAG — into anchors along its topological order and
 //! construct a concrete [`Mapping`] for any point of the (pipeline depth
 //! x partition x per-layer engine x replication x hand-off) space —
 //! packing analog MVM regions onto budget tiles greedily, column-major,
 //! opening a new tile when the current one runs out of columns.
 //!
+//! Stages are contiguous *intervals over the topologically linearized
+//! anchor list* — the exact partition axis the chain search always
+//! used — and only the stage boundaries generalize: [`stage_edges`]
+//! derives the stage-level dataflow from the anchor DAG, so two
+//! branches cut into adjacent stages (with no edge between them) run
+//! concurrently on their own cores without any new search dimension.
+//!
 //! The *walk* over the space lives in the parent module's
 //! branch-and-bound search; this module owns the shared pieces both the
 //! mapping constructor and the compositional cost engine must agree on
 //! byte-for-byte: per-stage replication ([`stage_parts`]), analog
-//! placement geometry ([`analog_shape`]), the greedy tile packer
+//! placement geometry ([`analog_shape`]), the stage dataflow
+//! ([`AnchorDag`] / [`stage_edges`]), the greedy tile packer
 //! ([`Packer`]), and the candidate descriptor ([`spec_desc`]).
 //!
 //! [`LayerGraph`]: crate::nn::LayerGraph
@@ -23,8 +32,11 @@ use crate::workload::WorkloadError;
 
 use super::TopologyBudget;
 
-/// One mappable unit of a chain graph: at most one MVM-bearing layer
-/// plus its elementwise companions, in dataflow order.
+/// One mappable unit of a graph: at most one MVM-bearing layer plus its
+/// elementwise companions, in dataflow order. Anchors are indexed in the
+/// graph's topological order; every edge between anchors leaves from its
+/// source anchor's *last* node (runs only fork at their endpoints), so
+/// `out_width` is also the payload width of every outgoing anchor edge.
 pub(crate) struct Anchor {
     pub nodes: Vec<NodeId>,
     pub mvm: Option<MvmInfo>,
@@ -37,12 +49,24 @@ pub(crate) enum MvmInfo {
     Dense { node: NodeId, rows: u64, cols: u64 },
     Lstm { node: NodeId, rows: u64, cols: u64 },
     Attention { node: NodeId, d_model: u64 },
+    /// Per-inference conv as an im2col MVM (`im2col_rows x out_ch`) —
+    /// DAG branches and conv chains, where the row-streamed pipeline's
+    /// single-chain hand-off does not apply.
+    Conv { node: NodeId, rows: u64, cols: u64 },
+    /// MoE expert bank: all `experts` column slices side by side on one
+    /// region; replication column-slices *every* expert, so automap's
+    /// replica axis doubles as expert parallelism.
+    Moe { node: NodeId, rows: u64, cols: u64, experts: u64, top_k: u64 },
 }
 
 impl MvmInfo {
     pub(crate) fn node(&self) -> NodeId {
         match self {
-            MvmInfo::Dense { node, .. } | MvmInfo::Lstm { node, .. } | MvmInfo::Attention { node, .. } => *node,
+            MvmInfo::Dense { node, .. }
+            | MvmInfo::Lstm { node, .. }
+            | MvmInfo::Attention { node, .. }
+            | MvmInfo::Conv { node, .. }
+            | MvmInfo::Moe { node, .. } => *node,
         }
     }
 }
@@ -51,64 +75,185 @@ fn err(msg: String) -> WorkloadError {
     WorkloadError::InvalidGraph(msg)
 }
 
-/// Split a linear chain graph into anchors. Returns the anchors plus the
-/// graph's input and output node ids.
+/// Split a validated graph — chain or DAG — into anchors. Returns the
+/// anchors (in topological order) plus the graph's input and output
+/// node ids.
+///
+/// The interior nodes are segmented into maximal *runs*: consecutive
+/// topological positions stay in one run iff they are joined by a plain
+/// chain edge (out-degree 1 into in-degree 1). All of a run's external
+/// edges attach at its endpoints, so each run carves into anchors
+/// exactly like the legacy linear chain — which is itself the
+/// single-run case, carved bit-identically.
 pub(crate) fn anchors(graph: &LayerGraph) -> Result<(Vec<Anchor>, NodeId, NodeId), WorkloadError> {
-    let n = graph.nodes.len();
-    if n < 3 {
+    if graph.nodes.len() < 3 {
         return Err(err("automap needs at least input -> layer -> output".into()));
     }
-    if graph.edges.len() != n - 1 || graph.edges.iter().enumerate().any(|(i, &(a, b))| a != i || b != i + 1)
-    {
-        return Err(err("automap searches linear chain graphs only".into()));
-    }
-    let LayerKind::Input { raw_bytes, .. } = graph.nodes[0].kind else {
-        return Err(err("automap chains must start at an Input node".into()));
+    graph.validate().map_err(|e| err(format!("automap rejects the graph: {e}")))?;
+    let order = graph.topo_order().expect("validated graphs are acyclic");
+    let widths = graph.node_widths().expect("validated graphs have widths");
+    // validate() guarantees exactly one Input and one Output node.
+    let find = |pick: fn(&LayerKind) -> bool| {
+        graph.nodes.iter().find(|n| pick(&n.kind)).expect("validated").id
     };
-    if !matches!(graph.nodes[n - 1].kind, LayerKind::Output { .. }) {
-        return Err(err("automap chains must end at an Output node".into()));
-    }
+    let input = find(|k| matches!(k, LayerKind::Input { .. }));
+    let output = find(|k| matches!(k, LayerKind::Output { .. }));
 
     let mut out: Vec<Anchor> = Vec::new();
     let mut pending: Vec<NodeId> = Vec::new();
-    let mut width = raw_bytes;
-    for node in &graph.nodes[1..n - 1] {
+    let mut run_first_anchor = 0usize;
+    let mut prev: Option<NodeId> = None;
+    let mut flush_pending = |pending: &mut Vec<NodeId>, out: &mut Vec<Anchor>| {
+        if !pending.is_empty() {
+            let w = widths[*pending.last().expect("non-empty")];
+            out.push(Anchor { nodes: std::mem::take(pending), mvm: None, out_width: w });
+        }
+    };
+    for &id in order
+        .iter()
+        .filter(|&&id| !matches!(graph.nodes[id].kind, LayerKind::Input { .. } | LayerKind::Output { .. }))
+    {
+        let new_run = match prev {
+            None => true,
+            Some(p) => {
+                !(graph.edges.contains(&(p, id))
+                    && graph.succs(p).len() == 1
+                    && graph.preds(id).len() == 1)
+            }
+        };
+        if new_run {
+            // The previous run's trailing elementwise tail becomes its
+            // own MVM-less anchor; appending across runs would move
+            // nodes onto another branch's stage.
+            flush_pending(&mut pending, &mut out);
+            run_first_anchor = out.len();
+        }
+        let node = &graph.nodes[id];
         let mvm = match node.kind {
-            LayerKind::Conv2d { .. } => {
-                return Err(err("automap does not search row-streamed conv pipelines".into()));
+            LayerKind::Dense { rows, cols, .. } => Some(MvmInfo::Dense { node: id, rows, cols }),
+            LayerKind::LstmCell { x, n_h, .. } => {
+                Some(MvmInfo::Lstm { node: id, rows: n_h + x, cols: 4 * n_h })
+            }
+            LayerKind::Attention { d_model, .. } => Some(MvmInfo::Attention { node: id, d_model }),
+            LayerKind::Conv2d { ref layer, .. } => {
+                Some(MvmInfo::Conv { node: id, rows: layer.im2col_rows(), cols: layer.out_ch })
+            }
+            LayerKind::MoE { rows, cols, experts, top_k, .. } => {
+                Some(MvmInfo::Moe { node: id, rows, cols, experts, top_k })
             }
             LayerKind::Input { .. } | LayerKind::Output { .. } => {
-                return Err(err(format!("interior input/output node {}", node.id)));
+                unreachable!("interior nodes only")
             }
-            LayerKind::Dense { rows, cols, .. } => Some(MvmInfo::Dense { node: node.id, rows, cols }),
-            LayerKind::LstmCell { x, n_h, .. } => {
-                Some(MvmInfo::Lstm { node: node.id, rows: n_h + x, cols: 4 * n_h })
-            }
-            LayerKind::Attention { d_model, .. } => Some(MvmInfo::Attention { node: node.id, d_model }),
             _ => None,
-        };
-        width = match node.kind {
-            LayerKind::Dense { cols, .. } => cols,
-            LayerKind::LstmCell { n_h, .. } => n_h,
-            LayerKind::Attention { d_model, .. } => d_model,
-            LayerKind::Pool { elems, .. } => elems / 4,
-            _ => width,
         };
         if let Some(m) = mvm {
             let mut nodes = std::mem::take(&mut pending);
-            nodes.push(node.id);
-            out.push(Anchor { nodes, mvm: Some(m), out_width: width });
-        } else if let Some(last) = out.last_mut() {
-            last.nodes.push(node.id);
-            last.out_width = width;
+            nodes.push(id);
+            out.push(Anchor { nodes, mvm: Some(m), out_width: widths[id] });
+        } else if out.len() > run_first_anchor {
+            let last = out.last_mut().expect("run has an anchor");
+            last.nodes.push(id);
+            last.out_width = widths[id];
         } else {
-            pending.push(node.id);
+            pending.push(id);
+        }
+        prev = Some(id);
+    }
+    flush_pending(&mut pending, &mut out);
+    Ok((out, input, output))
+}
+
+/// Anchor-level dataflow of a graph: which anchors feed which (deduped,
+/// ascending — anchors are topologically ordered, so every edge points
+/// forward), and which anchors read the graph `Input` node directly.
+/// Shared by `build_mapping` and the compositional cost engine so the
+/// stage boundaries they derive cannot drift.
+pub(crate) struct AnchorDag {
+    pub succs: Vec<Vec<usize>>,
+    pub preds: Vec<Vec<usize>>,
+    /// Anchors with a direct edge from the graph `Input` node.
+    pub reads_input: Vec<bool>,
+    /// True when the anchor dataflow is the linear chain `0 -> 1 -> ..`
+    /// with only anchor 0 reading the input — the legacy search space,
+    /// and the only shape column replication is defined on.
+    pub chain: bool,
+}
+
+pub(crate) fn anchor_dag(graph: &LayerGraph, anchors: &[Anchor], input: NodeId) -> AnchorDag {
+    let mut anchor_of: Vec<Option<usize>> = vec![None; graph.nodes.len()];
+    for (ai, a) in anchors.iter().enumerate() {
+        for &nid in &a.nodes {
+            anchor_of[nid] = Some(ai);
         }
     }
-    if !pending.is_empty() {
-        out.push(Anchor { nodes: pending, mvm: None, out_width: width });
+    let n = anchors.len();
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut reads_input = vec![false; n];
+    for &(u, v) in &graph.edges {
+        if u == input {
+            if let Some(&Some(av)) = anchor_of.get(v) {
+                reads_input[av] = true;
+            }
+            continue;
+        }
+        if let (Some(&Some(au)), Some(&Some(av))) = (anchor_of.get(u), anchor_of.get(v)) {
+            if au != av && !succs[au].contains(&av) {
+                succs[au].push(av);
+                preds[av].push(au);
+            }
+        }
     }
-    Ok((out, 0, n - 1))
+    for s in &mut succs {
+        s.sort_unstable();
+    }
+    for p in &mut preds {
+        p.sort_unstable();
+    }
+    let chain = (0..n).all(|i| {
+        let s_ok = if i + 1 < n { succs[i] == [i + 1] } else { succs[i].is_empty() };
+        s_ok && reads_input[i] == (i == 0)
+    });
+    AnchorDag { succs, preds, reads_input, chain }
+}
+
+/// Stage-boundary dataflow of one partition: ascending `(producer
+/// stage, consumer stage, payload bytes)` edges, where the payload sums
+/// `4 * out_width` over the distinct producer anchors feeding that
+/// consumer stage (fp32 activations; a producer anchor feeding two
+/// anchors of one consumer stage is sent once). For a chain partition
+/// this is exactly the legacy consecutive-stage boundary list.
+pub(crate) fn stage_edges(
+    dag: &AnchorDag,
+    anchors: &[Anchor],
+    starts: &[usize],
+) -> Vec<(usize, usize, u64)> {
+    let stage_of = stage_of_anchors(starts, anchors.len());
+    let mut edges: std::collections::BTreeMap<(usize, usize), u64> = std::collections::BTreeMap::new();
+    for (ai, succ) in dag.succs.iter().enumerate() {
+        let si = stage_of[ai];
+        let mut seen: Vec<usize> = Vec::new();
+        for &aj in succ {
+            let sj = stage_of[aj];
+            if sj != si && !seen.contains(&sj) {
+                seen.push(sj);
+                *edges.entry((si, sj)).or_insert(0) += 4 * anchors[ai].out_width;
+            }
+        }
+    }
+    edges.into_iter().map(|((a, b), w)| (a, b, w)).collect()
+}
+
+/// Stage index of every anchor under a starts-partition.
+pub(crate) fn stage_of_anchors(starts: &[usize], n_anchors: usize) -> Vec<usize> {
+    let mut stage_of = vec![0usize; n_anchors];
+    for (si, &lo) in starts.iter().enumerate() {
+        let hi = if si + 1 < starts.len() { starts[si + 1] } else { n_anchors };
+        for a in stage_of.iter_mut().take(hi).skip(lo) {
+            *a = si;
+        }
+    }
+    stage_of
 }
 
 /// One point of the search space, small enough to hold for every
@@ -223,11 +368,12 @@ fn for_each_starts(n: usize, s: usize, f: &mut impl FnMut(&[usize]) -> bool) {
 
 /// Per-anchor half of the replication rule: can this anchor run inside
 /// an `r`-way column-replicated stage? (Dense MVMs need exact column
-/// slices; non-Dense MVMs pin their stage to a single replica.)
+/// slices; MoE banks slice every expert's columns, so replication acts
+/// as expert parallelism; other MVMs pin their stage to one replica.)
 pub(crate) fn anchor_replicable(a: &Anchor, r: u64) -> bool {
     match a.mvm {
         None => true,
-        Some(MvmInfo::Dense { cols, .. }) => cols % r == 0,
+        Some(MvmInfo::Dense { cols, .. }) | Some(MvmInfo::Moe { cols, .. }) => cols % r == 0,
         Some(_) => false,
     }
 }
@@ -285,6 +431,25 @@ pub(crate) fn analog_shape(mvm: &MvmInfo, parts: u64, tile_rows: u32, tile_cols:
         }
         MvmInfo::Lstm { rows, cols, .. } => Some(AnalogShape::One { rows, cols }),
         MvmInfo::Attention { d_model, .. } => Some(AnalogShape::Quad { d: d_model }),
+        MvmInfo::Conv { rows, cols, .. } => {
+            // The im2col matrix must fit one region whole: the per-pixel
+            // CM-op block queues all `rows` taps into a single tile.
+            if rows <= tile_rows as u64 && cols <= tile_cols as u64 {
+                Some(AnalogShape::Direct { rows, slice: cols })
+            } else {
+                None
+            }
+        }
+        MvmInfo::Moe { rows, cols, experts, .. } => {
+            // One region per replica holding every expert's column slice
+            // side by side; only the routed top-k slices are dequeued.
+            let slice = experts * (cols / parts);
+            if rows <= tile_rows as u64 && slice <= tile_cols as u64 {
+                Some(AnalogShape::Direct { rows, slice })
+            } else {
+                None
+            }
+        }
     }
 }
 
@@ -295,9 +460,16 @@ pub(crate) fn analog_shape(mvm: &MvmInfo, parts: u64, tile_rows: u32, tile_cols:
 /// cost engine's `score`, so the two cannot drift.
 pub(crate) fn stage_layout(
     anchors: &[Anchor],
+    dag: &AnchorDag,
     spec: &CandidateSpec,
     budget: &TopologyBudget,
 ) -> Option<Vec<u64>> {
+    // Column replication is defined on chain dataflow only: replicated
+    // fork/join boundaries would need all-to-all slice exchanges the
+    // stage hand-off does not model. Non-chain graphs search r = 1.
+    if spec.replicas > 1 && !dag.chain {
+        return None;
+    }
     let s_count = spec.starts.len();
     let mut parts: Vec<u64> = Vec::with_capacity(s_count);
     let mut next_core = 0usize;
@@ -317,8 +489,8 @@ pub(crate) fn stage_layout(
         return None; // identical to the r = 1 spec
     }
     let mut channels = 0usize;
-    for i in 0..s_count.saturating_sub(1) {
-        let fan = (parts[i] * parts[i + 1]) as usize;
+    for &(si, sj, _) in &stage_edges(dag, anchors, &spec.starts) {
+        let fan = (parts[si] * parts[sj]) as usize;
         channels += fan * if spec.handoff == Handoff::SharedBuffer { 2 } else { 1 };
     }
     if channels > budget.channels {
@@ -482,7 +654,9 @@ pub(crate) fn build_mapping(
     budget: &TopologyBudget,
 ) -> Option<(Mapping, String)> {
     let s_count = spec.starts.len();
-    let parts_per_stage = stage_layout(anchors, spec, budget)?;
+    let dag = anchor_dag(graph, anchors, input_node);
+    let parts_per_stage = stage_layout(anchors, &dag, spec, budget)?;
+    let edges = stage_edges(&dag, anchors, &spec.starts);
     let mut stages: Vec<Stage> = Vec::with_capacity(s_count);
     let mut tiles: Vec<TileSpec> = Vec::new();
     let mut packer = Packer::new();
@@ -555,12 +729,29 @@ pub(crate) fn build_mapping(
             }
         }
 
-        st.input = if si == 0 { StageInput::Memory { node: input_node } } else { StageInput::Channel };
-        st.output = if si + 1 == s_count {
-            StageOutput::Memory { node: output_node }
+        // Stage boundaries from the anchor dataflow. Chains reduce to
+        // the legacy Memory -> Channel -> .. -> Memory shape exactly;
+        // DAG partitions get Join inputs (with an optional direct tap
+        // of the graph input) and Fanout outputs.
+        let from: Vec<usize> = edges.iter().filter(|&&(_, t, _)| t == si).map(|&(p, _, _)| p).collect();
+        let to: Vec<(usize, u64)> =
+            edges.iter().filter(|&&(p, _, _)| p == si).map(|&(_, t, b)| (t, b)).collect();
+        let taps_input = (lo..hi).any(|a| dag.reads_input[a]);
+        st.input = if from.is_empty() {
+            // Stage 0, or a branch fed straight from the graph input.
+            StageInput::Memory { node: input_node }
+        } else if from == [si - 1] && !taps_input {
+            StageInput::Channel
         } else {
-            let width = range.last().expect("stages are non-empty").out_width;
-            StageOutput::Channel { bytes: 4 * width / parts as u64 }
+            let mem = if taps_input { Some(input_node) } else { None };
+            StageInput::Join { mem, from }
+        };
+        st.output = if to.is_empty() {
+            StageOutput::Memory { node: output_node }
+        } else if to.len() == 1 && to[0].0 == si + 1 {
+            StageOutput::Channel { bytes: to[0].1 / parts as u64 }
+        } else {
+            StageOutput::Fanout { to }
         };
         st.handoff = spec.handoff;
         stages.push(st);

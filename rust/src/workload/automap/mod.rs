@@ -1,11 +1,16 @@
 //! Automatic mapping search over the `(LayerGraph, Mapping)` space.
 //!
-//! Given any linear-chain [`LayerGraph`] and a machine topology budget
-//! (cores, tiles, tile dims, channels), the search walks candidate
-//! mappings — digital vs. analog placement per layer, greedy
-//! column-packing of MVM regions onto budget tiles, row-splitting of
-//! tall matrices, column-replication across cores (1/2/4/8), 1..8-stage
-//! pipelining, and ping-pong vs. shared-buffer hand-offs — scores them
+//! Given any validated [`LayerGraph`] — linear chain or fork/join DAG
+//! (residual blocks, parallel attention heads, MoE expert banks) — and
+//! a machine topology budget (cores, tiles, tile dims, channels), the
+//! search walks candidate mappings — digital vs. analog placement per
+//! layer, greedy column-packing of MVM regions onto budget tiles,
+//! row-splitting of tall matrices, column-replication across cores
+//! (1/2/4/8, chain dataflow only; on an MoE chain the replica axis
+//! doubles as expert parallelism), 1..8-stage pipelining over the
+//! topologically linearized anchor list (branches cut into different
+//! stages run concurrently on their own cores), and ping-pong vs.
+//! shared-buffer hand-offs — scores them
 //! with the **compositional cost engine** in [`cost`] (per-anchor stage
 //! profiles compiled once per search, composed per candidate; the
 //! full-compile estimator survives behind [`CostModel::Compiled`] as
@@ -463,6 +468,14 @@ pub fn search_opts(
         .copied()
         .filter(|&r| r <= budget.cores && r <= opts.max_replica.max(1))
         .collect();
+    // Column replication is defined on chain anchor dataflow only
+    // (`stage_layout` rejects every r > 1 point otherwise), so skip
+    // enumerating — and profiling — the axis for fork/join graphs.
+    let replica_opts = if enumerate::anchor_dag(graph, &anchors, input).chain {
+        replica_opts
+    } else {
+        vec![1]
+    };
     let max_stages = opts.max_depth.max(1).min(budget.cores).min(n.max(1));
     // A capped walk touches at most `cap` partitions (each yields >= 1
     // candidate), so don't materialize cut lists past the cap.
@@ -1062,12 +1075,31 @@ mod tests {
     }
 
     #[test]
-    fn rejects_conv_pipelines_cleanly() {
+    fn conv_chains_are_searchable() {
+        // Conv layers carve into per-inference im2col MVM anchors, so
+        // the CNN chain — once rejected outright — now searches like any
+        // other graph (the hand-built row-streamed pipeline remains a
+        // separate, unsearched mapping style).
         let g = LayerGraph::cnn(&crate::nn::CnnModel::paper(crate::nn::CnnVariant::Fast));
         let budget = TopologyBudget::for_config(&hp());
-        assert!(matches!(
-            search(&g, &budget, &hp(), 4),
-            Err(WorkloadError::InvalidGraph(_))
-        ));
+        let out = search(&g, &budget, &hp(), 4).unwrap();
+        assert!(out.feasible > 0, "no feasible conv mapping");
+        assert!(!out.ranked.is_empty());
+        compile::compile(&g, &out.ranked[0].mapping, 1).unwrap();
+    }
+
+    #[test]
+    fn searches_fork_join_graphs() {
+        let g = LayerGraph::resnet_block(8, 4, 10);
+        let budget = TopologyBudget { cores: 4, tiles: 8, tile_rows: 256, tile_cols: 256, channels: 64 };
+        let out = search(&g, &budget, &hp(), 4).unwrap();
+        assert!(out.feasible > 0, "no feasible DAG mapping");
+        // Replication is chain-only: every DAG candidate runs r = 1.
+        assert!(out.ranked.iter().all(|c| c.desc.contains("r1")), "DAG candidate replicated");
+        // Winners compile and include a pipelined (multi-stage) point.
+        for c in &out.ranked {
+            compile::compile(&g, &c.mapping, 2).unwrap();
+        }
+        assert!(out.ranked.iter().any(|c| c.mapping.stages.len() > 1));
     }
 }

@@ -1,9 +1,13 @@
 //! The mapping schema: *where and how* each layer of a [`LayerGraph`]
 //! executes.
 //!
-//! A [`Mapping`] is a linear chain of pipeline [`Stage`]s. Each stage
-//! owns one or more cores (replicas), executes an ordered list of layer
-//! [`Step`]s, and connects to its neighbours through channel boundaries.
+//! A [`Mapping`] is a DAG of pipeline [`Stage`]s, declared as a list in
+//! dataflow (topological) order. Each stage owns one or more cores
+//! (replicas), executes an ordered list of layer [`Step`]s, and connects
+//! to its producers/consumers through channel boundaries — the classic
+//! linear chain (stage `i` feeds `i + 1` via `StageInput::Channel` /
+//! `StageOutput::Channel`) plus true fork/join dataflow via
+//! [`StageOutput::Fanout`] and [`StageInput::Join`].
 //! The compiler (`workload::compile::compile`) derives everything else —
 //! channel topology and numbering, mutex ids, CM_INITIALIZE preambles,
 //! per-core trace emission — from this declaration.
@@ -25,7 +29,9 @@ pub struct Mapping {
     /// auto-numbered on top; this exists because the paper's quin-core
     /// LSTM platform declares one (unused) mutex in its `MachineSpec`.
     pub min_mutexes: usize,
-    /// Pipeline stages in dataflow order; stage `i` feeds stage `i + 1`.
+    /// Pipeline stages in dataflow (topological) order. With the legacy
+    /// `Channel` I/O variants stage `i` feeds stage `i + 1`; `Fanout` /
+    /// `Join` stages name their consumers/producers explicitly.
     pub stages: Vec<Stage>,
 }
 
@@ -57,7 +63,7 @@ pub enum Handoff {
 }
 
 /// Where a stage's per-inference input comes from.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum StageInput {
     /// No explicit input phase.
     None,
@@ -65,10 +71,15 @@ pub enum StageInput {
     Memory { node: NodeId },
     /// Receive from the previous stage's boundary channels.
     Channel,
+    /// DAG join: receive from every producer stage in `from` (ascending
+    /// stage indices; each producer's replicas are received p-major),
+    /// optionally preceded by a memory load of the graph's `Input` node
+    /// (`mem`) when a residual branch taps the input directly.
+    Join { mem: Option<NodeId>, from: Vec<usize> },
 }
 
 /// Where a stage's per-inference result goes.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum StageOutput {
     /// No explicit output phase.
     None,
@@ -79,6 +90,12 @@ pub enum StageOutput {
     /// under `LeaderGather`, whose gather messages carry `bytes/parts`).
     /// Ignored (derived from the conv geometry) for row-streamed stages.
     Channel { bytes: u64 },
+    /// DAG fan-out: send to every consumer stage in `to` (ascending
+    /// stage indices) with the given payload bytes per forward message.
+    /// `Channel { bytes }` is exactly `Fanout { to: vec![(idx + 1,
+    /// bytes)] }`; the distinct variant keeps legacy chain mappings
+    /// byte-stable.
+    Fanout { to: Vec<(usize, u64)> },
 }
 
 /// One pipeline stage.

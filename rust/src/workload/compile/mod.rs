@@ -11,7 +11,7 @@
 //! oracle (see `tests/ir_equivalence.rs`).
 
 pub mod cache;
-pub mod lower;
+pub(crate) mod lower;
 pub mod mapping;
 
 use crate::isa::InstClass;
@@ -35,14 +35,46 @@ struct Wiring {
     gather: Vec<usize>,
     /// LeaderGather intra-stage channels: leader -> replica r (index r-1).
     broadcast: Vec<usize>,
-    /// Outgoing boundary forward channels, producer-major
-    /// (`fwd[p * nc + c]`; LeaderGather producers: leader only, `fwd[c]`).
-    fwd: Vec<usize>,
-    /// Outgoing boundary ack channels (SharedBuffer), consumer-major
-    /// (`ack[c * np + p]`).
-    ack: Vec<usize>,
+    /// Outgoing boundary forward channels, one list per out-edge (in
+    /// `out_edges` order), each producer-major (`fwd[e][p * nc + c]`;
+    /// LeaderGather producers: leader only, `fwd[e][c]`).
+    fwd: Vec<Vec<usize>>,
+    /// Outgoing boundary ack channels (SharedBuffer), one list per
+    /// out-edge, each consumer-major (`ack[e][c * np + p]`; empty for
+    /// PingPong hand-offs).
+    ack: Vec<Vec<usize>>,
     /// Barrier mutex id, if the stage declares one.
     mutex: Option<usize>,
+}
+
+/// A stage's outgoing boundary edges as `(consumer stage, payload
+/// bytes)` pairs. The legacy `Channel` variant is the single-edge case
+/// targeting `idx + 1`; `Fanout` names its consumers explicitly.
+fn out_edges(output: &StageOutput, idx: usize) -> Vec<(usize, u64)> {
+    match output {
+        StageOutput::Channel { bytes } => vec![(idx + 1, *bytes)],
+        StageOutput::Fanout { to } => to.clone(),
+        StageOutput::Memory { .. } | StageOutput::None => Vec::new(),
+    }
+}
+
+/// A stage's producer stage indices, ascending. The legacy `Channel`
+/// input is the single-producer case `idx - 1`.
+fn in_stages(input: &StageInput, idx: usize) -> Vec<usize> {
+    match input {
+        StageInput::Channel => vec![idx - 1],
+        StageInput::Join { from, .. } => from.clone(),
+        StageInput::Memory { .. } | StageInput::None => Vec::new(),
+    }
+}
+
+/// Position of the edge `p -> t` inside producer `p`'s out-edge list
+/// (the first index of its `Wiring::fwd` / `Wiring::ack`).
+fn edge_pos(output: &StageOutput, p: usize, t: usize) -> usize {
+    out_edges(output, p)
+        .iter()
+        .position(|&(c, _)| c == t)
+        .expect("validated: consumer listed in producer's out-edges")
 }
 
 /// One cached step occurrence inside a scoring-mode trace: the lowered
@@ -411,39 +443,50 @@ fn wire(mapping: &Mapping) -> (Vec<Wiring>, Vec<ChannelSpec>, usize) {
                 channels.push(ChannelSpec { producer: leader, consumer: r, capacity: CHANNEL_CAPACITY });
             }
         }
-        if matches!(s.output, StageOutput::Channel { .. }) {
-            let next = &mapping.stages[idx + 1];
-            let producers: Vec<usize> = if s.split == SplitKind::LeaderGather {
-                vec![s.cores[0]]
-            } else {
-                s.cores.clone()
-            };
+        // Per out-edge, in edge order: all forward channels (producer-
+        // major), then all ack channels (consumer-major, SharedBuffer
+        // only). For a single `Channel` edge this is byte-for-byte the
+        // legacy numbering.
+        let edges = out_edges(&s.output, idx);
+        let producers: Vec<usize> = if s.split == SplitKind::LeaderGather {
+            vec![s.cores[0]]
+        } else {
+            s.cores.clone()
+        };
+        for &(t, _) in &edges {
+            let mut fwd = Vec::new();
             for &p in &producers {
-                for &c in &next.cores {
-                    w.fwd.push(channels.len());
+                for &c in &mapping.stages[t].cores {
+                    fwd.push(channels.len());
                     channels.push(ChannelSpec { producer: p, consumer: c, capacity: CHANNEL_CAPACITY });
                 }
             }
+            w.fwd.push(fwd);
+        }
+        for &(t, _) in &edges {
+            let mut ack = Vec::new();
             if s.handoff == Handoff::SharedBuffer {
-                for &c in &next.cores {
+                for &c in &mapping.stages[t].cores {
                     for &p in &producers {
-                        w.ack.push(channels.len());
+                        ack.push(channels.len());
                         channels.push(ChannelSpec { producer: c, consumer: p, capacity: CHANNEL_CAPACITY });
                     }
                 }
             }
+            w.ack.push(ack);
         }
         wirings.push(w);
     }
     (wirings, channels, mutex_count.max(mapping.min_mutexes))
 }
 
-/// Forward channels a consumer replica receives on, in producer order.
-fn fwd_for_consumer(prev: &Stage, prev_w: &Wiring, c_idx: usize, nc: usize) -> Vec<usize> {
+/// Forward channels a consumer replica receives on over out-edge `e`
+/// of the producer stage, in producer order.
+fn fwd_for_consumer(prev: &Stage, prev_w: &Wiring, e: usize, c_idx: usize, nc: usize) -> Vec<usize> {
     if prev.split == SplitKind::LeaderGather {
-        vec![prev_w.fwd[c_idx]]
+        vec![prev_w.fwd[e][c_idx]]
     } else {
-        (0..prev.cores.len()).map(|p| prev_w.fwd[p * nc + c_idx]).collect()
+        (0..prev.cores.len()).map(|p| prev_w.fwd[e][p * nc + c_idx]).collect()
     }
 }
 
@@ -481,9 +524,9 @@ fn emit_replica(
     let parts = s.parts();
 
     // ---- input phase ------------------------------------------------------
-    match s.input {
+    match &s.input {
         StageInput::Memory { node } => {
-            if let LayerKind::Input { bytes, marshal_insts, raw_bytes } = graph.nodes[node].kind {
+            if let LayerKind::Input { bytes, marshal_insts, raw_bytes } = graph.nodes[*node].kind {
                 if s.split == SplitKind::LeaderGather && r > 0 {
                     // Followers re-read the int8 copy of the same input
                     // (it hits the LLC after the leader's cold load).
@@ -502,14 +545,28 @@ fn emit_replica(
                 }
             }
         }
-        StageInput::Channel => {
-            let prev = &mapping.stages[idx - 1];
-            let chs = fwd_for_consumer(prev, &wirings[idx - 1], r, s.cores.len());
-            let per_ch = messages_per_inference(prev, graph);
+        StageInput::Channel | StageInput::Join { .. } => {
+            // DAG joins may additionally tap the graph input directly
+            // (a residual branch starting at the Input node).
+            if let StageInput::Join { mem: Some(node), .. } = &s.input {
+                if let LayerKind::Input { bytes, marshal_insts, .. } = graph.nodes[*node].kind {
+                    lower::input_load(b, i, bytes, marshal_insts);
+                }
+            }
+            // Receive from every producer stage, ascending, each
+            // producer's replicas in producer-major order. The legacy
+            // `Channel` input is the single-producer case.
+            let producers = in_stages(&s.input, idx);
             b.roi(RoiKind::Communication, |b| {
-                for &ch in &chs {
-                    for _ in 0..per_ch {
-                        b.push(TraceOp::Recv { ch });
+                for &p in &producers {
+                    let prev = &mapping.stages[p];
+                    let e = edge_pos(&prev.output, p, idx);
+                    let chs = fwd_for_consumer(prev, &wirings[p], e, r, s.cores.len());
+                    let per_ch = messages_per_inference(prev, graph);
+                    for &ch in &chs {
+                        for _ in 0..per_ch {
+                            b.push(TraceOp::Recv { ch });
+                        }
                     }
                 }
             });
@@ -560,7 +617,7 @@ fn emit_replica(
 
     // ---- communication / output ------------------------------------------
     if s.split == SplitKind::LeaderGather {
-        let StageOutput::Channel { bytes } = s.output else {
+        let &StageOutput::Channel { bytes } = &s.output else {
             unreachable!("validated: LeaderGather stages end in a channel")
         };
         let w = &wirings[idx];
@@ -572,7 +629,7 @@ fn emit_replica(
                 // Broadcast the assembled vector to every follower (the
                 // recurrence) and feed the next stage; the +k address
                 // nudge keeps the per-destination buffers distinct.
-                for (k, &ch) in w.broadcast.iter().chain(w.fwd.iter()).enumerate() {
+                for (k, &ch) in w.broadcast.iter().chain(w.fwd[0].iter()).enumerate() {
                     b.push(TraceOp::Send { ch, bytes, addr: addr::channel(ch, i) + k as u64 });
                 }
             });
@@ -595,27 +652,37 @@ fn emit_replica(
             });
         }
     } else {
-        match s.output {
-            StageOutput::Channel { bytes } => {
+        match &s.output {
+            StageOutput::Channel { .. } | StageOutput::Fanout { .. } => {
+                let edges = out_edges(&s.output, idx);
                 let w = &wirings[idx];
-                let nc = w.fwd.len() / s.cores.len();
                 let np = s.cores.len();
                 b.roi(RoiKind::Communication, |b| {
-                    if i > 0 && !w.ack.is_empty() {
-                        // Shared-buffer hand-off: wait for the consumer's
+                    if i > 0 {
+                        // Shared-buffer hand-off: wait for each consumer's
                         // ack of the previous inference before reusing it.
-                        for c in 0..nc {
-                            b.push(TraceOp::Recv { ch: w.ack[c * np + r] });
+                        for e in 0..edges.len() {
+                            let acks = &w.ack[e];
+                            if acks.is_empty() {
+                                continue;
+                            }
+                            let nc = w.fwd[e].len() / np;
+                            for c in 0..nc {
+                                b.push(TraceOp::Recv { ch: acks[c * np + r] });
+                            }
                         }
                     }
-                    for c in 0..nc {
-                        let ch = w.fwd[r * nc + c];
-                        b.push(TraceOp::Send { ch, bytes, addr: addr::channel(ch, i) });
+                    for (e, &(_, bytes)) in edges.iter().enumerate() {
+                        let nc = w.fwd[e].len() / np;
+                        for c in 0..nc {
+                            let ch = w.fwd[e][r * nc + c];
+                            b.push(TraceOp::Send { ch, bytes, addr: addr::channel(ch, i) });
+                        }
                     }
                 });
             }
             StageOutput::Memory { node } => {
-                if let LayerKind::Output { bytes } = graph.nodes[node].kind {
+                if let LayerKind::Output { bytes } = graph.nodes[*node].kind {
                     lower::writeback(b, i, bytes / parts);
                 }
             }
@@ -623,19 +690,24 @@ fn emit_replica(
         }
     }
 
-    // ---- acknowledge an incoming shared-buffer hand-off -------------------
-    if s.input == StageInput::Channel {
-        let prev = &mapping.stages[idx - 1];
-        if prev.handoff == Handoff::SharedBuffer {
-            let pw = &wirings[idx - 1];
-            let np = if prev.split == SplitKind::LeaderGather { 1 } else { prev.cores.len() };
-            b.roi(RoiKind::Communication, |b| {
-                for p in 0..np {
-                    let ch = pw.ack[r * np + p];
+    // ---- acknowledge incoming shared-buffer hand-offs ---------------------
+    let producers = in_stages(&s.input, idx);
+    if producers.iter().any(|&p| mapping.stages[p].handoff == Handoff::SharedBuffer) {
+        b.roi(RoiKind::Communication, |b| {
+            for &p in &producers {
+                let prev = &mapping.stages[p];
+                if prev.handoff != Handoff::SharedBuffer {
+                    continue;
+                }
+                let pw = &wirings[p];
+                let e = edge_pos(&prev.output, p, idx);
+                let np = if prev.split == SplitKind::LeaderGather { 1 } else { prev.cores.len() };
+                for pr in 0..np {
+                    let ch = pw.ack[e][r * np + pr];
                     b.push(TraceOp::Send { ch, bytes: ACK_BYTES, addr: addr::channel(ch, i) });
                 }
-            });
-        }
+            }
+        });
     }
 }
 
@@ -687,7 +759,71 @@ pub(crate) fn emit_step(b: &mut TraceBuilder, graph: &LayerGraph, step: &Step, r
                 _ => unreachable!("validated: attention runs on Cpu or AttentionTiles"),
             }
         }
-        LayerKind::Input { .. } | LayerKind::Output { .. } | LayerKind::Conv2d { .. } => {
+        LayerKind::Merge { op: _, elems } => {
+            // Both merge flavors lower to one vector pass over the joined
+            // activations (add: SIMD adds; concat: SIMD copies into the
+            // packed layout) — the same budget as the legacy linear-chain
+            // residual `Elementwise` node.
+            lower::elementwise(b, (elems / 4 + 4) / parts, 0);
+        }
+        LayerKind::AttnHead { d_head, seq, kv_slot } => {
+            // One head's score/softmax/context block over its private
+            // K/V cache (the QKV projection is a separate Dense node).
+            lower::attention_context(b, *d_head, 1, *seq, *kv_slot);
+        }
+        LayerKind::MoE { rows, cols, experts, top_k, weight_slot } => {
+            let slice = cols / parts;
+            // Router: a tiny dense gate over the expert logits plus the
+            // top-k probability normalization — always digital (the gate
+            // is far too small to earn a crossbar region).
+            lower::digital_gemv(b, addr::weights(*weight_slot), *rows, *experts);
+            lower::softmax(b, *experts);
+            match &step.place {
+                Place::Cpu => {
+                    // Top-k expert FFNs, each a rows x slice digital GEMV
+                    // over this replica's column slice of the expert.
+                    for e in 0..*top_k {
+                        let base = addr::weights(*weight_slot)
+                            + rows * experts
+                            + e * rows * cols
+                            + r as u64 * rows * slice;
+                        lower::digital_gemv(b, base, *rows, slice);
+                    }
+                }
+                Place::Tile { per_replica } => {
+                    // The replica's tile region holds ALL experts' column
+                    // slices side by side (rows x experts*slice): queue
+                    // the shared input once, fire the whole bank, dequeue
+                    // only the top-k selected slices.
+                    let tp = per_replica[r];
+                    lower::queue(b, tp.tile, *rows);
+                    lower::process(b, tp.tile);
+                    lower::dequeue(b, tp.tile, top_k * slice);
+                }
+                _ => unreachable!("validated: MoE runs on Cpu or Tile"),
+            }
+            // Gate-weighted combine of the top-k expert outputs.
+            lower::elementwise(b, top_k * slice / 8 + 4, *top_k);
+        }
+        LayerKind::Conv2d { layer, weight_slot } => {
+            // Per-inference conv lowering (DAG branches, where the
+            // row-streamed pipeline's single-chain hand-off does not
+            // apply): the whole output map in one step.
+            let px = layer.out_hw() * layer.out_hw();
+            match &step.place {
+                Place::Cpu => lower::conv_digital_group(b, layer, *weight_slot, px),
+                Place::Tile { per_replica } => {
+                    let block = lower::analog_conv_row_block(per_replica[r].tile, layer);
+                    b.reserve(block.len() * layer.out_hw() as usize);
+                    for _ in 0..layer.out_hw() {
+                        b.extend_from_slice(&block);
+                    }
+                }
+                _ => unreachable!("validated: Conv2d runs on Cpu or Tile"),
+            }
+            lower::conv_post_ops(b, layer, px * layer.out_ch);
+        }
+        LayerKind::Input { .. } | LayerKind::Output { .. } => {
             unreachable!("validated: not a per-inference step kind")
         }
     }
@@ -768,7 +904,8 @@ fn emit_row_streamed(
     // not arrived yet.
     let in_info: Option<(usize, Vec<u64>)> = if s.input == StageInput::Channel {
         let prev = &mapping.stages[idx - 1];
-        let ch = fwd_for_consumer(prev, &wirings[idx - 1], 0, 1)[0];
+        let e = edge_pos(&prev.output, idx - 1, idx);
+        let ch = fwd_for_consumer(prev, &wirings[idx - 1], e, 0, 1)[0];
         let in_msgs = messages_per_inference(prev, graph);
         let counts: Vec<u64> = if in_msgs >= row_groups {
             (0..row_groups)
@@ -786,7 +923,7 @@ fn emit_row_streamed(
         None
     };
     let out_ch_id: Option<usize> = if matches!(s.output, StageOutput::Channel { .. }) {
-        Some(wirings[idx].fwd[0])
+        Some(wirings[idx].fwd[0][0])
     } else {
         None
     };
@@ -922,19 +1059,38 @@ pub fn validate(graph: &LayerGraph, mapping: &Mapping) -> Result<(), WorkloadErr
             }
         }
 
-        // Boundary structure: output channels connect to the next stage's
-        // channel input, and vice versa.
-        match s.input {
+        // Boundary structure (per-stage shape; the producer/consumer
+        // cross-wiring is checked globally after this loop).
+        match &s.input {
             StageInput::Channel => {
                 if idx == 0 {
                     return Err(err("stage 0 cannot receive from a channel".into()));
                 }
-                if !matches!(mapping.stages[idx - 1].output, StageOutput::Channel { .. }) {
-                    return Err(err(format!("stage {idx} expects a channel input but stage {} does not send", idx - 1)));
+            }
+            StageInput::Join { mem, from } => {
+                if from.is_empty() {
+                    return Err(err(format!("stage {idx}: join with no producer stages")));
+                }
+                if !from.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(err(format!("stage {idx}: join producers must be strictly ascending")));
+                }
+                if *from.last().expect("non-empty") >= idx {
+                    return Err(err(format!("stage {idx}: join producers must precede the stage")));
+                }
+                if s.cores.len() != 1 {
+                    return Err(err(format!("stage {idx}: join stages are single-replica")));
+                }
+                if let Some(node) = mem {
+                    let Some(n) = graph.node(*node) else {
+                        return Err(err(format!("stage {idx}: join input node {node} not in graph")));
+                    };
+                    if !matches!(n.kind, LayerKind::Input { .. }) {
+                        return Err(err(format!("stage {idx}: join input node {node} is not an Input layer")));
+                    }
                 }
             }
             StageInput::Memory { node } => {
-                let Some(n) = graph.node(node) else {
+                let Some(n) = graph.node(*node) else {
                     return Err(err(format!("stage {idx}: input node {node} not in graph")));
                 };
                 if !matches!(n.kind, LayerKind::Input { .. }) {
@@ -943,17 +1099,31 @@ pub fn validate(graph: &LayerGraph, mapping: &Mapping) -> Result<(), WorkloadErr
             }
             StageInput::None => {}
         }
-        match s.output {
+        match &s.output {
             StageOutput::Channel { .. } => {
                 if last {
                     return Err(err("the last stage cannot send to a channel".into()));
                 }
-                if mapping.stages[idx + 1].input != StageInput::Channel {
-                    return Err(err(format!("stage {idx} sends to a channel but stage {} does not receive", idx + 1)));
+            }
+            StageOutput::Fanout { to } => {
+                if to.is_empty() {
+                    return Err(err(format!("stage {idx}: fan-out with no consumer stages")));
+                }
+                if !to.windows(2).all(|w| w[0].0 < w[1].0) {
+                    return Err(err(format!("stage {idx}: fan-out consumers must be strictly ascending")));
+                }
+                if to[0].0 <= idx {
+                    return Err(err(format!("stage {idx}: fan-out consumers must follow the stage")));
+                }
+                if to.last().expect("non-empty").0 >= mapping.stages.len() {
+                    return Err(err(format!("stage {idx}: fan-out names a missing stage")));
+                }
+                if s.cores.len() != 1 {
+                    return Err(err(format!("stage {idx}: fan-out stages are single-replica")));
                 }
             }
             StageOutput::Memory { node } => {
-                let Some(n) = graph.node(node) else {
+                let Some(n) = graph.node(*node) else {
                     return Err(err(format!("stage {idx}: output node {node} not in graph")));
                 };
                 if !matches!(n.kind, LayerKind::Output { .. }) {
@@ -994,10 +1164,21 @@ pub fn validate(graph: &LayerGraph, mapping: &Mapping) -> Result<(), WorkloadErr
             if s.handoff != Handoff::PingPong {
                 return Err(err(format!("stage {idx}: row-streamed stages support PingPong only")));
             }
+            // The row loop is a single-chain hand-off: DAG joins and
+            // fan-outs compile through per-inference conv stages instead.
+            if matches!(s.input, StageInput::Join { .. }) {
+                return Err(err(format!("stage {idx}: row-streamed stages take a chain input, not a join")));
+            }
+            if matches!(s.output, StageOutput::Fanout { .. }) {
+                return Err(err(format!("stage {idx}: row-streamed stages feed one chain consumer, not a fan-out")));
+            }
             if s.input == StageInput::Channel {
                 let prev = &mapping.stages[idx - 1];
                 if prev.handoff != Handoff::PingPong {
                     return Err(err(format!("stage {idx}: row-streamed consumers need a PingPong producer")));
+                }
+                if !matches!(prev.output, StageOutput::Channel { .. }) {
+                    return Err(err(format!("stage {idx}: row-streamed consumers need a single chain producer")));
                 }
                 // The row loop receives on exactly one channel.
                 if prev.cores.len() != 1 && prev.split != SplitKind::LeaderGather {
@@ -1012,6 +1193,25 @@ pub fn validate(graph: &LayerGraph, mapping: &Mapping) -> Result<(), WorkloadErr
             }
         }
         validate_steps(graph, mapping, idx, s, &mut claims, &mut owners)?;
+    }
+    // Boundary cross-check: every declared edge must be mirrored on both
+    // endpoints — producers name consumers (out-edges) and consumers
+    // name producers (in-edges), whichever I/O variant declares it.
+    for (idx, s) in mapping.stages.iter().enumerate() {
+        for (t, _) in out_edges(&s.output, idx) {
+            if !in_stages(&mapping.stages[t].input, t).contains(&idx) {
+                return Err(err(format!(
+                    "stage {idx} sends to stage {t} but stage {t} does not receive from it"
+                )));
+            }
+        }
+        for p in in_stages(&s.input, idx) {
+            if out_edges(&mapping.stages[p].output, p).iter().all(|&(t, _)| t != idx) {
+                return Err(err(format!(
+                    "stage {idx} expects input from stage {p} but stage {p} does not send to it"
+                )));
+            }
+        }
     }
     validate_coverage(graph, mapping)?;
     Ok(())
@@ -1068,11 +1268,16 @@ fn validate_steps(
                 return Err(err(format!("stage {idx}: node {} (input/output) cannot be a step", step.node)));
             }
             LayerKind::Conv2d { .. } => {
-                if s.row_group.is_none() {
-                    return Err(err(format!("stage {idx}: Conv2d node {} needs a row-streamed stage", step.node)));
-                }
                 if !matches!(step.place, Place::Cpu | Place::Tile { .. }) {
                     return Err(err(format!("stage {idx}: Conv2d supports Cpu or Tile placement")));
+                }
+                // Outside a row-streamed stage the conv lowers whole-map
+                // per inference (DAG branches) on a single replica.
+                if s.row_group.is_none() && s.cores.len() != 1 {
+                    return Err(err(format!(
+                        "stage {idx}: per-inference Conv2d stages are single-core (node {})",
+                        step.node
+                    )));
                 }
             }
             LayerKind::LstmCell { .. } => {
@@ -1086,6 +1291,30 @@ fn validate_steps(
             | LayerKind::LayerNorm { .. } => {
                 if !matches!(step.place, Place::Cpu | Place::Fused) {
                     return Err(err(format!("stage {idx}: elementwise layers run on Cpu (or Fused)")));
+                }
+            }
+            LayerKind::Merge { .. } => {
+                if !matches!(step.place, Place::Cpu) {
+                    return Err(err(format!("stage {idx}: Merge nodes run on Cpu")));
+                }
+            }
+            LayerKind::AttnHead { .. } => {
+                if s.cores.len() != 1 {
+                    return Err(err(format!("stage {idx}: attention-head steps need a single-replica stage")));
+                }
+                if !matches!(step.place, Place::Cpu) {
+                    return Err(err(format!("stage {idx}: AttnHead runs on Cpu")));
+                }
+            }
+            LayerKind::MoE { cols, .. } => {
+                if !matches!(step.place, Place::Cpu | Place::Tile { .. }) {
+                    return Err(err(format!("stage {idx}: MoE supports Cpu or Tile placement")));
+                }
+                if cols % s.parts() != 0 {
+                    return Err(err(format!(
+                        "stage {idx}: MoE expert width {cols} not divisible by {} replicas",
+                        s.cores.len()
+                    )));
                 }
             }
             LayerKind::Attention { d_model, heads, .. } => {
@@ -1111,9 +1340,14 @@ fn validate_steps(
             }
             _ => after_chain = false,
         }
-        // Engine shape checks + tile bookkeeping.
+        // Engine shape checks + tile bookkeeping. A MoE tile region
+        // holds every expert's column slice side by side, so its
+        // effective MVM width is `experts * cols`.
         let parts = s.parts();
-        let (rows, cols) = (node.kind.mvm_rows(), node.kind.mvm_cols());
+        let (rows, cols) = match &node.kind {
+            LayerKind::MoE { rows, cols, experts, .. } => (Some(*rows), Some(experts * cols)),
+            _ => (node.kind.mvm_rows(), node.kind.mvm_cols()),
+        };
         match &step.place {
             Place::Cpu | Place::Fused => {}
             Place::Tile { per_replica } => {

@@ -17,7 +17,7 @@
 pub mod automap;
 pub mod cnn;
 pub mod compile;
-pub mod costs;
+pub(crate) mod costs;
 pub mod legacy;
 pub mod lstm;
 pub mod mlp;

@@ -116,7 +116,12 @@ fn cost_model_tracks_simulated_cycles() {
         let (graph, mapping) = mlp::case_table(case).unwrap();
         let est = automap::estimate(&graph, &mapping, &cfg).unwrap();
         let w = mlp::generate(case, &cfg, 10).unwrap();
-        let r = alpine::coordinator::run_workload(SystemKind::HighPower, w).unwrap();
+        let r = alpine::coordinator::run_workload(
+            SystemKind::HighPower,
+            w,
+            &alpine::coordinator::RunOptions::default(),
+        )
+        .unwrap();
         let sim = r.time_per_inference_s * cfg.freq_hz;
         let ratio = est.cycles_per_inf / sim;
         assert!(

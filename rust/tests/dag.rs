@@ -1,0 +1,195 @@
+//! The DAG-workload gate: fork/join graph validation must return typed
+//! errors (never panic), the three deliverable graphs — residual block,
+//! parallel-head transformer encoder, mixture-of-experts — must
+//! compile, automap and simulate end-to-end, and random fork/join
+//! graphs must either run self-consistently or fail with a typed
+//! [`WorkloadError`]. Imports go through `alpine::prelude` on purpose:
+//! this file is also the compile-time check that the prelude covers the
+//! whole graph-to-simulation flow.
+
+use alpine::prelude::*;
+use alpine::util::miniprop;
+
+fn budget() -> TopologyBudget {
+    TopologyBudget { cores: 4, tiles: 12, tile_rows: 256, tile_cols: 256, channels: 64 }
+}
+
+// ---------------------------------------------------------------------
+// Validation errors
+// ---------------------------------------------------------------------
+
+#[test]
+fn cycle_is_detected() {
+    let mut g = LayerGraph::new("cyclic");
+    let i = g.add(LayerKind::Input { bytes: 32, marshal_insts: 10, raw_bytes: 8 });
+    let m = g.add(LayerKind::Merge { op: MergeOp::Add, elems: 8 });
+    let d = g.add(LayerKind::Dense { rows: 8, cols: 8, weight_slot: 0 });
+    let o = g.add(LayerKind::Output { bytes: 32 });
+    g.edges.push((i, m));
+    g.edges.push((m, d));
+    g.edges.push((d, m)); // back edge: m -> d -> m
+    g.edges.push((d, o));
+    assert!(matches!(g.validate(), Err(GraphError::Cycle { .. })), "{:?}", g.validate());
+}
+
+#[test]
+fn join_shape_mismatch_is_detected() {
+    let mut b = GraphBuilder::new("bad-join");
+    let input = b.input(32, 10, 8);
+    let d1 = b.layer(LayerKind::Dense { rows: 8, cols: 8, weight_slot: 0 }).after(&[input]);
+    let d2 = b.layer(LayerKind::Dense { rows: 8, cols: 12, weight_slot: 1 }).after(&[input]);
+    let m = b.layer(LayerKind::Merge { op: MergeOp::Add, elems: 8 }).after(&[d1, d2]);
+    b.layer(LayerKind::Output { bytes: 32 }).after(&[m]);
+    let err = b.finish().unwrap_err();
+    assert!(
+        matches!(err, GraphError::JoinShapeMismatch { expected: 8, got: 12, .. }),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn dangling_fork_branch_is_detected() {
+    let mut b = GraphBuilder::new("dangling");
+    let input = b.input(32, 10, 8);
+    let d1 = b.layer(LayerKind::Dense { rows: 8, cols: 8, weight_slot: 0 }).after(&[input]);
+    let d2 = b.layer(LayerKind::Dense { rows: 8, cols: 8, weight_slot: 1 }).after(&[input]);
+    b.layer(LayerKind::Output { bytes: 32 }).after(&[d1]);
+    let err = b.finish().unwrap_err();
+    assert!(matches!(err, GraphError::DanglingFork { node } if node == d2), "{err:?}");
+}
+
+// ---------------------------------------------------------------------
+// Deliverable graphs, end to end
+// ---------------------------------------------------------------------
+
+fn deliverables() -> Vec<LayerGraph> {
+    vec![
+        LayerGraph::resnet_block(8, 4, 10),
+        LayerGraph::transformer_parallel(16, 2, 8, 1, 32),
+        LayerGraph::moe(64, 32, 4, 2, 10),
+    ]
+}
+
+#[test]
+fn deliverable_graphs_validate() {
+    for g in deliverables() {
+        g.validate().unwrap_or_else(|e| panic!("{}: {e}", g.name));
+    }
+}
+
+/// Each deliverable graph must automap to a feasible mapping, compile,
+/// and simulate to a nonzero runtime with analog activity — the full
+/// DAG path through search, compiler and trace machine.
+#[test]
+fn deliverable_graphs_simulate_end_to_end() {
+    let cfg = SystemConfig::high_power();
+    for g in deliverables() {
+        let out = search(&g, &budget(), &cfg, 2).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        assert!(out.feasible > 0, "{}: no feasible mapping", g.name);
+        let best = &out.ranked[0];
+        validate(&g, &best.mapping).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        let w = compile(&g, &best.mapping, 3).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        let r = run_workload(SystemKind::HighPower, w, &RunOptions::default())
+            .unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        assert!(r.time_s > 0.0, "{}", g.name);
+        assert!(r.aimc_processes > 0, "{}: expected analog MVMs", g.name);
+    }
+}
+
+/// Nested steady-state fast-forward must be invisible on DAG workloads:
+/// forcing it off reproduces bit-identical runtimes.
+#[test]
+fn dag_runs_identical_without_nested_fast_forward() {
+    let cfg = SystemConfig::high_power();
+    for g in deliverables() {
+        let out = search(&g, &budget(), &cfg, 1).unwrap();
+        let w = |n| compile(&g, &out.ranked[0].mapping, n).unwrap();
+        let fast = run_workload(SystemKind::HighPower, w(8), &RunOptions::default()).unwrap();
+        let slow = run_workload(
+            SystemKind::HighPower,
+            w(8),
+            &RunOptions { nested_ff: Some(false), ..RunOptions::default() },
+        )
+        .unwrap();
+        assert_eq!(fast.time_s.to_bits(), slow.time_s.to_bits(), "{}", g.name);
+        assert_eq!(fast.total_insts, slow.total_insts, "{}", g.name);
+        assert_eq!(fast.aimc_processes, slow.aimc_processes, "{}", g.name);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property: random fork/join graphs never panic
+// ---------------------------------------------------------------------
+
+/// Random fork/join graphs — some deliberately malformed — must either
+/// make it through search + compile + simulation self-consistently, or
+/// fail with a typed [`GraphError`] / [`WorkloadError`]. `miniprop`
+/// converts any panic into a reproducible failure, so this is the
+/// zero-panic gate of the DAG path (CI: determinism job).
+#[test]
+fn random_fork_join_graphs_compile_or_fail_typed() {
+    let cfg = SystemConfig::high_power();
+    miniprop::check("dag-never-panics", 0xDA6, |rng| {
+        let w_in = 4 * (1 + rng.below(4)); // 4..=16
+        let mut b = GraphBuilder::new("rand-dag");
+        let input = b.input(4 * w_in, 10, w_in);
+        let mut slot = 0;
+        let mut dense = |b: &mut GraphBuilder, pred: NodeId, rows: u64, cols: u64| {
+            slot += 1;
+            b.layer(LayerKind::Dense { rows, cols, weight_slot: slot - 1 }).after(&[pred])
+        };
+        let trunk_w = 4 * (1 + rng.below(4));
+        let trunk = dense(&mut b, input, w_in, trunk_w);
+
+        // Fork 2-3 branches, each one Dense (sometimes with a ReLU).
+        let n_branches = 2 + rng.below(2) as usize;
+        let branch_w = 4 * (1 + rng.below(4));
+        let mut branches = Vec::new();
+        let mut widths = Vec::new();
+        for _ in 0..n_branches {
+            let mut n = dense(&mut b, trunk, trunk_w, branch_w);
+            if rng.below(2) == 0 {
+                n = b
+                    .layer(LayerKind::Activation { kind: ActKind::Relu, elems: branch_w })
+                    .after(&[n]);
+            }
+            branches.push(n);
+            widths.push(branch_w);
+        }
+
+        // Join: Add (equal widths) or Concat (sum) — 1 in 4 cases gets a
+        // deliberately wrong width to exercise the typed-error path.
+        let (op, mut elems) = if rng.below(2) == 0 {
+            (MergeOp::Add, branch_w)
+        } else {
+            (MergeOp::Concat, widths.iter().sum::<u64>())
+        };
+        if rng.below(4) == 0 {
+            elems += 4; // malformed join on purpose
+        }
+        let merge = b.layer(LayerKind::Merge { op, elems }).after(&branches);
+        let head = dense(&mut b, merge, elems, 8);
+        b.layer(LayerKind::Output { bytes: 32 }).after(&[head]);
+
+        let graph = match b.finish() {
+            Ok(g) => g,
+            Err(_) => return, // typed GraphError — exactly what malformed cases should hit
+        };
+        let out = match alpine::workload::automap::search_opts(
+            &graph,
+            &budget(),
+            &cfg,
+            &SearchOptions { top_k: 1, cap: Some(40), max_depth: 2, ..SearchOptions::default() },
+        ) {
+            Ok(o) => o,
+            Err(WorkloadError::InvalidGraph(_)) | Err(WorkloadError::InvalidMapping(_)) => return,
+            Err(e) => panic!("unexpected error kind: {e}"),
+        };
+        if out.ranked.is_empty() {
+            return; // nothing feasible under the tiny budget — fine
+        }
+        let w = compile(&graph, &out.ranked[0].mapping, 2).unwrap();
+        let r = run_workload(SystemKind::HighPower, w, &RunOptions::default()).unwrap();
+        assert!(r.time_s > 0.0);
+    });
+}

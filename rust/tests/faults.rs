@@ -7,7 +7,7 @@
 
 use alpine::config::{SystemConfig, SystemKind};
 use alpine::coordinator::faults::{run_scenario, FaultScenarioOptions};
-use alpine::coordinator::run_workload_with;
+use alpine::coordinator::{run_workload, RunOptions};
 use alpine::nn::{CnnVariant, LayerGraph};
 use alpine::sim::machine::Machine;
 use alpine::sim::{RunError, TileFaultModel};
@@ -152,6 +152,7 @@ fn hard_tile_failure_is_typed_or_degraded_never_a_panic() {
             max_depth: 4,
             max_replica: 2,
             jobs: 1,
+            compile_cache: true,
         },
     )
     .unwrap();
@@ -168,7 +169,7 @@ fn hard_tile_failure_is_typed_or_degraded_never_a_panic() {
             ..TileFaultModel::none()
         };
         let w = compile::compile(&graph, &best.mapping, 2).unwrap();
-        match run_workload_with(SystemKind::HighPower, w, &[(tile, model)]) {
+        match run_workload(SystemKind::HighPower, w, &RunOptions::with_faults(vec![(tile, model)])) {
             Ok(r) => assert!(r.time_s > 0.0),
             Err(RunError::TileFailed { tile: t, .. }) => assert_eq!(t, tile),
             Err(e) => panic!("unexpected error kind: {e}"),

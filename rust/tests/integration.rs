@@ -4,15 +4,23 @@
 //! EXPERIMENTS.md and the benches).
 
 use alpine::config::{SystemConfig, SystemKind};
-use alpine::coordinator::{energy_gain, run_workload, speedup};
+use alpine::coordinator::{energy_gain, speedup, CaseResult, RunOptions};
 use alpine::nn::{CnnVariant, LstmModel, MlpModel};
+use alpine::sim::RunError;
 use alpine::stats::RoiKind;
 use alpine::workload::cnn::{self, CnnCase};
 use alpine::workload::lstm::{self, LstmCase};
 use alpine::workload::mlp::{self, MlpCase};
+use alpine::workload::Workload;
 
 fn hp() -> SystemConfig {
     SystemConfig::high_power()
+}
+
+/// Every run in this file uses the default knobs; keep the dozens of
+/// call sites terse.
+fn run_workload(kind: SystemKind, w: Workload) -> Result<CaseResult, RunError> {
+    alpine::coordinator::run_workload(kind, w, &RunOptions::default())
 }
 
 // ---------------------------------------------------------------------------

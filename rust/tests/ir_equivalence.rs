@@ -7,7 +7,7 @@
 //! and this file can be deleted together.
 
 use alpine::config::{SystemConfig, SystemKind};
-use alpine::coordinator::run_workload;
+use alpine::coordinator::{run_workload, RunOptions};
 use alpine::nn::CnnVariant;
 use alpine::stats::RoiKind;
 use alpine::workload::cnn::{self, CnnCase};
@@ -60,8 +60,8 @@ fn assert_workloads_identical(oracle: &Workload, compiled: &Workload) {
 
 /// Full-run statistics, bit for bit.
 fn assert_stats_identical(kind: SystemKind, oracle: Workload, compiled: Workload) {
-    let a = run_workload(kind, oracle).unwrap();
-    let b = run_workload(kind, compiled).unwrap();
+    let a = run_workload(kind, oracle, &RunOptions::default()).unwrap();
+    let b = run_workload(kind, compiled, &RunOptions::default()).unwrap();
     assert_eq!(a.label, b.label);
     assert_eq!(a.time_s.to_bits(), b.time_s.to_bits(), "{}", a.label);
     assert_eq!(a.time_per_inference_s.to_bits(), b.time_per_inference_s.to_bits(), "{}", a.label);
@@ -83,6 +83,41 @@ fn assert_stats_identical(kind: SystemKind, oracle: Workload, compiled: Workload
     for kind in RoiKind::ALL {
         assert_eq!(a.roi.get(kind), b.roi.get(kind), "{} roi {kind:?}", a.label);
     }
+}
+
+/// The fluent `GraphBuilder` must be a pure re-spelling of the chain
+/// constructors: the same linear chain assembled node by node is
+/// **equal** to `LayerGraph::mlp`'s output and compiles bit-identically
+/// under the same mapping — so DAG support cannot drift the linear-chain
+/// path even at the IR-construction layer.
+#[test]
+fn graphbuilder_chain_bit_identical_to_mlp_constructor() {
+    use alpine::nn::{ActKind, GraphBuilder, LayerKind};
+    use alpine::workload::{automap, compile};
+
+    let dims = [784u64, 256, 64, 10];
+    let reference = alpine::nn::LayerGraph::mlp(&dims);
+
+    let mut b = GraphBuilder::new(reference.name.clone());
+    let mut prev = b.input(4 * dims[0], dims[0] / 4 + 40, dims[0]);
+    for l in 0..dims.len() - 1 {
+        prev = b
+            .layer(LayerKind::Dense { rows: dims[l], cols: dims[l + 1], weight_slot: l })
+            .after(&[prev]);
+        prev = b
+            .layer(LayerKind::Activation { kind: ActKind::Relu, elems: dims[l + 1] })
+            .after(&[prev]);
+    }
+    b.layer(LayerKind::Output { bytes: 4 * dims[dims.len() - 1] }).after(&[prev]);
+    let built = b.finish().unwrap();
+    assert_eq!(built, reference, "builder chain must equal the constructor's IR");
+
+    let budget = alpine::workload::automap::TopologyBudget::for_config(&hp());
+    let out = automap::search(&reference, &budget, &hp(), 1).unwrap();
+    let a = compile::compile(&reference, &out.ranked[0].mapping, 3).unwrap();
+    let b = compile::compile(&built, &out.ranked[0].mapping, 3).unwrap();
+    assert_workloads_identical(&a, &b);
+    assert_stats_identical(SystemKind::HighPower, a, b);
 }
 
 #[test]

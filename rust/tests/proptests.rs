@@ -3,7 +3,7 @@
 //! energy accounting, AIMC device bounds, channel/mutex safety.
 
 use alpine::config::{CacheGeometry, SystemConfig, SystemKind};
-use alpine::coordinator::run_workload;
+use alpine::coordinator::{run_workload, RunOptions};
 use alpine::energy;
 use alpine::isa::InstClass;
 use alpine::sim::cache::{Access, Cache};
@@ -380,8 +380,9 @@ fn more_inferences_take_proportionally_longer() {
     check("inference-scaling", 0x52, |rng| {
         let n = 2 + rng.below(4) as u32;
         let cfg = SystemConfig::high_power();
-        let r1 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, n).unwrap()).unwrap();
-        let r2 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2 * n).unwrap()).unwrap();
+        let ro = RunOptions::default();
+        let r1 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, n).unwrap(), &ro).unwrap();
+        let r2 = run_workload(SystemKind::HighPower, mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 2 * n).unwrap(), &ro).unwrap();
         let ratio = r2.time_s / r1.time_s;
         assert!(
             (1.6..2.4).contains(&ratio),
