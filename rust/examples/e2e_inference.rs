@@ -53,9 +53,12 @@ fn main() -> Result<()> {
         .collect();
 
     // NOTE: the b8 artifact takes a whole batch as one input; the server
-    // packs up to 8 requests per execution.
+    // packs up to 8 requests per execution. Arrivals follow a seeded
+    // uniform process (20 kHz == the legacy 50 us jitter), so the run is
+    // a reproducible schedule.
+    let arrival = server::ArrivalSpec::uniform(20_000.0, 7);
     let t0 = std::time::Instant::now();
-    let (responses, stats) = server::serve_batched(&analog, requests.clone(), 8, dim)?;
+    let (responses, stats) = server::serve_batched(&analog, requests.clone(), 8, dim, &arrival)?;
     let pcts = stats.percentiles(&[50.0, 95.0, 99.0]);
     println!(
         "\nserved {} requests in {:?}: mean latency {:?} (p50 {:?} / p95 {:?} / p99 {:?}, max {:?}), {:.0} req/s, mean batch {:.1}",
@@ -71,7 +74,7 @@ fn main() -> Result<()> {
     );
 
     // Analog vs digital agreement on the same requests.
-    let (dig_responses, _) = server::serve_batched(&digital, requests, 8, dim)?;
+    let (dig_responses, _) = server::serve_batched(&digital, requests, 8, dim, &arrival)?;
     let mut rel_acc = 0.0f64;
     let n_cmp = responses.len().min(dig_responses.len());
     for (a, d) in responses.iter().zip(dig_responses.iter()).take(n_cmp) {

@@ -6,6 +6,7 @@ pub mod automap;
 pub mod experiments;
 pub mod faults;
 pub mod server;
+pub mod serving;
 
 use crate::config::{SystemConfig, SystemKind};
 use crate::energy::{self, EnergyBreakdown};

@@ -1,19 +1,32 @@
 //! A minimal batched inference server over the PJRT runtime — the
-//! Layer-3 request path of the e2e example. Requests are collected into
-//! batches (up to the model's batch dimension) by a dispatcher thread and
-//! executed on the AOT-compiled model; per-request latency and aggregate
-//! throughput are reported.
+//! wall-clock Layer-3 request path of the e2e example. Requests are
+//! collected into batches (up to the model's batch dimension) by a
+//! dispatcher thread and executed on the AOT-compiled model;
+//! per-request latency and aggregate throughput are reported.
+//!
+//! The virtual-time serving simulator (replicas, SLO-aware batching,
+//! admission control, failover) lives in [`super::serving`]; this
+//! module is the thin real-runtime counterpart that shares its arrival
+//! processes and [`ServerStats`].
 //!
 //! tokio is unavailable in the offline vendor set (DESIGN.md §2), so the
 //! event loop is std::thread + channels — the request path still never
 //! touches Python.
+//!
+//! Shutdown contract: the dispatcher loop ends only when the feeder has
+//! dropped its sender *and* the channel is drained. A feeder stall —
+//! however long — just blocks `recv`; it can never silently drop queued
+//! requests (the old 200 ms `recv_timeout` break did exactly that).
+//! Conservation (responses == offered requests) is asserted in tests.
 
 use anyhow::Result;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::runtime::LoadedModel;
+
+use super::serving::arrival::ArrivalProcess;
+pub use super::serving::stats::ServerStats;
 
 pub struct Request {
     pub input: Vec<f32>,
@@ -26,119 +39,93 @@ pub struct Response {
     pub batch_size: usize,
 }
 
-/// Serving statistics.
-#[derive(Clone, Debug, Default)]
-pub struct ServerStats {
-    pub requests: u64,
-    pub batches: u64,
-    pub total_latency: Duration,
-    pub max_latency: Duration,
-    pub wall: Duration,
-    /// Per-request latency samples, completion order (sorted on demand
-    /// by [`ServerStats::percentile`] — a mean/max pair hides tail
-    /// behaviour, and serving SLOs are stated in percentiles).
-    pub latencies: Vec<Duration>,
+/// How requests trickle into the server: a seeded arrival process
+/// (replacing the old hard-coded 50 us sleep), so e2e server runs are
+/// reproducible schedules rather than wall-clock accidents.
+#[derive(Clone, Debug)]
+pub struct ArrivalSpec {
+    pub process: ArrivalProcess,
+    pub seed: u64,
 }
 
-impl ServerStats {
-    pub fn mean_latency(&self) -> Duration {
-        if self.requests == 0 {
-            Duration::ZERO
-        } else {
-            self.total_latency / self.requests as u32
-        }
-    }
-
-    /// Nearest-rank latency percentiles (each `p` in 0..=100) over the
-    /// recorded samples — one sort serves every requested rank;
-    /// `Duration::ZERO` entries when nothing was served.
-    pub fn percentiles(&self, ps: &[f64]) -> Vec<Duration> {
-        if self.latencies.is_empty() {
-            return vec![Duration::ZERO; ps.len()];
-        }
-        let mut sorted = self.latencies.clone();
-        sorted.sort_unstable();
-        ps.iter()
-            .map(|&p| {
-                let rank = ((p.clamp(0.0, 100.0) / 100.0) * sorted.len() as f64).ceil() as usize;
-                sorted[rank.clamp(1, sorted.len()) - 1]
-            })
-            .collect()
-    }
-
-    /// Nearest-rank latency percentile (`p` in 0..=100).
-    pub fn percentile(&self, p: f64) -> Duration {
-        self.percentiles(&[p])[0]
-    }
-
-    pub fn p50(&self) -> Duration {
-        self.percentile(50.0)
-    }
-
-    pub fn p95(&self) -> Duration {
-        self.percentile(95.0)
-    }
-
-    pub fn p99(&self) -> Duration {
-        self.percentile(99.0)
-    }
-
-    pub fn throughput_rps(&self) -> f64 {
-        if self.wall.is_zero() {
-            0.0
-        } else {
-            self.requests as f64 / self.wall.as_secs_f64()
-        }
-    }
-
-    pub fn mean_batch(&self) -> f64 {
-        if self.batches == 0 {
-            0.0
-        } else {
-            self.requests as f64 / self.batches as f64
-        }
+impl ArrivalSpec {
+    /// Evenly spaced arrivals at `rate_rps` (20 kHz == the legacy 50 us
+    /// jitter).
+    pub fn uniform(rate_rps: f64, seed: u64) -> ArrivalSpec {
+        ArrivalSpec { process: ArrivalProcess::Uniform { rate_rps }, seed }
     }
 }
 
 /// Drive `requests` through the model with dynamic batching: the
 /// dispatcher drains whatever is queued (up to `max_batch`) per step —
-/// the same continuous-batching discipline a serving router uses.
+/// the same continuous-batching discipline the serving router uses.
 pub fn serve_batched(
     model: &LoadedModel,
     requests: Vec<Vec<f32>>,
     max_batch: usize,
     per_request_elems: usize,
+    arrival: &ArrivalSpec,
 ) -> Result<(Vec<Response>, ServerStats)> {
+    serve_batched_with(
+        |packed| {
+            let outputs = model.run(&[packed.to_vec()])?;
+            Ok(outputs.into_iter().next().unwrap_or_default())
+        },
+        requests,
+        max_batch,
+        per_request_elems,
+        arrival,
+    )
+}
+
+/// The batching loop over an arbitrary batch runner. `run_batch` gets
+/// the packed `max_batch * per_request_elems` input and returns the flat
+/// batch output. Separated from [`serve_batched`] so the
+/// shutdown/conservation contract is testable without PJRT artifacts.
+pub fn serve_batched_with<F>(
+    mut run_batch: F,
+    requests: Vec<Vec<f32>>,
+    max_batch: usize,
+    per_request_elems: usize,
+    arrival: &ArrivalSpec,
+) -> Result<(Vec<Response>, ServerStats)>
+where
+    F: FnMut(&[f32]) -> Result<Vec<f32>>,
+{
+    let max_batch = max_batch.max(1);
+    let gaps = arrival.process.gaps(arrival.seed, requests.len());
     let (tx, rx) = mpsc::channel::<Request>();
     let feeder = {
         let inputs = requests;
         std::thread::spawn(move || {
-            for input in inputs {
-                // Arrival jitter: requests trickle in.
-                std::thread::sleep(Duration::from_micros(50));
+            for (input, gap) in inputs.into_iter().zip(gaps) {
+                if !gap.is_zero() {
+                    std::thread::sleep(gap);
+                }
                 if tx.send(Request { input, submitted: Instant::now() }).is_err() {
                     break;
                 }
             }
+            // tx drops here: the explicit close signal the dispatcher
+            // waits for.
         })
     };
 
     let mut responses = Vec::new();
     let mut stats = ServerStats::default();
     let t0 = Instant::now();
-    let stats_lock = Arc::new(Mutex::new(()));
-    let _guard = stats_lock.lock().unwrap();
 
     let mut pending: Vec<Request> = Vec::new();
     loop {
-        // Drain what's available; block for the first item.
+        // Block for the first item; only a disconnected (dropped) sender
+        // ends the loop.
         if pending.is_empty() {
-            match rx.recv_timeout(Duration::from_millis(200)) {
+            match rx.recv() {
                 Ok(r) => pending.push(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(mpsc::RecvError) => break,
             }
         }
+        // Opportunistically drain whatever else has arrived.
         while pending.len() < max_batch {
             match rx.try_recv() {
                 Ok(r) => pending.push(r),
@@ -160,8 +147,7 @@ pub fn serve_batched(
             packed.extend_from_slice(&tail);
         }
 
-        let outputs = model.run(&[packed])?;
-        let out = &outputs[0];
+        let out = run_batch(&packed)?;
         let per_out = out.len() / max_batch;
         let done = Instant::now();
         for (k, r) in batch.into_iter().enumerate() {
@@ -187,50 +173,63 @@ pub fn serve_batched(
 mod tests {
     use super::*;
 
-    #[test]
-    fn stats_math() {
-        let s = ServerStats {
-            requests: 10,
-            batches: 4,
-            total_latency: Duration::from_millis(100),
-            max_latency: Duration::from_millis(30),
-            wall: Duration::from_millis(500),
-            latencies: Vec::new(),
-        };
-        assert_eq!(s.mean_latency(), Duration::from_millis(10));
-        assert!((s.throughput_rps() - 20.0).abs() < 1e-9);
-        assert!((s.mean_batch() - 2.5).abs() < 1e-12);
-    }
-
-    #[test]
-    fn empty_stats_no_div_by_zero() {
-        let s = ServerStats::default();
-        assert_eq!(s.mean_latency(), Duration::ZERO);
-        assert_eq!(s.throughput_rps(), 0.0);
-        assert_eq!(s.mean_batch(), 0.0);
-        assert_eq!(s.p50(), Duration::ZERO);
-        assert_eq!(s.p99(), Duration::ZERO);
-    }
-
-    #[test]
-    fn percentiles_are_nearest_rank_over_unsorted_samples() {
-        // 1..=100 ms, shuffled-ish insertion order: p50 = 50 ms,
-        // p95 = 95 ms, p99 = 99 ms, p100 = max.
-        let mut s = ServerStats::default();
-        for ms in (1..=100u64).rev() {
-            s.latencies.push(Duration::from_millis(ms));
+    /// A mock batch runner: identity on the packed input, counting
+    /// invocations.
+    fn id_runner(calls: &mut u64) -> impl FnMut(&[f32]) -> Result<Vec<f32>> + '_ {
+        move |packed| {
+            *calls += 1;
+            Ok(packed.to_vec())
         }
-        assert_eq!(s.p50(), Duration::from_millis(50));
-        assert_eq!(s.p95(), Duration::from_millis(95));
-        assert_eq!(s.p99(), Duration::from_millis(99));
-        assert_eq!(s.percentile(100.0), Duration::from_millis(100));
-        // Tiny sample sets stay in range.
-        let mut t = ServerStats::default();
-        t.latencies.push(Duration::from_millis(7));
-        assert_eq!(t.p50(), Duration::from_millis(7));
-        assert_eq!(t.p99(), Duration::from_millis(7));
-        // Degenerate percentile arguments clamp instead of panicking.
-        assert_eq!(t.percentile(0.0), Duration::from_millis(7));
-        assert_eq!(t.percentile(250.0), Duration::from_millis(7));
+    }
+
+    #[test]
+    fn conservation_served_equals_offered() {
+        let n: usize = 12;
+        let dim = 3;
+        let requests: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32; dim]).collect();
+        let spec = ArrivalSpec::uniform(1e9, 0); // 1 ns gaps: a flood
+        let mut calls = 0;
+        let (responses, stats) =
+            serve_batched_with(id_runner(&mut calls), requests, 4, dim, &spec).unwrap();
+        assert_eq!(responses.len(), n, "served + shed + timed-out == offered (no shed paths here)");
+        assert_eq!(stats.requests as usize, n);
+        assert!(stats.batches >= (n / 4) as u64);
+        assert!(calls >= 1);
+        // Outputs survive the round-trip in order.
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.output.len(), dim);
+            assert_eq!(r.output[0], i as f32);
+        }
+    }
+
+    #[test]
+    fn feeder_stall_does_not_drop_requests() {
+        // A 250 ms stall mid-trace: the old recv_timeout(200 ms) loop
+        // broke out and silently dropped everything after the gap. The
+        // close-signal loop must serve all of them.
+        let dim = 2;
+        let n = 6;
+        let stall_ps = 250_000_000_000u64; // 250 ms in ps
+        let times_ps: Vec<u64> =
+            (0..n as u64).map(|i| i * 1_000 + if i >= 3 { stall_ps } else { 0 }).collect();
+        let spec = ArrivalSpec { process: ArrivalProcess::Trace { times_ps }, seed: 0 };
+        let requests: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32; dim]).collect();
+        let mut calls = 0;
+        let (responses, stats) =
+            serve_batched_with(id_runner(&mut calls), requests, 8, dim, &spec).unwrap();
+        assert_eq!(responses.len(), n, "requests after a feeder stall must not be dropped");
+        assert_eq!(stats.requests as usize, n);
+        assert!(stats.batches >= 2, "the stall splits the trace into >= 2 batches");
+    }
+
+    #[test]
+    fn empty_request_set_serves_nothing_cleanly() {
+        let spec = ArrivalSpec::uniform(1e6, 0);
+        let mut calls = 0;
+        let (responses, stats) =
+            serve_batched_with(id_runner(&mut calls), Vec::new(), 4, 2, &spec).unwrap();
+        assert!(responses.is_empty());
+        assert_eq!(stats.requests, 0);
+        assert_eq!(calls, 0, "no batch may run for zero requests");
     }
 }

@@ -1,0 +1,269 @@
+//! Open-loop arrival processes — seeded, deterministic, wall-clock-free.
+//!
+//! Every process generates absolute arrival timestamps in virtual
+//! picoseconds from a `util::rng::Rng` seed, so a trace is replayable
+//! byte-for-byte: the same (process, seed, n) triple yields the same
+//! timestamps on any machine at any `--jobs N`. The non-homogeneous
+//! shapes (bursty, diurnal) are thinning-free — each gap is an
+//! exponential sample at the instantaneous rate, which keeps generation
+//! O(n) and single-pass.
+
+use crate::util::rng::Rng;
+use std::time::Duration;
+
+/// Default burst multiplier of [`ArrivalProcess::Bursty`].
+pub const DEFAULT_BURST_X: f64 = 4.0;
+/// Default burst/diurnal period: 100 us of virtual time (serving runs
+/// span microseconds to milliseconds, so several cycles fit a run).
+pub const DEFAULT_PERIOD_S: f64 = 100e-6;
+/// Default in-burst fraction of the period.
+pub const DEFAULT_DUTY: f64 = 0.25;
+/// Default diurnal modulation amplitude.
+pub const DEFAULT_AMPLITUDE: f64 = 0.8;
+
+/// An open-loop request arrival process.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Evenly spaced arrivals at exactly `rate_rps` (the deterministic
+    /// replacement of the old hard-coded 50 us jitter: 20 kHz uniform).
+    Uniform { rate_rps: f64 },
+    /// Memoryless Poisson arrivals at mean `rate_rps`.
+    Poisson { rate_rps: f64 },
+    /// Poisson with a square-wave rate: `rate_rps * burst_x` during the
+    /// first `duty` fraction of every `period_s`, `rate_rps` otherwise.
+    Bursty { rate_rps: f64, burst_x: f64, period_s: f64, duty: f64 },
+    /// Poisson with a sinusoidal rate:
+    /// `rate_rps * (1 + amplitude * sin(2*pi*t/period_s))`, floored at
+    /// 5% of the base rate.
+    Diurnal { rate_rps: f64, amplitude: f64, period_s: f64 },
+    /// A fixed timestamp trace (absolute picoseconds, non-decreasing) —
+    /// replay of a recorded or hand-built schedule.
+    Trace { times_ps: Vec<u64> },
+}
+
+impl ArrivalProcess {
+    /// Parse a process *shape* from its CLI name; rates start at 0 and
+    /// are filled in per load point via [`ArrivalProcess::with_rate`].
+    pub fn parse(s: &str) -> Option<ArrivalProcess> {
+        match s {
+            "uniform" => Some(ArrivalProcess::Uniform { rate_rps: 0.0 }),
+            "poisson" => Some(ArrivalProcess::Poisson { rate_rps: 0.0 }),
+            "bursty" => Some(ArrivalProcess::Bursty {
+                rate_rps: 0.0,
+                burst_x: DEFAULT_BURST_X,
+                period_s: DEFAULT_PERIOD_S,
+                duty: DEFAULT_DUTY,
+            }),
+            "diurnal" => Some(ArrivalProcess::Diurnal {
+                rate_rps: 0.0,
+                amplitude: DEFAULT_AMPLITUDE,
+                period_s: DEFAULT_PERIOD_S * 10.0,
+            }),
+            _ => None,
+        }
+    }
+
+    /// The same shape at a different base rate (`Trace` is returned
+    /// unchanged — its schedule is absolute).
+    pub fn with_rate(&self, rate: f64) -> ArrivalProcess {
+        match self {
+            ArrivalProcess::Uniform { .. } => ArrivalProcess::Uniform { rate_rps: rate },
+            ArrivalProcess::Poisson { .. } => ArrivalProcess::Poisson { rate_rps: rate },
+            ArrivalProcess::Bursty { burst_x, period_s, duty, .. } => ArrivalProcess::Bursty {
+                rate_rps: rate,
+                burst_x: *burst_x,
+                period_s: *period_s,
+                duty: *duty,
+            },
+            ArrivalProcess::Diurnal { amplitude, period_s, .. } => ArrivalProcess::Diurnal {
+                rate_rps: rate,
+                amplitude: *amplitude,
+                period_s: *period_s,
+            },
+            ArrivalProcess::Trace { times_ps } => {
+                ArrivalProcess::Trace { times_ps: times_ps.clone() }
+            }
+        }
+    }
+
+    /// Human-readable descriptor for reports.
+    pub fn desc(&self) -> String {
+        match self {
+            ArrivalProcess::Uniform { .. } => "uniform".to_string(),
+            ArrivalProcess::Poisson { .. } => "poisson".to_string(),
+            ArrivalProcess::Bursty { burst_x, period_s, duty, .. } => {
+                format!("bursty(x{burst_x:.1} duty {duty:.2} period {:.0}us)", period_s * 1e6)
+            }
+            ArrivalProcess::Diurnal { amplitude, period_s, .. } => {
+                format!("diurnal(amp {amplitude:.2} period {:.0}us)", period_s * 1e6)
+            }
+            ArrivalProcess::Trace { times_ps } => format!("trace({} stamps)", times_ps.len()),
+        }
+    }
+
+    /// Instantaneous rate at virtual time `t_s` (seconds).
+    fn rate_at(&self, t_s: f64) -> f64 {
+        match self {
+            ArrivalProcess::Uniform { rate_rps } | ArrivalProcess::Poisson { rate_rps } => {
+                *rate_rps
+            }
+            ArrivalProcess::Bursty { rate_rps, burst_x, period_s, duty } => {
+                let phase = (t_s / period_s.max(1e-12)).fract();
+                if phase < duty.clamp(0.0, 1.0) {
+                    rate_rps * burst_x.max(1.0)
+                } else {
+                    *rate_rps
+                }
+            }
+            ArrivalProcess::Diurnal { rate_rps, amplitude, period_s } => {
+                let w = 2.0 * std::f64::consts::PI * t_s / period_s.max(1e-12);
+                (rate_rps * (1.0 + amplitude * w.sin())).max(rate_rps * 0.05)
+            }
+            ArrivalProcess::Trace { .. } => 0.0,
+        }
+    }
+
+    /// Generate `n` absolute arrival timestamps (picoseconds,
+    /// non-decreasing). Deterministic in (self, seed, n).
+    ///
+    /// A `Trace` shorter than `n` is extended past its end by repeating
+    /// its final gap (or 1 ps), so `n` requests are always offered.
+    pub fn times_ps(&self, seed: u64, n: usize) -> Vec<u64> {
+        if let ArrivalProcess::Trace { times_ps } = self {
+            let mut out: Vec<u64> = times_ps.iter().copied().take(n).collect();
+            let last_gap = match times_ps.len() {
+                0 | 1 => 1,
+                len => (times_ps[len - 1] - times_ps[len - 2]).max(1),
+            };
+            while out.len() < n {
+                let last = out.last().copied().unwrap_or(0);
+                out.push(last.saturating_add(last_gap));
+            }
+            return out;
+        }
+        let mut rng = Rng::new(seed);
+        let mut t_ps = 0u64;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rate = self.rate_at(t_ps as f64 * 1e-12);
+            assert!(rate > 0.0, "arrival process needs a positive rate (got {rate})");
+            let gap_s = match self {
+                ArrivalProcess::Uniform { .. } => 1.0 / rate,
+                _ => exp_sample(&mut rng) / rate,
+            };
+            t_ps = t_ps.saturating_add(((gap_s * 1e12).round() as u64).max(1));
+            out.push(t_ps);
+        }
+        out
+    }
+
+    /// Inter-arrival gaps as wall-clock `Duration`s (rounded up to whole
+    /// nanoseconds) — the feed schedule of the PJRT serving path.
+    pub fn gaps(&self, seed: u64, n: usize) -> Vec<Duration> {
+        let times = self.times_ps(seed, n);
+        let mut prev = 0u64;
+        times
+            .into_iter()
+            .map(|t| {
+                let gap_ps = t.saturating_sub(prev);
+                prev = t;
+                Duration::from_nanos(gap_ps.div_ceil(1000))
+            })
+            .collect()
+    }
+}
+
+/// Standard exponential sample (mean 1). `next_f64` is in [0, 1), so
+/// `1 - u` is in (0, 1] and the log is finite.
+fn exp_sample(rng: &mut Rng) -> f64 {
+    -(1.0 - rng.next_f64()).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_trace_any_shape() {
+        for shape in ["uniform", "poisson", "bursty", "diurnal"] {
+            let p = ArrivalProcess::parse(shape).unwrap().with_rate(1e6);
+            assert_eq!(p.times_ps(42, 200), p.times_ps(42, 200), "{shape}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ_for_random_shapes() {
+        let p = ArrivalProcess::Poisson { rate_rps: 1e6 };
+        assert_ne!(p.times_ps(1, 64), p.times_ps(2, 64));
+        // Uniform ignores the seed by construction.
+        let u = ArrivalProcess::Uniform { rate_rps: 1e6 };
+        assert_eq!(u.times_ps(1, 64), u.times_ps(2, 64));
+    }
+
+    #[test]
+    fn timestamps_are_strictly_increasing() {
+        for shape in ["uniform", "poisson", "bursty", "diurnal"] {
+            let p = ArrivalProcess::parse(shape).unwrap().with_rate(2e6);
+            let ts = p.times_ps(7, 500);
+            for w in ts.windows(2) {
+                assert!(w[0] < w[1], "{shape}: {} !< {}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_mean_rate_is_close() {
+        let rate = 1e6;
+        let n = 20_000;
+        let ts = ArrivalProcess::Poisson { rate_rps: rate }.times_ps(9, n);
+        let span_s = *ts.last().unwrap() as f64 * 1e-12;
+        let achieved = n as f64 / span_s;
+        assert!(
+            (achieved / rate - 1.0).abs() < 0.05,
+            "achieved {achieved:.0} rps vs {rate:.0}"
+        );
+    }
+
+    #[test]
+    fn uniform_matches_exact_spacing() {
+        // 20 kHz == the old 50 us jitter.
+        let ts = ArrivalProcess::Uniform { rate_rps: 20_000.0 }.times_ps(0, 4);
+        assert_eq!(ts, vec![50_000_000, 100_000_000, 150_000_000, 200_000_000]);
+    }
+
+    #[test]
+    fn bursty_is_denser_in_burst_window() {
+        let p = ArrivalProcess::Bursty {
+            rate_rps: 1e6,
+            burst_x: 8.0,
+            period_s: 100e-6,
+            duty: 0.25,
+        };
+        let ts = p.times_ps(3, 5_000);
+        let period_ps = 100_000_000u64;
+        let duty_ps = period_ps / 4;
+        let in_burst = ts.iter().filter(|&&t| t % period_ps < duty_ps).count();
+        // 25% of the time at 8x rate should hold well over half the mass.
+        assert!(
+            in_burst * 2 > ts.len(),
+            "only {in_burst}/{} arrivals in burst windows",
+            ts.len()
+        );
+    }
+
+    #[test]
+    fn trace_extends_past_its_end_by_last_gap() {
+        let p = ArrivalProcess::Trace { times_ps: vec![10, 30] };
+        assert_eq!(p.times_ps(0, 4), vec![10, 30, 50, 70]);
+        assert_eq!(p.times_ps(0, 1), vec![10]);
+    }
+
+    #[test]
+    fn gaps_round_up_to_nanoseconds() {
+        let p = ArrivalProcess::Trace { times_ps: vec![500, 1_500, 1_501] };
+        let gaps = p.gaps(0, 3);
+        assert_eq!(gaps[0], Duration::from_nanos(1)); // 500 ps -> 1 ns
+        assert_eq!(gaps[1], Duration::from_nanos(1)); // 1000 ps
+        assert_eq!(gaps[2], Duration::from_nanos(1)); // 1 ps -> 1 ns
+    }
+}

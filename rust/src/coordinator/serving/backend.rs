@@ -1,0 +1,284 @@
+//! Per-replica execution backends of the serving simulator.
+//!
+//! A [`Backend`] answers one question: how long does a batch of `b`
+//! requests take on one replica's chip? Three implementations:
+//!
+//! * [`TraceMachineBackend`] — the honest one. Automap-searches the
+//!   model, compiles the best mapping at every batch size 1..=max, and
+//!   runs the full trace machine (nested fast-forward intact) to fill a
+//!   service-time table; the degraded table re-simulates the
+//!   `degrade_mapping` remap of the first degradable tile, so a rejoined
+//!   replica pays the measured digital-fallback cost, not a guess.
+//! * [`InstantMockBackend`] — closed-form affine cost for unit tests and
+//!   property tests: no simulation, microsecond-scale virtual times.
+//! * [`PjrtBackend`] — calibrates the table from wall-clock runs of an
+//!   AOT-compiled [`LoadedModel`]; lets the same router/SLO pipeline be
+//!   driven by real runtime numbers when PJRT artifacts are available.
+//!
+//! Tables are in virtual picoseconds. All backends are `Sync` so load
+//! points can fan out over `util::parallel` sharing one backend.
+
+use std::time::Instant;
+
+use crate::config::{SystemConfig, SystemKind};
+use crate::coordinator::{run_workload, RunOptions};
+use crate::nn::LayerGraph;
+use crate::runtime::LoadedModel;
+use crate::util::parallel;
+use crate::workload::automap::{self, SearchOptions, TopologyBudget};
+use crate::workload::compile::mapping::Mapping;
+use crate::workload::{compile, WorkloadError};
+
+/// Batch service-time source of one replica. `batch_ps(b)` must be
+/// defined for `1 <= b <= max_batch()` and should be monotone in `b`.
+pub trait Backend: Sync {
+    /// Human-readable descriptor for reports.
+    fn label(&self) -> String;
+    /// Largest batch one replica executes at once.
+    fn max_batch(&self) -> usize;
+    /// Service time of a healthy replica executing a batch of `b`.
+    fn batch_ps(&self, b: usize) -> u64;
+    /// Service time after a tile failure + `degrade_mapping` rejoin.
+    /// Defaults to the healthy cost (a backend with nothing to degrade).
+    fn degraded_batch_ps(&self, b: usize) -> u64 {
+        self.batch_ps(b)
+    }
+    /// Descriptor of the degraded mapping, when one exists.
+    fn degraded_label(&self) -> Option<String> {
+        None
+    }
+}
+
+/// Affine-cost mock: `batch_ps(b) = base_ps + per_request_ps * b`,
+/// degraded costs scaled by `degraded_x`. Instant to construct — the
+/// unit/property-test backend.
+#[derive(Clone, Debug)]
+pub struct InstantMockBackend {
+    pub base_ps: u64,
+    pub per_request_ps: u64,
+    pub degraded_x: u64,
+    pub max_batch: usize,
+}
+
+impl Default for InstantMockBackend {
+    fn default() -> InstantMockBackend {
+        InstantMockBackend { base_ps: 10_000, per_request_ps: 1_000, degraded_x: 3, max_batch: 8 }
+    }
+}
+
+impl Backend for InstantMockBackend {
+    fn label(&self) -> String {
+        format!(
+            "instant-mock[{}+{}*b ps, degraded x{}]",
+            self.base_ps, self.per_request_ps, self.degraded_x
+        )
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn batch_ps(&self, b: usize) -> u64 {
+        let b = b.clamp(1, self.max_batch) as u64;
+        self.base_ps + self.per_request_ps * b
+    }
+
+    fn degraded_batch_ps(&self, b: usize) -> u64 {
+        self.batch_ps(b) * self.degraded_x.max(1)
+    }
+
+    fn degraded_label(&self) -> Option<String> {
+        Some(format!("mock degraded (x{})", self.degraded_x.max(1)))
+    }
+}
+
+/// The trace-machine backend: serving numbers inherit the simulator's
+/// fidelity because every table entry *is* a full-system simulation.
+pub struct TraceMachineBackend {
+    desc: String,
+    degraded_desc: Option<String>,
+    max_batch: usize,
+    /// `healthy_ps[b - 1]` = simulated time of a `b`-inference trace.
+    healthy_ps: Vec<u64>,
+    degraded_ps: Vec<u64>,
+}
+
+impl TraceMachineBackend {
+    /// Search + simulate an MLP of the given layer shape.
+    pub fn build(
+        shape: &[u64],
+        system: SystemKind,
+        max_batch: usize,
+        jobs: usize,
+    ) -> Result<TraceMachineBackend, WorkloadError> {
+        let graph = LayerGraph::mlp(shape);
+        TraceMachineBackend::build_graph(&graph, system, max_batch, jobs)
+    }
+
+    /// Search the graph under the system's topology budget, then fill
+    /// the healthy and degraded service-time tables by simulation.
+    pub fn build_graph(
+        graph: &LayerGraph,
+        system: SystemKind,
+        max_batch: usize,
+        jobs: usize,
+    ) -> Result<TraceMachineBackend, WorkloadError> {
+        let max_batch = max_batch.max(1);
+        let cfg = SystemConfig::for_kind(system);
+        let budget = TopologyBudget::for_config(&cfg);
+        let out = automap::search_opts(
+            graph,
+            &budget,
+            &cfg,
+            &SearchOptions { top_k: 2, jobs, ..SearchOptions::default() },
+        )?;
+        let best = out.ranked.first().ok_or_else(|| {
+            WorkloadError::InvalidMapping("automap found no feasible candidate".into())
+        })?;
+
+        let table = |mapping: &Mapping| -> Result<Vec<u64>, WorkloadError> {
+            let sizes: Vec<u32> = (1..=max_batch as u32).collect();
+            parallel::parallel_map(sizes, jobs, |b| {
+                let w = compile::compile(graph, mapping, b)?;
+                let r = run_workload(system, w, &RunOptions::default())?;
+                Ok(SystemConfig::s_to_ps(r.time_s).max(1))
+            })
+            .into_iter()
+            .collect()
+        };
+        let healthy_ps = table(&best.mapping)?;
+
+        // Degraded table: remap the first tile that hosts an analog
+        // region and re-simulate. An all-digital winner has nothing to
+        // degrade — the rejoined replica then serves at healthy cost.
+        let mut degraded_desc = None;
+        let mut degraded_ps = healthy_ps.clone();
+        for tile in 0..best.mapping.tiles.len() {
+            if let Ok(d) = automap::degrade_mapping(graph, &best.mapping, tile, &budget) {
+                degraded_ps = table(&d.mapping)?;
+                degraded_desc = Some(d.desc);
+                break;
+            }
+        }
+
+        Ok(TraceMachineBackend {
+            desc: best.desc.clone(),
+            degraded_desc,
+            max_batch,
+            healthy_ps,
+            degraded_ps,
+        })
+    }
+
+    /// The searched mapping's descriptor (e.g. `"s2 r2 pp AD|DA"`).
+    pub fn mapping_desc(&self) -> &str {
+        &self.desc
+    }
+}
+
+impl Backend for TraceMachineBackend {
+    fn label(&self) -> String {
+        format!("trace-machine[{}]", self.desc)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn batch_ps(&self, b: usize) -> u64 {
+        self.healthy_ps[b.clamp(1, self.max_batch) - 1]
+    }
+
+    fn degraded_batch_ps(&self, b: usize) -> u64 {
+        self.degraded_ps[b.clamp(1, self.max_batch) - 1]
+    }
+
+    fn degraded_label(&self) -> Option<String> {
+        self.degraded_desc.clone()
+    }
+}
+
+/// Wall-clock-calibrated backend over the PJRT runtime. The AOT model
+/// has a fixed batch dimension, so one measured executable time covers
+/// every `b` (smaller batches are padded to the full dimension — the
+/// same packing `server::serve_batched` does).
+pub struct PjrtBackend {
+    label: String,
+    max_batch: usize,
+    batch_ps: u64,
+}
+
+impl PjrtBackend {
+    /// Time `iters` runs of the loaded model and keep the fastest
+    /// (minimum wall time is the standard noise-resistant calibration).
+    pub fn calibrate(
+        model: &LoadedModel,
+        per_request_elems: usize,
+        max_batch: usize,
+        iters: u32,
+    ) -> anyhow::Result<PjrtBackend> {
+        let max_batch = max_batch.max(1);
+        let packed = vec![0.1f32; max_batch * per_request_elems.max(1)];
+        let mut best_ns = u64::MAX;
+        for _ in 0..iters.max(1) {
+            let t0 = Instant::now();
+            model.run(&[packed.clone()])?;
+            best_ns = best_ns.min(t0.elapsed().as_nanos() as u64);
+        }
+        Ok(PjrtBackend {
+            label: format!("pjrt[batch {max_batch}, {best_ns} ns/batch]"),
+            max_batch,
+            batch_ps: best_ns.saturating_mul(1000).max(1),
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn label(&self) -> String {
+        self.label.clone()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn batch_ps(&self, _b: usize) -> u64 {
+        self.batch_ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_costs_are_affine_and_degraded_scales() {
+        let m = InstantMockBackend::default();
+        assert_eq!(m.batch_ps(1), 11_000);
+        assert_eq!(m.batch_ps(8), 18_000);
+        // Out-of-range batch sizes clamp instead of panicking.
+        assert_eq!(m.batch_ps(0), m.batch_ps(1));
+        assert_eq!(m.batch_ps(99), m.batch_ps(8));
+        assert_eq!(m.degraded_batch_ps(4), 3 * m.batch_ps(4));
+    }
+
+    #[test]
+    fn trace_backend_tables_are_monotone_and_degraded_is_slower() {
+        let b = TraceMachineBackend::build(&[256, 128, 64], SystemKind::HighPower, 4, 1).unwrap();
+        assert_eq!(b.max_batch(), 4);
+        for k in 1..4 {
+            assert!(
+                b.batch_ps(k) < b.batch_ps(k + 1),
+                "batch {k}: {} !< {}",
+                b.batch_ps(k),
+                b.batch_ps(k + 1)
+            );
+        }
+        // The best MLP mapping is analog, so a degradable tile exists
+        // and the digital-fallback table must not be faster.
+        assert!(b.degraded_label().is_some(), "expected a degradable analog mapping");
+        for k in 1..=4 {
+            assert!(b.degraded_batch_ps(k) >= b.batch_ps(k));
+        }
+    }
+}

@@ -1,0 +1,541 @@
+//! SLO-aware serving under overload and failure — the `alpine
+//! serve-bench` subsystem (ISSUE 9, ROADMAP item 1).
+//!
+//! `coordinator/server.rs` (the wall-clock PJRT batcher) grew into this
+//! package: a deterministic virtual-time load-testing harness that
+//! sweeps offered load against a cluster of model replicas sharded
+//! across simulated ALPINE chips.
+//!
+//! * [`backend`] — where a batch's service time comes from: the trace
+//!   machine (full-system simulation, nested fast-forward intact), a
+//!   calibrated PJRT runtime, or an instant mock for tests.
+//! * [`arrival`] — seeded open-loop arrival processes (uniform /
+//!   Poisson / bursty / diurnal / replayed trace).
+//! * [`replica`] / [`router`] — the discrete-event request path:
+//!   SLO-aware dynamic batching, admission control with queue-depth
+//!   backpressure, typed load-shedding, per-request deadlines with
+//!   timeout-drop, bounded retry with exponential backoff, and replica
+//!   failover with degraded-cost rejoin.
+//! * [`stats`] — typed resolution counters + latency percentiles (and
+//!   the wall-clock [`stats::ServerStats`] the PJRT path reports).
+//!
+//! Determinism: the event loop is single-threaded per load point and
+//! wall-clock-free; `--jobs` only fans independent load points out over
+//! `util::parallel` with per-point seeds derived from the base seed.
+//! Same seed => byte-identical `BENCH_serving.json` at any `--jobs N`.
+
+pub mod arrival;
+pub mod backend;
+pub mod replica;
+pub mod router;
+pub mod stats;
+
+pub use arrival::ArrivalProcess;
+pub use backend::{Backend, InstantMockBackend, PjrtBackend, TraceMachineBackend};
+pub use replica::Health;
+pub use router::{RouterPolicy, SimConfig, SimResult};
+pub use stats::{Counters, LatencyStats, RejectReason, ServerStats};
+
+use crate::config::SystemKind;
+use crate::util::parallel;
+use crate::workload::WorkloadError;
+
+/// Knobs of one `alpine serve-bench` invocation. The `Option` time
+/// knobs default to multiples of the backend's full-batch service time
+/// so one set of defaults is sane for microsecond-scale trace backends
+/// and millisecond-scale PJRT backends alike.
+#[derive(Clone, Debug)]
+pub struct ServeBenchOptions {
+    pub system: SystemKind,
+    pub seed: u64,
+    /// Requests offered per load point.
+    pub requests: u64,
+    pub replicas: usize,
+    /// Batch capacity per replica (also the trace backend's table size).
+    pub max_batch: usize,
+    /// Per-replica queue bound (admission control).
+    pub queue_cap: usize,
+    /// Per-request SLO; `None` = 10x the full-batch service time.
+    pub deadline_ps: Option<u64>,
+    /// Partial-batch wait; `None` = 1x the full-batch service time.
+    pub batch_wait_ps: Option<u64>,
+    pub max_retries: u32,
+    /// First-retry backoff; `None` = half the single-request service.
+    pub backoff_base_ps: Option<u64>,
+    /// Failure-to-rejoin repair time; `None` = 10x the full-batch
+    /// service time.
+    pub repair_ps: Option<u64>,
+    pub policy: RouterPolicy,
+    /// Arrival shape; its rate is overridden per load point.
+    pub arrival: ArrivalProcess,
+    /// Offered load per point, as fractions of the estimated saturation
+    /// throughput (`replicas * max_batch / batch_ps(max_batch)`).
+    pub load_fracs: Vec<f64>,
+    /// Hard-fail replica `r` at `frac` of each point's arrival span.
+    pub fail_replica: Option<(usize, f64)>,
+    /// MLP layer shape the trace backend searches and simulates.
+    pub shape: Vec<u64>,
+    pub jobs: usize,
+}
+
+impl Default for ServeBenchOptions {
+    fn default() -> ServeBenchOptions {
+        ServeBenchOptions {
+            system: SystemKind::HighPower,
+            seed: 0x5E21,
+            requests: 256,
+            replicas: 2,
+            max_batch: 8,
+            queue_cap: 32,
+            deadline_ps: None,
+            batch_wait_ps: None,
+            max_retries: 3,
+            backoff_base_ps: None,
+            repair_ps: None,
+            policy: RouterPolicy::LeastLoaded,
+            arrival: ArrivalProcess::Poisson { rate_rps: 0.0 },
+            load_fracs: vec![0.2, 0.4, 0.6, 0.8, 0.95, 1.1],
+            fail_replica: None,
+            shape: vec![256, 128, 64],
+            jobs: 1,
+        }
+    }
+}
+
+/// One point of the latency-vs-offered-load curve.
+#[derive(Clone, Debug)]
+pub struct LoadPoint {
+    /// Offered load as a fraction of estimated saturation.
+    pub load_frac: f64,
+    pub offered_rps: f64,
+    /// Served / makespan.
+    pub achieved_rps: f64,
+    pub counters: Counters,
+    pub mean_batch: f64,
+    pub p50_ps: u64,
+    pub p95_ps: u64,
+    pub p99_ps: u64,
+    pub mean_ps: u64,
+    pub max_ps: u64,
+    pub makespan_ps: u64,
+    pub per_replica_served: Vec<u64>,
+    /// When the failed replica was hard-failed / rejoined (if a fault
+    /// plan was active and the horizon reached the rejoin).
+    pub fail_at_ps: Option<u64>,
+    pub rejoin_at_ps: Option<u64>,
+}
+
+/// Full report of one `alpine serve-bench` invocation.
+#[derive(Clone, Debug)]
+pub struct ServeBenchReport {
+    pub system: SystemKind,
+    pub backend_desc: String,
+    pub degraded_desc: Option<String>,
+    pub replicas: usize,
+    pub max_batch: usize,
+    pub queue_cap: usize,
+    pub policy: RouterPolicy,
+    pub arrival_desc: String,
+    pub seed: u64,
+    pub requests_per_point: u64,
+    pub deadline_ps: u64,
+    pub batch_wait_ps: u64,
+    pub backoff_base_ps: u64,
+    pub repair_ps: u64,
+    pub max_retries: u32,
+    /// `replicas * max_batch / batch_ps(max_batch)`.
+    pub saturation_rps_est: f64,
+    /// Highest achieved throughput over the curve.
+    pub saturation_rps_measured: f64,
+    /// First load fraction (past the first point) whose p99 is >= 3x
+    /// the lowest point's p99 — the knee of the curve.
+    pub knee_frac: Option<f64>,
+    pub fail_replica: Option<(usize, f64)>,
+    /// Healthy batch service-time table, `[batch_ps(1), ..]`.
+    pub service_ps: Vec<u64>,
+    pub degraded_service_ps: Vec<u64>,
+    pub points: Vec<LoadPoint>,
+}
+
+/// Per-point seed: splitmix-style derivation so points are independent
+/// streams of the base seed regardless of evaluation order.
+fn point_seed(seed: u64, index: usize) -> u64 {
+    let mut z = seed ^ (index as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Sweep the load curve on an explicit backend (tests inject the
+/// instant mock here; `run_serve_bench` builds the trace backend).
+pub fn run_serve_bench_on(
+    opts: &ServeBenchOptions,
+    backend: &dyn Backend,
+) -> Result<ServeBenchReport, WorkloadError> {
+    let bad = |m: String| WorkloadError::InvalidMapping(m);
+    if opts.replicas == 0 {
+        return Err(bad("serve-bench needs at least one replica".into()));
+    }
+    if opts.requests == 0 {
+        return Err(bad("serve-bench needs at least one request per point".into()));
+    }
+    if opts.load_fracs.is_empty() || opts.load_fracs.iter().any(|&f| f <= 0.0) {
+        return Err(bad("load points must be positive fractions of saturation".into()));
+    }
+    if let Some((r, frac)) = opts.fail_replica {
+        if r >= opts.replicas {
+            return Err(bad(format!(
+                "--fail-replica {r}: only {} replica(s) configured",
+                opts.replicas
+            )));
+        }
+        if !(0.0..=1.0).contains(&frac) {
+            return Err(bad(format!("--fail-replica fraction {frac} outside [0, 1]")));
+        }
+    }
+
+    let bmax = backend.max_batch().max(1);
+    let full_batch_ps = backend.batch_ps(bmax).max(1);
+    let deadline_ps = opts.deadline_ps.unwrap_or(10 * full_batch_ps).max(1);
+    let batch_wait_ps = opts.batch_wait_ps.unwrap_or(full_batch_ps);
+    let backoff_base_ps = opts.backoff_base_ps.unwrap_or((backend.batch_ps(1) / 2).max(1));
+    let repair_ps = opts.repair_ps.unwrap_or(10 * full_batch_ps).max(1);
+    let saturation_rps_est =
+        opts.replicas as f64 * bmax as f64 / (full_batch_ps as f64 * 1e-12);
+
+    let items: Vec<(usize, f64)> = opts.load_fracs.iter().copied().enumerate().collect();
+    let points: Vec<LoadPoint> = parallel::parallel_map(items, opts.jobs, |(i, frac)| {
+        let offered_rps = saturation_rps_est * frac;
+        let arrivals = opts
+            .arrival
+            .with_rate(offered_rps)
+            .times_ps(point_seed(opts.seed, i), opts.requests as usize);
+        let fail = opts.fail_replica.map(|(r, f)| {
+            let a0 = arrivals[0];
+            let a1 = *arrivals.last().expect("non-empty arrivals");
+            (r, a0 + (((a1 - a0) as f64) * f).round() as u64)
+        });
+        let cfg = SimConfig {
+            backend,
+            replicas: opts.replicas,
+            queue_cap: opts.queue_cap.max(1),
+            deadline_ps,
+            batch_wait_ps,
+            max_retries: opts.max_retries,
+            backoff_base_ps,
+            repair_ps,
+            policy: opts.policy,
+            fail,
+        };
+        let sim = router::simulate(&cfg, &arrivals);
+        let makespan_s = sim.makespan_ps.max(1) as f64 * 1e-12;
+        LoadPoint {
+            load_frac: frac,
+            offered_rps,
+            achieved_rps: sim.counters.served as f64 / makespan_s,
+            mean_batch: sim.counters.mean_batch(),
+            p50_ps: sim.latencies.p50_ps(),
+            p95_ps: sim.latencies.p95_ps(),
+            p99_ps: sim.latencies.p99_ps(),
+            mean_ps: sim.latencies.mean_ps(),
+            max_ps: sim.latencies.max_ps(),
+            counters: sim.counters,
+            makespan_ps: sim.makespan_ps,
+            per_replica_served: sim.per_replica_served,
+            fail_at_ps: fail.map(|(_, t)| t),
+            rejoin_at_ps: sim.rejoin_at_ps,
+        }
+    });
+
+    let base_p99 = points.first().map(|p| p.p99_ps).unwrap_or(0);
+    let knee_frac = if base_p99 == 0 {
+        None
+    } else {
+        points.iter().skip(1).find(|p| p.p99_ps >= 3 * base_p99).map(|p| p.load_frac)
+    };
+    let saturation_rps_measured = points.iter().map(|p| p.achieved_rps).fold(0.0, f64::max);
+
+    Ok(ServeBenchReport {
+        system: opts.system,
+        backend_desc: backend.label(),
+        degraded_desc: backend.degraded_label(),
+        replicas: opts.replicas,
+        max_batch: bmax,
+        queue_cap: opts.queue_cap.max(1),
+        policy: opts.policy,
+        arrival_desc: opts.arrival.desc(),
+        seed: opts.seed,
+        requests_per_point: opts.requests,
+        deadline_ps,
+        batch_wait_ps,
+        backoff_base_ps,
+        repair_ps,
+        max_retries: opts.max_retries,
+        saturation_rps_est,
+        saturation_rps_measured,
+        knee_frac,
+        fail_replica: opts.fail_replica,
+        service_ps: (1..=bmax).map(|b| backend.batch_ps(b)).collect(),
+        degraded_service_ps: (1..=bmax).map(|b| backend.degraded_batch_ps(b)).collect(),
+        points,
+    })
+}
+
+/// Build the trace-machine backend for `opts.shape` and sweep the curve
+/// — the `alpine serve-bench` entry point.
+pub fn run_serve_bench(opts: &ServeBenchOptions) -> Result<ServeBenchReport, WorkloadError> {
+    let backend =
+        TraceMachineBackend::build(&opts.shape, opts.system, opts.max_batch, opts.jobs)?;
+    run_serve_bench_on(opts, &backend)
+}
+
+/// Minimal JSON string escaping (mapping descriptors may quote ids).
+fn esc(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+fn json_u64_list(vs: &[u64]) -> String {
+    vs.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ")
+}
+
+impl ServeBenchReport {
+    /// Hand-rolled JSON (serde is not in the offline vendor set).
+    /// Byte-identical for identical reports — the determinism tests
+    /// compare this string across `--jobs` values.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"system\": \"{}\",\n", self.system.name()));
+        s.push_str(&format!("  \"backend\": \"{}\",\n", esc(&self.backend_desc)));
+        s.push_str(&format!(
+            "  \"degraded_backend\": {},\n",
+            match &self.degraded_desc {
+                Some(d) => format!("\"{}\"", esc(d)),
+                None => "null".to_string(),
+            }
+        ));
+        s.push_str(&format!("  \"replicas\": {},\n", self.replicas));
+        s.push_str(&format!("  \"max_batch\": {},\n", self.max_batch));
+        s.push_str(&format!("  \"queue_cap\": {},\n", self.queue_cap));
+        s.push_str(&format!("  \"policy\": \"{}\",\n", self.policy.name()));
+        s.push_str(&format!("  \"arrival\": \"{}\",\n", esc(&self.arrival_desc)));
+        s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str(&format!("  \"requests_per_point\": {},\n", self.requests_per_point));
+        s.push_str(&format!("  \"deadline_ps\": {},\n", self.deadline_ps));
+        s.push_str(&format!("  \"batch_wait_ps\": {},\n", self.batch_wait_ps));
+        s.push_str(&format!("  \"backoff_base_ps\": {},\n", self.backoff_base_ps));
+        s.push_str(&format!("  \"repair_ps\": {},\n", self.repair_ps));
+        s.push_str(&format!("  \"max_retries\": {},\n", self.max_retries));
+        s.push_str(&format!("  \"saturation_rps_est\": {:.3},\n", self.saturation_rps_est));
+        s.push_str(&format!(
+            "  \"saturation_rps_measured\": {:.3},\n",
+            self.saturation_rps_measured
+        ));
+        s.push_str(&format!(
+            "  \"knee_load_frac\": {},\n",
+            match self.knee_frac {
+                Some(f) => format!("{f:.4}"),
+                None => "null".to_string(),
+            }
+        ));
+        s.push_str(&format!(
+            "  \"fail_replica\": {},\n",
+            match self.fail_replica {
+                Some((r, f)) => format!("{{\"replica\": {r}, \"at_frac\": {f:.4}}}"),
+                None => "null".to_string(),
+            }
+        ));
+        s.push_str(&format!("  \"service_ps\": [{}],\n", json_u64_list(&self.service_ps)));
+        s.push_str(&format!(
+            "  \"degraded_service_ps\": [{}],\n",
+            json_u64_list(&self.degraded_service_ps)
+        ));
+        s.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            let c = &p.counters;
+            s.push_str(&format!(
+                "    {{\"load_frac\": {:.4}, \"offered_rps\": {:.3}, \
+                 \"achieved_rps\": {:.3}, \"offered\": {}, \"served\": {}, \
+                 \"shed_queue_full\": {}, \"shed_no_replica\": {}, \
+                 \"shed_retries\": {}, \"shed_total\": {}, \"timed_out\": {}, \
+                 \"slo_violations\": {}, \"retries\": {}, \"failovers\": {}, \
+                 \"failover_served\": {}, \"failover_slo_ok\": {}, \
+                 \"batches\": {}, \"failed_batches\": {}, \"mean_batch\": {:.4}, \
+                 \"p50_ps\": {}, \"p95_ps\": {}, \"p99_ps\": {}, \"mean_ps\": {}, \
+                 \"max_ps\": {}, \"makespan_ps\": {}, \"per_replica_served\": [{}], \
+                 \"fail_at_ps\": {}, \"rejoin_at_ps\": {}}}{}\n",
+                p.load_frac,
+                p.offered_rps,
+                p.achieved_rps,
+                c.offered,
+                c.served,
+                c.shed_queue_full,
+                c.shed_no_replica,
+                c.shed_retries,
+                c.shed(),
+                c.timed_out,
+                c.slo_violations,
+                c.retries,
+                c.failovers,
+                c.failover_served,
+                c.failover_slo_ok,
+                c.batches,
+                c.failed_batches,
+                p.mean_batch,
+                p.p50_ps,
+                p.p95_ps,
+                p.p99_ps,
+                p.mean_ps,
+                p.max_ps,
+                p.makespan_ps,
+                json_u64_list(&p.per_replica_served),
+                match p.fail_at_ps {
+                    Some(t) => t.to_string(),
+                    None => "null".to_string(),
+                },
+                match p.rejoin_at_ps {
+                    Some(t) => t.to_string(),
+                    None => "null".to_string(),
+                },
+                if i + 1 < self.points.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// Persist the curve as `BENCH_serving.json` (or wherever `path` says).
+pub fn write_report(report: &ServeBenchReport, path: &str) -> std::io::Result<()> {
+    std::fs::write(path, report.to_json())?;
+    println!(
+        "serve-bench: wrote {} load point(s){} to {path}",
+        report.points.len(),
+        if report.fail_replica.is_some() { " + failure plan" } else { "" }
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mock_opts() -> (ServeBenchOptions, InstantMockBackend) {
+        let opts = ServeBenchOptions {
+            requests: 128,
+            queue_cap: 16,
+            load_fracs: vec![0.2, 0.6, 0.95, 2.0],
+            ..ServeBenchOptions::default()
+        };
+        (opts, InstantMockBackend::default())
+    }
+
+    #[test]
+    fn curve_has_knee_shape_and_conserves_everywhere() {
+        let (opts, backend) = mock_opts();
+        let report = run_serve_bench_on(&opts, &backend).unwrap();
+        assert_eq!(report.points.len(), 4);
+        for p in &report.points {
+            assert!(p.counters.conserved(), "{:?}", p.counters);
+            assert!(p.counters.served > 0, "every point should serve something");
+        }
+        let first = &report.points[0];
+        let last = &report.points[report.points.len() - 1];
+        assert!(
+            last.p99_ps > first.p99_ps,
+            "p99 must grow toward saturation: {} !> {}",
+            last.p99_ps,
+            first.p99_ps
+        );
+        // Past saturation the system sheds or violates SLOs.
+        assert!(
+            last.counters.shed() + last.counters.timed_out + last.counters.slo_violations > 0,
+            "overload point shows no distress: {:?}",
+            last.counters
+        );
+        assert!(report.saturation_rps_measured > 0.0);
+        assert!(report.saturation_rps_est > 0.0);
+    }
+
+    #[test]
+    fn same_seed_is_byte_identical_at_any_jobs() {
+        let (opts, backend) = mock_opts();
+        let a = run_serve_bench_on(&ServeBenchOptions { jobs: 1, ..opts.clone() }, &backend)
+            .unwrap()
+            .to_json();
+        let b = run_serve_bench_on(&ServeBenchOptions { jobs: 4, ..opts.clone() }, &backend)
+            .unwrap()
+            .to_json();
+        assert_eq!(a, b, "serve-bench must be byte-identical across --jobs");
+        // And a different seed must actually change the report.
+        let c = run_serve_bench_on(
+            &ServeBenchOptions { seed: opts.seed + 1, ..opts },
+            &backend,
+        )
+        .unwrap()
+        .to_json();
+        assert_ne!(a, c, "the seed must matter");
+    }
+
+    #[test]
+    fn mid_run_failure_fails_over_and_rejoins() {
+        let (mut opts, backend) = mock_opts();
+        opts.fail_replica = Some((1, 0.5));
+        opts.load_fracs = vec![0.8];
+        let report = run_serve_bench_on(&opts, &backend).unwrap();
+        let p = &report.points[0];
+        assert!(p.counters.conserved());
+        assert!(p.fail_at_ps.is_some());
+        assert!(
+            p.counters.failovers > 0 || p.counters.shed() > 0,
+            "a mid-run failure must be visible: {:?}",
+            p.counters
+        );
+        // The degraded service table is the mock's 3x scaling.
+        assert_eq!(report.degraded_service_ps[0], 3 * report.service_ps[0]);
+    }
+
+    #[test]
+    fn report_json_is_parseable_shape() {
+        let (opts, backend) = mock_opts();
+        let report = run_serve_bench_on(&opts, &backend).unwrap();
+        let text = report.to_json();
+        assert!(text.trim_start().starts_with('{'));
+        assert!(text.trim_end().ends_with('}'));
+        assert!(text.contains("\"points\": ["));
+        assert!(text.contains("\"p99_ps\""));
+        assert!(text.contains("\"saturation_rps_est\""));
+        assert!(text.contains("\"shed_queue_full\""));
+    }
+
+    #[test]
+    fn bad_options_are_clean_errors() {
+        let (opts, backend) = mock_opts();
+        let oob = ServeBenchOptions { fail_replica: Some((9, 0.5)), ..opts.clone() };
+        assert!(matches!(
+            run_serve_bench_on(&oob, &backend),
+            Err(WorkloadError::InvalidMapping(_))
+        ));
+        let empty = ServeBenchOptions { load_fracs: Vec::new(), ..opts.clone() };
+        assert!(run_serve_bench_on(&empty, &backend).is_err());
+        let zero = ServeBenchOptions { replicas: 0, ..opts };
+        assert!(run_serve_bench_on(&zero, &backend).is_err());
+    }
+
+    #[test]
+    fn point_seeds_are_distinct_streams() {
+        let s: Vec<u64> = (0..8).map(|i| point_seed(7, i)).collect();
+        for i in 0..s.len() {
+            for j in (i + 1)..s.len() {
+                assert_ne!(s[i], s[j]);
+            }
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! One model replica: a sharded ALPINE chip's queue, health, and
+//! in-flight batch state inside the serving simulation.
+
+use std::collections::VecDeque;
+
+/// Replica health, the router's health-check state machine:
+/// `Healthy -> Failed` on a hard tile failure, `Failed -> Degraded`
+/// when the replica rejoins after `degrade_mapping` re-simulation.
+/// A `Degraded` replica serves at the backend's degraded batch cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    Failed,
+    Degraded,
+}
+
+impl Health {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Failed => "failed",
+            Health::Degraded => "degraded",
+        }
+    }
+}
+
+/// One request inside the simulation. Latency and deadline are anchored
+/// to the *original* arrival time — a retried request does not get a
+/// fresh SLO budget.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub arrival_ps: u64,
+    pub deadline_ps: u64,
+    /// Retry attempts consumed (0 = first try).
+    pub attempts: u32,
+    /// Times this request was re-routed off a failed replica.
+    pub failovers: u32,
+}
+
+/// One replica's simulation state.
+#[derive(Debug)]
+pub struct Replica {
+    pub queue: VecDeque<Request>,
+    pub in_flight: Vec<Request>,
+    pub busy: bool,
+    pub health: Health,
+    /// Generation counter: bumped on every batch launch and on failure,
+    /// so stale `BatchDone` / `BatchTimer` events are recognised and
+    /// dropped instead of completing a batch the failure already ate.
+    pub gen: u64,
+    /// Pending batch timer (fire time, generation), if any — dedupes
+    /// timer events so a burst of arrivals schedules one wakeup.
+    pub timer: Option<(u64, u64)>,
+    pub served: u64,
+}
+
+impl Replica {
+    pub fn new() -> Replica {
+        Replica {
+            queue: VecDeque::new(),
+            in_flight: Vec::new(),
+            busy: false,
+            health: Health::Healthy,
+            gen: 0,
+            timer: None,
+            served: 0,
+        }
+    }
+
+    /// Queued + executing requests — the least-loaded routing metric.
+    pub fn load(&self) -> usize {
+        self.queue.len() + self.in_flight.len()
+    }
+
+    /// Can this replica admit one more request under `queue_cap`?
+    pub fn admits(&self, queue_cap: usize) -> bool {
+        self.health != Health::Failed && self.queue.len() < queue_cap
+    }
+}
+
+impl Default for Replica {
+    fn default() -> Replica {
+        Replica::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_respects_health_and_capacity() {
+        let mut r = Replica::new();
+        assert!(r.admits(1));
+        r.queue.push_back(Request {
+            id: 0,
+            arrival_ps: 0,
+            deadline_ps: 100,
+            attempts: 0,
+            failovers: 0,
+        });
+        assert!(!r.admits(1), "queue at capacity");
+        assert!(r.admits(2));
+        r.health = Health::Failed;
+        assert!(!r.admits(2), "failed replicas never admit");
+        r.health = Health::Degraded;
+        assert!(r.admits(2), "degraded replicas serve (at degraded cost)");
+        assert_eq!(r.load(), 1);
+    }
+}

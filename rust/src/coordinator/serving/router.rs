@@ -1,0 +1,516 @@
+//! The serving router: a deterministic discrete-event simulation of the
+//! request path over sharded replicas, in virtual picoseconds.
+//!
+//! One event loop owns everything — arrivals, SLO-aware batch launches,
+//! completions, hard replica failures, degraded rejoins. There is no
+//! wall clock and no thread interleaving anywhere on the simulated
+//! path, so a (config, arrival-trace) pair replays bit-identically on
+//! any machine; `--jobs` parallelism lives one level up, across
+//! independent load points.
+//!
+//! Robustness semantics (the ISSUE-9 pipeline):
+//!
+//! * **SLO-aware dynamic batching** — a replica launches either when
+//!   its queue reaches `max_batch`, or at
+//!   `min(oldest.deadline - service(b), oldest.arrival + batch_wait)`:
+//!   it waits for more requests only while waiting cannot blow the
+//!   oldest request's deadline (batch-deadline tradeoff, not
+//!   fill-to-capacity).
+//! * **Admission control** — per-replica bounded queues; when every
+//!   live replica is full the request is shed as a typed
+//!   `Rejected{queue_full}`; with no live replica at all,
+//!   `Rejected{no_healthy_replica}`.
+//! * **Timeout-drop** — queued requests whose deadline expires are
+//!   dropped (typed) before every launch; a retry arriving past its
+//!   deadline is dropped at routing.
+//! * **Retry + failover** — a hard replica failure kills the in-flight
+//!   batch; each victim retries with exponential backoff
+//!   (`backoff * 2^(attempts-1)`) up to `max_retries`, then is shed as
+//!   `Rejected{retries_exhausted}`. Queued requests on the failed
+//!   replica fail over to survivors immediately. The replica rejoins
+//!   `repair_ps` later in `Degraded` health, serving at the backend's
+//!   degraded (re-simulated `degrade_mapping`) cost.
+//!
+//! The loop asserts conservation before returning: every offered
+//! request resolves to exactly one of served / typed-shed /
+//! typed-timeout.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::backend::Backend;
+use super::replica::{Health, Replica, Request};
+use super::stats::{Counters, LatencyStats};
+
+/// How the router picks a replica for an admitted request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Rotate over replicas, skipping failed/full ones.
+    RoundRobin,
+    /// Fewest queued + in-flight requests (lowest index breaks ties).
+    LeastLoaded,
+    /// `id % replicas` is the preferred shard (weights stay hot in its
+    /// AIMC tiles); fall forward to the next live replica when the
+    /// preferred one is failed or full.
+    CacheAffinity,
+}
+
+impl RouterPolicy {
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s {
+            "rr" | "round-robin" => Some(RouterPolicy::RoundRobin),
+            "least" | "least-loaded" => Some(RouterPolicy::LeastLoaded),
+            "affinity" | "cache-affinity" => Some(RouterPolicy::CacheAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastLoaded => "least-loaded",
+            RouterPolicy::CacheAffinity => "cache-affinity",
+        }
+    }
+}
+
+/// One load point's simulation knobs (all times in virtual ps).
+pub struct SimConfig<'a> {
+    pub backend: &'a dyn Backend,
+    pub replicas: usize,
+    /// Per-replica queue bound (admission control).
+    pub queue_cap: usize,
+    /// Per-request latency SLO, measured from arrival.
+    pub deadline_ps: u64,
+    /// Longest a partial batch waits for company.
+    pub batch_wait_ps: u64,
+    /// Retry budget after replica failures.
+    pub max_retries: u32,
+    /// First-retry backoff; doubles per attempt.
+    pub backoff_base_ps: u64,
+    /// Failure-to-rejoin repair time (models `degrade_mapping`
+    /// re-simulation + tile reprogramming).
+    pub repair_ps: u64,
+    pub policy: RouterPolicy,
+    /// Hard-fail replica `r` at absolute time `at_ps`.
+    pub fail: Option<(usize, u64)>,
+}
+
+/// Outcome of one simulated load point.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub counters: Counters,
+    pub latencies: LatencyStats,
+    /// Time of the last event processed (run horizon).
+    pub makespan_ps: u64,
+    pub per_replica_served: Vec<u64>,
+    /// When the failed replica rejoined in `Degraded` health, if it did
+    /// within the horizon.
+    pub rejoin_at_ps: Option<u64>,
+}
+
+enum EvKind {
+    Arrive(Request),
+    BatchTimer { r: usize, gen: u64 },
+    BatchDone { r: usize, gen: u64 },
+    Fail { r: usize },
+    Rejoin { r: usize },
+}
+
+/// Event queue: a min-heap of (time, seq). `seq` is the push order, so
+/// simultaneous events pop in a deterministic total order and payloads
+/// live in a slab indexed by seq.
+struct EventQueue {
+    heap: BinaryHeap<Reverse<(u64, u64)>>,
+    slab: Vec<Option<EvKind>>,
+}
+
+impl EventQueue {
+    fn new(capacity: usize) -> EventQueue {
+        EventQueue { heap: BinaryHeap::with_capacity(capacity), slab: Vec::with_capacity(capacity) }
+    }
+
+    fn push(&mut self, t: u64, kind: EvKind) {
+        let seq = self.slab.len() as u64;
+        self.slab.push(Some(kind));
+        self.heap.push(Reverse((t, seq)));
+    }
+
+    fn pop(&mut self) -> Option<(u64, EvKind)> {
+        let Reverse((t, seq)) = self.heap.pop()?;
+        let kind = self.slab[seq as usize].take().expect("event popped twice");
+        Some((t, kind))
+    }
+}
+
+/// Service time of a batch of `b` on replica `r` given its health.
+fn service_ps(cfg: &SimConfig, health: Health, b: usize) -> u64 {
+    match health {
+        Health::Degraded => cfg.backend.degraded_batch_ps(b).max(1),
+        _ => cfg.backend.batch_ps(b).max(1),
+    }
+}
+
+/// Launch a batch on replica `i` if its SLO-aware condition is met, or
+/// (re)schedule the batch timer. Idempotent — safe to call after every
+/// event that could change the replica's queue or health.
+fn maybe_launch(
+    i: usize,
+    now: u64,
+    cfg: &SimConfig,
+    reps: &mut [Replica],
+    counters: &mut Counters,
+    events: &mut EventQueue,
+) {
+    let max_batch = cfg.backend.max_batch().max(1);
+    let r = &mut reps[i];
+    if r.busy || r.health == Health::Failed {
+        return;
+    }
+    // Timeout-drop: expired requests can never be served in time.
+    let mut dropped = 0u64;
+    r.queue.retain(|q| {
+        if q.deadline_ps <= now {
+            dropped += 1;
+            false
+        } else {
+            true
+        }
+    });
+    counters.timed_out += dropped;
+    if r.queue.is_empty() {
+        return;
+    }
+    let b = r.queue.len().min(max_batch);
+    let service = service_ps(cfg, r.health, b);
+    let oldest = r.queue.front().expect("non-empty queue");
+    // Latest launch that still meets the oldest request's deadline,
+    // capped by the batching window from its arrival.
+    let fire_deadline = oldest.deadline_ps.saturating_sub(service);
+    let window = oldest.arrival_ps.saturating_add(cfg.batch_wait_ps);
+    let fire_at = fire_deadline.min(window);
+    if r.queue.len() >= max_batch || now >= fire_at {
+        let batch: Vec<Request> = r.queue.drain(..b).collect();
+        r.gen += 1;
+        r.busy = true;
+        r.timer = None;
+        r.in_flight = batch;
+        counters.batches += 1;
+        counters.batched_requests += b as u64;
+        events.push(now + service, EvKind::BatchDone { r: i, gen: r.gen });
+    } else {
+        // One pending wakeup is enough unless an earlier one is needed.
+        match r.timer {
+            Some((t, g)) if g == r.gen && t <= fire_at => {}
+            _ => {
+                r.timer = Some((fire_at, r.gen));
+                events.push(fire_at, EvKind::BatchTimer { r: i, gen: r.gen });
+            }
+        }
+    }
+}
+
+/// Run the discrete-event loop over the arrival trace. Panics if the
+/// conservation invariant breaks — that is a router bug, not a load
+/// condition.
+pub fn simulate(cfg: &SimConfig, arrivals_ps: &[u64]) -> SimResult {
+    assert!(cfg.replicas >= 1, "serving needs at least one replica");
+    let n = cfg.replicas;
+    let mut reps: Vec<Replica> = (0..n).map(|_| Replica::new()).collect();
+    let mut counters = Counters { offered: arrivals_ps.len() as u64, ..Counters::default() };
+    let mut latencies = LatencyStats::default();
+    let mut events = EventQueue::new(arrivals_ps.len() * 2 + 8);
+    let mut rr_cursor = 0usize;
+    let mut rejoin_at_ps = None;
+    let mut makespan_ps = 0u64;
+
+    for (id, &t) in arrivals_ps.iter().enumerate() {
+        events.push(
+            t,
+            EvKind::Arrive(Request {
+                id: id as u64,
+                arrival_ps: t,
+                deadline_ps: t.saturating_add(cfg.deadline_ps),
+                attempts: 0,
+                failovers: 0,
+            }),
+        );
+    }
+    if let Some((r, at_ps)) = cfg.fail {
+        assert!(r < n, "--fail-replica {r}: only {n} replica(s)");
+        events.push(at_ps, EvKind::Fail { r });
+    }
+
+    while let Some((now, kind)) = events.pop() {
+        makespan_ps = makespan_ps.max(now);
+        match kind {
+            EvKind::Arrive(req) => {
+                // A retried request may already be past its deadline.
+                if req.deadline_ps <= now {
+                    counters.timed_out += 1;
+                    continue;
+                }
+                if reps.iter().all(|r| r.health == Health::Failed) {
+                    counters.shed_no_replica += 1;
+                    continue;
+                }
+                let pick = match cfg.policy {
+                    RouterPolicy::RoundRobin => {
+                        let found = (0..n)
+                            .map(|k| (rr_cursor + k) % n)
+                            .find(|&i| reps[i].admits(cfg.queue_cap));
+                        if let Some(i) = found {
+                            rr_cursor = (i + 1) % n;
+                        }
+                        found
+                    }
+                    RouterPolicy::LeastLoaded => (0..n)
+                        .filter(|&i| reps[i].admits(cfg.queue_cap))
+                        .min_by_key(|&i| (reps[i].load(), i)),
+                    RouterPolicy::CacheAffinity => {
+                        let pref = (req.id % n as u64) as usize;
+                        (0..n)
+                            .map(|k| (pref + k) % n)
+                            .find(|&i| reps[i].admits(cfg.queue_cap))
+                    }
+                };
+                match pick {
+                    None => counters.shed_queue_full += 1,
+                    Some(i) => {
+                        reps[i].queue.push_back(req);
+                        maybe_launch(i, now, cfg, &mut reps, &mut counters, &mut events);
+                    }
+                }
+            }
+            EvKind::BatchTimer { r: ri, gen } => {
+                if reps[ri].gen != gen {
+                    continue; // a launch or failure superseded this wakeup
+                }
+                reps[ri].timer = None;
+                maybe_launch(ri, now, cfg, &mut reps, &mut counters, &mut events);
+            }
+            EvKind::BatchDone { r: ri, gen } => {
+                if reps[ri].gen != gen || !reps[ri].busy {
+                    continue; // the failure event already ate this batch
+                }
+                reps[ri].busy = false;
+                let batch = std::mem::take(&mut reps[ri].in_flight);
+                for q in batch {
+                    counters.served += 1;
+                    reps[ri].served += 1;
+                    latencies.record(now - q.arrival_ps);
+                    if now > q.deadline_ps {
+                        counters.slo_violations += 1;
+                    }
+                    if q.failovers > 0 {
+                        counters.failover_served += 1;
+                        if now <= q.deadline_ps {
+                            counters.failover_slo_ok += 1;
+                        }
+                    }
+                }
+                maybe_launch(ri, now, cfg, &mut reps, &mut counters, &mut events);
+            }
+            EvKind::Fail { r: ri } => {
+                if reps[ri].health == Health::Failed {
+                    continue;
+                }
+                reps[ri].health = Health::Failed;
+                reps[ri].gen += 1;
+                reps[ri].timer = None;
+                if reps[ri].busy {
+                    counters.failed_batches += 1;
+                }
+                reps[ri].busy = false;
+                // In-flight victims: bounded retry with exponential
+                // backoff (they consumed a service attempt).
+                let orphans = std::mem::take(&mut reps[ri].in_flight);
+                for mut q in orphans {
+                    q.attempts += 1;
+                    q.failovers += 1;
+                    if q.attempts > cfg.max_retries {
+                        counters.shed_retries += 1;
+                    } else {
+                        counters.retries += 1;
+                        counters.failovers += 1;
+                        let backoff = cfg
+                            .backoff_base_ps
+                            .max(1)
+                            .saturating_mul(1u64 << (q.attempts - 1).min(16));
+                        events.push(now + backoff, EvKind::Arrive(q));
+                    }
+                }
+                // Queued requests were never attempted: fail over to the
+                // survivors immediately, no retry budget consumed.
+                let queued: Vec<Request> = reps[ri].queue.drain(..).collect();
+                for mut q in queued {
+                    q.failovers += 1;
+                    counters.failovers += 1;
+                    events.push(now, EvKind::Arrive(q));
+                }
+                events.push(now + cfg.repair_ps.max(1), EvKind::Rejoin { r: ri });
+            }
+            EvKind::Rejoin { r: ri } => {
+                reps[ri].health = Health::Degraded;
+                rejoin_at_ps = Some(now);
+                maybe_launch(ri, now, cfg, &mut reps, &mut counters, &mut events);
+            }
+        }
+    }
+
+    assert!(
+        counters.conserved(),
+        "serving conservation violated: served {} + shed {} + timed_out {} != offered {}",
+        counters.served,
+        counters.shed(),
+        counters.timed_out,
+        counters.offered
+    );
+    SimResult {
+        counters,
+        latencies,
+        makespan_ps,
+        per_replica_served: reps.iter().map(|r| r.served).collect(),
+        rejoin_at_ps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serving::backend::InstantMockBackend;
+
+    fn mock() -> InstantMockBackend {
+        InstantMockBackend::default() // batch_ps(b) = 10_000 + 1_000 b
+    }
+
+    fn base_cfg(backend: &InstantMockBackend) -> SimConfig<'_> {
+        SimConfig {
+            backend,
+            replicas: 2,
+            queue_cap: 32,
+            deadline_ps: 200_000,
+            batch_wait_ps: 10_000,
+            max_retries: 3,
+            backoff_base_ps: 1_000,
+            repair_ps: 100_000,
+            policy: RouterPolicy::LeastLoaded,
+            fail: None,
+        }
+    }
+
+    /// Evenly spaced arrivals, one every `gap` ps starting at `gap`.
+    fn uniform(n: usize, gap: u64) -> Vec<u64> {
+        (1..=n as u64).map(|k| k * gap).collect()
+    }
+
+    #[test]
+    fn trickle_serves_everything_within_deadline() {
+        let b = mock();
+        let cfg = base_cfg(&b);
+        // One request per 50 us >> service time: no queueing at all.
+        let res = simulate(&cfg, &uniform(20, 50_000_000));
+        assert_eq!(res.counters.served, 20);
+        assert_eq!(res.counters.shed(), 0);
+        assert_eq!(res.counters.timed_out, 0);
+        assert_eq!(res.counters.slo_violations, 0);
+        assert!(res.counters.conserved());
+        // Latency = batch_wait (no company arrives) + single service.
+        assert_eq!(res.latencies.max_ps(), cfg.batch_wait_ps + b.batch_ps(1));
+    }
+
+    #[test]
+    fn full_queue_batches_launch_immediately() {
+        let b = mock();
+        let cfg = SimConfig { replicas: 1, ..base_cfg(&b) };
+        // 8 simultaneous arrivals == max_batch: launches with no wait.
+        let res = simulate(&cfg, &vec![100; 8]);
+        assert_eq!(res.counters.served, 8);
+        assert_eq!(res.counters.batches, 1);
+        assert_eq!(res.latencies.max_ps(), b.batch_ps(8));
+    }
+
+    #[test]
+    fn deadline_pressure_launches_partial_batches_early() {
+        let b = mock();
+        // Deadline so tight the router cannot afford the full window.
+        let cfg = SimConfig {
+            replicas: 1,
+            deadline_ps: b.batch_ps(1) + 2_000,
+            batch_wait_ps: 1_000_000,
+            ..base_cfg(&b)
+        };
+        let res = simulate(&cfg, &[100]);
+        assert_eq!(res.counters.served, 1);
+        assert_eq!(res.counters.slo_violations, 0, "SLO-aware launch must beat the deadline");
+        // Launched at deadline - service, not after the 1 ms window.
+        assert_eq!(res.latencies.max_ps(), 2_000 + b.batch_ps(1));
+    }
+
+    #[test]
+    fn round_robin_rotates_and_affinity_pins() {
+        let b = mock();
+        let arrivals = uniform(8, 50_000_000);
+        let rr = simulate(
+            &SimConfig { policy: RouterPolicy::RoundRobin, ..base_cfg(&b) },
+            &arrivals,
+        );
+        assert_eq!(rr.per_replica_served, vec![4, 4]);
+        let aff = simulate(
+            &SimConfig { policy: RouterPolicy::CacheAffinity, ..base_cfg(&b) },
+            &arrivals,
+        );
+        // ids alternate 0/1 -> shards alternate too.
+        assert_eq!(aff.per_replica_served, vec![4, 4]);
+    }
+
+    #[test]
+    fn overload_sheds_typed_and_conserves() {
+        let b = mock();
+        let cfg = SimConfig { replicas: 1, queue_cap: 4, ..base_cfg(&b) };
+        // 64 simultaneous arrivals into one replica with queue cap 4:
+        // the queue fills, the rest shed at admission.
+        let res = simulate(&cfg, &vec![100; 64]);
+        assert!(res.counters.shed_queue_full > 0, "backpressure must shed");
+        assert!(res.counters.conserved());
+        assert_eq!(res.counters.shed_no_replica, 0);
+    }
+
+    #[test]
+    fn failure_with_single_replica_sheds_no_healthy_until_rejoin() {
+        let b = mock();
+        let cfg = SimConfig {
+            replicas: 1,
+            fail: Some((0, 150)),
+            repair_ps: 1_000_000,
+            deadline_ps: 10_000_000,
+            ..base_cfg(&b)
+        };
+        // First arrival is queued when the failure hits (it fails over,
+        // finds no live replica, and sheds typed); the rest arrive while
+        // the only replica is down.
+        let arrivals = vec![100, 200_000, 300_000];
+        let res = simulate(&cfg, &arrivals);
+        assert!(res.counters.shed_no_replica > 0, "{:?}", res.counters);
+        assert!(res.counters.conserved());
+        assert_eq!(res.rejoin_at_ps, Some(150 + 1_000_000));
+    }
+
+    #[test]
+    fn degraded_rejoin_serves_at_degraded_cost() {
+        let b = mock();
+        let cfg = SimConfig {
+            replicas: 1,
+            fail: Some((0, 10)),
+            repair_ps: 1_000,
+            deadline_ps: 10_000_000,
+            batch_wait_ps: 0,
+            max_retries: 3,
+            ..base_cfg(&b)
+        };
+        // Arrives after the rejoin: served by the degraded replica.
+        let res = simulate(&cfg, &[5_000]);
+        assert_eq!(res.counters.served, 1);
+        assert_eq!(res.latencies.max_ps(), b.degraded_batch_ps(1));
+    }
+}

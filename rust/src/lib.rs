@@ -52,6 +52,9 @@ pub mod workload;
 pub mod prelude {
     pub use crate::aimclib::faults::FaultPlan;
     pub use crate::config::{SystemConfig, SystemKind};
+    pub use crate::coordinator::serving::{
+        run_serve_bench, ArrivalProcess, Backend, RouterPolicy, ServeBenchOptions,
+    };
     pub use crate::coordinator::{run_workload, CaseResult, RunOptions};
     pub use crate::nn::{
         ActKind, GraphBuilder, GraphError, LayerGraph, LayerKind, MergeOp, NodeId,

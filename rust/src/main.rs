@@ -12,6 +12,9 @@
 use alpine::config::{SystemConfig, SystemKind};
 use alpine::coordinator::automap::{self as automap_driver, AutomapOptions};
 use alpine::coordinator::faults::{self as faults_driver, FaultScenarioOptions};
+use alpine::coordinator::serving::{
+    self as serving_driver, ArrivalProcess, RouterPolicy, ServeBenchOptions,
+};
 use alpine::coordinator::{experiments, run_workload, RunOptions};
 use alpine::nn::{CnnVariant, LayerGraph};
 use alpine::report;
@@ -83,6 +86,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "moe" => cmd_moe(&args[1..]),
         "transformer" => cmd_transformer(&args[1..]),
         "faults" => cmd_faults(&args[1..]),
+        "serve-bench" => cmd_serve_bench(&args[1..]),
         "fig7" => {
             let rows = experiments::fig7_mlp(opt_u32(&args[1..], "--inferences", experiments::MLP_INFERENCES)?)?;
             report::aggregate_table("Fig. 7 — MLP aggregate", &rows).print();
@@ -191,6 +195,21 @@ fn print_help() {
          \x20                          --fail-tile injects a hard failure\n\
          \x20                          and reruns with the digital-fallback\n\
          \x20                          remap instead of crashing\n\
+         \x20 serve-bench [--requests N] [--replicas N] [--max-batch N]\n\
+         \x20     [--queue-cap N] [--deadline-us X] [--batch-wait-us X]\n\
+         \x20     [--retries N] [--backoff-us X] [--repair-us X]\n\
+         \x20     [--policy rr|least-loaded|affinity]\n\
+         \x20     [--arrival uniform|poisson|bursty|diurnal]\n\
+         \x20     [--burst-x X] [--period-us X] [--duty F] [--amplitude F]\n\
+         \x20     [--load-points 0.2,0.6,...] [--fail-replica R@mid|R@F]\n\
+         \x20     [--seed S] [--shape AxBxC] [--system hp|lp] [--out FILE]\n\
+         \x20                          sweep offered load against model\n\
+         \x20                          replicas sharded across simulated\n\
+         \x20                          ALPINE chips (SLO-aware batching,\n\
+         \x20                          admission control, bounded retries,\n\
+         \x20                          failover + degraded rejoin); print\n\
+         \x20                          the latency-vs-load curve and write\n\
+         \x20                          BENCH_serving.json\n\
          \x20 fig7|fig8|fig10|fig11|fig13|fig14|loose   regenerate a figure\n\
          \x20 validate                 PJRT probe-check all AOT artifacts\n\
          \n\
@@ -639,6 +658,178 @@ fn cmd_faults(args: &[String]) -> Result<()> {
     }
     let out = opt(args, "--out").unwrap_or_else(|| "BENCH_faults.json".into());
     faults_driver::write_report(&rep, &out)?;
+    Ok(())
+}
+
+/// `serve-bench` — the ISSUE-9 serving deliverable: sweep offered load
+/// against a cluster of model replicas sharded across simulated ALPINE
+/// chips (SLO-aware dynamic batching, admission control + backpressure,
+/// per-request deadlines, bounded retries, replica failover with
+/// degraded-cost rejoin), print the latency-vs-offered-load curve, and
+/// write it to `--out` (default BENCH_serving.json). Deterministic:
+/// same seed => byte-identical JSON at any `--jobs N`.
+fn cmd_serve_bench(args: &[String]) -> Result<()> {
+    let system = SystemKind::parse(&opt(args, "--system").unwrap_or_else(|| "hp".into()))
+        .context("bad --system (hp|lp)")?;
+    let mut opts =
+        ServeBenchOptions { system, jobs: parallel::jobs(), ..ServeBenchOptions::default() };
+    if let Some(v) = opt(args, "--seed") {
+        opts.seed = v.parse().context("--seed expects a number")?;
+    }
+    opts.requests = opt_u32(args, "--requests", opts.requests as u32)? as u64;
+    opts.replicas = opt_u32(args, "--replicas", opts.replicas as u32)? as usize;
+    opts.max_batch = opt_u32(args, "--max-batch", opts.max_batch as u32)? as usize;
+    opts.queue_cap = opt_u32(args, "--queue-cap", opts.queue_cap as u32)? as usize;
+    opts.max_retries = opt_u32(args, "--retries", opts.max_retries)?;
+    let us_knob = |name: &str| -> Result<Option<u64>> {
+        match opt(args, name) {
+            None => Ok(None),
+            Some(v) => {
+                let x: f64 = v.parse().with_context(|| format!("{name} expects microseconds"))?;
+                if !x.is_finite() || x <= 0.0 {
+                    bail!("{name} expects microseconds > 0");
+                }
+                Ok(Some((x * 1e6).round() as u64))
+            }
+        }
+    };
+    if let Some(v) = us_knob("--deadline-us")? {
+        opts.deadline_ps = Some(v);
+    }
+    if let Some(v) = us_knob("--batch-wait-us")? {
+        opts.batch_wait_ps = Some(v);
+    }
+    if let Some(v) = us_knob("--backoff-us")? {
+        opts.backoff_base_ps = Some(v);
+    }
+    if let Some(v) = us_knob("--repair-us")? {
+        opts.repair_ps = Some(v);
+    }
+    if let Some(v) = opt(args, "--policy") {
+        opts.policy = RouterPolicy::parse(&v)
+            .with_context(|| format!("bad --policy {v:?} (rr|least-loaded|affinity)"))?;
+    }
+    if let Some(v) = opt(args, "--arrival") {
+        opts.arrival = ArrivalProcess::parse(&v)
+            .with_context(|| format!("bad --arrival {v:?} (uniform|poisson|bursty|diurnal)"))?;
+    }
+    // Shape knobs of the non-homogeneous arrival processes.
+    match &mut opts.arrival {
+        ArrivalProcess::Bursty { burst_x, period_s, duty, .. } => {
+            if let Some(v) = opt(args, "--burst-x") {
+                *burst_x = v.parse().context("--burst-x expects a multiplier >= 1")?;
+            }
+            if let Some(v) = opt(args, "--period-us") {
+                *period_s =
+                    v.parse::<f64>().context("--period-us expects microseconds")? * 1e-6;
+            }
+            if let Some(v) = opt(args, "--duty") {
+                *duty = v.parse().context("--duty expects a fraction in (0, 1)")?;
+            }
+        }
+        ArrivalProcess::Diurnal { amplitude, period_s, .. } => {
+            if let Some(v) = opt(args, "--amplitude") {
+                *amplitude = v.parse().context("--amplitude expects a fraction in [0, 1]")?;
+            }
+            if let Some(v) = opt(args, "--period-us") {
+                *period_s =
+                    v.parse::<f64>().context("--period-us expects microseconds")? * 1e-6;
+            }
+        }
+        _ => {}
+    }
+    if let Some(v) = opt(args, "--load-points") {
+        opts.load_fracs = v
+            .split(',')
+            .map(|p| {
+                p.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("--load-points: bad fraction {p:?}"))
+            })
+            .collect::<Result<Vec<f64>>>()?;
+    }
+    if let Some(v) = opt(args, "--fail-replica") {
+        let (r, frac) = v
+            .split_once('@')
+            .and_then(|(r, f)| {
+                let r = r.trim().parse().ok()?;
+                let f = if f.trim() == "mid" { 0.5 } else { f.trim().parse().ok()? };
+                Some((r, f))
+            })
+            .context("--fail-replica expects R@FRAC, e.g. 1@mid or 1@0.75")?;
+        opts.fail_replica = Some((r, frac));
+    }
+    if let Some(v) = opt(args, "--shape") {
+        opts.shape = MlpShape::parse(&v)?.dims().to_vec();
+    }
+
+    println!(
+        "serve-bench: {} replica(s) x batch {} on {}, policy {}, arrival {}, seed {:#x} ...",
+        opts.replicas,
+        opts.max_batch,
+        system.name(),
+        opts.policy.name(),
+        opts.arrival.desc(),
+        opts.seed,
+    );
+    let rep = serving_driver::run_serve_bench(&opts)?;
+    println!(
+        "backend: {} — batch {} in {:.3} us healthy / {:.3} us degraded{}",
+        rep.backend_desc,
+        rep.max_batch,
+        *rep.service_ps.last().unwrap() as f64 / 1e6,
+        *rep.degraded_service_ps.last().unwrap() as f64 / 1e6,
+        match &rep.degraded_desc {
+            Some(d) => format!(" ({d})"),
+            None => String::new(),
+        },
+    );
+    let mut t = Table::new(
+        "latency vs offered load",
+        &[
+            "load", "offered [rps]", "served", "shed", "t/out", "slo-x", "retry", "f/over",
+            "batch", "p50 [us]", "p95 [us]", "p99 [us]", "achieved [rps]",
+        ],
+    );
+    for p in &rep.points {
+        t.row(vec![
+            format!("{:.2}x", p.load_frac),
+            format!("{:.3e}", p.offered_rps),
+            p.counters.served.to_string(),
+            p.counters.shed().to_string(),
+            p.counters.timed_out.to_string(),
+            p.counters.slo_violations.to_string(),
+            p.counters.retries.to_string(),
+            p.counters.failovers.to_string(),
+            format!("{:.1}", p.mean_batch),
+            format!("{:.3}", p.p50_ps as f64 / 1e6),
+            format!("{:.3}", p.p95_ps as f64 / 1e6),
+            format!("{:.3}", p.p99_ps as f64 / 1e6),
+            format!("{:.3e}", p.achieved_rps),
+        ]);
+    }
+    t.print();
+    println!(
+        "saturation: {:.3e} rps estimated / {:.3e} rps measured{}",
+        rep.saturation_rps_est,
+        rep.saturation_rps_measured,
+        match rep.knee_frac {
+            Some(f) => format!("; p99 knee at {f:.2}x offered load"),
+            None => "; no p99 knee inside the sweep".into(),
+        },
+    );
+    if let Some((r, f)) = rep.fail_replica {
+        let failovers: u64 = rep.points.iter().map(|p| p.counters.failovers).sum();
+        let fo_served: u64 = rep.points.iter().map(|p| p.counters.failover_served).sum();
+        let fo_slo_ok: u64 = rep.points.iter().map(|p| p.counters.failover_slo_ok).sum();
+        println!(
+            "failure plan: replica {r} hard-fails at {f:.2} of each point's span — \
+             {failovers} failover(s); {fo_served} failed-over request(s) served, \
+             {fo_slo_ok} within SLO"
+        );
+    }
+    let out = opt(args, "--out").unwrap_or_else(|| "BENCH_serving.json".into());
+    serving_driver::write_report(&rep, &out)?;
     Ok(())
 }
 

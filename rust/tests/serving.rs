@@ -1,0 +1,211 @@
+//! The serving-robustness gate: admission control, timeout-drop, and
+//! bounded retry must resolve every offered request to a *typed*
+//! outcome (served / shed / timed-out — conservation), replica
+//! hard-failure must end in failover-or-typed-shed and never a panic,
+//! and a serve-bench report must be byte-identical in its seed at any
+//! `--jobs N`. CI runs this file under the `fault-determinism` job and
+//! the byte-identity test under the rust determinism gate.
+
+use alpine::config::SystemKind;
+use alpine::coordinator::serving::backend::InstantMockBackend;
+use alpine::coordinator::serving::router::{self, SimConfig};
+use alpine::coordinator::serving::{
+    run_serve_bench_on, ArrivalProcess, Backend, RouterPolicy, ServeBenchOptions,
+    TraceMachineBackend,
+};
+use alpine::util::miniprop;
+
+fn mock() -> InstantMockBackend {
+    InstantMockBackend::default() // batch_ps(b) = 10_000 + 1_000 b, degraded x3
+}
+
+fn base_cfg(backend: &InstantMockBackend) -> SimConfig<'_> {
+    SimConfig {
+        backend,
+        replicas: 1,
+        queue_cap: 32,
+        deadline_ps: 200_000,
+        batch_wait_ps: 0,
+        max_retries: 3,
+        backoff_base_ps: 1_000,
+        repair_ps: 1_000_000,
+        policy: RouterPolicy::LeastLoaded,
+        fail: None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Typed resolution: admission control, timeout, retry budget
+// ---------------------------------------------------------------------
+
+#[test]
+fn admission_backpressure_sheds_typed_queue_full() {
+    let b = mock();
+    let cfg = SimConfig { queue_cap: 4, ..base_cfg(&b) };
+    // 64 simultaneous arrivals into one replica with a 4-deep queue:
+    // whatever admission cannot hold is a typed queue_full shed, never
+    // a silent drop.
+    let res = router::simulate(&cfg, &vec![100; 64]);
+    assert!(res.counters.shed_queue_full > 0);
+    assert_eq!(res.counters.shed_no_replica, 0);
+    assert_eq!(res.counters.shed_retries, 0);
+    assert!(res.counters.conserved(), "{:?}", res.counters);
+}
+
+#[test]
+fn expired_queue_entries_time_out_typed() {
+    let b = mock();
+    // One replica, 16 simultaneous arrivals, deadline 20 us. The first
+    // launches alone (batch_wait 0, 11 us service, on time); the next 8
+    // launch at 11.1 us and finish late (29 us > deadline: served, SLO
+    // violated); the last 7 expire in the queue and are timeout-dropped.
+    let cfg = SimConfig { deadline_ps: 20_000, ..base_cfg(&b) };
+    let res = router::simulate(&cfg, &vec![100; 16]);
+    assert_eq!(res.counters.served, 9, "{:?}", res.counters);
+    assert_eq!(res.counters.slo_violations, 8);
+    assert_eq!(res.counters.timed_out, 7);
+    assert_eq!(res.counters.shed(), 0);
+    assert!(res.counters.conserved());
+}
+
+#[test]
+fn exhausted_retry_budget_sheds_typed() {
+    let b = mock();
+    // The only replica fails mid-batch with a zero retry budget: the
+    // in-flight victim is shed as retries_exhausted, not retried into
+    // the void and not dropped silently.
+    let cfg = SimConfig { max_retries: 0, fail: Some((0, 5_000)), ..base_cfg(&b) };
+    let res = router::simulate(&cfg, &[100]);
+    assert_eq!(res.counters.served, 0);
+    assert_eq!(res.counters.shed_retries, 1);
+    assert_eq!(res.counters.retries, 0);
+    assert_eq!(res.counters.failed_batches, 1);
+    assert!(res.counters.conserved());
+}
+
+#[test]
+fn failover_retries_onto_survivor_within_deadline() {
+    let b = mock();
+    // Two replicas; replica 0 fails 5 us into the first batch. The
+    // victim retries with one backoff step (1 us) onto replica 1 and
+    // completes at 17 us — well inside the 200 us deadline, so the
+    // failover is SLO-clean and fully accounted.
+    let cfg = SimConfig { replicas: 2, fail: Some((0, 5_000)), ..base_cfg(&b) };
+    let res = router::simulate(&cfg, &[100]);
+    assert_eq!(res.counters.served, 1);
+    assert_eq!(res.counters.retries, 1);
+    assert_eq!(res.counters.failovers, 1);
+    assert_eq!(res.counters.failover_served, 1);
+    assert_eq!(res.counters.failover_slo_ok, 1, "failover must land within the deadline budget");
+    assert_eq!(res.counters.slo_violations, 0);
+    assert_eq!(res.per_replica_served, vec![0, 1]);
+    // fail at 5 us + 1 us backoff + 11 us single service, measured from
+    // the original 0.1 us arrival.
+    assert_eq!(res.latencies.max_ps(), 5_000 + 1_000 + b.batch_ps(1) - 100);
+    assert!(res.counters.conserved());
+}
+
+// ---------------------------------------------------------------------
+// Determinism gates
+// ---------------------------------------------------------------------
+
+/// CI's serving determinism gate: the full serve-bench report must be
+/// byte-identical in its seed regardless of `--jobs`.
+#[test]
+fn serve_bench_report_is_bit_identical_across_jobs() {
+    let backend = mock();
+    let opts = ServeBenchOptions {
+        requests: 128,
+        queue_cap: 16,
+        load_fracs: vec![0.3, 0.9, 1.8],
+        fail_replica: Some((1, 0.5)),
+        arrival: ArrivalProcess::parse("bursty").unwrap(),
+        ..ServeBenchOptions::default()
+    };
+    let serial = run_serve_bench_on(&ServeBenchOptions { jobs: 1, ..opts.clone() }, &backend)
+        .unwrap()
+        .to_json();
+    let parallel = run_serve_bench_on(&ServeBenchOptions { jobs: 4, ..opts.clone() }, &backend)
+        .unwrap()
+        .to_json();
+    assert_eq!(serial, parallel, "serve-bench must be byte-identical across --jobs");
+    let reseeded = run_serve_bench_on(&ServeBenchOptions { seed: opts.seed + 1, ..opts }, &backend)
+        .unwrap()
+        .to_json();
+    assert_ne!(serial, reseeded, "the seed must actually steer the arrivals");
+}
+
+/// Property: under *any* sane configuration, a mid-run replica
+/// hard-failure yields failover-or-typed-shed — never a panic, never a
+/// lost request — and the same seed replays byte-for-byte.
+#[test]
+fn replica_hard_failure_is_failover_or_typed_shed_never_a_panic() {
+    let backend = mock();
+    miniprop::check("serving-failure-conserves", 0x5E21_FA11, |rng| {
+        let replicas = 1 + rng.below(4) as usize;
+        let policy = match rng.below(3) {
+            0 => RouterPolicy::RoundRobin,
+            1 => RouterPolicy::LeastLoaded,
+            _ => RouterPolicy::CacheAffinity,
+        };
+        let opts = ServeBenchOptions {
+            seed: rng.next_u64(),
+            requests: 48,
+            replicas,
+            queue_cap: 1 + rng.below(24) as usize,
+            deadline_ps: Some(20_000 + rng.below(400_000)),
+            max_retries: rng.below(4) as u32,
+            policy,
+            load_fracs: vec![0.1 + rng.next_f64() * 2.4],
+            fail_replica: Some((rng.below(replicas as u64) as usize, rng.next_f64())),
+            ..ServeBenchOptions::default()
+        };
+        // The router asserts conservation internally; any violation or
+        // panic fails the property with a replayable (case, seed) pair.
+        let rep = run_serve_bench_on(&opts, &backend).unwrap();
+        for p in &rep.points {
+            assert!(p.counters.conserved(), "{:?}", p.counters);
+            assert_eq!(
+                p.counters.resolved(),
+                opts.requests,
+                "every offered request needs a typed resolution"
+            );
+        }
+        let replay = run_serve_bench_on(&opts, &backend).unwrap();
+        assert_eq!(rep.to_json(), replay.to_json(), "same seed must replay byte-for-byte");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Trace-machine smoke: the honest backend end-to-end
+// ---------------------------------------------------------------------
+
+#[test]
+fn trace_backend_serve_bench_end_to_end_with_failover() {
+    let backend =
+        TraceMachineBackend::build(&[256, 128, 64], SystemKind::HighPower, 4, 1).unwrap();
+    let opts = ServeBenchOptions {
+        requests: 32,
+        max_batch: 4,
+        load_fracs: vec![0.5, 1.2],
+        fail_replica: Some((1, 0.5)),
+        ..ServeBenchOptions::default()
+    };
+    let rep = run_serve_bench_on(&opts, &backend).unwrap();
+    assert_eq!(rep.points.len(), 2);
+    for p in &rep.points {
+        assert!(p.counters.conserved(), "{:?}", p.counters);
+        assert!(p.counters.served > 0);
+        assert!(p.fail_at_ps.is_some());
+    }
+    // The MLP winner is analog, so the degraded remap exists and its
+    // rejoin cost is no faster than healthy service.
+    assert!(rep.degraded_desc.is_some(), "expected a degradable analog mapping");
+    for (h, d) in rep.service_ps.iter().zip(&rep.degraded_service_ps) {
+        assert!(d >= h);
+    }
+    assert!(backend.batch_ps(1) > 0);
+    let json = rep.to_json();
+    assert!(json.contains("\"failovers\""));
+    assert!(json.contains("\"degraded_service_ps\""));
+}

@@ -27,9 +27,36 @@ import os
 import sys
 
 
+def flatten_serving(report):
+    """Flatten a serve-bench report (BENCH_serving.json) into benchkit
+    shape so the same regression gate covers serving latency.
+
+    Tracked metrics, all bigger-is-worse in ns:
+      serving/p99_at_{load}x      tail latency at each offered-load point
+      serving/ns_per_req_at_saturation   1e9 / measured saturation rps
+    """
+    flat = {}
+    for p in report.get("points", []):
+        key = f"serving/p99_at_{p['load_frac']:.2f}x"
+        ns = p["p99_ps"] / 1000.0
+        flat[key] = {"mean_ns": ns, "min_ns": ns, "stddev_ns": 0.0, "iters": 1}
+    sat = report.get("saturation_rps_measured", 0.0)
+    if sat > 0:
+        ns = 1e9 / sat
+        flat["serving/ns_per_req_at_saturation"] = {
+            "mean_ns": ns, "min_ns": ns, "stddev_ns": 0.0, "iters": 1,
+        }
+    return flat
+
+
 def load(path):
     with open(path) as f:
-        return json.load(f)
+        data = json.load(f)
+    # serve-bench reports carry a "points" curve instead of flat benchkit
+    # entries; normalize them so one comparison loop handles both.
+    if isinstance(data, dict) and "points" in data:
+        return flatten_serving(data)
+    return data
 
 
 def fmt_ns(ns):
