@@ -19,6 +19,28 @@ use crate::util::rng::Rng;
 /// means "no observable drift yet".
 const DRIFT_T0_S: f64 = 1.0;
 
+/// Picoseconds per second — the machine's virtual clock runs in ps.
+const PS_PER_S: f64 = 1.0e12;
+
+/// Iterative program-and-verify time per word line (PCM cells are
+/// programmed one row at a time; Le Gallo et al. report µs-scale
+/// multi-pulse sequences per line).
+pub const PROGRAM_ROW_S: f64 = 1.0e-6;
+
+/// Program energy per cell (SET/RESET pulse train, ~100 pJ for PCM).
+pub const PROGRAM_CELL_J: f64 = 100.0e-12;
+
+/// Closed-form conductance decay of the drift law at age `t_s` seconds
+/// since programming: `(t/t0)^-nu`, 1.0 when disabled (`nu <= 0`) or
+/// not yet observable (`t_s <= t0`). Shared by [`FaultPlan`] and the
+/// simulator tile health sensor so both layers report the same physics.
+pub fn drift_decay(t_s: f64, nu: f64) -> f64 {
+    if nu <= 0.0 || t_s <= DRIFT_T0_S {
+        return 1.0;
+    }
+    (t_s / DRIFT_T0_S).powf(-nu)
+}
+
 /// Seed-driven device fault plan. All rates are intensities in `[0, 1]`
 /// (or physical units where noted); every field at its default disables
 /// that fault.
@@ -81,10 +103,7 @@ impl FaultPlan {
     /// Multiplicative conductance decay factor of the drift law at
     /// `drift_t_s` (1.0 when drift is disabled or not yet observable).
     pub fn drift_factor(&self) -> f64 {
-        if self.drift_nu <= 0.0 || self.drift_t_s <= DRIFT_T0_S {
-            return 1.0;
-        }
-        (self.drift_t_s / DRIFT_T0_S).powf(-self.drift_nu)
+        drift_decay(self.drift_t_s, self.drift_nu)
     }
 
     /// Perturb programmed weight codes: drift decay, then Gaussian
@@ -130,6 +149,107 @@ impl FaultPlan {
             }
         }
         out
+    }
+}
+
+/// Per-tile drift state keyed on the *programming timestamp* of the
+/// machine's virtual clock, so `G(t) = G(t0) * (t/t0)^-nu` (and the
+/// [`assess_mvm`] accuracy proxy derived from it) are functions of
+/// virtual time rather than a fixed intensity knob. Reprogramming
+/// resets the timestamp at the modeled [`reprogram_cost`].
+///
+/// Two physical effects age a tile (Le Gallo et al.):
+/// - the mean conductance decays by `(t/t0)^-nu`;
+/// - per-device dispersion of `nu` spreads the decay, which the plan
+///   models as Gaussian programming noise growing as
+///   `nu_sigma * ln(t/t0)` — this is what eventually breaks argmax
+///   agreement, since a *uniform* decay alone rescales every output.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftState {
+    /// Virtual-time programming timestamp t0, picoseconds.
+    pub programmed_at_ps: u64,
+    /// Mean drift exponent nu (~0.05 for PCM; 0 disables drift).
+    pub nu: f64,
+    /// Per-device nu dispersion: the plan's noise sigma at age t is
+    /// `nu_sigma * ln(t/t0)` (0 disables the stochastic component).
+    pub nu_sigma: f64,
+    /// Seed of the derived plan's RNG stream.
+    pub seed: u64,
+}
+
+impl DriftState {
+    /// A tile programmed at virtual time zero.
+    pub fn new(seed: u64, nu: f64, nu_sigma: f64) -> DriftState {
+        DriftState { programmed_at_ps: 0, nu, nu_sigma, seed }
+    }
+
+    /// Seconds since programming at virtual time `now_ps` (0 when the
+    /// clock has not reached the programming timestamp yet).
+    pub fn age_s(&self, now_ps: u64) -> f64 {
+        now_ps.saturating_sub(self.programmed_at_ps) as f64 / PS_PER_S
+    }
+
+    /// Mean conductance decay factor at virtual time `now_ps`.
+    pub fn drift_factor_at(&self, now_ps: u64) -> f64 {
+        drift_decay(self.age_s(now_ps), self.nu)
+    }
+
+    /// The [`FaultPlan`] this tile's age implies at virtual time
+    /// `now_ps`: time-parameterized decay plus log-time-growing noise.
+    /// Fresh tiles (age <= t0) yield `FaultPlan::none()`.
+    pub fn plan_at(&self, now_ps: u64) -> FaultPlan {
+        let age = self.age_s(now_ps);
+        if age <= DRIFT_T0_S {
+            return FaultPlan { seed: self.seed, ..FaultPlan::none() };
+        }
+        FaultPlan {
+            seed: self.seed,
+            noise_sigma: (self.nu_sigma * (age / DRIFT_T0_S).ln()).max(0.0) as f32,
+            drift_t_s: age,
+            drift_nu: self.nu,
+            ..FaultPlan::none()
+        }
+    }
+
+    /// Accuracy proxy of this tile at virtual time `now_ps` (see
+    /// [`assess_mvm`]).
+    pub fn assess_at(
+        &self,
+        now_ps: u64,
+        rows: usize,
+        cols: usize,
+        tile_rows: usize,
+        tile_cols: usize,
+        batch: usize,
+    ) -> FaultImpact {
+        assess_mvm(&self.plan_at(now_ps), rows, cols, tile_rows, tile_cols, batch)
+    }
+
+    /// Reprogram the tile at virtual time `now_ps`: resets t0 so the
+    /// drift clock restarts. The time/energy price is modeled by
+    /// [`reprogram_cost`]; charging it is the caller's job (the serving
+    /// layer books it as replica downtime).
+    pub fn reprogram(&mut self, now_ps: u64) {
+        self.programmed_at_ps = now_ps;
+    }
+}
+
+/// Modeled cost of reprogramming (refreshing) a crossbar tile.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReprogramCost {
+    /// Wall time of the program-and-verify sequence, seconds.
+    pub time_s: f64,
+    /// Total program pulse energy, joules.
+    pub energy_j: f64,
+}
+
+/// Price of refreshing a `rows x cols` tile: rows are programmed one
+/// word line at a time ([`PROGRAM_ROW_S`]), every cell takes a pulse
+/// train ([`PROGRAM_CELL_J`]).
+pub fn reprogram_cost(rows: usize, cols: usize) -> ReprogramCost {
+    ReprogramCost {
+        time_s: rows as f64 * PROGRAM_ROW_S,
+        energy_j: (rows * cols) as f64 * PROGRAM_CELL_J,
     }
 }
 
@@ -261,6 +381,50 @@ mod tests {
         assert!(severe.mse > mild.mse, "mild {} severe {}", mild.mse, severe.mse);
         assert!(severe.top1_agreement <= mild.top1_agreement);
         assert!(severe.top1_agreement < 1.0);
+    }
+
+    #[test]
+    fn drift_state_ages_with_virtual_time_and_reprogram_resets_it() {
+        const S: u64 = 1_000_000_000_000; // 1 s in ps
+        let mut d = DriftState::new(77, 0.05, 0.01);
+        // Fresh: within t0 the derived plan is the identity.
+        assert!(d.plan_at(S / 2).is_none());
+        assert_eq!(d.drift_factor_at(S / 2), 1.0);
+        // Aged: decay < 1 and noise grows with log-age.
+        let old = d.plan_at(1_000_000 * S);
+        assert!(old.drift_factor() < 1.0);
+        assert!(old.noise_sigma > 0.0);
+        let older = d.plan_at(10_000_000 * S);
+        assert!(older.drift_factor() < old.drift_factor());
+        assert!(older.noise_sigma > old.noise_sigma);
+        // Age is relative to t0, not absolute time.
+        d.reprogram(1_000_000 * S);
+        assert!(d.plan_at(1_000_000 * S).is_none());
+        assert_eq!(d.age_s(1_000_000 * S), 0.0);
+        let rejuvenated = d.plan_at(1_001_000 * S);
+        assert_eq!(rejuvenated.drift_t_s, 1_000.0);
+        assert!(rejuvenated.drift_factor() > old.drift_factor());
+    }
+
+    #[test]
+    fn drift_state_accuracy_proxy_degrades_with_age() {
+        const S: u64 = 1_000_000_000_000;
+        let d = DriftState::new(13, 0.05, 0.02);
+        let fresh = d.assess_at(0, 64, 32, 64, 32, 16);
+        assert_eq!(fresh.mse, 0.0);
+        assert_eq!(fresh.top1_agreement, 1.0);
+        let aged = d.assess_at(100_000_000 * S, 64, 32, 64, 32, 16);
+        assert!(aged.mse > 0.0);
+        assert!(aged.top1_agreement < 1.0, "top1 {}", aged.top1_agreement);
+    }
+
+    #[test]
+    fn reprogram_cost_scales_with_tile_dims() {
+        let small = reprogram_cost(64, 64);
+        let big = reprogram_cost(256, 256);
+        assert_eq!(small.time_s, 64.0 * PROGRAM_ROW_S);
+        assert_eq!(big.energy_j, 256.0 * 256.0 * PROGRAM_CELL_J);
+        assert!(big.time_s > small.time_s && big.energy_j > small.energy_j);
     }
 
     #[test]

@@ -5,12 +5,13 @@
 pub mod automap;
 pub mod experiments;
 pub mod faults;
+pub mod reliability;
 pub mod server;
 pub mod serving;
 
 use crate::config::{SystemConfig, SystemKind};
 use crate::energy::{self, EnergyBreakdown};
-use crate::sim::{Machine, RunError, TileFaultModel};
+use crate::sim::{Machine, RunError, TileDriftSpec, TileFaultModel};
 use crate::stats::{RoiTimes, RunStats};
 use crate::workload::Workload;
 
@@ -52,6 +53,11 @@ pub struct RunOptions {
     /// faults` scenario driver). Tile indices must be valid for the
     /// workload's machine spec; empty is the fault-free path.
     pub faults: Vec<(usize, TileFaultModel)>,
+    /// Per-tile conductance-drift models (`Machine::set_tile_drift`).
+    /// Accuracy-only: attaching specs — active or inactive — leaves
+    /// `RunStats` bit-identical and keeps fast-forward enabled
+    /// (pinned by `tests/faults.rs` / `tests/fastforward.rs`).
+    pub drift: Vec<(usize, TileDriftSpec)>,
     /// Replay-identical fast-forward over detected steady-state periods
     /// (`Machine::set_fast_forward`).
     pub fast_forward: bool,
@@ -73,6 +79,7 @@ impl Default for RunOptions {
     fn default() -> RunOptions {
         RunOptions {
             faults: Vec::new(),
+            drift: Vec::new(),
             fast_forward: true,
             nested_ff: None,
             batched_streams: true,
@@ -85,6 +92,11 @@ impl RunOptions {
     /// `Default` plus per-tile fault models.
     pub fn with_faults(faults: Vec<(usize, TileFaultModel)>) -> RunOptions {
         RunOptions { faults, ..RunOptions::default() }
+    }
+
+    /// `Default` plus per-tile drift models.
+    pub fn with_drift(drift: Vec<(usize, TileDriftSpec)>) -> RunOptions {
+        RunOptions { drift, ..RunOptions::default() }
     }
 }
 
@@ -111,6 +123,9 @@ pub fn run_workload(
     machine.set_batched_streams(opts.batched_streams);
     for &(tile, model) in &opts.faults {
         machine.set_tile_fault(tile, model);
+    }
+    for &(tile, spec) in &opts.drift {
+        machine.set_tile_drift(tile, spec);
     }
     let stats: RunStats = machine.run(traces)?;
     let energy = energy::compute(&cfg, &stats);

@@ -1,0 +1,588 @@
+//! The `alpine reliability` scenario driver (ISSUE 10): sweep virtual
+//! horizon x recalibration policy over the automap-best pipeline and
+//! measure what conductance drift does to a serving fleet —
+//!
+//! * **accuracy-proxy timeline**: the fleet's worst replica proxy over
+//!   virtual time, reconstructed from the drift model and the completed
+//!   recalibration windows;
+//! * **accuracy SLO**: typed `accuracy_slo` sheds and the
+//!   `served_below_slo` known-stale ledger — a drifted fleet is never
+//!   silently wrong;
+//! * **availability**: the staggered recalibration floor
+//!   (`min_available_replicas >= N-1`);
+//! * **throughput cost**: achieved rps, recal count, and total
+//!   reprogram downtime of each policy.
+//!
+//! Drift is a power law (`G(t) ~ t^-nu` with log-time dispersion), so
+//! the age at which a tile crosses the SLO is roughly
+//! `exp(f * ln(horizon))` for the crossing log-fraction `f` — refresh
+//! cadence must track the *crossing age*, not a calendar fraction of
+//! the horizon. The health-check period is derived from the sampled
+//! model (half the SLO-crossing age) so the threshold policy can react
+//! in time; the fixed policy defaults to the calendar period
+//! `horizon / 8`, which demonstrates exactly why calendar-period
+//! refresh is the wrong knob for power-law drift.
+//!
+//! Determinism: the accuracy model is sampled once from the seeded
+//! [`DriftState`] checker, every (policy, horizon) cell re-derives its
+//! arrival trace from the horizon alone, and cells fan out over
+//! `util::parallel` in input order — reports are byte-identical at any
+//! `--jobs N`.
+
+use crate::aimclib::faults::{reprogram_cost, DriftState};
+use crate::config::{SystemConfig, SystemKind};
+use crate::coordinator::serving::{
+    router, AccuracyModel, Backend, Counters, RecalConfig, RecalPolicy, RecalWindow,
+    RouterPolicy, SimConfig, TraceMachineBackend,
+};
+use crate::util::parallel;
+use crate::workload::WorkloadError;
+
+use super::faults::DRIFT_NU;
+
+/// Picoseconds per second.
+const PS_PER_S: f64 = 1.0e12;
+
+/// Knobs of one `alpine reliability` invocation.
+#[derive(Clone, Debug)]
+pub struct ReliabilityOptions {
+    pub system: SystemKind,
+    pub seed: u64,
+    /// Sample count of the drift -> accuracy-proxy table.
+    pub steps: usize,
+    /// Virtual horizons swept, seconds.
+    pub horizons_s: Vec<f64>,
+    /// Requests per cell, spread uniformly over the horizon (ids span
+    /// the permille space, so `sensitive_permille` bites exactly).
+    pub requests: u64,
+    pub replicas: usize,
+    pub max_batch: usize,
+    pub queue_cap: usize,
+    /// Drift exponent (`faults::DRIFT_NU` by default).
+    pub nu: f64,
+    /// Log-time conductance-dispersion growth rate.
+    pub nu_sigma: f64,
+    /// Accuracy SLO; `None` derives it as the midpoint between the
+    /// horizon-end proxy and 1.0, so the never policy provably crosses
+    /// it whenever drift degrades the proxy at all.
+    pub slo: Option<f64>,
+    /// Threshold-policy trigger; `None` = the degrade threshold
+    /// (midpoint between the SLO and 1.0).
+    pub threshold: Option<f64>,
+    /// Fixed-policy refresh period, seconds; `None` = horizon / 8.
+    pub fixed_period_s: Option<f64>,
+    /// Health-check period, seconds; `None` derives it from the
+    /// SLO-crossing age of the sampled model.
+    pub check_period_s: Option<f64>,
+    pub sensitive_permille: u32,
+    /// Samples of the reported accuracy-proxy timeline per cell.
+    pub timeline: usize,
+    /// MLP layer shape of the pipeline (also the accuracy probe dims).
+    pub shape: Vec<u64>,
+    pub jobs: usize,
+}
+
+impl Default for ReliabilityOptions {
+    fn default() -> ReliabilityOptions {
+        ReliabilityOptions {
+            system: SystemKind::HighPower,
+            seed: 0xD81F,
+            steps: 9,
+            horizons_s: vec![1.0e6, 1.0e8],
+            requests: 1000,
+            replicas: 2,
+            max_batch: 8,
+            queue_cap: 32,
+            nu: DRIFT_NU,
+            nu_sigma: 0.02,
+            slo: None,
+            threshold: None,
+            fixed_period_s: None,
+            check_period_s: None,
+            sensitive_permille: 250,
+            timeline: 9,
+            shape: vec![256, 128, 64],
+            jobs: 1,
+        }
+    }
+}
+
+/// One sample of a cell's accuracy-proxy timeline. `worst_proxy` is the
+/// minimum proxy over replicas *not* inside a recalibration window at
+/// `t_ps` (`None` when every replica is mid-window).
+#[derive(Clone, Copy, Debug)]
+pub struct TimelinePoint {
+    pub t_ps: u64,
+    pub worst_proxy: Option<f64>,
+}
+
+/// One (policy, horizon) cell of the sweep.
+#[derive(Clone, Debug)]
+pub struct ReliabilityCell {
+    pub policy: RecalPolicy,
+    pub horizon_s: f64,
+    pub check_period_ps: u64,
+    pub counters: Counters,
+    /// Served / horizon (not makespan: comparable across policies).
+    pub achieved_rps: f64,
+    pub min_available_replicas: usize,
+    /// Completed recalibration windows (count in JSON; the full list
+    /// feeds the timeline reconstruction).
+    pub recal_windows: Vec<RecalWindow>,
+    pub timeline: Vec<TimelinePoint>,
+    /// No accuracy-SLO sheds and no known-stale serves.
+    pub slo_ok: bool,
+}
+
+impl ReliabilityCell {
+    /// Requests that were refused or stale-served on accuracy grounds.
+    pub fn slo_violations(&self) -> u64 {
+        self.counters.shed_accuracy_slo + self.counters.served_below_slo
+    }
+}
+
+/// Full report of one `alpine reliability` invocation.
+#[derive(Clone, Debug)]
+pub struct ReliabilityReport {
+    pub system: SystemKind,
+    pub backend_desc: String,
+    pub seed: u64,
+    pub replicas: usize,
+    pub max_batch: usize,
+    pub requests: u64,
+    pub nu: f64,
+    pub nu_sigma: f64,
+    /// The (possibly derived) accuracy SLO the router enforced.
+    pub slo: f64,
+    pub degrade_at: f64,
+    pub threshold_trigger: f64,
+    pub sensitive_permille: u32,
+    /// Reprogram downtime of one tile refresh, ps.
+    pub reprogram_ps: u64,
+    /// Age at which the sampled model first crosses the SLO (the
+    /// longest horizon when it never does).
+    pub slo_cross_ps: u64,
+    /// The sampled `age -> proxy` model shared by every cell.
+    pub model: AccuracyModel,
+    /// Cells in sweep order: policy-major (never, fixed, threshold),
+    /// horizon-minor.
+    pub cells: Vec<ReliabilityCell>,
+}
+
+/// First log-grid age (1 s .. `horizon_s`) whose proxy is below `slo`;
+/// the horizon itself when the model never crosses. A scan, not a
+/// bisection — sampled tables need not be strictly monotone.
+fn first_slo_cross_ps(model: &AccuracyModel, slo: f64, horizon_s: f64) -> u64 {
+    const GRID: usize = 1024;
+    let ln_hi = horizon_s.max(2.0).ln();
+    for i in 0..GRID {
+        let age_s = (ln_hi * i as f64 / (GRID - 1) as f64).exp();
+        let age_ps = (age_s * PS_PER_S).round() as u64;
+        if model.proxy_at(age_ps) < slo {
+            return age_ps;
+        }
+    }
+    (horizon_s * PS_PER_S).round() as u64
+}
+
+/// Reconstruct the fleet's worst accuracy proxy over the horizon from
+/// the model and the completed recalibration windows.
+fn timeline(
+    model: &AccuracyModel,
+    windows: &[RecalWindow],
+    replicas: usize,
+    horizon_ps: u64,
+    samples: usize,
+) -> Vec<TimelinePoint> {
+    // Per-replica windows, in completion order (done_ps ascending).
+    let mut per: Vec<Vec<RecalWindow>> = vec![Vec::new(); replicas];
+    for w in windows {
+        per[w.replica].push(*w);
+    }
+    let samples = samples.max(2);
+    (0..samples)
+        .map(|k| {
+            let t = ((horizon_ps as u128 * k as u128) / (samples - 1) as u128) as u64;
+            let mut worst: Option<f64> = None;
+            for ws in &per {
+                // Last window completed at or before t -> programming
+                // timestamp; a replica mid-window is not serving.
+                let idx = ws.partition_point(|w| w.done_ps <= t);
+                if let Some(w) = ws.get(idx) {
+                    if w.start_ps <= t && t < w.done_ps {
+                        continue;
+                    }
+                }
+                let programmed = if idx == 0 { 0 } else { ws[idx - 1].done_ps };
+                let p = model.proxy_at(t.saturating_sub(programmed));
+                worst = Some(match worst {
+                    Some(m) => m.min(p),
+                    None => p,
+                });
+            }
+            TimelinePoint { t_ps: t, worst_proxy: worst }
+        })
+        .collect()
+}
+
+/// Run the sweep on an explicit backend (tests inject the instant
+/// mock; `run_reliability` builds the trace backend).
+pub fn run_reliability_on(
+    opts: &ReliabilityOptions,
+    backend: &dyn Backend,
+) -> Result<ReliabilityReport, WorkloadError> {
+    let bad = |m: String| WorkloadError::InvalidMapping(m);
+    if opts.replicas == 0 {
+        return Err(bad("reliability needs at least one replica".into()));
+    }
+    if opts.requests == 0 {
+        return Err(bad("reliability needs at least one request per cell".into()));
+    }
+    if opts.horizons_s.is_empty() || opts.horizons_s.iter().any(|&h| h < 1.0) {
+        return Err(bad("horizons must be at least 1 second (the drift t0)".into()));
+    }
+    if opts.shape.len() < 2 {
+        return Err(bad("pipeline shape needs at least two layers".into()));
+    }
+
+    let cfg = SystemConfig::for_kind(opts.system);
+    let tile_rows = cfg.aimc.tile_rows as usize;
+    let tile_cols = cfg.aimc.tile_cols as usize;
+    let horizon_max_s = opts.horizons_s.iter().copied().fold(0.0, f64::max);
+
+    // One seeded drift state feeds the whole sweep: the model is the
+    // checker's top-1 agreement over log-spaced ages.
+    let drift = DriftState::new(opts.seed, opts.nu, opts.nu_sigma);
+    let model = AccuracyModel::table_from_drift(
+        &drift,
+        horizon_max_s,
+        opts.steps.max(2),
+        opts.shape[0] as usize,
+        opts.shape[1] as usize,
+        tile_rows,
+        tile_cols,
+        32,
+    );
+    let p_end = model.proxy_at((horizon_max_s * PS_PER_S).round() as u64);
+    let slo = opts.slo.unwrap_or(((p_end + 1.0) / 2.0).min(0.999));
+    let degrade_at = ((slo + 1.0) / 2.0).min(0.9995);
+    let trigger = opts.threshold.unwrap_or(degrade_at);
+    let slo_cross_ps = first_slo_cross_ps(&model, slo, horizon_max_s);
+    let rep_cost = reprogram_cost(tile_rows, tile_cols);
+    let reprogram_ps = ((rep_cost.time_s * PS_PER_S).round() as u64).max(1);
+
+    let bmax = backend.max_batch().max(1);
+    let full_batch_ps = backend.batch_ps(bmax).max(1);
+    let deadline_ps = (10 * full_batch_ps).max(1);
+
+    // Policy-major sweep order, horizons minor.
+    let kinds = ["never", "fixed", "threshold"];
+    let mut items: Vec<(RecalPolicy, f64)> = Vec::new();
+    for kind in kinds {
+        for &h in &opts.horizons_s {
+            let policy = match kind {
+                "never" => RecalPolicy::Never,
+                "fixed" => RecalPolicy::Fixed {
+                    period_ps: ((opts.fixed_period_s.unwrap_or(h / 8.0) * PS_PER_S).round()
+                        as u64)
+                        .max(1),
+                },
+                _ => RecalPolicy::Threshold { trigger },
+            };
+            items.push((policy, h));
+        }
+    }
+
+    let cells: Vec<ReliabilityCell> = parallel::parallel_map(items, opts.jobs, |(policy, h)| {
+        let horizon_ps = (h * PS_PER_S).round() as u64;
+        // Check cadence must track the SLO-crossing *age*, not the
+        // horizon: half the crossing age, clamped to keep the event
+        // count bounded on both sides.
+        let check_period_ps = match opts.check_period_s {
+            Some(s) => ((s * PS_PER_S).round() as u64).max(1),
+            None => (slo_cross_ps / 2).clamp((horizon_ps / 100_000).max(1), horizon_ps / 8).max(1),
+        };
+        // Shared per-horizon arrival trace: uniform over the horizon,
+        // identical for every policy at this horizon so the policy is
+        // the only variable of a column.
+        let gap = (horizon_ps / (opts.requests + 1)).max(1);
+        let arrivals: Vec<u64> = (1..=opts.requests).map(|k| k * gap).collect();
+        let sim_cfg = SimConfig {
+            backend,
+            replicas: opts.replicas,
+            queue_cap: opts.queue_cap.max(1),
+            deadline_ps,
+            batch_wait_ps: full_batch_ps,
+            max_retries: 3,
+            backoff_base_ps: (backend.batch_ps(1) / 2).max(1),
+            repair_ps: (10 * full_batch_ps).max(1),
+            policy: RouterPolicy::LeastLoaded,
+            fail: None,
+            recal: Some(RecalConfig {
+                model: model.clone(),
+                slo,
+                degrade_at,
+                sensitive_permille: opts.sensitive_permille,
+                policy,
+                check_period_ps,
+                reprogram_ps,
+            }),
+        };
+        let res = router::simulate(&sim_cfg, &arrivals);
+        let tl = timeline(&model, &res.recal_windows, opts.replicas, horizon_ps, opts.timeline);
+        let slo_ok =
+            res.counters.shed_accuracy_slo == 0 && res.counters.served_below_slo == 0;
+        ReliabilityCell {
+            policy,
+            horizon_s: h,
+            check_period_ps,
+            achieved_rps: res.counters.served as f64 / h,
+            min_available_replicas: res.min_available_replicas,
+            recal_windows: res.recal_windows,
+            timeline: tl,
+            slo_ok,
+            counters: res.counters,
+        }
+    });
+
+    Ok(ReliabilityReport {
+        system: opts.system,
+        backend_desc: backend.label(),
+        seed: opts.seed,
+        replicas: opts.replicas,
+        max_batch: bmax,
+        requests: opts.requests,
+        nu: opts.nu,
+        nu_sigma: opts.nu_sigma,
+        slo,
+        degrade_at,
+        threshold_trigger: trigger,
+        sensitive_permille: opts.sensitive_permille,
+        reprogram_ps,
+        slo_cross_ps,
+        model,
+        cells,
+    })
+}
+
+/// Build the trace-machine backend for `opts.shape` and run the sweep —
+/// the `alpine reliability` entry point.
+pub fn run_reliability(opts: &ReliabilityOptions) -> Result<ReliabilityReport, WorkloadError> {
+    let backend = TraceMachineBackend::build_graph_degraded(
+        &crate::nn::LayerGraph::mlp(&opts.shape),
+        opts.system,
+        opts.max_batch,
+        opts.jobs,
+        1,
+    )?;
+    run_reliability_on(opts, &backend)
+}
+
+/// Minimal JSON string escaping.
+fn esc(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+impl ReliabilityReport {
+    /// Hand-rolled JSON (serde is not in the offline vendor set); the
+    /// `"scenario": "reliability"` marker keys `bench_compare.py`
+    /// dispatch. Byte-identical for identical reports.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str("  \"scenario\": \"reliability\",\n");
+        s.push_str(&format!("  \"system\": \"{}\",\n", self.system.name()));
+        s.push_str(&format!("  \"backend\": \"{}\",\n", esc(&self.backend_desc)));
+        s.push_str(&format!("  \"seed\": {},\n", self.seed));
+        s.push_str(&format!("  \"replicas\": {},\n", self.replicas));
+        s.push_str(&format!("  \"max_batch\": {},\n", self.max_batch));
+        s.push_str(&format!("  \"requests_per_cell\": {},\n", self.requests));
+        s.push_str(&format!("  \"nu\": {:.4},\n", self.nu));
+        s.push_str(&format!("  \"nu_sigma\": {:.4},\n", self.nu_sigma));
+        s.push_str(&format!("  \"slo\": {:.6},\n", self.slo));
+        s.push_str(&format!("  \"degrade_at\": {:.6},\n", self.degrade_at));
+        s.push_str(&format!("  \"threshold_trigger\": {:.6},\n", self.threshold_trigger));
+        s.push_str(&format!("  \"sensitive_permille\": {},\n", self.sensitive_permille));
+        s.push_str(&format!("  \"reprogram_ps\": {},\n", self.reprogram_ps));
+        s.push_str(&format!("  \"slo_cross_ps\": {},\n", self.slo_cross_ps));
+        if let AccuracyModel::Table { ages_ps, proxy } = &self.model {
+            s.push_str(&format!(
+                "  \"model_ages_ps\": [{}],\n",
+                ages_ps.iter().map(|a| a.to_string()).collect::<Vec<_>>().join(", ")
+            ));
+            s.push_str(&format!(
+                "  \"model_proxy\": [{}],\n",
+                proxy.iter().map(|p| format!("{p:.6}")).collect::<Vec<_>>().join(", ")
+            ));
+        }
+        s.push_str("  \"policies\": [\n");
+        let kinds = ["never", "fixed", "threshold"];
+        for (ki, kind) in kinds.iter().enumerate() {
+            s.push_str(&format!("    {{\"policy\": \"{kind}\", \"cells\": [\n"));
+            let cells: Vec<&ReliabilityCell> =
+                self.cells.iter().filter(|c| c.policy.name() == *kind).collect();
+            for (i, c) in cells.iter().enumerate() {
+                let n = &c.counters;
+                let tl = c
+                    .timeline
+                    .iter()
+                    .map(|p| {
+                        format!(
+                            "{{\"t_ps\": {}, \"worst_proxy\": {}}}",
+                            p.t_ps,
+                            match p.worst_proxy {
+                                Some(v) => format!("{v:.6}"),
+                                None => "null".to_string(),
+                            }
+                        )
+                    })
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                s.push_str(&format!(
+                    "      {{\"horizon_s\": {:.3e}, \"check_period_ps\": {}, \
+                     \"offered\": {}, \"served\": {}, \"shed_queue_full\": {}, \
+                     \"shed_no_replica\": {}, \"shed_retries\": {}, \
+                     \"shed_accuracy_slo\": {}, \"timed_out\": {}, \
+                     \"served_below_slo\": {}, \"slo_violations\": {}, \
+                     \"recals\": {}, \"recal_drained\": {}, \
+                     \"recal_downtime_ps\": {}, \"min_available_replicas\": {}, \
+                     \"achieved_rps\": {:.6e}, \"slo_ok\": {}, \
+                     \"timeline\": [{}]}}{}\n",
+                    c.horizon_s,
+                    c.check_period_ps,
+                    n.offered,
+                    n.served,
+                    n.shed_queue_full,
+                    n.shed_no_replica,
+                    n.shed_retries,
+                    n.shed_accuracy_slo,
+                    n.timed_out,
+                    n.served_below_slo,
+                    c.slo_violations(),
+                    n.recals,
+                    n.recal_drained,
+                    n.recal_downtime_ps,
+                    c.min_available_replicas,
+                    c.achieved_rps,
+                    c.slo_ok,
+                    tl,
+                    if i + 1 < cells.len() { "," } else { "" }
+                ));
+            }
+            s.push_str(&format!(
+                "    ]}}{}\n",
+                if ki + 1 < kinds.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// Persist the sweep as `BENCH_reliability.json` (or wherever `path`
+/// says).
+pub fn write_report(report: &ReliabilityReport, path: &str) -> std::io::Result<()> {
+    std::fs::write(path, report.to_json())?;
+    println!(
+        "reliability: wrote {} cell(s) ({} policies) to {path}",
+        report.cells.len(),
+        3
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serving::InstantMockBackend;
+
+    fn quick() -> ReliabilityOptions {
+        ReliabilityOptions {
+            steps: 6,
+            horizons_s: vec![1.0e8],
+            requests: 200,
+            timeline: 5,
+            shape: vec![64, 32],
+            ..ReliabilityOptions::default()
+        }
+    }
+
+    #[test]
+    fn never_violates_threshold_maintains_with_bounded_cost() {
+        let report = run_reliability_on(&quick(), &InstantMockBackend::default()).unwrap();
+        assert_eq!(report.cells.len(), 3, "3 policies x 1 horizon");
+        for c in &report.cells {
+            assert!(c.counters.conserved(), "{:?}", c.counters);
+        }
+        let never = &report.cells[0];
+        let threshold = &report.cells[2];
+        assert_eq!(never.policy, RecalPolicy::Never);
+        assert!(matches!(threshold.policy, RecalPolicy::Threshold { .. }));
+        // The never policy ages past the derived SLO and violates it.
+        assert_eq!(never.counters.recals, 0);
+        assert!(!never.slo_ok, "never policy must cross the SLO: {:?}", never.counters);
+        assert!(never.slo_violations() > 0);
+        // Threshold-triggered recalibration keeps violations strictly
+        // below never's, refreshes, and holds the availability floor.
+        assert!(threshold.counters.recals > 0, "{:?}", threshold.counters);
+        assert!(
+            threshold.slo_violations() < never.slo_violations(),
+            "threshold {} !< never {}",
+            threshold.slo_violations(),
+            never.slo_violations()
+        );
+        assert!(threshold.min_available_replicas >= report.replicas - 1);
+        // Bounded throughput cost: downtime is a vanishing fraction of
+        // the horizon.
+        let horizon_ps = (threshold.horizon_s * 1.0e12) as u64;
+        assert!(threshold.counters.recal_downtime_ps < horizon_ps / 100);
+        // The timeline starts fresh and the never policy's end is the
+        // aged proxy, below the SLO.
+        assert_eq!(never.timeline.first().unwrap().worst_proxy, Some(1.0));
+        let end = never.timeline.last().unwrap().worst_proxy.unwrap();
+        assert!(end < report.slo, "aged proxy {end} !< slo {}", report.slo);
+    }
+
+    #[test]
+    fn report_is_byte_identical_at_any_jobs_and_seed_matters() {
+        let b = InstantMockBackend::default();
+        let a = run_reliability_on(&ReliabilityOptions { jobs: 1, ..quick() }, &b)
+            .unwrap()
+            .to_json();
+        let c = run_reliability_on(&ReliabilityOptions { jobs: 4, ..quick() }, &b)
+            .unwrap()
+            .to_json();
+        assert_eq!(a, c, "reliability must be byte-identical across --jobs");
+        let d = run_reliability_on(
+            &ReliabilityOptions { seed: quick().seed + 1, ..quick() },
+            &b,
+        )
+        .unwrap()
+        .to_json();
+        assert_ne!(a, d, "the seed must matter");
+        assert!(a.contains("\"scenario\": \"reliability\""));
+        assert!(a.contains("\"policies\": ["));
+        assert!(a.contains("\"timeline\": ["));
+    }
+
+    #[test]
+    fn bad_options_are_clean_errors() {
+        let b = InstantMockBackend::default();
+        let zero = ReliabilityOptions { replicas: 0, ..quick() };
+        assert!(matches!(
+            run_reliability_on(&zero, &b),
+            Err(WorkloadError::InvalidMapping(_))
+        ));
+        let empty = ReliabilityOptions { horizons_s: Vec::new(), ..quick() };
+        assert!(run_reliability_on(&empty, &b).is_err());
+        let neg = ReliabilityOptions { horizons_s: vec![-1.0], ..quick() };
+        assert!(run_reliability_on(&neg, &b).is_err());
+    }
+}

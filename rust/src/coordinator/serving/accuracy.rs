@@ -1,0 +1,252 @@
+//! The accuracy dimension of serving: how a replica's answer quality
+//! decays with time since its analog tiles were programmed, and when
+//! the router schedules a reprogramming (recalibration) window.
+//!
+//! The physics lives in `aimclib::faults` (`G(t) = G(t0) * (t/t0)^-nu`
+//! plus log-time-growing per-device dispersion); this module reduces it
+//! to a deterministic `age -> accuracy proxy` curve the router can
+//! evaluate at every routing decision without re-running the checker.
+
+use crate::aimclib::faults::DriftState;
+
+/// Picoseconds per second.
+const PS_PER_S: f64 = 1.0e12;
+
+/// Deterministic accuracy-proxy curve over tile age. The proxy is the
+/// top-1 agreement of `aimclib::faults::assess_mvm` (1.0 = answers
+/// indistinguishable from a freshly programmed tile).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AccuracyModel {
+    /// No aging: the proxy is 1.0 forever (drift-free fleets).
+    None,
+    /// Closed-form test model: `proxy = 1 - decay_per_s * age_s`,
+    /// floored at 0. Cheap and exactly analyzable — the serving
+    /// minprops use it so expected shed counts are integer-checkable.
+    Linear { decay_per_s: f64 },
+    /// Sampled from the real checker at log-spaced ages, interpolated
+    /// linearly in `ln(age)` (drift is a power law, so the proxy is
+    /// near-linear on a log-time axis). Ages ascending, same length as
+    /// `proxy`; clamps at both ends.
+    Table { ages_ps: Vec<u64>, proxy: Vec<f64> },
+}
+
+impl AccuracyModel {
+    /// The accuracy proxy of a tile `age_ps` after programming.
+    pub fn proxy_at(&self, age_ps: u64) -> f64 {
+        match self {
+            AccuracyModel::None => 1.0,
+            AccuracyModel::Linear { decay_per_s } => {
+                (1.0 - decay_per_s * (age_ps as f64 / PS_PER_S)).clamp(0.0, 1.0)
+            }
+            AccuracyModel::Table { ages_ps, proxy } => {
+                debug_assert_eq!(ages_ps.len(), proxy.len());
+                if ages_ps.is_empty() {
+                    return 1.0;
+                }
+                if age_ps <= ages_ps[0] {
+                    return proxy[0];
+                }
+                if age_ps >= *ages_ps.last().unwrap() {
+                    return *proxy.last().unwrap();
+                }
+                let i = ages_ps.partition_point(|&a| a <= age_ps);
+                let (a0, a1) = (ages_ps[i - 1] as f64, ages_ps[i] as f64);
+                let (p0, p1) = (proxy[i - 1], proxy[i]);
+                // Interpolate on ln(age); ages are >= 1 ps here.
+                let f = (age_ps as f64).ln() - a0.ln();
+                let span = a1.ln() - a0.ln();
+                if span <= 0.0 {
+                    return p0;
+                }
+                p0 + (p1 - p0) * (f / span)
+            }
+        }
+    }
+
+    /// Sample the real checker's accuracy proxy for `drift` at `steps`
+    /// log-spaced ages from 1 s to `horizon_s`, on a `rows x cols`
+    /// probe layer over `tile_rows x tile_cols` tiles. Deterministic in
+    /// the drift seed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn table_from_drift(
+        drift: &DriftState,
+        horizon_s: f64,
+        steps: usize,
+        rows: usize,
+        cols: usize,
+        tile_rows: usize,
+        tile_cols: usize,
+        batch: usize,
+    ) -> AccuracyModel {
+        let steps = steps.max(2);
+        let horizon_s = horizon_s.max(2.0);
+        let probe = DriftState { programmed_at_ps: 0, ..*drift };
+        let mut ages_ps = Vec::with_capacity(steps);
+        let mut proxy = Vec::with_capacity(steps);
+        let ln_hi = horizon_s.ln();
+        for i in 0..steps {
+            let age_s = (ln_hi * i as f64 / (steps - 1) as f64).exp();
+            let age_ps = (age_s * PS_PER_S).round() as u64;
+            let impact = probe.assess_at(age_ps, rows, cols, tile_rows, tile_cols, batch);
+            ages_ps.push(age_ps);
+            proxy.push(impact.top1_agreement);
+        }
+        AccuracyModel::Table { ages_ps, proxy }
+    }
+}
+
+/// When does a replica get reprogrammed?
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RecalPolicy {
+    /// Never: the fleet ages until the accuracy SLO bites.
+    Never,
+    /// Every `period_ps` of tile age, regardless of measured health.
+    Fixed { period_ps: u64 },
+    /// When a health check measures the proxy below `trigger`.
+    Threshold { trigger: f64 },
+}
+
+impl RecalPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecalPolicy::Never => "never",
+            RecalPolicy::Fixed { .. } => "fixed",
+            RecalPolicy::Threshold { .. } => "threshold",
+        }
+    }
+
+    /// Parse `never`, `fixed:<seconds>`, or `threshold:<proxy>`.
+    pub fn parse(s: &str) -> Result<RecalPolicy, String> {
+        if s == "never" {
+            return Ok(RecalPolicy::Never);
+        }
+        if let Some(v) = s.strip_prefix("fixed:") {
+            let secs: f64 = v.parse().map_err(|_| format!("bad fixed period: {v}"))?;
+            if secs <= 0.0 {
+                return Err(format!("fixed period must be positive: {v}"));
+            }
+            return Ok(RecalPolicy::Fixed { period_ps: (secs * PS_PER_S).round() as u64 });
+        }
+        if let Some(v) = s.strip_prefix("threshold:") {
+            let t: f64 = v.parse().map_err(|_| format!("bad threshold: {v}"))?;
+            if !(0.0..=1.0).contains(&t) {
+                return Err(format!("threshold must be in [0, 1]: {v}"));
+            }
+            return Ok(RecalPolicy::Threshold { trigger: t });
+        }
+        Err(format!("unknown recal policy: {s} (never | fixed:<s> | threshold:<proxy>)"))
+    }
+}
+
+/// Drift-aware serving configuration: the accuracy model, the SLO the
+/// router enforces for accuracy-sensitive traffic, and the
+/// recalibration schedule.
+#[derive(Clone, Debug)]
+pub struct RecalConfig {
+    /// `age -> proxy` curve shared by every replica of the fleet.
+    pub model: AccuracyModel,
+    /// The accuracy SLO: minimum proxy an accuracy-sensitive request
+    /// may be served at. Below it the router sheds (`accuracy_slo`).
+    pub slo: f64,
+    /// Proxy below which a replica is *marked* `DriftDegraded` at
+    /// health checks (routing preference; usually a bit above `slo`).
+    pub degrade_at: f64,
+    /// Requests with `id % 1000 < sensitive_permille` are
+    /// accuracy-sensitive (deterministic in the request id; 1000 =
+    /// every request, 0 = none).
+    pub sensitive_permille: u32,
+    /// Recalibration schedule.
+    pub policy: RecalPolicy,
+    /// Health-check cadence in virtual ps (drift evolves over seconds,
+    /// so checks are far sparser than arrivals).
+    pub check_period_ps: u64,
+    /// Reprogram downtime of one recalibration window, ps (see
+    /// `aimclib::faults::reprogram_cost`).
+    pub reprogram_ps: u64,
+}
+
+impl RecalConfig {
+    /// Is request `id` accuracy-sensitive under this config?
+    pub fn sensitive(&self, id: u64) -> bool {
+        id % 1000 < self.sensitive_permille as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: u64 = 1_000_000_000_000;
+
+    #[test]
+    fn linear_model_decays_and_floors() {
+        let m = AccuracyModel::Linear { decay_per_s: 0.001 };
+        assert_eq!(m.proxy_at(0), 1.0);
+        assert!((m.proxy_at(100 * S) - 0.9).abs() < 1e-9);
+        assert_eq!(m.proxy_at(2_000_000 * S), 0.0);
+        assert_eq!(AccuracyModel::None.proxy_at(u64::MAX), 1.0);
+    }
+
+    #[test]
+    fn table_model_interpolates_in_log_age_and_clamps() {
+        let m = AccuracyModel::Table {
+            ages_ps: vec![S, 100 * S, 10_000 * S],
+            proxy: vec![1.0, 0.8, 0.4],
+        };
+        assert_eq!(m.proxy_at(0), 1.0);
+        assert_eq!(m.proxy_at(S), 1.0);
+        assert_eq!(m.proxy_at(100 * S), 0.8);
+        assert_eq!(m.proxy_at(1_000_000 * S), 0.4);
+        // ln-midpoint of [1 s, 100 s] is 10 s -> halfway proxy.
+        assert!((m.proxy_at(10 * S) - 0.9).abs() < 1e-6);
+        let mid = m.proxy_at(1_000 * S);
+        assert!((mid - 0.6).abs() < 1e-6, "{mid}");
+    }
+
+    #[test]
+    fn table_from_drift_is_monotone_enough_and_deterministic() {
+        let d = DriftState::new(21, 0.05, 0.02);
+        let m = AccuracyModel::table_from_drift(&d, 1.0e8, 6, 64, 32, 64, 32, 16);
+        let m2 = AccuracyModel::table_from_drift(&d, 1.0e8, 6, 64, 32, 64, 32, 16);
+        assert_eq!(m, m2);
+        let AccuracyModel::Table { ages_ps, proxy } = &m else { panic!("not a table") };
+        assert_eq!(ages_ps.len(), 6);
+        assert_eq!(proxy[0], 1.0, "fresh tile must probe perfect");
+        assert!(
+            proxy.last().unwrap() < &0.95,
+            "century-scale drift should visibly degrade top-1: {proxy:?}"
+        );
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        assert_eq!(RecalPolicy::parse("never").unwrap(), RecalPolicy::Never);
+        assert_eq!(
+            RecalPolicy::parse("fixed:100").unwrap(),
+            RecalPolicy::Fixed { period_ps: 100 * S }
+        );
+        assert_eq!(
+            RecalPolicy::parse("threshold:0.9").unwrap(),
+            RecalPolicy::Threshold { trigger: 0.9 }
+        );
+        assert!(RecalPolicy::parse("sometimes").is_err());
+        assert!(RecalPolicy::parse("fixed:-1").is_err());
+        assert!(RecalPolicy::parse("threshold:1.5").is_err());
+    }
+
+    #[test]
+    fn sensitivity_is_deterministic_in_the_id() {
+        let cfg = RecalConfig {
+            model: AccuracyModel::None,
+            slo: 0.9,
+            degrade_at: 0.95,
+            sensitive_permille: 250,
+            policy: RecalPolicy::Never,
+            check_period_ps: S,
+            reprogram_ps: S,
+        };
+        let n = (0..4000).filter(|&id| cfg.sensitive(id)).count();
+        assert_eq!(n, 1000, "250 permille of 4000 ids");
+        assert!(cfg.sensitive(0) && !cfg.sensitive(999));
+    }
+}

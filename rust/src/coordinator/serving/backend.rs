@@ -123,6 +123,21 @@ impl TraceMachineBackend {
         max_batch: usize,
         jobs: usize,
     ) -> Result<TraceMachineBackend, WorkloadError> {
+        TraceMachineBackend::build_graph_degraded(graph, system, max_batch, jobs, 1)
+    }
+
+    /// Like [`build_graph`](TraceMachineBackend::build_graph), but the
+    /// degraded table models `degrade_tiles` *cascading* tile failures:
+    /// the first `degrade_tiles` analog-hosting tiles fail together and
+    /// the union remap (`degrade_mapping_multi`) is re-simulated.
+    /// `degrade_tiles = 1` is the classic single-failure table.
+    pub fn build_graph_degraded(
+        graph: &LayerGraph,
+        system: SystemKind,
+        max_batch: usize,
+        jobs: usize,
+        degrade_tiles: usize,
+    ) -> Result<TraceMachineBackend, WorkloadError> {
         let max_batch = max_batch.max(1);
         let cfg = SystemConfig::for_kind(system);
         let budget = TopologyBudget::for_config(&cfg);
@@ -148,17 +163,25 @@ impl TraceMachineBackend {
         };
         let healthy_ps = table(&best.mapping)?;
 
-        // Degraded table: remap the first tile that hosts an analog
-        // region and re-simulate. An all-digital winner has nothing to
-        // degrade — the rejoined replica then serves at healthy cost.
+        // Degraded table: fail the first `degrade_tiles` analog-hosting
+        // tiles together and re-simulate the union remap. An all-digital
+        // winner has nothing to degrade — the rejoined replica then
+        // serves at healthy cost.
         let mut degraded_desc = None;
         let mut degraded_ps = healthy_ps.clone();
+        let mut failed: Vec<usize> = Vec::new();
         for tile in 0..best.mapping.tiles.len() {
-            if let Ok(d) = automap::degrade_mapping(graph, &best.mapping, tile, &budget) {
-                degraded_ps = table(&d.mapping)?;
-                degraded_desc = Some(d.desc);
+            if failed.len() >= degrade_tiles.max(1) {
                 break;
             }
+            if automap::degrade_mapping(graph, &best.mapping, tile, &budget).is_ok() {
+                failed.push(tile);
+            }
+        }
+        if !failed.is_empty() {
+            let d = automap::degrade_mapping_multi(graph, &best.mapping, &failed, &budget)?;
+            degraded_ps = table(&d.mapping)?;
+            degraded_desc = Some(d.desc);
         }
 
         Ok(TraceMachineBackend {
@@ -278,6 +301,24 @@ mod tests {
         // and the digital-fallback table must not be faster.
         assert!(b.degraded_label().is_some(), "expected a degradable analog mapping");
         for k in 1..=4 {
+            assert!(b.degraded_batch_ps(k) >= b.batch_ps(k));
+        }
+    }
+
+    #[test]
+    fn trace_backend_cascading_degrade_builds_a_valid_union_table() {
+        let b = TraceMachineBackend::build_graph_degraded(
+            &LayerGraph::mlp(&[128, 64]),
+            SystemKind::HighPower,
+            2,
+            1,
+            2,
+        )
+        .unwrap();
+        // The union remap (up to two failed tiles) must still produce a
+        // coherent table: no faster than healthy at any batch size.
+        assert!(b.degraded_label().is_some(), "expected a degradable analog mapping");
+        for k in 1..=2 {
             assert!(b.degraded_batch_ps(k) >= b.batch_ps(k));
         }
     }

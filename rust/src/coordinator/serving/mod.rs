@@ -24,16 +24,18 @@
 //! `util::parallel` with per-point seeds derived from the base seed.
 //! Same seed => byte-identical `BENCH_serving.json` at any `--jobs N`.
 
+pub mod accuracy;
 pub mod arrival;
 pub mod backend;
 pub mod replica;
 pub mod router;
 pub mod stats;
 
+pub use accuracy::{AccuracyModel, RecalConfig, RecalPolicy};
 pub use arrival::ArrivalProcess;
 pub use backend::{Backend, InstantMockBackend, PjrtBackend, TraceMachineBackend};
-pub use replica::Health;
-pub use router::{RouterPolicy, SimConfig, SimResult};
+pub use replica::{AccuracyHealth, Health};
+pub use router::{RecalWindow, RouterPolicy, SimConfig, SimResult};
 pub use stats::{Counters, LatencyStats, RejectReason, ServerStats};
 
 use crate::config::SystemKind;
@@ -73,6 +75,10 @@ pub struct ServeBenchOptions {
     pub load_fracs: Vec<f64>,
     /// Hard-fail replica `r` at `frac` of each point's arrival span.
     pub fail_replica: Option<(usize, f64)>,
+    /// Drift-aware serving: accuracy model, accuracy SLO, and
+    /// recalibration schedule. `None` keeps the drift-free router
+    /// bit-identical to the pre-drift behaviour.
+    pub recal: Option<RecalConfig>,
     /// MLP layer shape the trace backend searches and simulates.
     pub shape: Vec<u64>,
     pub jobs: usize,
@@ -96,6 +102,7 @@ impl Default for ServeBenchOptions {
             arrival: ArrivalProcess::Poisson { rate_rps: 0.0 },
             load_fracs: vec![0.2, 0.4, 0.6, 0.8, 0.95, 1.1],
             fail_replica: None,
+            recal: None,
             shape: vec![256, 128, 64],
             jobs: 1,
         }
@@ -226,6 +233,7 @@ pub fn run_serve_bench_on(
             repair_ps,
             policy: opts.policy,
             fail,
+            recal: opts.recal.clone(),
         };
         let sim = router::simulate(&cfg, &arrivals);
         let makespan_s = sim.makespan_ps.max(1) as f64 * 1e-12;
@@ -367,6 +375,8 @@ impl ServeBenchReport {
                  \"shed_retries\": {}, \"shed_total\": {}, \"timed_out\": {}, \
                  \"slo_violations\": {}, \"retries\": {}, \"failovers\": {}, \
                  \"failover_served\": {}, \"failover_slo_ok\": {}, \
+                 \"shed_accuracy_slo\": {}, \"recals\": {}, \"recal_drained\": {}, \
+                 \"recal_downtime_ps\": {}, \"served_below_slo\": {}, \
                  \"batches\": {}, \"failed_batches\": {}, \"mean_batch\": {:.4}, \
                  \"p50_ps\": {}, \"p95_ps\": {}, \"p99_ps\": {}, \"mean_ps\": {}, \
                  \"max_ps\": {}, \"makespan_ps\": {}, \"per_replica_served\": [{}], \
@@ -386,6 +396,11 @@ impl ServeBenchReport {
                 c.failovers,
                 c.failover_served,
                 c.failover_slo_ok,
+                c.shed_accuracy_slo,
+                c.recals,
+                c.recal_drained,
+                c.recal_downtime_ps,
+                c.served_below_slo,
                 c.batches,
                 c.failed_batches,
                 p.mean_batch,

@@ -24,6 +24,34 @@ impl Health {
     }
 }
 
+/// The *accuracy* dimension of replica health, orthogonal to the
+/// hard-failure dimension above: a replica can be structurally healthy
+/// yet serving increasingly wrong answers as its analog conductances
+/// drift. `Fresh -> DriftDegraded` when the accuracy proxy falls below
+/// the degrade threshold; `-> Recalibrating` while a scheduled
+/// reprogramming window drains and refreshes it; `-> Fresh` on rejoin.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccuracyHealth {
+    /// Proxy at or above the degrade threshold.
+    Fresh,
+    /// Proxy below threshold: still serves, but the router prefers
+    /// fresher replicas for accuracy-sensitive requests.
+    DriftDegraded,
+    /// Inside a recalibration window: drained, admits nothing, and
+    /// never receives dispatches until the reprogram completes.
+    Recalibrating,
+}
+
+impl AccuracyHealth {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AccuracyHealth::Fresh => "fresh",
+            AccuracyHealth::DriftDegraded => "drift_degraded",
+            AccuracyHealth::Recalibrating => "recalibrating",
+        }
+    }
+}
+
 /// One request inside the simulation. Latency and deadline are anchored
 /// to the *original* arrival time — a retried request does not get a
 /// fresh SLO budget.
@@ -53,6 +81,16 @@ pub struct Replica {
     /// timer events so a burst of arrivals schedules one wakeup.
     pub timer: Option<(u64, u64)>,
     pub served: u64,
+    /// Accuracy-dimension health (drift monitoring / recalibration).
+    pub acc: AccuracyHealth,
+    /// Virtual-time programming timestamp of this replica's analog
+    /// tiles; the accuracy proxy is a function of `now - programmed_at`.
+    pub programmed_at_ps: u64,
+    /// Completed recalibration windows.
+    pub recals: u64,
+    /// Set while a recalibration waits for the in-flight batch to drain
+    /// before the reprogram downtime starts.
+    pub draining: bool,
 }
 
 impl Replica {
@@ -65,6 +103,10 @@ impl Replica {
             gen: 0,
             timer: None,
             served: 0,
+            acc: AccuracyHealth::Fresh,
+            programmed_at_ps: 0,
+            recals: 0,
+            draining: false,
         }
     }
 
@@ -74,8 +116,13 @@ impl Replica {
     }
 
     /// Can this replica admit one more request under `queue_cap`?
+    /// Recalibrating replicas are drained and never admit — the other
+    /// half of the "never receives dispatches" invariant enforced at
+    /// batch launch.
     pub fn admits(&self, queue_cap: usize) -> bool {
-        self.health != Health::Failed && self.queue.len() < queue_cap
+        self.health != Health::Failed
+            && self.acc != AccuracyHealth::Recalibrating
+            && self.queue.len() < queue_cap
     }
 }
 
@@ -107,5 +154,9 @@ mod tests {
         r.health = Health::Degraded;
         assert!(r.admits(2), "degraded replicas serve (at degraded cost)");
         assert_eq!(r.load(), 1);
+        r.acc = AccuracyHealth::Recalibrating;
+        assert!(!r.admits(2), "recalibrating replicas never admit");
+        r.acc = AccuracyHealth::DriftDegraded;
+        assert!(r.admits(2), "drift-degraded replicas still serve");
     }
 }

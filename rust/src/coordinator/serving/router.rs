@@ -35,11 +35,30 @@
 //! request resolves to exactly one of served / typed-shed /
 //! typed-timeout.
 
+//! The accuracy dimension (the ISSUE-10 pipeline):
+//!
+//! * **Drift monitoring** — with a [`RecalConfig`] attached, periodic
+//!   health checks evaluate every replica's accuracy proxy (a function
+//!   of `now - programmed_at`) and mark it `Fresh` / `DriftDegraded`.
+//! * **Staggered recalibration** — `fixed`/`threshold` policies queue
+//!   due replicas; at most one recalibrates at a time and never while
+//!   another replica is hard-failed, so availability stays >= N-1.
+//!   A window is planned drain (stop admitting, re-route the queue,
+//!   let the in-flight batch finish) -> reprogram downtime -> rejoin
+//!   fresh (`programmed_at = now`).
+//! * **Accuracy-SLO routing** — accuracy-sensitive requests
+//!   (`id % 1000 < sensitive_permille`) only go to replicas whose
+//!   proxy meets the SLO, freshest first; with no compliant replica
+//!   they shed typed (`Rejected{accuracy_slo}`). Non-sensitive
+//!   requests served below the SLO are counted (`served_below_slo`),
+//!   never silent.
+
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use super::accuracy::{RecalConfig, RecalPolicy};
 use super::backend::Backend;
-use super::replica::{Health, Replica, Request};
+use super::replica::{AccuracyHealth, Health, Replica, Request};
 use super::stats::{Counters, LatencyStats};
 
 /// How the router picks a replica for an admitted request.
@@ -94,6 +113,19 @@ pub struct SimConfig<'a> {
     pub policy: RouterPolicy,
     /// Hard-fail replica `r` at absolute time `at_ps`.
     pub fail: Option<(usize, u64)>,
+    /// Drift-aware accuracy monitoring + recalibration. `None` keeps
+    /// the pre-drift router bit-identical.
+    pub recal: Option<RecalConfig>,
+}
+
+/// One completed recalibration window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecalWindow {
+    pub replica: usize,
+    /// When the drain began (admission stopped).
+    pub start_ps: u64,
+    /// When the reprogram finished and the replica rejoined fresh.
+    pub done_ps: u64,
 }
 
 /// Outcome of one simulated load point.
@@ -107,6 +139,14 @@ pub struct SimResult {
     /// When the failed replica rejoined in `Degraded` health, if it did
     /// within the horizon.
     pub rejoin_at_ps: Option<u64>,
+    /// Completed recalibration windows, in completion order — the
+    /// accuracy-proxy timeline of the fleet is reconstructible from
+    /// these plus the model.
+    pub recal_windows: Vec<RecalWindow>,
+    /// Fewest simultaneously dispatchable replicas (not failed, not
+    /// recalibrating) observed at any event. Staggering keeps this at
+    /// N-1 or better when no hard failure overlaps.
+    pub min_available_replicas: usize,
 }
 
 enum EvKind {
@@ -115,6 +155,10 @@ enum EvKind {
     BatchDone { r: usize, gen: u64 },
     Fail { r: usize },
     Rejoin { r: usize },
+    /// Periodic fleet accuracy health check.
+    RecalCheck,
+    /// Reprogram downtime of replica `r` finished.
+    RecalDone { r: usize },
 }
 
 /// Event queue: a min-heap of (time, seq). `seq` is the push order, so
@@ -164,7 +208,11 @@ fn maybe_launch(
 ) {
     let max_batch = cfg.backend.max_batch().max(1);
     let r = &mut reps[i];
-    if r.busy || r.health == Health::Failed {
+    // A recalibrating replica never receives dispatches: its queue was
+    // drained at window start and `admits` refuses new work, so this
+    // guard is the launch-side half of the invariant (the BatchDone
+    // handler asserts the completion-side half).
+    if r.busy || r.health == Health::Failed || r.acc == AccuracyHealth::Recalibrating {
         return;
     }
     // Timeout-drop: expired requests can never be served in time.
@@ -223,6 +271,12 @@ pub fn simulate(cfg: &SimConfig, arrivals_ps: &[u64]) -> SimResult {
     let mut rr_cursor = 0usize;
     let mut rejoin_at_ps = None;
     let mut makespan_ps = 0u64;
+    let mut recal_windows: Vec<RecalWindow> = Vec::new();
+    // Recalibration bookkeeping: at most one window at a time.
+    let mut recal_active: Option<usize> = None;
+    let mut recal_pending = vec![false; n];
+    let mut recal_started_at = vec![0u64; n];
+    let mut min_available_replicas = n;
 
     for (id, &t) in arrivals_ps.iter().enumerate() {
         events.push(
@@ -240,9 +294,109 @@ pub fn simulate(cfg: &SimConfig, arrivals_ps: &[u64]) -> SimResult {
         assert!(r < n, "--fail-replica {r}: only {n} replica(s)");
         events.push(at_ps, EvKind::Fail { r });
     }
+    if let Some(rc) = &cfg.recal {
+        // Health checks over the whole horizon, scheduled up front so
+        // the event count is fixed by the config, not the load.
+        assert!(rc.check_period_ps > 0, "recal check period must be positive");
+        let horizon = arrivals_ps
+            .last()
+            .copied()
+            .unwrap_or(0)
+            .saturating_add(cfg.deadline_ps);
+        let mut t = rc.check_period_ps;
+        while t <= horizon {
+            events.push(t, EvKind::RecalCheck);
+            t = t.saturating_add(rc.check_period_ps);
+        }
+    }
+
+    // Replicas that can take a dispatch right now.
+    let available =
+        |reps: &[Replica]| {
+            reps.iter()
+                .filter(|r| {
+                    r.health != Health::Failed && r.acc != AccuracyHealth::Recalibrating
+                })
+                .count()
+        };
+    // Begin replica `ri`'s window: planned drain (stop admitting,
+    // re-route the queue, let any in-flight batch finish), then the
+    // reprogram downtime, scheduled here or at the drain's BatchDone.
+    #[allow(clippy::too_many_arguments)]
+    fn start_recal(
+        ri: usize,
+        now: u64,
+        rc: &RecalConfig,
+        reps: &mut [Replica],
+        counters: &mut Counters,
+        events: &mut EventQueue,
+        recal_active: &mut Option<usize>,
+        recal_pending: &mut [bool],
+        recal_started_at: &mut [u64],
+    ) {
+        *recal_active = Some(ri);
+        recal_pending[ri] = false;
+        recal_started_at[ri] = now;
+        reps[ri].acc = AccuracyHealth::Recalibrating;
+        reps[ri].timer = None;
+        let drained: Vec<Request> = reps[ri].queue.drain(..).collect();
+        for q in drained {
+            // Planned re-route: no retry budget consumed, not a failover.
+            counters.recal_drained += 1;
+            events.push(now, EvKind::Arrive(q));
+        }
+        if reps[ri].busy {
+            reps[ri].draining = true; // BatchDone starts the downtime
+        } else {
+            counters.recal_downtime_ps += rc.reprogram_ps;
+            events.push(now + rc.reprogram_ps.max(1), EvKind::RecalDone { r: ri });
+        }
+    }
+    // Start the stalest pending window if none is active and no hard
+    // failure already has the fleet below N-1 (single-replica fleets
+    // have an N-1 floor of zero, so they may recal).
+    #[allow(clippy::too_many_arguments)]
+    fn try_start_recal(
+        now: u64,
+        rc: &RecalConfig,
+        reps: &mut [Replica],
+        counters: &mut Counters,
+        events: &mut EventQueue,
+        recal_active: &mut Option<usize>,
+        recal_pending: &mut [bool],
+        recal_started_at: &mut [u64],
+    ) {
+        if recal_active.is_some() {
+            return;
+        }
+        let n = reps.len();
+        if n > 1 && reps.iter().any(|r| r.health == Health::Failed) {
+            return;
+        }
+        let due = (0..n)
+            .filter(|&i| recal_pending[i] && reps[i].health != Health::Failed)
+            .min_by_key(|&i| (reps[i].programmed_at_ps, i));
+        if let Some(ri) = due {
+            start_recal(
+                ri,
+                now,
+                rc,
+                reps,
+                counters,
+                events,
+                recal_active,
+                recal_pending,
+                recal_started_at,
+            );
+        }
+    }
 
     while let Some((now, kind)) = events.pop() {
         makespan_ps = makespan_ps.max(now);
+        // Availability floor, sampled between events (every transition
+        // that lowers it schedules a follow-up event, so the lowered
+        // state is always observed here).
+        min_available_replicas = min_available_replicas.min(available(&reps));
         match kind {
             EvKind::Arrive(req) => {
                 // A retried request may already be past its deadline.
@@ -250,9 +404,39 @@ pub fn simulate(cfg: &SimConfig, arrivals_ps: &[u64]) -> SimResult {
                     counters.timed_out += 1;
                     continue;
                 }
-                if reps.iter().all(|r| r.health == Health::Failed) {
+                if available(&reps) == 0 {
                     counters.shed_no_replica += 1;
                     continue;
+                }
+                // Accuracy-sensitive requests only go to replicas whose
+                // proxy meets the accuracy SLO, freshest first; if no
+                // compliant replica exists they shed typed — never a
+                // silent wrong answer.
+                if let Some(rc) = &cfg.recal {
+                    if rc.sensitive(req.id) {
+                        let compliant = |i: usize| {
+                            reps[i].health != Health::Failed
+                                && reps[i].acc != AccuracyHealth::Recalibrating
+                                && rc.model
+                                    .proxy_at(now.saturating_sub(reps[i].programmed_at_ps))
+                                    >= rc.slo
+                        };
+                        if !(0..n).any(|i| compliant(i)) {
+                            counters.shed_accuracy_slo += 1;
+                            continue;
+                        }
+                        let pick = (0..n)
+                            .filter(|&i| compliant(i) && reps[i].admits(cfg.queue_cap))
+                            .max_by_key(|&i| (reps[i].programmed_at_ps, Reverse(i)));
+                        match pick {
+                            None => counters.shed_queue_full += 1,
+                            Some(i) => {
+                                reps[i].queue.push_back(req);
+                                maybe_launch(i, now, cfg, &mut reps, &mut counters, &mut events);
+                            }
+                        }
+                        continue;
+                    }
                 }
                 let pick = match cfg.policy {
                     RouterPolicy::RoundRobin => {
@@ -293,7 +477,17 @@ pub fn simulate(cfg: &SimConfig, arrivals_ps: &[u64]) -> SimResult {
                 if reps[ri].gen != gen || !reps[ri].busy {
                     continue; // the failure event already ate this batch
                 }
+                // A completion on a recalibrating replica is legal only
+                // for the batch the planned drain let finish; anything
+                // else means a dispatch slipped into the window.
+                if reps[ri].acc == AccuracyHealth::Recalibrating {
+                    assert!(
+                        reps[ri].draining,
+                        "batch completed on recalibrating replica {ri} outside its drain"
+                    );
+                }
                 reps[ri].busy = false;
+                let b = reps[ri].in_flight.len() as u64;
                 let batch = std::mem::take(&mut reps[ri].in_flight);
                 for q in batch {
                     counters.served += 1;
@@ -307,6 +501,22 @@ pub fn simulate(cfg: &SimConfig, arrivals_ps: &[u64]) -> SimResult {
                         if now <= q.deadline_ps {
                             counters.failover_slo_ok += 1;
                         }
+                    }
+                }
+                if let Some(rc) = &cfg.recal {
+                    // Known-stale ledger: answers served below the
+                    // accuracy SLO are counted, never silent.
+                    let proxy =
+                        rc.model.proxy_at(now.saturating_sub(reps[ri].programmed_at_ps));
+                    if proxy < rc.slo {
+                        counters.served_below_slo += b;
+                    }
+                    if reps[ri].draining {
+                        // Drain complete: the reprogram downtime starts.
+                        reps[ri].draining = false;
+                        counters.recal_downtime_ps += rc.reprogram_ps;
+                        events.push(now + rc.reprogram_ps.max(1), EvKind::RecalDone { r: ri });
+                        continue;
                     }
                 }
                 maybe_launch(ri, now, cfg, &mut reps, &mut counters, &mut events);
@@ -349,11 +559,97 @@ pub fn simulate(cfg: &SimConfig, arrivals_ps: &[u64]) -> SimResult {
                     events.push(now, EvKind::Arrive(q));
                 }
                 events.push(now + cfg.repair_ps.max(1), EvKind::Rejoin { r: ri });
+                // A failure mid-drain kills the batch the drain was
+                // waiting on; start the reprogram downtime now so the
+                // window (and `recal_active`) cannot leak.
+                if reps[ri].acc == AccuracyHealth::Recalibrating && reps[ri].draining {
+                    if let Some(rc) = &cfg.recal {
+                        reps[ri].draining = false;
+                        counters.recal_downtime_ps += rc.reprogram_ps;
+                        events.push(now + rc.reprogram_ps.max(1), EvKind::RecalDone { r: ri });
+                    }
+                }
             }
             EvKind::Rejoin { r: ri } => {
                 reps[ri].health = Health::Degraded;
                 rejoin_at_ps = Some(now);
                 maybe_launch(ri, now, cfg, &mut reps, &mut counters, &mut events);
+                if let Some(rc) = &cfg.recal {
+                    try_start_recal(
+                        now,
+                        rc,
+                        &mut reps,
+                        &mut counters,
+                        &mut events,
+                        &mut recal_active,
+                        &mut recal_pending,
+                        &mut recal_started_at,
+                    );
+                }
+            }
+            EvKind::RecalCheck => {
+                let Some(rc) = &cfg.recal else { continue };
+                for i in 0..n {
+                    if reps[i].health == Health::Failed
+                        || reps[i].acc == AccuracyHealth::Recalibrating
+                    {
+                        continue;
+                    }
+                    let age = now.saturating_sub(reps[i].programmed_at_ps);
+                    let proxy = rc.model.proxy_at(age);
+                    reps[i].acc = if proxy < rc.degrade_at {
+                        AccuracyHealth::DriftDegraded
+                    } else {
+                        AccuracyHealth::Fresh
+                    };
+                    let due = match rc.policy {
+                        RecalPolicy::Never => false,
+                        RecalPolicy::Fixed { period_ps } => age >= period_ps,
+                        RecalPolicy::Threshold { trigger } => proxy < trigger,
+                    };
+                    if due {
+                        recal_pending[i] = true;
+                    }
+                }
+                try_start_recal(
+                    now,
+                    rc,
+                    &mut reps,
+                    &mut counters,
+                    &mut events,
+                    &mut recal_active,
+                    &mut recal_pending,
+                    &mut recal_started_at,
+                );
+            }
+            EvKind::RecalDone { r: ri } => {
+                let Some(rc) = &cfg.recal else { continue };
+                debug_assert_eq!(recal_active, Some(ri), "recal window not owned by {ri}");
+                // Rejoin fresh: the reprogram resets the drift clock.
+                reps[ri].programmed_at_ps = now;
+                reps[ri].recals += 1;
+                if reps[ri].acc == AccuracyHealth::Recalibrating {
+                    reps[ri].acc = AccuracyHealth::Fresh;
+                }
+                reps[ri].draining = false;
+                counters.recals += 1;
+                recal_windows.push(RecalWindow {
+                    replica: ri,
+                    start_ps: recal_started_at[ri],
+                    done_ps: now,
+                });
+                recal_active = None;
+                maybe_launch(ri, now, cfg, &mut reps, &mut counters, &mut events);
+                try_start_recal(
+                    now,
+                    rc,
+                    &mut reps,
+                    &mut counters,
+                    &mut events,
+                    &mut recal_active,
+                    &mut recal_pending,
+                    &mut recal_started_at,
+                );
             }
         }
     }
@@ -372,6 +668,8 @@ pub fn simulate(cfg: &SimConfig, arrivals_ps: &[u64]) -> SimResult {
         makespan_ps,
         per_replica_served: reps.iter().map(|r| r.served).collect(),
         rejoin_at_ps,
+        recal_windows,
+        min_available_replicas,
     }
 }
 
@@ -396,6 +694,7 @@ mod tests {
             repair_ps: 100_000,
             policy: RouterPolicy::LeastLoaded,
             fail: None,
+            recal: None,
         }
     }
 
@@ -512,5 +811,92 @@ mod tests {
         let res = simulate(&cfg, &[5_000]);
         assert_eq!(res.counters.served, 1);
         assert_eq!(res.latencies.max_ps(), b.degraded_batch_ps(1));
+    }
+
+    const S: u64 = 1_000_000_000_000; // 1 s in ps
+
+    fn recal_cfg(policy: RecalPolicy, sensitive_permille: u32) -> RecalConfig {
+        RecalConfig {
+            // proxy = 1 - 0.001 * age_s: crosses 0.9 at age 100 s.
+            model: crate::coordinator::serving::AccuracyModel::Linear { decay_per_s: 0.001 },
+            slo: 0.9,
+            degrade_at: 0.95,
+            sensitive_permille,
+            policy,
+            check_period_ps: 50 * S,
+            reprogram_ps: S,
+        }
+    }
+
+    #[test]
+    fn threshold_policy_recalibrates_staggered_and_conserves() {
+        let b = mock();
+        let cfg = SimConfig {
+            recal: Some(recal_cfg(RecalPolicy::Threshold { trigger: 0.9 }, 0)),
+            ..base_cfg(&b)
+        };
+        // One request every 10 s over ~400 s of virtual time.
+        let arrivals: Vec<u64> = (1..=40u64).map(|k| k * 10 * S).collect();
+        let res = simulate(&cfg, &arrivals);
+        assert!(res.counters.conserved());
+        assert!(res.counters.recals >= 2, "both replicas should refresh: {:?}", res.counters);
+        assert_eq!(res.counters.recals as usize, res.recal_windows.len());
+        // Staggered: never more than one replica out at a time.
+        assert_eq!(res.min_available_replicas, 1);
+        for w in res.recal_windows.windows(2) {
+            assert!(w[0].done_ps <= w[1].start_ps, "windows overlap: {w:?}");
+        }
+        // Downtime ledger matches the windows (drain wait excluded).
+        assert_eq!(res.counters.recal_downtime_ps, res.counters.recals * S);
+        assert!(res.counters.served > 0);
+    }
+
+    #[test]
+    fn never_policy_sheds_sensitive_requests_once_drifted() {
+        let b = mock();
+        let cfg = SimConfig {
+            replicas: 1,
+            deadline_ps: 10_000_000,
+            recal: Some(recal_cfg(RecalPolicy::Never, 1000)),
+            ..base_cfg(&b)
+        };
+        // Age 10 s: proxy 0.99 >= 0.9 -> served. Age 200 s: proxy 0.8
+        // -> no compliant replica -> typed accuracy shed.
+        let res = simulate(&cfg, &[10 * S, 200 * S]);
+        assert_eq!(res.counters.served, 1);
+        assert_eq!(res.counters.shed_accuracy_slo, 1);
+        assert_eq!(res.counters.recals, 0);
+        assert!(res.counters.conserved());
+        // Non-sensitive traffic is still served, but on the ledger.
+        let lax = SimConfig {
+            replicas: 1,
+            deadline_ps: 10_000_000,
+            recal: Some(recal_cfg(RecalPolicy::Never, 0)),
+            ..base_cfg(&b)
+        };
+        let res = simulate(&lax, &[10 * S, 200 * S]);
+        assert_eq!(res.counters.served, 2);
+        assert_eq!(res.counters.shed_accuracy_slo, 0);
+        assert_eq!(res.counters.served_below_slo, 1, "stale answer must be counted");
+    }
+
+    #[test]
+    fn fixed_policy_refreshes_and_sensitive_requests_pick_the_freshest() {
+        let b = mock();
+        // Refresh every 50 s of age, checked every 25 s: the worst-case
+        // age at a refresh is ~75 s (proxy 0.925), comfortably over the
+        // 0.9 SLO even while the sibling replica recalibrates.
+        let mut rc = recal_cfg(RecalPolicy::Fixed { period_ps: 50 * S }, 1000);
+        rc.check_period_ps = 25 * S;
+        let cfg = SimConfig { deadline_ps: 10_000_000, recal: Some(rc), ..base_cfg(&b) };
+        let arrivals: Vec<u64> = (1..=30u64).map(|k| k * 10 * S).collect();
+        let res = simulate(&cfg, &arrivals);
+        assert!(res.counters.conserved());
+        assert!(res.counters.recals >= 2, "{:?}", res.counters);
+        // Fixed refresh keeps every replica inside the SLO: nothing
+        // sheds on accuracy and nothing is served stale.
+        assert_eq!(res.counters.shed_accuracy_slo, 0);
+        assert_eq!(res.counters.served_below_slo, 0);
+        assert_eq!(res.min_available_replicas, 1);
     }
 }

@@ -12,6 +12,7 @@
 use alpine::config::{SystemConfig, SystemKind};
 use alpine::coordinator::automap::{self as automap_driver, AutomapOptions};
 use alpine::coordinator::faults::{self as faults_driver, FaultScenarioOptions};
+use alpine::coordinator::reliability::{self as reliability_driver, ReliabilityOptions};
 use alpine::coordinator::serving::{
     self as serving_driver, ArrivalProcess, RouterPolicy, ServeBenchOptions,
 };
@@ -87,6 +88,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "transformer" => cmd_transformer(&args[1..]),
         "faults" => cmd_faults(&args[1..]),
         "serve-bench" => cmd_serve_bench(&args[1..]),
+        "reliability" => cmd_reliability(&args[1..]),
         "fig7" => {
             let rows = experiments::fig7_mlp(opt_u32(&args[1..], "--inferences", experiments::MLP_INFERENCES)?)?;
             report::aggregate_table("Fig. 7 — MLP aggregate", &rows).print();
@@ -210,6 +212,19 @@ fn print_help() {
          \x20                          failover + degraded rejoin); print\n\
          \x20                          the latency-vs-load curve and write\n\
          \x20                          BENCH_serving.json\n\
+         \x20 reliability [--horizons 1e6,1e8] [--horizon-short]\n\
+         \x20     [--steps N] [--requests N] [--replicas N] [--max-batch N]\n\
+         \x20     [--queue-cap N] [--nu X] [--nu-sigma X] [--slo P]\n\
+         \x20     [--threshold P] [--fixed-period SECONDS]\n\
+         \x20     [--check-period SECONDS] [--sensitive-permille N]\n\
+         \x20     [--timeline N] [--seed S] [--shape AxBxC]\n\
+         \x20     [--system hp|lp] [--out FILE]\n\
+         \x20                          sweep virtual horizon x recal policy\n\
+         \x20                          (never|fixed|threshold) under device\n\
+         \x20                          drift: accuracy-proxy timeline,\n\
+         \x20                          accuracy-SLO sheds, staggered recal\n\
+         \x20                          availability floor, throughput cost;\n\
+         \x20                          write BENCH_reliability.json\n\
          \x20 fig7|fig8|fig10|fig11|fig13|fig14|loose   regenerate a figure\n\
          \x20 validate                 PJRT probe-check all AOT artifacts\n\
          \n\
@@ -830,6 +845,117 @@ fn cmd_serve_bench(args: &[String]) -> Result<()> {
     }
     let out = opt(args, "--out").unwrap_or_else(|| "BENCH_serving.json".into());
     serving_driver::write_report(&rep, &out)?;
+    Ok(())
+}
+
+/// `reliability` — the ISSUE-10 drift-aware serving deliverable: sweep
+/// virtual horizon x recalibration policy (never | fixed | threshold)
+/// over the automap-best pipeline under PCM conductance drift, print
+/// the policy comparison, and write `--out` (default
+/// BENCH_reliability.json). Deterministic: same seed => byte-identical
+/// JSON at any `--jobs N`.
+fn cmd_reliability(args: &[String]) -> Result<()> {
+    let system = SystemKind::parse(&opt(args, "--system").unwrap_or_else(|| "hp".into()))
+        .context("bad --system (hp|lp)")?;
+    let mut opts =
+        ReliabilityOptions { system, jobs: parallel::jobs(), ..ReliabilityOptions::default() };
+    if let Some(v) = opt(args, "--seed") {
+        opts.seed = v.parse().context("--seed expects a number")?;
+    }
+    opts.steps = opt_u32(args, "--steps", opts.steps as u32)? as usize;
+    opts.requests = opt_u32(args, "--requests", opts.requests as u32)? as u64;
+    opts.replicas = opt_u32(args, "--replicas", opts.replicas as u32)? as usize;
+    opts.max_batch = opt_u32(args, "--max-batch", opts.max_batch as u32)? as usize;
+    opts.queue_cap = opt_u32(args, "--queue-cap", opts.queue_cap as u32)? as usize;
+    opts.sensitive_permille =
+        opt_u32(args, "--sensitive-permille", opts.sensitive_permille)?;
+    opts.timeline = opt_u32(args, "--timeline", opts.timeline as u32)? as usize;
+    let f64_knob = |name: &str| -> Result<Option<f64>> {
+        match opt(args, name) {
+            None => Ok(None),
+            Some(v) => {
+                let x: f64 =
+                    v.parse().with_context(|| format!("{name} expects a number"))?;
+                if !x.is_finite() {
+                    bail!("{name} expects a finite number");
+                }
+                Ok(Some(x))
+            }
+        }
+    };
+    if let Some(v) = f64_knob("--nu")? {
+        opts.nu = v;
+    }
+    if let Some(v) = f64_knob("--nu-sigma")? {
+        opts.nu_sigma = v;
+    }
+    opts.slo = f64_knob("--slo")?.or(opts.slo);
+    opts.threshold = f64_knob("--threshold")?.or(opts.threshold);
+    opts.fixed_period_s = f64_knob("--fixed-period")?.or(opts.fixed_period_s);
+    opts.check_period_s = f64_knob("--check-period")?.or(opts.check_period_s);
+    if let Some(v) = opt(args, "--horizons") {
+        opts.horizons_s = v
+            .split(',')
+            .map(|h| {
+                h.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("--horizons: bad seconds value {h:?}"))
+            })
+            .collect::<Result<Vec<f64>>>()?;
+    }
+    if args.iter().any(|a| a == "--horizon-short") {
+        // CI-smoke scale: one short horizon (still long enough for the
+        // log-time dispersion to bite).
+        opts.horizons_s = vec![1.0e5];
+    }
+    if let Some(v) = opt(args, "--shape") {
+        opts.shape = MlpShape::parse(&v)?.dims().to_vec();
+    }
+
+    println!(
+        "reliability: {} replica(s) on {}, nu {:.3} / nu-sigma {:.3}, horizons {:?} s, seed {:#x} ...",
+        opts.replicas,
+        system.name(),
+        opts.nu,
+        opts.nu_sigma,
+        opts.horizons_s,
+        opts.seed,
+    );
+    let rep = reliability_driver::run_reliability(&opts)?;
+    println!(
+        "backend: {} — accuracy SLO {:.4} (degrade at {:.4}, threshold trigger {:.4}), \
+         SLO-crossing age {:.3e} s, reprogram {:.3} us/window",
+        rep.backend_desc,
+        rep.slo,
+        rep.degrade_at,
+        rep.threshold_trigger,
+        rep.slo_cross_ps as f64 / 1e12,
+        rep.reprogram_ps as f64 / 1e6,
+    );
+    let mut t = Table::new(
+        "recalibration policy comparison",
+        &[
+            "policy", "horizon [s]", "served", "shed-acc", "stale", "recals",
+            "downtime [s]", "min-avail", "slo-ok", "achieved [rps]",
+        ],
+    );
+    for c in &rep.cells {
+        t.row(vec![
+            c.policy.name().to_string(),
+            format!("{:.1e}", c.horizon_s),
+            c.counters.served.to_string(),
+            c.counters.shed_accuracy_slo.to_string(),
+            c.counters.served_below_slo.to_string(),
+            c.counters.recals.to_string(),
+            format!("{:.3}", c.counters.recal_downtime_ps as f64 / 1e12),
+            c.min_available_replicas.to_string(),
+            if c.slo_ok { "yes" } else { "NO" }.to_string(),
+            format!("{:.3e}", c.achieved_rps),
+        ]);
+    }
+    t.print();
+    let out = opt(args, "--out").unwrap_or_else(|| "BENCH_reliability.json".into());
+    reliability_driver::write_report(&rep, &out)?;
     Ok(())
 }
 

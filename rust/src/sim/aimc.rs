@@ -14,6 +14,7 @@
 //! (Fig. 2); loose coupling routes every transfer over the peripheral
 //! I/O bus (`sim::bus::IoBus`) which the machine charges separately.
 
+use crate::aimclib::faults::{drift_decay, DriftState};
 use crate::config::AimcConfig;
 use crate::stats::TileActivity;
 
@@ -113,6 +114,58 @@ impl TileFaultModel {
     }
 }
 
+/// Deterministic conductance-drift model of one tile, integer-encoded
+/// (ppm) so the spec stays `Copy + Eq` like [`TileFaultModel`]. Drift
+/// degrades *accuracy*, never timing: attaching a spec (active or not)
+/// leaves `RunStats` bit-identical, and — unlike transient/hard faults
+/// — it does not disable steady-state fast-forward, because the age it
+/// is keyed on is the absolute virtual clock minus an absolute
+/// programming timestamp, both of which closed-form jumps advance
+/// consistently (the jump moves `now`; `programmed_at_ps` stays put).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TileDriftSpec {
+    /// Drift exponent nu in parts-per-million (50_000 = 0.05). 0
+    /// disables drift.
+    pub nu_ppm: u32,
+    /// Per-device nu dispersion in ppm (see
+    /// [`crate::aimclib::faults::DriftState::nu_sigma`]).
+    pub nu_sigma_ppm: u32,
+    /// Seed of the derived accuracy-proxy plan.
+    pub seed: u64,
+}
+
+impl TileDriftSpec {
+    /// The drift-free spec (the default).
+    pub fn none() -> TileDriftSpec {
+        TileDriftSpec::default()
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.nu_ppm == 0
+    }
+
+    pub fn nu(&self) -> f64 {
+        self.nu_ppm as f64 * 1e-6
+    }
+
+    pub fn nu_sigma(&self) -> f64 {
+        self.nu_sigma_ppm as f64 * 1e-6
+    }
+}
+
+/// One reading of a tile's drift-health sensor (see
+/// [`AimcTile::health`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TileHealth {
+    /// When the crossbar was last programmed (virtual ps).
+    pub programmed_at_ps: u64,
+    /// Time since programming at the probed instant (virtual ps).
+    pub age_ps: u64,
+    /// Mean conductance decay `(t/t0)^-nu` at the probed instant
+    /// (1.0 = fresh or drift disabled).
+    pub drift_factor: f64,
+}
+
 /// The device: geometry, placements, busy-until reservation, counters.
 #[derive(Clone, Debug)]
 pub struct AimcTile {
@@ -138,6 +191,13 @@ pub struct AimcTile {
     pending_results_ps: std::collections::VecDeque<u64>,
     /// Injected fault model (default: fault-free).
     fault: TileFaultModel,
+    /// Injected drift model (default: drift-free). Accuracy-only.
+    drift: TileDriftSpec,
+    /// Absolute virtual-time programming timestamp t0 of the drift law.
+    /// Deliberately NOT advanced by `shift_time` and NOT part of
+    /// `ff_state`: fast-forward jumps move `now` past it so drift age
+    /// keeps advancing exactly as in full replay.
+    programmed_at_ps: u64,
     pub stats: TileActivity,
 }
 
@@ -157,6 +217,8 @@ impl AimcTile {
             last_queue_done_ps: 0,
             pending_results_ps: std::collections::VecDeque::new(),
             fault: TileFaultModel::none(),
+            drift: TileDriftSpec::none(),
+            programmed_at_ps: 0,
             stats: TileActivity::default(),
         }
     }
@@ -167,6 +229,50 @@ impl AimcTile {
 
     pub fn fault_model(&self) -> &TileFaultModel {
         &self.fault
+    }
+
+    pub fn set_drift_spec(&mut self, drift: TileDriftSpec) {
+        self.drift = drift;
+    }
+
+    pub fn drift_spec(&self) -> &TileDriftSpec {
+        &self.drift
+    }
+
+    /// When the crossbar was last programmed (virtual ps).
+    pub fn programmed_at_ps(&self) -> u64 {
+        self.programmed_at_ps
+    }
+
+    /// Reprogram the crossbar at virtual time `now_ps`, restarting the
+    /// drift clock. The refresh downtime/energy is priced by
+    /// [`crate::aimclib::faults::reprogram_cost`] at whatever layer
+    /// schedules the refresh (the serving router books it as replica
+    /// downtime); the device model only moves the timestamp.
+    pub fn reprogram(&mut self, now_ps: u64) {
+        self.programmed_at_ps = now_ps;
+    }
+
+    /// The drift-health sensor: age and conductance decay at `now_ps`.
+    /// Pure read — probing never perturbs timing or counters.
+    pub fn health(&self, now_ps: u64) -> TileHealth {
+        let age_ps = now_ps.saturating_sub(self.programmed_at_ps);
+        TileHealth {
+            programmed_at_ps: self.programmed_at_ps,
+            age_ps,
+            drift_factor: drift_decay(age_ps as f64 * 1e-12, self.drift.nu()),
+        }
+    }
+
+    /// The [`DriftState`] this tile's spec + timestamp imply, for
+    /// accuracy-proxy probes through `aimclib::faults::assess_mvm`.
+    pub fn drift_state(&self) -> DriftState {
+        DriftState {
+            programmed_at_ps: self.programmed_at_ps,
+            nu: self.drift.nu(),
+            nu_sigma: self.drift.nu_sigma(),
+            seed: self.drift.seed,
+        }
     }
 
     /// Gate an I/O op at `now_ps` against the injected fault model.
@@ -414,5 +520,58 @@ mod tests {
         assert!(t.fault_model().is_none());
         t.set_fault_model(TileFaultModel::none());
         assert!(t.queue(0, 64).is_ok());
+    }
+
+    #[test]
+    fn health_sensor_ages_in_virtual_time_and_reprogram_resets() {
+        const S: u64 = 1_000_000_000_000;
+        let mut t = tile();
+        assert!(t.drift_spec().is_none());
+        t.set_drift_spec(TileDriftSpec { nu_ppm: 50_000, nu_sigma_ppm: 10_000, seed: 9 });
+        assert_eq!(t.drift_spec().nu(), 0.05);
+        // Fresh tile: factor 1.0 regardless of spec.
+        assert_eq!(t.health(0).drift_factor, 1.0);
+        // Aged tile: decay < 1, monotone in age.
+        let h1 = t.health(1_000 * S);
+        let h2 = t.health(1_000_000 * S);
+        assert!(h1.drift_factor < 1.0);
+        assert!(h2.drift_factor < h1.drift_factor);
+        assert_eq!(h2.age_ps, 1_000_000 * S);
+        // Reprogramming restarts the drift clock.
+        t.reprogram(1_000_000 * S);
+        let h3 = t.health(1_000_000 * S);
+        assert_eq!(h3.age_ps, 0);
+        assert_eq!(h3.drift_factor, 1.0);
+        assert_eq!(t.programmed_at_ps(), 1_000_000 * S);
+        let st = t.drift_state();
+        assert_eq!(st.programmed_at_ps, 1_000_000 * S);
+        assert_eq!(st.nu, 0.05);
+    }
+
+    #[test]
+    fn shift_time_never_moves_the_programming_timestamp() {
+        // Fast-forward jumps advance `now` and the tile's internal
+        // reservation clocks, but the programming timestamp is an
+        // absolute event in the past — shifting it would freeze drift
+        // age across jumps and diverge from full replay.
+        let mut t = tile();
+        t.set_drift_spec(TileDriftSpec { nu_ppm: 50_000, nu_sigma_ppm: 0, seed: 1 });
+        t.queue(0, 64).unwrap();
+        let before = t.programmed_at_ps();
+        let mut ff_before = Vec::new();
+        t.ff_state(0, &mut ff_before);
+        t.shift_time(5_000_000);
+        assert_eq!(t.programmed_at_ps(), before);
+        // The ff digest must not encode the timestamp either: two tiles
+        // differing only in programmed_at_ps digest identically.
+        let mut u = tile();
+        u.set_drift_spec(TileDriftSpec { nu_ppm: 50_000, nu_sigma_ppm: 0, seed: 1 });
+        u.queue(0, 64).unwrap();
+        u.reprogram(0); // same timestamp value, but prove the digest ignores it
+        let (mut da, mut db) = (Vec::new(), Vec::new());
+        t.ff_state(5_000_000, &mut da);
+        u.shift_time(5_000_000);
+        u.ff_state(5_000_000, &mut db);
+        assert_eq!(da, db);
     }
 }

@@ -477,6 +477,34 @@ impl Machine {
         self.tiles.iter().any(|t| !t.fault_model().is_none())
     }
 
+    /// Attach (or clear, with `TileDriftSpec::none()`) a conductance
+    /// drift model to one tile. Unlike `set_tile_fault` this does NOT
+    /// disable fast-forward: drift degrades only the accuracy proxy,
+    /// never timing, and its age is keyed on absolute timestamps that
+    /// closed-form jumps advance consistently (the jump moves `now`;
+    /// the programming timestamp stays put). `tests/fastforward.rs`
+    /// pins ff-vs-replay bit-identity with an active spec attached.
+    pub fn set_tile_drift(&mut self, tile: usize, drift: crate::sim::aimc::TileDriftSpec) {
+        self.tiles[tile].set_drift_spec(drift);
+    }
+
+    /// True if any tile has an active drift model.
+    pub fn has_tile_drift(&self) -> bool {
+        self.tiles.iter().any(|t| !t.drift_spec().is_none())
+    }
+
+    /// Probe one tile's drift-health sensor at virtual time `now_ps`.
+    /// Pure read; never perturbs timing, counters, or the ff digest.
+    pub fn tile_health(&self, tile: usize, now_ps: u64) -> crate::sim::aimc::TileHealth {
+        self.tiles[tile].health(now_ps)
+    }
+
+    /// Reprogram one tile's crossbar at virtual time `now_ps` (restarts
+    /// its drift clock; see `AimcTile::reprogram` for the cost model).
+    pub fn reprogram_tile(&mut self, tile: usize, now_ps: u64) {
+        self.tiles[tile].reprogram(now_ps);
+    }
+
     /// Execute one trace per core (empty traces = unused cores). Accepts
     /// looped [`Trace`] programs or flat `Vec<TraceOp>` streams. Returns
     /// the full run statistics, or a typed [`RunError`] (deadlock, tile

@@ -15,5 +15,5 @@ pub(crate) mod hierarchy;
 pub mod machine;
 pub(crate) mod sync;
 
-pub use aimc::{AimcTile, Coupling, Placement, TileFaultModel};
+pub use aimc::{AimcTile, Coupling, Placement, TileDriftSpec, TileFaultModel, TileHealth};
 pub use machine::{ChannelSpec, Machine, MachineSpec, RunError, TileSpec};

@@ -761,7 +761,28 @@ pub fn degrade_mapping(
     failed_tile: usize,
     budget: &TopologyBudget,
 ) -> Result<Degraded, WorkloadError> {
+    degrade_mapping_multi(graph, mapping, &[failed_tile], budget)
+}
+
+/// [`degrade_mapping`] generalized to **multiple / cascading** tile
+/// failures: the rebuild iterates over every failed tile, accumulating
+/// the union of MVM anchors that had a region on *any* of them, then
+/// rebuilds once with the whole union lowered to the digital CPU path.
+/// Tile indices refer to the original `mapping`'s tile numbering (a
+/// cascade observed against an already-degraded mapping is expressed by
+/// listing all tiles failed so far). A tile that hosts nothing is fine
+/// as long as the union is non-empty — under cascading failures the
+/// later casualties may hit tiles the first rebuild already vacated.
+pub fn degrade_mapping_multi(
+    graph: &LayerGraph,
+    mapping: &Mapping,
+    failed_tiles: &[usize],
+    budget: &TopologyBudget,
+) -> Result<Degraded, WorkloadError> {
     let bad = |msg: String| WorkloadError::InvalidMapping(msg);
+    if failed_tiles.is_empty() {
+        return Err(bad(format!("no failed tiles given for mapping {}", mapping.label)));
+    }
     let (anchors, input, output) = enumerate::anchors(graph)?;
 
     // Where did the original mapping put every node?
@@ -816,7 +837,7 @@ pub fn degrade_mapping(
             .ok_or_else(|| bad(format!("mapping {} does not place MVM node {}", mapping.label, m.node())))?;
         let tiles = place_tiles(place);
         if !tiles.is_empty() {
-            if tiles.contains(&failed_tile) {
+            if tiles.iter().any(|t| failed_tiles.contains(t)) {
                 remapped_anchors.push(mvm_idx);
             } else if mvm_idx < 64 {
                 analog_mask |= 1 << mvm_idx;
@@ -825,10 +846,13 @@ pub fn degrade_mapping(
         mvm_idx += 1;
     }
     if remapped_anchors.is_empty() {
-        return Err(bad(format!(
-            "tile {failed_tile} hosts no analog region of mapping {}",
-            mapping.label
-        )));
+        return Err(match failed_tiles {
+            [t] => bad(format!("tile {t} hosts no analog region of mapping {}", mapping.label)),
+            ts => bad(format!(
+                "tiles {ts:?} host no analog region of mapping {}",
+                mapping.label
+            )),
+        });
     }
 
     let spec = CandidateSpec {
@@ -1072,6 +1096,55 @@ mod tests {
         // An all-digital mapping has nothing to degrade either.
         let (m, _) = digital_baseline(&g).unwrap();
         assert!(degrade_mapping(&g, &m, 0, &budget).is_err());
+    }
+
+    #[test]
+    fn degrade_handles_multiple_and_cascading_failed_tiles() {
+        let g = LayerGraph::mlp(&[256, 128, 64]);
+        let budget = TopologyBudget { cores: 4, tiles: 8, tile_rows: 256, tile_cols: 256, channels: 32 };
+        let out = search(&g, &budget, &hp(), 4).unwrap();
+        let best = &out.ranked[0];
+
+        // Which tiles does the best mapping actually use?
+        let used: Vec<usize> = {
+            let mut ts: Vec<usize> = best
+                .mapping
+                .stages
+                .iter()
+                .flat_map(|s| &s.steps)
+                .flat_map(|st| place_tiles(&st.place))
+                .collect();
+            ts.sort_unstable();
+            ts.dedup();
+            ts
+        };
+        assert!(used.len() >= 2, "need >= 2 used tiles, got {used:?}");
+
+        // The union semantics: failing both tiles remaps at least the
+        // union of what failing each alone remaps.
+        let a = degrade_mapping(&g, &best.mapping, used[0], &budget).unwrap();
+        let b = degrade_mapping(&g, &best.mapping, used[1], &budget).unwrap();
+        let both =
+            degrade_mapping_multi(&g, &best.mapping, &[used[0], used[1]], &budget).unwrap();
+        let mut union: Vec<usize> =
+            a.remapped_anchors.iter().chain(&b.remapped_anchors).copied().collect();
+        union.sort_unstable();
+        union.dedup();
+        assert_eq!(both.remapped_anchors, union, "multi-degrade is not the union");
+        // Single-tile calls are the one-element special case.
+        let single = degrade_mapping_multi(&g, &best.mapping, &[used[0]], &budget).unwrap();
+        assert_eq!(single.remapped_anchors, a.remapped_anchors);
+        assert_eq!(single.desc, a.desc);
+        // A cascade may include tiles hosting nothing — the union
+        // carries it — but an all-miss set errors cleanly, as does an
+        // empty set.
+        let with_miss =
+            degrade_mapping_multi(&g, &best.mapping, &[used[0], 99], &budget).unwrap();
+        assert_eq!(with_miss.remapped_anchors, a.remapped_anchors);
+        assert!(degrade_mapping_multi(&g, &best.mapping, &[98, 99], &budget).is_err());
+        assert!(degrade_mapping_multi(&g, &best.mapping, &[], &budget).is_err());
+        // The degraded mapping still compiles.
+        compile::compile(&g, &both.mapping, 1).unwrap();
     }
 
     #[test]

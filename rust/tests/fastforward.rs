@@ -10,7 +10,7 @@ use alpine::config::{SystemConfig, SystemKind};
 use alpine::isa::InstClass;
 use alpine::nn::CnnVariant;
 use alpine::sim::machine::{ChannelSpec, Machine, MachineSpec, TileSpec};
-use alpine::sim::{Coupling, Placement};
+use alpine::sim::{Coupling, Placement, TileDriftSpec, TileFaultModel};
 use alpine::stats::RunStats;
 use alpine::util::miniprop;
 use alpine::util::rng::Rng;
@@ -123,6 +123,91 @@ fn transformer_cases_fastforward_bit_identical() {
         let w = transformer::generate(shape, case, 24).unwrap();
         check_case(&cfg, &w);
     }
+}
+
+// ---------------------------------------------------------------------
+// Time-dependent fault models vs the closed-form clock (ISSUE 10)
+// ---------------------------------------------------------------------
+
+/// Pinned guard: a time-dependent fault model may never race the
+/// fast-forward clock. Two legal outcomes, one per model class:
+///
+/// * **transient stalls** are phased against absolute time, so the
+///   machine must refuse to jump at all (`jumps == 0`) — and the run
+///   stays bit-identical to replay trivially;
+/// * **conductance drift** is accuracy-only (age = `now -
+///   programmed_at`, both advanced consistently by a jump), so the
+///   machine must keep jumping exactly as the pristine run does AND
+///   stay bit-identical to full op-by-op replay with the same spec.
+#[test]
+fn time_dependent_fault_models_never_race_fast_forward() {
+    let cfg = SystemConfig::high_power();
+    let spec = MachineSpec {
+        tiles: vec![TileSpec { rows: 256, cols: 256, coupling: Coupling::Tight }],
+        ..Default::default()
+    };
+    // Maximally periodic single-core tile pipeline: the steady-state
+    // detector must engage on the pristine run.
+    let mut b = TraceBuilder::new();
+    b.push(TraceOp::CmInit {
+        tile: 0,
+        placement: Placement { row0: 0, col0: 0, rows: 256, cols: 256 },
+    });
+    b.repeat(48, |b, _| {
+        b.compute(InstClass::IntAlu, 1_000);
+        b.push(TraceOp::CmQueue { tile: 0, bytes: 128 });
+        b.push(TraceOp::CmProcess { tile: 0 });
+        b.push(TraceOp::CmDequeue { tile: 0, bytes: 128 });
+    });
+    let trace = b.build_trace();
+
+    let run = |ff: bool, drift: Option<TileDriftSpec>, fault: Option<TileFaultModel>| {
+        let mut m = Machine::new(cfg.clone(), spec.clone());
+        m.set_fast_forward(ff);
+        m.set_nested_fast_forward(ff);
+        if let Some(d) = drift {
+            m.set_tile_drift(0, d);
+        }
+        if let Some(f) = fault {
+            m.set_tile_fault(0, f);
+        }
+        let rs = m.run(vec![trace.clone()]).unwrap();
+        (rs, m.fast_forward_jumps())
+    };
+
+    let (clean_ff, clean_jumps) = run(true, None, None);
+    let (clean_replay, _) = run(false, None, None);
+    clean_ff.assert_bit_identical(&clean_replay, "ff-guard/pristine");
+    assert!(clean_jumps >= 1, "pristine periodic tile loop must fast-forward");
+
+    // Transient stall windows: ff is disabled outright.
+    let fault = TileFaultModel {
+        transient_period_ps: 400_000,
+        transient_stall_ps: 60_000,
+        ..TileFaultModel::none()
+    };
+    let (faulty_ff, fault_jumps) = run(true, None, Some(fault));
+    assert_eq!(fault_jumps, 0, "transient fault model must disable fast-forward");
+    let (faulty_replay, _) = run(false, None, Some(fault));
+    faulty_ff.assert_bit_identical(&faulty_replay, "ff-guard/transient");
+
+    // Active drift: ff keeps jumping and stays bit-identical to replay.
+    let drift = TileDriftSpec { nu_ppm: 50_000, nu_sigma_ppm: 20_000, seed: 0xD81F };
+    let (drift_ff, drift_jumps) = run(true, Some(drift), None);
+    assert_eq!(
+        drift_jumps, clean_jumps,
+        "drift is accuracy-only and must not perturb the ff schedule"
+    );
+    let (drift_replay, replay_jumps) = run(false, Some(drift), None);
+    assert_eq!(replay_jumps, 0);
+    drift_ff.assert_bit_identical(&drift_replay, "ff-guard/drift");
+    // The drift sensor agrees between the jumped and replayed clocks.
+    let probe_ps = 10 * clean_replay.roi_time_ps.max(1);
+    let mut m = Machine::new(cfg.clone(), spec.clone());
+    m.set_tile_drift(0, drift);
+    let h = m.tile_health(0, probe_ps);
+    assert_eq!(h.age_ps, probe_ps, "fresh tile ages from its programming timestamp");
+    assert!(h.drift_factor <= 1.0);
 }
 
 // ---------------------------------------------------------------------

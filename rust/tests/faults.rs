@@ -10,7 +10,7 @@ use alpine::coordinator::faults::{run_scenario, FaultScenarioOptions};
 use alpine::coordinator::{run_workload, RunOptions};
 use alpine::nn::{CnnVariant, LayerGraph};
 use alpine::sim::machine::Machine;
-use alpine::sim::{RunError, TileFaultModel};
+use alpine::sim::{RunError, TileDriftSpec, TileFaultModel};
 use alpine::workload::automap::{self, CostModel, SearchOptions, TopologyBudget};
 use alpine::workload::cnn::{self, CnnCase};
 use alpine::workload::lstm::{self, LstmCase};
@@ -19,10 +19,12 @@ use alpine::workload::transformer::{self, TransformerCase, TransformerShape};
 use alpine::workload::{compile, Workload};
 use alpine::util::miniprop;
 
-/// Simulate `w` twice — once on the untouched machine, once with an
-/// explicit (but inactive) `TileFaultModel::none()` attached to every
-/// tile — and require bit-identical statistics. This pins the promise
-/// that merely *having* the fault hooks compiled in changes nothing.
+/// Simulate `w` twice — once on the untouched machine, once with
+/// explicit (but inactive) `TileFaultModel::none()` *and*
+/// `TileDriftSpec::none()` hooks attached to every tile — and require
+/// bit-identical statistics. This pins the promise that merely *having*
+/// the fault and drift hooks compiled in changes nothing on the
+/// drift-free path (the ISSUE-10 acceptance gate).
 fn check_fault_free_identity(cfg: &SystemConfig, w: &Workload) {
     let pristine = Machine::new(cfg.clone(), w.spec.clone())
         .run(w.traces.clone())
@@ -30,8 +32,10 @@ fn check_fault_free_identity(cfg: &SystemConfig, w: &Workload) {
     let mut hooked = Machine::new(cfg.clone(), w.spec.clone());
     for t in 0..w.spec.tiles.len() {
         hooked.set_tile_fault(t, TileFaultModel::none());
+        hooked.set_tile_drift(t, TileDriftSpec::none());
     }
     assert!(!hooked.has_tile_faults(), "none() must not count as a fault");
+    assert!(!hooked.has_tile_drift(), "none() must not count as drift");
     let hooked = hooked.run(w.traces.clone()).unwrap();
     hooked.assert_bit_identical(&pristine, &w.label);
 }
@@ -91,6 +95,34 @@ fn transformer_cases_fault_free_bit_identical() {
         let w = transformer::generate(shape, case, 24).unwrap();
         check_fault_free_identity(&cfg, &w);
     }
+}
+
+/// The coordinator-level drift hook (`RunOptions::with_drift`): inactive
+/// specs are bit-identical to no specs, and an *active* spec still
+/// changes nothing about timing or energy — conductance drift degrades
+/// only the accuracy proxy, never the simulated clock.
+#[test]
+fn run_options_drift_hooks_never_change_timing() {
+    let cfg = SystemConfig::high_power();
+    let mk = || mlp::generate(MlpCase::Analog { case: 1 }, &cfg, 8).unwrap();
+    let w = mk();
+    let n = w.spec.tiles.len();
+    assert!(n > 0, "analog MLP must place tiles");
+    let base = run_workload(SystemKind::HighPower, w, &RunOptions::default()).unwrap();
+
+    let none: Vec<_> = (0..n).map(|t| (t, TileDriftSpec::none())).collect();
+    let hooked =
+        run_workload(SystemKind::HighPower, mk(), &RunOptions::with_drift(none)).unwrap();
+    assert_eq!(base.time_s.to_bits(), hooked.time_s.to_bits());
+    assert_eq!(base.energy.total_j().to_bits(), hooked.energy.total_j().to_bits());
+
+    let active: Vec<_> = (0..n)
+        .map(|t| (t, TileDriftSpec { nu_ppm: 50_000, nu_sigma_ppm: 20_000, seed: 7 }))
+        .collect();
+    let drifted =
+        run_workload(SystemKind::HighPower, mk(), &RunOptions::with_drift(active)).unwrap();
+    assert_eq!(base.time_s.to_bits(), drifted.time_s.to_bits());
+    assert_eq!(base.energy.total_j().to_bits(), drifted.energy.total_j().to_bits());
 }
 
 // ---------------------------------------------------------------------

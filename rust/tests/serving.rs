@@ -10,8 +10,8 @@ use alpine::config::SystemKind;
 use alpine::coordinator::serving::backend::InstantMockBackend;
 use alpine::coordinator::serving::router::{self, SimConfig};
 use alpine::coordinator::serving::{
-    run_serve_bench_on, ArrivalProcess, Backend, RouterPolicy, ServeBenchOptions,
-    TraceMachineBackend,
+    run_serve_bench_on, AccuracyModel, ArrivalProcess, Backend, RecalConfig, RecalPolicy,
+    RouterPolicy, ServeBenchOptions, TraceMachineBackend,
 };
 use alpine::util::miniprop;
 
@@ -31,6 +31,7 @@ fn base_cfg(backend: &InstantMockBackend) -> SimConfig<'_> {
         repair_ps: 1_000_000,
         policy: RouterPolicy::LeastLoaded,
         fail: None,
+        recal: None,
     }
 }
 
@@ -173,6 +174,74 @@ fn replica_hard_failure_is_failover_or_typed_shed_never_a_panic() {
         }
         let replay = run_serve_bench_on(&opts, &backend).unwrap();
         assert_eq!(rep.to_json(), replay.to_json(), "same seed must replay byte-for-byte");
+    });
+}
+
+/// Property (ISSUE 10): under *any* recalibration policy — never,
+/// fixed, threshold — with randomized accuracy SLOs, check cadence,
+/// sensitive-traffic mix, and a mid-run hard failure layered on top,
+/// conservation still holds, every request resolves typed, and the
+/// report is byte-identical at `--jobs 1` vs `--jobs 4`. The router
+/// itself asserts the stagger invariant (a recalibrating replica never
+/// receives a dispatch: the launch guard refuses it and any completion
+/// outside the planned drain panics), so this property sweeps the state
+/// space those assertions watch.
+#[test]
+fn any_recal_policy_conserves_staggers_and_replays_across_jobs() {
+    let backend = mock();
+    miniprop::check("serving-recal-conserves", 0xD21F_7A11, |rng| {
+        let replicas = 1 + rng.below(3) as usize;
+        let policy = match rng.below(3) {
+            0 => RecalPolicy::Never,
+            // Serve-bench horizons are microseconds, so period/decay are
+            // scaled to make windows actually trigger mid-run.
+            1 => RecalPolicy::Fixed { period_ps: 1 + rng.below(400_000) },
+            _ => RecalPolicy::Threshold { trigger: 0.90 + rng.next_f64() * 0.09 },
+        };
+        let slo = 0.5 + rng.next_f64() * 0.4;
+        let recal = RecalConfig {
+            // Steep decay: the proxy visibly drops within a ~1 ms run.
+            model: AccuracyModel::Linear { decay_per_s: 1.0e5 + rng.next_f64() * 9.0e5 },
+            slo,
+            degrade_at: (slo + 1.0) / 2.0,
+            sensitive_permille: rng.below(1001) as u32,
+            policy,
+            check_period_ps: 1 + rng.below(100_000),
+            reprogram_ps: 1 + rng.below(50_000),
+        };
+        let opts = ServeBenchOptions {
+            seed: rng.next_u64(),
+            requests: 48,
+            replicas,
+            queue_cap: 1 + rng.below(24) as usize,
+            deadline_ps: Some(20_000 + rng.below(400_000)),
+            max_retries: rng.below(4) as u32,
+            load_fracs: vec![0.1 + rng.next_f64() * 2.4],
+            fail_replica: if rng.below(2) == 0 {
+                Some((rng.below(replicas as u64) as usize, rng.next_f64()))
+            } else {
+                None
+            },
+            recal: Some(recal),
+            ..ServeBenchOptions::default()
+        };
+        let rep = run_serve_bench_on(&ServeBenchOptions { jobs: 1, ..opts.clone() }, &backend)
+            .unwrap();
+        for p in &rep.points {
+            assert!(p.counters.conserved(), "{:?}", p.counters);
+            assert_eq!(
+                p.counters.resolved(),
+                opts.requests,
+                "every offered request needs a typed resolution: {:?}",
+                p.counters
+            );
+        }
+        let par = run_serve_bench_on(&ServeBenchOptions { jobs: 4, ..opts }, &backend).unwrap();
+        assert_eq!(
+            rep.to_json(),
+            par.to_json(),
+            "recal-enabled serve-bench must be byte-identical across --jobs"
+        );
     });
 }
 

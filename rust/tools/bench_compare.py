@@ -49,11 +49,40 @@ def flatten_serving(report):
     return flat
 
 
+def flatten_reliability(report):
+    """Flatten a reliability sweep (BENCH_reliability.json) into benchkit
+    shape so the regression gate covers the cost of staying accurate.
+
+    Tracked metrics, all bigger-is-worse in ns:
+      reliability/{policy}_h{horizon}_ns_per_req   1e9 / achieved rps
+      reliability/{policy}_h{horizon}_downtime_ns  total reprogram downtime
+    Accuracy outcomes (slo_ok, violation counts, proxy timeline) are
+    correctness, not performance — the rust test suite gates those.
+    """
+    flat = {}
+    for pol in report.get("policies", []):
+        for c in pol.get("cells", []):
+            tag = f"reliability/{pol['policy']}_h{c['horizon_s']:.0e}"
+            rps = c.get("achieved_rps", 0.0)
+            if rps > 0:
+                ns = 1e9 / rps
+                flat[f"{tag}_ns_per_req"] = {
+                    "mean_ns": ns, "min_ns": ns, "stddev_ns": 0.0, "iters": 1,
+                }
+            ns = c.get("recal_downtime_ps", 0) / 1000.0
+            flat[f"{tag}_downtime_ns"] = {
+                "mean_ns": ns, "min_ns": ns, "stddev_ns": 0.0, "iters": 1,
+            }
+    return flat
+
+
 def load(path):
     with open(path) as f:
         data = json.load(f)
-    # serve-bench reports carry a "points" curve instead of flat benchkit
-    # entries; normalize them so one comparison loop handles both.
+    # Scenario reports carry structured curves instead of flat benchkit
+    # entries; normalize them so one comparison loop handles all shapes.
+    if isinstance(data, dict) and data.get("scenario") == "reliability":
+        return flatten_reliability(data)
     if isinstance(data, dict) and "points" in data:
         return flatten_serving(data)
     return data
